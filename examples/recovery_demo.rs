@@ -1,0 +1,123 @@
+//! Recovery deep-dive: walk one TP8→TP7 failure through every recovery
+//! method at paper scale (llama-3.1-70B on simulated H100s), printing the
+//! full transfer plans — which bytes cross PCIe, which cross NVLink, what
+//! must be recomputed — and the resulting latencies.
+//!
+//!     cargo run --release --example recovery_demo [--requests 60] [--ctx 8000]
+
+use failsafe::cluster::{GpuSpec, Interconnect};
+use failsafe::kvcache::BackupStore;
+use failsafe::model::llama3_70b;
+use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
+use failsafe::sharding::{plan_reconfig, AttentionPolicy, HeadAssignment, ShardPlan};
+use failsafe::util::cli::Args;
+use failsafe::{RankId, RequestId};
+
+fn gb(b: usize) -> f64 {
+    b as f64 / 1e9
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n_req = args.get_usize("requests", 60);
+    let ctx = args.get_usize("ctx", 8000);
+
+    let m = llama3_70b();
+    let spec = GpuSpec::h100();
+    let ic = Interconnect::new(spec.clone());
+    let failed: RankId = 3;
+
+    println!("model: {} ({:.0} GB weights)", m.name, gb(m.weight_bytes()));
+    println!("scenario: TP8 decode instance, {n_req} in-flight requests @ {ctx} ctx tokens");
+    println!("failure: rank {failed} (HBM lost)\n");
+
+    let old = ShardPlan::failsafe(&m, 8);
+    let survivor_map: Vec<Option<RankId>> =
+        (0..8).map(|r| if r == failed { None } else { Some(if r < failed { r } else { r - 1 }) }).collect();
+    let new_plan = ShardPlan {
+        model: m.clone(),
+        heads: HeadAssignment::new(AttentionPolicy::Hybrid, m.n_kv_heads, m.n_layers, 7),
+        ffn: old.ffn.reshard(&survivor_map, 7),
+    };
+
+    // FFN commutativity at work.
+    let moved = old.ffn.moved_blocks(&survivor_map, &new_plan.ffn);
+    println!(
+        "FFN commutativity: {} of {} column blocks move (the failed rank's {}); the rest stay put",
+        moved,
+        old.ffn.n_blocks,
+        old.ffn.blocks_of(failed).len()
+    );
+
+    // Weight transfer plans.
+    let on_demand = plan_reconfig(&old, &new_plan, &survivor_map, true);
+    let naive = plan_reconfig(&old, &new_plan, &survivor_map, false);
+    println!("\nweight movement (per surviving rank):");
+    println!("  {:<6} {:>14} {:>14} {:>14}", "rank", "PCIe (GB)", "NVLink in", "NVLink out");
+    for r in 0..7 {
+        println!(
+            "  {:<6} {:>14.2} {:>14.2} {:>14.2}",
+            r,
+            gb(on_demand.pcie_bytes[r]),
+            gb(on_demand.nvlink_recv_bytes[r]),
+            gb(on_demand.nvlink_send_bytes[r])
+        );
+    }
+    println!(
+        "  on-demand total PCIe {:.1} GB (= lost bytes {:.1} GB, fetched once); naive redundant PCIe {:.1} GB",
+        gb(on_demand.total_pcie()),
+        gb(on_demand.lost_bytes),
+        gb(naive.total_pcie())
+    );
+
+    // In-flight KV + proactive backup.
+    let reqs: Vec<(RequestId, usize, RankId)> =
+        (0..n_req as u64).map(|i| (i, ctx, (i % 8) as usize)).collect();
+    let mut backup = BackupStore::new(1 << 42);
+    for &(id, t, _) in &reqs {
+        backup.backup(id, t - 4, m.kv_bytes_per_token()); // 4-token write-behind lag
+    }
+    println!(
+        "\nKV state: {:.1} GB total in flight, host mirror trails by 4 tokens/request",
+        gb(n_req * ctx * m.kv_bytes_per_token())
+    );
+
+    let input = RecoveryInput {
+        spec: &spec,
+        ic: &ic,
+        old_plan: &old,
+        new_plan: &new_plan,
+        survivor_map: &survivor_map,
+        failed_rank: failed,
+        requests: &reqs,
+        backup: &backup,
+    };
+
+    println!("\n{:<16} {:>10} {:>12} {:>12} {:>12}", "method", "total", "weights", "kv-restore", "recompute");
+    for method in [
+        RecoveryMethod::Recompute,
+        RecoveryMethod::Host,
+        RecoveryMethod::Full,
+        RecoveryMethod::Oracle,
+    ] {
+        let out = plan_recovery(method, &input);
+        println!(
+            "{:<16} {:>9.3}s {:>11.3}s {:>11.3}s {:>11.3}s",
+            method.name(),
+            out.total_s,
+            out.weight_time_s,
+            out.kv_restore_time_s,
+            out.recompute_time_s
+        );
+        if method == RecoveryMethod::Full {
+            if let Some(restore) = &out.kv_restore {
+                let max = restore.pcie_bytes.iter().max().copied().unwrap_or(0);
+                println!(
+                    "                 └ cyclic placement spreads the KV restore: max/rank {:.2} GB, {} requests re-prefill 4 lagged tokens",
+                    gb(max),
+                    restore.recompute_tokens.len()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Trace explorer: inspect the three workload/availability traces the
+//! experiments run on, and preview steady-state serving rates for any
+//! model × system × world-size combination.
+//!
+//!     cargo run --release --example trace_explorer -- [--model llama|mixtral]
+//!         [--trace openthoughts|mooncake] [--n 5000] [--seed 2]
+
+use failsafe::benchkit::section;
+use failsafe::cluster::GpuSpec;
+use failsafe::config::model_by_name;
+use failsafe::simulator::offline::{steady_state, WorkloadMix};
+use failsafe::simulator::SystemConfig;
+use failsafe::traces::{gcp_availability, mooncake_trace, openthoughts_trace, TraceStats};
+use failsafe::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 5000);
+    let seed = args.get_u64("seed", 2);
+    let model = model_by_name(args.get_or("model", "llama")).expect("unknown model");
+
+    let trace = match args.get_or("trace", "mooncake") {
+        "openthoughts" => openthoughts_trace(n, seed),
+        _ => mooncake_trace(n, seed),
+    };
+
+    section("workload trace");
+    let inp = TraceStats::of(&trace.iter().map(|r| r.input_tokens).collect::<Vec<_>>());
+    let out = TraceStats::of(&trace.iter().map(|r| r.output_tokens).collect::<Vec<_>>());
+    println!("requests: {n}");
+    println!("input  tokens: mean {:.0} median {:.0} max {}", inp.mean, inp.median, inp.max);
+    println!("output tokens: mean {:.0} median {:.0} max {}", out.mean, out.median, out.max);
+
+    // Length histogram (log2 buckets).
+    let mut buckets = [0usize; 20];
+    for r in &trace {
+        let b = (r.input_tokens.max(1) as f64).log2() as usize;
+        buckets[b.min(19)] += 1;
+    }
+    println!("\ninput length histogram (log2 buckets):");
+    let maxc = buckets.iter().copied().max().unwrap_or(1);
+    for (b, &c) in buckets.iter().enumerate() {
+        if c > 0 {
+            println!("  2^{b:<2} {:<40} {c}", "#".repeat(c * 40 / maxc));
+        }
+    }
+
+    section("availability trace (Fig 5 shape)");
+    let avail = gcp_availability(64, 4.0 * 3600.0, seed);
+    let min = avail.iter().map(|&(_, a)| a).min().unwrap();
+    println!("{} events over 4h, min availability {min}/64", avail.len());
+
+    section("steady-state serving rates (per node)");
+    let mix = WorkloadMix::from_trace(&trace);
+    let spec = GpuSpec::h100();
+    println!(
+        "{:<6} {:>16} {:>16} {:>12} {:>8}",
+        "world", "decode tok/s", "prefill tok/s", "req/s", "batch"
+    );
+    for world in 1..=8 {
+        match steady_state(&model, &SystemConfig::failsafe(), world, &spec, &mix) {
+            Some(s) => println!(
+                "{:<6} {:>16.0} {:>16.0} {:>12.2} {:>8}",
+                world, s.decode_tps, s.prefill_tps, s.requests_per_s, s.batch
+            ),
+            None => println!("{:<6} {:>16}", world, "— (does not fit)"),
+        }
+    }
+}

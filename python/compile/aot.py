@@ -1,0 +1,148 @@
+"""AOT compiler: lower every shard-forward variant to HLO text and dump
+the deterministic model weights.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Outputs:
+  artifacts/hlo/<name>.hlo.txt      one per compiled variant
+  artifacts/weights/<tensor>.bin    f32 little-endian, row-major
+  artifacts/manifest.txt            line-oriented manifest the rust
+                                    runtime parses (no serde offline):
+      model d_model=256 n_heads=8 head_dim=32 d_ff=1024 n_layers=4 vocab=512
+      hlo <name> kind=<embed|attn|ffn|head> b=<..> s=<..> c=<..> h=<..> cols=<..> path=hlo/<name>.hlo.txt
+      weight <tensor> rows=<..> cols=<..> path=weights/<tensor>.bin
+
+HLO **text** is the interchange format: jax ≥ 0.5 serializes protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Shape buckets compiled ahead of time. The engine pads every call to the
+# nearest bucket (padding is exact — see model.py docstring).
+PREFILL_SHAPES = [(1, 16), (1, 64)]  # (batch, chunk)
+PREFILL_CTX = [0, 64, 256]  # cached tokens before the chunk
+DECODE_BATCH = [1, 4, 8]
+DECODE_CTX = [64, 256]
+HEAD_BUCKETS = [2, 4, 8]  # local heads (TP or DP slice, padded)
+COL_BUCKETS = [256, 512, 1024]  # local FFN columns (padded)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_variants():
+    """Yield (name, meta, lowered) for every variant."""
+    dm, hd, V = M.D_MODEL, M.HEAD_DIM, M.VOCAB
+    i32 = jnp.int32
+
+    # embed / lm_head: batch-seq buckets from both phases.
+    bs_buckets = sorted(set(PREFILL_SHAPES + [(b, 1) for b in DECODE_BATCH]))
+    for b, s in bs_buckets:
+        name = f"embed_b{b}_s{s}"
+        low = M.embed_fn.lower(spec((b, s), i32), spec((V, dm)))
+        yield name, {"kind": "embed", "b": b, "s": s}, low
+        name = f"head_b{b}_s{s}"
+        low = M.lm_head_fn.lower(spec((b, s, dm)), spec((dm,)), spec((dm, V)))
+        yield name, {"kind": "head", "b": b, "s": s}, low
+
+    # attention: prefill and decode buckets × head buckets.
+    attn_shapes = [(b, s, c) for (b, s) in PREFILL_SHAPES for c in PREFILL_CTX]
+    attn_shapes += [(b, 1, c) for b in DECODE_BATCH for c in DECODE_CTX]
+    for b, s, c in attn_shapes:
+        for h in HEAD_BUCKETS:
+            name = f"attn_b{b}_s{s}_c{c}_h{h}"
+            low = M.attn_layer_fn.lower(
+                spec((b, s, dm)),  # x
+                spec((dm,)),  # gamma
+                spec((dm, h * hd)),  # wq
+                spec((dm, h * hd)),  # wk
+                spec((dm, h * hd)),  # wv
+                spec((h * hd, dm)),  # wo
+                spec((b, c, h, hd)),  # k_cache
+                spec((b, c, h, hd)),  # v_cache
+                spec((b, 1, s, c + s)),  # mask
+                spec((b, s), i32),  # positions
+            )
+            yield name, {"kind": "attn", "b": b, "s": s, "c": c, "h": h}, low
+
+    # ffn: batch-seq buckets × column buckets.
+    for b, s in bs_buckets:
+        for cols in COL_BUCKETS:
+            name = f"ffn_b{b}_s{s}_f{cols}"
+            low = M.ffn_layer_fn.lower(
+                spec((b, s, dm)),
+                spec((dm,)),
+                spec((dm, cols)),
+                spec((dm, cols)),
+                spec((cols, dm)),
+            )
+            yield name, {"kind": "ffn", "b": b, "s": s, "cols": cols}, low
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(os.path.join(out, "hlo"), exist_ok=True)
+    os.makedirs(os.path.join(out, "weights"), exist_ok=True)
+
+    lines = [
+        f"model d_model={M.D_MODEL} n_heads={M.N_HEADS} head_dim={M.HEAD_DIM} "
+        f"d_ff={M.D_FF} n_layers={M.N_LAYERS} vocab={M.VOCAB}"
+    ]
+
+    n = 0
+    for name, meta, low in lower_variants():
+        path = os.path.join("hlo", f"{name}.hlo.txt")
+        with open(os.path.join(out, path), "w") as f:
+            f.write(to_hlo_text(low))
+        kv = " ".join(f"{k}={v}" for k, v in meta.items())
+        lines.append(f"hlo {name} {kv} path={path}")
+        n += 1
+        print(f"[{n}] lowered {name}")
+
+    weights = M.make_weights()
+    for tname, arr in weights.items():
+        if not isinstance(arr, np.ndarray):
+            continue
+        a = np.ascontiguousarray(arr, dtype=np.float32)
+        rows, cols = (a.shape[0], 1) if a.ndim == 1 else a.shape
+        path = os.path.join("weights", f"{tname}.bin")
+        a.tofile(os.path.join(out, path))
+        lines.append(f"weight {tname} rows={rows} cols={cols} path={path}")
+
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    # manifest.json marks completion for `make` (and is human-friendly).
+    import json
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump({"variants": n, "weights": len(weights) - 3}, f)
+    print(f"wrote {n} HLO variants + weights to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret-mode) + pure-jnp oracles."""
+
+from . import attention, ffn, ref  # noqa: F401

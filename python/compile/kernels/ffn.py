@@ -1,0 +1,75 @@
+"""L1: tiled SwiGLU FFN shard as a Pallas kernel.
+
+Computes the *partial* FFN contribution of one rank's column slice:
+`silu(x @ w_gate) * (x @ w_up) @ w_down` where the weights carry an
+arbitrary (non-uniform TP) number of intermediate columns. Columns are
+tiled on the grid and partial down-projections accumulate into the output
+— the reduction-dimension commutativity that FailSafe's on-demand weight
+recovery exploits (§3.2) is literally visible here: any column order sums
+to the same output.
+
+TPU adaptation: tiles are MXU-shaped ([tokens, dm] × [dm, bc]); the
+accumulator output revisits the same VMEM block across the column grid
+(`lambda i: (0, 0)`), the standard Pallas reduction idiom.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Column tile: 256 f32 columns × d_model 256 ≈ 256 KB per weight tile in
+# VMEM — comfortably under budget while long enough to amortize control.
+BLOCK_COLS = 256
+
+
+def _ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One column-tile grid step: accumulate this tile's down-projection.
+
+    x_ref: [n, dm]; wg_ref/wu_ref: [dm, bc]; wd_ref: [bc, dm]; o_ref: [n, dm].
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    g = x @ wg_ref[...]
+    u = x @ wu_ref[...]
+    act = g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u  # silu(g) * u
+    o_ref[...] += act @ wd_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols",))
+def ffn(x, w_gate, w_up, w_down, block_cols: int = BLOCK_COLS):
+    """Partial SwiGLU FFN over a column slice.
+
+    x: [b, s, dm]; w_gate/w_up: [dm, cols]; w_down: [cols, dm].
+    Returns [b, s, dm] (f32).
+    """
+    b, s, dm = x.shape
+    cols = w_gate.shape[1]
+    # The column tile must divide `cols` exactly: Pallas pads out-of-range
+    # weight tiles with undefined values, which silu can turn into NaNs.
+    bc = min(block_cols, cols)
+    while cols % bc != 0:
+        bc -= 1
+    n = b * s
+    xf = x.reshape(n, dm)
+
+    grid = (pl.cdiv(cols, bc),)
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, dm), lambda i: (0, 0)),  # x resident across tiles
+            pl.BlockSpec((dm, bc), lambda i: (0, i)),  # gate tile
+            pl.BlockSpec((dm, bc), lambda i: (0, i)),  # up tile
+            pl.BlockSpec((bc, dm), lambda i: (i, 0)),  # down tile
+        ],
+        out_specs=pl.BlockSpec((n, dm), lambda i: (0, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((n, dm), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xf, w_gate, w_up, w_down)
+
+    return out.reshape(b, s, dm)

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the Pallas kernels and the full model.
+
+Everything in this file is deliberately the *simplest correct*
+implementation — no blocking, no fusion — so the Pallas kernels and the
+sharded model composition can be validated against it bit-for-bit (well,
+allclose-for-allclose) in pytest.
+"""
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, gamma, eps: float = 1e-5):
+    """RMSNorm over the last axis. x: [..., d], gamma: [d]."""
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x / rms * gamma
+
+
+def rope_ref(x, positions, theta: float = 10000.0):
+    """Rotary position embedding.
+
+    x: [b, s, h, d] with d even; positions: [b, s] int32.
+    Pairs (x[2i], x[2i+1]) are rotated by angle pos * theta^(-2i/d).
+    """
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) * 2.0 / d)
+    ang = positions[:, :, None, None].astype(jnp.float32) * freqs  # [b,s,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x1 * sin + x2 * cos
+    out = jnp.stack([rx1, rx2], axis=-1).reshape(b, s, h, d)
+    return out
+
+
+def attention_ref(q, k, v, mask):
+    """Masked scaled-dot-product attention.
+
+    q: [b, s, h, d]; k, v: [b, t, h, d]; mask: [b, 1, s, t] additive
+    (0 where attendable, -1e9 where not). Returns [b, s, h, d].
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(jnp.float32(d))
+    scores = scores + mask  # broadcast over heads
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bthd->bshd", w, v)
+
+
+def swiglu_ffn_ref(x, w_gate, w_up, w_down):
+    """SwiGLU FFN (partial: whatever column slice the weights carry).
+
+    x: [b, s, dm]; w_gate/w_up: [dm, cols]; w_down: [cols, dm].
+    """
+    g = x @ w_gate
+    u = x @ w_up
+    act = g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u  # silu(g) * u
+    return act @ w_down
+
+
+def causal_mask(b, s, c):
+    """Additive causal mask for a chunk of `s` new tokens after `c` cached
+    tokens: position i may attend to all cached tokens and new tokens ≤ i.
+    Returns [b, 1, s, c + s].
+    """
+    new = jnp.tril(jnp.ones((s, s), dtype=bool))
+    full = jnp.concatenate([jnp.ones((s, c), dtype=bool), new], axis=1)
+    m = jnp.where(full, 0.0, -1e9).astype(jnp.float32)
+    return jnp.broadcast_to(m[None, None], (b, 1, s, c + s))
+
+
+def full_forward_ref(tokens, positions, weights):
+    """Unsharded reference forward pass of the small llama-style model.
+
+    tokens: [b, s] int32; positions: [b, s] int32.
+    weights: dict with keys:
+      emb [V, dm]; per layer i: attn_norm.i [dm], wq.i/wk.i/wv.i [dm, h*hd],
+      wo.i [h*hd, dm], ffn_norm.i [dm], w_gate.i/w_up.i [dm, dff],
+      w_down.i [dff, dm]; final_norm [dm]; lm_head [dm, V].
+    Returns logits [b, s, V].
+    """
+    n_layers = weights["n_layers"]
+    n_heads = weights["n_heads"]
+    head_dim = weights["head_dim"]
+    b, s = tokens.shape
+
+    x = weights["emb"][tokens]  # [b, s, dm]
+    mask = causal_mask(b, s, 0)
+    for i in range(n_layers):
+        xn = rmsnorm_ref(x, weights[f"attn_norm.{i}"])
+        q = (xn @ weights[f"wq.{i}"]).reshape(b, s, n_heads, head_dim)
+        k = (xn @ weights[f"wk.{i}"]).reshape(b, s, n_heads, head_dim)
+        v = (xn @ weights[f"wv.{i}"]).reshape(b, s, n_heads, head_dim)
+        q = rope_ref(q, positions)
+        k = rope_ref(k, positions)
+        attn = attention_ref(q, k, v, mask)
+        x = x + attn.reshape(b, s, n_heads * head_dim) @ weights[f"wo.{i}"]
+        xn = rmsnorm_ref(x, weights[f"ffn_norm.{i}"])
+        x = x + swiglu_ffn_ref(xn, weights[f"w_gate.{i}"], weights[f"w_up.{i}"], weights[f"w_down.{i}"])
+    x = rmsnorm_ref(x, weights["final_norm"])
+    return x @ weights["lm_head"]

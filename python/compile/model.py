@@ -1,0 +1,143 @@
+"""L2: the llama-style model *shard* forward, built on the L1 kernels.
+
+Non-uniform TP splits a transformer layer into per-rank partial
+computations joined by all-reduces. In this three-layer architecture the
+all-reduce is the **rust coordinator's job**: each function here computes
+one rank's *partial* contribution (its attention heads, its FFN columns)
+and returns it un-reduced. The coordinator sums partials across ranks and
+adds the residual — that sum is exactly the all-reduce of conventional TP,
+generalized to non-uniform and hybrid (TP+DP) head placements.
+
+Shapes are static per compiled variant (PJRT requires it); `aot.py`
+enumerates the (batch, seq, context, heads, cols) buckets the engine uses
+and pads at call time. Padding is *exact*:
+
+* extra heads with zero Wq/Wk/Wv/Wo contribute zero to the partial sum
+  (zero V rows make attention output zero regardless of softmax weights);
+* extra FFN columns with zero weights contribute zero;
+* masked-out cache positions carry -1e9 in the additive mask.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.ffn import ffn
+
+# Default small-real architecture (mirrors rust model::small_real()).
+D_MODEL = 256
+N_HEADS = 8
+HEAD_DIM = 32
+D_FF = 1024
+N_LAYERS = 4
+VOCAB = 512
+
+
+def rmsnorm(x, gamma, eps: float = 1e-5):
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x / rms * gamma
+
+
+def rope(x, positions, theta: float = 10000.0):
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) * 2.0 / d)
+    ang = positions[:, :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    return jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).reshape(b, s, h, d)
+
+
+def embed(tokens, emb):
+    """tokens: [b, s] int32; emb: [V, dm] → [b, s, dm]."""
+    return emb[tokens]
+
+
+def attn_layer(x, gamma, wq, wk, wv, wo, k_cache, v_cache, mask, positions):
+    """One rank's partial attention for its local heads.
+
+    x: [b, s, dm] (replicated input); gamma: [dm];
+    wq/wk/wv: [dm, h_local*hd]; wo: [h_local*hd, dm];
+    k_cache/v_cache: [b, c, h_local, hd] (this rank's cached KV; c may be 0);
+    mask: [b, 1, s, c+s] additive; positions: [b, s] int32.
+
+    Returns (partial_out [b, s, dm], k_new [b, s, h_local, hd], v_new) —
+    the caller appends k_new/v_new to its cache. The residual add happens
+    in the coordinator after the cross-rank sum.
+    """
+    b, s, _ = x.shape
+    h = wq.shape[1] // HEAD_DIM
+    xn = rmsnorm(x, gamma)
+    q = (xn @ wq).reshape(b, s, h, HEAD_DIM)
+    k = (xn @ wk).reshape(b, s, h, HEAD_DIM)
+    v = (xn @ wv).reshape(b, s, h, HEAD_DIM)
+    q = rope(q, positions)
+    k = rope(k, positions)
+    k_full = jnp.concatenate([k_cache, k], axis=1)
+    v_full = jnp.concatenate([v_cache, v], axis=1)
+    out = attention(q, k_full, v_full, mask)  # L1 Pallas kernel
+    partial_out = out.reshape(b, s, h * HEAD_DIM) @ wo
+    return partial_out, k, v
+
+
+def ffn_layer(x, gamma, w_gate, w_up, w_down):
+    """One rank's partial FFN for its column slice.
+
+    x: [b, s, dm]; w_gate/w_up: [dm, cols]; w_down: [cols, dm].
+    Returns partial [b, s, dm] (residual added by the coordinator).
+    """
+    xn = rmsnorm(x, gamma)
+    return ffn(xn, w_gate, w_up, w_down)  # L1 Pallas kernel
+
+
+def lm_head(x, gamma, w):
+    """Final norm + LM head (replicated; rank 0 runs it).
+
+    x: [b, s, dm]; gamma: [dm]; w: [dm, V] → logits [b, s, V].
+    """
+    return rmsnorm(x, gamma) @ w
+
+
+# ------------------------------------------------------------------ AOT --
+# Jitted entry points with everything as *arguments* (weights included) so
+# one compiled variant serves any rank with matching local shapes.
+
+embed_fn = jax.jit(embed)
+attn_layer_fn = jax.jit(attn_layer)
+ffn_layer_fn = jax.jit(ffn_layer)
+lm_head_fn = jax.jit(lm_head)
+
+
+def make_weights(seed: int = 42):
+    """Deterministic full-model weights (numpy RandomState for stability
+    across jax versions). Returns a dict of f32 numpy arrays plus metadata.
+    """
+    import numpy as np
+
+    rs = np.random.RandomState(seed)
+    scale = 0.02
+
+    def mat(r, c):
+        return (rs.randn(r, c) * scale).astype(np.float32)
+
+    w = {
+        "n_layers": N_LAYERS,
+        "n_heads": N_HEADS,
+        "head_dim": HEAD_DIM,
+        "emb": mat(VOCAB, D_MODEL),
+        "final_norm": np.ones(D_MODEL, dtype=np.float32),
+        "lm_head": mat(D_MODEL, VOCAB),
+    }
+    for i in range(N_LAYERS):
+        w[f"attn_norm.{i}"] = np.ones(D_MODEL, dtype=np.float32)
+        w[f"wq.{i}"] = mat(D_MODEL, N_HEADS * HEAD_DIM)
+        w[f"wk.{i}"] = mat(D_MODEL, N_HEADS * HEAD_DIM)
+        w[f"wv.{i}"] = mat(D_MODEL, N_HEADS * HEAD_DIM)
+        w[f"wo.{i}"] = mat(N_HEADS * HEAD_DIM, D_MODEL)
+        w[f"ffn_norm.{i}"] = np.ones(D_MODEL, dtype=np.float32)
+        w[f"w_gate.{i}"] = mat(D_MODEL, D_FF)
+        w[f"w_up.{i}"] = mat(D_MODEL, D_FF)
+        w[f"w_down.{i}"] = mat(D_FF, D_MODEL)
+    return w

@@ -1,0 +1,89 @@
+"""AOT pipeline consistency: the manifest, HLO variants, and weight dumps
+the rust runtime consumes must stay in lockstep with model.py."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest_lines():
+    path = os.path.join(ART, "manifest.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return [l.split() for l in f.read().splitlines() if l.strip()]
+
+
+def kv(fields):
+    return dict(f.split("=", 1) for f in fields if "=" in f)
+
+
+def test_model_line_matches_model_py(manifest_lines):
+    m = kv(manifest_lines[0][1:])
+    assert manifest_lines[0][0] == "model"
+    assert int(m["d_model"]) == M.D_MODEL
+    assert int(m["n_heads"]) == M.N_HEADS
+    assert int(m["head_dim"]) == M.HEAD_DIM
+    assert int(m["d_ff"]) == M.D_FF
+    assert int(m["n_layers"]) == M.N_LAYERS
+    assert int(m["vocab"]) == M.VOCAB
+
+
+def test_every_declared_variant_exists(manifest_lines):
+    hlo = [l for l in manifest_lines if l[0] == "hlo"]
+    assert len(hlo) == sum(1 for _ in aot.lower_variants.__wrapped__()) if hasattr(
+        aot.lower_variants, "__wrapped__"
+    ) else len(hlo) > 0
+    for l in hlo:
+        m = kv(l[2:])
+        path = os.path.join(ART, m["path"])
+        assert os.path.exists(path), f"missing HLO file {path}"
+        with open(path) as f:
+            text = f.read()
+        assert "HloModule" in text, f"{path} is not HLO text"
+
+
+def test_variant_grid_covers_engine_needs(manifest_lines):
+    hlo = [kv(l[2:]) | {"name": l[1]} for l in manifest_lines if l[0] == "hlo"]
+    attn = [v for v in hlo if v["kind"] == "attn"]
+    # Head buckets must cover every local-head count any TP width in
+    # {1..4} can produce under hybrid attention with 8 heads.
+    hbuckets = sorted({int(v["h"]) for v in attn})
+    for world in range(1, 5):
+        base = M.N_HEADS // world
+        rem = M.N_HEADS % world
+        for need in {base, rem} - {0}:
+            assert any(b >= need for b in hbuckets), f"no head bucket ≥ {need}"
+    # Decode variants exist for every declared batch bucket at every ctx.
+    for b in aot.DECODE_BATCH:
+        for c in aot.DECODE_CTX:
+            assert any(
+                int(v["b"]) == b and int(v["s"]) == 1 and int(v["c"]) == c for v in attn
+            ), f"missing decode attn b{b} c{c}"
+    # FFN column buckets cover ceil(d_ff / world) for TP 1..4.
+    ffn = [v for v in hlo if v["kind"] == "ffn"]
+    cbuckets = sorted({int(v["cols"]) for v in ffn})
+    for world in range(1, 5):
+        need = -(-M.D_FF // world)
+        assert any(c >= need for c in cbuckets), f"no col bucket ≥ {need}"
+
+
+def test_weight_dumps_roundtrip(manifest_lines):
+    weights = [l for l in manifest_lines if l[0] == "weight"]
+    expect = M.make_weights(seed=42)
+    assert len(weights) == sum(1 for k, v in expect.items() if isinstance(v, np.ndarray))
+    for l in weights:
+        name = l[1]
+        m = kv(l[2:])
+        rows, cols = int(m["rows"]), int(m["cols"])
+        data = np.fromfile(os.path.join(ART, m["path"]), dtype=np.float32)
+        assert data.size == rows * cols, f"{name} size mismatch"
+        ref = expect[name].reshape(-1)
+        np.testing.assert_array_equal(data, ref, err_msg=f"{name} bytes differ from seed-42 weights")

@@ -1,0 +1,148 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (batch, seq, context, heads, head_dim) so the
+kernels are exercised far beyond the AOT buckets.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.ffn import ffn
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand(rs, *shape, scale=1.0):
+    return jnp.asarray(rs.randn(*shape) * scale, jnp.float32)
+
+
+# ------------------------------------------------------------ attention --
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.integers(1, 33),
+    c=st.integers(0, 40),
+    h=st.integers(1, 8),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, s, c, h, d, seed):
+    rs = np.random.RandomState(seed)
+    q = rand(rs, b, s, h, d)
+    k = rand(rs, b, c + s, h, d)
+    v = rand(rs, b, c + s, h, d)
+    mask = ref.causal_mask(b, s, c)
+    out = attention(q, k, v, mask)
+    expect = ref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(out, expect, rtol=RTOL, atol=ATOL)
+
+
+def test_attention_crosses_block_boundaries():
+    # seq and ctx beyond BLOCK_Q/BLOCK_K exercise the online-softmax loop.
+    rs = np.random.RandomState(7)
+    b, s, c, h, d = 1, 130, 200, 2, 32
+    q = rand(rs, b, s, h, d)
+    k = rand(rs, b, c + s, h, d)
+    v = rand(rs, b, c + s, h, d)
+    mask = ref.causal_mask(b, s, c)
+    out = attention(q, k, v, mask)
+    expect = ref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_zero_value_heads_output_zero():
+    # The head-padding trick: zero V (and any K) ⇒ zero output.
+    rs = np.random.RandomState(3)
+    b, s, c, h, d = 2, 8, 16, 3, 16
+    q = rand(rs, b, s, h, d)
+    k = rand(rs, b, c + s, h, d)
+    v = jnp.zeros((b, c + s, h, d), jnp.float32)
+    out = attention(q, k, v, ref.causal_mask(b, s, c))
+    np.testing.assert_allclose(out, 0.0, atol=1e-7)
+
+
+def test_attention_respects_mask():
+    # A token must not attend to future positions: compare s=2 chunk
+    # against two s=1 decodes.
+    rs = np.random.RandomState(5)
+    b, h, d = 1, 2, 16
+    q = rand(rs, b, 2, h, d)
+    k = rand(rs, b, 2, h, d)
+    v = rand(rs, b, 2, h, d)
+    full = attention(q, k, v, ref.causal_mask(b, 2, 0))
+    first = attention(q[:, :1], k[:, :1], v[:, :1], ref.causal_mask(b, 1, 0))
+    np.testing.assert_allclose(full[:, :1], first, rtol=RTOL, atol=ATOL)
+
+
+def test_attention_extreme_logits_stable():
+    # Online softmax must survive large score magnitudes.
+    rs = np.random.RandomState(9)
+    b, s, c, h, d = 1, 4, 8, 1, 8
+    q = rand(rs, b, s, h, d, scale=30.0)
+    k = rand(rs, b, c + s, h, d, scale=30.0)
+    v = rand(rs, b, c + s, h, d)
+    out = attention(q, k, v, ref.causal_mask(b, s, c))
+    assert bool(jnp.isfinite(out).all())
+    expect = ref.attention_ref(q, k, v, ref.causal_mask(b, s, c))
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ ffn --
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 20),
+    dm=st.sampled_from([32, 64, 256]),
+    cols=st.integers(1, 600),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_matches_ref(n, dm, cols, seed):
+    rs = np.random.RandomState(seed)
+    x = rand(rs, 1, n, dm)
+    wg = rand(rs, dm, cols, scale=0.05)
+    wu = rand(rs, dm, cols, scale=0.05)
+    wd = rand(rs, cols, dm, scale=0.05)
+    out = ffn(x, wg, wu, wd)
+    expect = ref.swiglu_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_ffn_zero_columns_contribute_nothing():
+    # The column-padding trick: appending zero columns is a no-op.
+    rs = np.random.RandomState(11)
+    dm, cols, pad = 64, 100, 156
+    x = rand(rs, 1, 8, dm)
+    wg = rand(rs, dm, cols, scale=0.05)
+    wu = rand(rs, dm, cols, scale=0.05)
+    wd = rand(rs, cols, dm, scale=0.05)
+    z = jnp.zeros((dm, pad), jnp.float32)
+    zd = jnp.zeros((pad, dm), jnp.float32)
+    padded = ffn(
+        x,
+        jnp.concatenate([wg, z], axis=1),
+        jnp.concatenate([wu, z], axis=1),
+        jnp.concatenate([wd, zd], axis=0),
+    )
+    np.testing.assert_allclose(padded, ffn(x, wg, wu, wd), rtol=1e-5, atol=1e-6)
+
+
+def test_ffn_column_order_commutes():
+    # Matmul commutativity along the reduction dim — the property
+    # FailSafe's on-demand weight recovery relies on (§3.2).
+    rs = np.random.RandomState(13)
+    dm, cols = 32, 64
+    x = rand(rs, 1, 4, dm)
+    wg = rand(rs, dm, cols, scale=0.1)
+    wu = rand(rs, dm, cols, scale=0.1)
+    wd = rand(rs, cols, dm, scale=0.1)
+    perm = np.random.RandomState(0).permutation(cols)
+    out = ffn(x, wg, wu, wd)
+    out_perm = ffn(x, wg[:, perm], wu[:, perm], wd[perm, :])
+    np.testing.assert_allclose(out, out_perm, rtol=1e-4, atol=1e-5)

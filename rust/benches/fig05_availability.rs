@@ -1,0 +1,17 @@
+//! Paper Fig 5: the GCP-derived availability trace (scaled to 64 GPUs).
+
+use failsafe::benchkit::section;
+use failsafe::traces::gcp_availability;
+
+fn main() {
+    section("Fig 5 — GPU availability trace (GCP-derived, 64 GPUs)");
+    let tr = gcp_availability(64, 6.0 * 3600.0, 42);
+    println!("time_s,available_gpus");
+    for &(t, a) in &tr {
+        println!("{t:.0},{a}");
+    }
+    let min = tr.iter().map(|&(_, a)| a).min().unwrap();
+    let avg = tr.iter().map(|&(_, a)| a as f64).sum::<f64>() / tr.len() as f64;
+    println!("\nevents={} min_avail={min} mean_avail={avg:.1} (full=64, floor>=48)", tr.len());
+    assert!(min >= 48 && min < 64);
+}

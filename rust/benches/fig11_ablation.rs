@@ -1,0 +1,63 @@
+//! Paper Fig 11: breakdown of FailSafe's optimizations at TP7 (llama-70B,
+//! peak Mooncake throughput, normalized to Standard-TP4).
+//!
+//! Paper: prefill — compute balancing +25%, memory balancing ≈ 0 (compute
+//! bound); decode — memory balancing +34%, compute balancing a further
+//! +43%.
+
+use failsafe::benchkit::{paper_row, section};
+use failsafe::model::llama3_70b;
+use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
+use failsafe::traces::{mooncake_trace, poisson_arrivals, TraceRequest};
+
+fn saturating_trace(n: usize) -> Vec<TraceRequest> {
+    let mut t = mooncake_trace(n, 2);
+    for r in t.iter_mut() {
+        r.input_tokens = r.input_tokens.min(64_000);
+    }
+    poisson_arrivals(&mut t, 1e6, 2);
+    t
+}
+
+fn peak(cfg: &SystemConfig, world: usize, mode: OnlineMode) -> f64 {
+    let sim = OnlineSim::new(cfg.clone(), mode, world).with_model(llama3_70b());
+    let n = if mode == OnlineMode::Prefill { 120 } else { 300 };
+    let out = sim.run(&saturating_trace(n), None);
+    match mode {
+        OnlineMode::Prefill => out.metrics.input_throughput(),
+        OnlineMode::Decode => out.metrics.output_throughput(),
+    }
+}
+
+fn main() {
+    section("Fig 11 — optimization breakdown at TP7, llama-70B");
+    let configs = [
+        ("Standard-TP4", SystemConfig::standard(), 4usize),
+        ("+Nonuniform-TP7", SystemConfig::nonuniform(), 7),
+        ("+Memory-balancing", SystemConfig::memory_balanced(), 7),
+        ("+Compute-balancing", SystemConfig::failsafe(), 7),
+    ];
+
+    for (mode, label) in [(OnlineMode::Prefill, "prefill"), (OnlineMode::Decode, "decode")] {
+        println!("\n[{label}]");
+        let mut tputs = Vec::new();
+        let tp4 = peak(&configs[0].1, configs[0].2, mode);
+        for (name, cfg, world) in &configs {
+            let t = peak(cfg, *world, mode);
+            tputs.push(t);
+            println!("  {:<20} {:>10.0} tok/s  (norm {:.2})", name, t, t / tp4);
+        }
+        let mem_gain = tputs[2] / tputs[1] - 1.0;
+        let comp_gain = tputs[3] / tputs[2] - 1.0;
+        match mode {
+            OnlineMode::Prefill => {
+                paper_row("prefill: +memory balancing", "~+0%", &format!("{:+.0}%", mem_gain * 100.0), mem_gain.abs() < 0.10);
+                paper_row("prefill: +compute balancing", "+25%", &format!("{:+.0}%", comp_gain * 100.0), comp_gain > 0.08 && comp_gain < 0.55);
+            }
+            OnlineMode::Decode => {
+                paper_row("decode: +memory balancing", "+34%", &format!("{:+.0}%", mem_gain * 100.0), mem_gain > 0.12 && mem_gain < 0.75);
+                paper_row("decode: +compute balancing", "+43%", &format!("{:+.0}%", comp_gain * 100.0), comp_gain > 0.15 && comp_gain < 0.90);
+            }
+        }
+    }
+}

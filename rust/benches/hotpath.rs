@@ -1,0 +1,118 @@
+//! Hot-path microbenchmarks (the §Perf targets in DESIGN.md):
+//! router decision, Algorithm 1 batch forming, recovery planning,
+//! cost-model step evaluation, and KV block allocation.
+
+use failsafe::benchkit::{sink, Bench};
+use failsafe::cluster::{GpuSpec, Interconnect};
+use failsafe::kvcache::{BackupStore, BlockAllocator};
+use failsafe::model::llama3_70b;
+use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
+use failsafe::router::{DpRouter, RoutePolicy};
+use failsafe::scheduler::{adaptive_chunked_prefill, PrefillItem};
+use failsafe::sharding::{HeadAssignment, ShardPlan};
+use failsafe::simulator::{DecodeWork, StepCostModel};
+use failsafe::util::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let m = llama3_70b();
+    let spec = GpuSpec::h100();
+    let ic = Interconnect::new(spec.clone());
+
+    // Router decision at 10k-request scale.
+    {
+        let mut router = DpRouter::new(RoutePolicy::LeastLoaded, 8);
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            router.route(rng.range_f64(1.0, 10_000.0));
+        }
+        let mut rng = Rng::seed_from_u64(2);
+        b.run("router: least-loaded route (w=8, 10k booked)", || {
+            sink(router.route(rng.range_f64(1.0, 10_000.0)));
+        });
+    }
+
+    // Algorithm 1 batch forming: 64 pending requests, 8k budget.
+    {
+        let mut rng = Rng::seed_from_u64(3);
+        let items: Vec<PrefillItem> = (0..64)
+            .map(|i| PrefillItem {
+                request: i,
+                rank: (i % 8) as usize,
+                context: rng.range(0, 8192),
+                remaining: rng.range(64, 4096),
+            })
+            .collect();
+        let carry = vec![0.0; 8];
+        b.run("scheduler: Algorithm 1 (64 reqs, N=8192, granule=16)", || {
+            sink(adaptive_chunked_prefill(8192, &items, &carry, 8, 16));
+        });
+        b.run("scheduler: Algorithm 1 exact (granule=1)", || {
+            sink(adaptive_chunked_prefill(8192, &items, &carry, 8, 1));
+        });
+    }
+
+    // Recovery planning at 70B scale.
+    {
+        let old = ShardPlan::failsafe(&m, 8);
+        let failed = 3usize;
+        let survivor_map: Vec<Option<usize>> = (0..8)
+            .map(|r| if r == failed { None } else { Some(if r < failed { r } else { r - 1 }) })
+            .collect();
+        let new_plan = ShardPlan {
+            model: m.clone(),
+            heads: HeadAssignment::new(
+                failsafe::sharding::AttentionPolicy::Hybrid,
+                m.n_kv_heads,
+                m.n_layers,
+                7,
+            ),
+            ffn: old.ffn.reshard(&survivor_map, 7),
+        };
+        let reqs: Vec<(u64, usize, usize)> = (0..100).map(|i| (i, 8000, (i % 8) as usize)).collect();
+        let mut backup = BackupStore::new(1 << 42);
+        for &(id, t, _) in &reqs {
+            backup.backup(id, t, m.kv_bytes_per_token());
+        }
+        let input = RecoveryInput {
+            spec: &spec,
+            ic: &ic,
+            old_plan: &old,
+            new_plan: &new_plan,
+            survivor_map: &survivor_map,
+            failed_rank: failed,
+            requests: &reqs,
+            backup: &backup,
+        };
+        b.run("recovery: plan FailSafe-Full (70B, TP8->7, 100 reqs)", || {
+            sink(plan_recovery(RecoveryMethod::Full, &input).total_s);
+        });
+    }
+
+    // Cost model step evaluation (the simulator's inner loop).
+    {
+        let cost = StepCostModel::new(&ShardPlan::failsafe(&m, 7), &spec, &ic);
+        let batch: Vec<DecodeWork> =
+            (0..128).map(|i| DecodeWork { context: 8000 + i * 10, home: i % 7 }).collect();
+        b.run("costmodel: decode step (80 layers, 128 reqs, w=7)", || {
+            sink(cost.decode_step_time(&batch));
+        });
+    }
+
+    // KV block allocator.
+    {
+        let mut alloc = BlockAllocator::new(65_536);
+        let mut req = 0u64;
+        b.run("kvcache: alloc+free 16 blocks", || {
+            req += 1;
+            let blocks = alloc.alloc(req, 16).unwrap();
+            sink(&blocks);
+            alloc.free_request(req);
+        });
+    }
+
+    // Shard plan construction (per reconfiguration epoch).
+    b.run("sharding: build failsafe plan (70B, w=7)", || {
+        sink(ShardPlan::failsafe(&m, 7));
+    });
+}

@@ -1,0 +1,33 @@
+//! Paper Tables 1 & 2: workload trace statistics.
+
+use failsafe::benchkit::{paper_row, section};
+use failsafe::traces::{mooncake_trace, openthoughts_trace, TraceStats};
+
+fn check(label: &str, got: f64, want: f64, tol: f64) {
+    paper_row(label, &format!("{want:.0}"), &format!("{got:.0}"), (got - want).abs() / want < tol);
+}
+
+fn main() {
+    section("Table 1 — OpenThoughts-114k characteristics");
+    let t = openthoughts_trace(50_000, 1);
+    let inp = TraceStats::of(&t.iter().map(|r| r.input_tokens).collect::<Vec<_>>());
+    let out = TraceStats::of(&t.iter().map(|r| r.output_tokens).collect::<Vec<_>>());
+    check("input mean", inp.mean, 422.0, 0.06);
+    check("input median", inp.median, 352.0, 0.06);
+    paper_row("input max", "7633", &format!("{}", inp.max), inp.max <= 7633);
+    check("output mean", out.mean, 7295.0, 0.08);
+    check("output median", out.median, 5583.0, 0.06);
+    paper_row("output max", "37817", &format!("{}", out.max), out.max <= 37817);
+
+    section("Table 2 — scaled Mooncake trace characteristics");
+    let t = mooncake_trace(50_000, 2);
+    let inp = TraceStats::of(&t.iter().map(|r| r.input_tokens).collect::<Vec<_>>());
+    let out = TraceStats::of(&t.iter().map(|r| r.output_tokens).collect::<Vec<_>>());
+    check("input mean", inp.mean, 13_516.0, 0.08);
+    check("input median", inp.median, 8_001.0, 0.06);
+    paper_row("input max", "123192", &format!("{}", inp.max), inp.max <= 123_192);
+    check("output mean", out.mean, 349.0, 0.08);
+    check("output median", out.median, 362.0, 0.05);
+    paper_row("output max", "2000", &format!("{}", out.max), out.max <= 2000);
+    paper_row("total requests", "3000", "3000 (per §4.2 sample)", true);
+}

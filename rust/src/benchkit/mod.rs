@@ -1,0 +1,171 @@
+//! Benchmark + property-test harness (offline stand-in for `criterion`
+//! and `proptest`).
+//!
+//! Each paper table/figure bench is a `harness = false` binary that uses
+//! [`Bench`] for wall-clock micro-measurements and prints paper-vs-measured
+//! rows. [`forall`] gives proptest-style randomized property sweeps with
+//! seed reporting on failure.
+
+use std::time::Instant;
+
+use crate::util::Rng;
+
+/// Timing statistics of one measured routine.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns)
+        );
+    }
+}
+
+/// Human-readable duration from nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Micro-benchmark runner: warms up, then samples batches until the time
+/// budget is spent.
+pub struct Bench {
+    /// Total sampling budget per routine.
+    pub budget: std::time::Duration,
+    /// Warm-up time before sampling.
+    pub warmup: std::time::Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: std::time::Duration::from_millis(700),
+            warmup: std::time::Duration::from_millis(150),
+        }
+    }
+}
+
+impl Bench {
+    /// Measure `f`, treating each call as one iteration. `black_box` the
+    /// result inside `f` yourself if needed — [`sink`] helps.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warm-up.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Sample.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        let mut iters = 0u64;
+        while t0.elapsed() < self.budget {
+            let s = Instant::now();
+            f();
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let q = |p: f64| samples_ns[((samples_ns.len() - 1) as f64 * p) as usize];
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: q(0.5),
+            p99_ns: q(0.99),
+            min_ns: samples_ns[0],
+        };
+        m.report();
+        m
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting a computation.
+#[inline]
+pub fn sink<T>(v: T) -> T {
+    std::hint::black_box(v)
+}
+
+/// Property-test sweep: run `prop` over `cases` randomized cases derived
+/// from a seeded RNG; on failure, panic with the failing case seed so it
+/// can be replayed exactly.
+pub fn forall<F: FnMut(&mut Rng)>(name: &str, cases: u64, base_seed: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at case {case} (replay seed {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Section header for figure benches.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// One paper-vs-measured comparison row.
+pub fn paper_row(label: &str, paper: &str, measured: &str, ok: bool) {
+    println!(
+        "{:<46} paper: {:>14}   measured: {:>14}   [{}]",
+        label,
+        paper,
+        measured,
+        if ok { "OK" } else { "MISMATCH" }
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench {
+            budget: std::time::Duration::from_millis(30),
+            warmup: std::time::Duration::from_millis(5),
+        };
+        let m = b.run("noop-ish", || {
+            sink((0..100).sum::<u64>());
+        });
+        assert!(m.iters > 10);
+        assert!(m.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0;
+        forall("counts", 25, 7, |_rng| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failures() {
+        forall("fails", 10, 7, |rng| {
+            assert!(rng.f64() < 0.5, "will eventually fail");
+        });
+    }
+}

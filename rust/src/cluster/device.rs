@@ -1,0 +1,177 @@
+//! Simulated GPU devices and the node that groups them.
+
+
+use super::GpuSpec;
+use crate::RankId;
+
+/// Health state of a simulated device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceState {
+    /// Healthy and participating in the TP group.
+    Healthy,
+    /// Hard-failed (ECC/driver/thermal); all HBM contents lost.
+    Failed,
+}
+
+/// One simulated accelerator: HBM accounting plus health state.
+///
+/// The device does not execute anything itself — compute either runs for
+/// real through the PJRT runtime ([`crate::runtime`]) or is costed by the
+/// performance simulator ([`crate::simulator`]). What lives here is the
+/// state the coordinator must manage: how much HBM is committed to weights
+/// vs KV cache, and whether the device is alive.
+#[derive(Debug, Clone)]
+pub struct GpuDevice {
+    /// Physical device index within the node (stable across failures).
+    pub id: usize,
+    pub state: DeviceState,
+    /// Bytes committed to model weights under the current shard plan.
+    pub weight_bytes: usize,
+    /// Bytes committed to KV cache blocks.
+    pub kv_bytes: usize,
+    /// Bytes reserved for activations / workspace.
+    pub reserved_bytes: usize,
+    spec: GpuSpec,
+}
+
+impl GpuDevice {
+    pub fn new(id: usize, spec: GpuSpec) -> Self {
+        GpuDevice {
+            id,
+            state: DeviceState::Healthy,
+            weight_bytes: 0,
+            kv_bytes: 0,
+            // ~6% of HBM for activations, workspace, CUDA context.
+            reserved_bytes: spec.hbm_bytes / 16,
+            spec,
+        }
+    }
+
+    pub fn spec(&self) -> &GpuSpec {
+        &self.spec
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        self.state == DeviceState::Healthy
+    }
+
+    /// HBM bytes still available for KV cache growth.
+    pub fn free_bytes(&self) -> usize {
+        self.spec
+            .hbm_bytes
+            .saturating_sub(self.weight_bytes + self.kv_bytes + self.reserved_bytes)
+    }
+
+    /// Maximum KV bytes this device could hold given its weight commitment.
+    pub fn kv_capacity_bytes(&self) -> usize {
+        self.spec.hbm_bytes.saturating_sub(self.weight_bytes + self.reserved_bytes)
+    }
+
+    /// Mark the device failed, dropping all HBM contents (the paper's hard
+    /// failure model: KV and weights on the device are irrecoverably lost).
+    pub fn fail(&mut self) {
+        self.state = DeviceState::Failed;
+        self.weight_bytes = 0;
+        self.kv_bytes = 0;
+    }
+
+    /// Restore the device to service with empty HBM.
+    pub fn recover(&mut self) {
+        self.state = DeviceState::Healthy;
+        self.weight_bytes = 0;
+        self.kv_bytes = 0;
+    }
+}
+
+/// A scale-up domain: `n` devices joined by NVLink, each with a PCIe link to
+/// host DRAM. The unit over which tensor parallelism operates.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub devices: Vec<GpuDevice>,
+    /// Host DRAM bytes available for KVCache backup (modern DGX hosts carry
+    /// 2 TB, comfortably larger than aggregate HBM — §3.2).
+    pub host_dram_bytes: usize,
+}
+
+impl Node {
+    pub fn new(n: usize, spec: GpuSpec) -> Self {
+        Node {
+            devices: (0..n).map(|i| GpuDevice::new(i, spec.clone())).collect(),
+            host_dram_bytes: 2 * (1 << 40),
+        }
+    }
+
+    /// Device ids currently healthy, in physical order. TP rank `r` is the
+    /// r-th healthy device — the mapping the coordinator re-derives after
+    /// every failure/recovery.
+    pub fn healthy_ids(&self) -> Vec<usize> {
+        self.devices.iter().filter(|d| d.is_healthy()).map(|d| d.id).collect()
+    }
+
+    pub fn n_healthy(&self) -> usize {
+        self.devices.iter().filter(|d| d.is_healthy()).count()
+    }
+
+    /// Map a TP rank in the current configuration to a physical device id.
+    pub fn rank_to_device(&self, rank: RankId) -> Option<usize> {
+        self.healthy_ids().get(rank).copied()
+    }
+
+    pub fn device(&self, id: usize) -> &GpuDevice {
+        &self.devices[id]
+    }
+
+    pub fn device_mut(&mut self, id: usize) -> &mut GpuDevice {
+        &mut self.devices[id]
+    }
+
+    /// Minimum KV capacity across healthy devices — the binding constraint
+    /// on batch size under synchronized TP (§2.2.1: memory imbalance lowers
+    /// the usable batch size of the *whole system*).
+    pub fn min_kv_capacity(&self) -> usize {
+        self.devices
+            .iter()
+            .filter(|d| d.is_healthy())
+            .map(|d| d.kv_capacity_bytes())
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fail_drops_hbm_and_rank_map_shifts() {
+        let mut node = Node::new(8, GpuSpec::h100());
+        node.device_mut(3).weight_bytes = 1 << 30;
+        node.device_mut(3).kv_bytes = 1 << 30;
+        node.device_mut(3).fail();
+        assert_eq!(node.n_healthy(), 7);
+        assert_eq!(node.device(3).weight_bytes, 0);
+        assert_eq!(node.device(3).kv_bytes, 0);
+        // rank 3 now maps to physical device 4
+        assert_eq!(node.rank_to_device(3), Some(4));
+        assert_eq!(node.rank_to_device(7), None);
+    }
+
+    #[test]
+    fn free_bytes_accounting() {
+        let spec = GpuSpec::h100();
+        let mut d = GpuDevice::new(0, spec.clone());
+        assert_eq!(d.free_bytes(), spec.hbm_bytes - spec.hbm_bytes / 16);
+        d.weight_bytes = 20 * (1 << 30);
+        d.kv_bytes = 10 * (1 << 30);
+        assert_eq!(d.free_bytes(), spec.hbm_bytes - spec.hbm_bytes / 16 - 30 * (1 << 30));
+    }
+
+    #[test]
+    fn recover_rejoins_empty() {
+        let mut node = Node::new(8, GpuSpec::h100());
+        node.device_mut(0).fail();
+        node.device_mut(0).recover();
+        assert_eq!(node.n_healthy(), 8);
+        assert_eq!(node.device(0).weight_bytes, 0);
+    }
+}

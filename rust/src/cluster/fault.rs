@@ -1,0 +1,150 @@
+//! Fault injection: turning an availability trace into failure/recovery
+//! events against [`super::Node`]s.
+//!
+//! Mirrors the paper's §4.1 failure simulation: each failure event disables
+//! one random GPU across the fleet; each recovery event restores one random
+//! failed GPU. The trace itself (GPU availability over time, Fig 5) comes
+//! from [`crate::traces::gcp_availability`].
+
+use crate::util::Rng;
+
+use crate::SimTime;
+
+/// Whether a fault event removes or restores capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Hard failure: device HBM lost.
+    Fail,
+    /// Device returns to service (empty).
+    Recover,
+}
+
+/// One scheduled event against a specific device of a specific node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: SimTime,
+    pub node: usize,
+    pub device: usize,
+    pub kind: FaultKind,
+}
+
+/// Expands an aggregate availability trace (total healthy GPUs over time)
+/// into per-device fail/recover events, choosing victims uniformly at
+/// random with a seeded RNG so experiments are reproducible.
+#[derive(Debug)]
+pub struct FaultInjector {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultInjector {
+    /// `availability` is a step function: `(time, total_healthy_gpus)`
+    /// samples, monotonically increasing in time. `n_nodes` nodes of
+    /// `gpus_per_node` devices each; full availability = n_nodes × gpus_per_node.
+    pub fn from_availability(
+        availability: &[(SimTime, usize)],
+        n_nodes: usize,
+        gpus_per_node: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let total = n_nodes * gpus_per_node;
+        let mut healthy: Vec<(usize, usize)> =
+            (0..n_nodes).flat_map(|n| (0..gpus_per_node).map(move |d| (n, d))).collect();
+        let mut failed: Vec<(usize, usize)> = Vec::new();
+        let mut events = Vec::new();
+        let mut current = total;
+
+        for &(t, avail) in availability {
+            let avail = avail.min(total);
+            while current > avail {
+                // Fail a random healthy device.
+                let idx = rng.pick(healthy.len());
+                let (n, d) = healthy.swap_remove(idx);
+                failed.push((n, d));
+                events.push(FaultEvent { at: t, node: n, device: d, kind: FaultKind::Fail });
+                current -= 1;
+            }
+            while current < avail {
+                // Recover a random failed device.
+                let idx = rng.pick(failed.len());
+                let (n, d) = failed.swap_remove(idx);
+                healthy.push((n, d));
+                events.push(FaultEvent { at: t, node: n, device: d, kind: FaultKind::Recover });
+                current += 1;
+            }
+        }
+        FaultInjector { events }
+    }
+
+    /// A single failure of `device` on `node` at time `at` — the §4.3.3
+    /// recovery-latency experiment setup.
+    pub fn single_failure(at: SimTime, node: usize, device: usize) -> Self {
+        FaultInjector {
+            events: vec![FaultEvent { at, node, device, kind: FaultKind::Fail }],
+        }
+    }
+
+    /// `k` distinct random failures at time `at` on one node.
+    pub fn multi_failure(at: SimTime, node: usize, gpus_per_node: usize, k: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut devs: Vec<usize> = (0..gpus_per_node).collect();
+        rng.shuffle(&mut devs);
+        FaultInjector {
+            events: devs[..k.min(gpus_per_node)]
+                .iter()
+                .map(|&d| FaultEvent { at, node, device: d, kind: FaultKind::Fail })
+                .collect(),
+        }
+    }
+
+    /// All events in time order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Events within `[from, to)`.
+    pub fn events_between(&self, from: SimTime, to: SimTime) -> Vec<FaultEvent> {
+        self.events.iter().copied().filter(|e| e.at >= from && e.at < to).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn availability_expansion_conserves_count() {
+        let trace = vec![(0.0, 64), (100.0, 62), (200.0, 63), (300.0, 60), (400.0, 64)];
+        let inj = FaultInjector::from_availability(&trace, 8, 8, 42);
+        let mut healthy = 64i64;
+        let mut min_seen = 64i64;
+        for e in inj.events() {
+            match e.kind {
+                FaultKind::Fail => healthy -= 1,
+                FaultKind::Recover => healthy += 1,
+            }
+            min_seen = min_seen.min(healthy);
+        }
+        assert_eq!(healthy, 64);
+        assert_eq!(min_seen, 60);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let trace = vec![(0.0, 64), (50.0, 61)];
+        let a = FaultInjector::from_availability(&trace, 8, 8, 7);
+        let b = FaultInjector::from_availability(&trace, 8, 8, 7);
+        assert_eq!(a.events(), b.events());
+    }
+
+    #[test]
+    fn multi_failure_distinct_devices() {
+        let inj = FaultInjector::multi_failure(1.0, 0, 8, 3, 9);
+        let devs: Vec<_> = inj.events().iter().map(|e| e.device).collect();
+        let mut dedup = devs.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 3);
+        assert_eq!(devs.len(), 3);
+    }
+}

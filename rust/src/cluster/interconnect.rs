@@ -1,0 +1,115 @@
+//! Bandwidth/latency model of the intra-node fabric.
+//!
+//! Two transfer classes matter to FailSafe's recovery math (§3.2): the
+//! fast peer fabric (NVLink, GPU↔GPU) and the slow host link (PCIe,
+//! GPU↔host DRAM). On-demand weight recovery is profitable precisely
+//! because NVLink bandwidth ≫ PCIe bandwidth, so pulling a *fraction* of
+//! the lost bytes over PCIe per rank and exchanging the rest over NVLink
+//! beats each rank pulling its full new shard over PCIe.
+
+
+use super::GpuSpec;
+
+/// Which link a transfer crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferClass {
+    /// GPU ↔ GPU over NVLink.
+    NvLink,
+    /// GPU ↔ host DRAM over PCIe.
+    PcieHost,
+}
+
+/// The node fabric model. All devices share the spec's per-link bandwidths;
+/// transfers on distinct links proceed in parallel, transfers sharing a link
+/// divide its bandwidth.
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    spec: GpuSpec,
+    /// Per-message fixed latency, seconds (driver + DMA setup).
+    pub message_latency_s: f64,
+}
+
+impl Interconnect {
+    pub fn new(spec: GpuSpec) -> Self {
+        Interconnect { spec, message_latency_s: 10e-6 }
+    }
+
+    fn bw(&self, class: TransferClass) -> f64 {
+        match class {
+            TransferClass::NvLink => self.spec.nvlink_bw,
+            TransferClass::PcieHost => self.spec.pcie_bw,
+        }
+    }
+
+    /// Time for one device to move `bytes` across `class`, exclusively.
+    pub fn transfer_time(&self, class: TransferClass, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.message_latency_s + bytes as f64 / self.bw(class)
+    }
+
+    /// Time for `n` devices each moving `per_device_bytes` across their own
+    /// `class` link concurrently (PCIe links are per-device, so this is just
+    /// the max of identical independent transfers).
+    pub fn parallel_transfer_time(&self, class: TransferClass, per_device_bytes: usize) -> f64 {
+        self.transfer_time(class, per_device_bytes)
+    }
+
+    /// Ring all-reduce time over `world` devices for `bytes` per device.
+    ///
+    /// Standard 2(w−1)/w bytes-on-the-wire model over NVLink, plus the
+    /// fixed collective latency. For `world == 1` this is free.
+    pub fn allreduce_time(&self, world: usize, bytes: usize) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let w = world as f64;
+        let wire = 2.0 * (w - 1.0) / w * bytes as f64;
+        self.spec.collective_latency_s + wire / self.spec.nvlink_bw
+    }
+
+    /// All-gather time over `world` devices collecting `bytes` total.
+    pub fn allgather_time(&self, world: usize, bytes: usize) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let w = world as f64;
+        let wire = (w - 1.0) / w * bytes as f64;
+        self.spec.collective_latency_s + wire / self.spec.nvlink_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvlink_much_faster_than_pcie() {
+        let ic = Interconnect::new(GpuSpec::h100());
+        let gb = 1 << 30;
+        assert!(
+            ic.transfer_time(TransferClass::PcieHost, gb)
+                > 5.0 * ic.transfer_time(TransferClass::NvLink, gb)
+        );
+    }
+
+    #[test]
+    fn allreduce_scales_with_world() {
+        let ic = Interconnect::new(GpuSpec::h100());
+        assert_eq!(ic.allreduce_time(1, 1 << 20), 0.0);
+        let t2 = ic.allreduce_time(2, 1 << 20);
+        let t8 = ic.allreduce_time(8, 1 << 20);
+        assert!(t8 > t2);
+        // wire bytes ratio: 2*(7/8) / 2*(1/2) = 1.75
+        let wire_ratio = (t8 - 10e-6) / (t2 - 10e-6);
+        assert!((wire_ratio - 1.75).abs() < 0.01, "{wire_ratio}");
+    }
+
+    #[test]
+    fn zero_bytes_free() {
+        let ic = Interconnect::new(GpuSpec::h100());
+        assert_eq!(ic.transfer_time(TransferClass::NvLink, 0), 0.0);
+        assert_eq!(ic.allreduce_time(8, 0), 0.0);
+    }
+}

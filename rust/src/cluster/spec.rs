@@ -1,0 +1,96 @@
+//! Hardware constants of the simulated accelerator.
+
+
+/// Performance/capacity constants of one accelerator and its links.
+///
+/// Defaults model the paper's testbed: H100-SXM (80 GB HBM3), NVLink 4, and
+/// a PCIe 5.0 ×16 host link. The simulator only ever consumes *ratios* of
+/// these numbers, which is why the reproduced figures preserve the paper's
+/// shape even though our substrate is a simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// HBM capacity in bytes.
+    pub hbm_bytes: usize,
+    /// Dense bf16 matmul throughput, FLOP/s (H100 SXM ≈ 989e12 without
+    /// sparsity; we derate to a realistic achieved fraction).
+    pub bf16_flops: f64,
+    /// Fraction of peak FLOPs realistically achieved by large GEMMs.
+    pub mfu: f64,
+    /// HBM bandwidth, bytes/s (H100 ≈ 3.35 TB/s).
+    pub hbm_bw: f64,
+    /// NVLink per-GPU aggregate bandwidth, bytes/s, one direction
+    /// (NVLink4: 900 GB/s bidirectional → 450 GB/s per direction).
+    pub nvlink_bw: f64,
+    /// PCIe host link bandwidth, bytes/s (PCIe 5.0 ×16 ≈ 64 GB/s; we use an
+    /// achievable 55 GB/s).
+    pub pcie_bw: f64,
+    /// Fixed per-kernel-launch overhead, seconds. Smaller batches pay this
+    /// more often per token — the mechanism by which memory imbalance
+    /// (smaller usable batch) reduces decode throughput in the paper.
+    pub kernel_launch_s: f64,
+    /// Fixed per-collective latency, seconds (NCCL all-reduce setup).
+    pub collective_latency_s: f64,
+    /// Fixed software overhead for any state-recovery action, seconds
+    /// (process coordination, CUDA context ops). Sets the floor that the
+    /// paper's *Oracle* recovery (15 ms) measures.
+    pub recovery_floor_s: f64,
+}
+
+impl GpuSpec {
+    /// H100-SXM-class device, the paper's testbed.
+    pub fn h100() -> Self {
+        GpuSpec {
+            hbm_bytes: 80 * (1 << 30),
+            bf16_flops: 989e12,
+            mfu: 0.45,
+            hbm_bw: 3.35e12,
+            nvlink_bw: 450e9,
+            pcie_bw: 55e9,
+            kernel_launch_s: 4e-6,
+            collective_latency_s: 10e-6,
+            recovery_floor_s: 15e-3,
+        }
+    }
+
+    /// Effective matmul throughput after derating.
+    pub fn effective_flops(&self) -> f64 {
+        self.bf16_flops * self.mfu
+    }
+
+    /// Time to stream `bytes` through HBM (memory-bound kernels).
+    pub fn hbm_time(&self, bytes: f64) -> f64 {
+        bytes / self.hbm_bw
+    }
+
+    /// Time for a compute-bound region of `flops`.
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / self.effective_flops()
+    }
+
+    /// Roofline step time: max of compute and memory streaming.
+    pub fn roofline_time(&self, flops: f64, bytes: f64) -> f64 {
+        self.compute_time(flops).max(self.hbm_time(bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_constants_sane() {
+        let g = GpuSpec::h100();
+        assert_eq!(g.hbm_bytes, 85_899_345_920);
+        assert!(g.nvlink_bw > g.pcie_bw * 5.0, "NVLink must dwarf PCIe");
+        assert!(g.hbm_bw > g.nvlink_bw);
+    }
+
+    #[test]
+    fn roofline_picks_binding_resource() {
+        let g = GpuSpec::h100();
+        // Decode-like: tiny flops, big bytes → memory bound.
+        assert_eq!(g.roofline_time(1e9, 1e12), g.hbm_time(1e12));
+        // Prefill-like: big flops, small bytes → compute bound.
+        assert_eq!(g.roofline_time(1e15, 1e9), g.compute_time(1e15));
+    }
+}

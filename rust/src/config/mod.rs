@@ -1,0 +1,124 @@
+//! Engine/experiment configuration: model presets by name, policy bundles
+//! by name, and the knobs every binary shares. Parsed from the tiny CLI
+//! layer (`util::cli`) — the offline build has no serde/clap.
+
+use crate::model::{llama3_70b, mixtral_8x22b, small_real, ModelSpec};
+use crate::recovery::RecoveryMethod;
+use crate::simulator::SystemConfig;
+use crate::util::cli::Args;
+
+/// Resolve a model preset by name.
+pub fn model_by_name(name: &str) -> Option<ModelSpec> {
+    match name {
+        "llama" | "llama-3.1-70b" | "llama70b" => Some(llama3_70b()),
+        "mixtral" | "mixtral-8x22b" => Some(mixtral_8x22b()),
+        "small" | "small-real" => Some(small_real()),
+        _ => None,
+    }
+}
+
+/// Resolve a system configuration by name.
+pub fn system_by_name(name: &str) -> Option<SystemConfig> {
+    match name {
+        "standard" => Some(SystemConfig::standard()),
+        "nonuniform" => Some(SystemConfig::nonuniform()),
+        "membalance" | "memory-balanced" => Some(SystemConfig::memory_balanced()),
+        "failsafe" => Some(SystemConfig::failsafe()),
+        _ => None,
+    }
+}
+
+/// Resolve a recovery method by name.
+pub fn recovery_by_name(name: &str) -> Option<RecoveryMethod> {
+    match name {
+        "recompute" => Some(RecoveryMethod::Recompute),
+        "host" => Some(RecoveryMethod::Host),
+        "full" => Some(RecoveryMethod::Full),
+        "oracle" => Some(RecoveryMethod::Oracle),
+        _ => None,
+    }
+}
+
+/// Shared engine configuration, with CLI overrides.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub model: ModelSpec,
+    pub system: SystemConfig,
+    pub world: usize,
+    pub recovery: RecoveryMethod,
+    /// Directory holding AOT artifacts (HLO text + weights).
+    pub artifacts_dir: String,
+    /// Prefill token budget per batch.
+    pub token_budget: usize,
+    /// Decode batch cap.
+    pub max_batch: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: small_real(),
+            system: SystemConfig::failsafe(),
+            world: 3,
+            recovery: RecoveryMethod::Full,
+            artifacts_dir: "artifacts".into(),
+            token_budget: 256,
+            max_batch: 8,
+            seed: 42,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Apply `--model --system --world --recovery --artifacts --budget
+    /// --batch --seed` overrides.
+    pub fn from_args(args: &Args) -> Self {
+        let mut c = EngineConfig::default();
+        if let Some(m) = args.get("model").and_then(model_by_name) {
+            c.model = m;
+        }
+        if let Some(s) = args.get("system").and_then(system_by_name) {
+            c.system = s;
+        }
+        if let Some(r) = args.get("recovery").and_then(recovery_by_name) {
+            c.recovery = r;
+        }
+        c.world = args.get_usize("world", c.world);
+        c.artifacts_dir = args.get_or("artifacts", &c.artifacts_dir).to_string();
+        c.token_budget = args.get_usize("budget", c.token_budget);
+        c.max_batch = args.get_usize("batch", c.max_batch);
+        c.seed = args.get_u64("seed", c.seed);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(model_by_name("llama").unwrap().n_layers, 80);
+        assert_eq!(model_by_name("mixtral").unwrap().n_experts, 8);
+        assert_eq!(model_by_name("small").unwrap().d_model, 256);
+        assert!(model_by_name("gpt-5").is_none());
+        assert!(system_by_name("failsafe").is_some());
+        assert!(recovery_by_name("oracle").is_some());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            "serve --model llama --world 7 --system nonuniform --recovery host --batch 64"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = EngineConfig::from_args(&args);
+        assert_eq!(c.model.name, "llama-3.1-70b");
+        assert_eq!(c.world, 7);
+        assert_eq!(c.system.name, "Nonuniform-TP");
+        assert_eq!(c.recovery, RecoveryMethod::Host);
+        assert_eq!(c.max_batch, 64);
+    }
+}

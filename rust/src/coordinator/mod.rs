@@ -1,0 +1,13 @@
+//! The coordinator: request lifecycle state and the reconfiguration
+//! controller that reacts to device failures/recoveries by re-planning
+//! shards, costing recovery, and re-homing orphaned requests.
+//!
+//! This is the leader-side brain shared by the real engine
+//! ([`crate::engine`]) and the simulators: the engine executes its
+//! decisions against PJRT, the simulators against the cost model.
+
+mod reconfig;
+mod request;
+
+pub use reconfig::{ReconfigController, ReconfigOutcome};
+pub use request::{Request, RequestState};

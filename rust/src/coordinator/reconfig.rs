@@ -1,0 +1,284 @@
+//! The reconfiguration controller: device health → shard plan epochs.
+
+use crate::cluster::{GpuSpec, Interconnect, Node};
+use crate::kvcache::BackupStore;
+use crate::model::ModelSpec;
+use crate::recovery::{plan_recovery, RecoveryInput, RecoveryMethod, RecoveryOutcome};
+use crate::simulator::SystemConfig;
+use crate::sharding::ShardPlan;
+use crate::{RankId, RequestId};
+
+/// Result of one reconfiguration epoch.
+#[derive(Debug)]
+pub struct ReconfigOutcome {
+    /// Epoch number after the change.
+    pub epoch: u64,
+    /// New world size.
+    pub world: usize,
+    /// Old-rank → new-rank map (None for the removed rank).
+    pub survivor_map: Vec<Option<RankId>>,
+    /// The recovery plan/cost that was applied.
+    pub recovery: RecoveryOutcome,
+}
+
+/// Tracks the node's health, the active shard plan, and epochs. Every
+/// failure or rejoin produces a new epoch with a recovery cost.
+pub struct ReconfigController {
+    pub node: Node,
+    pub config: SystemConfig,
+    pub model: ModelSpec,
+    pub recovery_method: RecoveryMethod,
+    plan: ShardPlan,
+    epoch: u64,
+    spec: GpuSpec,
+    ic: Interconnect,
+}
+
+impl ReconfigController {
+    pub fn new(model: ModelSpec, config: SystemConfig, n_devices: usize, spec: GpuSpec) -> Self {
+        let node = Node::new(n_devices, spec.clone());
+        let plan = config.plan(&model, n_devices);
+        let ic = Interconnect::new(spec.clone());
+        ReconfigController {
+            node,
+            config,
+            model,
+            recovery_method: RecoveryMethod::Full,
+            plan,
+            epoch: 0,
+            spec,
+            ic,
+        }
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn world(&self) -> usize {
+        self.plan.world()
+    }
+
+    /// Handle a hard failure of physical device `device_id`.
+    ///
+    /// `requests` = in-flight (id, context tokens, home rank) — the state
+    /// whose loss must be recovered. Returns the new epoch's outcome, or
+    /// `None` if the device was already down.
+    pub fn on_device_failed(
+        &mut self,
+        device_id: usize,
+        requests: &[(RequestId, usize, RankId)],
+        backup: &BackupStore,
+    ) -> Option<ReconfigOutcome> {
+        // Which TP rank did this device carry?
+        let failed_rank = self.node.healthy_ids().iter().position(|&d| d == device_id)?;
+        if !self.node.device(device_id).is_healthy() {
+            return None;
+        }
+        let old_world = self.world();
+        self.node.device_mut(device_id).fail();
+        let new_world = old_world - 1;
+
+        let survivor_map: Vec<Option<RankId>> = (0..old_world)
+            .map(|r| {
+                if r == failed_rank {
+                    None
+                } else {
+                    Some(if r < failed_rank { r } else { r - 1 })
+                }
+            })
+            .collect();
+
+        let new_plan = ShardPlan {
+            model: self.model.clone(),
+            heads: crate::sharding::HeadAssignment::new(
+                self.config.attn,
+                self.model.n_kv_heads,
+                self.model.n_layers,
+                new_world,
+            ),
+            // Commutative policy keeps surviving FFN blocks in place.
+            ffn: self.plan.ffn.reshard(&survivor_map, new_world),
+        };
+
+        let input = RecoveryInput {
+            spec: &self.spec,
+            ic: &self.ic,
+            old_plan: &self.plan,
+            new_plan: &new_plan,
+            survivor_map: &survivor_map,
+            failed_rank,
+            requests,
+            backup,
+        };
+        let recovery = plan_recovery(self.recovery_method, &input);
+
+        self.plan = new_plan;
+        self.epoch += 1;
+        self.apply_weight_accounting();
+        Some(ReconfigOutcome { epoch: self.epoch, world: new_world, survivor_map, recovery })
+    }
+
+    /// Handle a device rejoining (restored from maintenance). The new rank
+    /// is appended at the end of the rank order; weights stream in from
+    /// host + peers like a recovery in reverse.
+    pub fn on_device_recovered(
+        &mut self,
+        device_id: usize,
+        backup: &BackupStore,
+    ) -> Option<ReconfigOutcome> {
+        if self.node.device(device_id).is_healthy() {
+            return None;
+        }
+        let old_world = self.world();
+        self.node.device_mut(device_id).recover();
+        let new_world = old_world + 1;
+
+        // Existing ranks keep their ids if their device order allows; the
+        // controller re-derives ranks from healthy device order, so compute
+        // the old→new map through device ids.
+        let new_ids = self.node.healthy_ids();
+        let old_ids: Vec<usize> = new_ids.iter().copied().filter(|&d| d != device_id).collect();
+        let survivor_map: Vec<Option<RankId>> = old_ids
+            .iter()
+            .map(|d| new_ids.iter().position(|x| x == d))
+            .collect();
+
+        let new_plan = ShardPlan {
+            model: self.model.clone(),
+            heads: crate::sharding::HeadAssignment::new(
+                self.config.attn,
+                self.model.n_kv_heads,
+                self.model.n_layers,
+                new_world,
+            ),
+            ffn: self.plan.ffn.reshard(&survivor_map, new_world),
+        };
+        let input = RecoveryInput {
+            spec: &self.spec,
+            ic: &self.ic,
+            old_plan: &self.plan,
+            new_plan: &new_plan,
+            survivor_map: &survivor_map,
+            failed_rank: usize::MAX, // nothing lost on a rejoin
+            requests: &[],
+            backup,
+        };
+        let recovery = plan_recovery(self.recovery_method, &input);
+
+        self.plan = new_plan;
+        self.epoch += 1;
+        self.apply_weight_accounting();
+        Some(ReconfigOutcome { epoch: self.epoch, world: new_world, survivor_map, recovery })
+    }
+
+    /// Push the plan's per-rank weight bytes into the node's HBM accounting.
+    fn apply_weight_accounting(&mut self) {
+        let loads = self.plan.rank_loads();
+        let ids = self.node.healthy_ids();
+        for (rank, &dev) in ids.iter().enumerate() {
+            self.node.device_mut(dev).weight_bytes = loads[rank].weight_bytes;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llama3_70b;
+
+    fn controller() -> ReconfigController {
+        let mut c = ReconfigController::new(
+            llama3_70b(),
+            SystemConfig::failsafe(),
+            8,
+            GpuSpec::h100(),
+        );
+        c.recovery_method = RecoveryMethod::Full;
+        c
+    }
+
+    #[test]
+    fn failure_shrinks_world_and_costs_recovery() {
+        let mut c = controller();
+        let backup = BackupStore::new(1 << 42);
+        let reqs: Vec<(RequestId, usize, RankId)> =
+            (0..20).map(|i| (i, 4000, (i % 8) as usize)).collect();
+        let out = c.on_device_failed(3, &reqs, &backup).unwrap();
+        assert_eq!(out.world, 7);
+        assert_eq!(c.world(), 7);
+        assert_eq!(c.epoch(), 1);
+        assert_eq!(out.survivor_map[3], None);
+        assert_eq!(out.survivor_map[4], Some(3));
+        assert!(out.recovery.total_s > 0.0);
+        // Node accounting updated.
+        assert_eq!(c.node.n_healthy(), 7);
+        assert!(c.node.device(4).weight_bytes > 0);
+        assert_eq!(c.node.device(3).weight_bytes, 0);
+    }
+
+    #[test]
+    fn double_failure_handled() {
+        let mut c = controller();
+        let backup = BackupStore::new(1 << 42);
+        c.on_device_failed(0, &[], &backup).unwrap();
+        let out = c.on_device_failed(7, &[], &backup).unwrap();
+        assert_eq!(out.world, 6);
+        assert_eq!(c.epoch(), 2);
+        // Device 7 was rank 6 after the first failure.
+        assert_eq!(out.survivor_map.len(), 7);
+        assert_eq!(out.survivor_map[6], None);
+    }
+
+    #[test]
+    fn failed_device_id_second_time_is_none() {
+        let mut c = controller();
+        let backup = BackupStore::new(1 << 42);
+        assert!(c.on_device_failed(2, &[], &backup).is_some());
+        assert!(c.on_device_failed(2, &[], &backup).is_none());
+    }
+
+    #[test]
+    fn rejoin_restores_world() {
+        let mut c = controller();
+        let backup = BackupStore::new(1 << 42);
+        c.on_device_failed(5, &[], &backup).unwrap();
+        let out = c.on_device_recovered(5, &backup).unwrap();
+        assert_eq!(out.world, 8);
+        assert_eq!(c.world(), 8);
+        assert_eq!(c.node.n_healthy(), 8);
+        // The rejoining device streams a full shard's worth — all of it
+        // available from surviving peers, so on-demand recovery uses pure
+        // NVLink and zero PCIe (faster than any host reload).
+        assert!(out.recovery.weight_delta.max_nvlink() > 0);
+        assert_eq!(out.recovery.weight_delta.total_pcie(), 0);
+    }
+
+    #[test]
+    fn recovery_faster_with_full_than_recompute() {
+        let backup = {
+            let mut b = BackupStore::new(1 << 42);
+            let m = llama3_70b();
+            for i in 0..20u64 {
+                b.backup(i, 4000, m.kv_bytes_per_token());
+            }
+            b
+        };
+        let reqs: Vec<(RequestId, usize, RankId)> =
+            (0..20).map(|i| (i, 4000, (i % 8) as usize)).collect();
+
+        let mut c1 = controller();
+        c1.recovery_method = RecoveryMethod::Recompute;
+        let slow = c1.on_device_failed(1, &reqs, &backup).unwrap();
+
+        let mut c2 = controller();
+        c2.recovery_method = RecoveryMethod::Full;
+        let fast = c2.on_device_failed(1, &reqs, &backup).unwrap();
+
+        assert!(slow.recovery.total_s > 10.0 * fast.recovery.total_s);
+    }
+}

@@ -1,0 +1,107 @@
+//! Request lifecycle state machine.
+
+use crate::{RankId, RequestId, SimTime};
+
+/// Lifecycle of a serving request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Arrived, waiting for admission.
+    Queued,
+    /// Prefill in progress (context < input length).
+    Prefilling,
+    /// Decoding (one token per step).
+    Decoding,
+    /// All output tokens produced.
+    Finished,
+}
+
+/// A request as tracked by the coordinator.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub arrival: SimTime,
+    /// Prompt tokens (the real engine stores the actual ids; the
+    /// simulators only need the count).
+    pub input_tokens: Vec<u32>,
+    /// Generation budget (max new tokens).
+    pub max_new_tokens: usize,
+    pub state: RequestState,
+    /// Home DP rank (valid once routed).
+    pub home: RankId,
+    /// Tokens currently represented in KV (prefilled + decoded).
+    pub context: usize,
+    /// Decoded output so far (engine fills real token ids).
+    pub output_tokens: Vec<u32>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival: SimTime, input_tokens: Vec<u32>, max_new_tokens: usize) -> Self {
+        Request {
+            id,
+            arrival,
+            input_tokens,
+            max_new_tokens,
+            state: RequestState::Queued,
+            home: 0,
+            context: 0,
+            output_tokens: Vec::new(),
+        }
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_tokens.len()
+    }
+
+    /// Prefill tokens still to process.
+    pub fn prefill_remaining(&self) -> usize {
+        self.input_len().saturating_sub(self.context)
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == RequestState::Finished
+    }
+
+    /// Advance state after a prefill chunk of `n` tokens.
+    pub fn on_prefilled(&mut self, n: usize) {
+        debug_assert!(n <= self.prefill_remaining());
+        self.context += n;
+        self.state = if self.prefill_remaining() == 0 {
+            RequestState::Decoding
+        } else {
+            RequestState::Prefilling
+        };
+    }
+
+    /// Record a decoded token.
+    pub fn on_decoded(&mut self, token: u32) {
+        self.context += 1;
+        self.output_tokens.push(token);
+        if self.output_tokens.len() >= self.max_new_tokens {
+            self.state = RequestState::Finished;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut r = Request::new(1, 0.0, vec![1, 2, 3, 4], 2);
+        assert_eq!(r.state, RequestState::Queued);
+        assert_eq!(r.prefill_remaining(), 4);
+        r.state = RequestState::Prefilling;
+        r.on_prefilled(3);
+        assert_eq!(r.state, RequestState::Prefilling);
+        r.on_prefilled(1);
+        assert_eq!(r.state, RequestState::Decoding);
+        assert_eq!(r.context, 4);
+        r.on_decoded(7);
+        assert_eq!(r.state, RequestState::Decoding);
+        r.on_decoded(8);
+        assert_eq!(r.state, RequestState::Finished);
+        assert_eq!(r.output_tokens, vec![7, 8]);
+        assert_eq!(r.context, 6);
+    }
+}

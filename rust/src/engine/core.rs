@@ -1,0 +1,798 @@
+//! The engine proper: submit → chunked prefill → continuous decode, with
+//! failure injection and lightning recovery, all executing real AOT
+//! artifacts through PJRT.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{GpuSpec, Interconnect};
+use crate::config::EngineConfig;
+use crate::coordinator::{Request, RequestState};
+use crate::kvcache::{BackupStore, KvPlacement};
+use crate::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
+use crate::router::DpRouter;
+use crate::runtime::{
+    literal_f32, literal_i32, literal_tensor, to_vec_f32, Manifest, RuntimeClient, WeightStore,
+};
+use crate::scheduler::{adaptive_chunked_prefill, PrefillItem};
+use crate::sharding::ShardPlan;
+use crate::{LayerId, RankId, RequestId};
+
+use super::shard::{pick_bucket, RankShard};
+use super::KvStore;
+
+/// Completed generation of one request.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    pub id: RequestId,
+    pub output_tokens: Vec<u32>,
+    /// Wall-clock time to first token.
+    pub ttft_s: f64,
+    /// Max wall-clock gap between output tokens.
+    pub max_tbt_s: f64,
+}
+
+/// Report of a serve run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub results: Vec<GenerationResult>,
+    pub wall_s: f64,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub steps: usize,
+    /// Simulated (modeled) recovery latencies of injected failures.
+    pub recoveries: Vec<f64>,
+}
+
+impl ServeReport {
+    pub fn decode_tps(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.wall_s
+        }
+    }
+
+    pub fn outputs(&self) -> Vec<Vec<u32>> {
+        self.results.iter().map(|r| r.output_tokens.clone()).collect()
+    }
+}
+
+struct Timing {
+    submitted: Instant,
+    first_token: Option<f64>,
+    last_token: Option<f64>,
+    max_tbt: f64,
+}
+
+/// One forward item: (request, new tokens, cached ctx, home rank).
+type FwdItem = (RequestId, Vec<u32>, usize, RankId);
+
+/// The serving engine. See module docs.
+pub struct Engine {
+    pub config: EngineConfig,
+    client: RuntimeClient,
+    manifest: Manifest,
+    store: WeightStore,
+    plan: ShardPlan,
+    placement: KvPlacement,
+    shards: Vec<RankShard>,
+    kv: KvStore,
+    router: DpRouter,
+    emb: xla::Literal,
+    final_norm: xla::Literal,
+    lm_head: xla::Literal,
+    requests: HashMap<RequestId, Request>,
+    timing: HashMap<RequestId, Timing>,
+    order: Vec<RequestId>,
+    next_id: RequestId,
+    epoch: u64,
+    recoveries: Vec<f64>,
+}
+
+impl Engine {
+    pub fn new(config: EngineConfig) -> Result<Engine> {
+        let manifest = Manifest::load(&config.artifacts_dir)?;
+        anyhow::ensure!(
+            manifest.model.n_heads == config.model.n_kv_heads
+                && manifest.model.d_model == config.model.d_model
+                && manifest.model.n_layers == config.model.n_layers,
+            "artifacts were compiled for a different model than {}",
+            config.model.name
+        );
+        let store = WeightStore::load(&manifest)?;
+        let client = RuntimeClient::cpu()?;
+        let plan = config.system.plan(&config.model, config.world);
+        let placement = KvPlacement::new(&plan);
+        let shards = (0..config.world)
+            .map(|r| RankShard::build(&manifest, &store, &plan, r))
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(RankShard::verify_cover(&shards, &plan), "shard cover check failed");
+        let emb = literal_tensor(store.get("emb")?)?;
+        let final_norm = literal_tensor(store.get("final_norm")?)?;
+        let lm_head = literal_tensor(store.get("lm_head")?)?;
+        let kv = KvStore::new(manifest.model.head_dim);
+        let router = DpRouter::new(config.system.router, config.world);
+        Ok(Engine {
+            config,
+            client,
+            manifest,
+            store,
+            plan,
+            placement,
+            shards,
+            kv,
+            router,
+            emb,
+            final_norm,
+            lm_head,
+            requests: HashMap::new(),
+            timing: HashMap::new(),
+            order: Vec::new(),
+            next_id: 0,
+            epoch: 0,
+            recoveries: Vec::new(),
+        })
+    }
+
+    pub fn world(&self) -> usize {
+        self.plan.world()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Per-rank (simulated-HBM) KV bytes — used by placement assertions.
+    pub fn kv_bytes_by_rank(&self) -> Vec<usize> {
+        self.kv.bytes_by_rank(self.world())
+    }
+
+    /// Submit a prompt; returns the request id.
+    pub fn submit(&mut self, prompt: &[u32], max_new_tokens: usize) -> Result<RequestId> {
+        let max_ctx = self.manifest.buckets("attn", |v| v.c).last().copied().unwrap_or(0);
+        anyhow::ensure!(
+            prompt.len() + max_new_tokens <= max_ctx + 1,
+            "prompt {} + max_new {} exceeds compiled context {}",
+            prompt.len(),
+            max_new_tokens,
+            max_ctx
+        );
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            prompt.iter().all(|&t| (t as usize) < self.manifest.model.vocab),
+            "token id out of vocab"
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut req = Request::new(id, 0.0, prompt.to_vec(), max_new_tokens.max(1));
+        req.state = RequestState::Prefilling;
+        req.home = self.router.route(prompt.len() as f64);
+        self.requests.insert(id, req);
+        self.timing.insert(
+            id,
+            Timing { submitted: Instant::now(), first_token: None, last_token: None, max_tbt: 0.0 },
+        );
+        self.order.push(id);
+        Ok(id)
+    }
+
+    /// Drive all submitted requests to completion.
+    pub fn run_to_completion(&mut self) -> Result<ServeReport> {
+        let t0 = Instant::now();
+        let mut report = ServeReport::default();
+        loop {
+            let any_prefill = self
+                .requests
+                .values()
+                .any(|r| r.state == RequestState::Prefilling && r.prefill_remaining() > 0);
+            if any_prefill {
+                report.prefill_tokens += self.step_prefill()?;
+                report.steps += 1;
+                continue;
+            }
+            let decoding: Vec<RequestId> = self
+                .order
+                .iter()
+                .copied()
+                .filter(|id| self.requests[id].state == RequestState::Decoding)
+                .collect();
+            if decoding.is_empty() {
+                break;
+            }
+            report.decode_tokens += self.step_decode(&decoding)?;
+            report.steps += 1;
+        }
+        report.wall_s = t0.elapsed().as_secs_f64();
+        report.recoveries = self.recoveries.clone();
+        for id in &self.order {
+            let r = &self.requests[id];
+            let t = &self.timing[id];
+            report.results.push(GenerationResult {
+                id: *id,
+                output_tokens: r.output_tokens.clone(),
+                ttft_s: t.first_token.unwrap_or(0.0),
+                max_tbt_s: t.max_tbt,
+            });
+        }
+        Ok(report)
+    }
+
+    // ---------------------------------------------------------- failure --
+
+    /// Inject a hard failure of TP rank `rank` and recover with `method`.
+    /// Returns the modeled recovery latency in seconds. The engine
+    /// continues serving on `world - 1` ranks; with backup-based methods
+    /// the continuation is exact, with `Recompute` the affected context is
+    /// re-prefilled from tokens.
+    pub fn inject_failure(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64> {
+        let old_world = self.world();
+        anyhow::ensure!(old_world > 1, "cannot lose the last rank");
+        anyhow::ensure!(rank < old_world);
+
+        // In-flight state for the latency model.
+        let reqs: Vec<(RequestId, usize, RankId)> = self
+            .order
+            .iter()
+            .filter(|id| !self.requests[*id].is_done())
+            .map(|id| {
+                let r = &self.requests[id];
+                (*id, r.context, r.home)
+            })
+            .collect();
+        let mut backup_model = BackupStore::new(1 << 40);
+        let bpt = self.config.model.kv_bytes_per_token();
+        let use_backup = method != RecoveryMethod::Recompute;
+        if use_backup {
+            for &(id, _, _) in &reqs {
+                backup_model.backup(id, self.kv.backed_tokens(id), bpt);
+            }
+        }
+
+        // Plan the new epoch.
+        let survivor_map: Vec<Option<RankId>> = (0..old_world)
+            .map(|r| if r == rank { None } else { Some(if r < rank { r } else { r - 1 }) })
+            .collect();
+        let new_world = old_world - 1;
+        let new_plan = ShardPlan {
+            model: self.config.model.clone(),
+            heads: crate::sharding::HeadAssignment::new(
+                self.config.system.attn,
+                self.config.model.n_kv_heads,
+                self.config.model.n_layers,
+                new_world,
+            ),
+            ffn: self.plan.ffn.reshard(&survivor_map, new_world),
+        };
+
+        // Latency model (what an H100 node would pay).
+        let spec = GpuSpec::h100();
+        let ic = Interconnect::new(spec.clone());
+        let outcome = plan_recovery(
+            method,
+            &RecoveryInput {
+                spec: &spec,
+                ic: &ic,
+                old_plan: &self.plan,
+                new_plan: &new_plan,
+                survivor_map: &survivor_map,
+                failed_rank: rank,
+                requests: &reqs,
+                backup: &backup_model,
+            },
+        );
+
+        // Apply: wipe the failed rank's KV, re-tag survivors, reshard.
+        let affected = self.kv.wipe_rank(rank);
+        self.kv.remap_ranks(&survivor_map);
+        self.plan = new_plan;
+        self.placement = KvPlacement::new(&self.plan);
+        self.shards = (0..new_world)
+            .map(|r| RankShard::build(&self.manifest, &self.store, &self.plan, r))
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(RankShard::verify_cover(&self.shards, &self.plan));
+        self.router = self.router.remap(&survivor_map, new_world);
+        self.epoch += 1;
+
+        // Re-home requests and repair their KV state.
+        let ids: Vec<RequestId> = self.order.clone();
+        for id in ids {
+            let (done, old_home, context) = {
+                let r = &self.requests[&id];
+                (r.is_done(), r.home, r.context)
+            };
+            if done {
+                continue;
+            }
+            let new_home = survivor_map[old_home]
+                .unwrap_or_else(|| self.router.tracker().least_loaded());
+            self.requests.get_mut(&id).unwrap().home = new_home;
+
+            if !affected.contains(&id) {
+                continue;
+            }
+            let restored = if use_backup {
+                self.kv.restore_request(id, &self.placement, new_home)
+            } else {
+                0
+            };
+            let keep = restored.min(context);
+            self.kv.truncate(id, keep);
+            // The un-restored suffix (backup lag or everything under
+            // Recompute) is re-prefilled from known tokens: input + already
+            // generated outputs.
+            let r = self.requests.get_mut(&id).unwrap();
+            if keep < r.context {
+                let mut all: Vec<u32> = r.input_tokens.clone();
+                all.extend(&r.output_tokens);
+                let target_out = r.max_new_tokens;
+                let produced = r.output_tokens.len();
+                // Rebuild the request as: prefill all known tokens beyond
+                // `keep`, then continue decoding the remaining budget.
+                r.input_tokens = all;
+                r.max_new_tokens = target_out; // unchanged budget
+                r.context = keep;
+                let _ = produced;
+                r.state = RequestState::Prefilling;
+            }
+        }
+
+        self.recoveries.push(outcome.total_s);
+        Ok(outcome.total_s)
+    }
+
+    // ------------------------------------------------------------ steps --
+
+    /// One prefill pass: form chunks with Algorithm 1, run them (b=1).
+    fn step_prefill(&mut self) -> Result<usize> {
+        let items: Vec<PrefillItem> = self
+            .order
+            .iter()
+            .filter_map(|id| {
+                let r = &self.requests[id];
+                (r.state == RequestState::Prefilling && r.prefill_remaining() > 0).then_some(
+                    PrefillItem {
+                        request: *id,
+                        rank: r.home,
+                        context: r.context,
+                        remaining: r.prefill_remaining(),
+                    },
+                )
+            })
+            .collect();
+        if items.is_empty() {
+            return Ok(0);
+        }
+        let carry = vec![0.0; self.world()];
+        let batch =
+            adaptive_chunked_prefill(self.config.token_budget, &items, &carry, self.world(), 8);
+        let max_s = self.prefill_s_buckets().last().copied().unwrap_or(16);
+
+        let mut done = 0usize;
+        for chunk in &batch.chunks {
+            let take = chunk.tokens.min(max_s);
+            let (tokens, ctx) = {
+                let r = &self.requests[&chunk.request];
+                let take = take.min(r.prefill_remaining());
+                (r.input_tokens[r.context..r.context + take].to_vec(), r.context)
+            };
+            if tokens.is_empty() {
+                continue;
+            }
+            let logits = self.forward_chunk(chunk.request, &tokens, ctx)?;
+            done += tokens.len();
+            let finished = {
+                let r = self.requests.get_mut(&chunk.request).unwrap();
+                r.on_prefilled(tokens.len());
+                r.state == RequestState::Decoding
+            };
+            if finished {
+                // If this request still has generated tokens from before a
+                // Recompute-style repair, it is mid-decode continuation and
+                // the "first" token here would double-count; only sample
+                // when output budget remains.
+                let needs_token = {
+                    let r = &self.requests[&chunk.request];
+                    r.output_tokens.len() < r.max_new_tokens
+                };
+                if needs_token {
+                    let tok = argmax(&logits);
+                    self.requests.get_mut(&chunk.request).unwrap().on_decoded(tok);
+                    self.note_token(chunk.request);
+                } else {
+                    self.requests.get_mut(&chunk.request).unwrap().state = RequestState::Finished;
+                }
+            }
+            self.kv.backup_request(chunk.request); // proactive backup pass
+        }
+        Ok(done)
+    }
+
+    /// One decode step over `ids` (each produces one token).
+    fn step_decode(&mut self, ids: &[RequestId]) -> Result<usize> {
+        let mut produced = 0;
+        let cap = self.config.max_batch.min(8).max(1);
+        let groups: Vec<Vec<RequestId>> = ids.chunks(cap).map(|c| c.to_vec()).collect();
+        for group in groups {
+            let inputs: Vec<(RequestId, u32)> = group
+                .iter()
+                .map(|id| {
+                    let r = &self.requests[id];
+                    let t = r
+                        .output_tokens
+                        .last()
+                        .copied()
+                        .unwrap_or_else(|| *r.input_tokens.last().expect("nonempty prompt"));
+                    (*id, t)
+                })
+                .collect();
+            let logits = self.forward_decode(&inputs)?;
+            for (i, &(id, _)) in inputs.iter().enumerate() {
+                let tok = argmax(&logits[i]);
+                self.requests.get_mut(&id).unwrap().on_decoded(tok);
+                self.note_token(id);
+                produced += 1;
+                self.kv.backup_request(id);
+            }
+        }
+        Ok(produced)
+    }
+
+    fn note_token(&mut self, id: RequestId) {
+        let t = self.timing.get_mut(&id).unwrap();
+        let now = t.submitted.elapsed().as_secs_f64();
+        match t.last_token {
+            None => t.first_token = Some(now),
+            Some(prev) => t.max_tbt = t.max_tbt.max(now - prev),
+        }
+        t.last_token = Some(now);
+    }
+
+    // ---------------------------------------------------------- forward --
+
+    fn prefill_s_buckets(&self) -> Vec<usize> {
+        self.manifest
+            .variants
+            .iter()
+            .filter(|v| v.kind == "attn" && v.b == 1 && v.s > 1)
+            .map(|v| v.s)
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect()
+    }
+
+    fn decode_b_buckets(&self) -> Vec<usize> {
+        self.manifest
+            .variants
+            .iter()
+            .filter(|v| v.kind == "attn" && v.s == 1)
+            .map(|v| v.b)
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect()
+    }
+
+    /// Prefill one chunk of `req` (b=1); returns last-position logits.
+    fn forward_chunk(&mut self, req: RequestId, tokens: &[u32], ctx: usize) -> Result<Vec<f32>> {
+        let s_real = tokens.len();
+        let s = pick_bucket(&self.prefill_s_buckets(), s_real)
+            .with_context(|| format!("no s bucket ≥ {s_real}"))?;
+        let c = pick_bucket(&self.manifest.buckets("attn", |v| v.c), ctx)
+            .with_context(|| format!("no c bucket ≥ {ctx}"))?;
+        let home = self.requests[&req].home;
+        let items = vec![(req, tokens.to_vec(), ctx, home)];
+        let logits = self.forward_batch(&items, 1, s, c)?;
+        let v = self.manifest.model.vocab;
+        Ok(logits[(s_real - 1) * v..s_real * v].to_vec())
+    }
+
+    /// One decode token for each (req, last_token); returns per-request
+    /// logits.
+    fn forward_decode(&mut self, reqs: &[(RequestId, u32)]) -> Result<Vec<Vec<f32>>> {
+        let b = pick_bucket(&self.decode_b_buckets(), reqs.len())
+            .with_context(|| format!("no b bucket ≥ {}", reqs.len()))?;
+        let max_ctx = reqs.iter().map(|&(id, _)| self.kv.tokens(id)).max().unwrap_or(0);
+        let c = pick_bucket(&self.manifest.buckets("attn", |v| v.c), max_ctx)
+            .with_context(|| format!("no c bucket ≥ ctx {max_ctx}"))?;
+        let items: Vec<FwdItem> = reqs
+            .iter()
+            .map(|&(id, tok)| (id, vec![tok], self.kv.tokens(id), self.requests[&id].home))
+            .collect();
+        let logits = self.forward_batch(&items, b, 1, c)?;
+        let v = self.manifest.model.vocab;
+        Ok((0..reqs.len()).map(|i| logits[i * v..i * v + v].to_vec()).collect())
+    }
+
+    /// The generic bucketed forward. `items` padded to `b`×`s` with cache
+    /// bucket `c`. Returns logits `[b, s, vocab]` flattened.
+    fn forward_batch(&mut self, items: &[FwdItem], b: usize, s: usize, c: usize) -> Result<Vec<f32>> {
+        let mm = self.manifest.model.clone();
+        let (dm, hd, vocab) = (mm.d_model, mm.head_dim, mm.vocab);
+        let b_real = items.len();
+        anyhow::ensure!(b_real <= b && b_real > 0);
+
+        // Tokens + positions, padded.
+        let mut tok = vec![0i32; b * s];
+        let mut pos = vec![0i32; b * s];
+        for (i, (_, tokens, ctx, _)) in items.iter().enumerate() {
+            for (j, &t) in tokens.iter().enumerate() {
+                tok[i * s + j] = t as i32;
+                pos[i * s + j] = (ctx + j) as i32;
+            }
+        }
+
+        // x = embed(tokens, emb)
+        let emb_v = self
+            .manifest
+            .simple_variant("embed", b, s)
+            .with_context(|| format!("no embed variant b{b} s{s}"))?
+            .clone();
+        let tok_l = literal_i32(&tok, &[b as i64, s as i64])?;
+        let outs = self.client.run(&emb_v, &[&tok_l, &self.emb])?;
+        let mut x = to_vec_f32(&outs[0])?;
+        debug_assert_eq!(x.len(), b * s * dm);
+
+        let mask = build_mask(items, b, s, c);
+        let mask_dims = [b as i64, 1, s as i64, (c + s) as i64];
+        // The mask and positions are invariant across layers and ranks —
+        // build the literals once per forward (see EXPERIMENTS.md §Perf).
+        let mask_l = literal_f32(&mask, &mask_dims)?;
+        let pos_l = literal_i32(&pos, &[b as i64, s as i64])?;
+
+        for layer in 0..mm.n_layers {
+            let x_l = literal_f32(&x, &[b as i64, s as i64, dm as i64])?;
+            let mut partial = vec![0.0f32; x.len()];
+
+            // --- TP attention: every rank, full batch.
+            for rank in 0..self.world() {
+                let (heads, hb) = match self.shards[rank].tp_attn[layer].as_ref() {
+                    Some(aw) => (aw.heads.clone(), aw.h_bucket),
+                    None => continue,
+                };
+                let variant = self
+                    .manifest
+                    .attn_variant(b, s, c, hb)
+                    .with_context(|| format!("no attn variant b{b} s{s} c{c} h{hb}"))?
+                    .clone();
+                let (kc, vc) = self.gather_batch_kv(items, layer, b, c, &heads, hb);
+                let kc_l = literal_f32(&kc, &[b as i64, c as i64, hb as i64, hd as i64])?;
+                let vc_l = literal_f32(&vc, &[b as i64, c as i64, hb as i64, hd as i64])?;
+                let aw = self.shards[rank].tp_attn[layer].as_ref().unwrap();
+                let outs = self.client.run(
+                    &variant,
+                    &[
+                        &x_l,
+                        &self.shards[rank].attn_norm[layer],
+                        &aw.wq,
+                        &aw.wk,
+                        &aw.wv,
+                        &aw.wo,
+                        &kc_l,
+                        &vc_l,
+                        &mask_l,
+                        &pos_l,
+                    ],
+                )?;
+                add_into(&mut partial, &to_vec_f32(&outs[0])?);
+                self.append_new_kv(&outs[1], &outs[2], items, layer, b, s, &heads, hb, rank)?;
+            }
+
+            // --- DP attention: each home rank over its sub-batch.
+            if self.plan.heads.dp_heads_per_layer() > 0 {
+                for rank in 0..self.world() {
+                    let sub_idx: Vec<usize> =
+                        (0..b_real).filter(|&i| items[i].3 == rank).collect();
+                    if sub_idx.is_empty() {
+                        continue;
+                    }
+                    let (heads, hb) = match self.shards[rank].dp_attn[layer].as_ref() {
+                        Some(aw) => (aw.heads.clone(), aw.h_bucket),
+                        None => continue,
+                    };
+                    let sub_items: Vec<FwdItem> =
+                        sub_idx.iter().map(|&i| items[i].clone()).collect();
+                    let sb = if s == 1 {
+                        pick_bucket(&self.decode_b_buckets(), sub_items.len())
+                            .context("no dp sub-batch bucket")?
+                    } else {
+                        1 // prefill calls are b=1, so the sub-batch is that item
+                    };
+                    let variant = self
+                        .manifest
+                        .attn_variant(sb, s, c, hb)
+                        .with_context(|| format!("no attn variant b{sb} s{s} c{c} h{hb}"))?
+                        .clone();
+                    let mut sx = vec![0.0f32; sb * s * dm];
+                    let mut spos = vec![0i32; sb * s];
+                    for (si, &i) in sub_idx.iter().enumerate() {
+                        sx[si * s * dm..(si + 1) * s * dm]
+                            .copy_from_slice(&x[i * s * dm..(i + 1) * s * dm]);
+                        spos[si * s..(si + 1) * s].copy_from_slice(&pos[i * s..(i + 1) * s]);
+                    }
+                    let smask = build_mask(&sub_items, sb, s, c);
+                    let (kc, vc) = self.gather_batch_kv(&sub_items, layer, sb, c, &heads, hb);
+                    let sx_l = literal_f32(&sx, &[sb as i64, s as i64, dm as i64])?;
+                    let kc_l = literal_f32(&kc, &[sb as i64, c as i64, hb as i64, hd as i64])?;
+                    let vc_l = literal_f32(&vc, &[sb as i64, c as i64, hb as i64, hd as i64])?;
+                    let smask_l =
+                        literal_f32(&smask, &[sb as i64, 1, s as i64, (c + s) as i64])?;
+                    let spos_l = literal_i32(&spos, &[sb as i64, s as i64])?;
+                    let aw = self.shards[rank].dp_attn[layer].as_ref().unwrap();
+                    let outs = self.client.run(
+                        &variant,
+                        &[
+                            &sx_l,
+                            &self.shards[rank].attn_norm[layer],
+                            &aw.wq,
+                            &aw.wk,
+                            &aw.wv,
+                            &aw.wo,
+                            &kc_l,
+                            &vc_l,
+                            &smask_l,
+                            &spos_l,
+                        ],
+                    )?;
+                    let sub_out = to_vec_f32(&outs[0])?;
+                    for (si, &i) in sub_idx.iter().enumerate() {
+                        for j in 0..s * dm {
+                            partial[i * s * dm + j] += sub_out[si * s * dm + j];
+                        }
+                    }
+                    self.append_new_kv(&outs[1], &outs[2], &sub_items, layer, sb, s, &heads, hb, rank)?;
+                }
+            }
+
+            // Combine (the "all-reduce") + residual.
+            add_into(&mut x, &partial);
+
+            // --- FFN: every rank's column slice.
+            let x_l = literal_f32(&x, &[b as i64, s as i64, dm as i64])?;
+            let mut fpartial = vec![0.0f32; x.len()];
+            for rank in 0..self.world() {
+                let col_bucket = self.shards[rank].ffn[layer].col_bucket;
+                let variant = self
+                    .manifest
+                    .ffn_variant(b, s, col_bucket)
+                    .with_context(|| format!("no ffn variant b{b} s{s} f{col_bucket}"))?
+                    .clone();
+                let fw = &self.shards[rank].ffn[layer];
+                let outs = self.client.run(
+                    &variant,
+                    &[
+                        &x_l,
+                        &self.shards[rank].ffn_norm[layer],
+                        &fw.gate,
+                        &fw.up,
+                        &fw.down,
+                    ],
+                )?;
+                add_into(&mut fpartial, &to_vec_f32(&outs[0])?);
+            }
+            add_into(&mut x, &fpartial);
+        }
+
+        // LM head (rank 0 runs it; replicated weights).
+        let head_v = self
+            .manifest
+            .simple_variant("head", b, s)
+            .with_context(|| format!("no head variant b{b} s{s}"))?
+            .clone();
+        let x_l = literal_f32(&x, &[b as i64, s as i64, dm as i64])?;
+        let outs = self.client.run(&head_v, &[&x_l, &self.final_norm, &self.lm_head])?;
+        let logits = to_vec_f32(&outs[0])?;
+        debug_assert_eq!(logits.len(), b * s * vocab);
+        Ok(logits)
+    }
+
+    /// Gather padded K and V caches for a batch at `layer`.
+    fn gather_batch_kv(
+        &self,
+        items: &[FwdItem],
+        layer: LayerId,
+        b: usize,
+        c: usize,
+        heads: &[usize],
+        hb: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let hd = self.manifest.model.head_dim;
+        let per = c * hb * hd;
+        let mut kc = vec![0.0f32; b * per];
+        let mut vc = vec![0.0f32; b * per];
+        for (i, (req, _, _, _)) in items.iter().enumerate() {
+            let k = self.kv.gather(*req, layer, heads, c, hb, false);
+            let v = self.kv.gather(*req, layer, heads, c, hb, true);
+            kc[i * per..(i + 1) * per].copy_from_slice(&k);
+            vc[i * per..(i + 1) * per].copy_from_slice(&v);
+        }
+        (kc, vc)
+    }
+
+    /// Append freshly produced K/V (`[b, s, hb, hd]`) for real items.
+    #[allow(clippy::too_many_arguments)]
+    fn append_new_kv(
+        &mut self,
+        k_new: &xla::Literal,
+        v_new: &xla::Literal,
+        items: &[FwdItem],
+        layer: LayerId,
+        b: usize,
+        s: usize,
+        heads: &[usize],
+        hb: usize,
+        rank: RankId,
+    ) -> Result<()> {
+        let hd = self.manifest.model.head_dim;
+        let k = to_vec_f32(k_new)?;
+        let v = to_vec_f32(v_new)?;
+        debug_assert_eq!(k.len(), b * s * hb * hd);
+        for (i, (req, tokens, _, _)) in items.iter().enumerate() {
+            let real = tokens.len();
+            for (hi, &h) in heads.iter().enumerate() {
+                let mut ks = Vec::with_capacity(real * hd);
+                let mut vs = Vec::with_capacity(real * hd);
+                for t in 0..real {
+                    let off = ((i * s + t) * hb + hi) * hd;
+                    ks.extend_from_slice(&k[off..off + hd]);
+                    vs.extend_from_slice(&v[off..off + hd]);
+                }
+                self.kv.append(*req, layer, h, rank, &ks, &vs);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Additive mask `[b, 1, s, c+s]` for a padded batch.
+fn build_mask(items: &[FwdItem], b: usize, s: usize, c: usize) -> Vec<f32> {
+    let w = c + s;
+    let mut m = vec![-1e9f32; b * s * w];
+    for (i, (_, tokens, ctx, _)) in items.iter().enumerate() {
+        let real = tokens.len();
+        for q in 0..real {
+            let row = (i * s + q) * w;
+            for t in 0..(*ctx).min(c) {
+                m[row + t] = 0.0; // cached positions
+            }
+            for t in 0..=q {
+                m[row + c + t] = 0.0; // causal over the chunk
+            }
+        }
+        // Padded query rows: self only (keeps softmax well-conditioned;
+        // outputs and KV of padded rows are discarded).
+        for q in real..s {
+            m[(i * s + q) * w + c + q] = 0.0;
+        }
+    }
+    for i in items.len()..b {
+        for q in 0..s {
+            m[(i * s + q) * w + c + q] = 0.0;
+        }
+    }
+    m
+}

@@ -1,0 +1,265 @@
+//! Engine KV store: per-(request, layer, head) K/V slices with rank tags,
+//! host backup mirroring, and failure wipes.
+//!
+//! All data physically lives in host memory (the engine runs on CPU-PJRT),
+//! but every slice carries the rank whose simulated HBM holds it. A device
+//! failure deletes exactly the slices tagged with that rank — recovery
+//! must then restore them from the backup mirror (FailSafe) or re-prefill
+//! (the baseline), and the continuation is checked bit-exact in tests.
+
+use std::collections::HashMap;
+
+use crate::kvcache::KvPlacement;
+use crate::{HeadId, LayerId, RankId, RequestId};
+
+/// K/V of one (request, layer, head): `tokens × head_dim` f32 each.
+#[derive(Debug, Clone, Default)]
+pub struct KvSlice {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub tokens: usize,
+    /// Rank whose (simulated) HBM holds this slice.
+    pub rank: RankId,
+}
+
+/// The engine's KV state.
+#[derive(Debug, Default)]
+pub struct KvStore {
+    head_dim: usize,
+    slices: HashMap<(RequestId, LayerId, HeadId), KvSlice>,
+    /// Host-DRAM mirror (proactive backup §3.2): token-prefix copies.
+    backup: HashMap<(RequestId, LayerId, HeadId), KvSlice>,
+}
+
+impl KvStore {
+    pub fn new(head_dim: usize) -> Self {
+        KvStore { head_dim, slices: HashMap::new(), backup: HashMap::new() }
+    }
+
+    /// Tokens cached for `req` (layer 0, any head — all heads agree).
+    pub fn tokens(&self, req: RequestId) -> usize {
+        self.slices
+            .iter()
+            .filter(|((r, l, _), _)| *r == req && *l == 0)
+            .map(|(_, s)| s.tokens)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Append `s` new tokens of K/V for (req, layer, head), held by `rank`.
+    pub fn append(
+        &mut self,
+        req: RequestId,
+        layer: LayerId,
+        head: HeadId,
+        rank: RankId,
+        k_new: &[f32],
+        v_new: &[f32],
+    ) {
+        debug_assert_eq!(k_new.len(), v_new.len());
+        debug_assert_eq!(k_new.len() % self.head_dim, 0);
+        let e = self.slices.entry((req, layer, head)).or_default();
+        e.k.extend_from_slice(k_new);
+        e.v.extend_from_slice(v_new);
+        e.tokens += k_new.len() / self.head_dim;
+        e.rank = rank;
+    }
+
+    /// Gather the K (or V) cache of `req` for `heads`, zero-padded to
+    /// `(c_bucket, h_bucket)`: output `[c_bucket, h_bucket, head_dim]`
+    /// row-major, ready to concatenate across a batch.
+    pub fn gather(
+        &self,
+        req: RequestId,
+        layer: LayerId,
+        heads: &[HeadId],
+        c_bucket: usize,
+        h_bucket: usize,
+        want_v: bool,
+    ) -> Vec<f32> {
+        let hd = self.head_dim;
+        let mut out = vec![0.0f32; c_bucket * h_bucket * hd];
+        for (hi, &h) in heads.iter().enumerate() {
+            if let Some(s) = self.slices.get(&(req, layer, h)) {
+                let src = if want_v { &s.v } else { &s.k };
+                for t in 0..s.tokens.min(c_bucket) {
+                    let dst = (t * h_bucket + hi) * hd;
+                    out[dst..dst + hd].copy_from_slice(&src[t * hd..(t + 1) * hd]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Mirror `req`'s slices into the host backup (write-behind pass).
+    pub fn backup_request(&mut self, req: RequestId) {
+        for ((r, l, h), s) in self.slices.iter() {
+            if *r == req {
+                self.backup.insert((*r, *l, *h), s.clone());
+            }
+        }
+    }
+
+    /// Tokens covered by backup for `req`.
+    pub fn backed_tokens(&self, req: RequestId) -> usize {
+        self.backup
+            .iter()
+            .filter(|((r, l, _), _)| *r == req && *l == 0)
+            .map(|(_, s)| s.tokens)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Hard failure of `rank`: drop every slice its HBM held. Returns the
+    /// affected request ids (deduped).
+    pub fn wipe_rank(&mut self, rank: RankId) -> Vec<RequestId> {
+        let mut lost: Vec<RequestId> = Vec::new();
+        self.slices.retain(|(r, _, _), s| {
+            if s.rank == rank {
+                lost.push(*r);
+                false
+            } else {
+                true
+            }
+        });
+        lost.sort_unstable();
+        lost.dedup();
+        lost
+    }
+
+    /// Restore `req`'s missing slices from backup, re-tagging by the new
+    /// placement (`home` = new home rank). Returns restored token count,
+    /// or 0 if no backup exists.
+    pub fn restore_request(
+        &mut self,
+        req: RequestId,
+        placement: &KvPlacement,
+        home: RankId,
+    ) -> usize {
+        let mut restored = 0;
+        for ((r, l, h), s) in self.backup.iter() {
+            if *r != req {
+                continue;
+            }
+            if !self.slices.contains_key(&(*r, *l, *h)) {
+                let mut slice = s.clone();
+                slice.rank = placement.rank_for(*l, *h, home);
+                restored = restored.max(slice.tokens);
+                self.slices.insert((*r, *l, *h), slice);
+            }
+        }
+        restored
+    }
+
+    /// Truncate every slice of `req` to `tokens` (used when restore lags
+    /// behind the newest decode tokens — the lag gets recomputed).
+    pub fn truncate(&mut self, req: RequestId, tokens: usize) {
+        let hd = self.head_dim;
+        for ((r, _, _), s) in self.slices.iter_mut() {
+            if *r == req && s.tokens > tokens {
+                s.k.truncate(tokens * hd);
+                s.v.truncate(tokens * hd);
+                s.tokens = tokens;
+            }
+        }
+    }
+
+    /// Re-tag surviving slices after a reconfiguration: slice held by old
+    /// rank `o` now belongs to `survivor_map[o]` (data stays put; the
+    /// simulated transfer cost is accounted by the recovery planner).
+    pub fn remap_ranks(&mut self, survivor_map: &[Option<RankId>]) {
+        for s in self.slices.values_mut() {
+            if let Some(new_r) = survivor_map.get(s.rank).copied().flatten() {
+                s.rank = new_r;
+            }
+        }
+    }
+
+    /// Drop all state of a finished request.
+    pub fn release(&mut self, req: RequestId) {
+        self.slices.retain(|(r, _, _), _| *r != req);
+        self.backup.retain(|(r, _, _), _| *r != req);
+    }
+
+    /// Per-rank resident KV bytes (for accounting assertions).
+    pub fn bytes_by_rank(&self, world: usize) -> Vec<usize> {
+        let mut by = vec![0usize; world];
+        for s in self.slices.values() {
+            if s.rank < world {
+                by[s.rank] += (s.k.len() + s.v.len()) * 4;
+            }
+        }
+        by
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::small_real;
+    use crate::sharding::ShardPlan;
+
+    #[test]
+    fn append_gather_roundtrip() {
+        let mut kv = KvStore::new(2);
+        kv.append(1, 0, 3, 0, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]); // 2 tokens
+        assert_eq!(kv.tokens(1), 2);
+        let k = kv.gather(1, 0, &[3], 4, 2, false);
+        // [c=4, h=2, hd=2]: token0 head0 = [1,2], token1 head0 = [3,4], rest 0.
+        assert_eq!(&k[0..2], &[1.0, 2.0]);
+        assert_eq!(&k[4..6], &[3.0, 4.0]);
+        assert_eq!(&k[2..4], &[0.0, 0.0]); // padded head
+        assert_eq!(&k[8..], &[0.0; 8]); // padded tokens
+        let v = kv.gather(1, 0, &[3], 4, 2, true);
+        assert_eq!(&v[0..2], &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn wipe_and_restore() {
+        let m = small_real();
+        let placement = KvPlacement::new(&ShardPlan::failsafe(&m, 2));
+        let mut kv = KvStore::new(2);
+        kv.append(1, 0, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        kv.append(1, 0, 1, 1, &[5.0, 6.0], &[7.0, 8.0]);
+        kv.backup_request(1);
+        let lost = kv.wipe_rank(0);
+        assert_eq!(lost, vec![1]);
+        assert!(kv.gather(1, 0, &[0], 1, 1, false).iter().all(|&x| x == 0.0));
+        let restored = kv.restore_request(1, &placement, 0);
+        assert_eq!(restored, 1);
+        assert_eq!(kv.gather(1, 0, &[0], 1, 1, false), vec![1.0, 2.0]);
+        // Surviving slice untouched.
+        assert_eq!(kv.gather(1, 0, &[1], 1, 1, false), vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn wipe_without_backup_loses_data() {
+        let m = small_real();
+        let placement = KvPlacement::new(&ShardPlan::failsafe(&m, 2));
+        let mut kv = KvStore::new(2);
+        kv.append(7, 0, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        kv.wipe_rank(0);
+        assert_eq!(kv.restore_request(7, &placement, 0), 0);
+        assert_eq!(kv.tokens(7), 0);
+    }
+
+    #[test]
+    fn truncate_trims_lagged_tokens() {
+        let mut kv = KvStore::new(1);
+        kv.append(1, 0, 0, 0, &[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+        kv.truncate(1, 2);
+        assert_eq!(kv.tokens(1), 2);
+        assert_eq!(kv.gather(1, 0, &[0], 3, 1, false), vec![1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn bytes_by_rank_tracks_tags() {
+        let mut kv = KvStore::new(2);
+        kv.append(1, 0, 0, 0, &[0.0; 4], &[0.0; 4]);
+        kv.append(1, 0, 1, 1, &[0.0; 4], &[0.0; 4]);
+        kv.append(1, 1, 0, 1, &[0.0; 4], &[0.0; 4]);
+        let by = kv.bytes_by_rank(2);
+        assert_eq!(by[0], 32);
+        assert_eq!(by[1], 64);
+    }
+}

@@ -1,0 +1,23 @@
+//! The real serving engine: the rust coordinator executing AOT-compiled
+//! JAX/Pallas shards through PJRT, end to end.
+//!
+//! Everything the simulators decide analytically happens here for real:
+//! non-uniform head placement (the per-layer head→rank map drives which
+//! weight slices each rank holds and which KV slices it stores), hybrid
+//! attention (TP execs over the full batch + DP execs over each home
+//! rank's sub-batch), partial-sum combining in place of all-reduce,
+//! chunked prefill, continuous decode batching, proactive KV backup, and
+//! failure recovery with bit-exact continuation.
+//!
+//! The per-rank executions run sequentially on one CPU-PJRT client —
+//! "ranks" are logical shards (the paper's physical 8-GPU distribution is
+//! modeled by [`crate::cluster`]); what is verified here is that the
+//! coordinator's sharding math composes to the exact unsharded model.
+
+mod core;
+mod kv;
+mod shard;
+
+pub use self::core::{Engine, GenerationResult, ServeReport};
+pub use kv::KvStore;
+pub use shard::RankShard;

@@ -1,0 +1,173 @@
+//! Per-rank weight shards as PJRT literals, built from the host store.
+//!
+//! A [`RankShard`] materializes, for one rank under one shard plan epoch:
+//! per layer, the TP-head weight slices (Wq/Wk/Wv/Wo padded to the head
+//! bucket) and the FFN column-block slices (padded to the column bucket);
+//! plus the DP-head slices every rank carries under hybrid attention.
+//! Rebuilt on reconfiguration — the bytes that *move* are what the
+//! recovery planner accounts; here we re-slice from the host store, which
+//! is exactly the on-demand read FailSafe performs.
+
+use anyhow::Result;
+
+use crate::runtime::{literal_tensor, Manifest, WeightStore};
+use crate::sharding::{ShardPlan, DP_OWNER};
+use crate::{LayerId, RankId};
+
+/// Attention weights of one layer's local head set (padded to bucket).
+pub struct AttnWeights {
+    /// Real (unpadded) head ids, in slice order.
+    pub heads: Vec<usize>,
+    /// The compiled head bucket these literals are padded to.
+    pub h_bucket: usize,
+    pub wq: xla::Literal,
+    pub wk: xla::Literal,
+    pub wv: xla::Literal,
+    pub wo: xla::Literal,
+}
+
+/// FFN weights of one layer's local column set (padded to bucket).
+pub struct FfnWeights {
+    pub cols: Vec<usize>,
+    pub col_bucket: usize,
+    pub gate: xla::Literal,
+    pub up: xla::Literal,
+    pub down: xla::Literal,
+}
+
+/// One rank's resident weights for an epoch.
+pub struct RankShard {
+    pub rank: RankId,
+    /// Per layer: TP attention slice (None if this rank owns no TP heads
+    /// in that layer — possible at world > n_heads).
+    pub tp_attn: Vec<Option<AttnWeights>>,
+    /// Per layer: the DP (replicated) head slice, present on every rank
+    /// when the plan has remainder heads.
+    pub dp_attn: Vec<Option<AttnWeights>>,
+    /// Per layer: FFN column slice.
+    pub ffn: Vec<FfnWeights>,
+    /// Per layer norms.
+    pub attn_norm: Vec<xla::Literal>,
+    pub ffn_norm: Vec<xla::Literal>,
+}
+
+/// Pick the smallest compiled bucket ≥ `n` from `buckets` (sorted).
+pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
+}
+
+fn build_attn(
+    store: &WeightStore,
+    layer: LayerId,
+    heads: &[usize],
+    head_dim: usize,
+    h_bucket: usize,
+) -> Result<AttnWeights> {
+    let wq = store.slice_head_cols(&format!("wq.{layer}"), heads, head_dim, h_bucket)?;
+    let wk = store.slice_head_cols(&format!("wk.{layer}"), heads, head_dim, h_bucket)?;
+    let wv = store.slice_head_cols(&format!("wv.{layer}"), heads, head_dim, h_bucket)?;
+    let wo = store.slice_head_rows(&format!("wo.{layer}"), heads, head_dim, h_bucket)?;
+    Ok(AttnWeights {
+        heads: heads.to_vec(),
+        h_bucket,
+        wq: literal_tensor(&wq)?,
+        wk: literal_tensor(&wk)?,
+        wv: literal_tensor(&wv)?,
+        wo: literal_tensor(&wo)?,
+    })
+}
+
+impl RankShard {
+    /// Materialize rank `rank`'s shard for `plan` from the host store.
+    pub fn build(
+        manifest: &Manifest,
+        store: &WeightStore,
+        plan: &ShardPlan,
+        rank: RankId,
+    ) -> Result<RankShard> {
+        let hd = manifest.model.head_dim;
+        let h_buckets = manifest.buckets("attn", |v| v.h);
+        let col_buckets = manifest.buckets("ffn", |v| v.cols);
+        let cols_per_block = manifest.model.d_ff / plan.ffn.n_blocks;
+
+        let mut tp_attn = Vec::new();
+        let mut dp_attn = Vec::new();
+        let mut attn_norm = Vec::new();
+        let mut ffn_norm = Vec::new();
+        let mut ffn = Vec::new();
+
+        // FFN columns are layer-invariant under the plan.
+        let blocks = plan.ffn.blocks_of(rank);
+        let cols: Vec<usize> = blocks
+            .iter()
+            .flat_map(|&b| b * cols_per_block..(b + 1) * cols_per_block)
+            .collect();
+        let col_bucket = pick_bucket(&col_buckets, cols.len())
+            .ok_or_else(|| anyhow::anyhow!("no ffn bucket ≥ {} cols", cols.len()))?;
+
+        for layer in 0..manifest.model.n_layers {
+            let lh = &plan.heads.layers[layer];
+            let tp_heads: Vec<usize> = lh.tp_heads_of(rank);
+            let dp_heads: Vec<usize> = lh.dp_heads();
+
+            tp_attn.push(if tp_heads.is_empty() {
+                None
+            } else {
+                let hb = pick_bucket(&h_buckets, tp_heads.len())
+                    .ok_or_else(|| anyhow::anyhow!("no head bucket ≥ {}", tp_heads.len()))?;
+                Some(build_attn(store, layer, &tp_heads, hd, hb)?)
+            });
+            dp_attn.push(if dp_heads.is_empty() {
+                None
+            } else {
+                let hb = pick_bucket(&h_buckets, dp_heads.len())
+                    .ok_or_else(|| anyhow::anyhow!("no head bucket ≥ {}", dp_heads.len()))?;
+                Some(build_attn(store, layer, &dp_heads, hd, hb)?)
+            });
+
+            attn_norm.push(literal_tensor(store.get(&format!("attn_norm.{layer}"))?)?);
+            ffn_norm.push(literal_tensor(store.get(&format!("ffn_norm.{layer}"))?)?);
+
+            let gate = store.slice_cols(&format!("w_gate.{layer}"), &cols, col_bucket)?;
+            let up = store.slice_cols(&format!("w_up.{layer}"), &cols, col_bucket)?;
+            let down = store.slice_rows(&format!("w_down.{layer}"), &cols, col_bucket)?;
+            ffn.push(FfnWeights {
+                cols: cols.clone(),
+                col_bucket,
+                gate: literal_tensor(&gate)?,
+                up: literal_tensor(&up)?,
+                down: literal_tensor(&down)?,
+            });
+        }
+
+        Ok(RankShard { rank, tp_attn, dp_attn, ffn, attn_norm, ffn_norm })
+    }
+
+    /// Sanity check: across `shards`, every (layer, head) TP slice appears
+    /// exactly once and DP heads appear on every rank.
+    pub fn verify_cover(shards: &[RankShard], plan: &ShardPlan) -> bool {
+        for (layer, lh) in plan.heads.layers.iter().enumerate() {
+            for (head, &owner) in lh.owner.iter().enumerate() {
+                if owner == DP_OWNER {
+                    if !shards
+                        .iter()
+                        .all(|s| s.dp_attn[layer].as_ref().is_some_and(|a| a.heads.contains(&head)))
+                    {
+                        return false;
+                    }
+                } else {
+                    let count = shards
+                        .iter()
+                        .filter(|s| {
+                            s.tp_attn[layer].as_ref().is_some_and(|a| a.heads.contains(&head))
+                        })
+                        .count();
+                    if count != 1 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}

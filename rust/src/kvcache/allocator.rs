@@ -1,0 +1,150 @@
+//! Per-device paged block allocator.
+//!
+//! Tracks KV block occupancy on one device. Blocks are the vLLM-style
+//! paging unit; the allocator only does accounting (free list + owner map)
+//! — actual tensor storage lives with the engine or is simulated.
+
+use std::collections::HashMap;
+
+
+use crate::RequestId;
+
+/// Index of a block within one device's KV pool.
+pub type BlockId = u32;
+
+/// Allocation failure: the device pool is exhausted. Under synchronized TP
+/// this stalls the *whole group* — which is exactly why cyclic placement's
+/// capacity balancing matters (§2.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocError {
+    pub requested: usize,
+    pub available: usize,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV pool exhausted: requested {} blocks, {} free", self.requested, self.available)
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+/// Block accounting for one device's KV pool.
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    n_blocks: usize,
+    free: Vec<BlockId>,
+    /// Blocks held by each request on this device.
+    held: HashMap<RequestId, Vec<BlockId>>,
+}
+
+impl BlockAllocator {
+    /// Pool with `n_blocks` blocks.
+    pub fn new(n_blocks: usize) -> Self {
+        BlockAllocator {
+            n_blocks,
+            // Pop order: descending ids; purely cosmetic.
+            free: (0..n_blocks as BlockId).rev().collect(),
+            held: HashMap::new(),
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn n_used(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    /// Allocate `n` blocks for `req`. All-or-nothing.
+    pub fn alloc(&mut self, req: RequestId, n: usize) -> Result<Vec<BlockId>, AllocError> {
+        if self.free.len() < n {
+            return Err(AllocError { requested: n, available: self.free.len() });
+        }
+        let at = self.free.len() - n;
+        let blocks: Vec<BlockId> = self.free.split_off(at);
+        self.held.entry(req).or_default().extend(&blocks);
+        Ok(blocks)
+    }
+
+    /// Release all blocks of `req` (request finished or evicted).
+    pub fn free_request(&mut self, req: RequestId) -> usize {
+        match self.held.remove(&req) {
+            Some(blocks) => {
+                let n = blocks.len();
+                self.free.extend(blocks);
+                n
+            }
+            None => 0,
+        }
+    }
+
+    /// Blocks currently held by `req`.
+    pub fn blocks_of(&self, req: RequestId) -> &[BlockId] {
+        self.held.get(&req).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Requests with at least one block here.
+    pub fn requests(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.held.keys().copied()
+    }
+
+    /// Drop everything (device failed: HBM contents lost).
+    pub fn wipe(&mut self) {
+        self.held.clear();
+        self.free = (0..self.n_blocks as BlockId).rev().collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = BlockAllocator::new(10);
+        let b1 = a.alloc(1, 4).unwrap();
+        assert_eq!(b1.len(), 4);
+        assert_eq!(a.n_free(), 6);
+        let _b2 = a.alloc(2, 6).unwrap();
+        assert_eq!(a.n_free(), 0);
+        assert!(a.alloc(3, 1).is_err());
+        assert_eq!(a.free_request(1), 4);
+        assert_eq!(a.n_free(), 4);
+        assert!(a.alloc(3, 4).is_ok());
+    }
+
+    #[test]
+    fn all_or_nothing() {
+        let mut a = BlockAllocator::new(4);
+        let err = a.alloc(1, 5).unwrap_err();
+        assert_eq!(err.requested, 5);
+        assert_eq!(err.available, 4);
+        assert_eq!(a.n_free(), 4, "failed alloc must not leak");
+    }
+
+    #[test]
+    fn no_double_allocation() {
+        let mut a = BlockAllocator::new(64);
+        let b1 = a.alloc(1, 32).unwrap();
+        let b2 = a.alloc(2, 32).unwrap();
+        let mut all: Vec<BlockId> = b1.into_iter().chain(b2).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 64);
+    }
+
+    #[test]
+    fn wipe_resets() {
+        let mut a = BlockAllocator::new(8);
+        a.alloc(1, 8).unwrap();
+        a.wipe();
+        assert_eq!(a.n_free(), 8);
+        assert_eq!(a.blocks_of(1), &[]);
+    }
+}

@@ -1,0 +1,199 @@
+//! Proactive KVCache backup to host DRAM (§3.2).
+//!
+//! During normal operation the backup store asynchronously mirrors KV
+//! blocks to host memory (write-behind: the GPU copy is authoritative, the
+//! host copy trails by the tokens generated since the last backup pass).
+//! On failure, the surviving ranks restore **only the lost subset** from
+//! host; tokens produced after the last backup must still be recomputed,
+//! so the backup cadence bounds recomputation.
+
+use std::collections::HashMap;
+
+
+use super::placement::KvPlacement;
+use crate::{RankId, RequestId};
+
+/// Host-DRAM mirror of request KV state.
+#[derive(Debug, Clone, Default)]
+pub struct BackupStore {
+    /// Tokens backed up per request (host copy is a prefix of the KV).
+    backed: HashMap<RequestId, usize>,
+    /// Total bytes resident in host DRAM.
+    pub host_bytes: usize,
+    /// Capacity limit (host DRAM reserved for backup).
+    pub capacity_bytes: usize,
+}
+
+/// The restore work after a failure: per-rank bytes to pull from host over
+/// PCIe, plus tokens whose KV was produced after the last backup and must
+/// be recomputed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RestorePlan {
+    /// `pcie_bytes[r]` — backup bytes rank r pulls from host.
+    pub pcie_bytes: Vec<usize>,
+    /// Tokens per request that must be re-prefilled (backup lag).
+    pub recompute_tokens: HashMap<RequestId, usize>,
+    /// Total lost bytes covered by the backup.
+    pub restored_bytes: usize,
+}
+
+impl BackupStore {
+    pub fn new(capacity_bytes: usize) -> Self {
+        BackupStore { backed: HashMap::new(), host_bytes: 0, capacity_bytes }
+    }
+
+    /// Record a backup pass for `req`: host now mirrors the first `tokens`
+    /// tokens. `bytes_per_token` = full-model KV bytes per token. Returns
+    /// the bytes written (the increment), or `None` if capacity would be
+    /// exceeded (backup skipped — the request simply stays recompute-bound).
+    pub fn backup(&mut self, req: RequestId, tokens: usize, bytes_per_token: usize) -> Option<usize> {
+        let prev = self.backed.get(&req).copied().unwrap_or(0);
+        if tokens <= prev {
+            return Some(0);
+        }
+        let inc = (tokens - prev) * bytes_per_token;
+        if self.host_bytes + inc > self.capacity_bytes {
+            return None;
+        }
+        self.host_bytes += inc;
+        self.backed.insert(req, tokens);
+        Some(inc)
+    }
+
+    /// Tokens currently mirrored for `req`.
+    pub fn backed_tokens(&self, req: RequestId) -> usize {
+        self.backed.get(&req).copied().unwrap_or(0)
+    }
+
+    /// Drop a finished request's backup.
+    pub fn release(&mut self, req: RequestId, bytes_per_token: usize) {
+        if let Some(tokens) = self.backed.remove(&req) {
+            self.host_bytes = self.host_bytes.saturating_sub(tokens * bytes_per_token);
+        }
+    }
+
+    /// Plan the restore after rank `failed_rank` (old numbering) is lost.
+    ///
+    /// `requests` = (id, current_tokens, home_rank in *old* numbering).
+    /// `placement_old` gives where KV lived pre-failure; `placement_new` +
+    /// `survivor_map` decide which surviving rank pulls each lost slice.
+    /// Thanks to cyclic placement, the lost slices spread evenly over the
+    /// new ranks, balancing PCIe restore bandwidth (§3.2).
+    pub fn plan_restore(
+        &self,
+        failed_rank: RankId,
+        requests: &[(RequestId, usize, RankId)],
+        placement_old: &KvPlacement,
+        placement_new: &KvPlacement,
+        survivor_map: &[Option<RankId>],
+    ) -> RestorePlan {
+        let new_world = placement_new.plan().world();
+        let kvb = placement_old.plan().model.kv_bytes_per_token_per_head_layer();
+        let mut pcie = vec![0usize; new_world];
+        let mut recompute = HashMap::new();
+        let mut restored = 0usize;
+
+        for &(req, tokens, old_home) in requests {
+            let backed = self.backed_tokens(req).min(tokens);
+            let lag = tokens - backed;
+            if lag > 0 {
+                recompute.insert(req, lag);
+            }
+            if backed == 0 {
+                continue;
+            }
+            // New home: survivor renumbering (failed home → reassigned later
+            // by the router; for restore accounting, home 0 is fine because
+            // DP KV of a failed home is part of the lost set either way).
+            let new_home = survivor_map.get(old_home).copied().flatten().unwrap_or(0);
+            let old_plan = placement_old.plan();
+            for layer in 0..old_plan.model.n_layers {
+                for head in 0..old_plan.model.n_kv_heads {
+                    let old_rank = placement_old.rank_for(layer, head, old_home);
+                    if old_rank != failed_rank {
+                        continue; // slice survived on its device
+                    }
+                    // Lost slice: the *new* owner pulls it from host.
+                    let new_rank = placement_new.rank_for(layer, head, new_home);
+                    let bytes = backed * kvb;
+                    pcie[new_rank] += bytes;
+                    restored += bytes;
+                }
+            }
+        }
+        RestorePlan { pcie_bytes: pcie, recompute_tokens: recompute, restored_bytes: restored }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llama3_70b;
+    use crate::sharding::ShardPlan;
+
+    fn fail_rank_map(w: usize, f: usize) -> Vec<Option<RankId>> {
+        (0..w)
+            .map(|r| if r == f { None } else { Some(if r < f { r } else { r - 1 }) })
+            .collect()
+    }
+
+    #[test]
+    fn backup_tracks_increments() {
+        let mut s = BackupStore::new(1 << 40);
+        assert_eq!(s.backup(1, 100, 1000), Some(100_000));
+        assert_eq!(s.backup(1, 150, 1000), Some(50_000));
+        assert_eq!(s.backup(1, 150, 1000), Some(0));
+        assert_eq!(s.host_bytes, 150_000);
+        s.release(1, 1000);
+        assert_eq!(s.host_bytes, 0);
+    }
+
+    #[test]
+    fn capacity_limit_skips() {
+        let mut s = BackupStore::new(1000);
+        assert_eq!(s.backup(1, 1, 800), Some(800));
+        assert_eq!(s.backup(2, 1, 800), None);
+        assert_eq!(s.backed_tokens(2), 0);
+    }
+
+    #[test]
+    fn restore_covers_lost_and_flags_lag() {
+        let m = llama3_70b();
+        let p8 = KvPlacement::new(&ShardPlan::failsafe(&m, 8));
+        let p7 = KvPlacement::new(&ShardPlan::failsafe(&m, 7));
+        let mut s = BackupStore::new(1 << 42);
+        let kv_per_token = m.kv_bytes_per_token();
+        // 10 requests, 1000 tokens each, backed to 900.
+        let reqs: Vec<(RequestId, usize, RankId)> =
+            (0..10).map(|i| (i as RequestId, 1000, (i % 8) as RankId)).collect();
+        for &(id, _, _) in &reqs {
+            s.backup(id, 900, kv_per_token);
+        }
+        let map = fail_rank_map(8, 3);
+        let plan = s.plan_restore(3, &reqs, &p8, &p7, &map);
+        assert!(plan.restored_bytes > 0);
+        assert_eq!(plan.recompute_tokens.len(), 10);
+        assert!(plan.recompute_tokens.values().all(|&t| t == 100));
+        // Cyclic placement spreads the restore across ranks.
+        let nonzero = plan.pcie_bytes.iter().filter(|&&b| b > 0).count();
+        assert!(nonzero >= 6, "restore should be spread, got {:?}", plan.pcie_bytes);
+    }
+
+    #[test]
+    fn restore_balanced_under_cyclic() {
+        let m = llama3_70b();
+        let p8 = KvPlacement::new(&ShardPlan::failsafe(&m, 8));
+        let p7 = KvPlacement::new(&ShardPlan::failsafe(&m, 7));
+        let mut s = BackupStore::new(1 << 42);
+        let reqs: Vec<(RequestId, usize, RankId)> =
+            (0..56).map(|i| (i as RequestId, 2000, (i % 8) as RankId)).collect();
+        for &(id, t, _) in &reqs {
+            s.backup(id, t, m.kv_bytes_per_token());
+        }
+        let map = fail_rank_map(8, 0);
+        let plan = s.plan_restore(0, &reqs, &p8, &p7, &map);
+        let max = *plan.pcie_bytes.iter().max().unwrap() as f64;
+        let mean = plan.pcie_bytes.iter().sum::<usize>() as f64 / 7.0;
+        assert!(max / mean < 1.6, "restore imbalance {max}/{mean}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Paged KVCache management: block allocation per device, head-granular
+//! placement (following the shard plan's cyclic map), and the host-DRAM
+//! backup store behind FailSafe's proactive KVCache backup (§3.2).
+
+mod allocator;
+mod backup;
+mod placement;
+
+pub use allocator::{AllocError, BlockAllocator, BlockId};
+pub use backup::{BackupStore, RestorePlan};
+pub use placement::{KvPlacement, RequestKvFootprint};
+
+/// Tokens per KV block (vLLM-style paging granularity).
+pub const BLOCK_TOKENS: usize = 16;

@@ -1,0 +1,147 @@
+//! Head-granular KV placement: which rank stores which (layer, head) KV
+//! slice of a request, following the shard plan's head assignment.
+//!
+//! TP-head KV lives on the owning rank; DP-head KV lives on the request's
+//! *home* rank (the DP rank the router chose). Cyclic rotation of TP
+//! ownership is what evens the TP component out across devices (Fig 1).
+
+
+use crate::sharding::{ShardPlan, DP_OWNER};
+use crate::{RankId, RequestId};
+
+/// Per-rank KV footprint of one request, in bytes, given its token count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestKvFootprint {
+    pub request: RequestId,
+    pub tokens: usize,
+    pub home: RankId,
+    /// `bytes[r]` = KV bytes of this request resident on rank r.
+    pub bytes: Vec<usize>,
+}
+
+/// Placement calculator bound to a shard plan.
+#[derive(Debug, Clone)]
+pub struct KvPlacement {
+    plan: ShardPlan,
+    /// Pre-computed per-rank TP head-layer counts.
+    tp_head_layers: Vec<usize>,
+    dp_head_layers: usize,
+}
+
+impl KvPlacement {
+    pub fn new(plan: &ShardPlan) -> Self {
+        let tp_head_layers =
+            (0..plan.world()).map(|r| plan.heads.tp_head_layers_of(r)).collect();
+        let dp_head_layers = plan.heads.dp_heads_per_layer() * plan.model.n_layers;
+        KvPlacement { plan: plan.clone(), tp_head_layers, dp_head_layers }
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Rank storing KV for head `head` of layer `layer` of a request homed
+    /// on `home`.
+    pub fn rank_for(&self, layer: usize, head: usize, home: RankId) -> RankId {
+        let owner = self.plan.heads.layers[layer].owner[head];
+        if owner == DP_OWNER {
+            home
+        } else {
+            owner
+        }
+    }
+
+    /// Full per-rank byte footprint for a request of `tokens` tokens.
+    pub fn footprint(&self, request: RequestId, tokens: usize, home: RankId) -> RequestKvFootprint {
+        let kvb = self.plan.model.kv_bytes_per_token_per_head_layer();
+        let mut bytes: Vec<usize> =
+            self.tp_head_layers.iter().map(|&hl| hl * kvb * tokens).collect();
+        bytes[home] += self.dp_head_layers * kvb * tokens;
+        RequestKvFootprint { request, tokens, home, bytes }
+    }
+
+    /// KV bytes lost when device holding rank `rank` fails, for a request
+    /// of `tokens` tokens homed on `home`.
+    pub fn lost_bytes(&self, rank: RankId, tokens: usize, home: RankId) -> usize {
+        self.footprint(0, tokens, home).bytes[rank]
+    }
+
+    /// Imbalance ratio of per-rank KV for an even mix of requests: max/mean
+    /// of per-rank bytes when each rank homes the same token count. 1.0 is
+    /// perfect balance.
+    pub fn imbalance(&self) -> f64 {
+        let w = self.plan.world();
+        let kvb = self.plan.model.kv_bytes_per_token_per_head_layer() as f64;
+        let per_rank: Vec<f64> = (0..w)
+            .map(|r| (self.tp_head_layers[r] as f64 + self.dp_head_layers as f64 / w as f64) * kvb)
+            .collect();
+        let mean = per_rank.iter().sum::<f64>() / w as f64;
+        let max = per_rank.iter().cloned().fold(0.0, f64::max);
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llama3_70b;
+    use crate::sharding::{AttentionPolicy, FfnPolicy};
+
+    #[test]
+    fn failsafe_tp7_balanced_naive_skewed() {
+        let m = llama3_70b();
+        let fs = KvPlacement::new(&ShardPlan::failsafe(&m, 7));
+        let nv = KvPlacement::new(&ShardPlan::nonuniform_naive(&m, 7));
+        assert!(fs.imbalance() < 1.01, "failsafe imbalance {}", fs.imbalance());
+        assert!(nv.imbalance() > 1.5, "naive imbalance {}", nv.imbalance());
+    }
+
+    #[test]
+    fn footprint_sums_to_total_kv() {
+        let m = llama3_70b();
+        let p = KvPlacement::new(&ShardPlan::failsafe(&m, 7));
+        let fp = p.footprint(1, 1000, 3);
+        let total: usize = fp.bytes.iter().sum();
+        assert_eq!(total, m.kv_bytes_per_token() * 1000);
+    }
+
+    #[test]
+    fn dp_kv_lands_on_home() {
+        let m = llama3_70b();
+        let p = KvPlacement::new(&ShardPlan::failsafe(&m, 7));
+        let fp_home2 = p.footprint(1, 100, 2);
+        let fp_home5 = p.footprint(1, 100, 5);
+        assert!(fp_home2.bytes[2] > fp_home5.bytes[2]);
+        assert!(fp_home5.bytes[5] > fp_home2.bytes[5]);
+    }
+
+    #[test]
+    fn cyclic_without_hybrid_still_balances_memory() {
+        let m = llama3_70b();
+        let plan = ShardPlan::new(&m, 7, AttentionPolicy::Cyclic, FfnPolicy::Commutative);
+        let p = KvPlacement::new(&plan);
+        assert!(p.imbalance() < 1.01, "cyclic imbalance {}", p.imbalance());
+    }
+
+    #[test]
+    fn rank_for_respects_ownership() {
+        let m = llama3_70b();
+        let plan = ShardPlan::failsafe(&m, 7);
+        let p = KvPlacement::new(&plan);
+        for layer in 0..4 {
+            for head in 0..m.n_kv_heads {
+                let owner = plan.heads.layers[layer].owner[head];
+                let r = p.rank_for(layer, head, 6);
+                if owner == crate::sharding::DP_OWNER {
+                    assert_eq!(r, 6);
+                } else {
+                    assert_eq!(r, owner);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! # FailSafe — high-performance resilient tensor-parallel LLM serving
+//!
+//! Reproduction of *FailSafe: High-performance Resilient Serving*
+//! (Xu, Xie, Gandhi, Kozyrakis — 2025).
+//!
+//! FailSafe keeps a tensor-parallel (TP) serving deployment fast when GPUs
+//! fail, by serving on an *irregular* number of devices (e.g. 7 of 8) while
+//! balancing compute and memory:
+//!
+//! * [`sharding`] — non-uniform TP planning: cyclic KVCache placement,
+//!   hybrid (TP + DP) attention head assignment, commutative FFN partitions.
+//! * [`router`] — fine-grained load-aware DP-rank routing (online makespan).
+//! * [`scheduler`] — DP-aware adaptive chunked prefill (paper Algorithm 1)
+//!   and continuous decode batching.
+//! * [`recovery`] — lightning recovery: proactive KVCache backup to host
+//!   DRAM and on-demand, non-redundant weight recovery.
+//! * [`kvcache`] — paged KV block management, placement, and backup store.
+//! * [`cluster`] — the simulated multi-GPU node substrate (HBM accounting,
+//!   NVLink/PCIe transfer model, fault injection).
+//! * [`simulator`] — discrete-event performance simulator regenerating the
+//!   paper's evaluation figures at H100 scale.
+//! * [`engine`] + [`runtime`] — the *real* serving engine: a rust
+//!   coordinator executing AOT-compiled JAX/Pallas shards via PJRT.
+//!
+//! The three-layer architecture: Python (JAX + Pallas) authors the model and
+//! kernels and lowers them **once** to HLO text (`make artifacts`); the rust
+//! coordinator loads the artifacts through the PJRT C API and owns the
+//! entire request path. Python never runs at serving time.
+
+pub mod benchkit;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod recovery;
+pub mod router;
+pub mod runtime;
+pub mod scheduler;
+pub mod sharding;
+pub mod simulator;
+pub mod traces;
+pub mod util;
+
+/// Identifies a GPU rank within a tensor-parallel group (0-based).
+pub type RankId = usize;
+/// Identifies an attention (KV) head within a layer (0-based).
+pub type HeadId = usize;
+/// Identifies a transformer layer (0-based).
+pub type LayerId = usize;
+/// Identifies a serving request.
+pub type RequestId = u64;
+/// Simulated time in seconds.
+pub type SimTime = f64;

@@ -1,0 +1,198 @@
+//! `failsafe` — the leader binary.
+//!
+//! Subcommands:
+//!   serve     serve random prompts on the real engine (PJRT, AOT artifacts)
+//!   sim       online serving simulation at H100 scale (prefill|decode)
+//!   recover   cost one failure under every recovery method
+//!   traces    print workload/availability trace statistics
+//!
+//! Examples:
+//!   failsafe serve --world 3 --requests 6 --max-new 12
+//!   failsafe serve --world 3 --fail-rank 1 --recovery full
+//!   failsafe sim --model llama --system failsafe --world 7 --mode decode --rate 4
+//!   failsafe recover --model llama --world 8 --requests 60 --ctx 8000
+//!   failsafe traces --n 3000
+
+use failsafe::benchkit::section;
+use failsafe::cluster::{GpuSpec, Interconnect};
+use failsafe::config::{model_by_name, recovery_by_name, system_by_name, EngineConfig};
+use failsafe::engine::Engine;
+use failsafe::kvcache::BackupStore;
+use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
+use failsafe::sharding::{HeadAssignment, ShardPlan};
+use failsafe::simulator::{OnlineMode, OnlineSim};
+use failsafe::traces::{
+    gcp_availability, mooncake_trace, openthoughts_trace, poisson_arrivals, TraceStats,
+};
+use failsafe::util::cli::Args;
+use failsafe::util::Rng;
+use failsafe::{RankId, RequestId};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("serve") => serve(&args),
+        Some("sim") => sim(&args),
+        Some("recover") => recover(&args),
+        Some("traces") => traces(&args),
+        _ => {
+            eprintln!(
+                "usage: failsafe <serve|sim|recover|traces> [--flags]\n\
+                 see `rust/src/main.rs` header for examples"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = EngineConfig::from_args(args);
+    let n = args.get_usize("requests", 6);
+    let max_new = args.get_usize("max-new", 12);
+    let fail_rank = args.get("fail-rank").and_then(|v| v.parse::<usize>().ok());
+    let seed = cfg.seed;
+
+    section(&format!("serving {} requests on world={} ({})", n, cfg.world, cfg.system.name));
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut engine = Engine::new(cfg)?;
+    for _ in 0..n {
+        let len = rng.range(8, 48);
+        let prompt: Vec<u32> = (0..len).map(|_| rng.range(1, 512) as u32).collect();
+        engine.submit(&prompt, max_new)?;
+    }
+    if let Some(rank) = fail_rank {
+        let method =
+            recovery_by_name(args.get_or("recovery", "full")).unwrap_or(RecoveryMethod::Full);
+        let lat = engine.inject_failure(rank, method)?;
+        println!("injected failure of rank {rank}: recovery {:.1} ms (modeled H100)", lat * 1e3);
+    }
+    let report = engine.run_to_completion()?;
+    println!(
+        "done: {} prefill tok, {} decode tok in {:.2}s ({:.1} decode tok/s), epoch {}",
+        report.prefill_tokens,
+        report.decode_tokens,
+        report.wall_s,
+        report.decode_tps(),
+        engine.epoch()
+    );
+    for r in report.results.iter().take(8) {
+        println!("  req {}: {:?}...", r.id, &r.output_tokens[..4.min(r.output_tokens.len())]);
+    }
+    Ok(())
+}
+
+fn sim(args: &Args) -> anyhow::Result<()> {
+    let model = model_by_name(args.get_or("model", "llama")).expect("unknown model");
+    let system = system_by_name(args.get_or("system", "failsafe")).expect("unknown system");
+    let world = args.get_usize("world", 7);
+    let mode = match args.get_or("mode", "decode") {
+        "prefill" => OnlineMode::Prefill,
+        _ => OnlineMode::Decode,
+    };
+    let rate = args.get_f64("rate", 2.0);
+    let n = args.get_usize("requests", 300);
+
+    section(&format!(
+        "simulating {} {:?} instance: {} TP{} @ {} req/s",
+        model.name, mode, system.name, world, rate
+    ));
+    let mut trace = mooncake_trace(n, args.get_u64("seed", 2));
+    for r in trace.iter_mut() {
+        r.input_tokens = r.input_tokens.min(64_000);
+    }
+    poisson_arrivals(&mut trace, rate, args.get_u64("seed", 2));
+    let sim = OnlineSim::new(system, mode, world).with_model(model);
+    let mut out = sim.run(&trace, None);
+    println!(
+        "input tput {:.0} tok/s | output tput {:.0} tok/s | steps {}",
+        out.metrics.input_throughput(),
+        out.metrics.output_throughput(),
+        out.steps
+    );
+    println!(
+        "TTFT p50/p90/p99: {:.2}/{:.2}/{:.2} s | TBT p50/p90/p99: {:.1}/{:.1}/{:.1} ms",
+        out.metrics.ttft.p50(),
+        out.metrics.ttft.p90(),
+        out.metrics.ttft.p99(),
+        out.metrics.tbt.p50() * 1e3,
+        out.metrics.tbt.p90() * 1e3,
+        out.metrics.tbt.p99() * 1e3
+    );
+    println!("max-TBT p99: {:.3} s", out.metrics.max_tbt_cdf.quantile(0.99));
+    Ok(())
+}
+
+fn recover(args: &Args) -> anyhow::Result<()> {
+    let model = model_by_name(args.get_or("model", "llama")).expect("unknown model");
+    let world = args.get_usize("world", 8);
+    let n_req = args.get_usize("requests", 60);
+    let ctx = args.get_usize("ctx", 8000);
+    let failed: RankId = args.get_usize("fail-rank", 3);
+
+    section(&format!("recovery costing: {} TP{} -> TP{}", model.name, world, world - 1));
+    let spec = GpuSpec::h100();
+    let ic = Interconnect::new(spec.clone());
+    let old = ShardPlan::failsafe(&model, world);
+    let survivor_map: Vec<Option<RankId>> = (0..world)
+        .map(|r| if r == failed { None } else { Some(if r < failed { r } else { r - 1 }) })
+        .collect();
+    let new_plan = ShardPlan {
+        model: model.clone(),
+        heads: HeadAssignment::new(
+            failsafe::sharding::AttentionPolicy::Hybrid,
+            model.n_kv_heads,
+            model.n_layers,
+            world - 1,
+        ),
+        ffn: old.ffn.reshard(&survivor_map, world - 1),
+    };
+    let reqs: Vec<(RequestId, usize, RankId)> =
+        (0..n_req as u64).map(|i| (i, ctx, (i as usize) % world)).collect();
+    let mut backup = BackupStore::new(1 << 42);
+    for &(id, t, _) in &reqs {
+        backup.backup(id, t, model.kv_bytes_per_token());
+    }
+    let input = RecoveryInput {
+        spec: &spec,
+        ic: &ic,
+        old_plan: &old,
+        new_plan: &new_plan,
+        survivor_map: &survivor_map,
+        failed_rank: failed,
+        requests: &reqs,
+        backup: &backup,
+    };
+    for method in [
+        RecoveryMethod::Recompute,
+        RecoveryMethod::Host,
+        RecoveryMethod::Full,
+        RecoveryMethod::Oracle,
+    ] {
+        let out = plan_recovery(method, &input);
+        println!("{:<16} {:.3} s", method.name(), out.total_s);
+    }
+    Ok(())
+}
+
+fn traces(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 3000);
+    let seed = args.get_u64("seed", 2);
+    for (name, t) in [
+        ("openthoughts", openthoughts_trace(n, seed)),
+        ("mooncake", mooncake_trace(n, seed)),
+    ] {
+        let inp = TraceStats::of(&t.iter().map(|r| r.input_tokens).collect::<Vec<_>>());
+        let out = TraceStats::of(&t.iter().map(|r| r.output_tokens).collect::<Vec<_>>());
+        println!(
+            "{name:<14} in: mean {:>6.0} median {:>6.0} max {:>6} | out: mean {:>6.0} median {:>6.0} max {:>6}",
+            inp.mean, inp.median, inp.max, out.mean, out.median, out.max
+        );
+    }
+    let avail = gcp_availability(64, 6.0 * 3600.0, 42);
+    println!(
+        "gcp-availability: {} events, min {}",
+        avail.len(),
+        avail.iter().map(|e| e.1).min().unwrap()
+    );
+    Ok(())
+}

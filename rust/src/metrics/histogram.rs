@@ -1,0 +1,201 @@
+//! Log-bucketed histogram with percentile queries, and exact CDFs for
+//! figure generation.
+
+
+/// Log-bucketed latency histogram: constant-memory, ~1% relative error —
+/// fine for serving percentiles across many orders of magnitude (the paper
+/// spans 15 ms oracle recovery to 22 s recompute).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i covers [min * ratio^i, min * ratio^(i+1))
+    counts: Vec<u64>,
+    min_value: f64,
+    ratio: f64,
+    n: u64,
+    sum: f64,
+    max_seen: f64,
+}
+
+impl Histogram {
+    /// Buckets spanning `[min_value, max_value]` with `per_decade` buckets
+    /// per 10×.
+    pub fn new(min_value: f64, max_value: f64, per_decade: usize) -> Self {
+        let ratio = 10f64.powf(1.0 / per_decade as f64);
+        let n_buckets = ((max_value / min_value).log10() * per_decade as f64).ceil() as usize + 2;
+        Histogram {
+            counts: vec![0; n_buckets],
+            min_value,
+            ratio,
+            n: 0,
+            sum: 0.0,
+            max_seen: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Default latency histogram: 100 µs .. 1000 s, 20 buckets/decade.
+    pub fn latency() -> Self {
+        Self::new(1e-4, 1e3, 20)
+    }
+
+    fn bucket(&self, v: f64) -> usize {
+        if v <= self.min_value {
+            return 0;
+        }
+        let b = (v / self.min_value).log(self.ratio).floor() as usize + 1;
+        b.min(self.counts.len() - 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let b = self.bucket(v);
+        self.counts[b] += 1;
+        self.n += 1;
+        self.sum += v;
+        if v > self.max_seen {
+            self.max_seen = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max_seen
+        }
+    }
+
+    /// Value at quantile `q` in [0,1] (bucket upper bound).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.min_value * self.ratio.powi(i as i32);
+            }
+        }
+        self.max_seen
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Exact empirical CDF (keeps all samples) — used to regenerate Fig 12.
+#[derive(Debug, Clone, Default)]
+pub struct Cdf {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Cdf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact quantile (linear interpolation).
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        self.ensure_sorted();
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let pos = q.clamp(0.0, 1.0) * (self.samples.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    /// `(value, cumulative_fraction)` points for plotting.
+    pub fn points(&mut self) -> Vec<(f64, f64)> {
+        self.ensure_sorted();
+        let n = self.samples.len();
+        self.samples
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, (i + 1) as f64 / n as f64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_close() {
+        let mut h = Histogram::latency();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1ms .. 1s uniform
+        }
+        let p50 = h.p50();
+        assert!((0.45..0.62).contains(&p50), "p50 {p50}");
+        let p99 = h.p99();
+        assert!((0.9..1.2).contains(&p99), "p99 {p99}");
+    }
+
+    #[test]
+    fn histogram_spans_decades() {
+        let mut h = Histogram::latency();
+        h.record(15e-3); // oracle recovery
+        h.record(22.0); // recompute recovery
+        assert_eq!(h.count(), 2);
+        assert!(h.max() == 22.0);
+        assert!(h.quantile(0.4) < 0.1);
+    }
+
+    #[test]
+    fn cdf_exact() {
+        let mut c = Cdf::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            c.record(v);
+        }
+        assert_eq!(c.quantile(0.0), 1.0);
+        assert_eq!(c.quantile(1.0), 5.0);
+        assert_eq!(c.quantile(0.5), 3.0);
+        let pts = c.points();
+        assert_eq!(pts.len(), 5);
+        assert_eq!(pts[4], (5.0, 1.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! Serving metrics: TTFT / TBT recorders, streaming percentiles, CDFs, and
+//! throughput windows — the measurement vocabulary of the paper's §4.
+
+mod histogram;
+mod recorder;
+
+pub use histogram::{Cdf, Histogram};
+pub use recorder::{RequestMetrics, ServingMetrics, ThroughputWindow};

@@ -1,0 +1,220 @@
+//! Per-request and aggregate serving metrics.
+
+use std::collections::HashMap;
+
+
+use super::{Cdf, Histogram};
+use crate::{RequestId, SimTime};
+
+/// Timeline of one request, from which TTFT/TBT derive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestMetrics {
+    pub arrival: SimTime,
+    pub first_token: Option<SimTime>,
+    pub last_token: Option<SimTime>,
+    pub tokens_out: usize,
+    /// Largest gap between consecutive output tokens — the paper's SLO
+    /// metric for decode ("a request violates its decode SLO if any of its
+    /// TBTs exceed the threshold", §4.3.3).
+    pub max_tbt: f64,
+}
+
+impl RequestMetrics {
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+}
+
+/// Aggregate recorder for a serving run.
+#[derive(Debug, Clone)]
+pub struct ServingMetrics {
+    requests: HashMap<RequestId, RequestMetrics>,
+    pub ttft: Histogram,
+    pub tbt: Histogram,
+    /// Exact CDF of per-request max TBT (Fig 12).
+    pub max_tbt_cdf: Cdf,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    start: SimTime,
+    end: SimTime,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        ServingMetrics {
+            requests: HashMap::new(),
+            ttft: Histogram::latency(),
+            tbt: Histogram::latency(),
+            max_tbt_cdf: Cdf::new(),
+            input_tokens: 0,
+            output_tokens: 0,
+            start: f64::INFINITY,
+            end: 0.0,
+        }
+    }
+
+    pub fn on_arrival(&mut self, id: RequestId, at: SimTime) {
+        self.requests.insert(
+            id,
+            RequestMetrics {
+                arrival: at,
+                first_token: None,
+                last_token: None,
+                tokens_out: 0,
+                max_tbt: 0.0,
+            },
+        );
+        self.start = self.start.min(at);
+    }
+
+    /// `n_input` prefill tokens processed for `id` (throughput accounting).
+    pub fn on_prefill_tokens(&mut self, n_input: usize) {
+        self.input_tokens += n_input as u64;
+    }
+
+    /// One output token emitted for `id` at `at`.
+    pub fn on_token(&mut self, id: RequestId, at: SimTime) {
+        self.end = self.end.max(at);
+        self.output_tokens += 1;
+        let Some(r) = self.requests.get_mut(&id) else { return };
+        match r.last_token {
+            None => {
+                r.first_token = Some(at);
+                self.ttft.record(at - r.arrival);
+            }
+            Some(prev) => {
+                let tbt = at - prev;
+                self.tbt.record(tbt);
+                if tbt > r.max_tbt {
+                    r.max_tbt = tbt;
+                }
+            }
+        }
+        r.last_token = Some(at);
+        r.tokens_out += 1;
+    }
+
+    /// Request finished: fold its max TBT into the CDF.
+    pub fn on_finish(&mut self, id: RequestId) {
+        if let Some(r) = self.requests.get(&id) {
+            if r.tokens_out > 1 {
+                self.max_tbt_cdf.record(r.max_tbt);
+            }
+        }
+    }
+
+    pub fn request(&self, id: RequestId) -> Option<&RequestMetrics> {
+        self.requests.get(&id)
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        (self.end - self.start).max(0.0)
+    }
+
+    /// Generated-token throughput (decode tokens/s) over the run.
+    pub fn output_throughput(&self) -> f64 {
+        if self.elapsed() == 0.0 {
+            0.0
+        } else {
+            self.output_tokens as f64 / self.elapsed()
+        }
+    }
+
+    /// Input-token throughput (prefill tokens/s) over the run.
+    pub fn input_throughput(&self) -> f64 {
+        if self.elapsed() == 0.0 {
+            0.0
+        } else {
+            self.input_tokens as f64 / self.elapsed()
+        }
+    }
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Sliding-window throughput series for "real-time throughput" plots (Fig 8).
+#[derive(Debug, Clone)]
+pub struct ThroughputWindow {
+    window: f64,
+    /// (window_end_time, tokens_in_window)
+    buckets: Vec<(SimTime, u64)>,
+}
+
+impl ThroughputWindow {
+    pub fn new(window: f64) -> Self {
+        ThroughputWindow { window, buckets: Vec::new() }
+    }
+
+    pub fn record(&mut self, at: SimTime, tokens: u64) {
+        let end = (at / self.window).floor() * self.window + self.window;
+        match self.buckets.last_mut() {
+            Some((e, t)) if *e == end => *t += tokens,
+            _ => self.buckets.push((end, tokens)),
+        }
+    }
+
+    /// `(time, tokens_per_second)` series.
+    pub fn series(&self) -> Vec<(SimTime, f64)> {
+        self.buckets.iter().map(|&(e, t)| (e, t as f64 / self.window)).collect()
+    }
+
+    /// Average throughput over the whole run (the dashed line in Fig 8).
+    pub fn average(&self) -> f64 {
+        if self.buckets.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.buckets.iter().map(|&(_, t)| t).sum();
+        let span = self.buckets.last().unwrap().0 - (self.buckets.first().unwrap().0 - self.window);
+        total as f64 / span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_and_tbt_tracked() {
+        let mut m = ServingMetrics::new();
+        m.on_arrival(1, 0.0);
+        m.on_token(1, 2.0); // TTFT 2s
+        m.on_token(1, 2.1);
+        m.on_token(1, 12.1); // stall: max TBT 10s
+        m.on_finish(1);
+        let r = m.request(1).unwrap();
+        assert_eq!(r.ttft(), Some(2.0));
+        assert!((r.max_tbt - 10.0).abs() < 1e-9);
+        assert_eq!(m.output_tokens, 3);
+    }
+
+    #[test]
+    fn throughput_window_series() {
+        let mut w = ThroughputWindow::new(10.0);
+        w.record(1.0, 100);
+        w.record(5.0, 100);
+        w.record(15.0, 300);
+        let s = w.series();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0], (10.0, 20.0));
+        assert_eq!(s[1], (20.0, 30.0));
+        assert!((w.average() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn output_throughput() {
+        let mut m = ServingMetrics::new();
+        m.on_arrival(1, 0.0);
+        for i in 1..=100 {
+            m.on_token(1, i as f64 * 0.1);
+        }
+        assert!((m.output_throughput() - 10.0).abs() < 0.2);
+    }
+}

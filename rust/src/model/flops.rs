@@ -1,0 +1,131 @@
+//! FLOP accounting for prefill and decode steps.
+//!
+//! These formulas drive the performance simulator's step-time model. They
+//! count multiply-accumulates as 2 FLOPs (the convention of every roofline
+//! analysis the paper's comparisons rely on).
+
+use super::ModelSpec;
+
+/// Attention FLOPs for a (chunk, context) pair, per layer, split by
+/// head-granular unit so non-uniform shards can be costed per rank.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttnFlops {
+    /// QKV + output projection FLOPs per KV-head group (GQA group), per layer.
+    pub proj_per_head_group: f64,
+    /// Score/softmax/value FLOPs per KV-head group, per layer
+    /// (depends on chunk and context lengths).
+    pub sdpa_per_head_group: f64,
+}
+
+impl AttnFlops {
+    /// Total per head group.
+    pub fn per_head_group(&self) -> f64 {
+        self.proj_per_head_group + self.sdpa_per_head_group
+    }
+}
+
+/// FFN FLOPs per layer, per intermediate column, so column-sharded
+/// non-uniform partitions can be costed per rank.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FfnFlops {
+    /// FLOPs per intermediate column per layer (gate+up+down), for the
+    /// tokens in this step.
+    pub per_col: f64,
+    /// Number of *active* expert-columns per token (d_ff × experts_per_token).
+    pub active_cols: f64,
+}
+
+/// FLOPs for one engine step (a prefill chunk batch or a decode batch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepFlops {
+    pub attn: AttnFlops,
+    pub ffn: FfnFlops,
+}
+
+impl ModelSpec {
+    /// Attention FLOPs per layer for processing `chunk` new tokens of a
+    /// request that already has `context` tokens cached.
+    ///
+    /// Prefill attention cost over a chunk of size N after L cached tokens is
+    /// O(N² + N·L) — the quadratic term the adaptive chunked prefill
+    /// scheduler (Algorithm 1) balances.
+    pub fn attn_flops(&self, chunk: usize, context: usize) -> AttnFlops {
+        let n = chunk as f64;
+        let l = context as f64;
+        let d = self.d_model as f64;
+        let hd = self.head_dim as f64;
+        let g = self.gqa_group() as f64; // q heads per kv head
+
+        // Projections per kv-head group: Wq (g q-heads) + Wk + Wv + Wo rows.
+        let proj_cols = (g + 2.0) * hd; // q cols + k + v
+        let proj = 2.0 * n * d * proj_cols + 2.0 * n * (g * hd) * d; // + Wo
+        // SDPA: for each q head in group: scores n×(l+n̄) + AV. Causal chunk:
+        // effective keys per query ≈ l + (n+1)/2.
+        let keys = l + (n + 1.0) / 2.0;
+        let sdpa = g * (2.0 * n * keys * hd) * 2.0; // QK^T and AV
+
+        AttnFlops { proj_per_head_group: proj, sdpa_per_head_group: sdpa }
+    }
+
+    /// FFN FLOPs per layer for `tokens` tokens in a step.
+    pub fn ffn_flops(&self, tokens: usize) -> FfnFlops {
+        let t = tokens as f64;
+        let d = self.d_model as f64;
+        // gate + up + down: 3 matvecs of d per column, 2 FLOPs per MAC.
+        let per_col = 2.0 * t * 3.0 * d;
+        let active_cols = (self.d_ff * self.experts_per_token) as f64;
+        FfnFlops { per_col, active_cols }
+    }
+
+    /// Total model FLOPs for a full prefill of `seq` tokens (all layers,
+    /// all heads/columns) — used by the recompute-recovery cost model.
+    pub fn prefill_total_flops(&self, seq: usize) -> f64 {
+        let a = self.attn_flops(seq, 0);
+        let f = self.ffn_flops(seq);
+        self.n_layers as f64
+            * (a.per_head_group() * self.n_kv_heads as f64 + f.per_col * f.active_cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets::*;
+
+    #[test]
+    fn prefill_flops_scale_superlinearly() {
+        let m = llama3_70b();
+        let f1 = m.prefill_total_flops(1024);
+        let f2 = m.prefill_total_flops(2048);
+        assert!(f2 > 2.0 * f1, "prefill must be superlinear (attention quadratic)");
+        assert!(f2 < 4.0 * f1);
+    }
+
+    #[test]
+    fn llama70b_decode_flops_near_2x_params() {
+        // Decode of 1 token with short context ≈ 2 × params FLOPs.
+        let m = llama3_70b();
+        let a = m.attn_flops(1, 0);
+        let f = m.ffn_flops(1);
+        let total = m.n_layers as f64
+            * (a.per_head_group() * m.n_kv_heads as f64 + f.per_col * f.active_cols);
+        let two_p = 2.0 * m.param_count() as f64;
+        let ratio = total / two_p;
+        assert!((0.8..1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn moe_ffn_uses_active_experts_only() {
+        let m = mixtral_8x22b();
+        let f = m.ffn_flops(1);
+        assert_eq!(f.active_cols as usize, m.d_ff * 2);
+    }
+
+    #[test]
+    fn attn_context_term_linear() {
+        let m = llama3_70b();
+        let short = m.attn_flops(1, 1000).sdpa_per_head_group;
+        let long = m.attn_flops(1, 2000).sdpa_per_head_group;
+        assert!((long / short - 2.0).abs() < 0.01);
+    }
+}

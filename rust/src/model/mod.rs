@@ -1,0 +1,14 @@
+//! Model architecture math: parameter/byte accounting, FLOP counts, and
+//! per-tensor shard slicing for non-uniform tensor parallelism.
+//!
+//! Everything downstream (the sharding planner, the KV cache accountant,
+//! the performance simulator, the recovery latency model) is driven by the
+//! numbers computed here, so this module is deliberately exact about shapes.
+
+mod flops;
+mod presets;
+mod spec;
+
+pub use flops::{AttnFlops, FfnFlops, StepFlops};
+pub use presets::{llama3_70b, mixtral_8x22b, small_real};
+pub use spec::{ModelSpec, TensorKind, TensorShape};

@@ -1,0 +1,66 @@
+//! Architecture presets for the models evaluated in the paper, plus the
+//! small real model actually served by the engine on CPU.
+
+use super::ModelSpec;
+
+/// LLaMA-3.1-70B-Instruct — the paper's dense model (§4).
+///
+/// 80 layers, d=8192, 64 query heads / 8 KV heads (GQA), head dim 128,
+/// FFN 28672, vocab 128256, bf16.
+pub fn llama3_70b() -> ModelSpec {
+    ModelSpec {
+        name: "llama-3.1-70b".into(),
+        n_layers: 80,
+        d_model: 8192,
+        n_q_heads: 64,
+        n_kv_heads: 8,
+        head_dim: 128,
+        d_ff: 28672,
+        n_experts: 1,
+        experts_per_token: 1,
+        vocab: 128_256,
+        dtype_bytes: 2,
+    }
+}
+
+/// Mixtral-8x22B-Instruct-v0.1 — the paper's MoE model (§4).
+///
+/// 56 layers, d=6144, 48 query heads / 8 KV heads, head dim 128,
+/// 8 experts × FFN 16384, top-2 routing, vocab 32768, bf16.
+pub fn mixtral_8x22b() -> ModelSpec {
+    ModelSpec {
+        name: "mixtral-8x22b".into(),
+        n_layers: 56,
+        d_model: 6144,
+        n_q_heads: 48,
+        n_kv_heads: 8,
+        head_dim: 128,
+        d_ff: 16384,
+        n_experts: 8,
+        experts_per_token: 2,
+        vocab: 32_768,
+        dtype_bytes: 2,
+    }
+}
+
+/// The small llama-style model that the *real* engine serves on CPU-PJRT.
+///
+/// Mirrors the property that matters for FailSafe — **8 KV heads**, the same
+/// count as both paper models, so the non-uniform head-assignment math is
+/// exercised with identical arithmetic (e.g. TP7 → 1 TP head + 1 DP head).
+/// Weights are f32 because the CPU plugin path computes in f32.
+pub fn small_real() -> ModelSpec {
+    ModelSpec {
+        name: "small-real".into(),
+        n_layers: 4,
+        d_model: 256,
+        n_q_heads: 8,
+        n_kv_heads: 8,
+        head_dim: 32,
+        d_ff: 1024,
+        n_experts: 1,
+        experts_per_token: 1,
+        vocab: 512,
+        dtype_bytes: 4,
+    }
+}

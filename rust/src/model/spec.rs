@@ -1,0 +1,221 @@
+//! [`ModelSpec`]: the single source of truth for a model's architecture.
+
+
+/// Architecture description of a llama-style (optionally MoE) transformer.
+///
+/// All byte/FLOP accounting in FailSafe derives from this struct, so the
+/// sharding planner, the KV accountant, and the recovery latency model can
+/// never disagree about sizes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Human-readable name, e.g. `"llama-3.1-70b"`.
+    pub name: String,
+    /// Number of transformer layers.
+    pub n_layers: usize,
+    /// Hidden (embedding) dimension.
+    pub d_model: usize,
+    /// Number of query heads per layer.
+    pub n_q_heads: usize,
+    /// Number of key/value heads per layer (GQA groups; == `n_q_heads` for MHA).
+    pub n_kv_heads: usize,
+    /// Per-head dimension (`d_model / n_q_heads` for standard llama).
+    pub head_dim: usize,
+    /// FFN intermediate dimension (per expert for MoE).
+    pub d_ff: usize,
+    /// Number of FFN experts (1 for dense models).
+    pub n_experts: usize,
+    /// Experts activated per token (1 for dense models).
+    pub experts_per_token: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Bytes per parameter / activation element (2 for bf16).
+    pub dtype_bytes: usize,
+}
+
+/// The distinct weight tensors of one transformer layer (plus embeddings),
+/// used to enumerate shard contents and recovery byte ranges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorKind {
+    /// Token embedding table `[vocab, d_model]` (replicated).
+    Embedding,
+    /// Attention input RMSNorm gain `[d_model]` (replicated).
+    AttnNorm,
+    /// Query projection `[d_model, n_q_heads * head_dim]` (head-sharded).
+    Wq,
+    /// Key projection `[d_model, n_kv_heads * head_dim]` (head-sharded).
+    Wk,
+    /// Value projection `[d_model, n_kv_heads * head_dim]` (head-sharded).
+    Wv,
+    /// Output projection `[n_q_heads * head_dim, d_model]` (head-sharded on rows).
+    Wo,
+    /// FFN input RMSNorm gain `[d_model]` (replicated).
+    FfnNorm,
+    /// FFN gate projection `[d_model, d_ff]` (column-sharded).
+    WGate,
+    /// FFN up projection `[d_model, d_ff]` (column-sharded).
+    WUp,
+    /// FFN down projection `[d_ff, d_model]` (row-sharded, matching columns).
+    WDown,
+    /// Final RMSNorm gain `[d_model]` (replicated).
+    FinalNorm,
+    /// LM head `[d_model, vocab]` (replicated in this system).
+    LmHead,
+}
+
+/// Shape of a weight tensor, in elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TensorShape {
+    pub fn elems(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+impl ModelSpec {
+    /// Shape of a given tensor kind (unsharded, single expert for FFN).
+    pub fn tensor_shape(&self, kind: TensorKind) -> TensorShape {
+        let qd = self.n_q_heads * self.head_dim;
+        let kvd = self.n_kv_heads * self.head_dim;
+        match kind {
+            TensorKind::Embedding => TensorShape { rows: self.vocab, cols: self.d_model },
+            TensorKind::AttnNorm | TensorKind::FfnNorm | TensorKind::FinalNorm => {
+                TensorShape { rows: 1, cols: self.d_model }
+            }
+            TensorKind::Wq => TensorShape { rows: self.d_model, cols: qd },
+            TensorKind::Wk | TensorKind::Wv => TensorShape { rows: self.d_model, cols: kvd },
+            TensorKind::Wo => TensorShape { rows: qd, cols: self.d_model },
+            TensorKind::WGate | TensorKind::WUp => {
+                TensorShape { rows: self.d_model, cols: self.d_ff }
+            }
+            TensorKind::WDown => TensorShape { rows: self.d_ff, cols: self.d_model },
+            TensorKind::LmHead => TensorShape { rows: self.d_model, cols: self.vocab },
+        }
+    }
+
+    /// Query heads per KV head (GQA group size).
+    pub fn gqa_group(&self) -> usize {
+        debug_assert_eq!(self.n_q_heads % self.n_kv_heads, 0);
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// Total parameter count (all experts included).
+    pub fn param_count(&self) -> usize {
+        let per_layer_attn = self.tensor_shape(TensorKind::Wq).elems()
+            + 2 * self.tensor_shape(TensorKind::Wk).elems()
+            + self.tensor_shape(TensorKind::Wo).elems()
+            + self.d_model; // attn norm
+        let per_layer_ffn = self.n_experts
+            * (2 * self.tensor_shape(TensorKind::WGate).elems()
+                + self.tensor_shape(TensorKind::WDown).elems())
+            + self.d_model; // ffn norm
+        self.n_layers * (per_layer_attn + per_layer_ffn)
+            + self.tensor_shape(TensorKind::Embedding).elems()
+            + self.tensor_shape(TensorKind::LmHead).elems()
+            + self.d_model // final norm
+    }
+
+    /// Total model weight bytes.
+    pub fn weight_bytes(&self) -> usize {
+        self.param_count() * self.dtype_bytes
+    }
+
+    /// Attention weight bytes **per KV-head group per layer**: the unit of
+    /// head-granular sharding. Includes the q-heads of the GQA group and the
+    /// matching `Wo` rows.
+    pub fn head_group_weight_bytes(&self) -> usize {
+        let q_cols = self.gqa_group() * self.head_dim; // q heads in this group
+        let kv_cols = self.head_dim;
+        let wq = self.d_model * q_cols;
+        let wk = self.d_model * kv_cols;
+        let wv = self.d_model * kv_cols;
+        let wo = q_cols * self.d_model;
+        (wq + wk + wv + wo) * self.dtype_bytes
+    }
+
+    /// FFN weight bytes per intermediate column, per layer (all experts the
+    /// column appears in — i.e. one expert's column).
+    pub fn ffn_col_weight_bytes(&self) -> usize {
+        // gate + up: one column of [d_model, d_ff]; down: one row of [d_ff, d_model]
+        3 * self.d_model * self.dtype_bytes
+    }
+
+    /// FFN weight bytes per layer (all experts).
+    pub fn ffn_layer_weight_bytes(&self) -> usize {
+        self.n_experts * self.d_ff * self.ffn_col_weight_bytes()
+    }
+
+    /// Attention weight bytes per layer (all head groups).
+    pub fn attn_layer_weight_bytes(&self) -> usize {
+        self.n_kv_heads * self.head_group_weight_bytes()
+    }
+
+    /// Replicated (unshardable) weight bytes: embeddings, norms, LM head.
+    pub fn replicated_weight_bytes(&self) -> usize {
+        (self.tensor_shape(TensorKind::Embedding).elems()
+            + self.tensor_shape(TensorKind::LmHead).elems()
+            + self.d_model * (2 * self.n_layers + 1))
+            * self.dtype_bytes
+    }
+
+    /// KV cache bytes per token per KV head **for one layer**.
+    pub fn kv_bytes_per_token_per_head_layer(&self) -> usize {
+        2 * self.head_dim * self.dtype_bytes // K and V
+    }
+
+    /// KV cache bytes per token across all layers and KV heads.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * self.n_kv_heads * self.kv_bytes_per_token_per_head_layer()
+    }
+
+    /// Whether this is a mixture-of-experts model.
+    pub fn is_moe(&self) -> bool {
+        self.n_experts > 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets::*;
+
+    #[test]
+    fn llama70b_param_count_close_to_70b() {
+        let m = llama3_70b();
+        let p = m.param_count() as f64;
+        assert!((6.5e10..7.5e10).contains(&p), "param count {p:.3e} not ~70B");
+    }
+
+    #[test]
+    fn mixtral_param_count_close_to_141b() {
+        let m = mixtral_8x22b();
+        let p = m.param_count() as f64;
+        assert!((1.3e11..1.5e11).contains(&p), "param count {p:.3e} not ~141B");
+    }
+
+    #[test]
+    fn llama70b_kv_bytes_per_token() {
+        let m = llama3_70b();
+        // 80 layers * 8 kv heads * 2 (K,V) * 128 dim * 2 bytes = 327,680 B/token
+        assert_eq!(m.kv_bytes_per_token(), 80 * 8 * 2 * 128 * 2);
+    }
+
+    #[test]
+    fn shard_units_sum_to_total() {
+        for m in [llama3_70b(), mixtral_8x22b(), small_real()] {
+            let sharded = m.n_layers * (m.attn_layer_weight_bytes() + m.ffn_layer_weight_bytes());
+            let total = sharded + m.replicated_weight_bytes();
+            assert_eq!(total, m.weight_bytes(), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn gqa_group_divides() {
+        assert_eq!(llama3_70b().gqa_group(), 8);
+        assert_eq!(mixtral_8x22b().gqa_group(), 6);
+        assert_eq!(small_real().gqa_group(), 1);
+    }
+}

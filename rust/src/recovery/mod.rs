@@ -1,0 +1,18 @@
+//! Lightning Recovery (§3.2): proactive KVCache backup + on-demand weight
+//! recovery, and the latency model comparing it against conventional
+//! fault handling (paper Table 3 / Fig 12).
+//!
+//! Four recovery methods are modeled, matching §4.3.3 exactly:
+//!
+//! | method      | lost KVCache            | model weights              |
+//! |-------------|-------------------------|----------------------------|
+//! | `Recompute` | re-prefill from scratch | full re-shard reload (PCIe)|
+//! | `Host`      | restore from host DRAM  | full re-shard reload (PCIe)|
+//! | `Full`      | restore from host DRAM  | on-demand, non-redundant   |
+//! | `Oracle`    | metadata only (free)    | metadata only (free)       |
+
+mod daemon;
+mod latency;
+
+pub use daemon::BackupDaemon;
+pub use latency::{plan_recovery, RecoveryInput, RecoveryMethod, RecoveryOutcome};

@@ -1,0 +1,144 @@
+//! Session-affinity wrapper around the DP router.
+//!
+//! Multi-turn conversations (the Mooncake workload) reuse their KV prefix
+//! across turns; with hybrid attention the DP-head KV of a session lives
+//! on its home rank, so re-routing a follow-up turn elsewhere would force
+//! a prefix transfer. The affinity router pins sessions to their first
+//! home but *breaks* the pin when the target rank's load exceeds the
+//! fleet minimum by more than `spill_threshold` token-units — bounding the
+//! imbalance a sticky session can cause (re-pinning after reconfiguration,
+//! when the old home may be gone).
+
+use std::collections::HashMap;
+
+use super::{DpRouter, RoutePolicy};
+use crate::RankId;
+
+/// Opaque session identifier (e.g. a conversation id).
+pub type SessionId = u64;
+
+/// Sticky routing with load-bounded spill.
+#[derive(Debug, Clone)]
+pub struct AffinityRouter {
+    inner: DpRouter,
+    pins: HashMap<SessionId, RankId>,
+    /// Re-route a pinned session if its rank's pending load exceeds the
+    /// fleet minimum by more than this many token-units.
+    pub spill_threshold: f64,
+    /// Pins broken by load spill (telemetry).
+    pub spills: u64,
+}
+
+impl AffinityRouter {
+    pub fn new(policy: RoutePolicy, world: usize) -> Self {
+        AffinityRouter {
+            inner: DpRouter::new(policy, world),
+            pins: HashMap::new(),
+            spill_threshold: 5_000.0,
+            spills: 0,
+        }
+    }
+
+    pub fn inner(&self) -> &DpRouter {
+        &self.inner
+    }
+
+    /// Route one turn of `session` with estimated `work_tokens`.
+    pub fn route(&mut self, session: SessionId, work_tokens: f64) -> RankId {
+        if let Some(&pinned) = self.pins.get(&session) {
+            let t = self.inner.tracker();
+            let min = (0..t.world()).map(|r| t.pending(r)).fold(f64::MAX, f64::min);
+            if t.pending(pinned) - min <= self.spill_threshold {
+                self.inner.add_load(pinned, work_tokens);
+                return pinned;
+            }
+            self.spills += 1; // overloaded home: fall through and re-pin
+        }
+        let rank = self.inner.route(work_tokens);
+        self.pins.insert(session, rank);
+        rank
+    }
+
+    /// Report completed work on `rank`.
+    pub fn complete(&mut self, rank: RankId, work_tokens: f64) {
+        self.inner.complete(rank, work_tokens);
+    }
+
+    /// Session ended: drop the pin.
+    pub fn release(&mut self, session: SessionId) {
+        self.pins.remove(&session);
+    }
+
+    /// Rebuild after a reconfiguration: surviving pins are renumbered,
+    /// pins to the failed rank are dropped (their next turn re-routes).
+    pub fn remap(&self, survivor_map: &[Option<RankId>], new_world: usize) -> AffinityRouter {
+        let pins = self
+            .pins
+            .iter()
+            .filter_map(|(&s, &r)| survivor_map.get(r).copied().flatten().map(|nr| (s, nr)))
+            .collect();
+        AffinityRouter {
+            inner: self.inner.remap(survivor_map, new_world),
+            pins,
+            spill_threshold: self.spill_threshold,
+            spills: self.spills,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sessions_stick_to_their_home() {
+        let mut r = AffinityRouter::new(RoutePolicy::LeastLoaded, 4);
+        let home = r.route(1, 100.0);
+        for _ in 0..5 {
+            assert_eq!(r.route(1, 10.0), home);
+        }
+        // A different session lands elsewhere (least loaded).
+        assert_ne!(r.route(2, 10.0), home);
+    }
+
+    #[test]
+    fn overload_breaks_the_pin() {
+        let mut r = AffinityRouter::new(RoutePolicy::LeastLoaded, 2);
+        let home = r.route(1, 10.0);
+        // Pile unrelated load on the home rank far beyond the spill bound.
+        r.inner.add_load(home, 10_000.0);
+        let next = r.route(1, 10.0);
+        assert_ne!(next, home, "pin must spill under overload");
+        assert_eq!(r.spills, 1);
+        // ...and the session is re-pinned to the new home.
+        assert_eq!(r.route(1, 10.0), next);
+    }
+
+    #[test]
+    fn remap_drops_failed_home_pins() {
+        let mut r = AffinityRouter::new(RoutePolicy::LeastLoaded, 3);
+        // Pin three sessions to distinct ranks.
+        let h0 = r.route(10, 5.0);
+        let h1 = r.route(11, 5.0);
+        let h2 = r.route(12, 5.0);
+        assert_eq!({ let mut v = vec![h0, h1, h2]; v.sort_unstable(); v }, vec![0, 1, 2]);
+        // Rank 1 fails.
+        let map = vec![Some(0), None, Some(1)];
+        let mut r2 = r.remap(&map, 2);
+        // The session homed on old rank 1 re-routes; others keep (renumbered) pins.
+        let s_failed = [10u64, 11, 12][[h0, h1, h2].iter().position(|&h| h == 1).unwrap()];
+        let s_kept = [10u64, 11, 12][[h0, h1, h2].iter().position(|&h| h == 0).unwrap()];
+        assert_eq!(r2.route(s_kept, 1.0), 0);
+        let re = r2.route(s_failed, 1.0);
+        assert!(re < 2);
+    }
+
+    #[test]
+    fn release_forgets_session() {
+        let mut r = AffinityRouter::new(RoutePolicy::RoundRobin, 3);
+        let h = r.route(1, 1.0);
+        r.release(1);
+        // Round-robin has advanced, so a re-route lands on the next rank.
+        assert_ne!(r.route(1, 1.0), h);
+    }
+}

@@ -1,0 +1,110 @@
+//! Per-rank workload estimation in token units.
+
+
+use crate::RankId;
+
+/// Tracks the estimated pending DP computation queued on each rank.
+///
+/// "Workload" is counted in *token units*: prefill tokens count with their
+/// context multiplier (attention over a long prefix costs more per token),
+/// decode tokens count 1. The estimate deliberately mirrors what the
+/// scheduler's `cost()` uses so routing and batch forming agree.
+#[derive(Debug, Clone)]
+pub struct LoadTracker {
+    pending: Vec<f64>,
+}
+
+impl LoadTracker {
+    pub fn new(world: usize) -> Self {
+        LoadTracker { pending: vec![0.0; world] }
+    }
+
+    pub fn world(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Queue `tokens` units of work on `rank`.
+    pub fn add(&mut self, rank: RankId, tokens: f64) {
+        self.pending[rank] += tokens;
+    }
+
+    /// Retire `tokens` units of completed work from `rank`.
+    pub fn complete(&mut self, rank: RankId, tokens: f64) {
+        self.pending[rank] = (self.pending[rank] - tokens).max(0.0);
+    }
+
+    pub fn pending(&self, rank: RankId) -> f64 {
+        self.pending[rank]
+    }
+
+    pub fn pending_all(&self) -> &[f64] {
+        &self.pending
+    }
+
+    /// Rank with the smallest pending workload (ties → lowest id).
+    pub fn least_loaded(&self) -> RankId {
+        self.pending
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+            .map(|(r, _)| r)
+            .unwrap_or(0)
+    }
+
+    /// Max/mean pending ratio (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.pending.iter().sum::<f64>() / self.pending.len() as f64;
+        if mean == 0.0 {
+            return 1.0;
+        }
+        self.pending.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    /// Rebuild for a new world size after reconfiguration, remapping
+    /// surviving ranks' pending work and dropping the failed rank's (its
+    /// requests get re-routed by the coordinator).
+    pub fn remap(&self, survivor_map: &[Option<RankId>], new_world: usize) -> LoadTracker {
+        let mut pending = vec![0.0; new_world];
+        for (old, &p) in self.pending.iter().enumerate() {
+            if let Some(new_r) = survivor_map.get(old).copied().flatten() {
+                pending[new_r] += p;
+            }
+        }
+        LoadTracker { pending }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_and_ties() {
+        let mut t = LoadTracker::new(3);
+        assert_eq!(t.least_loaded(), 0);
+        t.add(0, 10.0);
+        t.add(1, 5.0);
+        assert_eq!(t.least_loaded(), 2);
+        t.add(2, 5.0);
+        assert_eq!(t.least_loaded(), 1);
+    }
+
+    #[test]
+    fn complete_floors_at_zero() {
+        let mut t = LoadTracker::new(2);
+        t.add(0, 3.0);
+        t.complete(0, 5.0);
+        assert_eq!(t.pending(0), 0.0);
+    }
+
+    #[test]
+    fn remap_drops_failed_rank_load() {
+        let mut t = LoadTracker::new(3);
+        t.add(0, 1.0);
+        t.add(1, 2.0);
+        t.add(2, 3.0);
+        let map = vec![Some(0), None, Some(1)];
+        let r = t.remap(&map, 2);
+        assert_eq!(r.pending_all(), &[1.0, 3.0]);
+    }
+}

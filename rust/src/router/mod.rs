@@ -1,0 +1,16 @@
+//! Fine-grained load-aware DP-rank routing (§3.1).
+//!
+//! With hybrid attention, each request has a *home* DP rank that computes
+//! the replicated heads for it (and stores their KV). Picking homes is an
+//! online makespan-minimization problem; FailSafe uses the classical greedy
+//! rule — route each arrival to the rank with the least estimated pending
+//! work (in token units) — which continuously adapts to skewed request
+//! lengths. The round-robin router is the baseline of Fig 3.
+
+mod affinity;
+mod load;
+mod policy;
+
+pub use affinity::{AffinityRouter, SessionId};
+pub use load::LoadTracker;
+pub use policy::{DpRouter, RoutePolicy};

@@ -1,0 +1,109 @@
+//! Routing policies over the load tracker.
+
+
+use super::LoadTracker;
+use crate::RankId;
+
+/// How arrivals are assigned a home DP rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through ranks regardless of load — the Fig 3 baseline.
+    RoundRobin,
+    /// Greedy online-makespan rule: route to the rank with least pending
+    /// work (§3.1 Load-Aware DP-Rank Routing).
+    LeastLoaded,
+}
+
+/// The DP-rank router: assigns each incoming request a home rank and books
+/// its estimated work against that rank.
+#[derive(Debug, Clone)]
+pub struct DpRouter {
+    pub policy: RoutePolicy,
+    tracker: LoadTracker,
+    rr_next: RankId,
+}
+
+impl DpRouter {
+    pub fn new(policy: RoutePolicy, world: usize) -> Self {
+        DpRouter { policy, tracker: LoadTracker::new(world), rr_next: 0 }
+    }
+
+    pub fn world(&self) -> usize {
+        self.tracker.world()
+    }
+
+    pub fn tracker(&self) -> &LoadTracker {
+        &self.tracker
+    }
+
+    /// Route a request with estimated `work_tokens` of DP computation.
+    /// Returns the chosen home rank and books the work.
+    pub fn route(&mut self, work_tokens: f64) -> RankId {
+        let rank = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.tracker.world();
+                r
+            }
+            RoutePolicy::LeastLoaded => self.tracker.least_loaded(),
+        };
+        self.tracker.add(rank, work_tokens);
+        rank
+    }
+
+    /// Report completed work (scheduler/engine callback).
+    pub fn complete(&mut self, rank: RankId, work_tokens: f64) {
+        self.tracker.complete(rank, work_tokens);
+    }
+
+    /// Extra queued work the router should know about (e.g. decode carry).
+    pub fn add_load(&mut self, rank: RankId, work_tokens: f64) {
+        self.tracker.add(rank, work_tokens);
+    }
+
+    /// Rebuild after reconfiguration.
+    pub fn remap(&self, survivor_map: &[Option<RankId>], new_world: usize) -> DpRouter {
+        DpRouter {
+            policy: self.policy,
+            tracker: self.tracker.remap(survivor_map, new_world),
+            rr_next: self.rr_next % new_world.max(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The classic adversarial case for round-robin: alternating long/short
+    /// requests pile all long ones on the same ranks; least-loaded spreads
+    /// them (Fig 3's skew scenario).
+    #[test]
+    fn least_loaded_beats_round_robin_on_skew() {
+        let mut rr = DpRouter::new(RoutePolicy::RoundRobin, 4);
+        let mut ll = DpRouter::new(RoutePolicy::LeastLoaded, 4);
+        for i in 0..64 {
+            let work = if i % 4 == 0 { 1000.0 } else { 10.0 };
+            rr.route(work);
+            ll.route(work);
+        }
+        assert!(rr.tracker().imbalance() > 2.0, "rr imbalance {}", rr.tracker().imbalance());
+        assert!(ll.tracker().imbalance() < 1.2, "ll imbalance {}", ll.tracker().imbalance());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = DpRouter::new(RoutePolicy::RoundRobin, 3);
+        let homes: Vec<RankId> = (0..6).map(|_| r.route(1.0)).collect();
+        assert_eq!(homes, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn completion_rebalances() {
+        let mut r = DpRouter::new(RoutePolicy::LeastLoaded, 2);
+        r.route(100.0); // → rank 0
+        assert_eq!(r.route(1.0), 1);
+        r.complete(0, 100.0);
+        assert_eq!(r.route(1.0), 0);
+    }
+}

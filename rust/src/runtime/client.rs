@@ -1,0 +1,108 @@
+//! PJRT CPU client wrapper with an executable cache.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::manifest::HloVariant;
+use super::weights::HostTensor;
+
+/// PJRT client + compiled-executable cache keyed by variant name.
+///
+/// Executables compile lazily on first use (compilation is the expensive
+/// part; execution reuses the cache on every subsequent step). The CPU
+/// client is single-process; "ranks" are logical — the physical
+/// distribution the paper runs on is modeled by [`crate::cluster`].
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of distinct executables compiled so far.
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Get (compiling if needed) the executable for `variant`.
+    pub fn executable(&self, variant: &HloVariant) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&variant.name) {
+            return Ok(e.clone());
+        }
+        let path = variant
+            .path
+            .to_str()
+            .context("non-utf8 artifact path")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", variant.name))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(variant.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a variant with the given literals; returns the un-tupled
+    /// output literals (aot.py lowers with `return_tuple=True`).
+    /// Accepts owned or borrowed literals (`&[Literal]` or `&[&Literal]`).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        variant: &HloVariant,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(variant)?;
+        let result = exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", variant.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", variant.name))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untupling {}: {e:?}", variant.name))
+    }
+}
+
+/// Build an f32 literal of the given shape from host data.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} vs len {}", data.len());
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+/// Build an i32 literal.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len());
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+/// Literal for a [`HostTensor`] as `[rows, cols]` (or `[cols]` if 1-row).
+pub fn literal_tensor(t: &HostTensor) -> Result<xla::Literal> {
+    if t.rows == 1 {
+        literal_f32(&t.data, &[t.cols as i64])
+    } else {
+        literal_f32(&t.data, &[t.rows as i64, t.cols as i64])
+    }
+}
+
+/// Extract an f32 vec from a literal.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))
+}

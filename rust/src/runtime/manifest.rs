@@ -1,0 +1,196 @@
+//! Parser for the line-oriented artifact manifest (`manifest.txt`).
+//!
+//! Format (written by `python/compile/aot.py`):
+//! ```text
+//! model d_model=256 n_heads=8 head_dim=32 d_ff=1024 n_layers=4 vocab=512
+//! hlo attn_b1_s16_c0_h2 kind=attn b=1 s=16 c=0 h=2 path=hlo/attn_b1_s16_c0_h2.hlo.txt
+//! weight wq.0 rows=256 cols=256 path=weights/wq.0.bin
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Small-real model metadata from the manifest header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelMeta {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+}
+
+/// One compiled HLO variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HloVariant {
+    pub name: String,
+    /// `embed` | `head` | `attn` | `ffn`.
+    pub kind: String,
+    pub b: usize,
+    pub s: usize,
+    /// Cached-context bucket (attn only).
+    pub c: usize,
+    /// Local-head bucket (attn only).
+    pub h: usize,
+    /// Column bucket (ffn only).
+    pub cols: usize,
+    pub path: PathBuf,
+}
+
+/// One dumped weight tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WeightEntry {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub path: PathBuf,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub model: ModelMeta,
+    pub variants: Vec<HloVariant>,
+    pub weights: Vec<WeightEntry>,
+}
+
+fn kv_map(fields: &[&str]) -> HashMap<String, String> {
+    fields
+        .iter()
+        .filter_map(|f| f.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+fn get_usize(m: &HashMap<String, String>, k: &str) -> usize {
+    m.get(k).and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let mut model = None;
+        let mut variants = Vec::new();
+        let mut weights = Vec::new();
+
+        for line in text.lines() {
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            match fields.first() {
+                Some(&"model") => {
+                    let m = kv_map(&fields[1..]);
+                    model = Some(ModelMeta {
+                        d_model: get_usize(&m, "d_model"),
+                        n_heads: get_usize(&m, "n_heads"),
+                        head_dim: get_usize(&m, "head_dim"),
+                        d_ff: get_usize(&m, "d_ff"),
+                        n_layers: get_usize(&m, "n_layers"),
+                        vocab: get_usize(&m, "vocab"),
+                    });
+                }
+                Some(&"hlo") => {
+                    let name = fields.get(1).context("hlo line missing name")?.to_string();
+                    let m = kv_map(&fields[2..]);
+                    variants.push(HloVariant {
+                        name,
+                        kind: m.get("kind").cloned().unwrap_or_default(),
+                        b: get_usize(&m, "b"),
+                        s: get_usize(&m, "s"),
+                        c: get_usize(&m, "c"),
+                        h: get_usize(&m, "h"),
+                        cols: get_usize(&m, "cols"),
+                        path: root.join(m.get("path").context("hlo line missing path")?),
+                    });
+                }
+                Some(&"weight") => {
+                    let name = fields.get(1).context("weight line missing name")?.to_string();
+                    let m = kv_map(&fields[2..]);
+                    weights.push(WeightEntry {
+                        name,
+                        rows: get_usize(&m, "rows"),
+                        cols: get_usize(&m, "cols"),
+                        path: root.join(m.get("path").context("weight line missing path")?),
+                    });
+                }
+                _ => {}
+            }
+        }
+        let model = match model {
+            Some(m) => m,
+            None => bail!("manifest has no model line"),
+        };
+        Ok(Manifest { root, model, variants, weights })
+    }
+
+    /// Find the attn variant for exact bucket values.
+    pub fn attn_variant(&self, b: usize, s: usize, c: usize, h: usize) -> Option<&HloVariant> {
+        self.variants
+            .iter()
+            .find(|v| v.kind == "attn" && v.b == b && v.s == s && v.c == c && v.h == h)
+    }
+
+    pub fn ffn_variant(&self, b: usize, s: usize, cols: usize) -> Option<&HloVariant> {
+        self.variants
+            .iter()
+            .find(|v| v.kind == "ffn" && v.b == b && v.s == s && v.cols == cols)
+    }
+
+    pub fn simple_variant(&self, kind: &str, b: usize, s: usize) -> Option<&HloVariant> {
+        self.variants.iter().find(|v| v.kind == kind && v.b == b && v.s == s)
+    }
+
+    /// Available bucket lists (sorted, deduped) for the engine's padding.
+    pub fn buckets(&self, kind: &str, field: fn(&HloVariant) -> usize) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.variants.iter().filter(|x| x.kind == kind).map(field).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "model d_model=256 n_heads=8 head_dim=32 d_ff=1024 n_layers=4 vocab=512\n\
+             hlo attn_b1_s16_c0_h2 kind=attn b=1 s=16 c=0 h=2 path=hlo/a.hlo.txt\n\
+             hlo ffn_b1_s16_f256 kind=ffn b=1 s=16 cols=256 path=hlo/f.hlo.txt\n\
+             hlo embed_b1_s16 kind=embed b=1 s=16 path=hlo/e.hlo.txt\n\
+             weight wq.0 rows=256 cols=256 path=weights/wq.0.bin\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_all_line_kinds() {
+        let dir = std::env::temp_dir().join("failsafe_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.n_heads, 8);
+        assert_eq!(m.variants.len(), 3);
+        assert_eq!(m.weights.len(), 1);
+        assert!(m.attn_variant(1, 16, 0, 2).is_some());
+        assert!(m.attn_variant(1, 16, 0, 4).is_none());
+        assert!(m.ffn_variant(1, 16, 256).is_some());
+        assert!(m.simple_variant("embed", 1, 16).is_some());
+        assert_eq!(m.buckets("attn", |v| v.h), vec![2]);
+    }
+
+    #[test]
+    fn missing_dir_is_friendly_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

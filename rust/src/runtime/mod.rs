@@ -1,0 +1,20 @@
+//! The PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! and executes them from the serving hot path. Python never runs here —
+//! the rust binary is self-contained once `artifacts/` exists.
+//!
+//! * [`Manifest`] — parses `artifacts/manifest.txt` (variants + weights).
+//! * [`WeightStore`] — the **host DRAM** weight copy: the same store the
+//!   paper's on-demand weight recovery reads over PCIe. Provides the
+//!   head/column slicing + zero-padding that maps full tensors onto
+//!   non-uniform shard buckets.
+//! * [`RuntimeClient`] — PJRT CPU client with a compiled-executable cache
+//!   keyed by variant name; HLO **text** loading (xla_extension 0.5.1
+//!   rejects jax≥0.5 serialized protos).
+
+mod client;
+mod manifest;
+mod weights;
+
+pub use client::{literal_f32, literal_i32, literal_tensor, to_vec_f32, RuntimeClient};
+pub use manifest::{HloVariant, Manifest, ModelMeta, WeightEntry};
+pub use weights::{HostTensor, WeightStore};

@@ -1,0 +1,177 @@
+//! Host-DRAM weight store + shard slicing.
+//!
+//! This is the concrete realization of "model weights stored in CPU
+//! DRAM" from §3.2: the full f32 tensors live here; each rank's shard is
+//! *sliced out on demand* — head columns for attention, column blocks for
+//! FFN — and zero-padded up to the compiled bucket sizes. On-demand weight
+//! recovery reads exactly the byte ranges it needs from this store.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::Manifest;
+
+/// A full weight tensor in host memory (row-major f32).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+/// All model weights, loaded once from `artifacts/weights/*.bin`.
+#[derive(Debug)]
+pub struct WeightStore {
+    tensors: HashMap<String, HostTensor>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let mut tensors = HashMap::new();
+        for w in &manifest.weights {
+            let bytes = std::fs::read(&w.path)
+                .with_context(|| format!("reading weight {}", w.path.display()))?;
+            anyhow::ensure!(
+                bytes.len() == w.rows * w.cols * 4,
+                "weight {} size mismatch: {} bytes for {}x{}",
+                w.name,
+                bytes.len(),
+                w.rows,
+                w.cols
+            );
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(w.name.clone(), HostTensor { rows: w.rows, cols: w.cols, data });
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors.get(name).with_context(|| format!("missing weight tensor {name}"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(String::as_str)
+    }
+
+    /// Total bytes resident (the host copy the recovery path reads).
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.data.len() * 4).sum()
+    }
+
+    /// Slice columns `head*head_dim..(head+1)*head_dim` for each head in
+    /// `heads`, then zero-pad the head axis to `h_bucket` heads.
+    /// Input `[rows, n_heads*head_dim]` → output `[rows, h_bucket*head_dim]`.
+    pub fn slice_head_cols(
+        &self,
+        name: &str,
+        heads: &[usize],
+        head_dim: usize,
+        h_bucket: usize,
+    ) -> Result<HostTensor> {
+        let t = self.get(name)?;
+        anyhow::ensure!(heads.len() <= h_bucket, "{} heads > bucket {h_bucket}", heads.len());
+        let out_cols = h_bucket * head_dim;
+        let mut data = vec![0.0f32; t.rows * out_cols];
+        for r in 0..t.rows {
+            for (hi, &h) in heads.iter().enumerate() {
+                let src = r * t.cols + h * head_dim;
+                let dst = r * out_cols + hi * head_dim;
+                data[dst..dst + head_dim].copy_from_slice(&t.data[src..src + head_dim]);
+            }
+        }
+        Ok(HostTensor { rows: t.rows, cols: out_cols, data })
+    }
+
+    /// Slice rows (same head selection on the row axis, for `Wo`), padded
+    /// to `h_bucket*head_dim` rows of zeros.
+    pub fn slice_head_rows(
+        &self,
+        name: &str,
+        heads: &[usize],
+        head_dim: usize,
+        h_bucket: usize,
+    ) -> Result<HostTensor> {
+        let t = self.get(name)?;
+        let out_rows = h_bucket * head_dim;
+        let mut data = vec![0.0f32; out_rows * t.cols];
+        for (hi, &h) in heads.iter().enumerate() {
+            for d in 0..head_dim {
+                let src = (h * head_dim + d) * t.cols;
+                let dst = (hi * head_dim + d) * t.cols;
+                data[dst..dst + t.cols].copy_from_slice(&t.data[src..src + t.cols]);
+            }
+        }
+        Ok(HostTensor { rows: out_rows, cols: t.cols, data })
+    }
+
+    /// Slice arbitrary columns (FFN gate/up), zero-padded to `col_bucket`.
+    pub fn slice_cols(&self, name: &str, cols: &[usize], col_bucket: usize) -> Result<HostTensor> {
+        let t = self.get(name)?;
+        anyhow::ensure!(cols.len() <= col_bucket);
+        let mut data = vec![0.0f32; t.rows * col_bucket];
+        for r in 0..t.rows {
+            for (ci, &c) in cols.iter().enumerate() {
+                data[r * col_bucket + ci] = t.data[r * t.cols + c];
+            }
+        }
+        Ok(HostTensor { rows: t.rows, cols: col_bucket, data })
+    }
+
+    /// Slice arbitrary rows (FFN down), zero-padded to `row_bucket`.
+    pub fn slice_rows(&self, name: &str, rows: &[usize], row_bucket: usize) -> Result<HostTensor> {
+        let t = self.get(name)?;
+        anyhow::ensure!(rows.len() <= row_bucket);
+        let mut data = vec![0.0f32; row_bucket * t.cols];
+        for (ri, &r) in rows.iter().enumerate() {
+            data[ri * t.cols..(ri + 1) * t.cols]
+                .copy_from_slice(&t.data[r * t.cols..(r + 1) * t.cols]);
+        }
+        Ok(HostTensor { rows: row_bucket, cols: t.cols, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with(name: &str, rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> WeightStore {
+        let data = (0..rows * cols).map(|i| f(i / cols, i % cols)).collect();
+        let mut tensors = HashMap::new();
+        tensors.insert(name.to_string(), HostTensor { rows, cols, data });
+        WeightStore { tensors }
+    }
+
+    #[test]
+    fn head_col_slice_and_pad() {
+        // 2 rows, 4 heads × dim 2. Select heads [2, 0], bucket 3.
+        let s = store_with("w", 2, 8, |r, c| (r * 8 + c) as f32);
+        let t = s.slice_head_cols("w", &[2, 0], 2, 3).unwrap();
+        assert_eq!((t.rows, t.cols), (2, 6));
+        // row 0: head2 = cols 4,5 → [4,5]; head0 = [0,1]; pad = [0,0]
+        assert_eq!(&t.data[0..6], &[4.0, 5.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn head_row_slice_for_wo() {
+        // 4 heads × dim 2 rows, 3 cols.
+        let s = store_with("wo", 8, 3, |r, c| (r * 3 + c) as f32);
+        let t = s.slice_head_rows("wo", &[1], 2, 2).unwrap();
+        assert_eq!((t.rows, t.cols), (4, 3));
+        assert_eq!(&t.data[0..3], &[6.0, 7.0, 8.0]); // head1 row0 = abs row 2
+        assert_eq!(&t.data[6..12], &[0.0; 6]); // padded head
+    }
+
+    #[test]
+    fn col_and_row_slices() {
+        let s = store_with("g", 2, 5, |r, c| (r * 5 + c) as f32);
+        let t = s.slice_cols("g", &[4, 1], 3).unwrap();
+        assert_eq!(&t.data, &[4.0, 1.0, 0.0, 9.0, 6.0, 0.0]);
+        let s2 = store_with("d", 5, 2, |r, c| (r * 2 + c) as f32);
+        let t2 = s2.slice_rows("d", &[3], 2).unwrap();
+        assert_eq!(&t2.data, &[6.0, 7.0, 0.0, 0.0]);
+    }
+}

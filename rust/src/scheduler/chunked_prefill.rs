@@ -1,0 +1,294 @@
+//! DP-aware adaptive chunked prefill — the paper's Algorithm 1 — plus the
+//! FIFO baseline it replaces.
+
+
+use crate::{RankId, RequestId};
+
+/// A request with prefill work pending, as seen by the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillItem {
+    pub request: RequestId,
+    /// Home DP rank chosen by the router.
+    pub rank: RankId,
+    /// Tokens already prefilled (the `L` in the chunk cost O(N² + NL + N)).
+    pub context: usize,
+    /// Prefill tokens still to process.
+    pub remaining: usize,
+}
+
+/// Chunk of one request scheduled into the next batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkAssignment {
+    pub request: RequestId,
+    pub rank: RankId,
+    pub tokens: usize,
+}
+
+/// The formed prefill batch with its per-rank cost profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillBatch {
+    pub chunks: Vec<ChunkAssignment>,
+    /// Estimated DP cost booked per rank (token-units, incl. carry-in).
+    pub rank_load: Vec<f64>,
+    /// Total tokens scheduled.
+    pub tokens: usize,
+}
+
+impl PrefillBatch {
+    /// Makespan estimate: the straggler rank's load.
+    pub fn makespan(&self) -> f64 {
+        self.rank_load.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Balance ratio max/mean (1.0 = flat).
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.rank_load.iter().sum::<f64>() / self.rank_load.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            self.makespan() / mean
+        }
+    }
+}
+
+/// Incremental cost of the next token of a request whose effective context
+/// (already-prefilled + already-scheduled-this-batch) is `ctx`.
+///
+/// Prefill attention for a chunk of size N after L tokens costs
+/// O(N² + N·L + N); the per-token marginal cost is linear in the running
+/// context. `CTX_COST` converts context tokens into token-units so that a
+/// context-free token costs 1.
+const CTX_COST: f64 = 1.0 / 512.0; // attention context weight per token
+
+#[inline]
+pub(crate) fn token_cost(ctx: usize) -> f64 {
+    1.0 + ctx as f64 * CTX_COST
+}
+
+/// Paper Algorithm 1: iteratively give the next token to the least-loaded
+/// rank's oldest schedulable request, recording candidate batches; return
+/// the best candidate (here: the largest batch whose imbalance does not
+/// exceed `MAX_IMBALANCE`, falling back to the full fill).
+///
+/// `carry[r]` = work already queued on rank r before this batch (decode
+/// carry and previous chunks) so chronic stragglers receive fewer tokens.
+/// `granule` trades scheduling fidelity for speed (1 = exact Algorithm 1).
+pub fn adaptive_chunked_prefill(
+    budget: usize,
+    items: &[PrefillItem],
+    carry: &[f64],
+    world: usize,
+    granule: usize,
+) -> PrefillBatch {
+    assert_eq!(carry.len(), world);
+    let granule = granule.max(1);
+
+    // Per-rank FIFO queues of (item index, remaining, effective ctx).
+    let mut queues: Vec<std::collections::VecDeque<(usize, usize, usize)>> =
+        vec![std::collections::VecDeque::new(); world];
+    for (i, it) in items.iter().enumerate() {
+        if it.remaining > 0 {
+            queues[it.rank].push_back((i, it.remaining, it.context));
+        }
+    }
+
+    let mut load: Vec<f64> = carry.to_vec();
+    let mut total = 0usize;
+
+    // Allocation log: (item index, rank, tokens, cost). Candidate prefixes
+    // of Algorithm 1's `H` set are cuts into this log — O(1) to remember,
+    // one replay at the end (snapshotting per step would clone O(items)
+    // per token; see EXPERIMENTS.md §Perf).
+    let mut log: Vec<(usize, usize, usize, f64)> = Vec::new();
+    let mut best_cut = 0usize; // log length of the best balanced candidate
+    let mut sum_load: f64 = carry.iter().sum();
+    // Loads only grow, so the running max is maintainable in O(1).
+    let mut max_load: f64 = carry.iter().cloned().fold(0.0, f64::max);
+    const MAX_IMBALANCE: f64 = 1.25;
+
+    while total < budget {
+        // Least-loaded rank that still has schedulable tokens.
+        let r = match (0..world)
+            .filter(|&r| !queues[r].is_empty())
+            .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+        {
+            Some(r) => r,
+            None => break,
+        };
+        let (i, remaining, ctx) = queues[r].front_mut().map(|e| (e.0, e.1, e.2)).unwrap();
+        let take = granule.min(remaining).min(budget - total);
+        // Closed-form cost of `take` tokens with linearly growing context:
+        // Σ token_cost(ctx+k) = take + (ctx·take + take(take−1)/2)·CTX.
+        let cost = take as f64
+            + (ctx as f64 * take as f64 + (take * (take - 1)) as f64 / 2.0) * CTX_COST;
+        load[r] += cost;
+        sum_load += cost;
+        total += take;
+        log.push((i, r, take, cost));
+        {
+            let e = queues[r].front_mut().unwrap();
+            e.1 -= take;
+            e.2 += take;
+            if e.1 == 0 {
+                queues[r].pop_front();
+            }
+        }
+
+        // Candidate bookkeeping (the `H` set): mark this prefix if balanced.
+        max_load = max_load.max(load[r]);
+        let mean = sum_load / world as f64;
+        if mean == 0.0 || max_load / mean <= MAX_IMBALANCE {
+            best_cut = log.len();
+        }
+    }
+
+    // choose_best_batch(H): the largest balanced prefix; if none was
+    // balanced (e.g. one rank hogs all requests), take the full fill —
+    // progress beats stalling.
+    let cut = if best_cut > 0 { best_cut } else { log.len() };
+    let mut sched: Vec<usize> = vec![0; items.len()];
+    let mut load: Vec<f64> = carry.to_vec();
+    for &(i, r, take, cost) in &log[..cut] {
+        sched[i] += take;
+        load[r] += cost;
+    }
+
+    let chunks = items
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| sched[i] > 0)
+        .map(|(i, it)| ChunkAssignment { request: it.request, rank: it.rank, tokens: sched[i] })
+        .collect::<Vec<_>>();
+    let tokens = chunks.iter().map(|c| c.tokens).sum();
+    PrefillBatch { chunks, rank_load: load, tokens }
+}
+
+/// The conventional baseline (Fig 3 top): fill the budget with chunks in
+/// strict FIFO arrival order, one request at a time, ignoring rank loads.
+pub fn fifo_chunked_prefill(
+    budget: usize,
+    items: &[PrefillItem],
+    carry: &[f64],
+    world: usize,
+) -> PrefillBatch {
+    assert_eq!(carry.len(), world);
+    let mut load: Vec<f64> = carry.to_vec();
+    let mut chunks = Vec::new();
+    let mut total = 0usize;
+    for it in items {
+        if total >= budget {
+            break;
+        }
+        let take = it.remaining.min(budget - total);
+        if take == 0 {
+            continue;
+        }
+        let mut cost = 0.0;
+        for k in 0..take {
+            cost += token_cost(it.context + k);
+        }
+        load[it.rank] += cost;
+        chunks.push(ChunkAssignment { request: it.request, rank: it.rank, tokens: take });
+        total += take;
+    }
+    PrefillBatch { chunks, rank_load: load, tokens: total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items_fig3() -> Vec<PrefillItem> {
+        // Fig 3: request 0 has 4 tokens (rank 0), requests 1 and 2 have 1
+        // token (ranks 1, 2), new request 3 with 1 token. Budget 3.
+        vec![
+            PrefillItem { request: 0, rank: 0, context: 0, remaining: 4 },
+            PrefillItem { request: 1, rank: 1, context: 0, remaining: 1 },
+            PrefillItem { request: 2, rank: 2, context: 0, remaining: 1 },
+            PrefillItem { request: 3, rank: 1, context: 0, remaining: 1 },
+        ]
+    }
+
+    #[test]
+    fn fig3_naive_overloads_gpu0() {
+        let b = fifo_chunked_prefill(3, &items_fig3(), &[0.0; 3], 3);
+        // FIFO spends the whole budget on request 0's chunk.
+        assert_eq!(b.chunks.len(), 1);
+        assert_eq!(b.chunks[0].request, 0);
+        assert_eq!(b.chunks[0].tokens, 3);
+        assert!(b.imbalance() > 2.0, "imbalance {}", b.imbalance());
+    }
+
+    #[test]
+    fn fig3_adaptive_balances() {
+        let b = adaptive_chunked_prefill(3, &items_fig3(), &[0.0; 3], 3, 1);
+        // Adaptive spreads one token to each rank.
+        assert_eq!(b.tokens, 3);
+        assert!(b.imbalance() < 1.1, "imbalance {} chunks {:?}", b.imbalance(), b.chunks);
+        let ranks: Vec<RankId> = b.chunks.iter().map(|c| c.rank).collect();
+        assert!(ranks.contains(&0) && ranks.contains(&1) && ranks.contains(&2));
+    }
+
+    #[test]
+    fn budget_respected() {
+        let items: Vec<PrefillItem> = (0..10)
+            .map(|i| PrefillItem { request: i, rank: (i % 4) as usize, context: 0, remaining: 100 })
+            .collect();
+        let b = adaptive_chunked_prefill(64, &items, &[0.0; 4], 4, 1);
+        assert!(b.tokens <= 64);
+        assert_eq!(b.tokens, 64);
+    }
+
+    #[test]
+    fn context_makes_tokens_expensive() {
+        // A long-context request's tokens cost more, so the adaptive
+        // scheduler gives the rank hosting it fewer of them.
+        let items = vec![
+            PrefillItem { request: 0, rank: 0, context: 8192, remaining: 100 },
+            PrefillItem { request: 1, rank: 1, context: 0, remaining: 100 },
+        ];
+        let b = adaptive_chunked_prefill(100, &items, &[0.0; 2], 2, 1);
+        let t0: usize =
+            b.chunks.iter().filter(|c| c.request == 0).map(|c| c.tokens).sum();
+        let t1: usize =
+            b.chunks.iter().filter(|c| c.request == 1).map(|c| c.tokens).sum();
+        assert!(t1 > 2 * t0, "cheap request should get more tokens: {t0} vs {t1}");
+        assert!(b.imbalance() < 1.3);
+    }
+
+    #[test]
+    fn carry_in_respected() {
+        // Rank 0 is already busy: the batch should favor rank 1.
+        let items = vec![
+            PrefillItem { request: 0, rank: 0, context: 0, remaining: 50 },
+            PrefillItem { request: 1, rank: 1, context: 0, remaining: 50 },
+        ];
+        let b = adaptive_chunked_prefill(50, &items, &[40.0, 0.0], 2, 1);
+        let t0: usize = b.chunks.iter().filter(|c| c.rank == 0).map(|c| c.tokens).sum();
+        let t1: usize = b.chunks.iter().filter(|c| c.rank == 1).map(|c| c.tokens).sum();
+        assert!(t1 > t0, "busy rank must receive fewer tokens ({t0} vs {t1})");
+    }
+
+    #[test]
+    fn granule_speedup_preserves_balance() {
+        let items: Vec<PrefillItem> = (0..32)
+            .map(|i| PrefillItem {
+                request: i,
+                rank: (i % 8) as usize,
+                context: (i as usize * 97) % 4096,
+                remaining: 64 + (i as usize * 37) % 512,
+            })
+            .collect();
+        let exact = adaptive_chunked_prefill(2048, &items, &[0.0; 8], 8, 1);
+        let fast = adaptive_chunked_prefill(2048, &items, &[0.0; 8], 8, 16);
+        assert!(fast.imbalance() < exact.imbalance() * 1.15 + 0.1);
+        assert_eq!(fast.tokens, exact.tokens);
+    }
+
+    #[test]
+    fn empty_items_empty_batch() {
+        let b = adaptive_chunked_prefill(128, &[], &[0.0; 4], 4, 1);
+        assert_eq!(b.tokens, 0);
+        assert!(b.chunks.is_empty());
+    }
+}

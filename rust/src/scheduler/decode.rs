@@ -1,0 +1,101 @@
+//! Continuous decode batching.
+//!
+//! Every running request contributes one token per decode step. The batch
+//! former's job is capacity admission (KV pool headroom on the *tightest*
+//! rank — the synchronized-TP constraint of §2.2.1) and exposing the
+//! per-rank DP attention composition so the step-time model (or the real
+//! engine) can cost the straggler.
+
+
+use crate::{RankId, RequestId};
+
+/// One running request in the decode pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeItem {
+    pub request: RequestId,
+    /// Home DP rank (stores/computes the replicated heads for this request).
+    pub rank: RankId,
+    /// Current context length (tokens in KV).
+    pub context: usize,
+}
+
+/// A formed decode step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeBatch {
+    pub items: Vec<DecodeItem>,
+    /// Sum of context lengths of requests homed on each rank — the DP
+    /// attention work profile of the step.
+    pub dp_context_per_rank: Vec<usize>,
+    /// Sum of all context lengths (the TP attention work, identical shape
+    /// on every rank since TP heads see every request).
+    pub total_context: usize,
+}
+
+impl DecodeBatch {
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// DP imbalance: max/mean of per-rank DP context (1.0 = flat). The
+    /// quantity the load-aware router minimizes over time.
+    pub fn dp_imbalance(&self) -> f64 {
+        let w = self.dp_context_per_rank.len().max(1);
+        let mean = self.dp_context_per_rank.iter().sum::<usize>() as f64 / w as f64;
+        if mean == 0.0 {
+            return 1.0;
+        }
+        self.dp_context_per_rank.iter().copied().max().unwrap_or(0) as f64 / mean
+    }
+}
+
+/// Form the next decode batch from the running pool, admitting at most
+/// `max_batch` requests (engine limit) in pool order. `world` sizes the
+/// DP profile vector.
+pub fn form_decode_batch(pool: &[DecodeItem], max_batch: usize, world: usize) -> DecodeBatch {
+    let items: Vec<DecodeItem> = pool.iter().copied().take(max_batch).collect();
+    let mut dp = vec![0usize; world];
+    let mut total = 0usize;
+    for it in &items {
+        dp[it.rank] += it.context;
+        total += it.context;
+    }
+    DecodeBatch { items, dp_context_per_rank: dp, total_context: total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_respects_max() {
+        let pool: Vec<DecodeItem> = (0..100)
+            .map(|i| DecodeItem { request: i, rank: (i % 4) as usize, context: 128 })
+            .collect();
+        let b = form_decode_batch(&pool, 32, 4);
+        assert_eq!(b.len(), 32);
+        assert_eq!(b.total_context, 32 * 128);
+    }
+
+    #[test]
+    fn dp_profile_tracks_homes() {
+        let pool = vec![
+            DecodeItem { request: 0, rank: 0, context: 100 },
+            DecodeItem { request: 1, rank: 0, context: 200 },
+            DecodeItem { request: 2, rank: 2, context: 50 },
+        ];
+        let b = form_decode_batch(&pool, 8, 3);
+        assert_eq!(b.dp_context_per_rank, vec![300, 0, 50]);
+        assert!(b.dp_imbalance() > 2.0);
+    }
+
+    #[test]
+    fn empty_pool() {
+        let b = form_decode_batch(&[], 8, 4);
+        assert!(b.is_empty());
+        assert_eq!(b.dp_imbalance(), 1.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Batch forming: chunked prefill (paper Algorithm 1) and continuous
+//! decode batching.
+//!
+//! The prefill scheduler decides *which tokens of which requests* run in
+//! the next prefill step, under a global token budget `N` (bounding
+//! intermediate activation memory). The naive policy fills the budget in
+//! FIFO order — one request's chunk can consume the whole budget and leave
+//! every other DP rank idle (Fig 3 top). FailSafe's **DP-aware adaptive
+//! chunked prefill** allocates token by token to the least-loaded rank and
+//! keeps the per-rank makespan flat (Fig 3 bottom).
+
+mod chunked_prefill;
+mod decode;
+
+pub use chunked_prefill::{
+    adaptive_chunked_prefill, fifo_chunked_prefill, ChunkAssignment, PrefillBatch, PrefillItem,
+};
+pub use decode::{form_decode_batch, DecodeBatch, DecodeItem};

@@ -1,0 +1,207 @@
+//! FFN intermediate-dimension partitioning.
+//!
+//! FFN weights are sharded along the intermediate dimension in column
+//! *blocks* (the "12 shards" of paper Fig 4). Because matrix multiplication
+//! is commutative along the reduction dimension, block→rank assignment is a
+//! free choice: `down(act(x·gate) ⊙ (x·up))` sums over columns in any
+//! order. FailSafe exploits this (§3.2) to keep surviving blocks in place
+//! on reconfiguration and move only the minimum delta.
+
+
+use crate::RankId;
+
+/// Block assignment policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfnPolicy {
+    /// Conventional layout: rank r owns the r-th contiguous range. On a
+    /// world-size change every range shifts, so *every* rank must reload
+    /// its full new shard — the baseline FailSafe beats.
+    Contiguous,
+    /// Commutativity-aware layout: block positions are arbitrary, so a
+    /// reconfig keeps each surviving block on its current owner when quota
+    /// allows and reassigns only orphaned/excess blocks.
+    Commutative,
+}
+
+/// Assignment of FFN column blocks to ranks (identical across layers and
+/// experts; byte accounting multiplies out).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FfnPartition {
+    pub policy: FfnPolicy,
+    pub world: usize,
+    pub n_blocks: usize,
+    /// `owner[b]` = rank owning block `b`.
+    pub owner: Vec<RankId>,
+}
+
+impl FfnPartition {
+    /// Fresh partition over `world` ranks. Both policies produce the same
+    /// *sizes* (⌈/⌋ within one block); they differ in how [`Self::reshard`]
+    /// treats existing placement.
+    pub fn new(policy: FfnPolicy, n_blocks: usize, world: usize) -> Self {
+        assert!(world >= 1 && n_blocks >= world, "need at least one block per rank");
+        let mut owner = vec![0usize; n_blocks];
+        let base = n_blocks / world;
+        let rem = n_blocks % world;
+        let mut b = 0;
+        for r in 0..world {
+            let take = base + usize::from(r < rem);
+            for _ in 0..take {
+                owner[b] = r;
+                b += 1;
+            }
+        }
+        FfnPartition { policy, world, n_blocks, owner }
+    }
+
+    /// Quota of blocks each rank should own under `world` ranks.
+    fn quota(n_blocks: usize, world: usize) -> Vec<usize> {
+        let base = n_blocks / world;
+        let rem = n_blocks % world;
+        (0..world).map(|r| base + usize::from(r < rem)).collect()
+    }
+
+    /// Blocks owned by `rank`.
+    pub fn blocks_of(&self, rank: RankId) -> Vec<usize> {
+        self.owner
+            .iter()
+            .enumerate()
+            .filter(|&(_, &o)| o == rank)
+            .map(|(b, _)| b)
+            .collect()
+    }
+
+    /// Re-partition for a new world size after ranks were renumbered by
+    /// `survivor_map`: `survivor_map[old_rank] = Some(new_rank)` for
+    /// survivors, `None` for failed ranks. Returns the new partition.
+    ///
+    /// * `Contiguous`: fresh contiguous layout (every rank's range shifts —
+    ///   maximal movement, the conventional-system behaviour).
+    /// * `Commutative`: blocks on survivors stay put up to the new quota;
+    ///   only orphaned blocks (owner failed) and over-quota spill move.
+    pub fn reshard(&self, survivor_map: &[Option<RankId>], new_world: usize) -> FfnPartition {
+        assert_eq!(survivor_map.len(), self.world);
+        match self.policy {
+            FfnPolicy::Contiguous => FfnPartition::new(self.policy, self.n_blocks, new_world),
+            FfnPolicy::Commutative => {
+                let quota = Self::quota(self.n_blocks, new_world);
+                let mut owner: Vec<Option<RankId>> = self
+                    .owner
+                    .iter()
+                    .map(|&o| survivor_map.get(o).copied().flatten())
+                    .collect();
+                let mut count = vec![0usize; new_world];
+                // First pass: keep surviving blocks within quota.
+                for o in owner.iter_mut() {
+                    if let Some(r) = *o {
+                        if count[r] < quota[r] {
+                            count[r] += 1;
+                        } else {
+                            *o = None; // over quota: spill
+                        }
+                    }
+                }
+                // Second pass: hand orphaned blocks to under-quota ranks.
+                let mut next = 0usize;
+                for o in owner.iter_mut() {
+                    if o.is_none() {
+                        while count[next] >= quota[next] {
+                            next += 1;
+                        }
+                        *o = Some(next);
+                        count[next] += 1;
+                    }
+                }
+                FfnPartition {
+                    policy: self.policy,
+                    world: new_world,
+                    n_blocks: self.n_blocks,
+                    owner: owner.into_iter().map(Option::unwrap).collect(),
+                }
+            }
+        }
+    }
+
+    /// Number of blocks that changed owner between `self` (pre-reconfig,
+    /// with `survivor_map` renumbering) and `new` — ∝ weight bytes moved.
+    pub fn moved_blocks(&self, survivor_map: &[Option<RankId>], new: &FfnPartition) -> usize {
+        self.owner
+            .iter()
+            .zip(&new.owner)
+            .filter(|&(&old, &new_o)| survivor_map[old] != Some(new_o))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// survivor_map for "rank `f` of `w` failed", survivors renumbered densely.
+    fn fail_rank(w: usize, f: usize) -> Vec<Option<RankId>> {
+        (0..w)
+            .map(|r| {
+                if r == f {
+                    None
+                } else {
+                    Some(if r < f { r } else { r - 1 })
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fresh_partition_balanced() {
+        let p = FfnPartition::new(FfnPolicy::Commutative, 12, 7);
+        let sizes: Vec<usize> = (0..7).map(|r| p.blocks_of(r).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 12);
+        assert!(sizes.iter().all(|&s| s == 1 || s == 2));
+    }
+
+    #[test]
+    fn commutative_moves_only_lost_plus_rebalance() {
+        // Fig 4: 12 blocks, TP4 → TP3 after rank 3 fails. Rank 3 owned 3
+        // blocks; new quota is 4 each. Only the 3 orphaned blocks move.
+        let p = FfnPartition::new(FfnPolicy::Commutative, 12, 4);
+        let map = fail_rank(4, 3);
+        let q = p.reshard(&map, 3);
+        assert_eq!(p.moved_blocks(&map, &q), 3);
+        for r in 0..3 {
+            assert_eq!(q.blocks_of(r).len(), 4);
+        }
+    }
+
+    #[test]
+    fn contiguous_moves_much_more() {
+        let p = FfnPartition::new(FfnPolicy::Contiguous, 12, 4);
+        let map = fail_rank(4, 3);
+        let q = p.reshard(&map, 3);
+        // Contiguous re-layout moves blocks on survivors too.
+        assert!(p.moved_blocks(&map, &q) > 3, "moved {}", p.moved_blocks(&map, &q));
+    }
+
+    #[test]
+    fn commutative_handles_middle_rank_failure() {
+        let p = FfnPartition::new(FfnPolicy::Commutative, 24, 8);
+        let map = fail_rank(8, 2);
+        let q = p.reshard(&map, 7);
+        // Quotas: 24/7 → 3,3,3,3,4,... check all blocks assigned & balanced.
+        let sizes: Vec<usize> = (0..7).map(|r| q.blocks_of(r).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 24);
+        assert!(sizes.iter().all(|&s| (3..=4).contains(&s)), "{sizes:?}");
+        // Moves = 3 orphans + at most small rebalance spill.
+        assert!(p.moved_blocks(&map, &q) <= 4, "moved {}", p.moved_blocks(&map, &q));
+    }
+
+    #[test]
+    fn reshard_up_on_recovery() {
+        // Device returns: TP7 → TP8; commutative moves ≈ one new shard's worth.
+        let p = FfnPartition::new(FfnPolicy::Commutative, 56, 7);
+        let map: Vec<Option<RankId>> = (0..7).map(Some).collect();
+        let q = p.reshard(&map, 8);
+        let sizes: Vec<usize> = (0..8).map(|r| q.blocks_of(r).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 56);
+        assert!(sizes.iter().all(|&s| s == 7), "{sizes:?}");
+        assert_eq!(p.moved_blocks(&map, &q), 7, "exactly the new rank's quota moves");
+    }
+}

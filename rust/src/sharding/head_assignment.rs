@@ -1,0 +1,243 @@
+//! Attention-head placement across an irregular number of ranks.
+
+
+use crate::{HeadId, LayerId, RankId};
+
+/// Sentinel owner for heads that are DP-replicated on *all* ranks.
+pub const DP_OWNER: RankId = usize::MAX;
+
+/// Head placement policy (§3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttentionPolicy {
+    /// Contiguous split, identical every layer: rank 0 gets
+    /// ⌈H/W⌉ heads, later ranks ⌊H/W⌋ — the §2.2.1 strawman with up to 2×
+    /// compute skew and permanent KV hot spots.
+    NaiveContiguous,
+    /// Same per-layer split sizes, but the assignment rotates layer by
+    /// layer so every contiguous window of W layers gives each rank the
+    /// same aggregate number of head-layers (Fig 1).
+    Cyclic,
+    /// Hybrid TP+DP (Fig 2): every rank owns exactly ⌊H/W⌋ TP heads per
+    /// layer; the `H mod W` remainder heads are replicated on all ranks and
+    /// served data-parallel. TP head ownership still rotates cyclically.
+    Hybrid,
+}
+
+/// Head layout of a single layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerHeads {
+    /// `owner[h]` = rank owning KV head `h`, or [`DP_OWNER`] if replicated.
+    pub owner: Vec<RankId>,
+}
+
+impl LayerHeads {
+    /// TP heads owned by `rank` in this layer.
+    pub fn tp_heads_of(&self, rank: RankId) -> Vec<HeadId> {
+        self.owner
+            .iter()
+            .enumerate()
+            .filter(|&(_, &o)| o == rank)
+            .map(|(h, _)| h)
+            .collect()
+    }
+
+    /// Heads replicated on every rank (DP heads).
+    pub fn dp_heads(&self) -> Vec<HeadId> {
+        self.owner
+            .iter()
+            .enumerate()
+            .filter(|&(_, &o)| o == DP_OWNER)
+            .map(|(h, _)| h)
+            .collect()
+    }
+
+    pub fn n_dp(&self) -> usize {
+        self.owner.iter().filter(|&&o| o == DP_OWNER).count()
+    }
+}
+
+/// Full per-layer head→rank map for a model under a given policy and world
+/// size. This is *the* data structure the scheduler, the KV accountant, and
+/// the recovery planner all consult.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HeadAssignment {
+    pub policy: AttentionPolicy,
+    pub world: usize,
+    pub n_heads: usize,
+    pub layers: Vec<LayerHeads>,
+}
+
+impl HeadAssignment {
+    pub fn new(policy: AttentionPolicy, n_heads: usize, n_layers: usize, world: usize) -> Self {
+        assert!(world >= 1, "world size must be >= 1");
+        assert!(n_heads >= world || policy == AttentionPolicy::Hybrid || n_heads >= 1);
+        let layers = (0..n_layers)
+            .map(|l| Self::layer_map(policy, n_heads, world, l))
+            .collect();
+        HeadAssignment { policy, world, n_heads, layers }
+    }
+
+    fn layer_map(policy: AttentionPolicy, n_heads: usize, world: usize, layer: LayerId) -> LayerHeads {
+        let base = n_heads / world;
+        let rem = n_heads % world;
+        let mut owner = vec![0usize; n_heads];
+        match policy {
+            AttentionPolicy::NaiveContiguous => {
+                // Rank r owns a contiguous range; first `rem` ranks get base+1.
+                let mut h = 0;
+                for r in 0..world {
+                    let take = base + usize::from(r < rem);
+                    for _ in 0..take {
+                        if h < n_heads {
+                            owner[h] = r;
+                            h += 1;
+                        }
+                    }
+                }
+            }
+            AttentionPolicy::Cyclic => {
+                // Same sizes, but which ranks get the extra head rotates by
+                // layer, and the contiguous window start also rotates so
+                // aggregate head-layers even out over any W-layer window.
+                let mut h = 0;
+                for i in 0..world {
+                    let r = (i + layer) % world;
+                    let take = base + usize::from(i < rem);
+                    for _ in 0..take {
+                        if h < n_heads {
+                            owner[(h + layer) % n_heads] = r;
+                            h += 1;
+                        }
+                    }
+                }
+            }
+            AttentionPolicy::Hybrid => {
+                // First `rem` heads (rotated by layer) are DP; the remaining
+                // base*world heads are dealt round-robin starting at a
+                // rotated rank.
+                for slot in 0..n_heads {
+                    let h = (slot + layer) % n_heads;
+                    if slot < rem {
+                        owner[h] = DP_OWNER;
+                    } else {
+                        owner[h] = (slot - rem + layer) % world;
+                    }
+                }
+            }
+        }
+        LayerHeads { owner }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Number of DP-replicated heads per layer (0 unless Hybrid with H % W ≠ 0).
+    pub fn dp_heads_per_layer(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.n_dp())
+    }
+
+    /// Total TP head-layer units owned by `rank` across all layers — the
+    /// quantity cyclic placement equalizes (∝ both KV bytes and TP attention
+    /// compute).
+    pub fn tp_head_layers_of(&self, rank: RankId) -> usize {
+        self.layers.iter().map(|l| l.tp_heads_of(rank).len()).sum()
+    }
+
+    /// (min, max) TP head-layers across ranks — the balance metric of Fig 1.
+    pub fn tp_balance(&self) -> (usize, usize) {
+        let counts: Vec<usize> = (0..self.world).map(|r| self.tp_head_layers_of(r)).collect();
+        (*counts.iter().min().unwrap(), *counts.iter().max().unwrap())
+    }
+
+    /// Max TP heads any rank owns in layer `l` — the per-layer straggler
+    /// width that hybrid attention eliminates (Fig 2).
+    pub fn max_tp_heads_in_layer(&self, l: LayerId) -> usize {
+        (0..self.world).map(|r| self.layers[l].tp_heads_of(r).len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coverage_ok(a: &HeadAssignment) {
+        for lh in &a.layers {
+            for &o in &lh.owner {
+                assert!(o == DP_OWNER || o < a.world);
+            }
+            // every head appears exactly once by construction (owner vec)
+            assert_eq!(lh.owner.len(), a.n_heads);
+        }
+    }
+
+    #[test]
+    fn naive_is_skewed_8_heads_7_ranks() {
+        let a = HeadAssignment::new(AttentionPolicy::NaiveContiguous, 8, 80, 7);
+        coverage_ok(&a);
+        let (min, max) = a.tp_balance();
+        // rank 0 owns 2 heads every layer: 160 vs 80 → the 2× skew of §2.2.1.
+        assert_eq!(max, 160);
+        assert_eq!(min, 80);
+        assert_eq!(a.max_tp_heads_in_layer(0), 2);
+    }
+
+    #[test]
+    fn cyclic_balances_aggregate() {
+        let a = HeadAssignment::new(AttentionPolicy::Cyclic, 8, 70, 7);
+        coverage_ok(&a);
+        let (min, max) = a.tp_balance();
+        // 8 heads × 70 layers / 7 ranks = 80 exactly.
+        assert_eq!((min, max), (80, 80));
+        // ...but per layer someone still owns 2 heads (compute straggler remains).
+        assert_eq!(a.max_tp_heads_in_layer(0), 2);
+    }
+
+    #[test]
+    fn hybrid_equal_tp_heads_every_layer() {
+        let a = HeadAssignment::new(AttentionPolicy::Hybrid, 8, 80, 7);
+        coverage_ok(&a);
+        assert_eq!(a.dp_heads_per_layer(), 1);
+        for l in 0..80 {
+            for r in 0..7 {
+                assert_eq!(a.layers[l].tp_heads_of(r).len(), 1, "layer {l} rank {r}");
+            }
+            assert_eq!(a.layers[l].n_dp(), 1);
+        }
+    }
+
+    #[test]
+    fn hybrid_uniform_world_degenerates_to_tp() {
+        // H % W == 0 → no DP heads; identical to standard TP (Fig 10: TP4/TP8
+        // show no difference between systems).
+        let a = HeadAssignment::new(AttentionPolicy::Hybrid, 8, 4, 8);
+        assert_eq!(a.dp_heads_per_layer(), 0);
+        let (min, max) = a.tp_balance();
+        assert_eq!(min, max);
+    }
+
+    #[test]
+    fn fig1_example_cyclic_capacity_gain() {
+        // Paper Fig 1: 4 KV heads, TP3. Naive: worst rank owns 2 of 4 head
+        // slots per layer (share 1/2). Cyclic: over 3 layers each rank owns
+        // 4 head-layers of 12 (share 1/3). Capacity gain = (1/2)/(1/3) = 1.5×.
+        let naive = HeadAssignment::new(AttentionPolicy::NaiveContiguous, 4, 3, 3);
+        let cyclic = HeadAssignment::new(AttentionPolicy::Cyclic, 4, 3, 3);
+        let naive_max = (0..3).map(|r| naive.tp_head_layers_of(r)).max().unwrap();
+        let cyclic_max = (0..3).map(|r| cyclic.tp_head_layers_of(r)).max().unwrap();
+        assert_eq!(naive_max, 6);
+        assert_eq!(cyclic_max, 4);
+        let gain = naive_max as f64 / cyclic_max as f64;
+        assert!((gain - 1.5).abs() < 1e-9, "Fig 1 promises ~50% capacity gain, got {gain}");
+    }
+
+    #[test]
+    fn dp_heads_rotate_across_layers() {
+        // The DP head identity should rotate so the same physical head is
+        // not permanently replicated (keeps backup traffic even).
+        let a = HeadAssignment::new(AttentionPolicy::Hybrid, 8, 8, 7);
+        let dp0 = a.layers[0].dp_heads();
+        let dp1 = a.layers[1].dp_heads();
+        assert_ne!(dp0, dp1);
+    }
+}

@@ -1,0 +1,27 @@
+//! Non-uniform tensor-parallel sharding: *where every weight byte and KV
+//! block lives*, for an arbitrary (possibly irregular) number of ranks.
+//!
+//! This module implements the paper's placement contributions:
+//!
+//! * [`HeadAssignment`] — attention-head → rank maps per layer under three
+//!   policies: naive contiguous (the §2.2.1 strawman), **cyclic placement**
+//!   (§3.1, Fig 1), and **hybrid attention** (§3.1, Fig 2) which splits
+//!   heads into per-rank TP heads plus DP-replicated remainder heads.
+//! * [`FfnPartition`] — intermediate-dimension column blocks → rank maps,
+//!   either contiguous (the conventional layout that misaligns on reshard)
+//!   or **commutative** (§3.2), which exploits the reduction-dimension
+//!   commutativity of matmul to keep surviving blocks in place on
+//!   reconfiguration and move only the delta.
+//! * [`ShardPlan`] — the combined per-rank layout with byte accounting and
+//!   balance metrics, plus [`plan_reconfig`] which computes the exact
+//!   movement delta between two plans (consumed by [`crate::recovery`]).
+
+mod ffn_partition;
+mod head_assignment;
+mod plan;
+mod reconfig;
+
+pub use ffn_partition::{FfnPartition, FfnPolicy};
+pub use head_assignment::{AttentionPolicy, HeadAssignment, LayerHeads, DP_OWNER};
+pub use plan::{RankLoad, ShardPlan};
+pub use reconfig::{plan_reconfig, ReconfigDelta, UnitLocation, WeightUnit};

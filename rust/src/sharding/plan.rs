@@ -1,0 +1,213 @@
+//! [`ShardPlan`]: the combined attention + FFN layout for one TP
+//! configuration, with exact per-rank byte and compute-share accounting.
+
+
+use super::{AttentionPolicy, FfnPartition, FfnPolicy, HeadAssignment};
+use crate::model::ModelSpec;
+use crate::RankId;
+
+/// Per-rank load summary under a plan (consumed by the simulator and by
+/// balance assertions in tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankLoad {
+    pub rank: RankId,
+    /// Model weight bytes resident on this rank.
+    pub weight_bytes: usize,
+    /// KV bytes per cached token for TP heads (always paid on this rank).
+    pub kv_tp_bytes_per_token: usize,
+    /// KV bytes per cached token for DP heads (paid only for requests homed
+    /// on this rank).
+    pub kv_dp_bytes_per_token: usize,
+    /// TP attention head-layers owned (∝ TP attention compute share).
+    pub tp_head_layers: usize,
+    /// FFN blocks owned (∝ FFN compute share).
+    pub ffn_blocks: usize,
+}
+
+/// A complete non-uniform TP layout: which rank holds which attention head
+/// group per layer and which FFN column blocks, plus the byte math derived
+/// from the model spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPlan {
+    pub model: ModelSpec,
+    pub heads: HeadAssignment,
+    pub ffn: FfnPartition,
+}
+
+/// Number of FFN column blocks used for shard accounting: the largest
+/// divisor of `d_ff` not exceeding 128. Fine enough that block granularity
+/// never dominates balance (the paper's Fig 4 uses 12 blocks for a TP4
+/// illustration), constant across world sizes so reconfiguration compares
+/// like with like.
+pub fn default_ffn_blocks(d_ff: usize) -> usize {
+    (1..=128.min(d_ff)).rev().find(|b| d_ff % b == 0).unwrap_or(1)
+}
+
+impl ShardPlan {
+    /// Build a plan for `world` ranks under the given policies.
+    pub fn new(
+        model: &ModelSpec,
+        world: usize,
+        attn_policy: AttentionPolicy,
+        ffn_policy: FfnPolicy,
+    ) -> Self {
+        let n_blocks = default_ffn_blocks(model.d_ff);
+        assert!(n_blocks >= world, "d_ff too small to shard over {world} ranks");
+        ShardPlan {
+            model: model.clone(),
+            heads: HeadAssignment::new(attn_policy, model.n_kv_heads, model.n_layers, world),
+            ffn: FfnPartition::new(ffn_policy, n_blocks, world),
+        }
+    }
+
+    /// The fully-optimized FailSafe plan: hybrid attention + commutative FFN.
+    pub fn failsafe(model: &ModelSpec, world: usize) -> Self {
+        Self::new(model, world, AttentionPolicy::Hybrid, FfnPolicy::Commutative)
+    }
+
+    /// The naive non-uniform TP plan (the paper's `Nonuniform-TP` baseline).
+    pub fn nonuniform_naive(model: &ModelSpec, world: usize) -> Self {
+        Self::new(model, world, AttentionPolicy::NaiveContiguous, FfnPolicy::Contiguous)
+    }
+
+    pub fn world(&self) -> usize {
+        self.heads.world
+    }
+
+    /// Bytes of one FFN block across all layers and experts.
+    pub fn ffn_block_bytes(&self) -> usize {
+        // cols per block × 3 d_model-vectors per col × layers × experts
+        let cols_per_block = self.model.d_ff / self.ffn.n_blocks;
+        cols_per_block
+            * self.model.ffn_col_weight_bytes()
+            * self.model.n_layers
+            * self.model.n_experts
+    }
+
+    /// Bytes of one FFN block in a single layer (all experts).
+    pub fn ffn_block_layer_bytes(&self) -> usize {
+        let cols_per_block = self.model.d_ff / self.ffn.n_blocks;
+        cols_per_block * self.model.ffn_col_weight_bytes() * self.model.n_experts
+    }
+
+    /// Per-rank load summary.
+    pub fn rank_load(&self, rank: RankId) -> RankLoad {
+        let tp_head_layers = self.heads.tp_head_layers_of(rank);
+        let dp_per_layer = self.heads.dp_heads_per_layer();
+        let dp_head_layers = dp_per_layer * self.model.n_layers;
+        let hg = self.model.head_group_weight_bytes();
+        let ffn_blocks = self.ffn.blocks_of(rank).len();
+        let weight_bytes = self.model.replicated_weight_bytes()
+            + (tp_head_layers + dp_head_layers) * hg // DP head weights replicated everywhere
+            + ffn_blocks * self.ffn_block_bytes();
+        let kvb = self.model.kv_bytes_per_token_per_head_layer();
+        RankLoad {
+            rank,
+            weight_bytes,
+            kv_tp_bytes_per_token: tp_head_layers * kvb,
+            kv_dp_bytes_per_token: dp_head_layers * kvb,
+            tp_head_layers,
+            ffn_blocks,
+        }
+    }
+
+    /// All rank loads.
+    pub fn rank_loads(&self) -> Vec<RankLoad> {
+        (0..self.world()).map(|r| self.rank_load(r)).collect()
+    }
+
+    /// Whether the plan fits: max per-rank weight bytes + `min_kv_budget`
+    /// within `hbm_budget` per rank.
+    pub fn fits(&self, hbm_budget: usize, min_kv_budget: usize) -> bool {
+        self.rank_loads()
+            .iter()
+            .all(|l| l.weight_bytes + min_kv_budget <= hbm_budget)
+    }
+
+    /// System KV token capacity: the number of cached tokens the whole TP
+    /// group can hold, limited by the *most loaded* rank (synchronized TP —
+    /// §2.2.1). `kv_budget[r]` = KV bytes available on rank r. Assumes
+    /// balanced DP homing (each rank homes 1/W of tokens).
+    pub fn kv_token_capacity(&self, kv_budget: &[usize]) -> usize {
+        assert_eq!(kv_budget.len(), self.world());
+        let w = self.world();
+        (0..w)
+            .map(|r| {
+                let l = self.rank_load(r);
+                // Per token globally: tp share always; dp share if homed here
+                // (1/W of tokens on average).
+                let per_token =
+                    l.kv_tp_bytes_per_token as f64 + l.kv_dp_bytes_per_token as f64 / w as f64;
+                if per_token == 0.0 {
+                    usize::MAX
+                } else {
+                    (kv_budget[r] as f64 / per_token) as usize
+                }
+            })
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{llama3_70b, small_real};
+
+    #[test]
+    fn weight_bytes_cover_model_once_tp() {
+        // Uniform TP8 on llama: sum of per-rank sharded bytes + replication
+        // overhead == total weights + (W-1)×replicated.
+        let m = llama3_70b();
+        let p = ShardPlan::failsafe(&m, 8);
+        let total: usize = p.rank_loads().iter().map(|l| l.weight_bytes).sum();
+        let expect = m.weight_bytes() + 7 * m.replicated_weight_bytes();
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn hybrid_tp7_has_dp_replication_overhead() {
+        let m = llama3_70b();
+        let p = ShardPlan::failsafe(&m, 7);
+        // Every rank holds 1 TP head-layer per layer + the 1 DP head-layer.
+        for l in p.rank_loads() {
+            assert_eq!(l.tp_head_layers, m.n_layers);
+            assert_eq!(l.kv_dp_bytes_per_token, m.n_layers * m.kv_bytes_per_token_per_head_layer());
+        }
+    }
+
+    #[test]
+    fn failsafe_capacity_beats_naive_tp7() {
+        let m = llama3_70b();
+        let fs = ShardPlan::failsafe(&m, 7);
+        let nv = ShardPlan::nonuniform_naive(&m, 7);
+        let budget = vec![40usize << 30; 7];
+        let cap_fs = fs.kv_token_capacity(&budget);
+        let cap_nv = nv.kv_token_capacity(&budget);
+        assert!(
+            cap_fs as f64 > 1.5 * cap_nv as f64,
+            "failsafe {cap_fs} vs naive {cap_nv}: cyclic+hybrid must lift capacity"
+        );
+    }
+
+    #[test]
+    fn small_model_fits_plan() {
+        let m = small_real();
+        for w in 1..=4 {
+            let p = ShardPlan::failsafe(&m, w);
+            let loads = p.rank_loads();
+            assert_eq!(loads.len(), w);
+            let max_w = loads.iter().map(|l| l.weight_bytes).max().unwrap();
+            assert!(max_w < 64 << 20, "small model shard must be tiny, got {max_w}");
+        }
+    }
+
+    #[test]
+    fn ffn_blocks_partition_d_ff() {
+        let m = llama3_70b();
+        let p = ShardPlan::failsafe(&m, 7);
+        assert_eq!(m.d_ff % p.ffn.n_blocks, 0, "blocks must divide d_ff");
+        let total_blocks: usize = p.rank_loads().iter().map(|l| l.ffn_blocks).sum();
+        assert_eq!(total_blocks, p.ffn.n_blocks);
+    }
+}

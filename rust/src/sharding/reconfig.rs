@@ -1,0 +1,374 @@
+//! Reconfiguration deltas: the exact weight movement required to go from
+//! one shard plan to another after a failure (or a device rejoin).
+//!
+//! This is the data the recovery planner (§3.2, Fig 4) consumes. Every
+//! weight *unit* (an attention head-group in one layer, or an FFN column
+//! block in one layer) has a pre-reconfig location set; each rank's
+//! post-reconfig requirement is satisfied from the cheapest source:
+//!
+//! * already resident → free;
+//! * resident on a surviving peer → NVLink;
+//! * lost with the failed device (or policy forbids peer reuse) → host DRAM
+//!   over PCIe. FailSafe splits these fetches **jointly and
+//!   non-redundantly** across ranks and redistributes over NVLink.
+
+use std::collections::HashSet;
+
+
+use super::{ShardPlan, DP_OWNER};
+use crate::{LayerId, RankId};
+
+/// A shardable weight unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WeightUnit {
+    /// KV-head group `head` of `layer` (Wq/Wk/Wv/Wo slices).
+    HeadGroup { layer: LayerId, head: usize },
+    /// FFN column block `block` of `layer` (all experts).
+    FfnBlock { layer: LayerId, block: usize },
+}
+
+/// Pre-reconfig location of a unit: the set of *new-rank ids* (survivors,
+/// renumbered) that already hold it.
+pub type UnitLocation = HashSet<RankId>;
+
+/// Per-rank transfer totals for one reconfiguration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReconfigDelta {
+    /// Bytes each rank pulls from host DRAM over its PCIe link.
+    pub pcie_bytes: Vec<usize>,
+    /// Bytes each rank receives from peers over NVLink.
+    pub nvlink_recv_bytes: Vec<usize>,
+    /// Bytes each rank sends to peers over NVLink.
+    pub nvlink_send_bytes: Vec<usize>,
+    /// Bytes of weight units that were lost with failed devices (had no
+    /// surviving replica) — informational.
+    pub lost_bytes: usize,
+}
+
+impl ReconfigDelta {
+    pub fn total_pcie(&self) -> usize {
+        self.pcie_bytes.iter().sum()
+    }
+    pub fn max_pcie(&self) -> usize {
+        self.pcie_bytes.iter().copied().max().unwrap_or(0)
+    }
+    pub fn max_nvlink(&self) -> usize {
+        self.nvlink_recv_bytes
+            .iter()
+            .zip(&self.nvlink_send_bytes)
+            .map(|(r, s)| r + s)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Flat unit indexing: per layer, `n_heads` head-group units followed by
+/// `n_blocks` FFN block units. Presence/need sets are `u64` rank bitsets
+/// (world ≤ 64 always holds for a scale-up domain).
+struct UnitIndex {
+    n_heads: usize,
+    n_blocks: usize,
+    n_layers: usize,
+    head_bytes: usize,
+    block_bytes: usize,
+}
+
+impl UnitIndex {
+    fn per_layer(&self) -> usize {
+        self.n_heads + self.n_blocks
+    }
+    fn total(&self) -> usize {
+        self.n_layers * self.per_layer()
+    }
+    #[inline]
+    fn bytes(&self, unit: usize) -> usize {
+        if unit % self.per_layer() < self.n_heads {
+            self.head_bytes
+        } else {
+            self.block_bytes
+        }
+    }
+    /// Flat id of a [`WeightUnit`] (exposed for diagnostics/tests).
+    #[allow(dead_code)]
+    fn unit_of(&self, u: WeightUnit) -> usize {
+        match u {
+            WeightUnit::HeadGroup { layer, head } => layer * self.per_layer() + head,
+            WeightUnit::FfnBlock { layer, block } => {
+                layer * self.per_layer() + self.n_heads + block
+            }
+        }
+    }
+}
+
+fn index_for(plan: &ShardPlan) -> UnitIndex {
+    UnitIndex {
+        n_heads: plan.model.n_kv_heads,
+        n_blocks: plan.ffn.n_blocks,
+        n_layers: plan.model.n_layers,
+        head_bytes: plan.model.head_group_weight_bytes(),
+        block_bytes: plan.ffn_block_layer_bytes(),
+    }
+}
+
+/// Per-unit requirement bitsets for all ranks of `plan`.
+fn required_bits(plan: &ShardPlan, idx: &UnitIndex, world: usize) -> Vec<u64> {
+    let all: u64 = if world == 64 { u64::MAX } else { (1u64 << world) - 1 };
+    let mut req = vec![0u64; idx.total()];
+    for (layer, lh) in plan.heads.layers.iter().enumerate() {
+        let base = layer * idx.per_layer();
+        for (head, &owner) in lh.owner.iter().enumerate() {
+            req[base + head] = if owner == DP_OWNER { all } else { 1u64 << owner };
+        }
+    }
+    for layer in 0..idx.n_layers {
+        let base = layer * idx.per_layer() + idx.n_heads;
+        for (block, &owner) in plan.ffn.owner.iter().enumerate() {
+            req[base + block] = 1u64 << owner;
+        }
+    }
+    req
+}
+
+/// Pre-reconfig presence bitsets in *new rank* numbering.
+fn presence_bits(old: &ShardPlan, idx: &UnitIndex, survivor_map: &[Option<RankId>]) -> Vec<u64> {
+    let survivors: u64 = survivor_map.iter().flatten().fold(0u64, |m, &r| m | (1u64 << r));
+    let mut map = vec![0u64; idx.total()];
+    for (layer, lh) in old.heads.layers.iter().enumerate() {
+        let base = layer * idx.per_layer();
+        for (head, &owner) in lh.owner.iter().enumerate() {
+            map[base + head] = if owner == DP_OWNER {
+                survivors
+            } else {
+                match survivor_map.get(owner).copied().flatten() {
+                    Some(r) => 1u64 << r,
+                    None => 0,
+                }
+            };
+        }
+    }
+    for layer in 0..idx.n_layers {
+        let base = layer * idx.per_layer() + idx.n_heads;
+        for (block, &owner) in old.ffn.owner.iter().enumerate() {
+            map[base + block] = match survivor_map.get(owner).copied().flatten() {
+                Some(r) => 1u64 << r,
+                None => 0,
+            };
+        }
+    }
+    map
+}
+
+/// Compute the transfer delta to realize `new` starting from `old`, where
+/// `survivor_map[old_rank]` gives the new rank id of each surviving device.
+///
+/// `on_demand = true` is FailSafe's recovery (§3.2): peer-resident units
+/// come over NVLink, host fetches of lost units are split across ranks
+/// non-redundantly and re-shared over NVLink. `on_demand = false` models
+/// the conventional fallback: each rank reloads **all** units it needs but
+/// does not already hold from host over PCIe (no peer reuse, redundant
+/// fetches of shared units).
+pub fn plan_reconfig(
+    old: &ShardPlan,
+    new: &ShardPlan,
+    survivor_map: &[Option<RankId>],
+    on_demand: bool,
+) -> ReconfigDelta {
+    let world = new.world();
+    debug_assert!(world <= 64, "rank bitsets assume world <= 64");
+    let idx = index_for(new);
+    debug_assert_eq!(index_for(old).total(), idx.total(), "plans must share unit geometry");
+    let presence = presence_bits(old, &idx, survivor_map);
+    let required = required_bits(new, &idx, world);
+
+    let mut delta = ReconfigDelta {
+        pcie_bytes: vec![0; world],
+        nvlink_recv_bytes: vec![0; world],
+        nvlink_send_bytes: vec![0; world],
+        lost_bytes: 0,
+    };
+
+    for unit in 0..idx.total() {
+        let needers = required[unit] & !presence[unit];
+        if needers == 0 {
+            continue; // every consumer already holds it
+        }
+        let bytes = idx.bytes(unit);
+        let holders = presence[unit];
+        if holders == 0 {
+            delta.lost_bytes += bytes;
+        }
+
+        if !on_demand {
+            // Conventional: every needer pulls its own copy over PCIe.
+            let mut n = needers;
+            while n != 0 {
+                let r = n.trailing_zeros() as usize;
+                delta.pcie_bytes[r] += bytes;
+                n &= n - 1;
+            }
+            continue;
+        }
+
+        // FailSafe on-demand: peer-resident units come over NVLink from
+        // the least-send-loaded holder; lost units are host-fetched once
+        // by the least-PCIe-loaded needer and re-shared over NVLink.
+        if holders != 0 {
+            let mut best = usize::MAX;
+            let mut src = 0usize;
+            let mut h = holders;
+            while h != 0 {
+                let r = h.trailing_zeros() as usize;
+                if delta.nvlink_send_bytes[r] < best {
+                    best = delta.nvlink_send_bytes[r];
+                    src = r;
+                }
+                h &= h - 1;
+            }
+            let mut n = needers;
+            while n != 0 {
+                let r = n.trailing_zeros() as usize;
+                delta.nvlink_send_bytes[src] += bytes;
+                delta.nvlink_recv_bytes[r] += bytes;
+                n &= n - 1;
+            }
+        } else {
+            let mut best = usize::MAX;
+            let mut fetcher = 0usize;
+            let mut n = needers;
+            while n != 0 {
+                let r = n.trailing_zeros() as usize;
+                if delta.pcie_bytes[r] < best {
+                    best = delta.pcie_bytes[r];
+                    fetcher = r;
+                }
+                n &= n - 1;
+            }
+            delta.pcie_bytes[fetcher] += bytes;
+            let mut n = needers & !(1u64 << fetcher);
+            while n != 0 {
+                let r = n.trailing_zeros() as usize;
+                delta.nvlink_send_bytes[fetcher] += bytes;
+                delta.nvlink_recv_bytes[r] += bytes;
+                n &= n - 1;
+            }
+        }
+    }
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llama3_70b;
+    use crate::sharding::{AttentionPolicy, FfnPolicy};
+
+    fn fail_rank(w: usize, f: usize) -> Vec<Option<RankId>> {
+        (0..w)
+            .map(|r| if r == f { None } else { Some(if r < f { r } else { r - 1 }) })
+            .collect()
+    }
+
+    /// TP8 → TP7 with FailSafe policies: PCIe traffic must be close to the
+    /// lost shard size (1/8 of sharded weights) split across 7 ranks, far
+    /// below a full per-rank shard reload.
+    #[test]
+    fn on_demand_pcie_is_fraction_of_naive() {
+        let m = llama3_70b();
+        let old = ShardPlan::failsafe(&m, 8);
+        let map = fail_rank(8, 3);
+        let new = ShardPlan {
+            model: m.clone(),
+            heads: crate::sharding::HeadAssignment::new(
+                AttentionPolicy::Hybrid,
+                m.n_kv_heads,
+                m.n_layers,
+                7,
+            ),
+            ffn: old.ffn.reshard(&map, 7),
+        };
+        let fs = plan_reconfig(&old, &new, &map, true);
+        let naive = plan_reconfig(&old, &new, &map, false);
+        assert!(fs.total_pcie() > 0);
+        // Note: this naive side still benefits from the commutative FFN
+        // reshard (same `new` plan); the full Table 3 baseline also pays
+        // contiguous re-layout and is compared in the tab03 bench.
+        assert!(
+            naive.max_pcie() as f64 > 2.0 * fs.max_pcie() as f64,
+            "naive max-PCIe {} should dwarf on-demand {}",
+            naive.max_pcie(),
+            fs.max_pcie()
+        );
+        // On-demand PCIe totals ≈ lost bytes (each lost unit fetched once).
+        assert_eq!(fs.total_pcie(), fs.lost_bytes);
+    }
+
+    /// The conventional contiguous-FFN reload: old/new both contiguous
+    /// means nearly every block misaligns and gets re-pulled redundantly.
+    #[test]
+    fn contiguous_baseline_reloads_whole_shards() {
+        let m = llama3_70b();
+        let old = ShardPlan::nonuniform_naive(&m, 8);
+        let map = fail_rank(8, 7);
+        let new = ShardPlan::nonuniform_naive(&m, 7);
+        let d = plan_reconfig(&old, &new, &map, false);
+        // Every rank's PCIe load should be of the order of a whole new shard
+        // (1/7 of FFN+attn weights ≈ 18 GB for llama-70B).
+        let shard = (m.weight_bytes() - m.replicated_weight_bytes()) / 7;
+        assert!(
+            d.max_pcie() > shard / 3,
+            "expected near-shard reload, got {} vs shard {}",
+            d.max_pcie(),
+            shard
+        );
+    }
+
+    /// No movement when nothing changes.
+    #[test]
+    fn identity_reconfig_is_free() {
+        let m = llama3_70b();
+        let p = ShardPlan::failsafe(&m, 8);
+        let map: Vec<Option<RankId>> = (0..8).map(Some).collect();
+        let d = plan_reconfig(&p, &p, &map, true);
+        assert_eq!(d.total_pcie(), 0);
+        assert_eq!(d.max_nvlink(), 0);
+        assert_eq!(d.lost_bytes, 0);
+    }
+
+    /// Every needed unit is satisfied exactly once (no redundant PCIe in
+    /// on-demand mode): pcie total == lost bytes, and NVLink recv covers the
+    /// rest of the needs.
+    #[test]
+    fn on_demand_is_non_redundant() {
+        let m = llama3_70b();
+        let old = ShardPlan::failsafe(&m, 7);
+        let map = fail_rank(7, 2);
+        let new = ShardPlan {
+            model: m.clone(),
+            heads: crate::sharding::HeadAssignment::new(
+                AttentionPolicy::Hybrid,
+                m.n_kv_heads,
+                m.n_layers,
+                6,
+            ),
+            ffn: old.ffn.reshard(&map, 6),
+        };
+        let d = plan_reconfig(&old, &new, &map, true);
+        assert_eq!(d.total_pcie(), d.lost_bytes);
+        let sends: usize = d.nvlink_send_bytes.iter().sum();
+        let recvs: usize = d.nvlink_recv_bytes.iter().sum();
+        assert_eq!(sends, recvs);
+    }
+
+    /// FFN commutativity: with commutative policy, surviving FFN blocks
+    /// never move, so FFN NVLink traffic only covers lost blocks.
+    #[test]
+    fn commutative_ffn_keeps_surviving_blocks() {
+        let m = llama3_70b();
+        let old = ShardPlan::new(&m, 8, AttentionPolicy::Hybrid, FfnPolicy::Commutative);
+        let map = fail_rank(8, 0);
+        let new_ffn = old.ffn.reshard(&map, 7);
+        let moved = old.ffn.moved_blocks(&map, &new_ffn);
+        let lost = old.ffn.blocks_of(0).len();
+        assert!(moved <= lost + 7, "moved {moved} vs lost {lost}");
+    }
+}

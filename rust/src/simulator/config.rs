@@ -1,0 +1,80 @@
+//! Named system configurations: which combination of FailSafe's techniques
+//! is active. These are the columns of the paper's comparison figures.
+
+use crate::model::ModelSpec;
+use crate::router::RoutePolicy;
+use crate::sharding::{AttentionPolicy, FfnPolicy, ShardPlan};
+
+/// Prefill batch-forming policy (Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefillPolicy {
+    /// FIFO chunked prefill (one request's chunk can hog the budget).
+    Fifo,
+    /// DP-aware adaptive chunked prefill (Algorithm 1).
+    Adaptive,
+}
+
+/// A complete policy bundle for one simulated system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub name: String,
+    pub attn: AttentionPolicy,
+    pub ffn: FfnPolicy,
+    pub router: RoutePolicy,
+    pub prefill: PrefillPolicy,
+}
+
+impl SystemConfig {
+    /// Standard uniform TP (the engine's TP4/TP8 configurations). Placement
+    /// policies are irrelevant at uniform world sizes — all reduce to the
+    /// same layout — so this doubles as the fault-free upper bound.
+    pub fn standard() -> Self {
+        SystemConfig {
+            name: "Standard-TP".into(),
+            attn: AttentionPolicy::NaiveContiguous,
+            ffn: FfnPolicy::Contiguous,
+            router: RoutePolicy::RoundRobin,
+            prefill: PrefillPolicy::Fifo,
+        }
+    }
+
+    /// Naive non-uniform TP (the paper's `Nonuniform-TP` baseline): runs on
+    /// irregular world sizes but with contiguous placement, round-robin
+    /// routing and FIFO prefill.
+    pub fn nonuniform() -> Self {
+        SystemConfig { name: "Nonuniform-TP".into(), ..Self::standard() }
+    }
+
+    /// Nonuniform-TP + cyclic memory placement (Fig 11 "+Memory-balancing").
+    pub fn memory_balanced() -> Self {
+        SystemConfig {
+            name: "+Memory-balancing".into(),
+            attn: AttentionPolicy::Cyclic,
+            ffn: FfnPolicy::Commutative,
+            router: RoutePolicy::RoundRobin,
+            prefill: PrefillPolicy::Fifo,
+        }
+    }
+
+    /// Full FailSafe: hybrid attention + cyclic placement + load-aware
+    /// router + adaptive chunked prefill (Fig 11 "+Compute-balancing").
+    pub fn failsafe() -> Self {
+        SystemConfig {
+            name: "FailSafe".into(),
+            attn: AttentionPolicy::Hybrid,
+            ffn: FfnPolicy::Commutative,
+            router: RoutePolicy::LeastLoaded,
+            prefill: PrefillPolicy::Adaptive,
+        }
+    }
+
+    /// Build the shard plan this config uses at world size `world`.
+    pub fn plan(&self, model: &ModelSpec, world: usize) -> ShardPlan {
+        ShardPlan::new(model, world, self.attn, self.ffn)
+    }
+
+    pub fn with_name(mut self, name: &str) -> Self {
+        self.name = name.into();
+        self
+    }
+}

@@ -1,0 +1,352 @@
+//! Analytic step-time model: per-rank roofline over the shard plan.
+//!
+//! Tensor parallelism synchronizes at every layer boundary (all-reduce
+//! after attention and after FFN), so the step time is the **sum over
+//! layers of the per-layer straggler** plus collective and launch
+//! overheads. This is exactly the mechanism behind the paper's §2.2.1
+//! observation: naive non-uniform TP leaves every layer waiting for the
+//! rank with ⌈H/W⌉ heads (up to 2× attention slowdown), while hybrid
+//! attention + load-aware routing flattens the per-layer profile.
+
+use crate::cluster::{GpuSpec, Interconnect};
+use crate::model::ModelSpec;
+use crate::sharding::ShardPlan;
+use crate::RankId;
+
+/// One prefill chunk's work: `tokens` new tokens on top of `context`.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillWork {
+    pub tokens: usize,
+    pub context: usize,
+    /// Home DP rank of the owning request.
+    pub home: RankId,
+}
+
+/// One decode request's work: a single new token against `context`.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeWork {
+    pub context: usize,
+    pub home: RankId,
+}
+
+/// Pre-computed per-plan constants for fast step costing.
+#[derive(Debug, Clone)]
+pub struct StepCostModel {
+    model: ModelSpec,
+    spec: GpuSpec,
+    ic: Interconnect,
+    world: usize,
+    /// `tp_heads[l][r]` = TP KV-head groups owned by rank r in layer l.
+    tp_heads: Vec<Vec<u16>>,
+    /// DP-replicated heads per layer.
+    dp_heads: Vec<u16>,
+    /// FFN columns per rank (identical across layers).
+    ffn_cols: Vec<usize>,
+    /// Per-rank resident weight bytes (for memory-bound decode).
+    weight_bytes: Vec<usize>,
+}
+
+impl StepCostModel {
+    pub fn new(plan: &ShardPlan, spec: &GpuSpec, ic: &Interconnect) -> Self {
+        let world = plan.world();
+        let tp_heads: Vec<Vec<u16>> = plan
+            .heads
+            .layers
+            .iter()
+            .map(|lh| {
+                let mut counts = vec![0u16; world];
+                for &o in &lh.owner {
+                    if o != crate::sharding::DP_OWNER {
+                        counts[o] += 1;
+                    }
+                }
+                counts
+            })
+            .collect();
+        let dp_heads = plan.heads.layers.iter().map(|lh| lh.n_dp() as u16).collect();
+        let cols_per_block = plan.model.d_ff / plan.ffn.n_blocks;
+        let ffn_cols = (0..world)
+            .map(|r| plan.ffn.blocks_of(r).len() * cols_per_block)
+            .collect();
+        let weight_bytes = plan.rank_loads().iter().map(|l| l.weight_bytes).collect();
+        StepCostModel {
+            model: plan.model.clone(),
+            spec: spec.clone(),
+            ic: ic.clone(),
+            world,
+            tp_heads,
+            dp_heads,
+            ffn_cols,
+            weight_bytes,
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    /// All-reduce bytes per layer boundary for `tokens` tokens.
+    fn allreduce_bytes(&self, tokens: usize) -> usize {
+        tokens * self.model.d_model * self.model.dtype_bytes
+    }
+
+    /// Step time for a prefill batch (compute-bound regime).
+    ///
+    /// `chunks` — the chunk set formed by the scheduler. Attention and FFN
+    /// FLOPs are attributed per rank per layer; the step pays the per-layer
+    /// straggler (Σ_l max_r), two all-reduces per layer, and fixed launch
+    /// overhead per layer.
+    pub fn prefill_step_time(&self, chunks: &[PrefillWork]) -> f64 {
+        if chunks.is_empty() {
+            return 0.0;
+        }
+        let m = &self.model;
+        let total_tokens: usize = chunks.iter().map(|c| c.tokens).sum();
+
+        // Per-head-group attention flops for the whole chunk set (TP part
+        // sees every chunk), and per-home-rank flops (DP part).
+        let mut tp_attn_flops = 0.0;
+        let mut dp_attn_flops = vec![0.0; self.world];
+        for c in chunks {
+            let f = m.attn_flops(c.tokens, c.context);
+            tp_attn_flops += f.per_head_group();
+            dp_attn_flops[c.home] += f.per_head_group();
+        }
+        let ffn = m.ffn_flops(total_tokens);
+
+        // Sum over layers of the per-layer straggler.
+        let eff = self.spec.effective_flops();
+        let mut sum_layer_max = 0.0;
+        for l in 0..m.n_layers {
+            let mut layer_max: f64 = 0.0;
+            for r in 0..self.world {
+                let flops = self.tp_heads[l][r] as f64 * tp_attn_flops
+                    + if self.dp_heads[l] > 0 {
+                        self.dp_heads[l] as f64 * dp_attn_flops[r]
+                    } else {
+                        0.0
+                    }
+                    + ffn.per_col * self.ffn_cols[r] as f64 * m.experts_per_token as f64;
+                layer_max = layer_max.max(flops / eff);
+            }
+            sum_layer_max += layer_max;
+        }
+
+        let collectives =
+            2.0 * m.n_layers as f64 * self.ic.allreduce_time(self.world, self.allreduce_bytes(total_tokens));
+        let launches = 2.0 * m.n_layers as f64 * self.spec.kernel_launch_s;
+        sum_layer_max + collectives + launches
+    }
+
+    /// Step time for a decode batch (memory-bound regime).
+    ///
+    /// Per layer per rank, the step streams: resident weights (read once
+    /// per step regardless of batch — the amortization that makes batch
+    /// size matter), the KV of TP heads for *every* request, and the KV of
+    /// DP heads for requests homed on the rank.
+    pub fn decode_step_time(&self, batch: &[DecodeWork]) -> f64 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let m = &self.model;
+        let b = batch.len();
+        let kvb = m.kv_bytes_per_token_per_head_layer() as f64;
+
+        let total_ctx: usize = batch.iter().map(|d| d.context).sum();
+        let mut dp_ctx = vec![0usize; self.world];
+        for d in batch {
+            dp_ctx[d.home] += d.context;
+        }
+
+        // Flops per head-group for one token (context-dependent part).
+        let mut tp_attn_flops = 0.0;
+        let mut dp_attn_flops = vec![0.0; self.world];
+        for d in batch {
+            let f = m.attn_flops(1, d.context);
+            tp_attn_flops += f.per_head_group();
+            dp_attn_flops[d.home] += f.per_head_group();
+        }
+        let ffn = m.ffn_flops(b);
+
+        // MoE decode touches only routed experts; with batch b and top-k
+        // routing, the expected fraction of expert weights touched is
+        // 1-(1-k/E)^b, saturating quickly.
+        let expert_frac = if m.is_moe() {
+            let k = m.experts_per_token as f64 / m.n_experts as f64;
+            1.0 - (1.0 - k).powi(b as i32)
+        } else {
+            1.0
+        };
+
+        let eff = self.spec.effective_flops();
+        let bw = self.spec.hbm_bw;
+        // Per-rank per-layer weight bytes (amortized over layers).
+        let attn_w_per_hg = m.head_group_weight_bytes() as f64;
+        let ffn_w_per_col = m.ffn_col_weight_bytes() as f64 * m.n_experts as f64 * expert_frac;
+
+        let mut sum_layer_max = 0.0;
+        for l in 0..m.n_layers {
+            let mut layer_max: f64 = 0.0;
+            let dp = self.dp_heads[l] as f64;
+            for r in 0..self.world {
+                let tp = self.tp_heads[l][r] as f64;
+                let flops = tp * tp_attn_flops
+                    + dp * dp_attn_flops[r]
+                    + ffn.per_col * self.ffn_cols[r] as f64 * m.experts_per_token as f64;
+                let bytes = (tp + dp) * attn_w_per_hg
+                    + self.ffn_cols[r] as f64 * ffn_w_per_col
+                    + tp * total_ctx as f64 * kvb
+                    + dp * dp_ctx[r] as f64 * kvb;
+                layer_max = layer_max.max((flops / eff).max(bytes / bw));
+            }
+            sum_layer_max += layer_max;
+        }
+
+        let collectives =
+            2.0 * m.n_layers as f64 * self.ic.allreduce_time(self.world, self.allreduce_bytes(b));
+        let launches = 2.0 * m.n_layers as f64 * self.spec.kernel_launch_s;
+        sum_layer_max + collectives + launches
+    }
+
+    /// Per-rank KV bytes per cached token (TP share; DP share goes to the
+    /// home rank) — used by simulators for capacity admission.
+    pub fn kv_rates(&self) -> (Vec<f64>, f64) {
+        let kvb = self.model.kv_bytes_per_token_per_head_layer() as f64;
+        let tp: Vec<f64> = (0..self.world)
+            .map(|r| {
+                (0..self.model.n_layers).map(|l| self.tp_heads[l][r] as f64).sum::<f64>() * kvb
+            })
+            .collect();
+        let dp: f64 = self.dp_heads.iter().map(|&d| d as f64).sum::<f64>() * kvb;
+        (tp, dp)
+    }
+
+    /// KV capacity budget per rank given resident weights.
+    pub fn kv_budget(&self) -> Vec<usize> {
+        (0..self.world)
+            .map(|r| {
+                self.spec
+                    .hbm_bytes
+                    .saturating_sub(self.weight_bytes[r] + self.spec.hbm_bytes / 16)
+            })
+            .collect()
+    }
+
+    pub fn weight_bytes(&self) -> &[usize] {
+        &self.weight_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{llama3_70b, mixtral_8x22b};
+    use crate::sharding::ShardPlan;
+
+    fn cm(plan: &ShardPlan) -> StepCostModel {
+        let spec = GpuSpec::h100();
+        let ic = Interconnect::new(spec.clone());
+        StepCostModel::new(plan, &spec, &ic)
+    }
+
+    fn uniform_batch(n: usize, ctx: usize, world: usize) -> Vec<DecodeWork> {
+        (0..n).map(|i| DecodeWork { context: ctx, home: i % world }).collect()
+    }
+
+    #[test]
+    fn tp8_faster_than_tp4_decode() {
+        let m = llama3_70b();
+        let c8 = cm(&ShardPlan::failsafe(&m, 8));
+        let c4 = cm(&ShardPlan::failsafe(&m, 4));
+        let t8 = c8.decode_step_time(&uniform_batch(64, 4096, 8));
+        let t4 = c4.decode_step_time(&uniform_batch(64, 4096, 4));
+        assert!(t8 < t4, "t8 {t8} t4 {t4}");
+        assert!(t4 / t8 > 1.5 && t4 / t8 < 2.5, "ratio {}", t4 / t8);
+    }
+
+    #[test]
+    fn naive_tp7_attention_straggles_vs_hybrid() {
+        // Fig 2 / Fig 10 mechanism: naive TP7 pays the 2-head straggler
+        // every layer; hybrid pays ~8/7 heads' worth.
+        let m = llama3_70b();
+        let naive = cm(&ShardPlan::nonuniform_naive(&m, 7));
+        let fs = cm(&ShardPlan::failsafe(&m, 7));
+        // Long context so attention dominates.
+        let batch = uniform_batch(56, 16_384, 7);
+        let tn = naive.decode_step_time(&batch);
+        let tf = fs.decode_step_time(&batch);
+        assert!(tn > tf * 1.15, "naive {tn} vs hybrid {tf}");
+    }
+
+    #[test]
+    fn hybrid_tp8_equals_standard_tp8() {
+        // At uniform world sizes all policies coincide (Fig 10: identical
+        // performance at TP4/TP8).
+        let m = llama3_70b();
+        let a = cm(&ShardPlan::failsafe(&m, 8));
+        let b = cm(&ShardPlan::nonuniform_naive(&m, 8));
+        let batch = uniform_batch(32, 8192, 8);
+        let ta = a.decode_step_time(&batch);
+        let tb = b.decode_step_time(&batch);
+        assert!((ta - tb).abs() / tb < 1e-9, "{ta} vs {tb}");
+    }
+
+    #[test]
+    fn skewed_homes_slow_hybrid_decode() {
+        // All requests homed on rank 0 → DP attention straggles; the
+        // load-aware router exists to prevent exactly this.
+        let m = llama3_70b();
+        let fs = cm(&ShardPlan::failsafe(&m, 7));
+        let balanced = uniform_batch(56, 16_384, 7);
+        let skewed: Vec<DecodeWork> =
+            (0..56).map(|_| DecodeWork { context: 16_384, home: 0 }).collect();
+        let tb = fs.decode_step_time(&balanced);
+        let ts = fs.decode_step_time(&skewed);
+        assert!(ts > tb * 1.1, "skewed {ts} vs balanced {tb}");
+    }
+
+    #[test]
+    fn prefill_compute_bound_scales_with_tokens() {
+        let m = llama3_70b();
+        let c = cm(&ShardPlan::failsafe(&m, 8));
+        let t1 = c.prefill_step_time(&[PrefillWork { tokens: 1024, context: 0, home: 0 }]);
+        let t2 = c.prefill_step_time(&[PrefillWork { tokens: 2048, context: 0, home: 0 }]);
+        assert!(t2 > 1.9 * t1, "{t2} vs {t1}");
+        // Sanity: 2k-token prefill on 8×H100 should be O(100ms).
+        assert!((0.01..1.0).contains(&t2), "t2 {t2}");
+    }
+
+    #[test]
+    fn decode_step_sane_absolute_range() {
+        // 64-request batch at 4k ctx on TP8 H100 ≈ tens of ms per token.
+        let m = llama3_70b();
+        let c = cm(&ShardPlan::failsafe(&m, 8));
+        let t = c.decode_step_time(&uniform_batch(64, 4096, 8));
+        assert!((0.005..0.2).contains(&t), "step {t}");
+    }
+
+    #[test]
+    fn moe_expert_fraction_saturates() {
+        let m = mixtral_8x22b();
+        let c = cm(&ShardPlan::failsafe(&m, 8));
+        let t_small = c.decode_step_time(&uniform_batch(1, 1024, 8));
+        let t_big = c.decode_step_time(&uniform_batch(64, 1024, 8));
+        // 64× the batch must cost far less than 64× the time (weights amortize).
+        assert!(t_big < t_small * 8.0, "small {t_small} big {t_big}");
+    }
+
+    #[test]
+    fn kv_rates_balanced_for_failsafe() {
+        let m = llama3_70b();
+        let c = cm(&ShardPlan::failsafe(&m, 7));
+        let (tp, dp) = c.kv_rates();
+        let min = tp.iter().cloned().fold(f64::MAX, f64::min);
+        let max = tp.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min < 1.01);
+        assert!(dp > 0.0);
+    }
+}

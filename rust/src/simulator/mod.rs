@@ -1,0 +1,27 @@
+//! The discrete-event performance simulator.
+//!
+//! Regenerates the paper's H100-scale evaluation figures on top of the
+//! [`crate::cluster`] hardware model. The simulator executes the *same*
+//! coordinator logic (shard plans, router, scheduler, recovery planner) as
+//! the real engine — only the per-step GPU time comes from the analytic
+//! roofline cost model instead of a PJRT execution.
+//!
+//! * [`StepCostModel`] — per-rank step times for prefill/decode batches
+//!   under any shard plan (the straggler max is taken per layer, which is
+//!   what makes naive non-uniform TP slow and hybrid attention fast).
+//! * [`SystemConfig`] — a named bundle of placement/routing/scheduling
+//!   policies (Standard-TP, Nonuniform-TP, FailSafe, and the Fig 11
+//!   ablation points).
+//! * [`OnlineSim`] — event-driven online serving (prefill or decode
+//!   instance, P-D disaggregated as in §4.2) with fault injection.
+//! * [`offline`] — steady-state throughput for the Fig 8 fault-trace
+//!   integration.
+
+mod config;
+mod costmodel;
+pub mod offline;
+mod online;
+
+pub use config::{PrefillPolicy, SystemConfig};
+pub use costmodel::{DecodeWork, PrefillWork, StepCostModel};
+pub use online::{OnlineMode, OnlineOutcome, OnlineSim, RecoveryEvent};

@@ -1,0 +1,460 @@
+//! Event-driven online serving simulation (P-D disaggregated, §4.2).
+//!
+//! A simulated instance is either a **prefill instance** (measures TTFT
+//! and input-token throughput) or a **decode instance** (measures TBT and
+//! generated-token throughput) — mirroring the paper's separate reporting.
+//! The decode instance supports mid-run GPU failure with any
+//! [`RecoveryMethod`], which is how Fig 12 / Table 3 are produced.
+
+use crate::kvcache::BackupStore;
+use crate::metrics::ServingMetrics;
+use crate::recovery::{plan_recovery, BackupDaemon, RecoveryInput, RecoveryMethod};
+use crate::router::DpRouter;
+use crate::scheduler::{adaptive_chunked_prefill, fifo_chunked_prefill, PrefillItem};
+use crate::traces::TraceRequest;
+use crate::cluster::{GpuSpec, Interconnect};
+use crate::{RankId, RequestId, SimTime};
+
+use super::costmodel::{DecodeWork, PrefillWork, StepCostModel};
+use super::{PrefillPolicy, SystemConfig};
+
+/// Which serving stage this instance simulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnlineMode {
+    Prefill,
+    Decode,
+}
+
+/// A GPU failure to inject mid-run.
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryEvent {
+    /// Inject 100 ms after this many requests have arrived (paper §4.3.3
+    /// injects after the 250th request of a 500-request window).
+    pub after_requests: usize,
+    /// The failing rank (old numbering).
+    pub failed_rank: RankId,
+    /// Recovery strategy to apply.
+    pub method: RecoveryMethod,
+}
+
+/// Results of one simulated run.
+#[derive(Debug)]
+pub struct OnlineOutcome {
+    pub metrics: ServingMetrics,
+    /// GPU state recovery latency, if a failure was injected (Table 3).
+    pub recovery_latency_s: Option<f64>,
+    /// Steps executed (telemetry).
+    pub steps: usize,
+    /// Final world size.
+    pub world: usize,
+}
+
+/// Online serving simulator for one TP instance.
+pub struct OnlineSim {
+    pub config: SystemConfig,
+    pub mode: OnlineMode,
+    pub world: usize,
+    pub spec: GpuSpec,
+    /// The served model (defaults to llama-3.1-70B).
+    pub model: crate::model::ModelSpec,
+    /// Prefill token budget per batch (Algorithm 1's `N`).
+    pub token_budget: usize,
+    /// Decode batch cap.
+    pub max_batch: usize,
+    /// Fraction of PCIe bandwidth reserved for background KV backup.
+    pub backup_fraction: f64,
+}
+
+struct Running {
+    id: RequestId,
+    home: RankId,
+    context: usize,
+    remaining_out: usize,
+}
+
+impl OnlineSim {
+    pub fn new(config: SystemConfig, mode: OnlineMode, world: usize) -> Self {
+        OnlineSim {
+            config,
+            mode,
+            world,
+            spec: GpuSpec::h100(),
+            model: crate::model::llama3_70b(),
+            token_budget: 8192,
+            max_batch: 256,
+            backup_fraction: 0.25,
+        }
+    }
+
+    /// Select the served model.
+    pub fn with_model(mut self, model: crate::model::ModelSpec) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// Run the trace to completion (or until `max_sim_time`).
+    pub fn run(&self, trace: &[TraceRequest], fault: Option<RecoveryEvent>) -> OnlineOutcome {
+        match self.mode {
+            OnlineMode::Prefill => self.run_prefill(trace),
+            OnlineMode::Decode => self.run_decode(trace, fault),
+        }
+    }
+
+    // ---------------------------------------------------------- prefill --
+
+    fn run_prefill(&self, trace: &[TraceRequest]) -> OnlineOutcome {
+        let model = self.model.clone();
+        let model = &model;
+        let plan = self.config.plan(model, self.world);
+        let cost = StepCostModel::new(&plan, &self.spec, &Interconnect::new(self.spec.clone()));
+        let mut metrics = ServingMetrics::new();
+        let mut router = DpRouter::new(self.config.router, self.world);
+
+        let mut arrivals: Vec<&TraceRequest> = trace.iter().collect();
+        arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut next_arrival = 0usize;
+        let mut items: Vec<PrefillItem> = Vec::new();
+        let mut clock: SimTime = 0.0;
+        let mut steps = 0usize;
+
+        loop {
+            // Admit arrivals.
+            while next_arrival < arrivals.len() && arrivals[next_arrival].arrival <= clock {
+                let r = arrivals[next_arrival];
+                metrics.on_arrival(r.id, r.arrival);
+                let home = router.route(r.input_tokens as f64);
+                items.push(PrefillItem {
+                    request: r.id,
+                    rank: home,
+                    context: 0,
+                    remaining: r.input_tokens,
+                });
+                next_arrival += 1;
+            }
+            if items.is_empty() {
+                if next_arrival >= arrivals.len() {
+                    break;
+                }
+                clock = arrivals[next_arrival].arrival;
+                continue;
+            }
+
+            // Form the batch under the configured policy. Algorithm 1
+            // initializes L_r <- 0: balance is *within-batch* (seeding with
+            // the whole backlog would funnel the budget to one rank).
+            let carry = vec![0.0; self.world];
+            let batch = match self.config.prefill {
+                PrefillPolicy::Fifo => {
+                    fifo_chunked_prefill(self.token_budget, &items, &carry, self.world)
+                }
+                PrefillPolicy::Adaptive => {
+                    adaptive_chunked_prefill(self.token_budget, &items, &carry, self.world, 16)
+                }
+            };
+            if batch.tokens == 0 {
+                break; // defensive: nothing schedulable
+            }
+
+            // Cost the step.
+            let work: Vec<PrefillWork> = batch
+                .chunks
+                .iter()
+                .map(|c| {
+                    let it = items.iter().find(|i| i.request == c.request).unwrap();
+                    PrefillWork { tokens: c.tokens, context: it.context, home: c.rank }
+                })
+                .collect();
+            let dt = cost.prefill_step_time(&work);
+            clock += dt;
+            steps += 1;
+
+            // Apply chunk progress.
+            for c in &batch.chunks {
+                let it = items.iter_mut().find(|i| i.request == c.request).unwrap();
+                it.context += c.tokens;
+                it.remaining -= c.tokens;
+                router.complete(c.rank, c.tokens as f64);
+                metrics.on_prefill_tokens(c.tokens);
+            }
+            // Finished prefills emit their first token.
+            items.retain(|it| {
+                if it.remaining == 0 {
+                    metrics.on_token(it.request, clock);
+                    metrics.on_finish(it.request);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+
+        OnlineOutcome { metrics, recovery_latency_s: None, steps, world: self.world }
+    }
+
+    // ----------------------------------------------------------- decode --
+
+    fn run_decode(&self, trace: &[TraceRequest], fault: Option<RecoveryEvent>) -> OnlineOutcome {
+        let model = self.model.clone();
+        let ic = Interconnect::new(self.spec.clone());
+        let mut plan = self.config.plan(&model, self.world);
+        let mut cost = StepCostModel::new(&plan, &self.spec, &ic);
+        let mut world = self.world;
+
+        let mut metrics = ServingMetrics::new();
+        let mut router = DpRouter::new(self.config.router, world);
+        let mut backup = BackupStore::new(1 << 42);
+        let mut daemon =
+            BackupDaemon::new(self.spec.pcie_bw, self.backup_fraction, model.kv_bytes_per_token());
+
+        let mut arrivals: Vec<&TraceRequest> = trace.iter().collect();
+        arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut next_arrival = 0usize;
+        let mut waiting: Vec<(RequestId, usize, usize)> = Vec::new(); // (id, ctx, out)
+        let mut running: Vec<Running> = Vec::new();
+        let (mut tp_rate, mut dp_rate) = cost.kv_rates();
+        let mut kv_budget = cost.kv_budget();
+        let mut kv_used = vec![0.0f64; world];
+        let mut clock: SimTime = 0.0;
+        let mut steps = 0usize;
+        let mut fault_at: Option<SimTime> = None;
+        let mut fault_done = false;
+        let mut recovery_latency = None;
+
+        loop {
+            // Admit arrivals into the waiting queue.
+            while next_arrival < arrivals.len() && arrivals[next_arrival].arrival <= clock {
+                let r = arrivals[next_arrival];
+                metrics.on_arrival(r.id, r.arrival);
+                metrics.on_prefill_tokens(r.input_tokens);
+                waiting.push((r.id, r.input_tokens, r.output_tokens.max(1)));
+                next_arrival += 1;
+                if let Some(f) = fault {
+                    if !fault_done && fault_at.is_none() && next_arrival >= f.after_requests {
+                        fault_at = Some(r.arrival + 0.1);
+                    }
+                }
+            }
+
+            // Inject the failure.
+            if let (Some(f), Some(at)) = (fault, fault_at) {
+                if !fault_done && clock >= at {
+                    let reqs: Vec<(RequestId, usize, RankId)> =
+                        running.iter().map(|r| (r.id, r.context, r.home)).collect();
+                    let survivor_map: Vec<Option<RankId>> = (0..world)
+                        .map(|r| {
+                            if r == f.failed_rank {
+                                None
+                            } else {
+                                Some(if r < f.failed_rank { r } else { r - 1 })
+                            }
+                        })
+                        .collect();
+                    let new_plan = SystemConfig {
+                        // recovery keeps the configured policies
+                        ..self.config.clone()
+                    }
+                    .plan(&model, world - 1);
+                    let input = RecoveryInput {
+                        spec: &self.spec,
+                        ic: &ic,
+                        old_plan: &plan,
+                        new_plan: &new_plan,
+                        survivor_map: &survivor_map,
+                        failed_rank: f.failed_rank,
+                        requests: &reqs,
+                        backup: &backup,
+                    };
+                    let outcome = plan_recovery(f.method, &input);
+                    recovery_latency = Some(outcome.total_s);
+                    clock += outcome.total_s; // the stall every in-flight request sees
+                    // Reconfigure to the reduced world.
+                    world -= 1;
+                    plan = new_plan;
+                    cost = StepCostModel::new(&plan, &self.spec, &ic);
+                    let rates = cost.kv_rates();
+                    tp_rate = rates.0;
+                    dp_rate = rates.1;
+                    kv_budget = cost.kv_budget();
+                    router = router.remap(&survivor_map, world);
+                    // Re-home requests of the failed rank; recompute KV usage.
+                    kv_used = vec![0.0; world];
+                    for r in running.iter_mut() {
+                        r.home = survivor_map[r.home].unwrap_or_else(|| router.tracker().least_loaded());
+                        for (ru, used) in kv_used.iter_mut().enumerate() {
+                            *used += tp_rate[ru] * r.context as f64;
+                        }
+                        kv_used[r.home] += dp_rate * r.context as f64;
+                    }
+                    fault_done = true;
+                }
+            }
+
+            // Admit from waiting while KV fits (project to full output length).
+            waiting.retain(|&(id, ctx, out)| {
+                let total = (ctx + out) as f64;
+                let fits = (0..world).all(|r| {
+                    let add = tp_rate[r] * total
+                        + if r == router.tracker().least_loaded() { dp_rate * total } else { 0.0 };
+                    kv_used[r] + add <= kv_budget[r] as f64 * 0.97
+                }) && running.len() < self.max_batch;
+                if fits {
+                    let home = router.route(ctx as f64);
+                    for (r, used) in kv_used.iter_mut().enumerate() {
+                        *used += tp_rate[r] * ctx as f64;
+                    }
+                    kv_used[home] += dp_rate * ctx as f64;
+                    // P-D disaggregation: the prefill instance ships this
+                    // request's KV through host DRAM, so the input context
+                    // is host-mirrored the moment the decode instance
+                    // admits it; the daemon only trails the decode tokens.
+                    backup.backup(id, ctx, model.kv_bytes_per_token());
+                    running.push(Running { id, home, context: ctx, remaining_out: out });
+                    false
+                } else {
+                    true
+                }
+            });
+
+            if running.is_empty() {
+                if next_arrival >= arrivals.len() && waiting.is_empty() {
+                    break;
+                }
+                if next_arrival < arrivals.len() {
+                    clock = clock.max(arrivals[next_arrival].arrival);
+                    // If also waiting requests can never fit → avoid livelock.
+                    if waiting.len() >= self.max_batch {
+                        break;
+                    }
+                    continue;
+                }
+                // Waiting requests that can never fit (cold system): bail.
+                break;
+            }
+
+            // One decode step.
+            let work: Vec<DecodeWork> = running
+                .iter()
+                .map(|r| DecodeWork { context: r.context, home: r.home })
+                .collect();
+            let dt = cost.decode_step_time(&work);
+            clock += dt;
+            steps += 1;
+            daemon.advance(dt, &mut backup);
+
+            let mut finished: Vec<usize> = Vec::new();
+            for (i, r) in running.iter_mut().enumerate() {
+                metrics.on_token(r.id, clock);
+                daemon.produced(r.id, r.context, r.context + 1);
+                r.context += 1;
+                r.remaining_out -= 1;
+                for (ru, used) in kv_used.iter_mut().enumerate() {
+                    *used += tp_rate[ru];
+                }
+                kv_used[r.home] += dp_rate;
+                if r.remaining_out == 0 {
+                    finished.push(i);
+                }
+            }
+            for &i in finished.iter().rev() {
+                let r = running.swap_remove(i);
+                metrics.on_finish(r.id);
+                daemon.forget(r.id);
+                backup.release(r.id, model.kv_bytes_per_token());
+                for (ru, used) in kv_used.iter_mut().enumerate() {
+                    *used = (*used - tp_rate[ru] * r.context as f64).max(0.0);
+                }
+                kv_used[r.home] = (kv_used[r.home] - dp_rate * r.context as f64).max(0.0);
+                router.complete(r.home, 0.0);
+            }
+        }
+
+        OnlineOutcome { metrics, recovery_latency_s: recovery_latency, steps, world }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::llama3_70b;
+    use crate::traces::{mooncake_trace, poisson_arrivals};
+
+    fn small_trace(n: usize, rate: f64) -> Vec<TraceRequest> {
+        let mut t = mooncake_trace(n, 11);
+        // Keep realistic (long) contexts — they drive the KV/compute
+        // imbalance under test — but shorten outputs so tests run fast.
+        for r in t.iter_mut() {
+            r.input_tokens = r.input_tokens.min(8192);
+            r.output_tokens = (r.output_tokens / 8).clamp(4, 32);
+        }
+        poisson_arrivals(&mut t, rate, 11);
+        t
+    }
+
+    /// Like `small_trace` but with short inputs for prefill-speed tests.
+    fn tiny_trace(n: usize, rate: f64) -> Vec<TraceRequest> {
+        let mut t = mooncake_trace(n, 11);
+        for r in t.iter_mut() {
+            r.input_tokens = (r.input_tokens / 16).clamp(16, 1024);
+            r.output_tokens = (r.output_tokens / 8).clamp(4, 32);
+        }
+        poisson_arrivals(&mut t, rate, 11);
+        t
+    }
+
+    #[test]
+    fn decode_sim_completes_all_requests() {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b());
+        let trace = small_trace(40, 5.0);
+        let out = sim.run(&trace, None);
+        assert_eq!(out.metrics.n_requests(), 40);
+        assert!(out.metrics.output_throughput() > 0.0);
+        assert!(out.steps > 0);
+    }
+
+    #[test]
+    fn prefill_sim_ttft_increases_with_rate() {
+        let mk = |rate| {
+            let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Prefill, 8)
+                .with_model(llama3_70b());
+            let trace = tiny_trace(60, rate);
+            let out = sim.run(&trace, None);
+            out.metrics.ttft.p90()
+        };
+        let slow = mk(0.5);
+        let fast = mk(50.0);
+        assert!(fast > slow, "p90 TTFT at high rate {fast} must exceed low rate {slow}");
+    }
+
+    #[test]
+    fn failsafe_tp7_decode_beats_nonuniform() {
+        let trace = small_trace(60, 10_000.0); // effectively offline (saturating)
+        let run = |cfg: SystemConfig| {
+            let sim =
+                OnlineSim::new(cfg, OnlineMode::Decode, 7).with_model(llama3_70b());
+            sim.run(&trace, None).metrics.output_throughput()
+        };
+        let fs = run(SystemConfig::failsafe());
+        let nu = run(SystemConfig::nonuniform());
+        assert!(fs > nu * 1.1, "failsafe {fs} vs nonuniform {nu}");
+    }
+
+    #[test]
+    fn recovery_stall_creates_tbt_spike() {
+        let trace = small_trace(100, 20.0);
+        let run = |method: RecoveryMethod| {
+            let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+                .with_model(llama3_70b());
+            let out = sim.run(
+                &trace,
+                Some(RecoveryEvent { after_requests: 50, failed_rank: 3, method }),
+            );
+            (out.recovery_latency_s.unwrap(), out.world)
+        };
+        let (rec, w1) = run(RecoveryMethod::Recompute);
+        let (full, w2) = run(RecoveryMethod::Full);
+        assert_eq!(w1, 7);
+        assert_eq!(w2, 7);
+        assert!(rec > 10.0 * full, "recompute {rec} vs full {full}");
+    }
+}

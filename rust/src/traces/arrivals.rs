@@ -1,0 +1,51 @@
+//! Arrival processes: Poisson stamping and rate rescaling.
+
+use super::TraceRequest;
+use crate::util::Rng;
+
+/// Stamp Poisson arrivals at `rate` requests/second onto a trace (in
+/// place order). This is how the Mooncake trace is replayed at different
+/// request rates (§4.2: "scale the timestamp for scanning different
+/// request rates").
+pub fn poisson_arrivals(reqs: &mut [TraceRequest], rate: f64, seed: u64) {
+    assert!(rate > 0.0);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t = 0.0;
+    for r in reqs.iter_mut() {
+        t += rng.exp(rate);
+        r.arrival = t;
+    }
+}
+
+/// Rescale existing arrival timestamps by `factor` (>1 → slower arrivals).
+pub fn scale_arrivals(reqs: &mut [TraceRequest], factor: f64) {
+    for r in reqs.iter_mut() {
+        r.arrival *= factor;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::mooncake_trace;
+
+    #[test]
+    fn poisson_rate_approximately_met() {
+        let mut reqs = mooncake_trace(5000, 3);
+        poisson_arrivals(&mut reqs, 10.0, 3);
+        let span = reqs.last().unwrap().arrival;
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 10.0).abs() / 10.0 < 0.1, "rate {rate}");
+        // monotone arrivals
+        assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn scaling_changes_rate_linearly() {
+        let mut reqs = mooncake_trace(100, 4);
+        poisson_arrivals(&mut reqs, 5.0, 4);
+        let before = reqs.last().unwrap().arrival;
+        scale_arrivals(&mut reqs, 2.0);
+        assert!((reqs.last().unwrap().arrival - 2.0 * before).abs() < 1e-9);
+    }
+}

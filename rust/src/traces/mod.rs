@@ -1,0 +1,18 @@
+//! Workload and availability traces.
+//!
+//! The paper evaluates on three external datasets we do not have:
+//! OpenThoughts-114k (offline workload, Table 1), the Mooncake conversation
+//! trace (online workload, Table 2), and a GCP cloud availability trace
+//! (Fig 5). Each generator here reproduces the *published statistics* of
+//! its dataset (length moments, arrival process, availability dynamics)
+//! with a seeded RNG, which is what the experiments actually consume.
+
+mod arrivals;
+mod gcp;
+mod lengths;
+mod request;
+
+pub use arrivals::{poisson_arrivals, scale_arrivals};
+pub use gcp::gcp_availability;
+pub use lengths::{mooncake_trace, openthoughts_trace, TraceStats};
+pub use request::TraceRequest;

@@ -1,0 +1,23 @@
+//! The trace record consumed by simulators and the real engine.
+
+
+use crate::{RequestId, SimTime};
+
+/// One request of a workload trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRequest {
+    pub id: RequestId,
+    /// Arrival time; 0 for offline (all-at-once) workloads.
+    pub arrival: SimTime,
+    /// Prompt length in tokens.
+    pub input_tokens: usize,
+    /// Generation length in tokens (oracle from the trace; the simulator
+    /// decodes exactly this many).
+    pub output_tokens: usize,
+}
+
+impl TraceRequest {
+    pub fn total_tokens(&self) -> usize {
+        self.input_tokens + self.output_tokens
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-contained utilities that replace unavailable third-party
+//! crates in this offline build (see the note in `Cargo.toml`).
+
+pub mod cli;
+pub mod rng;
+
+pub use rng::Rng;

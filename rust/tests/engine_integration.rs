@@ -1,0 +1,255 @@
+//! End-to-end engine integration: the rust coordinator executing real AOT
+//! artifacts must reproduce the unsharded model under every TP width,
+//! hybrid attention, chunked prefill, batching, and failure recovery.
+//!
+//! Requires `make artifacts` (the `test` make target guarantees it).
+
+use failsafe::config::EngineConfig;
+use failsafe::engine::Engine;
+use failsafe::model::small_real;
+use failsafe::recovery::RecoveryMethod;
+use failsafe::simulator::SystemConfig;
+use failsafe::util::Rng;
+
+fn config(world: usize, system: SystemConfig) -> EngineConfig {
+    EngineConfig {
+        model: small_real(),
+        system,
+        world,
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
+        ..EngineConfig::default()
+    }
+}
+
+fn prompts(n: usize, len_min: usize, len_max: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.range(len_min, len_max + 1);
+            (0..len).map(|_| rng.range(1, 512) as u32).collect()
+        })
+        .collect()
+}
+
+fn serve(world: usize, system: SystemConfig, prompts: &[Vec<u32>], max_new: usize) -> Vec<Vec<u32>> {
+    let mut engine = Engine::new(config(world, system)).expect("engine init");
+    for p in prompts {
+        engine.submit(p, max_new).expect("submit");
+    }
+    let report = engine.run_to_completion().expect("serve");
+    assert_eq!(report.results.len(), prompts.len());
+    for r in &report.results {
+        assert_eq!(r.output_tokens.len(), max_new, "request {} short output", r.id);
+    }
+    report.outputs()
+}
+
+/// TP1 (unsharded) is the ground truth — the L2 pytest suite verified it
+/// against the pure-jnp reference. Every other configuration must match.
+#[test]
+fn tp_widths_agree_with_tp1() {
+    let ps = prompts(3, 5, 40, 7);
+    let base = serve(1, SystemConfig::standard(), &ps, 8);
+    for world in 2..=4 {
+        let got = serve(world, SystemConfig::failsafe(), &ps, 8);
+        assert_eq!(got, base, "TP{world} hybrid outputs diverge from TP1");
+    }
+}
+
+/// Naive non-uniform TP (contiguous heads, no DP) must also be exact —
+/// imbalance affects speed, never correctness.
+#[test]
+fn nonuniform_naive_is_exact() {
+    let ps = prompts(2, 10, 30, 21);
+    let base = serve(1, SystemConfig::standard(), &ps, 6);
+    let got = serve(3, SystemConfig::nonuniform(), &ps, 6);
+    assert_eq!(got, base);
+}
+
+/// Chunked prefill with a tiny token budget (many chunks) is exact.
+#[test]
+fn chunked_prefill_exact_under_tiny_budget() {
+    let ps = prompts(2, 50, 120, 33);
+    let base = serve(1, SystemConfig::standard(), &ps, 4);
+    let mut cfg = config(3, SystemConfig::failsafe());
+    cfg.token_budget = 32; // force many small chunks
+    let mut engine = Engine::new(cfg).unwrap();
+    for p in &ps {
+        engine.submit(p, 4).unwrap();
+    }
+    let got = engine.run_to_completion().unwrap().outputs();
+    assert_eq!(got, base);
+}
+
+/// Decode batching across requests with different context lengths is exact.
+#[test]
+fn batched_decode_exact() {
+    let ps = prompts(6, 3, 60, 55);
+    let base: Vec<Vec<u32>> = ps
+        .iter()
+        .map(|p| serve(1, SystemConfig::standard(), std::slice::from_ref(p), 5)[0].clone())
+        .collect();
+    let got = serve(2, SystemConfig::failsafe(), &ps, 5);
+    assert_eq!(got, base);
+}
+
+/// The centerpiece: a mid-decode GPU failure with FailSafe-Full recovery
+/// continues **bit-exact** — same tokens as a run with no failure at all.
+#[test]
+fn failure_with_full_recovery_is_exact() {
+    let ps = prompts(4, 8, 50, 77);
+    let expected = serve(1, SystemConfig::standard(), &ps, 10);
+
+    // Inject the failure before serving starts — weights resharded
+    // TP3→TP2 with no KV yet; outputs must match exactly. (The
+    // mid-generation case is covered by the next test.)
+    let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    for p in &ps {
+        engine.submit(p, 10).unwrap();
+    }
+    // Fail rank 1 before serving starts — weights resharded TP3→TP2, no KV
+    // yet, outputs must match exactly.
+    let latency = engine.inject_failure(1, RecoveryMethod::Full).unwrap();
+    assert!(latency > 0.0);
+    assert_eq!(engine.world(), 2);
+    let got = engine.run_to_completion().unwrap().outputs();
+    assert_eq!(got, expected, "post-failure generation diverged");
+}
+
+/// Failure *mid-generation* with backup restore: continuation is exact.
+#[test]
+fn mid_generation_failure_recovers_from_backup() {
+    let ps = prompts(3, 6, 40, 99);
+    let expected = serve(1, SystemConfig::standard(), &ps, 12);
+
+    // Generate the first 6 tokens, fail rank 0 (Full recovery restores KV
+    // from the host mirror), then produce the remaining 6.
+    let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    for p in &ps {
+        engine.submit(p, 6).unwrap();
+    }
+    let first = engine.run_to_completion().unwrap();
+
+    let latency = engine.inject_failure(0, RecoveryMethod::Full).unwrap();
+    assert!(latency > 0.0 && latency < 10.0, "full recovery should be fast: {latency}");
+    assert_eq!(engine.world(), 2);
+
+    // Resume: extend each finished request by re-submitting its continuation
+    // as a fresh request whose prompt = input + first 6 outputs.
+    let mut cont_ids = Vec::new();
+    for (i, p) in ps.iter().enumerate() {
+        let mut full = p.clone();
+        full.extend(&first.results[i].output_tokens);
+        cont_ids.push(engine.submit(&full, 6).unwrap());
+    }
+    let second = engine.run_to_completion().unwrap();
+
+    for (i, _) in ps.iter().enumerate() {
+        let mut got = first.results[i].output_tokens.clone();
+        let cont = second
+            .results
+            .iter()
+            .find(|r| r.id == cont_ids[i])
+            .unwrap();
+        got.extend(&cont.output_tokens);
+        assert_eq!(got, expected[i], "request {i} diverged after mid-run failure");
+    }
+}
+
+/// Recompute recovery (no backup use) also continues exactly — it re-runs
+/// prefill over the known tokens.
+#[test]
+fn recompute_recovery_is_exact_but_costed_higher() {
+    let ps = prompts(2, 6, 30, 13);
+    let expected = serve(1, SystemConfig::standard(), &ps, 8);
+
+    let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    for p in &ps {
+        engine.submit(p, 8).unwrap();
+    }
+    let lat_recompute = engine.inject_failure(2, RecoveryMethod::Recompute).unwrap();
+    let got = engine.run_to_completion().unwrap().outputs();
+    assert_eq!(got, expected);
+
+    // And the modeled latency must dwarf Full recovery's on the same state.
+    let mut engine2 = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    for p in &ps {
+        engine2.submit(p, 8).unwrap();
+    }
+    let lat_full = engine2.inject_failure(2, RecoveryMethod::Full).unwrap();
+    assert!(
+        lat_recompute > lat_full,
+        "recompute {lat_recompute} should cost more than full {lat_full}"
+    );
+}
+
+/// KV placement spreads cache bytes across ranks under the failsafe plan.
+#[test]
+fn kv_bytes_spread_across_ranks() {
+    let ps = prompts(4, 30, 60, 3);
+    let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    for p in &ps {
+        engine.submit(p, 4).unwrap();
+    }
+    engine.run_to_completion().unwrap();
+    let by = engine.kv_bytes_by_rank();
+    assert_eq!(by.len(), 3);
+    assert!(by.iter().all(|&b| b > 0), "every rank should hold KV: {by:?}");
+    let max = *by.iter().max().unwrap() as f64;
+    let min = *by.iter().min().unwrap() as f64;
+    assert!(max / min < 2.0, "cyclic placement should bound skew: {by:?}");
+}
+
+/// Paper §4.3.1 robustness on real execution: two *sequential* failures
+/// (TP4 → TP3 → TP2), each with lightning recovery, still bit-exact.
+#[test]
+fn sequential_failures_remain_exact() {
+    let ps = prompts(3, 6, 30, 101);
+    let expected = serve(1, SystemConfig::standard(), &ps, 9);
+
+    let mut engine = Engine::new(config(4, SystemConfig::failsafe())).unwrap();
+    for p in &ps {
+        engine.submit(p, 3).unwrap();
+    }
+    let r1 = engine.run_to_completion().unwrap();
+
+    engine.inject_failure(2, RecoveryMethod::Full).unwrap();
+    assert_eq!(engine.world(), 3);
+    let mut ids2 = Vec::new();
+    for (i, p) in ps.iter().enumerate() {
+        let mut full = p.clone();
+        full.extend(&r1.results[i].output_tokens);
+        ids2.push(engine.submit(&full, 3).unwrap());
+    }
+    let r2 = engine.run_to_completion().unwrap();
+
+    engine.inject_failure(0, RecoveryMethod::Full).unwrap();
+    assert_eq!(engine.world(), 2);
+    assert_eq!(engine.epoch(), 2);
+    let mut ids3 = Vec::new();
+    for (i, p) in ps.iter().enumerate() {
+        let mut full = p.clone();
+        full.extend(&r1.results[i].output_tokens);
+        let c2 = r2.results.iter().find(|r| r.id == ids2[i]).unwrap();
+        full.extend(&c2.output_tokens);
+        ids3.push(engine.submit(&full, 3).unwrap());
+    }
+    let r3 = engine.run_to_completion().unwrap();
+
+    for i in 0..ps.len() {
+        let mut got = r1.results[i].output_tokens.clone();
+        got.extend(&r2.results.iter().find(|r| r.id == ids2[i]).unwrap().output_tokens);
+        got.extend(&r3.results.iter().find(|r| r.id == ids3[i]).unwrap().output_tokens);
+        assert_eq!(got, expected[i], "request {i} diverged across two failures");
+    }
+}
+
+/// Engine guards: oversized prompts and out-of-vocab tokens are rejected.
+#[test]
+fn submit_validation() {
+    let mut engine = Engine::new(config(2, SystemConfig::failsafe())).unwrap();
+    assert!(engine.submit(&[], 4).is_err(), "empty prompt");
+    assert!(engine.submit(&[1; 300], 4).is_err(), "beyond compiled context");
+    assert!(engine.submit(&[9999], 4).is_err(), "out of vocab");
+    assert!(engine.submit(&[1, 2, 3], 4).is_ok());
+}

@@ -1,0 +1,301 @@
+//! Property-based tests over the coordinator's core invariants
+//! (proptest-style randomized sweeps via `benchkit::forall` — the offline
+//! build has no proptest crate; failures print a replayable case seed).
+
+use std::collections::HashSet;
+
+use failsafe::benchkit::forall;
+use failsafe::kvcache::{BackupStore, BlockAllocator, KvPlacement};
+use failsafe::model::ModelSpec;
+use failsafe::router::{DpRouter, RoutePolicy};
+use failsafe::scheduler::{adaptive_chunked_prefill, form_decode_batch, DecodeItem, PrefillItem};
+use failsafe::sharding::{
+    plan_reconfig, AttentionPolicy, FfnPartition, FfnPolicy, HeadAssignment, ShardPlan, DP_OWNER,
+};
+use failsafe::util::Rng;
+use failsafe::RankId;
+
+const CASES: u64 = 300;
+
+fn random_model(rng: &mut Rng) -> ModelSpec {
+    let n_kv_heads = [4usize, 8, 16][rng.pick(3)];
+    let gqa = [1usize, 2, 4, 8][rng.pick(4)];
+    ModelSpec {
+        name: "prop".into(),
+        n_layers: rng.range(2, 96),
+        d_model: 512,
+        n_q_heads: n_kv_heads * gqa,
+        n_kv_heads,
+        head_dim: 64,
+        d_ff: 2048,
+        n_experts: [1usize, 8][rng.pick(2)],
+        experts_per_token: 1,
+        vocab: 1000,
+        dtype_bytes: 2,
+    }
+}
+
+/// Every head is assigned exactly once per layer (TP) or marked DP; DP
+/// heads only appear under Hybrid; hybrid TP counts are flat per layer.
+#[test]
+fn prop_head_assignment_coverage() {
+    forall("head coverage", CASES, 11, |rng| {
+        let heads = rng.range(2, 24);
+        let layers = rng.range(1, 100);
+        let world = rng.range(1, heads + 1);
+        let policy = [
+            AttentionPolicy::NaiveContiguous,
+            AttentionPolicy::Cyclic,
+            AttentionPolicy::Hybrid,
+        ][rng.pick(3)];
+        let a = HeadAssignment::new(policy, heads, layers, world);
+        for lh in &a.layers {
+            assert_eq!(lh.owner.len(), heads);
+            let mut seen_tp = 0;
+            for &o in &lh.owner {
+                if o == DP_OWNER {
+                    assert_eq!(policy, AttentionPolicy::Hybrid);
+                } else {
+                    assert!(o < world);
+                    seen_tp += 1;
+                }
+            }
+            if policy == AttentionPolicy::Hybrid {
+                assert_eq!(seen_tp, (heads / world) * world);
+                // flat per-layer TP counts
+                for r in 0..world {
+                    assert_eq!(lh.tp_heads_of(r).len(), heads / world);
+                }
+            } else {
+                assert_eq!(seen_tp, heads);
+            }
+        }
+    });
+}
+
+/// Cyclic placement bounds aggregate imbalance: max−min TP head-layers ≤
+/// world over any full assignment.
+#[test]
+fn prop_cyclic_balance_bound() {
+    forall("cyclic balance", CASES, 13, |rng| {
+        let heads = rng.range(2, 24);
+        let layers = rng.range(1, 128);
+        let world = rng.range(2, heads + 1);
+        let a = HeadAssignment::new(AttentionPolicy::Cyclic, heads, layers, world);
+        let (min, max) = a.tp_balance();
+        assert!(
+            max - min <= world.max(2),
+            "cyclic spread too wide: {min}..{max} (h={heads} l={layers} w={world})"
+        );
+    });
+}
+
+/// FFN reshard: every block owned exactly once; commutative reshard moves
+/// no more than orphaned + rebalance-spill blocks.
+#[test]
+fn prop_ffn_reshard_integrity() {
+    forall("ffn reshard", CASES, 17, |rng| {
+        let world = rng.range(2, 9);
+        let blocks = world * rng.range(2, 20);
+        let p = FfnPartition::new(FfnPolicy::Commutative, blocks, world);
+        let failed = rng.pick(world);
+        let map: Vec<Option<RankId>> = (0..world)
+            .map(|r| if r == failed { None } else { Some(if r < failed { r } else { r - 1 }) })
+            .collect();
+        let q = p.reshard(&map, world - 1);
+        // every block assigned to a valid new rank
+        assert!(q.owner.iter().all(|&o| o < world - 1));
+        let total: usize = (0..world - 1).map(|r| q.blocks_of(r).len()).sum();
+        assert_eq!(total, blocks);
+        // balance within 1
+        let sizes: Vec<usize> = (0..world - 1).map(|r| q.blocks_of(r).len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        // movement bound: orphans + (world-1) spill at most
+        let orphans = p.blocks_of(failed).len();
+        assert!(p.moved_blocks(&map, &q) <= orphans + world);
+    });
+}
+
+/// On-demand reconfiguration never pulls a byte over PCIe that any
+/// survivor still holds, and total PCIe equals lost bytes.
+#[test]
+fn prop_reconfig_non_redundant() {
+    forall("reconfig non-redundant", 60, 19, |rng| {
+        let m = random_model(rng);
+        let world = rng.range(2, 9.min(m.n_kv_heads + 1));
+        let old = ShardPlan::failsafe(&m, world);
+        let failed = rng.pick(world);
+        let map: Vec<Option<RankId>> = (0..world)
+            .map(|r| if r == failed { None } else { Some(if r < failed { r } else { r - 1 }) })
+            .collect();
+        let new = ShardPlan {
+            model: m.clone(),
+            heads: HeadAssignment::new(AttentionPolicy::Hybrid, m.n_kv_heads, m.n_layers, world - 1),
+            ffn: old.ffn.reshard(&map, world - 1),
+        };
+        let d = plan_reconfig(&old, &new, &map, true);
+        assert_eq!(d.total_pcie(), d.lost_bytes, "PCIe must fetch exactly the lost bytes");
+        let sends: usize = d.nvlink_send_bytes.iter().sum();
+        let recvs: usize = d.nvlink_recv_bytes.iter().sum();
+        assert_eq!(sends, recvs);
+    });
+}
+
+/// Greedy routing keeps imbalance bounded vs round-robin on adversarial
+/// bimodal workloads.
+#[test]
+fn prop_router_no_idle_while_loaded() {
+    forall("router balance", CASES, 23, |rng| {
+        let world = rng.range(2, 9);
+        let mut ll = DpRouter::new(RoutePolicy::LeastLoaded, world);
+        for _ in 0..rng.range(10, 300) {
+            let work = if rng.bool(0.3) { rng.range_f64(500.0, 5000.0) } else { rng.range_f64(1.0, 50.0) };
+            ll.route(work);
+        }
+        // No rank's load exceeds min + the largest single job.
+        let loads = ll.tracker().pending_all();
+        let min = loads.iter().cloned().fold(f64::MAX, f64::min);
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        assert!(max - min <= 5000.0 + 1e-9, "greedy bound violated: {loads:?}");
+    });
+}
+
+/// Algorithm 1 respects the budget, never schedules more than remaining,
+/// and never leaves a rank idle while another rank has 2+ chunks
+/// schedulable at equal context cost.
+#[test]
+fn prop_adaptive_prefill_invariants() {
+    forall("adaptive prefill", CASES, 29, |rng| {
+        let world = rng.range(2, 9);
+        let n = rng.range(1, 40);
+        let items: Vec<PrefillItem> = (0..n)
+            .map(|i| PrefillItem {
+                request: i as u64,
+                rank: rng.pick(world),
+                context: rng.range(0, 4096),
+                remaining: rng.range(1, 2048),
+            })
+            .collect();
+        let budget = rng.range(1, 8192);
+        let carry = vec![0.0; world];
+        let b = adaptive_chunked_prefill(budget, &items, &carry, world, rng.range(1, 17));
+        assert!(b.tokens <= budget);
+        let mut per_req: std::collections::HashMap<u64, usize> = Default::default();
+        for c in &b.chunks {
+            *per_req.entry(c.request).or_default() += c.tokens;
+        }
+        for (req, tok) in per_req {
+            let it = items.iter().find(|i| i.request == req).unwrap();
+            assert!(tok <= it.remaining, "scheduled {tok} > remaining {}", it.remaining);
+            assert_eq!(it.rank, b.chunks.iter().find(|c| c.request == req).unwrap().rank);
+        }
+        // Budget exhausted or all work scheduled.
+        let total_remaining: usize = items.iter().map(|i| i.remaining).sum();
+        assert!(b.tokens == budget.min(total_remaining) || b.tokens > 0 || total_remaining == 0);
+    });
+}
+
+/// KV placement conservation: per-request footprints sum to the model's
+/// full KV bytes, independent of policy/world/home.
+#[test]
+fn prop_kv_footprint_conservation() {
+    forall("kv conservation", 80, 31, |rng| {
+        let m = random_model(rng);
+        let world = rng.range(1, 9.min(m.n_kv_heads + 1));
+        let policy = [
+            AttentionPolicy::NaiveContiguous,
+            AttentionPolicy::Cyclic,
+            AttentionPolicy::Hybrid,
+        ][rng.pick(3)];
+        let plan = ShardPlan::new(&m, world, policy, FfnPolicy::Commutative);
+        let p = KvPlacement::new(&plan);
+        let tokens = rng.range(1, 10_000);
+        let home = rng.pick(world);
+        let fp = p.footprint(1, tokens, home);
+        assert_eq!(fp.bytes.iter().sum::<usize>(), m.kv_bytes_per_token() * tokens);
+    });
+}
+
+/// Block allocator: never double-allocates, conserves block count.
+#[test]
+fn prop_allocator_conservation() {
+    forall("allocator", CASES, 37, |rng| {
+        let n = rng.range(8, 512);
+        let mut a = BlockAllocator::new(n);
+        let mut live: Vec<u64> = Vec::new();
+        let mut held: HashSet<u32> = HashSet::new();
+        for step in 0..rng.range(5, 60) {
+            if rng.bool(0.6) || live.is_empty() {
+                let req = step as u64;
+                let want = rng.range(1, 17);
+                if let Ok(blocks) = a.alloc(req, want) {
+                    for b in &blocks {
+                        assert!(held.insert(*b), "double allocation of block {b}");
+                    }
+                    live.push(req);
+                }
+            } else {
+                let idx = rng.pick(live.len());
+                let req = live.swap_remove(idx);
+                for b in a.blocks_of(req).to_vec() {
+                    held.remove(&b);
+                }
+                a.free_request(req);
+            }
+            assert_eq!(a.n_used(), held.len());
+            assert_eq!(a.n_used() + a.n_free(), n);
+        }
+    });
+}
+
+/// Backup store: restore plans never restore more tokens than backed, and
+/// recompute lag is exactly tokens − backed.
+#[test]
+fn prop_backup_restore_accounting() {
+    forall("backup accounting", 60, 41, |rng| {
+        let m = random_model(rng);
+        let world = rng.range(2, 9.min(m.n_kv_heads + 1));
+        let old = KvPlacement::new(&ShardPlan::failsafe(&m, world));
+        let new = KvPlacement::new(&ShardPlan::failsafe(&m, world - 1));
+        let mut store = BackupStore::new(1 << 44);
+        let n = rng.range(1, 30);
+        let reqs: Vec<(u64, usize, usize)> = (0..n)
+            .map(|i| {
+                let tokens = rng.range(10, 5000);
+                let backed = rng.range(0, tokens + 1);
+                store.backup(i as u64, backed, m.kv_bytes_per_token());
+                (i as u64, tokens, rng.pick(world))
+            })
+            .collect();
+        let failed = rng.pick(world);
+        let map: Vec<Option<RankId>> = (0..world)
+            .map(|r| if r == failed { None } else { Some(if r < failed { r } else { r - 1 }) })
+            .collect();
+        let plan = store.plan_restore(failed, &reqs, &old, &new, &map);
+        for &(id, tokens, _) in &reqs {
+            let backed = store.backed_tokens(id).min(tokens);
+            let lag = plan.recompute_tokens.get(&id).copied().unwrap_or(0);
+            assert_eq!(lag, tokens - backed, "req {id}: lag {lag} vs {} - {}", tokens, backed);
+        }
+    });
+}
+
+/// Decode batch former: DP profile sums to total context.
+#[test]
+fn prop_decode_batch_profile() {
+    forall("decode batch", CASES, 43, |rng| {
+        let world = rng.range(1, 9);
+        let n = rng.range(0, 200);
+        let pool: Vec<DecodeItem> = (0..n)
+            .map(|i| DecodeItem { request: i as u64, rank: rng.pick(world), context: rng.range(1, 20_000) })
+            .collect();
+        let cap = rng.range(1, 257);
+        let b = form_decode_batch(&pool, cap, world);
+        assert!(b.len() <= cap);
+        assert_eq!(b.dp_context_per_rank.iter().sum::<usize>(), b.total_context);
+        assert_eq!(
+            b.total_context,
+            b.items.iter().map(|i| i.context).sum::<usize>()
+        );
+    });
+}
