@@ -1,21 +1,25 @@
-//! **End-to-end validation driver** (DESIGN.md): serve batched requests on
-//! the real small model, kill a GPU mid-service, recover with FailSafe's
-//! lightning recovery, and keep serving — reporting latency/throughput and
-//! verifying the post-failure generation is exactly what a failure-free
-//! run produces.
+//! **End-to-end validation driver** (DESIGN.md): serve streaming requests
+//! on the real small model, kill a GPU **mid-decode** — requests in
+//! flight, KV hot — recover with FailSafe's lightning recovery, and keep
+//! serving the same session — reporting latency/throughput and verifying
+//! the post-failure generation is exactly what a failure-free run
+//! produces. No drain, no resubmission: the event-driven session API
+//! allows `inject_failure` at any `step()` boundary.
 //!
 //!     make artifacts && cargo run --release --example fault_tolerant_serving
 //!
 //! Timeline:
-//!   phase 1  TP3 serves wave 1 (prefill + decode), backup daemon mirrors KV
-//!   fault    rank 1 hard-fails: its KV slices + weight shard are gone
+//!   phase 1  TP3 serves wave 1; wave 2 is submitted with a timed arrival
+//!            (SubmitOptions::at) and is still queued
+//!   fault    once every wave-1 request is mid-decode, rank 1 hard-fails:
+//!            its KV slices + weight shard are gone
 //!   recover  FailSafe-Full: commutative FFN blocks stay put, lost KV
 //!            restores from the host mirror; modeled H100 latency printed
-//!   phase 2  TP2 continues wave 1's requests + serves wave 2
-//!   verify   all outputs == unsharded reference run
+//!   phase 2  TP2 finishes wave 1 in flight + admits and serves wave 2
+//!   verify   all outputs == unsharded failure-free reference run
 
 use failsafe::config::EngineConfig;
-use failsafe::engine::Engine;
+use failsafe::engine::{Engine, EngineEvent, SubmitOptions};
 use failsafe::model::small_real;
 use failsafe::recovery::RecoveryMethod;
 use failsafe::simulator::SystemConfig;
@@ -34,8 +38,7 @@ fn prompts(n: usize, seed: u64) -> Vec<Vec<u32>> {
 fn main() -> anyhow::Result<()> {
     let wave1 = prompts(4, 7);
     let wave2 = prompts(3, 8);
-    let new1 = 8usize; // wave-1 tokens before the failure
-    let cont = 8usize; // wave-1 tokens after recovery
+    let new1 = 16usize;
     let new2 = 12usize;
 
     // ---- Reference: failure-free unsharded run. -------------------------
@@ -46,14 +49,14 @@ fn main() -> anyhow::Result<()> {
         ..EngineConfig::default()
     })?;
     for p in &wave1 {
-        reference.submit(p, new1 + cont)?;
+        reference.submit(p, new1)?;
     }
     for p in &wave2 {
         reference.submit(p, new2)?;
     }
     let expect = reference.run_to_completion()?;
 
-    // ---- FailSafe run with a mid-service failure. -----------------------
+    // ---- FailSafe session with a mid-decode failure. --------------------
     let mut engine = Engine::new(EngineConfig {
         model: small_real(),
         system: SystemConfig::failsafe(),
@@ -61,60 +64,64 @@ fn main() -> anyhow::Result<()> {
         ..EngineConfig::default()
     })?;
     println!("phase 1: TP{} serving wave 1 ({} requests)...", engine.world(), wave1.len());
+    let mut wave1_ids = Vec::new();
     for p in &wave1 {
-        engine.submit(p, new1)?;
+        wave1_ids.push(engine.submit(p, new1)?);
     }
-    let r1 = engine.run_to_completion()?;
+    // Wave 2 arrives a little later, online-style: still queued when the
+    // failure hits, so it is admitted and routed on the post-failure plan.
+    let mut wave2_ids = Vec::new();
+    for p in &wave2 {
+        wave2_ids.push(engine.submit_with(p, SubmitOptions::new(new2).at(0.02))?);
+    }
+
+    // Step until every wave-1 request is mid-decode (≥ 4 tokens out).
+    while wave1_ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 4) {
+        engine.step()?;
+    }
     println!(
-        "  wave 1 first {} tokens done: {:.1} decode tok/s, KV by rank: {:?}",
-        new1,
-        r1.decode_tps(),
+        "  wave 1 mid-decode ({} tokens out), KV by rank: {:?}",
+        wave1_ids.iter().map(|id| engine.output_so_far(*id).unwrap().len()).sum::<usize>(),
         engine.kv_bytes_by_rank()
     );
 
-    println!("\nfault: injecting hard failure of rank 1 (HBM lost)...");
+    println!("\nfault: injecting hard failure of rank 1 (HBM lost) between decode steps...");
     let latency = engine.inject_failure(1, RecoveryMethod::Full)?;
     println!(
         "  lightning recovery (FailSafe-Full) complete: world={}, modeled H100 latency {:.0} ms",
         engine.world(),
         latency * 1e3
     );
+    // The next step surfaces the failure events to any streaming consumer.
+    for ev in engine.step()? {
+        if let EngineEvent::Reconfigured { epoch, world } = ev {
+            println!("  event: reconfigured to epoch {epoch}, world {world}");
+        }
+    }
 
-    println!("\nphase 2: TP{} continues wave 1 + serves wave 2...", engine.world());
-    // Continue wave 1 (prompt = original + generated so far).
-    let mut cont_ids = Vec::new();
-    for (i, p) in wave1.iter().enumerate() {
-        let mut full = p.clone();
-        full.extend(&r1.results[i].output_tokens);
-        cont_ids.push(engine.submit(&full, cont)?);
-    }
-    let mut wave2_ids = Vec::new();
-    for p in &wave2 {
-        wave2_ids.push(engine.submit(p, new2)?);
-    }
-    let r2 = engine.run_to_completion()?;
+    println!("\nphase 2: TP{} finishes wave 1 in flight + serves wave 2...", engine.world());
+    let report = engine.run_to_completion()?;
     println!(
-        "  phase 2 done: {:.1} decode tok/s, KV by rank: {:?}",
-        r2.decode_tps(),
+        "  session done: {:.1} decode tok/s, KV by rank: {:?}",
+        report.decode_tps(),
         engine.kv_bytes_by_rank()
     );
 
     // ---- Verify against the reference. ----------------------------------
-    for (i, _) in wave1.iter().enumerate() {
-        let mut got = r1.results[i].output_tokens.clone();
-        let c = r2.results.iter().find(|r| r.id == cont_ids[i]).unwrap();
-        got.extend(&c.output_tokens);
-        assert_eq!(got, expect.results[i].output_tokens, "wave-1 request {i} diverged");
+    let full = engine.report();
+    for (i, id) in wave1_ids.iter().enumerate() {
+        let got = &full.result(*id).unwrap().output_tokens;
+        assert_eq!(got, &expect.results[i].output_tokens, "wave-1 request {i} diverged");
     }
-    for (i, _) in wave2.iter().enumerate() {
-        let c = r2.results.iter().find(|r| r.id == wave2_ids[i]).unwrap();
+    for (i, id) in wave2_ids.iter().enumerate() {
+        let got = &full.result(*id).unwrap().output_tokens;
         assert_eq!(
-            c.output_tokens,
-            expect.results[wave1.len() + i].output_tokens,
+            got,
+            &expect.results[wave1.len() + i].output_tokens,
             "wave-2 request {i} diverged"
         );
     }
-    println!("\nverified: every token across failure + recovery matches the failure-free run ✓");
+    println!("\nverified: every token across the mid-decode failure matches the failure-free run ✓");
     println!("(recovery restored KV from the host mirror; FFN commutativity kept surviving blocks in place)");
     Ok(())
 }

@@ -1,17 +1,19 @@
 //! Quickstart: serve a batch of prompts on the real engine across a
-//! non-uniform TP group, report throughput/latency, and verify the output
-//! against an unsharded (TP1) run.
+//! non-uniform TP group through the event-driven session API, stream
+//! tokens as they are produced, report throughput/latency, and verify
+//! the output against an unsharded (TP1) run.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! What this shows in ~60 lines: the rust coordinator loads AOT-compiled
+//! What this shows in ~80 lines: the rust coordinator loads AOT-compiled
 //! JAX/Pallas artifacts through PJRT, shards the model with hybrid
 //! attention + cyclic KV placement over 3 logical ranks, routes requests
-//! with the load-aware router, runs chunked prefill + batched decode, and
-//! produces exactly the same tokens the unsharded model does.
+//! with the load-aware router, runs chunked prefill + batched decode one
+//! `step()` at a time — streaming `EngineEvent`s — and produces exactly
+//! the same tokens the unsharded model does.
 
 use failsafe::config::EngineConfig;
-use failsafe::engine::Engine;
+use failsafe::engine::{Engine, EngineEvent};
 use failsafe::model::small_real;
 use failsafe::simulator::SystemConfig;
 use failsafe::util::Rng;
@@ -35,10 +37,31 @@ fn main() -> anyhow::Result<()> {
     })?;
     println!("engine up: world={} plan=FailSafe (hybrid attention + cyclic KV)", engine.world());
 
+    let mut watched = None;
     for p in &prompts {
-        engine.submit(p, max_new)?;
+        let id = engine.submit(p, max_new)?;
+        watched.get_or_insert(id);
     }
-    let report = engine.run_to_completion()?;
+    let watched = watched.unwrap();
+
+    // Drive the session one step at a time, streaming request 0's tokens
+    // as the event loop surfaces them (run_to_completion() is just this
+    // loop without the event handling).
+    print!("streaming req {watched}:");
+    while !engine.is_idle() {
+        for ev in engine.step()? {
+            match ev {
+                EngineEvent::TokenEmitted { id, token, .. } if id == watched => {
+                    print!(" {token}");
+                }
+                EngineEvent::RequestFinished { id } if id == watched => {
+                    println!("  <finished>");
+                }
+                _ => {}
+            }
+        }
+    }
+    let report = engine.report();
 
     println!(
         "\nserved {} requests | prefill {} tok, decode {} tok in {:.2}s ({:.1} decode tok/s)",
@@ -50,9 +73,9 @@ fn main() -> anyhow::Result<()> {
     );
     for r in &report.results {
         println!(
-            "  req {}: ttft {:>6.1} ms | max tbt {:>6.1} ms | out {:?}",
+            "  req {}: ttft {} | max tbt {:>6.1} ms | out {:?}",
             r.id,
-            r.ttft_s * 1e3,
+            r.ttft_s.map_or("   n/a".into(), |t| format!("{:>6.1} ms", t * 1e3)),
             r.max_tbt_s * 1e3,
             &r.output_tokens[..6.min(r.output_tokens.len())]
         );

@@ -3,6 +3,12 @@
 //! full transfer plans — which bytes cross PCIe, which cross NVLink, what
 //! must be recomputed — and the resulting latencies.
 //!
+//! This costs the plans statically; to watch the same failure handled
+//! *live* — injected between decode steps of an event-driven session via
+//! the `ServingBackend` trait (`inject_failure` at a `step()` boundary) —
+//! see the `fault_tolerant_serving` example (real engine) and the
+//! fig09/fig12 benches (cost-model `OnlineSession`).
+//!
 //!     cargo run --release --example recovery_demo [--requests 60] [--ctx 8000]
 
 use failsafe::cluster::{GpuSpec, Interconnect};

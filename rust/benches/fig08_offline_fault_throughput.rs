@@ -10,11 +10,15 @@
 //! of fault-scaled) and 1.71× on Mixtral-8x22B (92% of fault-scaled).
 
 use failsafe::benchkit::{paper_row, section};
-use failsafe::cluster::{FaultInjector, FaultKind, GpuSpec};
+use failsafe::cluster::{FaultInjector, FaultKind, GpuSpec, Interconnect};
+use failsafe::kvcache::BackupStore;
 use failsafe::model::{llama3_70b, mixtral_8x22b, ModelSpec};
+use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
+use failsafe::sharding::{AttentionPolicy, HeadAssignment, ShardPlan};
 use failsafe::simulator::offline::{steady_state, WorkloadMix};
 use failsafe::simulator::SystemConfig;
 use failsafe::traces::{gcp_availability, openthoughts_trace};
+use failsafe::{RankId, RequestId};
 
 const NODES: usize = 8;
 const GPN: usize = 8;
@@ -53,8 +57,58 @@ struct RunResult {
     series: Vec<(f64, f64)>,
 }
 
-/// Integrate fleet throughput over the availability trace.
-fn run(model: &ModelSpec, cfg: &SystemConfig, baseline: bool, mix: &WorkloadMix) -> RunResult {
+/// Modeled FailSafe-Full (lightning) reconfiguration stall for one
+/// failure at TP8→TP7 with a representative in-flight load — what the
+/// event-driven engine actually pays at a step boundary, in place of the
+/// paper's fixed 10 s switch time.
+fn lightning_stall(model: &ModelSpec) -> f64 {
+    let spec = GpuSpec::h100();
+    let ic = Interconnect::new(spec.clone());
+    let failed: RankId = 0;
+    let old = ShardPlan::failsafe(model, GPN);
+    let survivor_map: Vec<Option<RankId>> =
+        (0..GPN).map(|r| if r == failed { None } else { Some(r - 1) }).collect();
+    let new_plan = ShardPlan {
+        model: model.clone(),
+        heads: HeadAssignment::new(
+            AttentionPolicy::Hybrid,
+            model.n_kv_heads,
+            model.n_layers,
+            GPN - 1,
+        ),
+        ffn: old.ffn.reshard(&survivor_map, GPN - 1),
+    };
+    let reqs: Vec<(RequestId, usize, RankId)> =
+        (0..64u64).map(|i| (i, 8000, (i as usize) % GPN)).collect();
+    let mut backup = BackupStore::new(1 << 42);
+    for &(id, t, _) in &reqs {
+        backup.backup(id, t, model.kv_bytes_per_token());
+    }
+    plan_recovery(
+        RecoveryMethod::Full,
+        &RecoveryInput {
+            spec: &spec,
+            ic: &ic,
+            old_plan: &old,
+            new_plan: &new_plan,
+            survivor_map: &survivor_map,
+            failed_rank: failed,
+            requests: &reqs,
+            backup: &backup,
+        },
+    )
+    .total_s
+}
+
+/// Integrate fleet throughput over the availability trace, paying
+/// `switch_s` of reconfiguration stall per fault event.
+fn run(
+    model: &ModelSpec,
+    cfg: &SystemConfig,
+    baseline: bool,
+    mix: &WorkloadMix,
+    switch_s: f64,
+) -> RunResult {
     let duration = 6.0 * 3600.0;
     let avail = gcp_availability(NODES * GPN, duration, 42);
     let inj = FaultInjector::from_availability(&avail, NODES, GPN, 7);
@@ -88,13 +142,14 @@ fn run(model: &ModelSpec, cfg: &SystemConfig, baseline: bool, mix: &WorkloadMix)
             FaultKind::Fail => healthy[e.node] -= 1,
             FaultKind::Recover => healthy[e.node] += 1,
         }
-        // Reconfiguration stall (paper fixes this to 10 s for all systems).
+        // Reconfiguration stall (the paper fixes this to 10 s for all
+        // systems; the lightning-recovery variant passes the modeled stall).
         let stall_tput: f64 = (0..NODES)
             .filter(|&n| n != e.node)
             .map(|n| node_tput(model, cfg, healthy[n], baseline, mix))
             .sum();
-        integral += stall_tput * SWITCH_S.min(duration - t);
-        t = (t + SWITCH_S).min(duration);
+        integral += stall_tput * switch_s.min(duration - t);
+        t = (t + switch_s).min(duration);
     }
     RunResult { avg_tput: integral / duration, series }
 }
@@ -122,8 +177,8 @@ fn experiment(name: &str, model: &ModelSpec, paper_gain: f64, paper_frac: f64) {
     section(&format!("Fig 8 — offline throughput under faults: {name}"));
     let mix = WorkloadMix::from_trace(&openthoughts_trace(20_000, 5));
 
-    let base = run(model, &SystemConfig::standard(), true, &mix);
-    let fs = run(model, &SystemConfig::failsafe(), false, &mix);
+    let base = run(model, &SystemConfig::standard(), true, &mix, SWITCH_S);
+    let fs = run(model, &SystemConfig::failsafe(), false, &mix, SWITCH_S);
     let spec = GpuSpec::h100();
     let fault_free = steady_state(model, &SystemConfig::standard(), 8, &spec, &mix)
         .map(|s| s.requests_per_s * mix.mean_output)
@@ -149,6 +204,21 @@ fn experiment(name: &str, model: &ModelSpec, paper_gain: f64, paper_frac: f64) {
         &format!("{:.0}%", paper_frac * 100.0),
         &format!("{:.0}%", frac * 100.0),
         frac > paper_frac - 0.12 && frac <= 1.02,
+    );
+
+    // Addendum: replace the fixed 10 s switch with the modeled lightning
+    // stall the event-driven session actually pays per failure.
+    let stall = lightning_stall(model);
+    let fs_lightning = run(model, &SystemConfig::failsafe(), false, &mix, stall);
+    println!(
+        "lightning   : {:>10.1} tok/s (avg, {:.2} s modeled stall/failure vs {SWITCH_S:.0} s fixed)",
+        fs_lightning.avg_tput, stall
+    );
+    paper_row(
+        &format!("{name}: lightning stall ≥ fixed-switch throughput"),
+        "yes",
+        if fs_lightning.avg_tput >= fs.avg_tput { "yes" } else { "no" },
+        fs_lightning.avg_tput >= fs.avg_tput && stall < SWITCH_S,
     );
 
     println!("\nreal-time series (first 12 intervals):");

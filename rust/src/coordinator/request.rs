@@ -13,6 +13,8 @@ pub enum RequestState {
     Decoding,
     /// All output tokens produced.
     Finished,
+    /// Cancelled by the client before finishing; resources released.
+    Aborted,
 }
 
 /// A request as tracked by the coordinator.
@@ -32,6 +34,11 @@ pub struct Request {
     pub context: usize,
     /// Decoded output so far (engine fills real token ids).
     pub output_tokens: Vec<u32>,
+    /// Scheduling priority (higher runs first; default 0).
+    pub priority: i32,
+    /// Optional SLO deadline on the serving clock; among equal priorities
+    /// the earliest deadline is scheduled first.
+    pub deadline: Option<SimTime>,
 }
 
 impl Request {
@@ -45,6 +52,8 @@ impl Request {
             home: 0,
             context: 0,
             output_tokens: Vec::new(),
+            priority: 0,
+            deadline: None,
         }
     }
 
@@ -58,7 +67,7 @@ impl Request {
     }
 
     pub fn is_done(&self) -> bool {
-        self.state == RequestState::Finished
+        matches!(self.state, RequestState::Finished | RequestState::Aborted)
     }
 
     /// Advance state after a prefill chunk of `n` tokens.
@@ -103,5 +112,13 @@ mod tests {
         assert_eq!(r.state, RequestState::Finished);
         assert_eq!(r.output_tokens, vec![7, 8]);
         assert_eq!(r.context, 6);
+    }
+
+    #[test]
+    fn aborted_counts_as_done() {
+        let mut r = Request::new(2, 0.0, vec![1, 2], 4);
+        assert!(!r.is_done());
+        r.state = RequestState::Aborted;
+        assert!(r.is_done());
     }
 }

@@ -1,74 +1,130 @@
-//! The engine proper: submit → chunked prefill → continuous decode, with
-//! failure injection and lightning recovery, all executing real AOT
-//! artifacts through PJRT.
+//! The engine proper: an event-driven serving session. Requests are
+//! submitted with [`SubmitOptions`] (timed arrival, budget, priority),
+//! the public [`Engine::step`] tick runs one scheduler-chosen unit of work
+//! (a chunked-prefill pass or a continuous-decode step) and returns the
+//! [`EngineEvent`]s it produced, and failures can be injected at *any*
+//! step boundary — including mid-decode with requests in flight.
+//! [`Engine::run_to_completion`] is a thin convenience wrapper over
+//! `step()`. Everything executes real AOT artifacts through PJRT.
 
-use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::cluster::{GpuSpec, Interconnect};
 use crate::config::EngineConfig;
-use crate::coordinator::{Request, RequestState};
+use crate::coordinator::RequestState;
 use crate::kvcache::{BackupStore, KvPlacement};
 use crate::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use crate::router::DpRouter;
 use crate::runtime::{
     literal_f32, literal_i32, literal_tensor, to_vec_f32, Manifest, RuntimeClient, WeightStore,
 };
-use crate::scheduler::{adaptive_chunked_prefill, PrefillItem};
+use crate::scheduler::{adaptive_chunked_prefill, form_decode_batch, DecodeItem, PrefillItem};
 use crate::sharding::ShardPlan;
-use crate::{LayerId, RankId, RequestId};
+use crate::{LayerId, RankId, RequestId, SimTime};
 
+use super::report::{self, ServeReport};
+use super::session::{Session, SubmitOptions};
 use super::shard::{pick_bucket, RankShard};
 use super::KvStore;
 
-/// Completed generation of one request.
-#[derive(Debug, Clone)]
-pub struct GenerationResult {
-    pub id: RequestId,
-    pub output_tokens: Vec<u32>,
-    /// Wall-clock time to first token.
-    pub ttft_s: f64,
-    /// Max wall-clock gap between output tokens.
-    pub max_tbt_s: f64,
+/// Something observable that happened during one engine step (or at a
+/// step boundary: aborts and failure injections surface on the next tick).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EngineEvent {
+    /// Request `id` produced `token` — its `index`-th output token.
+    TokenEmitted { id: RequestId, token: u32, index: usize },
+    /// Request `id` produced its full generation budget.
+    RequestFinished { id: RequestId },
+    /// Request `id` was cancelled via `abort()`.
+    RequestAborted { id: RequestId },
+    /// A hard failure of `rank` was injected.
+    FailureInjected { rank: RankId, method: RecoveryMethod },
+    /// Recovery finished; `latency_s` is the modeled H100 stall.
+    RecoveryCompleted { method: RecoveryMethod, latency_s: f64 },
+    /// The session is serving on a new shard plan / world size.
+    Reconfigured { epoch: u64, world: usize },
 }
 
-/// Report of a serve run.
-#[derive(Debug, Clone, Default)]
-pub struct ServeReport {
-    pub results: Vec<GenerationResult>,
-    pub wall_s: f64,
-    pub prefill_tokens: usize,
-    pub decode_tokens: usize,
-    pub steps: usize,
-    /// Simulated (modeled) recovery latencies of injected failures.
-    pub recoveries: Vec<f64>,
-}
+/// The serving surface shared by the real [`Engine`] and the simulator's
+/// [`crate::simulator::OnlineSession`]: online traces, benches, and the
+/// fault-tolerance examples run identically against either backend.
+pub trait ServingBackend {
+    /// Submit a prompt with options; returns the request id.
+    fn submit_with(&mut self, prompt: &[u32], opts: SubmitOptions) -> Result<RequestId>;
+    /// Run one tick: admit due arrivals, execute one unit of work, return
+    /// the events produced (plus any buffered from aborts/failures).
+    fn step(&mut self) -> Result<Vec<EngineEvent>>;
+    /// Cancel an unfinished request and release its resources.
+    fn abort(&mut self, id: RequestId) -> Result<()>;
+    /// Inject a hard failure of `rank` at this step boundary; returns the
+    /// modeled recovery latency in seconds.
+    fn inject_failure(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64>;
+    /// The backend clock in seconds (wall-based for the engine, simulated
+    /// for the cost-model backend).
+    fn now(&self) -> SimTime;
+    /// True when no request can make further progress.
+    fn is_idle(&self) -> bool;
+    /// Cumulative report over every request this session has seen.
+    fn report(&self) -> ServeReport;
 
-impl ServeReport {
-    pub fn decode_tps(&self) -> f64 {
-        if self.wall_s == 0.0 {
-            0.0
-        } else {
-            self.decode_tokens as f64 / self.wall_s
+    /// Drive `step()` until idle and return the report.
+    fn run_to_completion(&mut self) -> Result<ServeReport> {
+        while !self.is_idle() {
+            self.step()?;
         }
-    }
-
-    pub fn outputs(&self) -> Vec<Vec<u32>> {
-        self.results.iter().map(|r| r.output_tokens.clone()).collect()
+        Ok(self.report())
     }
 }
 
-struct Timing {
-    submitted: Instant,
-    first_token: Option<f64>,
-    last_token: Option<f64>,
-    max_tbt: f64,
+/// When a planned fault fires during [`drive`].
+#[derive(Debug, Clone, Copy)]
+pub enum FaultTrigger {
+    /// Inject once the backend clock reaches this time.
+    At(SimTime),
+    /// Inject once this many tokens have been emitted (deterministic on
+    /// both backends — preferred in tests).
+    AfterTokens(usize),
 }
 
-/// One forward item: (request, new tokens, cached ctx, home rank).
-type FwdItem = (RequestId, Vec<u32>, usize, RankId);
+/// A fault to inject mid-run while driving a backend.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    pub trigger: FaultTrigger,
+    pub rank: RankId,
+    pub method: RecoveryMethod,
+}
+
+/// Step any backend to completion, injecting `fault` at the first step
+/// boundary where its trigger is due. Returns the final report and the
+/// modeled recovery latency (if the fault fired).
+pub fn drive<B: ServingBackend + ?Sized>(
+    backend: &mut B,
+    fault: Option<FaultPlan>,
+) -> Result<(ServeReport, Option<f64>)> {
+    let mut pending = fault;
+    let mut emitted = 0usize;
+    let mut recovery = None;
+    while !backend.is_idle() {
+        if let Some(f) = pending {
+            let due = match f.trigger {
+                FaultTrigger::At(t) => backend.now() >= t,
+                FaultTrigger::AfterTokens(n) => emitted >= n,
+            };
+            if due {
+                recovery = Some(backend.inject_failure(f.rank, f.method)?);
+                pending = None;
+            }
+        }
+        emitted += backend
+            .step()?
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::TokenEmitted { .. }))
+            .count();
+    }
+    Ok((backend.report(), recovery))
+}
 
 /// The serving engine. See module docs.
 pub struct Engine {
@@ -84,13 +140,16 @@ pub struct Engine {
     emb: xla::Literal,
     final_norm: xla::Literal,
     lm_head: xla::Literal,
-    requests: HashMap<RequestId, Request>,
-    timing: HashMap<RequestId, Timing>,
-    order: Vec<RequestId>,
-    next_id: RequestId,
+    session: Session,
     epoch: u64,
     recoveries: Vec<f64>,
+    /// Events produced at step boundaries (aborts, failure injections),
+    /// drained by the next `step()`.
+    pending_events: Vec<EngineEvent>,
 }
+
+/// One forward item: (request, new tokens, cached ctx, home rank).
+type FwdItem = (RequestId, Vec<u32>, usize, RankId);
 
 impl Engine {
     pub fn new(config: EngineConfig) -> Result<Engine> {
@@ -128,12 +187,10 @@ impl Engine {
             emb,
             final_norm,
             lm_head,
-            requests: HashMap::new(),
-            timing: HashMap::new(),
-            order: Vec::new(),
-            next_id: 0,
+            session: Session::new(),
             epoch: 0,
             recoveries: Vec::new(),
+            pending_events: Vec::new(),
         })
     }
 
@@ -154,14 +211,43 @@ impl Engine {
         self.kv.bytes_by_rank(self.world())
     }
 
-    /// Submit a prompt; returns the request id.
+    /// The session clock in seconds: advances with the wall time of each
+    /// step and fast-forwards over idle waits for timed arrivals.
+    pub fn now(&self) -> SimTime {
+        self.session.clock
+    }
+
+    /// True when no submitted request can make further progress *and* no
+    /// buffered events (aborts, failure notices) remain undelivered — so
+    /// a step loop always drains the event stream before stopping, and
+    /// stale events are never replayed into a later run.
+    pub fn is_idle(&self) -> bool {
+        self.pending_events.is_empty() && self.session.is_idle()
+    }
+
+    /// Submit a prompt with default options; returns the request id.
     pub fn submit(&mut self, prompt: &[u32], max_new_tokens: usize) -> Result<RequestId> {
+        self.submit_with(prompt, SubmitOptions::new(max_new_tokens))
+    }
+
+    /// Submit a prompt with explicit [`SubmitOptions`].
+    pub fn submit_with(&mut self, prompt: &[u32], opts: SubmitOptions) -> Result<RequestId> {
+        anyhow::ensure!(
+            opts.max_new_tokens > 0,
+            "max_new_tokens must be at least 1 (a zero budget is a caller bug, not a no-op)"
+        );
+        anyhow::ensure!(
+            opts.arrival.is_finite() && opts.arrival >= 0.0,
+            "arrival must be a finite, non-negative time (got {})",
+            opts.arrival
+        );
+        anyhow::ensure!(opts.deadline.unwrap_or(0.0).is_finite(), "deadline must be finite");
         let max_ctx = self.manifest.buckets("attn", |v| v.c).last().copied().unwrap_or(0);
         anyhow::ensure!(
-            prompt.len() + max_new_tokens <= max_ctx + 1,
+            prompt.len() + opts.max_new_tokens <= max_ctx + 1,
             "prompt {} + max_new {} exceeds compiled context {}",
             prompt.len(),
-            max_new_tokens,
+            opts.max_new_tokens,
             max_ctx
         );
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
@@ -169,80 +255,137 @@ impl Engine {
             prompt.iter().all(|&t| (t as usize) < self.manifest.model.vocab),
             "token id out of vocab"
         );
-        let id = self.next_id;
-        self.next_id += 1;
-        let mut req = Request::new(id, 0.0, prompt.to_vec(), max_new_tokens.max(1));
-        req.state = RequestState::Prefilling;
-        req.home = self.router.route(prompt.len() as f64);
-        self.requests.insert(id, req);
-        self.timing.insert(
-            id,
-            Timing { submitted: Instant::now(), first_token: None, last_token: None, max_tbt: 0.0 },
-        );
-        self.order.push(id);
-        Ok(id)
+        Ok(self.session.create(prompt.to_vec(), opts))
     }
 
-    /// Drive all submitted requests to completion.
+    /// Cancel an unfinished request: release its KV (device slices and
+    /// host mirror), un-book its routed work, and emit `RequestAborted`
+    /// on the next step.
+    pub fn abort(&mut self, id: RequestId) -> Result<()> {
+        let (state, home, outstanding) = {
+            let r = self
+                .session
+                .requests
+                .get(&id)
+                .with_context(|| format!("abort: unknown request {id}"))?;
+            anyhow::ensure!(!r.is_done(), "abort: request {id} already {:?}", r.state);
+            (r.state, r.home, r.prefill_remaining())
+        };
+        if state != RequestState::Queued {
+            self.router.cancel(home, outstanding as f64);
+        }
+        self.kv.release(id);
+        self.session.requests.get_mut(&id).unwrap().state = RequestState::Aborted;
+        self.pending_events.push(EngineEvent::RequestAborted { id });
+        Ok(())
+    }
+
+    /// Output tokens emitted so far for `id` — the streaming accessor.
+    pub fn output_so_far(&self, id: RequestId) -> Option<&[u32]> {
+        self.session.requests.get(&id).map(|r| r.output_tokens.as_slice())
+    }
+
+    /// Lifecycle state of `id`.
+    pub fn request_state(&self, id: RequestId) -> Option<RequestState> {
+        self.session.requests.get(&id).map(|r| r.state)
+    }
+
+    /// One engine tick. Admits requests whose arrival time has come,
+    /// then runs *one* unit of work — a chunked-prefill pass if any
+    /// request has prefill pending (prefill keeps priority over decode,
+    /// exactly as the old monolithic loop ordered them), otherwise one
+    /// continuous-decode step. With nothing runnable but arrivals still
+    /// queued, the clock fast-forwards to the next arrival instead of
+    /// busy-waiting. Returns the events produced.
+    pub fn step(&mut self) -> Result<Vec<EngineEvent>> {
+        let mut events = std::mem::take(&mut self.pending_events);
+        let t0 = Instant::now();
+        self.admit_due();
+        let prefilling = self.session.prefilling();
+        if !prefilling.is_empty() {
+            let n = self.step_prefill(&prefilling, &mut events)?;
+            self.session.prefill_tokens += n;
+            self.session.steps += 1;
+        } else {
+            let decoding = self.session.decoding();
+            if !decoding.is_empty() {
+                let n = self.step_decode(&decoding, &mut events)?;
+                self.session.decode_tokens += n;
+                self.session.steps += 1;
+            } else if let Some(next) = self.session.next_arrival() {
+                self.session.clock = self.session.clock.max(next);
+            }
+        }
+        self.session.clock += t0.elapsed().as_secs_f64();
+        Ok(events)
+    }
+
+    /// Drive all submitted requests to completion. The returned report's
+    /// token/step counters and wall time cover *this call* (matching the
+    /// old monolithic API); `results` covers every request of the session.
     pub fn run_to_completion(&mut self) -> Result<ServeReport> {
         let t0 = Instant::now();
-        let mut report = ServeReport::default();
-        loop {
-            let any_prefill = self
-                .requests
-                .values()
-                .any(|r| r.state == RequestState::Prefilling && r.prefill_remaining() > 0);
-            if any_prefill {
-                report.prefill_tokens += self.step_prefill()?;
-                report.steps += 1;
-                continue;
-            }
-            let decoding: Vec<RequestId> = self
-                .order
-                .iter()
-                .copied()
-                .filter(|id| self.requests[id].state == RequestState::Decoding)
-                .collect();
-            if decoding.is_empty() {
-                break;
-            }
-            report.decode_tokens += self.step_decode(&decoding)?;
-            report.steps += 1;
+        let (p0, d0, s0) =
+            (self.session.prefill_tokens, self.session.decode_tokens, self.session.steps);
+        while !self.is_idle() {
+            self.step()?;
         }
-        report.wall_s = t0.elapsed().as_secs_f64();
-        report.recoveries = self.recoveries.clone();
-        for id in &self.order {
-            let r = &self.requests[id];
-            let t = &self.timing[id];
-            report.results.push(GenerationResult {
-                id: *id,
-                output_tokens: r.output_tokens.clone(),
-                ttft_s: t.first_token.unwrap_or(0.0),
-                max_tbt_s: t.max_tbt,
-            });
+        let mut rep = self.report();
+        rep.wall_s = t0.elapsed().as_secs_f64();
+        rep.prefill_tokens = self.session.prefill_tokens - p0;
+        rep.decode_tokens = self.session.decode_tokens - d0;
+        rep.steps = self.session.steps - s0;
+        Ok(rep)
+    }
+
+    /// Cumulative report over every request this session has seen.
+    pub fn report(&self) -> ServeReport {
+        report::assemble(&self.session, &self.recoveries)
+    }
+
+    /// Route and admit every queued request whose arrival has come.
+    fn admit_due(&mut self) {
+        for id in self.session.ready_to_admit(self.session.clock) {
+            let (len, delayed) = {
+                let r = &self.session.requests[&id];
+                (r.input_len(), r.arrival > 0.0)
+            };
+            let home = self.router.route(len as f64);
+            let r = self.session.requests.get_mut(&id).unwrap();
+            r.home = home;
+            r.state = RequestState::Prefilling;
+            if delayed {
+                // TTFT of a timed arrival measures service, not queueing
+                // before its own arrival time.
+                self.session.rebase_timing(id);
+            }
         }
-        Ok(report)
     }
 
     // ---------------------------------------------------------- failure --
 
-    /// Inject a hard failure of TP rank `rank` and recover with `method`.
-    /// Returns the modeled recovery latency in seconds. The engine
-    /// continues serving on `world - 1` ranks; with backup-based methods
-    /// the continuation is exact, with `Recompute` the affected context is
+    /// Inject a hard failure of TP rank `rank` and recover with `method`,
+    /// at any step boundary — before serving, between runs, or mid-decode
+    /// with requests in flight. Returns the modeled recovery latency in
+    /// seconds and buffers `FailureInjected` / `RecoveryCompleted` /
+    /// `Reconfigured` events for the next `step()`. The engine continues
+    /// serving on `world - 1` ranks; with backup-based methods the
+    /// continuation is exact, with `Recompute` the affected context is
     /// re-prefilled from tokens.
     pub fn inject_failure(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64> {
         let old_world = self.world();
         anyhow::ensure!(old_world > 1, "cannot lose the last rank");
         anyhow::ensure!(rank < old_world);
+        self.pending_events.push(EngineEvent::FailureInjected { rank, method });
 
         // In-flight state for the latency model.
         let reqs: Vec<(RequestId, usize, RankId)> = self
+            .session
             .order
             .iter()
-            .filter(|id| !self.requests[*id].is_done())
+            .filter(|id| !self.session.requests[*id].is_done())
             .map(|id| {
-                let r = &self.requests[id];
+                let r = &self.session.requests[id];
                 (*id, r.context, r.home)
             })
             .collect();
@@ -301,10 +444,10 @@ impl Engine {
         self.epoch += 1;
 
         // Re-home requests and repair their KV state.
-        let ids: Vec<RequestId> = self.order.clone();
+        let ids: Vec<RequestId> = self.session.order.clone();
         for id in ids {
             let (done, old_home, context) = {
-                let r = &self.requests[&id];
+                let r = &self.session.requests[&id];
                 (r.is_done(), r.home, r.context)
             };
             if done {
@@ -312,7 +455,7 @@ impl Engine {
             }
             let new_home = survivor_map[old_home]
                 .unwrap_or_else(|| self.router.tracker().least_loaded());
-            self.requests.get_mut(&id).unwrap().home = new_home;
+            self.session.requests.get_mut(&id).unwrap().home = new_home;
 
             if !affected.contains(&id) {
                 continue;
@@ -327,43 +470,49 @@ impl Engine {
             // The un-restored suffix (backup lag or everything under
             // Recompute) is re-prefilled from known tokens: input + already
             // generated outputs.
-            let r = self.requests.get_mut(&id).unwrap();
+            let outstanding_before = self.session.requests[&id].prefill_remaining();
+            let r = self.session.requests.get_mut(&id).unwrap();
             if keep < r.context {
                 let mut all: Vec<u32> = r.input_tokens.clone();
                 all.extend(&r.output_tokens);
-                let target_out = r.max_new_tokens;
-                let produced = r.output_tokens.len();
-                // Rebuild the request as: prefill all known tokens beyond
-                // `keep`, then continue decoding the remaining budget.
                 r.input_tokens = all;
-                r.max_new_tokens = target_out; // unchanged budget
                 r.context = keep;
-                let _ = produced;
                 r.state = RequestState::Prefilling;
+            }
+            // Book the repair's extra prefill work: step_prefill completes
+            // it against the router, and only admission booked work so far
+            // — without this, completing unbooked tokens would drain other
+            // requests' booked load on the recovering rank.
+            let outstanding_after = self.session.requests[&id].prefill_remaining();
+            if outstanding_after > outstanding_before {
+                self.router
+                    .add_load(new_home, (outstanding_after - outstanding_before) as f64);
             }
         }
 
         self.recoveries.push(outcome.total_s);
+        self.pending_events
+            .push(EngineEvent::RecoveryCompleted { method, latency_s: outcome.total_s });
+        self.pending_events
+            .push(EngineEvent::Reconfigured { epoch: self.epoch, world: new_world });
         Ok(outcome.total_s)
     }
 
     // ------------------------------------------------------------ steps --
 
-    /// One prefill pass: form chunks with Algorithm 1, run them (b=1).
-    fn step_prefill(&mut self) -> Result<usize> {
-        let items: Vec<PrefillItem> = self
-            .order
+    /// One prefill pass over `ids` (already in scheduling order): form
+    /// chunks with Algorithm 1, run them (b=1).
+    fn step_prefill(&mut self, ids: &[RequestId], events: &mut Vec<EngineEvent>) -> Result<usize> {
+        let items: Vec<PrefillItem> = ids
             .iter()
-            .filter_map(|id| {
-                let r = &self.requests[id];
-                (r.state == RequestState::Prefilling && r.prefill_remaining() > 0).then_some(
-                    PrefillItem {
-                        request: *id,
-                        rank: r.home,
-                        context: r.context,
-                        remaining: r.prefill_remaining(),
-                    },
-                )
+            .map(|id| {
+                let r = &self.session.requests[id];
+                PrefillItem {
+                    request: *id,
+                    rank: r.home,
+                    context: r.context,
+                    remaining: r.prefill_remaining(),
+                }
             })
             .collect();
         if items.is_empty() {
@@ -378,7 +527,7 @@ impl Engine {
         for chunk in &batch.chunks {
             let take = chunk.tokens.min(max_s);
             let (tokens, ctx) = {
-                let r = &self.requests[&chunk.request];
+                let r = &self.session.requests[&chunk.request];
                 let take = take.min(r.prefill_remaining());
                 (r.input_tokens[r.context..r.context + take].to_vec(), r.context)
             };
@@ -387,8 +536,9 @@ impl Engine {
             }
             let logits = self.forward_chunk(chunk.request, &tokens, ctx)?;
             done += tokens.len();
+            self.router.complete(chunk.rank, tokens.len() as f64);
             let finished = {
-                let r = self.requests.get_mut(&chunk.request).unwrap();
+                let r = self.session.requests.get_mut(&chunk.request).unwrap();
                 r.on_prefilled(tokens.len());
                 r.state == RequestState::Decoding
             };
@@ -398,15 +548,29 @@ impl Engine {
                 // the "first" token here would double-count; only sample
                 // when output budget remains.
                 let needs_token = {
-                    let r = &self.requests[&chunk.request];
+                    let r = &self.session.requests[&chunk.request];
                     r.output_tokens.len() < r.max_new_tokens
                 };
                 if needs_token {
                     let tok = argmax(&logits);
-                    self.requests.get_mut(&chunk.request).unwrap().on_decoded(tok);
-                    self.note_token(chunk.request);
+                    let (index, finished_now) = {
+                        let r = self.session.requests.get_mut(&chunk.request).unwrap();
+                        r.on_decoded(tok);
+                        (r.output_tokens.len() - 1, r.state == RequestState::Finished)
+                    };
+                    self.session.note_token(chunk.request);
+                    events.push(EngineEvent::TokenEmitted {
+                        id: chunk.request,
+                        token: tok,
+                        index,
+                    });
+                    if finished_now {
+                        events.push(EngineEvent::RequestFinished { id: chunk.request });
+                    }
                 } else {
-                    self.requests.get_mut(&chunk.request).unwrap().state = RequestState::Finished;
+                    self.session.requests.get_mut(&chunk.request).unwrap().state =
+                        RequestState::Finished;
+                    events.push(EngineEvent::RequestFinished { id: chunk.request });
                 }
             }
             self.kv.backup_request(chunk.request); // proactive backup pass
@@ -414,44 +578,53 @@ impl Engine {
         Ok(done)
     }
 
-    /// One decode step over `ids` (each produces one token).
-    fn step_decode(&mut self, ids: &[RequestId]) -> Result<usize> {
+    /// One decode step over `ids` (each produces one token). Batches are
+    /// formed through the scheduler's continuous-decode batch former in
+    /// scheduling order, capped at the compiled batch bucket.
+    fn step_decode(&mut self, ids: &[RequestId], events: &mut Vec<EngineEvent>) -> Result<usize> {
         let mut produced = 0;
         let cap = self.config.max_batch.min(8).max(1);
-        let groups: Vec<Vec<RequestId>> = ids.chunks(cap).map(|c| c.to_vec()).collect();
-        for group in groups {
-            let inputs: Vec<(RequestId, u32)> = group
+        let mut pool: Vec<DecodeItem> = ids
+            .iter()
+            .map(|id| {
+                let r = &self.session.requests[id];
+                DecodeItem { request: *id, rank: r.home, context: r.context }
+            })
+            .collect();
+        while !pool.is_empty() {
+            let batch = form_decode_batch(&pool, cap, self.world());
+            pool.drain(..batch.len());
+            let inputs: Vec<(RequestId, u32)> = batch
+                .items
                 .iter()
-                .map(|id| {
-                    let r = &self.requests[id];
+                .map(|it| {
+                    let r = &self.session.requests[&it.request];
                     let t = r
                         .output_tokens
                         .last()
                         .copied()
                         .unwrap_or_else(|| *r.input_tokens.last().expect("nonempty prompt"));
-                    (*id, t)
+                    (it.request, t)
                 })
                 .collect();
             let logits = self.forward_decode(&inputs)?;
             for (i, &(id, _)) in inputs.iter().enumerate() {
                 let tok = argmax(&logits[i]);
-                self.requests.get_mut(&id).unwrap().on_decoded(tok);
-                self.note_token(id);
+                let (index, finished) = {
+                    let r = self.session.requests.get_mut(&id).unwrap();
+                    r.on_decoded(tok);
+                    (r.output_tokens.len() - 1, r.state == RequestState::Finished)
+                };
+                self.session.note_token(id);
+                events.push(EngineEvent::TokenEmitted { id, token: tok, index });
+                if finished {
+                    events.push(EngineEvent::RequestFinished { id });
+                }
                 produced += 1;
                 self.kv.backup_request(id);
             }
         }
         Ok(produced)
-    }
-
-    fn note_token(&mut self, id: RequestId) {
-        let t = self.timing.get_mut(&id).unwrap();
-        let now = t.submitted.elapsed().as_secs_f64();
-        match t.last_token {
-            None => t.first_token = Some(now),
-            Some(prev) => t.max_tbt = t.max_tbt.max(now - prev),
-        }
-        t.last_token = Some(now);
     }
 
     // ---------------------------------------------------------- forward --
@@ -485,7 +658,7 @@ impl Engine {
             .with_context(|| format!("no s bucket ≥ {s_real}"))?;
         let c = pick_bucket(&self.manifest.buckets("attn", |v| v.c), ctx)
             .with_context(|| format!("no c bucket ≥ {ctx}"))?;
-        let home = self.requests[&req].home;
+        let home = self.session.requests[&req].home;
         let items = vec![(req, tokens.to_vec(), ctx, home)];
         let logits = self.forward_batch(&items, 1, s, c)?;
         let v = self.manifest.model.vocab;
@@ -502,7 +675,7 @@ impl Engine {
             .with_context(|| format!("no c bucket ≥ ctx {max_ctx}"))?;
         let items: Vec<FwdItem> = reqs
             .iter()
-            .map(|&(id, tok)| (id, vec![tok], self.kv.tokens(id), self.requests[&id].home))
+            .map(|&(id, tok)| (id, vec![tok], self.kv.tokens(id), self.session.requests[&id].home))
             .collect();
         let logits = self.forward_batch(&items, b, 1, c)?;
         let v = self.manifest.model.vocab;
@@ -746,6 +919,40 @@ impl Engine {
             }
         }
         Ok(())
+    }
+}
+
+impl ServingBackend for Engine {
+    fn submit_with(&mut self, prompt: &[u32], opts: SubmitOptions) -> Result<RequestId> {
+        Engine::submit_with(self, prompt, opts)
+    }
+
+    fn step(&mut self) -> Result<Vec<EngineEvent>> {
+        Engine::step(self)
+    }
+
+    fn abort(&mut self, id: RequestId) -> Result<()> {
+        Engine::abort(self, id)
+    }
+
+    fn inject_failure(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64> {
+        Engine::inject_failure(self, rank, method)
+    }
+
+    fn now(&self) -> SimTime {
+        Engine::now(self)
+    }
+
+    fn is_idle(&self) -> bool {
+        Engine::is_idle(self)
+    }
+
+    fn report(&self) -> ServeReport {
+        Engine::report(self)
+    }
+
+    fn run_to_completion(&mut self) -> Result<ServeReport> {
+        Engine::run_to_completion(self)
     }
 }
 

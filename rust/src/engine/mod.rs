@@ -1,5 +1,25 @@
 //! The real serving engine: the rust coordinator executing AOT-compiled
-//! JAX/Pallas shards through PJRT, end to end.
+//! JAX/Pallas shards through PJRT, end to end — exposed as an
+//! **event-driven session**.
+//!
+//! The public surface is the [`ServingBackend`] trait: submit requests
+//! with [`SubmitOptions`] (timed arrival, generation budget, priority,
+//! SLO deadline), tick the session with `step()` and consume the
+//! [`EngineEvent`] stream it returns (token emissions, completions,
+//! aborts, failure/recovery notifications), cancel requests with
+//! `abort(id)`, and inject GPU failures at *any* step boundary — even
+//! mid-decode with requests in flight. `run_to_completion()` is a thin
+//! convenience wrapper over `step()`. The same trait is implemented by
+//! the cost-model simulator ([`crate::simulator::OnlineSession`]), so
+//! online traces, benches, and the fault-tolerance examples run
+//! identically against either backend; [`drive`] is the shared loop.
+//!
+//! Internally the session splits into three layers:
+//! * [`core`](self) — the step loop, event generation, failure recovery,
+//!   and the bucketed PJRT forward path;
+//! * `session` — request/timing bookkeeping ([`SubmitOptions`], the
+//!   scheduling order, TTFT/TBT clocks);
+//! * `report` — [`ServeReport`] assembly.
 //!
 //! Everything the simulators decide analytically happens here for real:
 //! non-uniform head placement (the per-layer head→rank map drives which
@@ -16,8 +36,12 @@
 
 mod core;
 mod kv;
+mod report;
+mod session;
 mod shard;
 
-pub use self::core::{Engine, GenerationResult, ServeReport};
+pub use self::core::{drive, Engine, EngineEvent, FaultPlan, FaultTrigger, ServingBackend};
 pub use kv::KvStore;
+pub use report::{GenerationResult, ServeReport};
+pub use session::SubmitOptions;
 pub use shard::RankShard;

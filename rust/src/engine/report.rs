@@ -1,0 +1,120 @@
+//! Report assembly: turning a finished (or in-flight) [`Session`] into the
+//! [`ServeReport`] consumed by tests, examples, and benches.
+
+use crate::coordinator::RequestState;
+use crate::RequestId;
+
+use super::session::Session;
+
+/// Completed (or aborted) generation of one request.
+#[derive(Debug, Clone)]
+pub struct GenerationResult {
+    pub id: RequestId,
+    pub output_tokens: Vec<u32>,
+    /// Wall-clock time to first token, `None` if the request never
+    /// produced one (aborted or still queued) — distinguishable from an
+    /// instant first token, which `0.0` was not.
+    pub ttft_s: Option<f64>,
+    /// Max wall-clock gap between output tokens.
+    pub max_tbt_s: f64,
+    /// True if the request was cancelled via `abort()` before finishing.
+    pub aborted: bool,
+}
+
+/// Report of a serve run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub results: Vec<GenerationResult>,
+    pub wall_s: f64,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub steps: usize,
+    /// Simulated (modeled) recovery latencies of injected failures.
+    pub recoveries: Vec<f64>,
+}
+
+impl ServeReport {
+    pub fn decode_tps(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.wall_s
+        }
+    }
+
+    /// Per-request output tokens, borrowed — callers that only compare or
+    /// measure lengths don't pay for a deep copy of every token vector.
+    pub fn outputs(&self) -> Vec<&[u32]> {
+        self.results.iter().map(|r| r.output_tokens.as_slice()).collect()
+    }
+
+    /// Per-request output tokens, cloned — for callers that outlive the
+    /// report.
+    pub fn outputs_owned(&self) -> Vec<Vec<u32>> {
+        self.results.iter().map(|r| r.output_tokens.clone()).collect()
+    }
+
+    /// Result of one request by id.
+    pub fn result(&self, id: RequestId) -> Option<&GenerationResult> {
+        self.results.iter().find(|r| r.id == id)
+    }
+}
+
+/// Build a cumulative report over every request the session has seen, in
+/// submission order. Counters and wall time are session-lifetime values;
+/// `Engine::run_to_completion` narrows them to the span of one call.
+pub(super) fn assemble(session: &Session, recoveries: &[f64]) -> ServeReport {
+    let mut report = ServeReport {
+        results: Vec::with_capacity(session.order.len()),
+        wall_s: session.clock,
+        prefill_tokens: session.prefill_tokens,
+        decode_tokens: session.decode_tokens,
+        steps: session.steps,
+        recoveries: recoveries.to_vec(),
+    };
+    for id in &session.order {
+        let r = &session.requests[id];
+        let t = &session.timing[id];
+        report.results.push(GenerationResult {
+            id: *id,
+            output_tokens: r.output_tokens.clone(),
+            ttft_s: t.first_token,
+            max_tbt_s: t.max_tbt,
+            aborted: r.state == RequestState::Aborted,
+        });
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outputs_borrow_matches_owned() {
+        let report = ServeReport {
+            results: vec![
+                GenerationResult {
+                    id: 0,
+                    output_tokens: vec![1, 2, 3],
+                    ttft_s: Some(0.1),
+                    max_tbt_s: 0.0,
+                    aborted: false,
+                },
+                GenerationResult {
+                    id: 1,
+                    output_tokens: vec![],
+                    ttft_s: None,
+                    max_tbt_s: 0.0,
+                    aborted: true,
+                },
+            ],
+            ..ServeReport::default()
+        };
+        assert_eq!(report.outputs(), vec![&[1u32, 2, 3][..], &[][..]]);
+        assert_eq!(report.outputs_owned(), vec![vec![1, 2, 3], vec![]]);
+        assert_eq!(report.result(1).unwrap().ttft_s, None);
+        assert!(report.result(1).unwrap().aborted);
+        assert!(report.result(2).is_none());
+    }
+}

@@ -1,0 +1,241 @@
+//! Session bookkeeping for the event-driven engine: per-request lifecycle
+//! state, submission options, wall-clock timing, and the counters that the
+//! final [`super::ServeReport`] is assembled from.
+//!
+//! The [`super::Engine`] owns exactly one `Session`; `core.rs` drives it
+//! from the `step()` loop and `report.rs` turns it into a report. Nothing
+//! in here touches PJRT — this file is pure request/timing bookkeeping.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::coordinator::{Request, RequestState};
+use crate::{RequestId, SimTime};
+
+/// Options attached to a submitted request (builder style).
+///
+/// ```ignore
+/// engine.submit_with(&prompt, SubmitOptions::new(64).at(1.5).priority(2))?;
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubmitOptions {
+    /// Arrival time in seconds on the backend's clock. The request stays
+    /// `Queued` and is not routed or scheduled before this time; `0.0`
+    /// (the default) means "available immediately" — the offline case.
+    pub arrival: SimTime,
+    /// Generation budget (must be ≥ 1; validated at submit).
+    pub max_new_tokens: usize,
+    /// Scheduling priority: higher runs first within a step's admission,
+    /// prefill ordering, and decode batch forming. Default 0.
+    pub priority: i32,
+    /// Optional SLO deadline (seconds on the backend clock). Among equal
+    /// priorities, earlier deadlines are scheduled first.
+    pub deadline: Option<SimTime>,
+}
+
+impl SubmitOptions {
+    pub fn new(max_new_tokens: usize) -> Self {
+        SubmitOptions { arrival: 0.0, max_new_tokens, priority: 0, deadline: None }
+    }
+
+    /// Set the arrival time (timed/online traces).
+    pub fn at(mut self, arrival: SimTime) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Set the scheduling priority (higher = sooner).
+    pub fn priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set the SLO deadline.
+    pub fn deadline(mut self, deadline: SimTime) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Wall-clock timing of one request, relative to its admission.
+#[derive(Debug)]
+pub(super) struct Timing {
+    pub submitted: Instant,
+    pub first_token: Option<f64>,
+    pub last_token: Option<f64>,
+    pub max_tbt: f64,
+}
+
+impl Timing {
+    fn new() -> Self {
+        Timing { submitted: Instant::now(), first_token: None, last_token: None, max_tbt: 0.0 }
+    }
+}
+
+/// All request/timing state of one engine session, plus the cumulative
+/// step counters. The scheduling order helpers here are the single source
+/// of truth for "which request runs first" — both prefill and decode pull
+/// their candidate lists from them so priority/deadline behave uniformly.
+#[derive(Debug, Default)]
+pub(super) struct Session {
+    pub requests: HashMap<RequestId, Request>,
+    pub timing: HashMap<RequestId, Timing>,
+    /// Submission order — the tiebreaker after priority and deadline.
+    pub order: Vec<RequestId>,
+    next_id: RequestId,
+    /// The session clock in seconds: advances by the measured wall time of
+    /// each step, and fast-forwards over idle gaps to the next arrival.
+    pub clock: SimTime,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub steps: usize,
+}
+
+impl Session {
+    pub fn new() -> Self {
+        Session::default()
+    }
+
+    /// Register a new request (state `Queued`; routing happens at
+    /// admission). Returns its id.
+    pub fn create(&mut self, prompt: Vec<u32>, opts: SubmitOptions) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut req = Request::new(id, opts.arrival, prompt, opts.max_new_tokens);
+        req.priority = opts.priority;
+        req.deadline = opts.deadline;
+        self.requests.insert(id, req);
+        self.timing.insert(id, Timing::new());
+        self.order.push(id);
+        id
+    }
+
+    /// Queued requests whose arrival time has come, in scheduling order.
+    pub fn ready_to_admit(&self, now: SimTime) -> Vec<RequestId> {
+        self.in_sched_order(|r| r.state == RequestState::Queued && r.arrival <= now)
+    }
+
+    /// Earliest arrival among still-queued requests.
+    pub fn next_arrival(&self) -> Option<SimTime> {
+        self.requests
+            .values()
+            .filter(|r| r.state == RequestState::Queued)
+            .map(|r| r.arrival)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Requests with prefill work pending, in scheduling order.
+    pub fn prefilling(&self) -> Vec<RequestId> {
+        self.in_sched_order(|r| r.state == RequestState::Prefilling && r.prefill_remaining() > 0)
+    }
+
+    /// Requests in decode, in scheduling order.
+    pub fn decoding(&self) -> Vec<RequestId> {
+        self.in_sched_order(|r| r.state == RequestState::Decoding)
+    }
+
+    /// True when no request can ever make progress again without a new
+    /// submission: nothing queued, prefilling, or decoding.
+    pub fn is_idle(&self) -> bool {
+        !self.requests.values().any(|r| {
+            matches!(
+                r.state,
+                RequestState::Queued | RequestState::Prefilling | RequestState::Decoding
+            )
+        })
+    }
+
+    /// Record a token emission for `id`'s TTFT/TBT timing.
+    pub fn note_token(&mut self, id: RequestId) {
+        let t = self.timing.get_mut(&id).expect("timing exists for every request");
+        let now = t.submitted.elapsed().as_secs_f64();
+        match t.last_token {
+            None => t.first_token = Some(now),
+            Some(prev) => t.max_tbt = t.max_tbt.max(now - prev),
+        }
+        t.last_token = Some(now);
+    }
+
+    /// Re-base `id`'s timing to now — called when a request with a future
+    /// arrival is finally admitted, so TTFT measures service latency
+    /// rather than time spent waiting to arrive.
+    pub fn rebase_timing(&mut self, id: RequestId) {
+        if let Some(t) = self.timing.get_mut(&id) {
+            if t.first_token.is_none() {
+                t.submitted = Instant::now();
+            }
+        }
+    }
+
+    /// Submission order filtered by `keep`, then stably sorted by
+    /// (priority desc, deadline asc). Ties keep submission order.
+    fn in_sched_order(&self, keep: impl Fn(&Request) -> bool) -> Vec<RequestId> {
+        let mut ids: Vec<RequestId> =
+            self.order.iter().copied().filter(|id| keep(&self.requests[id])).collect();
+        ids.sort_by(|a, b| {
+            let ra = &self.requests[a];
+            let rb = &self.requests[b];
+            rb.priority
+                .cmp(&ra.priority)
+                .then_with(|| {
+                    let da = ra.deadline.unwrap_or(f64::INFINITY);
+                    let db = rb.deadline.unwrap_or(f64::INFINITY);
+                    da.partial_cmp(&db).unwrap()
+                })
+        });
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_options_builder() {
+        let o = SubmitOptions::new(8).at(2.5).priority(3).deadline(10.0);
+        assert_eq!(o.max_new_tokens, 8);
+        assert_eq!(o.arrival, 2.5);
+        assert_eq!(o.priority, 3);
+        assert_eq!(o.deadline, Some(10.0));
+        let d = SubmitOptions::new(4);
+        assert_eq!(d.arrival, 0.0);
+        assert_eq!(d.priority, 0);
+        assert_eq!(d.deadline, None);
+    }
+
+    #[test]
+    fn admission_respects_arrival_and_priority() {
+        let mut s = Session::new();
+        let a = s.create(vec![1, 2], SubmitOptions::new(4));
+        let b = s.create(vec![1, 2], SubmitOptions::new(4).at(5.0));
+        let c = s.create(vec![1, 2], SubmitOptions::new(4).priority(1));
+        assert_eq!(s.ready_to_admit(0.0), vec![c, a], "priority first, b not arrived");
+        assert_eq!(s.next_arrival(), Some(0.0));
+        s.requests.get_mut(&a).unwrap().state = RequestState::Prefilling;
+        s.requests.get_mut(&c).unwrap().state = RequestState::Prefilling;
+        assert_eq!(s.next_arrival(), Some(5.0));
+        assert_eq!(s.ready_to_admit(5.0), vec![b]);
+        assert!(!s.is_idle());
+    }
+
+    #[test]
+    fn sched_order_breaks_priority_ties_by_deadline() {
+        let mut s = Session::new();
+        let a = s.create(vec![1], SubmitOptions::new(1).deadline(9.0));
+        let b = s.create(vec![1], SubmitOptions::new(1).deadline(3.0));
+        let c = s.create(vec![1], SubmitOptions::new(1));
+        assert_eq!(s.ready_to_admit(0.0), vec![b, a, c]);
+    }
+
+    #[test]
+    fn idle_when_all_finished_or_aborted() {
+        let mut s = Session::new();
+        let a = s.create(vec![1], SubmitOptions::new(1));
+        let b = s.create(vec![1], SubmitOptions::new(1));
+        assert!(!s.is_idle());
+        s.requests.get_mut(&a).unwrap().state = RequestState::Finished;
+        s.requests.get_mut(&b).unwrap().state = RequestState::Aborted;
+        assert!(s.is_idle());
+    }
+}

@@ -22,6 +22,29 @@
 //! * [`engine`] + [`runtime`] — the *real* serving engine: a rust
 //!   coordinator executing AOT-compiled JAX/Pallas shards via PJRT.
 //!
+//! ## The serving session API
+//!
+//! Serving is **event-driven**. Both the real engine
+//! ([`engine::Engine`]) and the cost-model decode instance
+//! ([`simulator::OnlineSession`]) implement one trait,
+//! [`engine::ServingBackend`]:
+//!
+//! * `submit_with(prompt, SubmitOptions)` — timed arrival, generation
+//!   budget, priority, and SLO deadline per request;
+//! * `step()` — one tick of the serving loop, returning the
+//!   [`engine::EngineEvent`]s it produced (token emissions, request
+//!   completions, aborts, failure/recovery/reconfiguration notices);
+//! * `abort(id)` — cancel an in-flight request and release its KV;
+//! * `inject_failure(rank, method)` — kill a GPU at *any* step boundary,
+//!   even mid-decode with requests in flight, and continue bit-exact
+//!   under backup-based recovery;
+//! * `run_to_completion()` — a thin convenience wrapper over `step()`.
+//!
+//! [`engine::drive`] steps any backend to completion with an optional
+//! planned [`engine::FaultPlan`], so online traces, benches, and the
+//! fault-tolerance examples run identically against the real engine or
+//! the simulator.
+//!
 //! The three-layer architecture: Python (JAX + Pallas) authors the model and
 //! kernels and lowers them **once** to HLO text (`make artifacts`); the rust
 //! coordinator loads the artifacts through the PJRT C API and owns the

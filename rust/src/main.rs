@@ -9,6 +9,7 @@
 //! Examples:
 //!   failsafe serve --world 3 --requests 6 --max-new 12
 //!   failsafe serve --world 3 --fail-rank 1 --recovery full
+//!   failsafe serve --world 3 --fail-rank 1 --fail-after-tokens 12
 //!   failsafe sim --model llama --system failsafe --world 7 --mode decode --rate 4
 //!   failsafe recover --model llama --world 8 --requests 60 --ctx 8000
 //!   failsafe traces --n 3000
@@ -16,7 +17,7 @@
 use failsafe::benchkit::section;
 use failsafe::cluster::{GpuSpec, Interconnect};
 use failsafe::config::{model_by_name, recovery_by_name, system_by_name, EngineConfig};
-use failsafe::engine::Engine;
+use failsafe::engine::{drive, Engine, FaultPlan, FaultTrigger, ServingBackend};
 use failsafe::kvcache::BackupStore;
 use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use failsafe::sharding::{HeadAssignment, ShardPlan};
@@ -50,6 +51,10 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let n = args.get_usize("requests", 6);
     let max_new = args.get_usize("max-new", 12);
     let fail_rank = args.get("fail-rank").and_then(|v| v.parse::<usize>().ok());
+    // With --fail-after-tokens N the failure hits mid-stream, between
+    // decode steps, with requests in flight; without it (but with
+    // --fail-rank) it hits before serving starts.
+    let fail_after = args.get("fail-after-tokens").and_then(|v| v.parse::<usize>().ok());
     let seed = cfg.seed;
 
     section(&format!("serving {} requests on world={} ({})", n, cfg.world, cfg.system.name));
@@ -60,13 +65,21 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         let prompt: Vec<u32> = (0..len).map(|_| rng.range(1, 512) as u32).collect();
         engine.submit(&prompt, max_new)?;
     }
-    if let Some(rank) = fail_rank {
-        let method =
-            recovery_by_name(args.get_or("recovery", "full")).unwrap_or(RecoveryMethod::Full);
-        let lat = engine.inject_failure(rank, method)?;
-        println!("injected failure of rank {rank}: recovery {:.1} ms (modeled H100)", lat * 1e3);
+    let method =
+        recovery_by_name(args.get_or("recovery", "full")).unwrap_or(RecoveryMethod::Full);
+    let fault = fail_rank.map(|rank| FaultPlan {
+        trigger: FaultTrigger::AfterTokens(fail_after.unwrap_or(0)),
+        rank,
+        method,
+    });
+    let (report, recovery) = drive(&mut engine as &mut dyn ServingBackend, fault)?;
+    if let (Some(rank), Some(lat)) = (fail_rank, recovery) {
+        println!(
+            "injected failure of rank {rank} after {} tokens: recovery {:.1} ms (modeled H100)",
+            fail_after.unwrap_or(0),
+            lat * 1e3
+        );
     }
-    let report = engine.run_to_completion()?;
     println!(
         "done: {} prefill tok, {} decode tok in {:.2}s ({:.1} decode tok/s), epoch {}",
         report.prefill_tokens,

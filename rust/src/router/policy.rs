@@ -61,6 +61,12 @@ impl DpRouter {
         self.tracker.add(rank, work_tokens);
     }
 
+    /// A request was aborted: un-book the work it had routed to `rank` but
+    /// never completed, so the rank doesn't look busier than it is.
+    pub fn cancel(&mut self, rank: RankId, work_tokens: f64) {
+        self.tracker.complete(rank, work_tokens);
+    }
+
     /// Rebuild after reconfiguration.
     pub fn remap(&self, survivor_map: &[Option<RankId>], new_world: usize) -> DpRouter {
         DpRouter {
@@ -96,6 +102,15 @@ mod tests {
         let mut r = DpRouter::new(RoutePolicy::RoundRobin, 3);
         let homes: Vec<RankId> = (0..6).map(|_| r.route(1.0)).collect();
         assert_eq!(homes, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn cancel_releases_booked_work() {
+        let mut r = DpRouter::new(RoutePolicy::LeastLoaded, 2);
+        let home = r.route(100.0);
+        assert_eq!(r.route(1.0), 1 - home);
+        r.cancel(home, 100.0);
+        assert_eq!(r.tracker().pending(home), 0.0);
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //!   ablation points).
 //! * [`OnlineSim`] — event-driven online serving (prefill or decode
 //!   instance, P-D disaggregated as in §4.2) with fault injection.
+//! * [`OnlineSession`] — the steppable decode instance behind
+//!   [`OnlineSim`], implementing the same
+//!   [`ServingBackend`](crate::engine::ServingBackend) trait as the real
+//!   engine, so traces/benches/examples run against either backend.
 //! * [`offline`] — steady-state throughput for the Fig 8 fault-trace
 //!   integration.
 
@@ -24,4 +28,4 @@ mod online;
 
 pub use config::{PrefillPolicy, SystemConfig};
 pub use costmodel::{DecodeWork, PrefillWork, StepCostModel};
-pub use online::{OnlineMode, OnlineOutcome, OnlineSim, RecoveryEvent};
+pub use online::{OnlineMode, OnlineOutcome, OnlineSession, OnlineSim, RecoveryEvent};

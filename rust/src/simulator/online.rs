@@ -3,16 +3,27 @@
 //! A simulated instance is either a **prefill instance** (measures TTFT
 //! and input-token throughput) or a **decode instance** (measures TBT and
 //! generated-token throughput) — mirroring the paper's separate reporting.
-//! The decode instance supports mid-run GPU failure with any
-//! [`RecoveryMethod`], which is how Fig 12 / Table 3 are produced.
+//!
+//! The decode instance is a steppable [`OnlineSession`] implementing the
+//! same [`ServingBackend`] trait as the real engine: submit with
+//! [`SubmitOptions`], tick with `step()`, abort mid-flight, and inject a
+//! GPU failure with any [`RecoveryMethod`] at any step boundary — which
+//! is how Fig 12 / Table 3 are produced. [`OnlineSim::run`] wraps the
+//! session for the batch (trace-driven) workflow. Simulated token
+//! emissions carry placeholder token id `0`: only counts and timing are
+//! meaningful on this backend.
 
+use anyhow::Result;
+
+use crate::cluster::{GpuSpec, Interconnect};
+use crate::engine::{EngineEvent, GenerationResult, ServeReport, ServingBackend, SubmitOptions};
 use crate::kvcache::BackupStore;
 use crate::metrics::ServingMetrics;
 use crate::recovery::{plan_recovery, BackupDaemon, RecoveryInput, RecoveryMethod};
 use crate::router::DpRouter;
 use crate::scheduler::{adaptive_chunked_prefill, fifo_chunked_prefill, PrefillItem};
+use crate::sharding::ShardPlan;
 use crate::traces::TraceRequest;
-use crate::cluster::{GpuSpec, Interconnect};
 use crate::{RankId, RequestId, SimTime};
 
 use super::costmodel::{DecodeWork, PrefillWork, StepCostModel};
@@ -70,6 +81,26 @@ struct Running {
     home: RankId,
     context: usize,
     remaining_out: usize,
+    emitted: usize,
+}
+
+/// A request known to the session but not yet arrived.
+struct Pending {
+    id: RequestId,
+    arrival: SimTime,
+    input_tokens: usize,
+    output_tokens: usize,
+    priority: i32,
+    deadline: Option<SimTime>,
+}
+
+/// A request that has arrived and waits for KV headroom.
+struct Waiting {
+    id: RequestId,
+    context: usize,
+    output: usize,
+    priority: i32,
+    deadline: Option<SimTime>,
 }
 
 impl OnlineSim {
@@ -90,6 +121,51 @@ impl OnlineSim {
     pub fn with_model(mut self, model: crate::model::ModelSpec) -> Self {
         self.model = model;
         self
+    }
+
+    /// A fresh steppable decode-instance session (the [`ServingBackend`]
+    /// surface of the simulator).
+    pub fn session(&self) -> OnlineSession {
+        let plan = self.config.plan(&self.model, self.world);
+        let ic = Interconnect::new(self.spec.clone());
+        let cost = StepCostModel::new(&plan, &self.spec, &ic);
+        let (tp_rate, dp_rate) = cost.kv_rates();
+        let kv_budget = cost.kv_budget();
+        let daemon = BackupDaemon::new(
+            self.spec.pcie_bw,
+            self.backup_fraction,
+            self.model.kv_bytes_per_token(),
+        );
+        OnlineSession {
+            config: self.config.clone(),
+            model: self.model.clone(),
+            spec: self.spec.clone(),
+            ic,
+            plan,
+            cost,
+            world: self.world,
+            max_batch: self.max_batch,
+            metrics: ServingMetrics::new(),
+            router: DpRouter::new(self.config.router, self.world),
+            backup: BackupStore::new(1 << 42),
+            daemon,
+            pending: Vec::new(),
+            pending_sorted: true,
+            waiting: Vec::new(),
+            running: Vec::new(),
+            tp_rate,
+            dp_rate,
+            kv_budget,
+            kv_used: vec![0.0; self.world],
+            clock: 0.0,
+            steps: 0,
+            stalled: false,
+            next_id: 0,
+            order: Vec::new(),
+            aborted: Vec::new(),
+            recoveries: Vec::new(),
+            events: Vec::new(),
+        }
     }
 
     /// Run the trace to completion (or until `max_sim_time`).
@@ -193,188 +269,409 @@ impl OnlineSim {
 
     // ----------------------------------------------------------- decode --
 
+    /// Decode instance, reimplemented on the steppable [`OnlineSession`].
     fn run_decode(&self, trace: &[TraceRequest], fault: Option<RecoveryEvent>) -> OnlineOutcome {
-        let model = self.model.clone();
-        let ic = Interconnect::new(self.spec.clone());
-        let mut plan = self.config.plan(&model, self.world);
-        let mut cost = StepCostModel::new(&plan, &self.spec, &ic);
-        let mut world = self.world;
-
-        let mut metrics = ServingMetrics::new();
-        let mut router = DpRouter::new(self.config.router, world);
-        let mut backup = BackupStore::new(1 << 42);
-        let mut daemon =
-            BackupDaemon::new(self.spec.pcie_bw, self.backup_fraction, model.kv_bytes_per_token());
-
         let mut arrivals: Vec<&TraceRequest> = trace.iter().collect();
         arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-        let mut next_arrival = 0usize;
-        let mut waiting: Vec<(RequestId, usize, usize)> = Vec::new(); // (id, ctx, out)
-        let mut running: Vec<Running> = Vec::new();
-        let (mut tp_rate, mut dp_rate) = cost.kv_rates();
-        let mut kv_budget = cost.kv_budget();
-        let mut kv_used = vec![0.0f64; world];
-        let mut clock: SimTime = 0.0;
-        let mut steps = 0usize;
-        let mut fault_at: Option<SimTime> = None;
-        let mut fault_done = false;
+
+        let mut session = self.session();
+        for r in &arrivals {
+            session.enqueue(r.id, r.arrival, r.input_tokens, r.output_tokens.max(1), 0, None);
+        }
+        // The paper's trigger: 100 ms after the `after_requests`-th arrival.
+        let mut pending_fault = fault.and_then(|f| {
+            let idx = f.after_requests.saturating_sub(1);
+            arrivals.get(idx).map(|r| (r.arrival + 0.1, f))
+        });
+
         let mut recovery_latency = None;
-
-        loop {
-            // Admit arrivals into the waiting queue.
-            while next_arrival < arrivals.len() && arrivals[next_arrival].arrival <= clock {
-                let r = arrivals[next_arrival];
-                metrics.on_arrival(r.id, r.arrival);
-                metrics.on_prefill_tokens(r.input_tokens);
-                waiting.push((r.id, r.input_tokens, r.output_tokens.max(1)));
-                next_arrival += 1;
-                if let Some(f) = fault {
-                    if !fault_done && fault_at.is_none() && next_arrival >= f.after_requests {
-                        fault_at = Some(r.arrival + 0.1);
-                    }
+        while !session.session_idle() {
+            if let Some((at, f)) = pending_fault {
+                if session.clock >= at {
+                    recovery_latency =
+                        Some(session.fail_rank(f.failed_rank, f.method).expect("fault injection"));
+                    pending_fault = None;
                 }
             }
-
-            // Inject the failure.
-            if let (Some(f), Some(at)) = (fault, fault_at) {
-                if !fault_done && clock >= at {
-                    let reqs: Vec<(RequestId, usize, RankId)> =
-                        running.iter().map(|r| (r.id, r.context, r.home)).collect();
-                    let survivor_map: Vec<Option<RankId>> = (0..world)
-                        .map(|r| {
-                            if r == f.failed_rank {
-                                None
-                            } else {
-                                Some(if r < f.failed_rank { r } else { r - 1 })
-                            }
-                        })
-                        .collect();
-                    let new_plan = SystemConfig {
-                        // recovery keeps the configured policies
-                        ..self.config.clone()
-                    }
-                    .plan(&model, world - 1);
-                    let input = RecoveryInput {
-                        spec: &self.spec,
-                        ic: &ic,
-                        old_plan: &plan,
-                        new_plan: &new_plan,
-                        survivor_map: &survivor_map,
-                        failed_rank: f.failed_rank,
-                        requests: &reqs,
-                        backup: &backup,
-                    };
-                    let outcome = plan_recovery(f.method, &input);
-                    recovery_latency = Some(outcome.total_s);
-                    clock += outcome.total_s; // the stall every in-flight request sees
-                    // Reconfigure to the reduced world.
-                    world -= 1;
-                    plan = new_plan;
-                    cost = StepCostModel::new(&plan, &self.spec, &ic);
-                    let rates = cost.kv_rates();
-                    tp_rate = rates.0;
-                    dp_rate = rates.1;
-                    kv_budget = cost.kv_budget();
-                    router = router.remap(&survivor_map, world);
-                    // Re-home requests of the failed rank; recompute KV usage.
-                    kv_used = vec![0.0; world];
-                    for r in running.iter_mut() {
-                        r.home = survivor_map[r.home].unwrap_or_else(|| router.tracker().least_loaded());
-                        for (ru, used) in kv_used.iter_mut().enumerate() {
-                            *used += tp_rate[ru] * r.context as f64;
-                        }
-                        kv_used[r.home] += dp_rate * r.context as f64;
-                    }
-                    fault_done = true;
-                }
-            }
-
-            // Admit from waiting while KV fits (project to full output length).
-            waiting.retain(|&(id, ctx, out)| {
-                let total = (ctx + out) as f64;
-                let fits = (0..world).all(|r| {
-                    let add = tp_rate[r] * total
-                        + if r == router.tracker().least_loaded() { dp_rate * total } else { 0.0 };
-                    kv_used[r] + add <= kv_budget[r] as f64 * 0.97
-                }) && running.len() < self.max_batch;
-                if fits {
-                    let home = router.route(ctx as f64);
-                    for (r, used) in kv_used.iter_mut().enumerate() {
-                        *used += tp_rate[r] * ctx as f64;
-                    }
-                    kv_used[home] += dp_rate * ctx as f64;
-                    // P-D disaggregation: the prefill instance ships this
-                    // request's KV through host DRAM, so the input context
-                    // is host-mirrored the moment the decode instance
-                    // admits it; the daemon only trails the decode tokens.
-                    backup.backup(id, ctx, model.kv_bytes_per_token());
-                    running.push(Running { id, home, context: ctx, remaining_out: out });
-                    false
-                } else {
-                    true
-                }
-            });
-
-            if running.is_empty() {
-                if next_arrival >= arrivals.len() && waiting.is_empty() {
-                    break;
-                }
-                if next_arrival < arrivals.len() {
-                    clock = clock.max(arrivals[next_arrival].arrival);
-                    // If also waiting requests can never fit → avoid livelock.
-                    if waiting.len() >= self.max_batch {
-                        break;
-                    }
-                    continue;
-                }
-                // Waiting requests that can never fit (cold system): bail.
-                break;
-            }
-
-            // One decode step.
-            let work: Vec<DecodeWork> = running
-                .iter()
-                .map(|r| DecodeWork { context: r.context, home: r.home })
-                .collect();
-            let dt = cost.decode_step_time(&work);
-            clock += dt;
-            steps += 1;
-            daemon.advance(dt, &mut backup);
-
-            let mut finished: Vec<usize> = Vec::new();
-            for (i, r) in running.iter_mut().enumerate() {
-                metrics.on_token(r.id, clock);
-                daemon.produced(r.id, r.context, r.context + 1);
-                r.context += 1;
-                r.remaining_out -= 1;
-                for (ru, used) in kv_used.iter_mut().enumerate() {
-                    *used += tp_rate[ru];
-                }
-                kv_used[r.home] += dp_rate;
-                if r.remaining_out == 0 {
-                    finished.push(i);
-                }
-            }
-            for &i in finished.iter().rev() {
-                let r = running.swap_remove(i);
-                metrics.on_finish(r.id);
-                daemon.forget(r.id);
-                backup.release(r.id, model.kv_bytes_per_token());
-                for (ru, used) in kv_used.iter_mut().enumerate() {
-                    *used = (*used - tp_rate[ru] * r.context as f64).max(0.0);
-                }
-                kv_used[r.home] = (kv_used[r.home] - dp_rate * r.context as f64).max(0.0);
-                router.complete(r.home, 0.0);
-            }
+            session.tick();
         }
 
-        OnlineOutcome { metrics, recovery_latency_s: recovery_latency, steps, world }
+        OnlineOutcome {
+            recovery_latency_s: recovery_latency,
+            steps: session.steps,
+            world: session.world,
+            metrics: session.metrics,
+        }
+    }
+}
+
+/// A steppable decode-instance simulation: the simulator's side of the
+/// [`ServingBackend`] trait. State mirrors the real engine's session —
+/// queued arrivals, a KV-admission waiting line, and the running decode
+/// batch — but every step is costed by the roofline model instead of a
+/// PJRT execution, so the clock is simulated time.
+pub struct OnlineSession {
+    config: SystemConfig,
+    model: crate::model::ModelSpec,
+    spec: GpuSpec,
+    ic: Interconnect,
+    plan: ShardPlan,
+    cost: StepCostModel,
+    world: usize,
+    max_batch: usize,
+    pub metrics: ServingMetrics,
+    router: DpRouter,
+    backup: BackupStore,
+    daemon: BackupDaemon,
+    /// Submitted but not yet arrived, kept sorted by arrival (descending,
+    /// so admission pops from the back).
+    pending: Vec<Pending>,
+    pending_sorted: bool,
+    /// Arrived, waiting for KV headroom, admitted in scheduling order
+    /// (priority desc, then deadline asc, then arrival order).
+    waiting: Vec<Waiting>,
+    running: Vec<Running>,
+    tp_rate: Vec<f64>,
+    dp_rate: f64,
+    kv_budget: Vec<usize>,
+    kv_used: Vec<f64>,
+    clock: SimTime,
+    steps: usize,
+    /// Set when the waiting line can never drain (cold-system livelock in
+    /// the old batch loop) — the session reports idle.
+    stalled: bool,
+    next_id: RequestId,
+    order: Vec<RequestId>,
+    aborted: Vec<RequestId>,
+    recoveries: Vec<f64>,
+    events: Vec<EngineEvent>,
+}
+
+impl OnlineSession {
+    /// Register a request. Trace-driven runs pass explicit ids; the
+    /// [`ServingBackend`] submit path allocates them.
+    fn enqueue(
+        &mut self,
+        id: RequestId,
+        arrival: SimTime,
+        input_tokens: usize,
+        output_tokens: usize,
+        priority: i32,
+        deadline: Option<SimTime>,
+    ) {
+        self.pending.push(Pending { id, arrival, input_tokens, output_tokens, priority, deadline });
+        self.pending_sorted = false;
+        self.next_id = self.next_id.max(id + 1);
+        self.order.push(id);
+        self.stalled = false;
+    }
+
+    fn sort_pending(&mut self) {
+        if !self.pending_sorted {
+            self.pending
+                .sort_by(|a, b| b.arrival.partial_cmp(&a.arrival).unwrap());
+            self.pending_sorted = true;
+        }
+    }
+
+    fn next_arrival(&mut self) -> Option<SimTime> {
+        self.sort_pending();
+        self.pending.last().map(|p| p.arrival)
+    }
+
+    /// True when nothing can make further progress: no running batch, no
+    /// arrivals left, and the waiting line is empty or marked stuck (the
+    /// tick loop sets `stalled` when waiting requests can never fit an
+    /// otherwise empty system).
+    fn session_idle(&self) -> bool {
+        self.running.is_empty()
+            && self.pending.is_empty()
+            && (self.waiting.is_empty() || self.stalled)
+    }
+
+    /// One simulated tick: admit due arrivals, admit waiting requests
+    /// under the KV budget, then run one costed decode step (or
+    /// fast-forward to the next arrival when the batch is empty).
+    fn tick(&mut self) -> Vec<EngineEvent> {
+        let mut events = std::mem::take(&mut self.events);
+
+        // Admit arrivals into the waiting line.
+        self.sort_pending();
+        while self.pending.last().map(|p| p.arrival <= self.clock).unwrap_or(false) {
+            let p = self.pending.pop().unwrap();
+            self.metrics.on_arrival(p.id, p.arrival);
+            // P-D disaggregation: the prefill instance already processed
+            // the input tokens; count them on admission.
+            self.metrics.on_prefill_tokens(p.input_tokens);
+            self.waiting.push(Waiting {
+                id: p.id,
+                context: p.input_tokens,
+                output: p.output_tokens,
+                priority: p.priority,
+                deadline: p.deadline,
+            });
+        }
+
+        // Admit from waiting while KV fits (project to full output
+        // length), highest priority / earliest deadline first — matching
+        // the engine's scheduling order (stable: arrival order for ties).
+        self.waiting.sort_by(|a, b| {
+            b.priority.cmp(&a.priority).then_with(|| {
+                let da = a.deadline.unwrap_or(f64::INFINITY);
+                let db = b.deadline.unwrap_or(f64::INFINITY);
+                da.partial_cmp(&db).unwrap()
+            })
+        });
+        self.admit_waiting();
+
+        if self.running.is_empty() {
+            if let Some(at) = self.next_arrival() {
+                self.clock = self.clock.max(at);
+                // Livelock guard from the batch loop: a full waiting line
+                // that cannot fit an empty system will never drain.
+                if self.waiting.len() >= self.max_batch {
+                    self.stalled = true;
+                }
+            } else if !self.waiting.is_empty() {
+                // Cold system, nothing arriving: these can never fit.
+                self.stalled = true;
+            }
+            return events;
+        }
+
+        // One decode step.
+        let work: Vec<DecodeWork> = self
+            .running
+            .iter()
+            .map(|r| DecodeWork { context: r.context, home: r.home })
+            .collect();
+        let dt = self.cost.decode_step_time(&work);
+        self.clock += dt;
+        self.steps += 1;
+        self.daemon.advance(dt, &mut self.backup);
+
+        let mut finished: Vec<usize> = Vec::new();
+        for i in 0..self.running.len() {
+            let (id, context) = (self.running[i].id, self.running[i].context);
+            self.metrics.on_token(id, self.clock);
+            self.daemon.produced(id, context, context + 1);
+            let r = &mut self.running[i];
+            r.context += 1;
+            r.remaining_out -= 1;
+            events.push(EngineEvent::TokenEmitted { id, token: 0, index: r.emitted });
+            r.emitted += 1;
+            let home = r.home;
+            for (ru, used) in self.kv_used.iter_mut().enumerate() {
+                *used += self.tp_rate[ru];
+            }
+            self.kv_used[home] += self.dp_rate;
+            if self.running[i].remaining_out == 0 {
+                finished.push(i);
+            }
+        }
+        for &i in finished.iter().rev() {
+            let r = self.running.swap_remove(i);
+            self.metrics.on_finish(r.id);
+            events.push(EngineEvent::RequestFinished { id: r.id });
+            self.daemon.forget(r.id);
+            self.backup.release(r.id, self.model.kv_bytes_per_token());
+            for (ru, used) in self.kv_used.iter_mut().enumerate() {
+                *used = (*used - self.tp_rate[ru] * r.context as f64).max(0.0);
+            }
+            self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * r.context as f64).max(0.0);
+            self.router.complete(r.home, 0.0);
+        }
+        events
+    }
+
+    fn admit_waiting(&mut self) {
+        let Self {
+            waiting,
+            running,
+            router,
+            backup,
+            kv_used,
+            kv_budget,
+            tp_rate,
+            dp_rate,
+            model,
+            max_batch,
+            world,
+            ..
+        } = self;
+        waiting.retain(|w| {
+            let (id, ctx, out) = (w.id, w.context, w.output);
+            let total = (ctx + out) as f64;
+            let fits = (0..*world).all(|r| {
+                let add = tp_rate[r] * total
+                    + if r == router.tracker().least_loaded() { *dp_rate * total } else { 0.0 };
+                kv_used[r] + add <= kv_budget[r] as f64 * 0.97
+            }) && running.len() < *max_batch;
+            if fits {
+                let home = router.route(ctx as f64);
+                for (r, used) in kv_used.iter_mut().enumerate() {
+                    *used += tp_rate[r] * ctx as f64;
+                }
+                kv_used[home] += *dp_rate * ctx as f64;
+                // P-D disaggregation: the prefill instance ships this
+                // request's KV through host DRAM, so the input context
+                // is host-mirrored the moment the decode instance
+                // admits it; the daemon only trails the decode tokens.
+                backup.backup(id, ctx, model.kv_bytes_per_token());
+                running.push(Running { id, home, context: ctx, remaining_out: out, emitted: 0 });
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Inject a hard failure of `rank` at this step boundary: plan the
+    /// recovery, pay the modeled stall on the clock, reconfigure to
+    /// `world - 1`, and re-home the failed rank's requests.
+    fn fail_rank(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64> {
+        anyhow::ensure!(self.world > 1, "cannot lose the last rank");
+        anyhow::ensure!(rank < self.world, "rank {rank} out of range (world {})", self.world);
+        self.events.push(EngineEvent::FailureInjected { rank, method });
+
+        let reqs: Vec<(RequestId, usize, RankId)> =
+            self.running.iter().map(|r| (r.id, r.context, r.home)).collect();
+        let survivor_map: Vec<Option<RankId>> = (0..self.world)
+            .map(|r| if r == rank { None } else { Some(if r < rank { r } else { r - 1 }) })
+            .collect();
+        let new_plan = self.config.plan(&self.model, self.world - 1);
+        let input = RecoveryInput {
+            spec: &self.spec,
+            ic: &self.ic,
+            old_plan: &self.plan,
+            new_plan: &new_plan,
+            survivor_map: &survivor_map,
+            failed_rank: rank,
+            requests: &reqs,
+            backup: &self.backup,
+        };
+        let outcome = plan_recovery(method, &input);
+        self.clock += outcome.total_s; // the stall every in-flight request sees
+
+        // Reconfigure to the reduced world.
+        self.world -= 1;
+        self.plan = new_plan;
+        self.cost = StepCostModel::new(&self.plan, &self.spec, &self.ic);
+        let rates = self.cost.kv_rates();
+        self.tp_rate = rates.0;
+        self.dp_rate = rates.1;
+        self.kv_budget = self.cost.kv_budget();
+        self.router = self.router.remap(&survivor_map, self.world);
+        // Re-home requests of the failed rank; recompute KV usage.
+        self.kv_used = vec![0.0; self.world];
+        for r in self.running.iter_mut() {
+            r.home = survivor_map[r.home].unwrap_or_else(|| self.router.tracker().least_loaded());
+            for (ru, used) in self.kv_used.iter_mut().enumerate() {
+                *used += self.tp_rate[ru] * r.context as f64;
+            }
+            self.kv_used[r.home] += self.dp_rate * r.context as f64;
+        }
+
+        self.recoveries.push(outcome.total_s);
+        self.events
+            .push(EngineEvent::RecoveryCompleted { method, latency_s: outcome.total_s });
+        self.events
+            .push(EngineEvent::Reconfigured { epoch: self.recoveries.len() as u64, world: self.world });
+        Ok(outcome.total_s)
+    }
+}
+
+impl ServingBackend for OnlineSession {
+    /// Submit a synthetic request: only `prompt.len()` matters to the
+    /// cost model (token ids are not simulated).
+    fn submit_with(&mut self, prompt: &[u32], opts: SubmitOptions) -> Result<RequestId> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            opts.max_new_tokens > 0,
+            "max_new_tokens must be at least 1 (a zero budget is a caller bug, not a no-op)"
+        );
+        anyhow::ensure!(
+            opts.arrival.is_finite() && opts.arrival >= 0.0,
+            "arrival must be a finite, non-negative time (got {})",
+            opts.arrival
+        );
+        anyhow::ensure!(opts.deadline.unwrap_or(0.0).is_finite(), "deadline must be finite");
+        let id = self.next_id;
+        self.enqueue(id, opts.arrival, prompt.len(), opts.max_new_tokens, opts.priority, opts.deadline);
+        Ok(id)
+    }
+
+    fn step(&mut self) -> Result<Vec<EngineEvent>> {
+        Ok(self.tick())
+    }
+
+    fn abort(&mut self, id: RequestId) -> Result<()> {
+        if let Some(i) = self.pending.iter().position(|p| p.id == id) {
+            self.pending.remove(i);
+        } else if let Some(i) = self.waiting.iter().position(|w| w.id == id) {
+            self.waiting.remove(i);
+        } else if let Some(i) = self.running.iter().position(|r| r.id == id) {
+            let r = self.running.swap_remove(i);
+            self.daemon.forget(r.id);
+            self.backup.release(r.id, self.model.kv_bytes_per_token());
+            for (ru, used) in self.kv_used.iter_mut().enumerate() {
+                *used = (*used - self.tp_rate[ru] * r.context as f64).max(0.0);
+            }
+            self.kv_used[r.home] =
+                (self.kv_used[r.home] - self.dp_rate * r.context as f64).max(0.0);
+            self.router.complete(r.home, 0.0);
+        } else {
+            anyhow::bail!("abort: unknown or already finished request {id}");
+        }
+        self.aborted.push(id);
+        self.events.push(EngineEvent::RequestAborted { id });
+        Ok(())
+    }
+
+    fn inject_failure(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64> {
+        self.fail_rank(rank, method)
+    }
+
+    fn now(&self) -> SimTime {
+        self.clock
+    }
+
+    fn is_idle(&self) -> bool {
+        // Buffered events (aborts, failure notices) must still be
+        // delivered by one more step() before the session counts as idle.
+        self.events.is_empty() && self.session_idle()
+    }
+
+    /// Report with placeholder output tokens (id `0`): lengths, timing,
+    /// and counters are the meaningful fields on this backend.
+    fn report(&self) -> ServeReport {
+        let mut results = Vec::with_capacity(self.order.len());
+        for &id in &self.order {
+            let m = self.metrics.request(id);
+            let emitted = m.map(|m| m.tokens_out).unwrap_or(0);
+            results.push(GenerationResult {
+                id,
+                output_tokens: vec![0; emitted],
+                ttft_s: m.and_then(|m| m.ttft()),
+                max_tbt_s: m.map(|m| m.max_tbt).unwrap_or(0.0),
+                aborted: self.aborted.contains(&id),
+            });
+        }
+        ServeReport {
+            results,
+            wall_s: self.metrics.elapsed(),
+            prefill_tokens: self.metrics.input_tokens as usize,
+            decode_tokens: self.metrics.output_tokens as usize,
+            steps: self.steps,
+            recoveries: self.recoveries.clone(),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{drive, FaultPlan, FaultTrigger};
     use crate::model::llama3_70b;
     use crate::traces::{mooncake_trace, poisson_arrivals};
 
@@ -456,5 +753,66 @@ mod tests {
         assert_eq!(w1, 7);
         assert_eq!(w2, 7);
         assert!(rec > 10.0 * full, "recompute {rec} vs full {full}");
+    }
+
+    /// The trait surface: submit with timed arrivals, drive with a
+    /// mid-stream fault, and read the report — no trace plumbing.
+    #[test]
+    fn session_backend_runs_timed_arrivals_with_fault() {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b());
+        let mut session = sim.session();
+        let prompt = vec![0u32; 2048];
+        let mut ids = Vec::new();
+        for i in 0..20 {
+            let opts = SubmitOptions::new(8).at(i as f64 * 0.05);
+            ids.push(session.submit_with(&prompt, opts).unwrap());
+        }
+        let fault = FaultPlan {
+            trigger: FaultTrigger::AfterTokens(40),
+            rank: 2,
+            method: RecoveryMethod::Full,
+        };
+        let (report, recovery) = drive(&mut session, Some(fault)).unwrap();
+        assert_eq!(report.results.len(), 20);
+        assert!(recovery.unwrap() > 0.0);
+        assert_eq!(session.world, 7);
+        for (i, r) in report.results.iter().enumerate() {
+            assert_eq!(r.output_tokens.len(), 8, "request {i} short");
+            assert!(r.ttft_s.is_some());
+        }
+        assert_eq!(report.recoveries.len(), 1);
+    }
+
+    /// Aborting a running simulated request frees its budget and the
+    /// report marks it.
+    #[test]
+    fn session_abort_releases_and_reports() {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b());
+        let mut session = sim.session();
+        let prompt = vec![0u32; 1024];
+        let keep = session.submit_with(&prompt, SubmitOptions::new(16)).unwrap();
+        let kill = session.submit_with(&prompt, SubmitOptions::new(16)).unwrap();
+        // Step until both are running and have emitted a token.
+        for _ in 0..3 {
+            session.step().unwrap();
+        }
+        session.abort(kill).unwrap();
+        let report = session.run_to_completion().unwrap();
+        let kept = report.result(keep).unwrap();
+        let killed = report.result(kill).unwrap();
+        assert_eq!(kept.output_tokens.len(), 16);
+        assert!(killed.aborted);
+        assert!(killed.output_tokens.len() < 16);
+    }
+
+    /// Zero generation budget is a caller bug on this backend too.
+    #[test]
+    fn session_rejects_zero_budget() {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4)
+            .with_model(llama3_70b());
+        let mut session = sim.session();
+        assert!(session.submit_with(&[0; 8], SubmitOptions::new(0)).is_err());
     }
 }

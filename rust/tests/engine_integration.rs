@@ -1,15 +1,35 @@
 //! End-to-end engine integration: the rust coordinator executing real AOT
 //! artifacts must reproduce the unsharded model under every TP width,
-//! hybrid attention, chunked prefill, batching, and failure recovery.
+//! hybrid attention, chunked prefill, batching, and failure recovery —
+//! now driven through the event-driven session API (`step()` /
+//! `EngineEvent` / `SubmitOptions` / `abort()` / `ServingBackend`).
 //!
-//! Requires `make artifacts` (the `test` make target guarantees it).
+//! Requires `make artifacts` (the `test` make target guarantees it);
+//! each test self-skips when the artifacts are missing so `cargo test`
+//! stays usable in artifact-less environments (e.g. bare CI runners).
 
 use failsafe::config::EngineConfig;
-use failsafe::engine::Engine;
+use failsafe::coordinator::RequestState;
+use failsafe::engine::{
+    drive, Engine, EngineEvent, FaultPlan, FaultTrigger, ServingBackend, SubmitOptions,
+};
 use failsafe::model::small_real;
 use failsafe::recovery::RecoveryMethod;
 use failsafe::simulator::SystemConfig;
 use failsafe::util::Rng;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.txt")).exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: AOT artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
 
 fn config(world: usize, system: SystemConfig) -> EngineConfig {
     EngineConfig {
@@ -41,13 +61,14 @@ fn serve(world: usize, system: SystemConfig, prompts: &[Vec<u32>], max_new: usiz
     for r in &report.results {
         assert_eq!(r.output_tokens.len(), max_new, "request {} short output", r.id);
     }
-    report.outputs()
+    report.outputs_owned()
 }
 
 /// TP1 (unsharded) is the ground truth — the L2 pytest suite verified it
 /// against the pure-jnp reference. Every other configuration must match.
 #[test]
 fn tp_widths_agree_with_tp1() {
+    require_artifacts!();
     let ps = prompts(3, 5, 40, 7);
     let base = serve(1, SystemConfig::standard(), &ps, 8);
     for world in 2..=4 {
@@ -60,6 +81,7 @@ fn tp_widths_agree_with_tp1() {
 /// imbalance affects speed, never correctness.
 #[test]
 fn nonuniform_naive_is_exact() {
+    require_artifacts!();
     let ps = prompts(2, 10, 30, 21);
     let base = serve(1, SystemConfig::standard(), &ps, 6);
     let got = serve(3, SystemConfig::nonuniform(), &ps, 6);
@@ -69,6 +91,7 @@ fn nonuniform_naive_is_exact() {
 /// Chunked prefill with a tiny token budget (many chunks) is exact.
 #[test]
 fn chunked_prefill_exact_under_tiny_budget() {
+    require_artifacts!();
     let ps = prompts(2, 50, 120, 33);
     let base = serve(1, SystemConfig::standard(), &ps, 4);
     let mut cfg = config(3, SystemConfig::failsafe());
@@ -77,13 +100,14 @@ fn chunked_prefill_exact_under_tiny_budget() {
     for p in &ps {
         engine.submit(p, 4).unwrap();
     }
-    let got = engine.run_to_completion().unwrap().outputs();
+    let got = engine.run_to_completion().unwrap().outputs_owned();
     assert_eq!(got, base);
 }
 
 /// Decode batching across requests with different context lengths is exact.
 #[test]
 fn batched_decode_exact() {
+    require_artifacts!();
     let ps = prompts(6, 3, 60, 55);
     let base: Vec<Vec<u32>> = ps
         .iter()
@@ -93,32 +117,154 @@ fn batched_decode_exact() {
     assert_eq!(got, base);
 }
 
+/// The step()/event contract: a fresh engine is idle and event-free; one
+/// submitted request streams exactly `max_new` `TokenEmitted` events
+/// (indices 0..max_new) and one `RequestFinished`, visible incrementally
+/// through the streaming accessor.
+#[test]
+fn step_streams_tokens_and_finish_events() {
+    require_artifacts!();
+    let mut engine = Engine::new(config(2, SystemConfig::failsafe())).unwrap();
+    assert!(engine.is_idle());
+    assert!(engine.step().unwrap().is_empty(), "idle step emits nothing");
+
+    let p = prompts(1, 12, 12, 5).remove(0);
+    let max_new = 7;
+    let id = engine.submit(&p, max_new).unwrap();
+    assert!(!engine.is_idle());
+    assert_eq!(engine.request_state(id), Some(RequestState::Queued));
+
+    let mut emitted = Vec::new();
+    let mut finishes = 0;
+    while !engine.is_idle() {
+        for ev in engine.step().unwrap() {
+            match ev {
+                EngineEvent::TokenEmitted { id: eid, token, index } => {
+                    assert_eq!(eid, id);
+                    assert_eq!(index, emitted.len(), "indices in emission order");
+                    emitted.push(token);
+                    // Streaming accessor agrees with the event stream.
+                    assert_eq!(engine.output_so_far(id).unwrap(), &emitted[..]);
+                }
+                EngineEvent::RequestFinished { id: eid } => {
+                    assert_eq!(eid, id);
+                    finishes += 1;
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+    }
+    assert_eq!(emitted.len(), max_new);
+    assert_eq!(finishes, 1);
+    assert_eq!(engine.request_state(id), Some(RequestState::Finished));
+
+    // The convenience wrapper reports the same tokens.
+    let report = engine.report();
+    assert_eq!(report.result(id).unwrap().output_tokens, emitted);
+    assert!(report.result(id).unwrap().ttft_s.is_some());
+}
+
 /// The centerpiece: a mid-decode GPU failure with FailSafe-Full recovery
 /// continues **bit-exact** — same tokens as a run with no failure at all.
 #[test]
 fn failure_with_full_recovery_is_exact() {
+    require_artifacts!();
     let ps = prompts(4, 8, 50, 77);
     let expected = serve(1, SystemConfig::standard(), &ps, 10);
 
     // Inject the failure before serving starts — weights resharded
     // TP3→TP2 with no KV yet; outputs must match exactly. (The
-    // mid-generation case is covered by the next test.)
+    // mid-generation case is covered by the next tests.)
     let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
     for p in &ps {
         engine.submit(p, 10).unwrap();
     }
-    // Fail rank 1 before serving starts — weights resharded TP3→TP2, no KV
-    // yet, outputs must match exactly.
     let latency = engine.inject_failure(1, RecoveryMethod::Full).unwrap();
     assert!(latency > 0.0);
     assert_eq!(engine.world(), 2);
-    let got = engine.run_to_completion().unwrap().outputs();
+    let got = engine.run_to_completion().unwrap().outputs_owned();
     assert_eq!(got, expected, "post-failure generation diverged");
 }
 
-/// Failure *mid-generation* with backup restore: continuation is exact.
+/// The tentpole capability: a failure injected **between decode steps**,
+/// with every request mid-generation and KV in flight, continues
+/// bit-exact under backup-based recovery — no resubmission, no drain.
+#[test]
+fn failure_between_decode_steps_is_bit_exact() {
+    require_artifacts!();
+    let ps = prompts(3, 6, 40, 99);
+    let max_new = 12;
+    let expected = serve(1, SystemConfig::standard(), &ps, max_new);
+
+    let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    let ids: Vec<_> = ps.iter().map(|p| engine.submit(p, max_new).unwrap()).collect();
+
+    // Step until every request is mid-decode (≥ 4 tokens, < budget).
+    while ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 4) {
+        engine.step().unwrap();
+    }
+    for id in &ids {
+        assert_eq!(engine.request_state(*id), Some(RequestState::Decoding));
+    }
+
+    let latency = engine.inject_failure(0, RecoveryMethod::Full).unwrap();
+    assert!(latency > 0.0 && latency < 10.0, "lightning recovery should be fast: {latency}");
+    assert_eq!(engine.world(), 2);
+
+    // The next step surfaces the failure/recovery events, then serving
+    // continues on 2 ranks without interruption.
+    let events = engine.step().unwrap();
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, EngineEvent::FailureInjected { rank: 0, .. })));
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, EngineEvent::RecoveryCompleted { .. })));
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, EngineEvent::Reconfigured { epoch: 1, world: 2 })));
+
+    let report = engine.run_to_completion().unwrap();
+    assert_eq!(report.outputs_owned(), expected, "mid-decode failure diverged");
+}
+
+/// Same capability under Recompute (no backup use): the lost context is
+/// re-prefilled from known tokens and the continuation stays exact.
+#[test]
+fn mid_decode_recompute_recovery_is_exact() {
+    require_artifacts!();
+    let ps = prompts(2, 6, 30, 13);
+    let max_new = 8;
+    let expected = serve(1, SystemConfig::standard(), &ps, max_new);
+
+    let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    let ids: Vec<_> = ps.iter().map(|p| engine.submit(p, max_new).unwrap()).collect();
+    while ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 3) {
+        engine.step().unwrap();
+    }
+    let lat_recompute = engine.inject_failure(2, RecoveryMethod::Recompute).unwrap();
+    let got = engine.run_to_completion().unwrap().outputs_owned();
+    assert_eq!(got, expected);
+
+    // And the modeled latency must dwarf Full recovery's on similar state.
+    let mut engine2 = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    let ids2: Vec<_> = ps.iter().map(|p| engine2.submit(p, max_new).unwrap()).collect();
+    while ids2.iter().any(|id| engine2.output_so_far(*id).unwrap().len() < 3) {
+        engine2.step().unwrap();
+    }
+    let lat_full = engine2.inject_failure(2, RecoveryMethod::Full).unwrap();
+    assert!(
+        lat_recompute > lat_full,
+        "recompute {lat_recompute} should cost more than full {lat_full}"
+    );
+}
+
+/// Failure *mid-generation* with backup restore across separate runs:
+/// continuation via resubmission is exact (legacy flow, kept as a
+/// regression check alongside the in-flight tests above).
 #[test]
 fn mid_generation_failure_recovers_from_backup() {
+    require_artifacts!();
     let ps = prompts(3, 6, 40, 99);
     let expected = serve(1, SystemConfig::standard(), &ps, 12);
 
@@ -146,46 +292,97 @@ fn mid_generation_failure_recovers_from_backup() {
 
     for (i, _) in ps.iter().enumerate() {
         let mut got = first.results[i].output_tokens.clone();
-        let cont = second
-            .results
-            .iter()
-            .find(|r| r.id == cont_ids[i])
-            .unwrap();
+        let cont = second.result(cont_ids[i]).unwrap();
         got.extend(&cont.output_tokens);
         assert_eq!(got, expected[i], "request {i} diverged after mid-run failure");
     }
 }
 
-/// Recompute recovery (no backup use) also continues exactly — it re-runs
-/// prefill over the known tokens.
+/// An online trace — timed arrivals and one mid-stream failure — runs
+/// through the *real* engine via the shared `ServingBackend` trait (the
+/// same `drive` loop the fig09-style bench uses on the simulator), and
+/// every output is bit-identical to a failure-free offline run.
 #[test]
-fn recompute_recovery_is_exact_but_costed_higher() {
-    let ps = prompts(2, 6, 30, 13);
-    let expected = serve(1, SystemConfig::standard(), &ps, 8);
+fn online_trace_with_arrivals_and_midstream_failure_via_backend() {
+    require_artifacts!();
+    let ps = prompts(5, 6, 40, 41);
+    let max_new = 8;
+    let expected = serve(1, SystemConfig::standard(), &ps, max_new);
 
     let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
-    for p in &ps {
-        engine.submit(p, 8).unwrap();
+    let backend: &mut dyn ServingBackend = &mut engine;
+    for (i, p) in ps.iter().enumerate() {
+        // Staggered arrivals: the tail requests are still queued when the
+        // failure hits, so admission + routing must work on the new plan.
+        let opts = SubmitOptions::new(max_new).at(i as f64 * 0.005).priority(0);
+        backend.submit_with(p, opts).unwrap();
     }
-    let lat_recompute = engine.inject_failure(2, RecoveryMethod::Recompute).unwrap();
-    let got = engine.run_to_completion().unwrap().outputs();
-    assert_eq!(got, expected);
+    let fault = FaultPlan {
+        trigger: FaultTrigger::AfterTokens(6),
+        rank: 1,
+        method: RecoveryMethod::Full,
+    };
+    let (report, recovery) = drive(backend, Some(fault)).unwrap();
+    assert!(recovery.expect("fault fired") > 0.0);
+    assert_eq!(report.recoveries.len(), 1);
+    assert_eq!(engine.world(), 2);
+    assert_eq!(engine.epoch(), 1);
 
-    // And the modeled latency must dwarf Full recovery's on the same state.
-    let mut engine2 = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
-    for p in &ps {
-        engine2.submit(p, 8).unwrap();
+    let report2 = engine.report();
+    assert_eq!(report2.outputs_owned(), expected, "online trace diverged after failure");
+    for r in &report2.results {
+        assert!(r.ttft_s.is_some(), "request {} has a first token", r.id);
     }
-    let lat_full = engine2.inject_failure(2, RecoveryMethod::Full).unwrap();
-    assert!(
-        lat_recompute > lat_full,
-        "recompute {lat_recompute} should cost more than full {lat_full}"
-    );
+}
+
+/// Aborting a request mid-generation frees it, marks the report, and
+/// leaves the surviving requests bit-exact.
+#[test]
+fn abort_mid_generation_is_clean() {
+    require_artifacts!();
+    let ps = prompts(2, 6, 30, 61);
+    let max_new = 10;
+    let solo = serve(1, SystemConfig::standard(), std::slice::from_ref(&ps[0]), max_new);
+
+    let mut engine = Engine::new(config(2, SystemConfig::failsafe())).unwrap();
+    let keep = engine.submit(&ps[0], max_new).unwrap();
+    let kill = engine.submit(&ps[1], max_new).unwrap();
+    while engine.output_so_far(kill).unwrap().len() < 3 {
+        engine.step().unwrap();
+    }
+    engine.abort(kill).unwrap();
+    assert_eq!(engine.request_state(kill), Some(RequestState::Aborted));
+    assert!(engine.abort(kill).is_err(), "double abort rejected");
+
+    let events = engine.step().unwrap();
+    assert!(events.iter().any(|e| matches!(e, EngineEvent::RequestAborted { id } if *id == kill)));
+
+    let report = engine.run_to_completion().unwrap();
+    let killed = report.result(kill).unwrap();
+    assert!(killed.aborted);
+    assert!(killed.output_tokens.len() < max_new);
+    assert_eq!(report.result(keep).unwrap().output_tokens, solo[0], "survivor diverged");
+}
+
+/// A request aborted before producing anything reports `ttft_s: None` —
+/// "never started" is no longer conflated with "instant first token".
+#[test]
+fn ttft_is_none_for_never_started_requests() {
+    require_artifacts!();
+    let mut engine = Engine::new(config(2, SystemConfig::failsafe())).unwrap();
+    let id = engine.submit(&[1, 2, 3, 4], 4).unwrap();
+    engine.abort(id).unwrap();
+    let report = engine.run_to_completion().unwrap();
+    let r = report.result(id).unwrap();
+    assert!(r.aborted);
+    assert_eq!(r.ttft_s, None);
+    assert!(r.output_tokens.is_empty());
 }
 
 /// KV placement spreads cache bytes across ranks under the failsafe plan.
 #[test]
 fn kv_bytes_spread_across_ranks() {
+    require_artifacts!();
     let ps = prompts(4, 30, 60, 3);
     let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
     for p in &ps {
@@ -201,55 +398,46 @@ fn kv_bytes_spread_across_ranks() {
 }
 
 /// Paper §4.3.1 robustness on real execution: two *sequential* failures
-/// (TP4 → TP3 → TP2), each with lightning recovery, still bit-exact.
+/// (TP4 → TP3 → TP2), each mid-decode with lightning recovery, still
+/// bit-exact — no resubmission between them.
 #[test]
 fn sequential_failures_remain_exact() {
+    require_artifacts!();
     let ps = prompts(3, 6, 30, 101);
-    let expected = serve(1, SystemConfig::standard(), &ps, 9);
+    let max_new = 9;
+    let expected = serve(1, SystemConfig::standard(), &ps, max_new);
 
     let mut engine = Engine::new(config(4, SystemConfig::failsafe())).unwrap();
-    for p in &ps {
-        engine.submit(p, 3).unwrap();
-    }
-    let r1 = engine.run_to_completion().unwrap();
+    let ids: Vec<_> = ps.iter().map(|p| engine.submit(p, max_new).unwrap()).collect();
 
+    while ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 3) {
+        engine.step().unwrap();
+    }
     engine.inject_failure(2, RecoveryMethod::Full).unwrap();
     assert_eq!(engine.world(), 3);
-    let mut ids2 = Vec::new();
-    for (i, p) in ps.iter().enumerate() {
-        let mut full = p.clone();
-        full.extend(&r1.results[i].output_tokens);
-        ids2.push(engine.submit(&full, 3).unwrap());
-    }
-    let r2 = engine.run_to_completion().unwrap();
 
+    while ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 6) {
+        engine.step().unwrap();
+    }
     engine.inject_failure(0, RecoveryMethod::Full).unwrap();
     assert_eq!(engine.world(), 2);
     assert_eq!(engine.epoch(), 2);
-    let mut ids3 = Vec::new();
-    for (i, p) in ps.iter().enumerate() {
-        let mut full = p.clone();
-        full.extend(&r1.results[i].output_tokens);
-        let c2 = r2.results.iter().find(|r| r.id == ids2[i]).unwrap();
-        full.extend(&c2.output_tokens);
-        ids3.push(engine.submit(&full, 3).unwrap());
-    }
-    let r3 = engine.run_to_completion().unwrap();
 
-    for i in 0..ps.len() {
-        let mut got = r1.results[i].output_tokens.clone();
-        got.extend(&r2.results.iter().find(|r| r.id == ids2[i]).unwrap().output_tokens);
-        got.extend(&r3.results.iter().find(|r| r.id == ids3[i]).unwrap().output_tokens);
-        assert_eq!(got, expected[i], "request {i} diverged across two failures");
-    }
+    let report = engine.run_to_completion().unwrap();
+    assert_eq!(report.outputs_owned(), expected, "diverged across two failures");
+    assert_eq!(report.recoveries.len(), 2);
 }
 
-/// Engine guards: oversized prompts and out-of-vocab tokens are rejected.
+/// Engine guards: oversized prompts, out-of-vocab tokens, and zero
+/// generation budgets are rejected (no silent clamping).
 #[test]
 fn submit_validation() {
+    require_artifacts!();
     let mut engine = Engine::new(config(2, SystemConfig::failsafe())).unwrap();
     assert!(engine.submit(&[], 4).is_err(), "empty prompt");
     assert!(engine.submit(&[1; 300], 4).is_err(), "beyond compiled context");
     assert!(engine.submit(&[9999], 4).is_err(), "out of vocab");
+    assert!(engine.submit(&[1, 2, 3], 0).is_err(), "zero max_new_tokens must error, not clamp");
+    assert!(engine.submit_with(&[1, 2, 3], SubmitOptions::new(0).at(1.0)).is_err());
     assert!(engine.submit(&[1, 2, 3], 4).is_ok());
 }
