@@ -16,6 +16,10 @@
 //!   recover  FailSafe-Full: commutative FFN blocks stay put, lost KV
 //!            restores from the host mirror; modeled H100 latency printed
 //!   phase 2  TP2 finishes wave 1 in flight + admits and serves wave 2
+//!   rejoin   mid-wave-2 the failed GPU returns: `inject_rejoin` streams
+//!            its shard back over NVLink, re-spreads the cyclic KV
+//!            placement onto it, and the router rebalances — serving
+//!            continues on TP3 without a pause
 //!   verify   all outputs == unsharded failure-free reference run
 
 use failsafe::config::EngineConfig;
@@ -100,6 +104,28 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\nphase 2: TP{} finishes wave 1 in flight + serves wave 2...", engine.world());
+    // Step until wave 2 is mid-decode on the reduced world...
+    while wave2_ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 3) {
+        engine.step()?;
+    }
+
+    // ...then the failed GPU returns. The inverse of the fault above:
+    // weights stream in on demand from peers, the cyclic KV placement
+    // re-spreads onto the new rank, and the router sends it new work.
+    println!("\nrejoin: the failed GPU returns mid-wave-2...");
+    let rejoin_latency = engine.inject_rejoin(RecoveryMethod::Full)?;
+    println!(
+        "  expand-reconfiguration complete: world={}, modeled H100 latency {:.0} ms",
+        engine.world(),
+        rejoin_latency * 1e3
+    );
+    for ev in engine.step()? {
+        if let EngineEvent::GpuRejoined { rank, .. } = ev {
+            println!("  event: gpu rejoined as rank {rank}");
+        }
+    }
+
+    println!("\nphase 3: TP{} finishes wave 2...", engine.world());
     let report = engine.run_to_completion()?;
     println!(
         "  session done: {:.1} decode tok/s, KV by rank: {:?}",

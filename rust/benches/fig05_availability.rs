@@ -1,7 +1,16 @@
-//! Paper Fig 5: the GCP-derived availability trace (scaled to 64 GPUs).
+//! Paper Fig 5: the GCP-derived availability trace (scaled to 64 GPUs) —
+//! and, new with the replay subsystem, an end-to-end *replay* of a
+//! TP8-scaled slice of that trace through a decode-instance serving
+//! session: GPUs fail and rejoin while a Mooncake-style request stream is
+//! in flight, every transition going through `ServingBackend::step()`.
 
 use failsafe::benchkit::section;
-use failsafe::traces::gcp_availability;
+use failsafe::cluster::FaultTimeline;
+use failsafe::engine::{replay, ReplayPace, ServingBackend, SubmitOptions};
+use failsafe::model::llama3_70b;
+use failsafe::recovery::RecoveryMethod;
+use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
+use failsafe::traces::{gcp_availability, mooncake_trace, poisson_arrivals};
 
 fn main() {
     section("Fig 5 — GPU availability trace (GCP-derived, 64 GPUs)");
@@ -14,4 +23,52 @@ fn main() {
     let avg = tr.iter().map(|&(_, a)| a as f64).sum::<f64>() / tr.len() as f64;
     println!("\nevents={} min_avail={min} mean_avail={avg:.1} (full=64, floor>=48)", tr.len());
     assert!(min >= 48 && min < 64);
+
+    section("Fig 5 addendum — availability-timeline replay on one TP8 group");
+    // Scale the availability process to one 8-GPU group over a one-hour
+    // window and expand it into per-GPU fail/rejoin events.
+    let window_s = 3600.0;
+    let avail8 = gcp_availability(8, window_s, 7);
+    let timeline = FaultTimeline::from_availability(&avail8, 8, 7);
+    timeline.validate(8).expect("derived timeline must be replayable");
+    println!(
+        "timeline: {} events, max {} GPU(s) down concurrently",
+        timeline.len(),
+        timeline.max_concurrent_down()
+    );
+
+    let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+        .with_model(llama3_70b());
+    let mut session = sim.session();
+    let mut trace = mooncake_trace(200, 7);
+    for r in trace.iter_mut() {
+        r.input_tokens = r.input_tokens.clamp(1, 8192);
+        r.output_tokens = r.output_tokens.clamp(8, 64);
+    }
+    // Spread arrivals across most of the availability window so requests
+    // are in flight when transitions fire.
+    poisson_arrivals(&mut trace, 200.0 / (0.8 * window_s), 7);
+    for r in &trace {
+        let opts = SubmitOptions::new(r.output_tokens).at(r.arrival);
+        session.submit_with(&vec![0u32; r.input_tokens], opts).expect("submit");
+    }
+
+    let out = replay(&mut session, &timeline, RecoveryMethod::Full, ReplayPace::Clock)
+        .expect("replay");
+    println!("\ntime_s,event,gpu,rank,latency_ms");
+    for a in &out.applied {
+        let kind = a.event.kind.name();
+        println!("{:.1},{},{},{},{:.1}", a.applied_at, kind, a.event.gpu, a.rank, a.latency_s * 1e3);
+    }
+    println!(
+        "\nreplay: {} reconfigs, final world {}, {} decode tok in {:.0} s sim ({:.0} tok/s)",
+        out.applied.len(),
+        out.final_world,
+        out.report.decode_tokens,
+        out.report.wall_s,
+        out.report.decode_tps()
+    );
+    assert!(out.skipped.is_empty(), "validated timeline must apply fully");
+    assert_eq!(out.final_world, 8, "gcp trace ends at full availability");
+    assert!(!out.applied.is_empty(), "the window must contain transitions");
 }

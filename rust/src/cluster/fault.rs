@@ -1,10 +1,13 @@
 //! Fault injection: turning an availability trace into failure/recovery
-//! events against [`super::Node`]s.
+//! events against [`super::Node`]s, and the [`FaultTimeline`] consumed by
+//! the serving-session replay driver ([`crate::engine::replay()`]).
 //!
 //! Mirrors the paper's §4.1 failure simulation: each failure event disables
 //! one random GPU across the fleet; each recovery event restores one random
 //! failed GPU. The trace itself (GPU availability over time, Fig 5) comes
 //! from [`crate::traces::gcp_availability`].
+
+use anyhow::Result;
 
 use crate::util::Rng;
 
@@ -17,6 +20,17 @@ pub enum FaultKind {
     Fail,
     /// Device returns to service (empty).
     Recover,
+}
+
+impl FaultKind {
+    /// The trace-format spelling — the vocabulary [`FaultTimeline::parse`]
+    /// accepts and [`FaultTimeline::to_text`] writes.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Fail => "fail",
+            FaultKind::Recover => "rejoin",
+        }
+    }
 }
 
 /// One scheduled event against a specific device of a specific node.
@@ -108,6 +122,249 @@ impl FaultInjector {
     }
 }
 
+/// One availability-timeline event against a *stable physical GPU id* of
+/// one TP group. GPU ids never change across reconfigurations — mapping
+/// them onto the engine's (renumbered) rank ids at each point in time is
+/// the replay driver's job ([`crate::engine::replay()`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimelineEvent {
+    /// When the event fires, in seconds on the replayed backend's clock
+    /// (or, under token pacing, in units the driver scales to tokens).
+    pub at: SimTime,
+    /// Physical GPU id within the group, `0..world`.
+    pub gpu: usize,
+    /// [`FaultKind::Fail`] takes the GPU down; [`FaultKind::Recover`]
+    /// rejoins it.
+    pub kind: FaultKind,
+}
+
+/// A timestamped `Fail(gpu)` / `Rejoin(gpu)` availability timeline for one
+/// TP group — the paper's §5 irregular-availability workload as data.
+///
+/// Build one from a trace file ([`FaultTimeline::parse`]), from MTBF/MTTR
+/// distributions ([`FaultTimeline::synthesize`]), from an aggregate
+/// availability step function ([`FaultTimeline::from_availability`]), or
+/// from the named scenario generators ([`crate::traces::flaky_gpu`],
+/// [`crate::traces::rolling_maintenance`],
+/// [`crate::traces::cascade_then_heal`]).
+///
+/// ```
+/// use failsafe::cluster::{FaultKind, FaultTimeline};
+/// let tl = FaultTimeline::parse("0.5 fail 1\n# gpu 1 comes back\n2.0 rejoin 1\n").unwrap();
+/// assert_eq!(tl.events().len(), 2);
+/// assert_eq!(tl.events()[1].kind, FaultKind::Recover);
+/// assert_eq!(tl.max_concurrent_down(), 1);
+/// tl.validate(4).unwrap();
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultTimeline {
+    events: Vec<TimelineEvent>,
+}
+
+impl FaultTimeline {
+    /// Build from explicit events; sorts by time (stable, so same-time
+    /// events keep their given order).
+    pub fn new(mut events: Vec<TimelineEvent>) -> Self {
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        FaultTimeline { events }
+    }
+
+    /// All events in time order.
+    pub fn events(&self) -> &[TimelineEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Parse the plain-text trace format: one event per line,
+    /// `<time_s> <fail|rejoin> <gpu>`; blank lines and `#` comments are
+    /// ignored. The inverse of [`FaultTimeline::to_text`].
+    pub fn parse(text: &str) -> Result<FaultTimeline> {
+        let mut events = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (at, kind, gpu) = (parts.next(), parts.next(), parts.next());
+            let (Some(at), Some(kind), Some(gpu), None) = (at, kind, gpu, parts.next()) else {
+                anyhow::bail!("line {}: expected `<time> <fail|rejoin> <gpu>`", ln + 1);
+            };
+            let at: SimTime = at
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad time {at:?}: {e}", ln + 1))?;
+            let kind = match kind {
+                "fail" => FaultKind::Fail,
+                "rejoin" | "recover" => FaultKind::Recover,
+                other => anyhow::bail!("line {}: unknown event kind {other:?}", ln + 1),
+            };
+            let gpu: usize = gpu
+                .parse()
+                .map_err(|e| anyhow::anyhow!("line {}: bad gpu id {gpu:?}: {e}", ln + 1))?;
+            events.push(TimelineEvent { at, gpu, kind });
+        }
+        Ok(FaultTimeline::new(events))
+    }
+
+    /// Serialize to the [`FaultTimeline::parse`] text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&format!("{} {} {}\n", e.at, e.kind.name(), e.gpu));
+        }
+        out
+    }
+
+    /// Synthesize from per-GPU exponential failure/repair processes: each
+    /// GPU fails with mean time between failures `mtbf_s` and rejoins with
+    /// mean time to repair `mttr_s`. At most `max_down` GPUs (clamped to
+    /// `world - 1`) are ever down at once — a failure drawn while at the
+    /// cap is re-drawn further out, which is exactly how a scale-up domain
+    /// with `world`-way TP must behave to keep serving.
+    pub fn synthesize(
+        world: usize,
+        duration_s: SimTime,
+        mtbf_s: f64,
+        mttr_s: f64,
+        max_down: usize,
+        seed: u64,
+    ) -> FaultTimeline {
+        assert!(world >= 1 && mtbf_s > 0.0 && mttr_s > 0.0);
+        let max_down = max_down.min(world.saturating_sub(1));
+        let mut rng = Rng::seed_from_u64(seed);
+        // next[g] = (time of g's next transition, g currently up?)
+        let mut next: Vec<(SimTime, bool)> =
+            (0..world).map(|_| (rng.exp(1.0 / mtbf_s), true)).collect();
+        let mut down = 0usize;
+        let mut events = Vec::new();
+        loop {
+            let g = (0..world)
+                .min_by(|&a, &b| next[a].0.total_cmp(&next[b].0))
+                .expect("world >= 1");
+            let (t, up) = next[g];
+            if t >= duration_s {
+                break;
+            }
+            if up {
+                if down < max_down {
+                    events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Fail });
+                    down += 1;
+                    next[g] = (t + rng.exp(1.0 / mttr_s), false);
+                } else {
+                    // At the concurrency cap: this GPU survives, try later.
+                    next[g] = (t + rng.exp(1.0 / mtbf_s), true);
+                }
+            } else {
+                events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Recover });
+                down -= 1;
+                next[g] = (t + rng.exp(1.0 / mtbf_s), true);
+            }
+        }
+        FaultTimeline::new(events)
+    }
+
+    /// Derive per-GPU events from an aggregate availability step function
+    /// (`(time, healthy)` samples such as [`crate::traces::gcp_availability`]
+    /// produces, already scaled to `world`): each downward delta fails a
+    /// random healthy GPU, each upward delta rejoins a random failed one,
+    /// with a seeded RNG. Availability is clamped to `[1, world]` so the
+    /// group always keeps at least one rank.
+    pub fn from_availability(
+        samples: &[(SimTime, usize)],
+        world: usize,
+        seed: u64,
+    ) -> FaultTimeline {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut healthy: Vec<usize> = (0..world).collect();
+        let mut failed: Vec<usize> = Vec::new();
+        let mut current = world;
+        let mut events = Vec::new();
+        for &(t, avail) in samples {
+            let avail = avail.clamp(1, world);
+            while current > avail {
+                let g = healthy.swap_remove(rng.pick(healthy.len()));
+                failed.push(g);
+                events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Fail });
+                current -= 1;
+            }
+            while current < avail {
+                let g = failed.swap_remove(rng.pick(failed.len()));
+                healthy.push(g);
+                events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Recover });
+                current += 1;
+            }
+        }
+        FaultTimeline::new(events)
+    }
+
+    /// Check the timeline is replayable against an initial `world`: events
+    /// time-ordered with finite non-negative timestamps, GPU ids in range,
+    /// failures only of healthy GPUs, rejoins only of failed ones, and at
+    /// least one GPU up at every point (≤ `world - 1` concurrent failures).
+    pub fn validate(&self, world: usize) -> Result<()> {
+        anyhow::ensure!(world >= 1, "empty TP group");
+        let mut up = vec![true; world];
+        let mut down = 0usize;
+        let mut prev = 0.0f64;
+        for e in &self.events {
+            anyhow::ensure!(
+                e.at.is_finite() && e.at >= 0.0,
+                "event time {} must be finite and non-negative",
+                e.at
+            );
+            anyhow::ensure!(e.at >= prev, "events out of time order at t={}", e.at);
+            prev = e.at;
+            anyhow::ensure!(e.gpu < world, "gpu {} out of range (world {world})", e.gpu);
+            match e.kind {
+                FaultKind::Fail => {
+                    anyhow::ensure!(up[e.gpu], "gpu {} fails but is already down", e.gpu);
+                    up[e.gpu] = false;
+                    down += 1;
+                    anyhow::ensure!(
+                        down < world,
+                        "timeline takes all {world} GPUs down at t={}",
+                        e.at
+                    );
+                }
+                FaultKind::Recover => {
+                    anyhow::ensure!(
+                        !up[e.gpu],
+                        "gpu {} rejoins at t={} but never failed",
+                        e.gpu,
+                        e.at
+                    );
+                    up[e.gpu] = true;
+                    down -= 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Peak number of simultaneously-failed GPUs over the timeline.
+    pub fn max_concurrent_down(&self) -> usize {
+        let mut down = 0usize;
+        let mut peak = 0usize;
+        for e in &self.events {
+            match e.kind {
+                FaultKind::Fail => {
+                    down += 1;
+                    peak = peak.max(down);
+                }
+                FaultKind::Recover => down = down.saturating_sub(1),
+            }
+        }
+        peak
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,5 +403,70 @@ mod tests {
         dedup.dedup();
         assert_eq!(dedup.len(), 3);
         assert_eq!(devs.len(), 3);
+    }
+
+    #[test]
+    fn timeline_parse_roundtrip() {
+        let text = "# maintenance window\n1.5 fail 2\n3 rejoin 2\n4.25 fail 0\n";
+        let tl = FaultTimeline::parse(text).unwrap();
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl.events()[0], TimelineEvent { at: 1.5, gpu: 2, kind: FaultKind::Fail });
+        assert_eq!(FaultTimeline::parse(&tl.to_text()).unwrap(), tl);
+        assert!(FaultTimeline::parse("1.0 explode 3").is_err());
+        assert!(FaultTimeline::parse("nan fail x").is_err());
+        assert!(FaultTimeline::parse("1.0 fail 3 extra").is_err());
+    }
+
+    #[test]
+    fn timeline_validate_catches_impossible_sequences() {
+        // Rejoin of a GPU that never failed.
+        let tl = FaultTimeline::new(vec![TimelineEvent {
+            at: 1.0,
+            gpu: 0,
+            kind: FaultKind::Recover,
+        }]);
+        assert!(tl.validate(4).is_err());
+        // Double failure of the same GPU.
+        let tl = FaultTimeline::new(vec![
+            TimelineEvent { at: 1.0, gpu: 1, kind: FaultKind::Fail },
+            TimelineEvent { at: 2.0, gpu: 1, kind: FaultKind::Fail },
+        ]);
+        assert!(tl.validate(4).is_err());
+        // Taking down the whole group.
+        let tl = FaultTimeline::new(vec![
+            TimelineEvent { at: 1.0, gpu: 0, kind: FaultKind::Fail },
+            TimelineEvent { at: 2.0, gpu: 1, kind: FaultKind::Fail },
+        ]);
+        assert!(tl.validate(2).is_err());
+        assert!(tl.validate(3).is_ok());
+        // GPU id out of range.
+        let tl = FaultTimeline::new(vec![TimelineEvent { at: 0.0, gpu: 9, kind: FaultKind::Fail }]);
+        assert!(tl.validate(4).is_err());
+    }
+
+    #[test]
+    fn synthesize_is_valid_deterministic_and_capped() {
+        let a = FaultTimeline::synthesize(8, 3600.0, 300.0, 120.0, 3, 11);
+        let b = FaultTimeline::synthesize(8, 3600.0, 300.0, 120.0, 3, 11);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "an hour at MTBF 300s must produce events");
+        a.validate(8).unwrap();
+        assert!(a.max_concurrent_down() <= 3);
+        // The cap clamps to world - 1 even when asked for more.
+        let c = FaultTimeline::synthesize(2, 3600.0, 60.0, 600.0, 8, 5);
+        c.validate(2).unwrap();
+        assert!(c.max_concurrent_down() <= 1);
+    }
+
+    #[test]
+    fn timeline_from_availability_is_valid() {
+        let samples = vec![(0.0, 8), (10.0, 6), (20.0, 7), (30.0, 5), (40.0, 8)];
+        let tl = FaultTimeline::from_availability(&samples, 8, 3);
+        tl.validate(8).unwrap();
+        assert_eq!(tl.max_concurrent_down(), 3);
+        // Ends back at full availability: fails == rejoins.
+        let fails = tl.events().iter().filter(|e| e.kind == FaultKind::Fail).count();
+        let rejoins = tl.events().iter().filter(|e| e.kind == FaultKind::Recover).count();
+        assert_eq!(fails, rejoins);
     }
 }

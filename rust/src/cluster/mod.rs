@@ -3,11 +3,13 @@
 //! The paper evaluates on an 8×H100 DGX; we do not have one, so this module
 //! provides the node the coordinator runs against: per-device HBM
 //! accounting and health state ([`GpuDevice`]), a bandwidth/latency model of
-//! the NVLink/PCIe fabric ([`Interconnect`]), and a fault injector that
-//! replays availability traces ([`fault::FaultInjector`]). The paper itself
-//! injects faults in software on healthy hardware; we do the same one level
-//! down. All figure-scale numbers derive from H100-class constants in
-//! [`GpuSpec`].
+//! the NVLink/PCIe fabric ([`Interconnect`]), a fault injector that
+//! replays availability traces ([`fault::FaultInjector`]), and the
+//! [`FaultTimeline`] of timestamped fail/rejoin events the serving replay
+//! driver ([`crate::engine::replay()`]) steps sessions through. The paper
+//! itself injects faults in software on healthy hardware; we do the same
+//! one level down. All figure-scale numbers derive from H100-class
+//! constants in [`GpuSpec`].
 
 mod device;
 pub mod fault;
@@ -15,6 +17,6 @@ mod interconnect;
 mod spec;
 
 pub use device::{DeviceState, GpuDevice, Node};
-pub use fault::{FaultEvent, FaultInjector, FaultKind};
+pub use fault::{FaultEvent, FaultInjector, FaultKind, FaultTimeline, TimelineEvent};
 pub use interconnect::{Interconnect, TransferClass};
 pub use spec::GpuSpec;

@@ -79,31 +79,11 @@ impl ReconfigController {
         if !self.node.device(device_id).is_healthy() {
             return None;
         }
-        let old_world = self.world();
         self.node.device_mut(device_id).fail();
-        let new_world = old_world - 1;
+        let new_world = self.world() - 1;
 
-        let survivor_map: Vec<Option<RankId>> = (0..old_world)
-            .map(|r| {
-                if r == failed_rank {
-                    None
-                } else {
-                    Some(if r < failed_rank { r } else { r - 1 })
-                }
-            })
-            .collect();
-
-        let new_plan = ShardPlan {
-            model: self.model.clone(),
-            heads: crate::sharding::HeadAssignment::new(
-                self.config.attn,
-                self.model.n_kv_heads,
-                self.model.n_layers,
-                new_world,
-            ),
-            // Commutative policy keeps surviving FFN blocks in place.
-            ffn: self.plan.ffn.reshard(&survivor_map, new_world),
-        };
+        // Commutative policy keeps surviving FFN blocks in place.
+        let (new_plan, survivor_map) = self.plan.shrink(failed_rank);
 
         let input = RecoveryInput {
             spec: &self.spec,

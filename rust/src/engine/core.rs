@@ -2,8 +2,9 @@
 //! submitted with [`SubmitOptions`] (timed arrival, budget, priority),
 //! the public [`Engine::step`] tick runs one scheduler-chosen unit of work
 //! (a chunked-prefill pass or a continuous-decode step) and returns the
-//! [`EngineEvent`]s it produced, and failures can be injected at *any*
-//! step boundary — including mid-decode with requests in flight.
+//! [`EngineEvent`]s it produced, and failures *and rejoins* can be
+//! injected at *any* step boundary — including mid-decode with requests
+//! in flight ([`Engine::inject_failure`] / [`Engine::inject_rejoin`]).
 //! [`Engine::run_to_completion`] is a thin convenience wrapper over
 //! `step()`. Everything executes real AOT artifacts through PJRT.
 
@@ -11,7 +12,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::cluster::{GpuSpec, Interconnect};
+use crate::cluster::{GpuSpec, Interconnect, TransferClass};
 use crate::config::EngineConfig;
 use crate::coordinator::RequestState;
 use crate::kvcache::{BackupStore, KvPlacement};
@@ -30,7 +31,19 @@ use super::shard::{pick_bucket, RankShard};
 use super::KvStore;
 
 /// Something observable that happened during one engine step (or at a
-/// step boundary: aborts and failure injections surface on the next tick).
+/// step boundary: aborts, failure injections, and rejoins surface on the
+/// next tick).
+///
+/// ```
+/// use failsafe::engine::EngineEvent;
+///
+/// let ev = EngineEvent::TokenEmitted { id: 7, token: 42, index: 0 };
+/// if let EngineEvent::TokenEmitted { id, token, index } = ev {
+///     assert_eq!((id, token, index), (7, 42, 0));
+/// } else {
+///     unreachable!("streaming consumers match on the event kind");
+/// }
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EngineEvent {
     /// Request `id` produced `token` — its `index`-th output token.
@@ -45,11 +58,37 @@ pub enum EngineEvent {
     RecoveryCompleted { method: RecoveryMethod, latency_s: f64 },
     /// The session is serving on a new shard plan / world size.
     Reconfigured { epoch: u64, world: usize },
+    /// A previously failed GPU rejoined the group as `rank` (always
+    /// appended at the end of the rank order).
+    GpuRejoined { rank: RankId, method: RecoveryMethod },
+    /// The expand-reconfiguration for a rejoin completed: weights streamed
+    /// onto the returning GPU and the cyclic KV placement re-spread, at the
+    /// modeled `latency_s` cost.
+    ReconfigCompleted { epoch: u64, world: usize, latency_s: f64 },
 }
 
 /// The serving surface shared by the real [`Engine`] and the simulator's
 /// [`crate::simulator::OnlineSession`]: online traces, benches, and the
 /// fault-tolerance examples run identically against either backend.
+///
+/// ```
+/// use failsafe::engine::{ServingBackend, SubmitOptions};
+/// use failsafe::recovery::RecoveryMethod;
+/// use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
+///
+/// // The cost-model backend serves without AOT artifacts — same API as
+/// // the real `Engine`: submit, fail a GPU mid-flight, rejoin it, finish.
+/// let mut session = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4).session();
+/// let id = session.submit_with(&vec![0u32; 512], SubmitOptions::new(4))?;
+/// session.step()?; // admit + first decode tick
+/// session.inject_failure(1, RecoveryMethod::Full)?;
+/// assert_eq!(session.world(), 3);
+/// session.inject_rejoin(RecoveryMethod::Full)?;
+/// assert_eq!(session.world(), 4);
+/// let report = session.run_to_completion()?;
+/// assert_eq!(report.result(id).unwrap().output_tokens.len(), 4);
+/// # anyhow::Ok(())
+/// ```
 pub trait ServingBackend {
     /// Submit a prompt with options; returns the request id.
     fn submit_with(&mut self, prompt: &[u32], opts: SubmitOptions) -> Result<RequestId>;
@@ -61,6 +100,15 @@ pub trait ServingBackend {
     /// Inject a hard failure of `rank` at this step boundary; returns the
     /// modeled recovery latency in seconds.
     fn inject_failure(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64>;
+    /// Rejoin one previously failed GPU at this step boundary — the
+    /// inverse of [`ServingBackend::inject_failure`]. The returning GPU is
+    /// appended as rank `world()` (post-call `world() - 1`); weights
+    /// stream in on demand, the cyclic KV placement re-spreads onto it,
+    /// and the router rebalances. Errors if no GPU is currently failed.
+    /// Returns the modeled reconfiguration latency in seconds.
+    fn inject_rejoin(&mut self, method: RecoveryMethod) -> Result<f64>;
+    /// Current TP world size (number of ranks serving this session).
+    fn world(&self) -> usize;
     /// The backend clock in seconds (wall-based for the engine, simulated
     /// for the cost-model backend).
     fn now(&self) -> SimTime;
@@ -142,6 +190,9 @@ pub struct Engine {
     lm_head: xla::Literal,
     session: Session,
     epoch: u64,
+    /// GPUs currently out of the group (failed and not yet rejoined) —
+    /// the budget `inject_rejoin` draws from.
+    lost: usize,
     recoveries: Vec<f64>,
     /// Events produced at step boundaries (aborts, failure injections),
     /// drained by the next `step()`.
@@ -189,6 +240,7 @@ impl Engine {
             lm_head,
             session: Session::new(),
             epoch: 0,
+            lost: 0,
             recoveries: Vec::new(),
             pending_events: Vec::new(),
         })
@@ -398,21 +450,10 @@ impl Engine {
             }
         }
 
-        // Plan the new epoch.
-        let survivor_map: Vec<Option<RankId>> = (0..old_world)
-            .map(|r| if r == rank { None } else { Some(if r < rank { r } else { r - 1 }) })
-            .collect();
+        // Plan the new epoch (survivors renumbered densely, commutative
+        // FFN blocks staying put).
+        let (new_plan, survivor_map) = self.plan.shrink(rank);
         let new_world = old_world - 1;
-        let new_plan = ShardPlan {
-            model: self.config.model.clone(),
-            heads: crate::sharding::HeadAssignment::new(
-                self.config.system.attn,
-                self.config.model.n_kv_heads,
-                self.config.model.n_layers,
-                new_world,
-            ),
-            ffn: self.plan.ffn.reshard(&survivor_map, new_world),
-        };
 
         // Latency model (what an H100 node would pay).
         let spec = GpuSpec::h100();
@@ -442,6 +483,7 @@ impl Engine {
         anyhow::ensure!(RankShard::verify_cover(&self.shards, &self.plan));
         self.router = self.router.remap(&survivor_map, new_world);
         self.epoch += 1;
+        self.lost += 1;
 
         // Re-home requests and repair their KV state.
         let ids: Vec<RequestId> = self.session.order.clone();
@@ -496,6 +538,107 @@ impl Engine {
         self.pending_events
             .push(EngineEvent::Reconfigured { epoch: self.epoch, world: new_world });
         Ok(outcome.total_s)
+    }
+
+    /// Rejoin one previously failed GPU at this step boundary — the
+    /// inverse of [`Engine::inject_failure`], usable at any point:
+    /// mid-decode with requests in flight, mid-repair while a Recompute
+    /// re-prefill is still running, or on an idle session. The returning
+    /// GPU is appended as rank `world()` and the coordinator plans an
+    /// expand-reconfiguration:
+    ///
+    /// * **weights** — on-demand recovery costed via
+    ///   [`plan_recovery`]: with [`RecoveryMethod::Full`] the new rank's
+    ///   shard streams from surviving peers over NVLink (zero PCIe — every
+    ///   unit has a live replica), conventional methods pay full-shard
+    ///   PCIe reloads;
+    /// * **KV cache** — the cyclic placement re-spreads onto the new rank
+    ///   (it absorbs ≈ `1/new_world` of resident KV), costed as the max
+    ///   per-rank NVLink receive and applied by re-tagging slices;
+    /// * **router** — existing ranks keep their booked load, the new rank
+    ///   starts empty, so least-loaded routing rebalances onto it.
+    ///
+    /// Generation is untouched — continuation across a rejoin is bit-exact
+    /// by construction, which the integration tests assert. Buffers
+    /// [`EngineEvent::GpuRejoined`] / [`EngineEvent::ReconfigCompleted`]
+    /// for the next `step()` and returns the modeled latency in seconds.
+    pub fn inject_rejoin(&mut self, method: RecoveryMethod) -> Result<f64> {
+        anyhow::ensure!(
+            self.lost > 0,
+            "inject_rejoin: no failed GPU to rejoin (world {}, none lost)",
+            self.world()
+        );
+        let old_world = self.world();
+        let new_world = old_world + 1;
+        let joined: RankId = old_world;
+        let (new_plan, survivor_map) = self.plan.expand();
+
+        // Latency model: on-demand weight stream-in for the joining rank...
+        let spec = GpuSpec::h100();
+        let ic = Interconnect::new(spec.clone());
+        let outcome = plan_recovery(
+            method,
+            &RecoveryInput {
+                spec: &spec,
+                ic: &ic,
+                old_plan: &self.plan,
+                new_plan: &new_plan,
+                survivor_map: &survivor_map,
+                failed_rank: usize::MAX, // nothing is lost on a rejoin
+                requests: &[],
+                backup: &BackupStore::new(0),
+            },
+        );
+        // ...plus the cyclic KV re-spread onto it, bounded by the max
+        // bytes any single rank receives over NVLink (serialized after the
+        // weight phase: both directions share the peer fabric).
+        let new_placement = KvPlacement::new(&new_plan);
+        let mut recv = vec![0usize; new_world];
+        for id in &self.session.order {
+            let r = &self.session.requests[id];
+            if r.is_done() {
+                continue;
+            }
+            let per = self.placement.respread_bytes(&new_placement, r.context, r.home);
+            for (rank, b) in per.iter().enumerate() {
+                recv[rank] += b;
+            }
+        }
+        let kv_move_s = ic
+            .parallel_transfer_time(TransferClass::NvLink, recv.iter().copied().max().unwrap_or(0));
+        let total_s = outcome.total_s + kv_move_s;
+
+        // Apply: new plan + shards, re-spread KV tags, grow the router.
+        self.plan = new_plan;
+        self.placement = new_placement;
+        self.shards = (0..new_world)
+            .map(|r| RankShard::build(&self.manifest, &self.store, &self.plan, r))
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(RankShard::verify_cover(&self.shards, &self.plan));
+        self.router = self.router.expand(new_world);
+        self.epoch += 1;
+        self.lost -= 1;
+        let homes: std::collections::HashMap<RequestId, RankId> = self
+            .session
+            .requests
+            .iter()
+            .filter(|(_, r)| !r.is_done())
+            .map(|(id, r)| (*id, r.home))
+            .collect();
+        self.kv.retag_requests(&self.placement, &homes);
+
+        self.recoveries.push(total_s);
+        self.pending_events.push(EngineEvent::GpuRejoined { rank: joined, method });
+        self.pending_events.push(EngineEvent::ReconfigCompleted {
+            epoch: self.epoch,
+            world: new_world,
+            latency_s: total_s,
+        });
+        // Consumers that track the serving plan via `Reconfigured` (as the
+        // failure path trains them to) must see expansions too.
+        self.pending_events
+            .push(EngineEvent::Reconfigured { epoch: self.epoch, world: new_world });
+        Ok(total_s)
     }
 
     // ------------------------------------------------------------ steps --
@@ -937,6 +1080,14 @@ impl ServingBackend for Engine {
 
     fn inject_failure(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64> {
         Engine::inject_failure(self, rank, method)
+    }
+
+    fn inject_rejoin(&mut self, method: RecoveryMethod) -> Result<f64> {
+        Engine::inject_rejoin(self, method)
+    }
+
+    fn world(&self) -> usize {
+        Engine::world(self)
     }
 
     fn now(&self) -> SimTime {

@@ -164,6 +164,19 @@ impl KvStore {
         }
     }
 
+    /// Re-tag every slice of the requests in `homes` (request → home rank)
+    /// to the rank `placement` assigns it, in one pass over the store —
+    /// the KV re-spread of an expand-reconfiguration (GPU rejoin). Data
+    /// stays put in the host-side store; the simulated NVLink move onto
+    /// the new owners is costed by the rejoin latency model.
+    pub fn retag_requests(&mut self, placement: &KvPlacement, homes: &HashMap<RequestId, RankId>) {
+        for ((r, l, h), s) in self.slices.iter_mut() {
+            if let Some(&home) = homes.get(r) {
+                s.rank = placement.rank_for(*l, *h, home);
+            }
+        }
+    }
+
     /// Re-tag surviving slices after a reconfiguration: slice held by old
     /// rank `o` now belongs to `survivor_map[o]` (data stays put; the
     /// simulated transfer cost is accounted by the recovery planner).
@@ -250,6 +263,23 @@ mod tests {
         kv.truncate(1, 2);
         assert_eq!(kv.tokens(1), 2);
         assert_eq!(kv.gather(1, 0, &[0], 3, 1, false), vec![1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn retag_follows_new_placement() {
+        let m = small_real();
+        let (plan3, _) = ShardPlan::failsafe(&m, 2).expand();
+        let placement = KvPlacement::new(&plan3);
+        let mut kv = KvStore::new(2);
+        kv.append(1, 0, 0, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        kv.append(1, 1, 3, 1, &[5.0, 6.0], &[7.0, 8.0]);
+        kv.append(2, 0, 0, 0, &[9.0, 9.0], &[9.0, 9.0]); // not re-tagged
+        let homes = HashMap::from([(1u64, 0usize)]);
+        kv.retag_requests(&placement, &homes);
+        let by = kv.bytes_by_rank(3);
+        assert_eq!(by.iter().sum::<usize>(), 96, "retag moves tags, never bytes");
+        let r00 = placement.rank_for(0, 0, 0);
+        assert!(by[r00] >= 32, "slice (0,0) tagged by the new placement: {by:?}");
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //! SLO deadline), tick the session with `step()` and consume the
 //! [`EngineEvent`] stream it returns (token emissions, completions,
 //! aborts, failure/recovery notifications), cancel requests with
-//! `abort(id)`, and inject GPU failures at *any* step boundary — even
-//! mid-decode with requests in flight. `run_to_completion()` is a thin
-//! convenience wrapper over `step()`. The same trait is implemented by
-//! the cost-model simulator ([`crate::simulator::OnlineSession`]), so
-//! online traces, benches, and the fault-tolerance examples run
-//! identically against either backend; [`drive`] is the shared loop.
+//! `abort(id)`, and inject GPU failures *and rejoins* at *any* step
+//! boundary — even mid-decode with requests in flight. The same trait is
+//! implemented by the cost-model simulator
+//! ([`crate::simulator::OnlineSession`]), so online traces, benches, and
+//! the fault-tolerance examples run identically against either backend;
+//! [`drive`] is the shared single-fault loop and [`replay()`] steps a
+//! backend through a whole [`crate::cluster::FaultTimeline`] of
+//! overlapping failures, cascades, and staggered rejoins.
 //!
 //! Internally the session splits into three layers:
 //! * [`core`](self) — the step loop, event generation, failure recovery,
@@ -36,12 +38,14 @@
 
 mod core;
 mod kv;
+mod replay;
 mod report;
 mod session;
 mod shard;
 
 pub use self::core::{drive, Engine, EngineEvent, FaultPlan, FaultTrigger, ServingBackend};
 pub use kv::KvStore;
+pub use replay::{replay, AppliedEvent, ReplayOutcome, ReplayPace};
 pub use report::{GenerationResult, ServeReport};
 pub use session::SubmitOptions;
 pub use shard::RankShard;

@@ -1,0 +1,164 @@
+//! Availability-timeline replay: step any [`ServingBackend`] through an
+//! entire [`FaultTimeline`] of `Fail(gpu)` / `Rejoin(gpu)` events with
+//! requests in flight — overlapping failures (up to TP−1 concurrent),
+//! cascades, fail-during-recovery, and staggered rejoins.
+//!
+//! The timeline speaks in *stable physical GPU ids*; the driver owns the
+//! gpu↔rank map and keeps it consistent as ranks are renumbered by each
+//! reconfiguration (survivors compact downward on a failure, a rejoining
+//! GPU is appended at the end). Everything runs through the public
+//! `step()` API, so the replayed session streams tokens, admits timed
+//! arrivals, and emits failure/rejoin events exactly as live serving
+//! would — and on the real engine the outputs stay bit-exact versus a
+//! fault-free run.
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{FaultKind, FaultTimeline, TimelineEvent};
+use crate::recovery::RecoveryMethod;
+use crate::{RankId, SimTime};
+
+use super::core::{EngineEvent, ServingBackend};
+use super::report::ServeReport;
+
+/// How timeline timestamps are matched against the backend's progress.
+#[derive(Debug, Clone, Copy)]
+pub enum ReplayPace {
+    /// Fire an event once `backend.now()` reaches its timestamp — natural
+    /// for the simulator, whose clock is deterministic simulated time.
+    Clock,
+    /// Fire an event once `⌈at × per_sec⌉` tokens have been emitted —
+    /// deterministic on *both* backends (the real engine's clock is wall
+    /// time), so bit-exactness tests replay identically every run.
+    Tokens { per_sec: f64 },
+}
+
+/// One timeline event as it was actually applied.
+#[derive(Debug, Clone)]
+pub struct AppliedEvent {
+    pub event: TimelineEvent,
+    /// The rank the event mapped to when it fired: for a failure, the
+    /// failed rank in the pre-failure numbering; for a rejoin, the new
+    /// rank the GPU came back as.
+    pub rank: RankId,
+    /// Modeled recovery/reconfiguration latency in seconds.
+    pub latency_s: f64,
+    /// Backend clock when the event was applied.
+    pub applied_at: SimTime,
+}
+
+/// Result of replaying a timeline to completion.
+#[derive(Debug)]
+pub struct ReplayOutcome {
+    /// The backend's cumulative report after the replay.
+    pub report: ServeReport,
+    /// Events applied, in order, with the ranks they resolved to.
+    pub applied: Vec<AppliedEvent>,
+    /// Events that could not be applied (e.g. a failure that would take
+    /// the last remaining rank — impossible in a validated timeline).
+    pub skipped: Vec<TimelineEvent>,
+    /// World size after the replay.
+    pub final_world: usize,
+    /// Total tokens emitted during the replay.
+    pub tokens_emitted: usize,
+}
+
+/// Step `backend` to completion while firing every timeline event at its
+/// pace-determined due point. Events left over when the session drains
+/// (nothing in flight, nothing arriving) are applied back-to-back so the
+/// final world always reflects the whole timeline.
+///
+/// ```
+/// use failsafe::cluster::FaultTimeline;
+/// use failsafe::engine::{replay, ReplayPace, ServingBackend, SubmitOptions};
+/// use failsafe::recovery::RecoveryMethod;
+/// use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
+///
+/// let mut session = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8).session();
+/// for i in 0..8 {
+///     session.submit_with(&vec![0u32; 1024], SubmitOptions::new(8).at(i as f64 * 0.01))?;
+/// }
+/// // Two overlapping failures, then staggered rejoins.
+/// let tl = FaultTimeline::parse("2 fail 1\n4 fail 5\n6 rejoin 1\n8 rejoin 5\n")?;
+/// let out = replay(&mut session, &tl, RecoveryMethod::Full, ReplayPace::Tokens { per_sec: 1.0 })?;
+/// assert_eq!(out.applied.len(), 4);
+/// assert_eq!(out.final_world, 8);
+/// # anyhow::Ok(())
+/// ```
+pub fn replay<B: ServingBackend + ?Sized>(
+    backend: &mut B,
+    timeline: &FaultTimeline,
+    method: RecoveryMethod,
+    pace: ReplayPace,
+) -> Result<ReplayOutcome> {
+    let world0 = backend.world();
+    timeline.validate(world0)?;
+    // gpu_rank[g] = the rank gpu g currently serves as (None while down).
+    let mut gpu_rank: Vec<Option<RankId>> = (0..world0).map(Some).collect();
+    let mut pending: VecDeque<TimelineEvent> = timeline.events().iter().copied().collect();
+    let mut applied = Vec::new();
+    let mut skipped = Vec::new();
+    let mut emitted = 0usize;
+
+    loop {
+        while let Some(&ev) = pending.front() {
+            let due = match pace {
+                ReplayPace::Clock => backend.now() >= ev.at,
+                ReplayPace::Tokens { per_sec } => emitted as f64 >= ev.at * per_sec,
+            };
+            // A drained session advances neither clock nor token count:
+            // apply the remaining events back-to-back instead of hanging.
+            if !due && !backend.is_idle() {
+                break;
+            }
+            pending.pop_front();
+            match ev.kind {
+                FaultKind::Fail => {
+                    let rank = gpu_rank[ev.gpu]
+                        .with_context(|| format!("gpu {} is already down", ev.gpu))?;
+                    if backend.world() <= 1 {
+                        // Unreachable with a validated timeline; recorded
+                        // rather than failing the whole replay.
+                        skipped.push(ev);
+                        continue;
+                    }
+                    let latency_s = backend.inject_failure(rank, method)?;
+                    for slot in gpu_rank.iter_mut() {
+                        *slot = match *slot {
+                            Some(r) if r == rank => None,
+                            Some(r) if r > rank => Some(r - 1),
+                            other => other,
+                        };
+                    }
+                    let applied_at = backend.now();
+                    applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
+                }
+                FaultKind::Recover => {
+                    let latency_s = backend.inject_rejoin(method)?;
+                    let rank = backend.world() - 1; // rejoins append
+                    gpu_rank[ev.gpu] = Some(rank);
+                    let applied_at = backend.now();
+                    applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
+                }
+            }
+        }
+        if pending.is_empty() && backend.is_idle() {
+            break;
+        }
+        emitted += backend
+            .step()?
+            .iter()
+            .filter(|e| matches!(e, EngineEvent::TokenEmitted { .. }))
+            .count();
+    }
+
+    Ok(ReplayOutcome {
+        report: backend.report(),
+        applied,
+        skipped,
+        final_world: backend.world(),
+        tokens_emitted: emitted,
+    })
+}

@@ -21,7 +21,29 @@ pub struct GenerationResult {
     pub aborted: bool,
 }
 
-/// Report of a serve run.
+/// Report of a serve run, as returned by
+/// [`ServingBackend::report`](super::ServingBackend::report) and
+/// `run_to_completion()`.
+///
+/// ```
+/// use failsafe::engine::{GenerationResult, ServeReport};
+///
+/// let report = ServeReport {
+///     results: vec![GenerationResult {
+///         id: 0,
+///         output_tokens: vec![17, 4, 99],
+///         ttft_s: Some(0.12),
+///         max_tbt_s: 0.03,
+///         aborted: false,
+///     }],
+///     decode_tokens: 3,
+///     wall_s: 1.5,
+///     ..ServeReport::default()
+/// };
+/// assert_eq!(report.decode_tps(), 2.0);
+/// assert_eq!(report.outputs(), vec![&[17u32, 4, 99][..]]);
+/// assert!(report.result(1).is_none());
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct ServeReport {
     pub results: Vec<GenerationResult>,
@@ -29,7 +51,8 @@ pub struct ServeReport {
     pub prefill_tokens: usize,
     pub decode_tokens: usize,
     pub steps: usize,
-    /// Simulated (modeled) recovery latencies of injected failures.
+    /// Simulated (modeled) latencies of injected failures' recoveries and
+    /// of rejoin reconfigurations, in injection order.
     pub recoveries: Vec<f64>,
 }
 

@@ -12,10 +12,18 @@ use std::time::Instant;
 use crate::coordinator::{Request, RequestState};
 use crate::{RequestId, SimTime};
 
-/// Options attached to a submitted request (builder style).
+/// Options attached to a submitted request (builder style), passed to
+/// [`ServingBackend::submit_with`](super::ServingBackend::submit_with):
 ///
-/// ```ignore
-/// engine.submit_with(&prompt, SubmitOptions::new(64).at(1.5).priority(2))?;
+/// ```
+/// use failsafe::engine::SubmitOptions;
+///
+/// // 64-token budget, arriving 1.5 s into the session, high priority,
+/// // 10 s SLO deadline — e.g. `backend.submit_with(&prompt, opts)?`.
+/// let opts = SubmitOptions::new(64).at(1.5).priority(2).deadline(10.0);
+/// assert_eq!(opts.max_new_tokens, 64);
+/// assert_eq!(opts.arrival, 1.5);
+/// assert_eq!((opts.priority, opts.deadline), (2, Some(10.0)));
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SubmitOptions {

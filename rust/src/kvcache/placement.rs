@@ -66,6 +66,28 @@ impl KvPlacement {
         self.footprint(0, tokens, home).bytes[rank]
     }
 
+    /// Bytes each *new-plan* rank receives when one request's KV is
+    /// re-spread from this placement onto `new` (same home rank): for every
+    /// (layer, head) whose owner changes, the slice's bytes land on the new
+    /// owner. This is the per-request cost of re-spreading cyclic KV
+    /// placement onto a rejoining GPU — under cyclic/hybrid plans the new
+    /// rank absorbs ≈ `1/new_world` of the resident KV and every other
+    /// rank's share shrinks accordingly.
+    pub fn respread_bytes(&self, new: &KvPlacement, tokens: usize, home: RankId) -> Vec<usize> {
+        let kvb = self.plan.model.kv_bytes_per_token_per_head_layer() * tokens;
+        let mut recv = vec![0usize; new.plan.world()];
+        for layer in 0..self.plan.model.n_layers {
+            for head in 0..self.plan.heads.n_heads {
+                let old_rank = self.rank_for(layer, head, home);
+                let new_rank = new.rank_for(layer, head, home);
+                if old_rank != new_rank {
+                    recv[new_rank] += kvb;
+                }
+            }
+        }
+        recv
+    }
+
     /// Imbalance ratio of per-rank KV for an even mix of requests: max/mean
     /// of per-rank bytes when each rank homes the same token count. 1.0 is
     /// perfect balance.
@@ -125,6 +147,23 @@ mod tests {
         let plan = ShardPlan::new(&m, 7, AttentionPolicy::Cyclic, FfnPolicy::Commutative);
         let p = KvPlacement::new(&plan);
         assert!(p.imbalance() < 1.01, "cyclic imbalance {}", p.imbalance());
+    }
+
+    #[test]
+    fn respread_targets_the_joining_rank() {
+        let m = llama3_70b();
+        let p7 = KvPlacement::new(&ShardPlan::failsafe(&m, 7));
+        let (plan8, _) = ShardPlan::failsafe(&m, 7).expand();
+        let p8 = KvPlacement::new(&plan8);
+        let recv = p7.respread_bytes(&p8, 1000, 2);
+        assert_eq!(recv.len(), 8);
+        // The joining rank (7) held nothing, so it must receive KV.
+        assert!(recv[7] > 0, "joining rank receives its cyclic share: {recv:?}");
+        let total: usize = recv.iter().sum();
+        let full = m.kv_bytes_per_token() * 1000;
+        assert!(total <= full, "re-spread can never move more than the whole cache");
+        // Identity re-spread is free.
+        assert!(p7.respread_bytes(&p7, 1000, 2).iter().all(|&b| b == 0));
     }
 
     #[test]

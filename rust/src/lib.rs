@@ -38,12 +38,36 @@
 //! * `inject_failure(rank, method)` — kill a GPU at *any* step boundary,
 //!   even mid-decode with requests in flight, and continue bit-exact
 //!   under backup-based recovery;
+//! * `inject_rejoin(method)` — the inverse: a failed GPU returns, its
+//!   shard streams back over NVLink, the cyclic KV placement re-spreads
+//!   onto it, and the router rebalances — still bit-exact;
 //! * `run_to_completion()` — a thin convenience wrapper over `step()`.
 //!
 //! [`engine::drive`] steps any backend to completion with an optional
-//! planned [`engine::FaultPlan`], so online traces, benches, and the
+//! planned [`engine::FaultPlan`], and [`engine::replay()`] steps one
+//! through an entire [`cluster::FaultTimeline`] of timestamped
+//! `Fail(gpu)` / `Rejoin(gpu)` events — overlapping failures, cascades,
+//! rolling maintenance — so online traces, benches, and the
 //! fault-tolerance examples run identically against the real engine or
-//! the simulator.
+//! the simulator:
+//!
+//! ```
+//! use failsafe::engine::{replay, ReplayPace, ServingBackend, SubmitOptions};
+//! use failsafe::recovery::RecoveryMethod;
+//! use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
+//! use failsafe::traces::cascade_then_heal;
+//!
+//! let mut session = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8).session();
+//! for i in 0..6 {
+//!     session.submit_with(&vec![0u32; 1024], SubmitOptions::new(8).at(i as f64 * 0.01))?;
+//! }
+//! // Two GPUs fail 100 ms in, both rejoin half a second later.
+//! let timeline = cascade_then_heal(2, 0.1, 0.05, 0.5);
+//! let out = replay(&mut session, &timeline, RecoveryMethod::Full, ReplayPace::Clock)?;
+//! assert_eq!(out.final_world, 8);
+//! assert_eq!(out.applied.len(), 4);
+//! # anyhow::Ok(())
+//! ```
 //!
 //! The three-layer architecture: Python (JAX + Pallas) authors the model and
 //! kernels and lowers them **once** to HLO text (`make artifacts`); the rust

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   serve     serve random prompts on the real engine (PJRT, AOT artifacts)
 //!   sim       online serving simulation at H100 scale (prefill|decode)
+//!   replay    step a serving session through an availability timeline of
+//!             GPU failures AND rejoins (cascades, flaky GPUs, rolling
+//!             maintenance), on the simulator or the real engine
 //!   recover   cost one failure under every recovery method
 //!   traces    print workload/availability trace statistics
 //!
@@ -11,19 +14,26 @@
 //!   failsafe serve --world 3 --fail-rank 1 --recovery full
 //!   failsafe serve --world 3 --fail-rank 1 --fail-after-tokens 12
 //!   failsafe sim --model llama --system failsafe --world 7 --mode decode --rate 4
+//!   failsafe replay --world 8 --scenario cascade --requests 40
+//!   failsafe replay --world 8 --scenario gcp --duration 1800 --rate 0.5
+//!   failsafe replay --backend engine --world 3 --requests 6 --max-new 16
+//!   failsafe replay --timeline my_trace.txt --world 8
 //!   failsafe recover --model llama --world 8 --requests 60 --ctx 8000
 //!   failsafe traces --n 3000
 
 use failsafe::benchkit::section;
-use failsafe::cluster::{GpuSpec, Interconnect};
+use failsafe::cluster::{FaultTimeline, GpuSpec, Interconnect};
 use failsafe::config::{model_by_name, recovery_by_name, system_by_name, EngineConfig};
-use failsafe::engine::{drive, Engine, FaultPlan, FaultTrigger, ServingBackend};
+use failsafe::engine::{
+    drive, replay, Engine, FaultPlan, FaultTrigger, ReplayPace, ServingBackend, SubmitOptions,
+};
 use failsafe::kvcache::BackupStore;
 use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use failsafe::sharding::{HeadAssignment, ShardPlan};
 use failsafe::simulator::{OnlineMode, OnlineSim};
 use failsafe::traces::{
-    gcp_availability, mooncake_trace, openthoughts_trace, poisson_arrivals, TraceStats,
+    cascade_then_heal, flaky_gpu, gcp_availability, mooncake_trace, openthoughts_trace,
+    poisson_arrivals, rolling_maintenance, TraceStats,
 };
 use failsafe::util::cli::Args;
 use failsafe::util::Rng;
@@ -34,11 +44,12 @@ fn main() -> anyhow::Result<()> {
     match args.command.as_deref() {
         Some("serve") => serve(&args),
         Some("sim") => sim(&args),
+        Some("replay") => replay_cmd(&args),
         Some("recover") => recover(&args),
         Some("traces") => traces(&args),
         _ => {
             eprintln!(
-                "usage: failsafe <serve|sim|recover|traces> [--flags]\n\
+                "usage: failsafe <serve|sim|replay|recover|traces> [--flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             Ok(())
@@ -132,6 +143,185 @@ fn sim(args: &Args) -> anyhow::Result<()> {
         out.metrics.tbt.p99() * 1e3
     );
     println!("max-TBT p99: {:.3} s", out.metrics.max_tbt_cdf.quantile(0.99));
+    Ok(())
+}
+
+/// Build the availability timeline for `replay`: from `--timeline FILE`,
+/// or a named `--scenario` (cascade|flaky|rolling|gcp|synth).
+fn build_timeline(args: &Args, world: usize) -> anyhow::Result<FaultTimeline> {
+    if let Some(path) = args.get("timeline") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading timeline {path}: {e}"))?;
+        return FaultTimeline::parse(&text);
+    }
+    let seed = args.get_u64("seed", 42);
+    let duration = args.get_f64("duration", 600.0);
+    let downtime = args.get_f64("downtime", 6.0);
+    Ok(match args.get_or("scenario", "cascade") {
+        "cascade" => cascade_then_heal(
+            args.get_usize("k", (world.saturating_sub(1)).clamp(1, 2)),
+            args.get_f64("at", 2.0),
+            args.get_f64("stagger", 1.0),
+            downtime,
+        ),
+        "flaky" => flaky_gpu(
+            args.get_usize("gpu", 1),
+            args.get_usize("cycles", 3),
+            args.get_f64("at", 2.0),
+            downtime.min(3.0),
+            args.get_f64("uptime", 5.0),
+        ),
+        "rolling" => rolling_maintenance(
+            world,
+            args.get_f64("at", 2.0),
+            downtime.min(4.0),
+            args.get_f64("gap", 2.0),
+        ),
+        "gcp" => {
+            FaultTimeline::from_availability(&gcp_availability(world, duration, seed), world, seed)
+        }
+        "synth" => FaultTimeline::synthesize(
+            world,
+            duration,
+            args.get_f64("mtbf", 120.0),
+            args.get_f64("mttr", 30.0),
+            world - 1,
+            seed,
+        ),
+        other => anyhow::bail!("unknown scenario {other:?} (cascade|flaky|rolling|gcp|synth)"),
+    })
+}
+
+fn replay_cmd(args: &Args) -> anyhow::Result<()> {
+    let method =
+        recovery_by_name(args.get_or("recovery", "full")).unwrap_or(RecoveryMethod::Full);
+    match args.get_or("backend", "sim") {
+        "engine" => replay_engine(args, method),
+        _ => replay_sim(args, method),
+    }
+}
+
+/// Replay on the cost-model backend: a Mooncake-style trace in flight
+/// while the timeline fires on the simulated clock.
+fn replay_sim(args: &Args, method: RecoveryMethod) -> anyhow::Result<()> {
+    let model = model_by_name(args.get_or("model", "llama")).expect("unknown model");
+    let system = system_by_name(args.get_or("system", "failsafe")).expect("unknown system");
+    let world = args.get_usize("world", 8);
+    let n = args.get_usize("requests", 40);
+    let rate = args.get_f64("rate", 4.0);
+    let seed = args.get_u64("seed", 42);
+    let timeline = build_timeline(args, world)?;
+    timeline.validate(world)?;
+
+    section(&format!(
+        "replaying {} availability events over {} TP{} ({} requests @ {} req/s, {})",
+        timeline.len(),
+        system.name,
+        world,
+        n,
+        rate,
+        method.name()
+    ));
+    let mut trace = mooncake_trace(n, seed);
+    for r in trace.iter_mut() {
+        r.input_tokens = r.input_tokens.clamp(1, 16_000);
+        r.output_tokens = r.output_tokens.clamp(8, 64);
+    }
+    poisson_arrivals(&mut trace, rate, seed);
+    let sim = OnlineSim::new(system, OnlineMode::Decode, world).with_model(model);
+    let mut session = sim.session();
+    for r in &trace {
+        session.submit_with(
+            &vec![0u32; r.input_tokens],
+            SubmitOptions::new(r.output_tokens).at(r.arrival),
+        )?;
+    }
+    let out = replay(&mut session, &timeline, method, ReplayPace::Clock)?;
+    for a in &out.applied {
+        println!(
+            "  t={:>8.2}s  {:<6} gpu {} (rank {:>2})  latency {:>8.1} ms",
+            a.applied_at,
+            a.event.kind.name(),
+            a.event.gpu,
+            a.rank,
+            a.latency_s * 1e3
+        );
+    }
+    println!(
+        "final world {} | {} reconfigs | {} decode tok in {:.1}s sim ({:.0} tok/s) \
+         | max concurrent down {}",
+        out.final_world,
+        out.applied.len(),
+        out.report.decode_tokens,
+        out.report.wall_s,
+        out.report.decode_tps(),
+        timeline.max_concurrent_down()
+    );
+    Ok(())
+}
+
+/// Replay on the real engine (needs AOT artifacts), token-paced so the
+/// injection points are deterministic, and verify the outputs are
+/// bit-exact versus a fault-free run of the same session.
+fn replay_engine(args: &Args, method: RecoveryMethod) -> anyhow::Result<()> {
+    let cfg = EngineConfig::from_args(args);
+    let n = args.get_usize("requests", 6);
+    let max_new = args.get_usize("max-new", 12);
+    let per_sec = args.get_f64("tokens-per-sec", 2.0);
+    let timeline = build_timeline(args, cfg.world)?;
+    timeline.validate(cfg.world)?;
+
+    section(&format!(
+        "replaying {} availability events on the real engine (world {}, {})",
+        timeline.len(),
+        cfg.world,
+        method.name()
+    ));
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let prompts: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            let len = rng.range(8, 48);
+            (0..len).map(|_| rng.range(1, 512) as u32).collect()
+        })
+        .collect();
+
+    // Fault-free reference of the same session on the same world.
+    let mut reference = Engine::new(cfg.clone())?;
+    for p in &prompts {
+        reference.submit(p, max_new)?;
+    }
+    let expect = reference.run_to_completion()?;
+
+    let mut engine = Engine::new(cfg)?;
+    for p in &prompts {
+        engine.submit(p, max_new)?;
+    }
+    let out = replay(&mut engine, &timeline, method, ReplayPace::Tokens { per_sec })?;
+    for a in &out.applied {
+        println!(
+            "  after {:>4} tokens  {:<6} gpu {} (rank {:>2})  modeled latency {:>8.1} ms",
+            (a.event.at * per_sec).ceil() as usize,
+            a.event.kind.name(),
+            a.event.gpu,
+            a.rank,
+            a.latency_s * 1e3
+        );
+    }
+    println!(
+        "final world {} (epoch {}) | {} decode tok | {} events applied",
+        out.final_world,
+        engine.epoch(),
+        out.report.decode_tokens,
+        out.applied.len()
+    );
+    anyhow::ensure!(
+        out.report.outputs_owned() == expect.outputs_owned(),
+        "outputs diverged from the fault-free run"
+    );
+    println!(
+        "bit-exact vs the fault-free run across {} reconfigurations ✓",
+        out.applied.len()
+    );
     Ok(())
 }
 

@@ -75,6 +75,16 @@ impl DpRouter {
             rr_next: self.rr_next % new_world.max(1),
         }
     }
+
+    /// Grow to `new_world` ranks after a GPU rejoin: existing ranks keep
+    /// their ids and booked load, the appended ranks start empty — so the
+    /// least-loaded policy naturally rebalances by steering new arrivals
+    /// onto the returning GPU until its queue catches up.
+    pub fn expand(&self, new_world: usize) -> DpRouter {
+        assert!(new_world >= self.world(), "expand cannot shrink the router");
+        let identity: Vec<Option<RankId>> = (0..self.world()).map(Some).collect();
+        self.remap(&identity, new_world)
+    }
 }
 
 #[cfg(test)]
@@ -111,6 +121,17 @@ mod tests {
         assert_eq!(r.route(1.0), 1 - home);
         r.cancel(home, 100.0);
         assert_eq!(r.tracker().pending(home), 0.0);
+    }
+
+    #[test]
+    fn expand_steers_arrivals_to_the_new_rank() {
+        let mut r = DpRouter::new(RoutePolicy::LeastLoaded, 2);
+        r.route(50.0);
+        r.route(50.0); // both ranks loaded
+        let mut grown = r.expand(3);
+        assert_eq!(grown.world(), 3);
+        assert_eq!(grown.tracker().pending(2), 0.0);
+        assert_eq!(grown.route(1.0), 2, "empty new rank wins least-loaded");
     }
 
     #[test]

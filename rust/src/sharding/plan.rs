@@ -74,6 +74,53 @@ impl ShardPlan {
         self.heads.world
     }
 
+    /// The post-failure plan after removing `rank`: survivors are
+    /// renumbered densely, the head assignment is rebuilt for the smaller
+    /// world under the same policy, and FFN blocks are resharded (the
+    /// commutative policy keeps surviving blocks in place). Returns the
+    /// new plan and the old→new survivor map — the pair every
+    /// reconfiguration consumer (engine, simulator, coordinator, recovery
+    /// planner) needs together.
+    pub fn shrink(&self, rank: RankId) -> (ShardPlan, Vec<Option<RankId>>) {
+        let w = self.world();
+        assert!(rank < w, "shrink: rank {rank} out of range (world {w})");
+        assert!(w > 1, "shrink: cannot remove the last rank");
+        let map: Vec<Option<RankId>> = (0..w)
+            .map(|r| if r == rank { None } else { Some(if r < rank { r } else { r - 1 }) })
+            .collect();
+        let plan = ShardPlan {
+            model: self.model.clone(),
+            heads: HeadAssignment::new(
+                self.heads.policy,
+                self.heads.n_heads,
+                self.model.n_layers,
+                w - 1,
+            ),
+            ffn: self.ffn.reshard(&map, w - 1),
+        };
+        (plan, map)
+    }
+
+    /// The post-rejoin plan with one rank appended at the end: existing
+    /// ranks keep their ids (the survivor map is the identity), so nothing
+    /// already resident has to move except what the commutative FFN
+    /// reshard hands to the new rank. Inverse of [`ShardPlan::shrink`].
+    pub fn expand(&self) -> (ShardPlan, Vec<Option<RankId>>) {
+        let w = self.world();
+        let map: Vec<Option<RankId>> = (0..w).map(Some).collect();
+        let plan = ShardPlan {
+            model: self.model.clone(),
+            heads: HeadAssignment::new(
+                self.heads.policy,
+                self.heads.n_heads,
+                self.model.n_layers,
+                w + 1,
+            ),
+            ffn: self.ffn.reshard(&map, w + 1),
+        };
+        (plan, map)
+    }
+
     /// Bytes of one FFN block across all layers and experts.
     pub fn ffn_block_bytes(&self) -> usize {
         // cols per block × 3 d_model-vectors per col × layers × experts
@@ -200,6 +247,23 @@ mod tests {
             let max_w = loads.iter().map(|l| l.weight_bytes).max().unwrap();
             assert!(max_w < 64 << 20, "small model shard must be tiny, got {max_w}");
         }
+    }
+
+    #[test]
+    fn shrink_then_expand_restores_world_and_balance() {
+        let m = llama3_70b();
+        let p8 = ShardPlan::failsafe(&m, 8);
+        let (p7, map) = p8.shrink(3);
+        assert_eq!(p7.world(), 7);
+        assert_eq!(map[3], None);
+        assert_eq!(map[4], Some(3));
+        // Commutative reshard: surviving blocks stay put.
+        assert!(p8.ffn.moved_blocks(&map, &p7.ffn) <= p8.ffn.blocks_of(3).len() + 7);
+        let (p8b, up_map) = p7.expand();
+        assert_eq!(p8b.world(), 8);
+        assert_eq!(up_map, (0..7).map(Some).collect::<Vec<_>>());
+        let sizes: Vec<usize> = (0..8).map(|r| p8b.ffn.blocks_of(r).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), p8b.ffn.n_blocks);
     }
 
     #[test]

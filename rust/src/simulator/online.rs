@@ -7,15 +7,16 @@
 //! The decode instance is a steppable [`OnlineSession`] implementing the
 //! same [`ServingBackend`] trait as the real engine: submit with
 //! [`SubmitOptions`], tick with `step()`, abort mid-flight, and inject a
-//! GPU failure with any [`RecoveryMethod`] at any step boundary — which
-//! is how Fig 12 / Table 3 are produced. [`OnlineSim::run`] wraps the
+//! GPU failure — or rejoin a failed GPU — with any [`RecoveryMethod`] at
+//! any step boundary, which is how Fig 12 / Table 3 and the
+//! availability-timeline replays are produced. [`OnlineSim::run`] wraps the
 //! session for the batch (trace-driven) workflow. Simulated token
 //! emissions carry placeholder token id `0`: only counts and timing are
 //! meaningful on this backend.
 
 use anyhow::Result;
 
-use crate::cluster::{GpuSpec, Interconnect};
+use crate::cluster::{GpuSpec, Interconnect, TransferClass};
 use crate::engine::{EngineEvent, GenerationResult, ServeReport, ServingBackend, SubmitOptions};
 use crate::kvcache::BackupStore;
 use crate::metrics::ServingMetrics;
@@ -137,7 +138,6 @@ impl OnlineSim {
             self.model.kv_bytes_per_token(),
         );
         OnlineSession {
-            config: self.config.clone(),
             model: self.model.clone(),
             spec: self.spec.clone(),
             ic,
@@ -159,6 +159,7 @@ impl OnlineSim {
             kv_used: vec![0.0; self.world],
             clock: 0.0,
             steps: 0,
+            lost: 0,
             stalled: false,
             next_id: 0,
             order: Vec::new(),
@@ -311,7 +312,6 @@ impl OnlineSim {
 /// batch — but every step is costed by the roofline model instead of a
 /// PJRT execution, so the clock is simulated time.
 pub struct OnlineSession {
-    config: SystemConfig,
     model: crate::model::ModelSpec,
     spec: GpuSpec,
     ic: Interconnect,
@@ -337,6 +337,9 @@ pub struct OnlineSession {
     kv_used: Vec<f64>,
     clock: SimTime,
     steps: usize,
+    /// GPUs currently out of the group — the budget `inject_rejoin`
+    /// draws from.
+    lost: usize,
     /// Set when the waiting line can never drain (cold-system livelock in
     /// the old batch loop) — the session reports idle.
     stalled: bool,
@@ -536,10 +539,9 @@ impl OnlineSession {
 
         let reqs: Vec<(RequestId, usize, RankId)> =
             self.running.iter().map(|r| (r.id, r.context, r.home)).collect();
-        let survivor_map: Vec<Option<RankId>> = (0..self.world)
-            .map(|r| if r == rank { None } else { Some(if r < rank { r } else { r - 1 }) })
-            .collect();
-        let new_plan = self.config.plan(&self.model, self.world - 1);
+        // Same reconfiguration the real engine plans: survivors renumber
+        // densely, commutative FFN blocks stay put.
+        let (new_plan, survivor_map) = self.plan.shrink(rank);
         let input = RecoveryInput {
             spec: &self.spec,
             ic: &self.ic,
@@ -572,12 +574,86 @@ impl OnlineSession {
             self.kv_used[r.home] += self.dp_rate * r.context as f64;
         }
 
+        self.lost += 1;
         self.recoveries.push(outcome.total_s);
         self.events
             .push(EngineEvent::RecoveryCompleted { method, latency_s: outcome.total_s });
         self.events
             .push(EngineEvent::Reconfigured { epoch: self.recoveries.len() as u64, world: self.world });
         Ok(outcome.total_s)
+    }
+
+    /// Rejoin one previously failed GPU at this step boundary — the
+    /// simulator's side of [`ServingBackend::inject_rejoin`], mirroring
+    /// [`crate::engine::Engine::inject_rejoin`]: the returning GPU is
+    /// appended as the last rank, weights stream in on demand (costed by
+    /// [`plan_recovery`] on the expand delta), the KV re-spread is costed
+    /// as the joining rank's share of resident cache over NVLink, and the
+    /// clock pays the modeled stall. The router grows with the new rank
+    /// empty, so least-loaded admission rebalances onto it.
+    fn rejoin_rank(&mut self, method: RecoveryMethod) -> Result<f64> {
+        anyhow::ensure!(
+            self.lost > 0,
+            "inject_rejoin: no failed GPU to rejoin (world {}, none lost)",
+            self.world
+        );
+        let joined = self.world;
+        let (new_plan, survivor_map) = self.plan.expand();
+        let input = RecoveryInput {
+            spec: &self.spec,
+            ic: &self.ic,
+            old_plan: &self.plan,
+            new_plan: &new_plan,
+            survivor_map: &survivor_map,
+            failed_rank: usize::MAX, // nothing is lost on a rejoin
+            requests: &[],
+            backup: &self.backup,
+        };
+        let outcome = plan_recovery(method, &input);
+        // The cost model tracks KV as aggregate per-rank bytes, so the
+        // cyclic re-spread is costed as the joining rank's share of the
+        // resident cache, moved over NVLink.
+        let resident: f64 = self.kv_used.iter().sum();
+        let moved = (resident / (self.world + 1) as f64) as usize;
+        let kv_move_s = self.ic.parallel_transfer_time(TransferClass::NvLink, moved);
+        let total_s = outcome.total_s + kv_move_s;
+        self.clock += total_s; // the stall every in-flight request sees
+
+        // Reconfigure to the grown world.
+        self.world += 1;
+        self.lost -= 1;
+        self.plan = new_plan;
+        self.cost = StepCostModel::new(&self.plan, &self.spec, &self.ic);
+        let rates = self.cost.kv_rates();
+        self.tp_rate = rates.0;
+        self.dp_rate = rates.1;
+        self.kv_budget = self.cost.kv_budget();
+        self.router = self.router.expand(self.world);
+        // Recompute KV usage under the new rates; fresh capacity may also
+        // unstick a waiting line that could not fit the smaller world.
+        self.kv_used = vec![0.0; self.world];
+        for r in self.running.iter() {
+            for (ru, used) in self.kv_used.iter_mut().enumerate() {
+                *used += self.tp_rate[ru] * r.context as f64;
+            }
+            self.kv_used[r.home] += self.dp_rate * r.context as f64;
+        }
+        self.stalled = false;
+
+        self.recoveries.push(total_s);
+        self.events.push(EngineEvent::GpuRejoined { rank: joined, method });
+        self.events.push(EngineEvent::ReconfigCompleted {
+            epoch: self.recoveries.len() as u64,
+            world: self.world,
+            latency_s: total_s,
+        });
+        // Consumers that track the serving plan via `Reconfigured` (as the
+        // failure path trains them to) must see expansions too.
+        self.events.push(EngineEvent::Reconfigured {
+            epoch: self.recoveries.len() as u64,
+            world: self.world,
+        });
+        Ok(total_s)
     }
 }
 
@@ -630,6 +706,14 @@ impl ServingBackend for OnlineSession {
 
     fn inject_failure(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64> {
         self.fail_rank(rank, method)
+    }
+
+    fn inject_rejoin(&mut self, method: RecoveryMethod) -> Result<f64> {
+        self.rejoin_rank(method)
+    }
+
+    fn world(&self) -> usize {
+        self.world
     }
 
     fn now(&self) -> SimTime {
@@ -805,6 +889,42 @@ mod tests {
         assert_eq!(kept.output_tokens.len(), 16);
         assert!(killed.aborted);
         assert!(killed.output_tokens.len() < 16);
+    }
+
+    /// Rejoin is the inverse of failure: the world grows back, the new
+    /// rank's events surface, and rejoining without a failed GPU errors.
+    #[test]
+    fn session_rejoin_restores_world() {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b());
+        let mut session = sim.session();
+        assert!(session.inject_rejoin(RecoveryMethod::Full).is_err(), "no failed GPU yet");
+
+        let prompt = vec![0u32; 2048];
+        for i in 0..12 {
+            session.submit_with(&prompt, SubmitOptions::new(8).at(i as f64 * 0.01)).unwrap();
+        }
+        for _ in 0..3 {
+            session.step().unwrap();
+        }
+        session.inject_failure(2, RecoveryMethod::Full).unwrap();
+        assert_eq!(ServingBackend::world(&session), 7);
+        let lat = session.inject_rejoin(RecoveryMethod::Full).unwrap();
+        assert!(lat > 0.0, "rejoin pays a modeled stall");
+        assert_eq!(ServingBackend::world(&session), 8);
+        assert!(session.inject_rejoin(RecoveryMethod::Full).is_err(), "budget spent");
+
+        let events = session.step().unwrap();
+        assert!(events.iter().any(|e| matches!(e, EngineEvent::GpuRejoined { rank: 7, .. })));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, EngineEvent::ReconfigCompleted { world: 8, .. })));
+
+        let report = session.run_to_completion().unwrap();
+        assert_eq!(report.recoveries.len(), 2);
+        for r in &report.results {
+            assert_eq!(r.output_tokens.len(), 8, "request {} short after rejoin", r.id);
+        }
     }
 
     /// Zero generation budget is a caller bug on this backend too.

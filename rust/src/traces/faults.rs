@@ -1,0 +1,109 @@
+//! Named availability scenarios — the fault-timeline family the replay
+//! driver ([`crate::engine::replay()`]) opens up: a flaky GPU cycling in
+//! and out, rolling maintenance across a whole group, and a failure
+//! cascade followed by staggered rejoins. Each returns a [`FaultTimeline`]
+//! over stable physical GPU ids; replayability against a concrete group
+//! size is checked by [`FaultTimeline::validate`] (the replay driver runs
+//! it before anything fires).
+
+use crate::cluster::{FaultKind, FaultTimeline, TimelineEvent};
+use crate::SimTime;
+
+/// One flaky GPU: `gpu` fails at `first_fail`, rejoins `downtime` later,
+/// and repeats every `downtime + uptime` for `cycles` cycles.
+pub fn flaky_gpu(
+    gpu: usize,
+    cycles: usize,
+    first_fail: SimTime,
+    downtime: SimTime,
+    uptime: SimTime,
+) -> FaultTimeline {
+    assert!(downtime > 0.0 && uptime > 0.0 && cycles >= 1);
+    let mut events = Vec::with_capacity(cycles * 2);
+    let mut t = first_fail;
+    for _ in 0..cycles {
+        events.push(TimelineEvent { at: t, gpu, kind: FaultKind::Fail });
+        events.push(TimelineEvent { at: t + downtime, gpu, kind: FaultKind::Recover });
+        t += downtime + uptime;
+    }
+    FaultTimeline::new(events)
+}
+
+/// Rolling maintenance: each GPU of `world` is taken down for `downtime`
+/// and rejoined, one after another, with `gap` between consecutive
+/// take-downs starting at `start`. With `gap < downtime` the windows
+/// overlap (up to `⌈downtime/gap⌉` GPUs down at once), which is exactly
+/// the multi-failure regime the paper's §5 timeline exercises.
+pub fn rolling_maintenance(
+    world: usize,
+    start: SimTime,
+    downtime: SimTime,
+    gap: SimTime,
+) -> FaultTimeline {
+    assert!(world >= 2 && downtime > 0.0 && gap > 0.0);
+    let max_overlap = (downtime / gap).ceil() as usize;
+    assert!(
+        max_overlap < world,
+        "downtime/gap would overlap {max_overlap} windows and take the whole {world}-GPU group down"
+    );
+    let mut events = Vec::with_capacity(world * 2);
+    for g in 0..world {
+        let t = start + g as f64 * gap;
+        events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Fail });
+        events.push(TimelineEvent { at: t + downtime, gpu: g, kind: FaultKind::Recover });
+    }
+    FaultTimeline::new(events)
+}
+
+/// A failure cascade: GPUs `0..k` fail in quick succession (one every
+/// `stagger` starting at `at`), then rejoin in the same staggered order
+/// once each has been down for `downtime`. The cascade overlaps fully
+/// when `downtime > k × stagger`.
+pub fn cascade_then_heal(
+    k: usize,
+    at: SimTime,
+    stagger: SimTime,
+    downtime: SimTime,
+) -> FaultTimeline {
+    assert!(k >= 1 && stagger >= 0.0 && downtime > 0.0);
+    let mut events = Vec::with_capacity(k * 2);
+    for g in 0..k {
+        let t = at + g as f64 * stagger;
+        events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Fail });
+        events.push(TimelineEvent { at: t + downtime, gpu: g, kind: FaultKind::Recover });
+    }
+    FaultTimeline::new(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flaky_gpu_cycles_validate() {
+        let tl = flaky_gpu(3, 4, 1.0, 0.5, 2.0);
+        assert_eq!(tl.len(), 8);
+        tl.validate(8).unwrap();
+        assert_eq!(tl.max_concurrent_down(), 1);
+    }
+
+    #[test]
+    fn rolling_maintenance_overlaps_when_gap_is_short() {
+        let overlapped = rolling_maintenance(8, 0.0, 10.0, 4.0);
+        overlapped.validate(8).unwrap();
+        assert_eq!(overlapped.max_concurrent_down(), 3, "ceil(10/4) windows overlap");
+        let serial = rolling_maintenance(8, 0.0, 2.0, 5.0);
+        serial.validate(8).unwrap();
+        assert_eq!(serial.max_concurrent_down(), 1);
+    }
+
+    #[test]
+    fn cascade_overlaps_fully_then_heals() {
+        let tl = cascade_then_heal(3, 1.0, 0.1, 5.0);
+        tl.validate(8).unwrap();
+        assert_eq!(tl.max_concurrent_down(), 3);
+        // A TP4 group survives a 3-cascade; a TP3 group would not.
+        assert!(tl.validate(4).is_ok());
+        assert!(tl.validate(3).is_err());
+    }
+}

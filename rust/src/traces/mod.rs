@@ -6,13 +6,19 @@
 //! (Fig 5). Each generator here reproduces the *published statistics* of
 //! its dataset (length moments, arrival process, availability dynamics)
 //! with a seeded RNG, which is what the experiments actually consume.
+//!
+//! The fault-scenario generators ([`flaky_gpu`], [`rolling_maintenance`],
+//! [`cascade_then_heal`]) additionally express named availability
+//! scenarios as [`crate::cluster::FaultTimeline`]s for the replay driver.
 
 mod arrivals;
+mod faults;
 mod gcp;
 mod lengths;
 mod request;
 
 pub use arrivals::{poisson_arrivals, scale_arrivals};
+pub use faults::{cascade_then_heal, flaky_gpu, rolling_maintenance};
 pub use gcp::gcp_availability;
 pub use lengths::{mooncake_trace, openthoughts_trace, TraceStats};
 pub use request::TraceRequest;

@@ -8,10 +8,12 @@
 //! each test self-skips when the artifacts are missing so `cargo test`
 //! stays usable in artifact-less environments (e.g. bare CI runners).
 
+use failsafe::cluster::{FaultKind, FaultTimeline, TimelineEvent};
 use failsafe::config::EngineConfig;
 use failsafe::coordinator::RequestState;
 use failsafe::engine::{
-    drive, Engine, EngineEvent, FaultPlan, FaultTrigger, ServingBackend, SubmitOptions,
+    drive, replay, Engine, EngineEvent, FaultPlan, FaultTrigger, ReplayPace, ServingBackend,
+    SubmitOptions,
 };
 use failsafe::model::small_real;
 use failsafe::recovery::RecoveryMethod;
@@ -426,6 +428,148 @@ fn sequential_failures_remain_exact() {
     let report = engine.run_to_completion().unwrap();
     assert_eq!(report.outputs_owned(), expected, "diverged across two failures");
     assert_eq!(report.recoveries.len(), 2);
+}
+
+/// The PR 2 acceptance scenario: a fault-trace replay with **two
+/// overlapping failures and two rejoins**, requests in flight throughout,
+/// driven end-to-end through `ServingBackend::step()` by the replay
+/// driver — and the outputs are bit-exact versus a fault-free run.
+#[test]
+fn timeline_replay_with_overlapping_failures_and_rejoins_is_bit_exact() {
+    require_artifacts!();
+    let ps = prompts(4, 8, 40, 2024);
+    let max_new = 12;
+    let expected = serve(1, SystemConfig::standard(), &ps, max_new);
+
+    let mut engine = Engine::new(config(4, SystemConfig::failsafe())).unwrap();
+    for p in &ps {
+        engine.submit(p, max_new).unwrap();
+    }
+    // Token-paced (deterministic): fail gpu1 after 4 tokens, fail gpu3
+    // after 8 (two concurrently down), rejoin them after 16 and 24 — all
+    // mid-generation (4 × 12 = 48 tokens total).
+    let timeline = FaultTimeline::parse("4 fail 1\n8 fail 3\n16 rejoin 1\n24 rejoin 3\n").unwrap();
+    let pace = ReplayPace::Tokens { per_sec: 1.0 };
+    let out = replay(&mut engine, &timeline, RecoveryMethod::Full, pace).unwrap();
+
+    assert_eq!(out.applied.len(), 4);
+    assert!(out.skipped.is_empty());
+    assert_eq!(out.final_world, 4);
+    assert_eq!(engine.epoch(), 4, "each transition is one reconfiguration epoch");
+    assert_eq!(out.report.recoveries.len(), 4);
+    // gpu3 was rank 2 when it failed (gpu1's slot had compacted away);
+    // both rejoins appended at the then-current end.
+    assert_eq!(out.applied[1].rank, 2);
+    assert_eq!(out.applied[2].rank, 2, "first rejoin joins a world of 2 as rank 2");
+    assert_eq!(out.applied[3].rank, 3);
+    assert_eq!(
+        out.report.outputs_owned(),
+        expected,
+        "replay across overlapping failures + rejoins diverged"
+    );
+}
+
+/// `inject_rejoin` is the inverse of `inject_failure`: world and epoch
+/// move back up, the events surface on the next step, and rejoining a GPU
+/// that never failed is rejected.
+#[test]
+fn rejoin_restores_world_and_surfaces_events() {
+    require_artifacts!();
+    let ps = prompts(2, 6, 30, 31);
+    let max_new = 10;
+    let expected = serve(1, SystemConfig::standard(), &ps, max_new);
+
+    let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    assert!(
+        engine.inject_rejoin(RecoveryMethod::Full).is_err(),
+        "no failed GPU: rejoin must be rejected"
+    );
+    let ids: Vec<_> = ps.iter().map(|p| engine.submit(p, max_new).unwrap()).collect();
+    while ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 3) {
+        engine.step().unwrap();
+    }
+    engine.inject_failure(1, RecoveryMethod::Full).unwrap();
+    engine.step().unwrap(); // drain failure events
+    assert_eq!(engine.world(), 2);
+
+    let latency = engine.inject_rejoin(RecoveryMethod::Full).unwrap();
+    assert!(latency > 0.0 && latency < 10.0, "rejoin stream-in should be fast: {latency}");
+    assert_eq!(engine.world(), 3);
+    assert_eq!(engine.epoch(), 2);
+    assert!(engine.inject_rejoin(RecoveryMethod::Full).is_err(), "rejoin budget spent");
+
+    let events = engine.step().unwrap();
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, EngineEvent::GpuRejoined { rank: 2, .. })));
+    assert!(events
+        .iter()
+        .any(|e| matches!(e, EngineEvent::ReconfigCompleted { epoch: 2, world: 3, .. })));
+
+    let report = engine.run_to_completion().unwrap();
+    assert_eq!(report.outputs_owned(), expected, "diverged across fail + rejoin");
+    // KV is spread over all three ranks again after the re-spread.
+    let by = engine.kv_bytes_by_rank();
+    assert_eq!(by.len(), 3);
+    assert!(by.iter().all(|&b| b > 0), "rejoined rank holds KV again: {by:?}");
+}
+
+/// Rejoin **mid-recovery**: a Recompute repair is still re-prefilling the
+/// lost context when the GPU comes back — the expand happens at the same
+/// step boundary and the continuation stays exact.
+#[test]
+fn rejoin_mid_recompute_repair_is_exact() {
+    require_artifacts!();
+    let ps = prompts(2, 6, 30, 47);
+    let max_new = 8;
+    let expected = serve(1, SystemConfig::standard(), &ps, max_new);
+
+    let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+    let ids: Vec<_> = ps.iter().map(|p| engine.submit(p, max_new).unwrap()).collect();
+    while ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 3) {
+        engine.step().unwrap();
+    }
+    engine.inject_failure(2, RecoveryMethod::Recompute).unwrap();
+    // The repair re-prefill has NOT run yet — rejoin lands mid-recovery.
+    assert!(ids
+        .iter()
+        .any(|id| engine.request_state(*id) == Some(RequestState::Prefilling)));
+    engine.inject_rejoin(RecoveryMethod::Full).unwrap();
+    assert_eq!(engine.world(), 3);
+
+    let got = engine.run_to_completion().unwrap().outputs_owned();
+    assert_eq!(got, expected, "rejoin mid-repair diverged");
+}
+
+/// A 3-failure cascade (TP4 → TP1) followed by staggered rejoins back to
+/// TP4 — the paper's worst-case §5 concurrency (TP−1 failures) plus full
+/// healing, bit-exact end to end.
+#[test]
+fn three_failure_cascade_then_staggered_rejoins_is_exact() {
+    require_artifacts!();
+    let ps = prompts(3, 6, 30, 73);
+    let max_new = 9;
+    let expected = serve(1, SystemConfig::standard(), &ps, max_new);
+
+    let mut engine = Engine::new(config(4, SystemConfig::failsafe())).unwrap();
+    for p in &ps {
+        engine.submit(p, max_new).unwrap();
+    }
+    let timeline = FaultTimeline::new(vec![
+        TimelineEvent { at: 3.0, gpu: 0, kind: FaultKind::Fail },
+        TimelineEvent { at: 5.0, gpu: 1, kind: FaultKind::Fail },
+        TimelineEvent { at: 7.0, gpu: 2, kind: FaultKind::Fail },
+        TimelineEvent { at: 12.0, gpu: 0, kind: FaultKind::Recover },
+        TimelineEvent { at: 16.0, gpu: 1, kind: FaultKind::Recover },
+        TimelineEvent { at: 20.0, gpu: 2, kind: FaultKind::Recover },
+    ]);
+    assert_eq!(timeline.max_concurrent_down(), 3);
+    let pace = ReplayPace::Tokens { per_sec: 1.0 };
+    let out = replay(&mut engine, &timeline, RecoveryMethod::Full, pace).unwrap();
+    assert_eq!(out.applied.len(), 6);
+    assert_eq!(out.final_world, 4);
+    assert_eq!(engine.epoch(), 6);
+    assert_eq!(out.report.outputs_owned(), expected, "cascade + heal diverged");
 }
 
 /// Engine guards: oversized prompts, out-of-vocab tokens, and zero

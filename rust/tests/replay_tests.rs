@@ -1,0 +1,180 @@
+//! Availability-timeline replay over the simulator backend: overlapping
+//! failures, cascades, staggered rejoins, and the rejoin edge cases —
+//! all through the public `ServingBackend` surface, no AOT artifacts
+//! required. (The bit-exactness side of the same scenarios runs on the
+//! real engine in `engine_integration.rs`.)
+
+use failsafe::cluster::{FaultKind, FaultTimeline, TimelineEvent};
+use failsafe::engine::{replay, EngineEvent, ReplayPace, ServingBackend, SubmitOptions};
+use failsafe::model::llama3_70b;
+use failsafe::recovery::RecoveryMethod;
+use failsafe::simulator::{OnlineMode, OnlineSim, OnlineSession, SystemConfig};
+use failsafe::traces::{cascade_then_heal, flaky_gpu, rolling_maintenance};
+
+fn session(world: usize) -> OnlineSession {
+    OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, world)
+        .with_model(llama3_70b())
+        .session()
+}
+
+fn submit_wave(session: &mut OnlineSession, n: usize, budget: usize) {
+    let prompt = vec![0u32; 2048];
+    for i in 0..n {
+        session
+            .submit_with(&prompt, SubmitOptions::new(budget).at(i as f64 * 0.01))
+            .expect("submit");
+    }
+}
+
+/// The headline scenario: a 3-failure cascade (down to TP5) with requests
+/// in flight, healed by staggered rejoins — every request still finishes
+/// with its full budget and the world returns to 8.
+#[test]
+fn cascade_then_staggered_rejoins_completes_all_requests() {
+    let mut s = session(8);
+    submit_wave(&mut s, 24, 16);
+    let timeline = cascade_then_heal(3, 0.2, 0.05, 0.8);
+    assert_eq!(timeline.max_concurrent_down(), 3);
+
+    let out = replay(&mut s, &timeline, RecoveryMethod::Full, ReplayPace::Clock).unwrap();
+    assert_eq!(out.applied.len(), 6, "3 failures + 3 rejoins all applied");
+    assert!(out.skipped.is_empty());
+    assert_eq!(out.final_world, 8);
+    assert_eq!(out.report.recoveries.len(), 6);
+    assert_eq!(out.report.results.len(), 24);
+    for r in &out.report.results {
+        assert_eq!(r.output_tokens.len(), 16, "request {} short output", r.id);
+    }
+    // Every rejoin appended at the then-current end of the rank order.
+    let rejoins: Vec<_> = out
+        .applied
+        .iter()
+        .filter(|a| a.event.kind == FaultKind::Recover)
+        .collect();
+    assert_eq!(rejoins.len(), 3);
+    for a in &rejoins {
+        assert!(a.rank >= 5 && a.rank < 8, "rejoin rank {} out of range", a.rank);
+    }
+}
+
+/// A flaky GPU cycling down/up three times: the same physical GPU maps to
+/// different ranks across cycles and the session absorbs every cycle.
+#[test]
+fn flaky_gpu_cycles_through_rank_renumbering() {
+    let mut s = session(4);
+    submit_wave(&mut s, 12, 24);
+    let timeline = flaky_gpu(2, 3, 0.1, 0.3, 0.4);
+    let out = replay(&mut s, &timeline, RecoveryMethod::Full, ReplayPace::Clock).unwrap();
+    assert_eq!(out.applied.len(), 6);
+    assert_eq!(out.final_world, 4);
+    for r in &out.report.results {
+        assert_eq!(r.output_tokens.len(), 24);
+    }
+    // After the first failure the flaky GPU rejoins as the *last* rank
+    // (3), not its original rank 2 — stable gpu ids, renumbered ranks.
+    let first_rejoin = out
+        .applied
+        .iter()
+        .find(|a| a.event.kind == FaultKind::Recover)
+        .unwrap();
+    assert_eq!(first_rejoin.event.gpu, 2);
+    assert_eq!(first_rejoin.rank, 3);
+}
+
+/// Rolling maintenance across the whole group with overlapping windows:
+/// every GPU is taken down and rejoined exactly once.
+#[test]
+fn rolling_maintenance_over_the_whole_group() {
+    let mut s = session(8);
+    submit_wave(&mut s, 16, 16);
+    let timeline = rolling_maintenance(8, 0.1, 0.4, 0.2);
+    assert!(timeline.max_concurrent_down() >= 2, "windows must overlap");
+    let out = replay(&mut s, &timeline, RecoveryMethod::Full, ReplayPace::Clock).unwrap();
+    assert_eq!(out.applied.len(), 16);
+    assert_eq!(out.final_world, 8);
+    for r in &out.report.results {
+        assert_eq!(r.output_tokens.len(), 16);
+    }
+}
+
+/// Token pacing is deterministic: two identical replays fire at the same
+/// points and produce identical reports.
+#[test]
+fn token_paced_replay_is_deterministic() {
+    let timeline = cascade_then_heal(2, 20.0, 10.0, 60.0);
+    let run = || {
+        let mut s = session(8);
+        submit_wave(&mut s, 10, 12);
+        let pace = ReplayPace::Tokens { per_sec: 1.0 };
+        let out = replay(&mut s, &timeline, RecoveryMethod::Full, pace).unwrap();
+        (
+            out.applied.iter().map(|a| (a.event.gpu, a.rank)).collect::<Vec<_>>(),
+            out.tokens_emitted,
+            out.final_world,
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+/// Rejoin edge case: a GPU that never failed cannot rejoin, on a fresh
+/// session and again once the rejoin budget is spent.
+#[test]
+fn rejoin_without_a_failure_is_rejected() {
+    let mut s = session(4);
+    assert!(s.inject_rejoin(RecoveryMethod::Full).is_err());
+    submit_wave(&mut s, 4, 8);
+    s.step().unwrap();
+    s.inject_failure(1, RecoveryMethod::Full).unwrap();
+    assert_eq!(s.world(), 3);
+    s.inject_rejoin(RecoveryMethod::Full).unwrap();
+    assert_eq!(s.world(), 4);
+    assert!(s.inject_rejoin(RecoveryMethod::Full).is_err(), "budget spent");
+    // A timeline that rejoins an always-healthy GPU is rejected up front.
+    let bad = FaultTimeline::new(vec![TimelineEvent {
+        at: 0.5,
+        gpu: 0,
+        kind: FaultKind::Recover,
+    }]);
+    assert!(replay(&mut s, &bad, RecoveryMethod::Full, ReplayPace::Clock).is_err());
+}
+
+/// Rejoin mid-recovery: a second failure lands before any step runs, then
+/// a rejoin lands while the session is still absorbing both — i.e.
+/// fail-during-recovery and rejoin-during-recovery at one step boundary.
+#[test]
+fn rejoin_and_fail_stack_at_one_step_boundary() {
+    let mut s = session(8);
+    submit_wave(&mut s, 12, 12);
+    for _ in 0..3 {
+        s.step().unwrap();
+    }
+    s.inject_failure(2, RecoveryMethod::Full).unwrap();
+    s.inject_failure(0, RecoveryMethod::Full).unwrap(); // fail during recovery
+    s.inject_rejoin(RecoveryMethod::Full).unwrap(); // rejoin during recovery
+    assert_eq!(s.world(), 7);
+    let events = s.step().unwrap();
+    let fails = events.iter().filter(|e| matches!(e, EngineEvent::FailureInjected { .. })).count();
+    let rejoins = events.iter().filter(|e| matches!(e, EngineEvent::GpuRejoined { .. })).count();
+    assert_eq!((fails, rejoins), (2, 1), "all stacked events surface in order");
+    let report = s.run_to_completion().unwrap();
+    for r in &report.results {
+        assert_eq!(r.output_tokens.len(), 12);
+    }
+    assert_eq!(report.recoveries.len(), 3);
+}
+
+/// Timelines that drain after the session finishes still apply: the
+/// remaining events are time-warped so the final world is always the
+/// timeline's end state.
+#[test]
+fn late_events_apply_after_the_session_drains() {
+    let mut s = session(4);
+    submit_wave(&mut s, 4, 4); // tiny session, finishes in well under a second
+    let timeline = cascade_then_heal(2, 1e6, 1.0, 10.0); // far in the future
+    let out = replay(&mut s, &timeline, RecoveryMethod::Full, ReplayPace::Clock).unwrap();
+    assert_eq!(out.applied.len(), 4);
+    assert_eq!(out.final_world, 4);
+    for r in &out.report.results {
+        assert_eq!(r.output_tokens.len(), 4);
+    }
+}
