@@ -1,9 +1,16 @@
 //! Hot-path microbenchmarks (the §Perf targets in DESIGN.md):
 //! router decision, Algorithm 1 batch forming, recovery planning,
-//! cost-model step evaluation, and KV block allocation.
+//! cost-model step evaluation, KV block allocation, and the paged engine
+//! KV store's gather/append path at 70B/TP8 scale.
+//!
+//! Results are printed *and* written as machine-readable JSON to
+//! `BENCH_hotpath.json` at the repository root (override with the
+//! `BENCH_OUT` env var), so the perf trajectory is tracked across PRs.
+//! `FAILSAFE_BENCH_MS` shrinks the sampling budget for CI smoke runs.
 
-use failsafe::benchkit::{sink, Bench};
+use failsafe::benchkit::{sink, Bench, BenchLog};
 use failsafe::cluster::{GpuSpec, Interconnect};
+use failsafe::engine::KvStore;
 use failsafe::kvcache::{BackupStore, BlockAllocator};
 use failsafe::model::llama3_70b;
 use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
@@ -15,6 +22,7 @@ use failsafe::util::Rng;
 
 fn main() {
     let b = Bench::default();
+    let mut log = BenchLog::new();
     let m = llama3_70b();
     let spec = GpuSpec::h100();
     let ic = Interconnect::new(spec.clone());
@@ -27,7 +35,7 @@ fn main() {
             router.route(rng.range_f64(1.0, 10_000.0));
         }
         let mut rng = Rng::seed_from_u64(2);
-        b.run("router: least-loaded route (w=8, 10k booked)", || {
+        log.run(&b, "router: least-loaded route (w=8, 10k booked)", || {
             sink(router.route(rng.range_f64(1.0, 10_000.0)));
         });
     }
@@ -44,10 +52,10 @@ fn main() {
             })
             .collect();
         let carry = vec![0.0; 8];
-        b.run("scheduler: Algorithm 1 (64 reqs, N=8192, granule=16)", || {
+        log.run(&b, "scheduler: Algorithm 1 (64 reqs, N=8192, granule=16)", || {
             sink(adaptive_chunked_prefill(8192, &items, &carry, 8, 16));
         });
-        b.run("scheduler: Algorithm 1 exact (granule=1)", || {
+        log.run(&b, "scheduler: Algorithm 1 exact (granule=1)", || {
             sink(adaptive_chunked_prefill(8192, &items, &carry, 8, 1));
         });
     }
@@ -84,18 +92,68 @@ fn main() {
             requests: &reqs,
             backup: &backup,
         };
-        b.run("recovery: plan FailSafe-Full (70B, TP8->7, 100 reqs)", || {
+        log.run(&b, "recovery: plan FailSafe-Full (70B, TP8->7, 100 reqs)", || {
             sink(plan_recovery(RecoveryMethod::Full, &input).total_s);
         });
     }
 
-    // Cost model step evaluation (the simulator's inner loop).
+    // Cost model step evaluation (the simulator's inner loop) — the
+    // layer-profile precompute collapses the 80-layer straggler scan.
     {
-        let cost = StepCostModel::new(&ShardPlan::failsafe(&m, 7), &spec, &ic);
-        let batch: Vec<DecodeWork> =
+        let cost7 = StepCostModel::new(&ShardPlan::failsafe(&m, 7), &spec, &ic);
+        let batch7: Vec<DecodeWork> =
             (0..128).map(|i| DecodeWork { context: 8000 + i * 10, home: i % 7 }).collect();
-        b.run("costmodel: decode step (80 layers, 128 reqs, w=7)", || {
-            sink(cost.decode_step_time(&batch));
+        log.run(&b, "costmodel: decode step (80 layers, 128 reqs, w=7)", || {
+            sink(cost7.decode_step_time(&batch7));
+        });
+        let cost8 = StepCostModel::new(&ShardPlan::failsafe(&m, 8), &spec, &ic);
+        let batch8: Vec<DecodeWork> =
+            (0..128).map(|i| DecodeWork { context: 8000 + i * 10, home: i % 8 }).collect();
+        log.run(&b, "costmodel: decode step (80 layers, 128 reqs, w=8)", || {
+            sink(cost8.decode_step_time(&batch8));
+        });
+    }
+
+    // Paged engine KV store at 70B/TP8 scale: one layer's TP head group
+    // (1 KV head × head_dim 128 per rank at TP8), 8 requests × 2048
+    // cached tokens. Gather is the per-(layer, rank, request) unit of the
+    // decode forward; append+trim is the steady-state write path (the
+    // trim returns the block so the arena never grows).
+    {
+        let hd = m.head_dim; // 128
+        let ctx = 2048usize;
+        let reqs = 8u64;
+        let mut kv = KvStore::new(hd);
+        let pool = kv.pool_handle(0, &[0]);
+        let src: Vec<f32> = (0..ctx * hd).map(|i| (i % 1000) as f32 * 0.25).collect();
+        for req in 0..reqs {
+            kv.append_group(req, pool, 0, ctx, &src, &src, hd);
+        }
+        let mut out = vec![0.0f32; ctx * hd]; // c=2048, hb=1 (exact bucket)
+        log.run(&b, "kvstore: gather 2048-tok group (70B head, paged)", || {
+            kv.gather_into(1, pool, ctx, 1, false, &mut out);
+            sink(out[0]);
+        });
+        let row = vec![0.5f32; hd];
+        log.run(&b, "kvstore: append+trim 1 decode row x8 reqs (paged)", || {
+            for req in 0..reqs {
+                kv.append_group(req, pool, 0, 1, &row, &row, hd);
+            }
+            for req in 0..reqs {
+                kv.truncate(req, ctx);
+            }
+            sink(kv.tokens(1));
+        });
+        // Batched gather: what one decode step pays per (layer, rank) for
+        // the whole batch into the reused padded literal buffer.
+        let per = ctx * hd;
+        let mut kc = vec![0.0f32; reqs as usize * per];
+        log.run(&b, "kvstore: gather batch KV (8 reqs x 2048 tok, 1 group)", || {
+            for req in 0..reqs {
+                let i = req as usize;
+                kv.gather_into(req, pool, ctx, 1, false, &mut kc[i * per..(i + 1) * per]);
+            }
+            sink(kc[0]);
         });
     }
 
@@ -103,7 +161,7 @@ fn main() {
     {
         let mut alloc = BlockAllocator::new(65_536);
         let mut req = 0u64;
-        b.run("kvcache: alloc+free 16 blocks", || {
+        log.run(&b, "kvcache: alloc+free 16 blocks", || {
             req += 1;
             let blocks = alloc.alloc(req, 16).unwrap();
             sink(&blocks);
@@ -112,7 +170,19 @@ fn main() {
     }
 
     // Shard plan construction (per reconfiguration epoch).
-    b.run("sharding: build failsafe plan (70B, w=7)", || {
+    log.run(&b, "sharding: build failsafe plan (70B, w=7)", || {
         sink(ShardPlan::failsafe(&m, 7));
     });
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
+    });
+    match log.write_json("hotpath", std::path::Path::new(&out)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => {
+            // A silent write failure would let CI validate a stale file.
+            eprintln!("\nfailed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
 }

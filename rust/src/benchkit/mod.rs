@@ -57,7 +57,17 @@ pub struct Bench {
 }
 
 impl Default for Bench {
+    /// 700 ms budget / 150 ms warmup, overridable via the
+    /// `FAILSAFE_BENCH_MS` env var (budget in ms; warmup scales to ~1/5)
+    /// — how the CI smoke job runs the hotpath bench in a few seconds.
     fn default() -> Self {
+        if let Some(ms) = std::env::var("FAILSAFE_BENCH_MS").ok().and_then(|v| v.parse().ok()) {
+            let ms: u64 = ms;
+            return Bench {
+                budget: std::time::Duration::from_millis(ms.max(1)),
+                warmup: std::time::Duration::from_millis((ms / 5).max(1)),
+            };
+        }
         Bench {
             budget: std::time::Duration::from_millis(700),
             warmup: std::time::Duration::from_millis(150),
@@ -106,6 +116,61 @@ pub fn sink<T>(v: T) -> T {
     std::hint::black_box(v)
 }
 
+/// Collects [`Measurement`]s and writes them as machine-readable JSON so
+/// the perf trajectory is tracked across PRs (`BENCH_<name>.json` at the
+/// repo root — regenerate by running the bench, compare across commits).
+#[derive(Debug, Default)]
+pub struct BenchLog {
+    pub measurements: Vec<Measurement>,
+}
+
+impl BenchLog {
+    pub fn new() -> Self {
+        BenchLog::default()
+    }
+
+    /// Measure `f` through `bench` and record the result.
+    pub fn run<F: FnMut()>(&mut self, bench: &Bench, name: &str, f: F) -> &Measurement {
+        let m = bench.run(name, f);
+        self.measurements.push(m);
+        self.measurements.last().expect("just pushed")
+    }
+
+    /// Serialize to JSON: `{"bench": ..., "results": [{name, iters,
+    /// ns_per_iter, p50_ns, p99_ns, min_ns}, ...]}`. Hand-rolled — the
+    /// offline build has no serde.
+    pub fn to_json(&self, bench_name: &str) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench_name)));
+        s.push_str("  \"results\": [\n");
+        for (i, m) in self.measurements.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"ns_per_iter\": {:.1}, \
+                 \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"min_ns\": {:.1}}}{}\n",
+                json_escape(&m.name),
+                m.iters,
+                m.mean_ns,
+                m.p50_ns,
+                m.p99_ns,
+                m.min_ns,
+                if i + 1 < self.measurements.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path` (creating or overwriting it).
+    pub fn write_json(&self, bench_name: &str, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(bench_name))
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
 /// Property-test sweep: run `prop` over `cases` randomized cases derived
 /// from a seeded RNG; on failure, panic with the failing case seed so it
 /// can be replayed exactly.
@@ -152,6 +217,25 @@ mod tests {
         });
         assert!(m.iters > 10);
         assert!(m.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn bench_log_emits_json() {
+        let b = Bench {
+            budget: std::time::Duration::from_millis(10),
+            warmup: std::time::Duration::from_millis(2),
+        };
+        let mut log = BenchLog::new();
+        log.run(&b, "spin \"quoted\"", || {
+            sink((0..50).sum::<u64>());
+        });
+        let json = log.to_json("hotpath");
+        assert!(json.contains("\"bench\": \"hotpath\""));
+        assert!(json.contains("spin \\\"quoted\\\""));
+        assert!(json.contains("\"ns_per_iter\""));
+        // Parse-light sanity: balanced braces/brackets.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
     }
 
     #[test]

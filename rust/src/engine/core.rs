@@ -7,6 +7,21 @@
 //! in flight ([`Engine::inject_failure`] / [`Engine::inject_rejoin`]).
 //! [`Engine::run_to_completion`] is a thin convenience wrapper over
 //! `step()`. Everything executes real AOT artifacts through PJRT.
+//!
+//! # Hot-path discipline
+//!
+//! The decode inner loop is allocation-free at steady state on the
+//! engine's side of the PJRT boundary: bucket tables and KV pool handles
+//! are resolved once per epoch (construction / reconfiguration), the
+//! padded token/position/mask/KV/partial buffers live in a
+//! [`ForwardWorkspace`] reused across steps, KV moves through the paged
+//! [`KvStore`] as block-indexed `copy_from_slice`, and the scheduler's
+//! candidate lists reuse session scratch buffers. What still allocates
+//! per call is the PJRT literal layer itself (`literal_f32` /
+//! `to_vec_f32` marshal host buffers into and out of XLA) — that is the
+//! runtime boundary, not coordinator churn. `benches/hotpath.rs` tracks
+//! the KV gather/append and cost-model step times in
+//! `BENCH_hotpath.json`.
 
 use std::time::Instant;
 
@@ -19,16 +34,17 @@ use crate::kvcache::{BackupStore, KvPlacement};
 use crate::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use crate::router::DpRouter;
 use crate::runtime::{
-    literal_f32, literal_i32, literal_tensor, to_vec_f32, Manifest, RuntimeClient, WeightStore,
+    literal_f32, literal_i32, literal_tensor, to_vec_f32, HloVariant, Manifest, RuntimeClient,
+    WeightStore,
 };
 use crate::scheduler::{adaptive_chunked_prefill, form_decode_batch, DecodeItem, PrefillItem};
 use crate::sharding::ShardPlan;
-use crate::{LayerId, RankId, RequestId, SimTime};
+use crate::{RankId, RequestId, SimTime};
 
 use super::report::{self, ServeReport};
 use super::session::{Session, SubmitOptions};
 use super::shard::{pick_bucket, RankShard};
-use super::KvStore;
+use super::{KvStore, PoolId};
 
 /// Something observable that happened during one engine step (or at a
 /// step boundary: aborts, failure injections, and rejoins surface on the
@@ -174,6 +190,51 @@ pub fn drive<B: ServingBackend + ?Sized>(
     Ok((backend.report(), recovery))
 }
 
+/// One forward item: a span of new tokens (indices into the workspace
+/// token buffer) on top of `ctx` cached tokens, homed on `home`.
+#[derive(Debug, Clone, Copy)]
+struct FwdItem {
+    req: RequestId,
+    /// Offset of this item's new tokens in `ForwardWorkspace::tok_buf`.
+    tok_ofs: usize,
+    n_tokens: usize,
+    ctx: usize,
+    home: RankId,
+}
+
+/// Preallocated buffers for the bucketed forward path, reused across
+/// steps so the decode loop performs no per-layer/per-rank heap
+/// allocation at steady state (capacities stabilize at the largest
+/// bucket combination seen).
+#[derive(Debug, Default)]
+struct ForwardWorkspace {
+    /// The forward batch (set by `forward_decode` / `forward_chunk`).
+    items: Vec<FwdItem>,
+    /// Flat new-token storage backing `FwdItem::tok_ofs`.
+    tok_buf: Vec<u32>,
+    tok: Vec<i32>,
+    pos: Vec<i32>,
+    mask: Vec<f32>,
+    partial: Vec<f32>,
+    fpartial: Vec<f32>,
+    kc: Vec<f32>,
+    vc: Vec<f32>,
+    /// DP sub-batch scratch.
+    sub_idx: Vec<usize>,
+    sx: Vec<f32>,
+    spos: Vec<i32>,
+    smask: Vec<f32>,
+    skc: Vec<f32>,
+    svc: Vec<f32>,
+    /// Scheduling-order id buffer for `step()`.
+    sched: Vec<RequestId>,
+    /// `step_decode` batch-forming scratch.
+    decode_pool: Vec<DecodeItem>,
+    decode_inputs: Vec<(RequestId, u32)>,
+    /// `step_prefill` item scratch.
+    prefill_items: Vec<PrefillItem>,
+}
+
 /// The serving engine. See module docs.
 pub struct Engine {
     pub config: EngineConfig,
@@ -197,10 +258,21 @@ pub struct Engine {
     /// Events produced at step boundaries (aborts, failure injections),
     /// drained by the next `step()`.
     pending_events: Vec<EngineEvent>,
+    // --- per-construction constants (hoisted out of the step loop) ---
+    /// Prefill sequence buckets (attn, b=1, s>1), sorted.
+    s_buckets: Vec<usize>,
+    /// Decode batch buckets (attn, s=1), sorted.
+    b_buckets: Vec<usize>,
+    /// Cache-context buckets, sorted.
+    c_buckets: Vec<usize>,
+    // --- per-epoch constants (rebuilt on reconfiguration) ---
+    /// `tp_pools[layer][rank]` = KV pool handle of the rank's TP head
+    /// group (None where the rank owns no TP heads in that layer).
+    tp_pools: Vec<Vec<Option<PoolId>>>,
+    /// Per layer: pool handle of the DP (replicated) head group.
+    dp_pools: Vec<Option<PoolId>>,
+    ws: ForwardWorkspace,
 }
-
-/// One forward item: (request, new tokens, cached ctx, home rank).
-type FwdItem = (RequestId, Vec<u32>, usize, RankId);
 
 impl Engine {
     pub fn new(config: EngineConfig) -> Result<Engine> {
@@ -225,7 +297,30 @@ impl Engine {
         let lm_head = literal_tensor(store.get("lm_head")?)?;
         let kv = KvStore::new(manifest.model.head_dim);
         let router = DpRouter::new(config.system.router, config.world);
-        Ok(Engine {
+        let s_buckets: Vec<usize> = {
+            let mut v: Vec<usize> = manifest
+                .variants
+                .iter()
+                .filter(|v| v.kind == "attn" && v.b == 1 && v.s > 1)
+                .map(|v| v.s)
+                .collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let b_buckets: Vec<usize> = {
+            let mut v: Vec<usize> = manifest
+                .variants
+                .iter()
+                .filter(|v| v.kind == "attn" && v.s == 1)
+                .map(|v| v.b)
+                .collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let c_buckets = manifest.buckets("attn", |v| v.c);
+        let mut engine = Engine {
             config,
             client,
             manifest,
@@ -243,7 +338,15 @@ impl Engine {
             lost: 0,
             recoveries: Vec::new(),
             pending_events: Vec::new(),
-        })
+            s_buckets,
+            b_buckets,
+            c_buckets,
+            tp_pools: Vec::new(),
+            dp_pools: Vec::new(),
+            ws: ForwardWorkspace::default(),
+        };
+        engine.rebuild_kv_handles();
+        Ok(engine)
     }
 
     pub fn world(&self) -> usize {
@@ -294,7 +397,7 @@ impl Engine {
             opts.arrival
         );
         anyhow::ensure!(opts.deadline.unwrap_or(0.0).is_finite(), "deadline must be finite");
-        let max_ctx = self.manifest.buckets("attn", |v| v.c).last().copied().unwrap_or(0);
+        let max_ctx = self.c_buckets.last().copied().unwrap_or(0);
         anyhow::ensure!(
             prompt.len() + opts.max_new_tokens <= max_ctx + 1,
             "prompt {} + max_new {} exceeds compiled context {}",
@@ -353,21 +456,29 @@ impl Engine {
         let mut events = std::mem::take(&mut self.pending_events);
         let t0 = Instant::now();
         self.admit_due();
-        let prefilling = self.session.prefilling();
-        if !prefilling.is_empty() {
-            let n = self.step_prefill(&prefilling, &mut events)?;
-            self.session.prefill_tokens += n;
-            self.session.steps += 1;
-        } else {
-            let decoding = self.session.decoding();
-            if !decoding.is_empty() {
-                let n = self.step_decode(&decoding, &mut events)?;
-                self.session.decode_tokens += n;
+        let mut sched = std::mem::take(&mut self.ws.sched);
+        self.session.prefilling_into(&mut sched);
+        let outcome = if !sched.is_empty() {
+            self.step_prefill(&sched, &mut events).map(|n| {
+                self.session.prefill_tokens += n;
                 self.session.steps += 1;
-            } else if let Some(next) = self.session.next_arrival() {
-                self.session.clock = self.session.clock.max(next);
+            })
+        } else {
+            self.session.decoding_into(&mut sched);
+            if !sched.is_empty() {
+                self.step_decode(&sched, &mut events).map(|n| {
+                    self.session.decode_tokens += n;
+                    self.session.steps += 1;
+                })
+            } else {
+                if let Some(next) = self.session.next_arrival() {
+                    self.session.clock = self.session.clock.max(next);
+                }
+                Ok(())
             }
-        }
+        };
+        self.ws.sched = sched;
+        outcome?;
         self.session.clock += t0.elapsed().as_secs_f64();
         Ok(events)
     }
@@ -411,6 +522,32 @@ impl Engine {
                 // before its own arrival time.
                 self.session.rebase_timing(id);
             }
+        }
+    }
+
+    /// Re-resolve the per-(layer, rank) KV pool handles against the
+    /// current shards. Cold path: construction and reconfiguration only —
+    /// the step loop then uses the handles for O(1) pool access.
+    fn rebuild_kv_handles(&mut self) {
+        let Engine { kv, shards, manifest, tp_pools, dp_pools, .. } = self;
+        let n_layers = manifest.model.n_layers;
+        let world = shards.len();
+        tp_pools.clear();
+        dp_pools.clear();
+        for layer in 0..n_layers {
+            let mut row = Vec::with_capacity(world);
+            for shard in shards.iter() {
+                row.push(
+                    shard.tp_attn[layer].as_ref().map(|aw| kv.pool_handle(layer, &aw.heads)),
+                );
+            }
+            tp_pools.push(row);
+            dp_pools.push(
+                shards
+                    .iter()
+                    .find_map(|sh| sh.dp_attn[layer].as_ref())
+                    .map(|aw| kv.pool_handle(layer, &aw.heads)),
+            );
         }
     }
 
@@ -532,6 +669,12 @@ impl Engine {
             }
         }
 
+        // Re-bucket resident KV into the new epoch's head groups so the
+        // forward path stays on the fast block-indexed route, and refresh
+        // the pool handles the step loop gathers through.
+        self.kv.relayout(&self.plan);
+        self.rebuild_kv_handles();
+
         self.recoveries.push(outcome.total_s);
         self.pending_events
             .push(EngineEvent::RecoveryCompleted { method, latency_s: outcome.total_s });
@@ -626,6 +769,10 @@ impl Engine {
             .map(|(id, r)| (*id, r.home))
             .collect();
         self.kv.retag_requests(&self.placement, &homes);
+        // Host-side analogue of the costed re-spread: re-bucket resident
+        // KV into the expanded plan's head groups, refresh pool handles.
+        self.kv.relayout(&self.plan);
+        self.rebuild_kv_handles();
 
         self.recoveries.push(total_s);
         self.pending_events.push(EngineEvent::GpuRejoined { rank: joined, method });
@@ -646,25 +793,26 @@ impl Engine {
     /// One prefill pass over `ids` (already in scheduling order): form
     /// chunks with Algorithm 1, run them (b=1).
     fn step_prefill(&mut self, ids: &[RequestId], events: &mut Vec<EngineEvent>) -> Result<usize> {
-        let items: Vec<PrefillItem> = ids
-            .iter()
-            .map(|id| {
-                let r = &self.session.requests[id];
-                PrefillItem {
-                    request: *id,
-                    rank: r.home,
-                    context: r.context,
-                    remaining: r.prefill_remaining(),
-                }
-            })
-            .collect();
+        let mut items = std::mem::take(&mut self.ws.prefill_items);
+        items.clear();
+        items.extend(ids.iter().map(|id| {
+            let r = &self.session.requests[id];
+            PrefillItem {
+                request: *id,
+                rank: r.home,
+                context: r.context,
+                remaining: r.prefill_remaining(),
+            }
+        }));
         if items.is_empty() {
+            self.ws.prefill_items = items;
             return Ok(0);
         }
         let carry = vec![0.0; self.world()];
         let batch =
             adaptive_chunked_prefill(self.config.token_budget, &items, &carry, self.world(), 8);
-        let max_s = self.prefill_s_buckets().last().copied().unwrap_or(16);
+        self.ws.prefill_items = items;
+        let max_s = self.s_buckets.last().copied().unwrap_or(16);
 
         let mut done = 0usize;
         for chunk in &batch.chunks {
@@ -727,32 +875,30 @@ impl Engine {
     fn step_decode(&mut self, ids: &[RequestId], events: &mut Vec<EngineEvent>) -> Result<usize> {
         let mut produced = 0;
         let cap = self.config.max_batch.min(8).max(1);
-        let mut pool: Vec<DecodeItem> = ids
-            .iter()
-            .map(|id| {
-                let r = &self.session.requests[id];
-                DecodeItem { request: *id, rank: r.home, context: r.context }
-            })
-            .collect();
+        let vocab = self.manifest.model.vocab;
+        let mut pool = std::mem::take(&mut self.ws.decode_pool);
+        let mut inputs = std::mem::take(&mut self.ws.decode_inputs);
+        pool.clear();
+        pool.extend(ids.iter().map(|id| {
+            let r = &self.session.requests[id];
+            DecodeItem { request: *id, rank: r.home, context: r.context }
+        }));
         while !pool.is_empty() {
             let batch = form_decode_batch(&pool, cap, self.world());
             pool.drain(..batch.len());
-            let inputs: Vec<(RequestId, u32)> = batch
-                .items
-                .iter()
-                .map(|it| {
-                    let r = &self.session.requests[&it.request];
-                    let t = r
-                        .output_tokens
-                        .last()
-                        .copied()
-                        .unwrap_or_else(|| *r.input_tokens.last().expect("nonempty prompt"));
-                    (it.request, t)
-                })
-                .collect();
+            inputs.clear();
+            inputs.extend(batch.items.iter().map(|it| {
+                let r = &self.session.requests[&it.request];
+                let t = r
+                    .output_tokens
+                    .last()
+                    .copied()
+                    .unwrap_or_else(|| *r.input_tokens.last().expect("nonempty prompt"));
+                (it.request, t)
+            }));
             let logits = self.forward_decode(&inputs)?;
             for (i, &(id, _)) in inputs.iter().enumerate() {
-                let tok = argmax(&logits[i]);
+                let tok = argmax(&logits[i * vocab..(i + 1) * vocab]);
                 let (index, finished) = {
                     let r = self.session.requests.get_mut(&id).unwrap();
                     r.on_decoded(tok);
@@ -767,124 +913,173 @@ impl Engine {
                 self.kv.backup_request(id);
             }
         }
+        self.ws.decode_pool = pool;
+        self.ws.decode_inputs = inputs;
         Ok(produced)
     }
 
     // ---------------------------------------------------------- forward --
 
-    fn prefill_s_buckets(&self) -> Vec<usize> {
-        self.manifest
-            .variants
-            .iter()
-            .filter(|v| v.kind == "attn" && v.b == 1 && v.s > 1)
-            .map(|v| v.s)
-            .collect::<std::collections::BTreeSet<_>>()
-            .into_iter()
-            .collect()
-    }
-
-    fn decode_b_buckets(&self) -> Vec<usize> {
-        self.manifest
-            .variants
-            .iter()
-            .filter(|v| v.kind == "attn" && v.s == 1)
-            .map(|v| v.b)
-            .collect::<std::collections::BTreeSet<_>>()
-            .into_iter()
-            .collect()
-    }
-
     /// Prefill one chunk of `req` (b=1); returns last-position logits.
     fn forward_chunk(&mut self, req: RequestId, tokens: &[u32], ctx: usize) -> Result<Vec<f32>> {
         let s_real = tokens.len();
-        let s = pick_bucket(&self.prefill_s_buckets(), s_real)
+        let s = pick_bucket(&self.s_buckets, s_real)
             .with_context(|| format!("no s bucket ≥ {s_real}"))?;
-        let c = pick_bucket(&self.manifest.buckets("attn", |v| v.c), ctx)
+        let c = pick_bucket(&self.c_buckets, ctx)
             .with_context(|| format!("no c bucket ≥ {ctx}"))?;
         let home = self.session.requests[&req].home;
-        let items = vec![(req, tokens.to_vec(), ctx, home)];
-        let logits = self.forward_batch(&items, 1, s, c)?;
+        self.ws.items.clear();
+        self.ws.tok_buf.clear();
+        self.ws.tok_buf.extend_from_slice(tokens);
+        self.ws.items.push(FwdItem { req, tok_ofs: 0, n_tokens: s_real, ctx, home });
+        let logits = self.forward_batch(1, s, c)?;
         let v = self.manifest.model.vocab;
         Ok(logits[(s_real - 1) * v..s_real * v].to_vec())
     }
 
-    /// One decode token for each (req, last_token); returns per-request
-    /// logits.
-    fn forward_decode(&mut self, reqs: &[(RequestId, u32)]) -> Result<Vec<Vec<f32>>> {
-        let b = pick_bucket(&self.decode_b_buckets(), reqs.len())
+    /// One decode token for each (req, last_token); returns logits
+    /// `[len, vocab]` flattened (callers slice per request).
+    fn forward_decode(&mut self, reqs: &[(RequestId, u32)]) -> Result<Vec<f32>> {
+        let b = pick_bucket(&self.b_buckets, reqs.len())
             .with_context(|| format!("no b bucket ≥ {}", reqs.len()))?;
-        let max_ctx = reqs.iter().map(|&(id, _)| self.kv.tokens(id)).max().unwrap_or(0);
-        let c = pick_bucket(&self.manifest.buckets("attn", |v| v.c), max_ctx)
+        let mut max_ctx = 0usize;
+        {
+            let Engine { ws, kv, session, .. } = self;
+            ws.items.clear();
+            ws.tok_buf.clear();
+            for &(id, tok) in reqs {
+                let ctx = kv.tokens(id); // O(1): indexed, looked up once per request
+                max_ctx = max_ctx.max(ctx);
+                let tok_ofs = ws.tok_buf.len();
+                ws.tok_buf.push(tok);
+                ws.items.push(FwdItem {
+                    req: id,
+                    tok_ofs,
+                    n_tokens: 1,
+                    ctx,
+                    home: session.requests[&id].home,
+                });
+            }
+        }
+        let c = pick_bucket(&self.c_buckets, max_ctx)
             .with_context(|| format!("no c bucket ≥ ctx {max_ctx}"))?;
-        let items: Vec<FwdItem> = reqs
-            .iter()
-            .map(|&(id, tok)| (id, vec![tok], self.kv.tokens(id), self.session.requests[&id].home))
-            .collect();
-        let logits = self.forward_batch(&items, b, 1, c)?;
-        let v = self.manifest.model.vocab;
-        Ok((0..reqs.len()).map(|i| logits[i * v..i * v + v].to_vec()).collect())
+        self.forward_batch(b, 1, c)
     }
 
-    /// The generic bucketed forward. `items` padded to `b`×`s` with cache
-    /// bucket `c`. Returns logits `[b, s, vocab]` flattened.
-    fn forward_batch(&mut self, items: &[FwdItem], b: usize, s: usize, c: usize) -> Result<Vec<f32>> {
-        let mm = self.manifest.model.clone();
+    /// The generic bucketed forward over `ws.items`, padded to `b`×`s`
+    /// with cache bucket `c`. Returns logits `[b, s, vocab]` flattened.
+    fn forward_batch(&mut self, b: usize, s: usize, c: usize) -> Result<Vec<f32>> {
+        let Engine {
+            manifest,
+            client,
+            shards,
+            kv,
+            plan,
+            ws,
+            emb,
+            final_norm,
+            lm_head,
+            tp_pools,
+            dp_pools,
+            b_buckets,
+            ..
+        } = self;
+        let manifest: &Manifest = manifest;
+        let ForwardWorkspace {
+            items,
+            tok_buf,
+            tok,
+            pos,
+            mask,
+            partial,
+            fpartial,
+            kc,
+            vc,
+            sub_idx,
+            sx,
+            spos,
+            smask,
+            skc,
+            svc,
+            ..
+        } = ws;
+        let items: &[FwdItem] = items;
+        let mm = &manifest.model;
         let (dm, hd, vocab) = (mm.d_model, mm.head_dim, mm.vocab);
         let b_real = items.len();
         anyhow::ensure!(b_real <= b && b_real > 0);
+        let world = shards.len();
 
-        // Tokens + positions, padded.
-        let mut tok = vec![0i32; b * s];
-        let mut pos = vec![0i32; b * s];
-        for (i, (_, tokens, ctx, _)) in items.iter().enumerate() {
-            for (j, &t) in tokens.iter().enumerate() {
-                tok[i * s + j] = t as i32;
-                pos[i * s + j] = (ctx + j) as i32;
+        // Tokens + positions, padded — workspace reuse, fully rewritten.
+        tok.clear();
+        tok.resize(b * s, 0);
+        pos.clear();
+        pos.resize(b * s, 0);
+        for (i, it) in items.iter().enumerate() {
+            for j in 0..it.n_tokens {
+                tok[i * s + j] = tok_buf[it.tok_ofs + j] as i32;
+                pos[i * s + j] = (it.ctx + j) as i32;
             }
         }
 
         // x = embed(tokens, emb)
-        let emb_v = self
-            .manifest
+        let emb_v = manifest
             .simple_variant("embed", b, s)
-            .with_context(|| format!("no embed variant b{b} s{s}"))?
-            .clone();
-        let tok_l = literal_i32(&tok, &[b as i64, s as i64])?;
-        let outs = self.client.run(&emb_v, &[&tok_l, &self.emb])?;
+            .with_context(|| format!("no embed variant b{b} s{s}"))?;
+        let tok_l = literal_i32(tok, &[b as i64, s as i64])?;
+        let outs = client.run(emb_v, &[&tok_l, &*emb])?;
         let mut x = to_vec_f32(&outs[0])?;
         debug_assert_eq!(x.len(), b * s * dm);
 
-        let mask = build_mask(items, b, s, c);
+        build_mask_into(mask, items, None, b, s, c);
         let mask_dims = [b as i64, 1, s as i64, (c + s) as i64];
         // The mask and positions are invariant across layers and ranks —
         // build the literals once per forward (see EXPERIMENTS.md §Perf).
-        let mask_l = literal_f32(&mask, &mask_dims)?;
-        let pos_l = literal_i32(&pos, &[b as i64, s as i64])?;
+        let mask_l = literal_f32(mask, &mask_dims)?;
+        let pos_l = literal_i32(pos, &[b as i64, s as i64])?;
+
+        // Variant lookups are loop-invariant per (bucket combo) — resolve
+        // once per forward instead of per layer × rank. FFN column
+        // buckets are layer-invariant, so one variant per rank suffices.
+        let mut attn_cache: Vec<((usize, usize), &HloVariant)> = Vec::new();
+        let mut ffn_variants: Vec<&HloVariant> = Vec::with_capacity(world);
+        for shard in shards.iter() {
+            let cb = shard.ffn[0].col_bucket;
+            ffn_variants.push(
+                manifest
+                    .ffn_variant(b, s, cb)
+                    .with_context(|| format!("no ffn variant b{b} s{s} f{cb}"))?,
+            );
+        }
+        let has_dp = plan.heads.dp_heads_per_layer() > 0;
 
         for layer in 0..mm.n_layers {
             let x_l = literal_f32(&x, &[b as i64, s as i64, dm as i64])?;
-            let mut partial = vec![0.0f32; x.len()];
+            partial.clear();
+            partial.resize(x.len(), 0.0);
 
             // --- TP attention: every rank, full batch.
-            for rank in 0..self.world() {
-                let (heads, hb) = match self.shards[rank].tp_attn[layer].as_ref() {
-                    Some(aw) => (aw.heads.clone(), aw.h_bucket),
-                    None => continue,
-                };
-                let variant = self
-                    .manifest
-                    .attn_variant(b, s, c, hb)
-                    .with_context(|| format!("no attn variant b{b} s{s} c{c} h{hb}"))?
-                    .clone();
-                let (kc, vc) = self.gather_batch_kv(items, layer, b, c, &heads, hb);
-                let kc_l = literal_f32(&kc, &[b as i64, c as i64, hb as i64, hd as i64])?;
-                let vc_l = literal_f32(&vc, &[b as i64, c as i64, hb as i64, hd as i64])?;
-                let aw = self.shards[rank].tp_attn[layer].as_ref().unwrap();
-                let outs = self.client.run(
-                    &variant,
+            for rank in 0..world {
+                let Some(aw) = shards[rank].tp_attn[layer].as_ref() else { continue };
+                let hb = aw.h_bucket;
+                let variant = attn_variant_cached(manifest, &mut attn_cache, b, s, c, hb)?;
+                let pool = tp_pools[layer][rank].expect("pool handle exists for shard group");
+                let per = c * hb * hd;
+                fit_buf(kc, b * per);
+                fit_buf(vc, b * per);
+                for (i, it) in items.iter().enumerate() {
+                    kv.gather_into(it.req, pool, c, hb, false, &mut kc[i * per..(i + 1) * per]);
+                    kv.gather_into(it.req, pool, c, hb, true, &mut vc[i * per..(i + 1) * per]);
+                }
+                kc[b_real * per..].fill(0.0);
+                vc[b_real * per..].fill(0.0);
+                let kc_l = literal_f32(kc, &[b as i64, c as i64, hb as i64, hd as i64])?;
+                let vc_l = literal_f32(vc, &[b as i64, c as i64, hb as i64, hd as i64])?;
+                let outs = client.run(
+                    variant,
                     &[
                         &x_l,
-                        &self.shards[rank].attn_norm[layer],
+                        &shards[rank].attn_norm[layer],
                         &aw.wq,
                         &aw.wk,
                         &aw.wv,
@@ -895,56 +1090,63 @@ impl Engine {
                         &pos_l,
                     ],
                 )?;
-                add_into(&mut partial, &to_vec_f32(&outs[0])?);
-                self.append_new_kv(&outs[1], &outs[2], items, layer, b, s, &heads, hb, rank)?;
+                add_into(partial, &to_vec_f32(&outs[0])?);
+                let k_new = to_vec_f32(&outs[1])?;
+                let v_new = to_vec_f32(&outs[2])?;
+                debug_assert_eq!(k_new.len(), b * s * hb * hd);
+                append_new_kv(kv, pool, &k_new, &v_new, items, None, s, hb, hd, rank);
             }
 
             // --- DP attention: each home rank over its sub-batch.
-            if self.plan.heads.dp_heads_per_layer() > 0 {
-                for rank in 0..self.world() {
-                    let sub_idx: Vec<usize> =
-                        (0..b_real).filter(|&i| items[i].3 == rank).collect();
+            if has_dp {
+                for rank in 0..world {
+                    sub_idx.clear();
+                    sub_idx.extend((0..b_real).filter(|&i| items[i].home == rank));
                     if sub_idx.is_empty() {
                         continue;
                     }
-                    let (heads, hb) = match self.shards[rank].dp_attn[layer].as_ref() {
-                        Some(aw) => (aw.heads.clone(), aw.h_bucket),
-                        None => continue,
-                    };
-                    let sub_items: Vec<FwdItem> =
-                        sub_idx.iter().map(|&i| items[i].clone()).collect();
+                    let Some(aw) = shards[rank].dp_attn[layer].as_ref() else { continue };
+                    let hb = aw.h_bucket;
+                    let Some(pool) = dp_pools[layer] else { continue };
                     let sb = if s == 1 {
-                        pick_bucket(&self.decode_b_buckets(), sub_items.len())
+                        pick_bucket(b_buckets, sub_idx.len())
                             .context("no dp sub-batch bucket")?
                     } else {
                         1 // prefill calls are b=1, so the sub-batch is that item
                     };
-                    let variant = self
-                        .manifest
-                        .attn_variant(sb, s, c, hb)
-                        .with_context(|| format!("no attn variant b{sb} s{s} c{c} h{hb}"))?
-                        .clone();
-                    let mut sx = vec![0.0f32; sb * s * dm];
-                    let mut spos = vec![0i32; sb * s];
+                    let variant = attn_variant_cached(manifest, &mut attn_cache, sb, s, c, hb)?;
+                    sx.clear();
+                    sx.resize(sb * s * dm, 0.0);
+                    spos.clear();
+                    spos.resize(sb * s, 0);
                     for (si, &i) in sub_idx.iter().enumerate() {
                         sx[si * s * dm..(si + 1) * s * dm]
                             .copy_from_slice(&x[i * s * dm..(i + 1) * s * dm]);
                         spos[si * s..(si + 1) * s].copy_from_slice(&pos[i * s..(i + 1) * s]);
                     }
-                    let smask = build_mask(&sub_items, sb, s, c);
-                    let (kc, vc) = self.gather_batch_kv(&sub_items, layer, sb, c, &heads, hb);
-                    let sx_l = literal_f32(&sx, &[sb as i64, s as i64, dm as i64])?;
-                    let kc_l = literal_f32(&kc, &[sb as i64, c as i64, hb as i64, hd as i64])?;
-                    let vc_l = literal_f32(&vc, &[sb as i64, c as i64, hb as i64, hd as i64])?;
+                    build_mask_into(smask, items, Some(sub_idx.as_slice()), sb, s, c);
+                    let per = c * hb * hd;
+                    fit_buf(skc, sb * per);
+                    fit_buf(svc, sb * per);
+                    for (si, &i) in sub_idx.iter().enumerate() {
+                        let it = &items[i];
+                        let span = si * per..(si + 1) * per;
+                        kv.gather_into(it.req, pool, c, hb, false, &mut skc[span.clone()]);
+                        kv.gather_into(it.req, pool, c, hb, true, &mut svc[span]);
+                    }
+                    skc[sub_idx.len() * per..].fill(0.0);
+                    svc[sub_idx.len() * per..].fill(0.0);
+                    let sx_l = literal_f32(sx, &[sb as i64, s as i64, dm as i64])?;
+                    let kc_l = literal_f32(skc, &[sb as i64, c as i64, hb as i64, hd as i64])?;
+                    let vc_l = literal_f32(svc, &[sb as i64, c as i64, hb as i64, hd as i64])?;
                     let smask_l =
-                        literal_f32(&smask, &[sb as i64, 1, s as i64, (c + s) as i64])?;
-                    let spos_l = literal_i32(&spos, &[sb as i64, s as i64])?;
-                    let aw = self.shards[rank].dp_attn[layer].as_ref().unwrap();
-                    let outs = self.client.run(
-                        &variant,
+                        literal_f32(smask, &[sb as i64, 1, s as i64, (c + s) as i64])?;
+                    let spos_l = literal_i32(spos, &[sb as i64, s as i64])?;
+                    let outs = client.run(
+                        variant,
                         &[
                             &sx_l,
-                            &self.shards[rank].attn_norm[layer],
+                            &shards[rank].attn_norm[layer],
                             &aw.wq,
                             &aw.wk,
                             &aw.wv,
@@ -961,107 +1163,120 @@ impl Engine {
                             partial[i * s * dm + j] += sub_out[si * s * dm + j];
                         }
                     }
-                    self.append_new_kv(&outs[1], &outs[2], &sub_items, layer, sb, s, &heads, hb, rank)?;
+                    let k_new = to_vec_f32(&outs[1])?;
+                    let v_new = to_vec_f32(&outs[2])?;
+                    append_new_kv(
+                        kv,
+                        pool,
+                        &k_new,
+                        &v_new,
+                        items,
+                        Some(sub_idx.as_slice()),
+                        s,
+                        hb,
+                        hd,
+                        rank,
+                    );
                 }
             }
 
             // Combine (the "all-reduce") + residual.
-            add_into(&mut x, &partial);
+            add_into(&mut x, partial);
 
             // --- FFN: every rank's column slice.
             let x_l = literal_f32(&x, &[b as i64, s as i64, dm as i64])?;
-            let mut fpartial = vec![0.0f32; x.len()];
-            for rank in 0..self.world() {
-                let col_bucket = self.shards[rank].ffn[layer].col_bucket;
-                let variant = self
-                    .manifest
-                    .ffn_variant(b, s, col_bucket)
-                    .with_context(|| format!("no ffn variant b{b} s{s} f{col_bucket}"))?
-                    .clone();
-                let fw = &self.shards[rank].ffn[layer];
-                let outs = self.client.run(
-                    &variant,
-                    &[
-                        &x_l,
-                        &self.shards[rank].ffn_norm[layer],
-                        &fw.gate,
-                        &fw.up,
-                        &fw.down,
-                    ],
+            fpartial.clear();
+            fpartial.resize(x.len(), 0.0);
+            for rank in 0..world {
+                let fw = &shards[rank].ffn[layer];
+                let outs = client.run(
+                    ffn_variants[rank],
+                    &[&x_l, &shards[rank].ffn_norm[layer], &fw.gate, &fw.up, &fw.down],
                 )?;
-                add_into(&mut fpartial, &to_vec_f32(&outs[0])?);
+                add_into(fpartial, &to_vec_f32(&outs[0])?);
             }
-            add_into(&mut x, &fpartial);
+            add_into(&mut x, fpartial);
         }
 
         // LM head (rank 0 runs it; replicated weights).
-        let head_v = self
-            .manifest
+        let head_v = manifest
             .simple_variant("head", b, s)
-            .with_context(|| format!("no head variant b{b} s{s}"))?
-            .clone();
+            .with_context(|| format!("no head variant b{b} s{s}"))?;
         let x_l = literal_f32(&x, &[b as i64, s as i64, dm as i64])?;
-        let outs = self.client.run(&head_v, &[&x_l, &self.final_norm, &self.lm_head])?;
+        let outs = client.run(head_v, &[&x_l, &*final_norm, &*lm_head])?;
         let logits = to_vec_f32(&outs[0])?;
         debug_assert_eq!(logits.len(), b * s * vocab);
         Ok(logits)
     }
+}
 
-    /// Gather padded K and V caches for a batch at `layer`.
-    fn gather_batch_kv(
-        &self,
-        items: &[FwdItem],
-        layer: LayerId,
-        b: usize,
-        c: usize,
-        heads: &[usize],
-        hb: usize,
-    ) -> (Vec<f32>, Vec<f32>) {
-        let hd = self.manifest.model.head_dim;
-        let per = c * hb * hd;
-        let mut kc = vec![0.0f32; b * per];
-        let mut vc = vec![0.0f32; b * per];
-        for (i, (req, _, _, _)) in items.iter().enumerate() {
-            let k = self.kv.gather(*req, layer, heads, c, hb, false);
-            let v = self.kv.gather(*req, layer, heads, c, hb, true);
-            kc[i * per..(i + 1) * per].copy_from_slice(&k);
-            vc[i * per..(i + 1) * per].copy_from_slice(&v);
-        }
-        (kc, vc)
+/// Resolve the attn variant for a bucket combo through a per-forward
+/// cache (variant search is loop-invariant across layers and ranks with
+/// the same head bucket).
+fn attn_variant_cached<'m>(
+    manifest: &'m Manifest,
+    cache: &mut Vec<((usize, usize), &'m HloVariant)>,
+    b: usize,
+    s: usize,
+    c: usize,
+    hb: usize,
+) -> Result<&'m HloVariant> {
+    if let Some(&(_, v)) = cache.iter().find(|&&((cb, ch), _)| cb == b && ch == hb) {
+        return Ok(v);
     }
+    let v = manifest
+        .attn_variant(b, s, c, hb)
+        .with_context(|| format!("no attn variant b{b} s{s} c{c} h{hb}"))?;
+    cache.push(((b, hb), v));
+    Ok(v)
+}
 
-    /// Append freshly produced K/V (`[b, s, hb, hd]`) for real items.
-    #[allow(clippy::too_many_arguments)]
-    fn append_new_kv(
-        &mut self,
-        k_new: &xla::Literal,
-        v_new: &xla::Literal,
-        items: &[FwdItem],
-        layer: LayerId,
-        b: usize,
-        s: usize,
-        heads: &[usize],
-        hb: usize,
-        rank: RankId,
-    ) -> Result<()> {
-        let hd = self.manifest.model.head_dim;
-        let k = to_vec_f32(k_new)?;
-        let v = to_vec_f32(v_new)?;
-        debug_assert_eq!(k.len(), b * s * hb * hd);
-        for (i, (req, tokens, _, _)) in items.iter().enumerate() {
-            let real = tokens.len();
-            for (hi, &h) in heads.iter().enumerate() {
-                let mut ks = Vec::with_capacity(real * hd);
-                let mut vs = Vec::with_capacity(real * hd);
-                for t in 0..real {
-                    let off = ((i * s + t) * hb + hi) * hd;
-                    ks.extend_from_slice(&k[off..off + hd]);
-                    vs.extend_from_slice(&v[off..off + hd]);
-                }
-                self.kv.append(*req, layer, h, rank, &ks, &vs);
+/// Resize `buf` to `len` without re-zeroing retained capacity — callers
+/// overwrite every element they read (gather_into zero-fills its region,
+/// padded tails are filled explicitly).
+fn fit_buf(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+}
+
+/// Append freshly produced K/V (`[slots, s, hb, hd]`) for real items:
+/// rows are copied straight from the output literal's buffer into the
+/// paged pool (strided source, no per-head temporaries). With `sub`,
+/// slot `si` holds item `sub[si]`; otherwise slot `i` holds item `i`.
+#[allow(clippy::too_many_arguments)]
+fn append_new_kv(
+    kv: &mut KvStore,
+    pool: PoolId,
+    k: &[f32],
+    v: &[f32],
+    items: &[FwdItem],
+    sub: Option<&[usize]>,
+    s: usize,
+    hb: usize,
+    hd: usize,
+    rank: RankId,
+) {
+    let src_stride = hb * hd;
+    let mut push = |slot: usize, it: &FwdItem| {
+        if it.n_tokens == 0 {
+            return;
+        }
+        let base = slot * s * src_stride;
+        kv.append_group(it.req, pool, rank, it.n_tokens, &k[base..], &v[base..], src_stride);
+    };
+    match sub {
+        None => {
+            for (i, it) in items.iter().enumerate() {
+                push(i, it);
             }
         }
-        Ok(())
+        Some(idx) => {
+            for (si, &i) in idx.iter().enumerate() {
+                push(si, &items[i]);
+            }
+        }
     }
 }
 
@@ -1126,15 +1341,27 @@ fn add_into(dst: &mut [f32], src: &[f32]) {
     }
 }
 
-/// Additive mask `[b, 1, s, c+s]` for a padded batch.
-fn build_mask(items: &[FwdItem], b: usize, s: usize, c: usize) -> Vec<f32> {
+/// Additive mask `[slots, 1, s, c+s]` for a padded batch, written into
+/// the reused workspace buffer. With `sub`, slot `si` masks item
+/// `sub[si]`; otherwise slot `i` masks item `i`.
+fn build_mask_into(
+    m: &mut Vec<f32>,
+    items: &[FwdItem],
+    sub: Option<&[usize]>,
+    slots: usize,
+    s: usize,
+    c: usize,
+) {
     let w = c + s;
-    let mut m = vec![-1e9f32; b * s * w];
-    for (i, (_, tokens, ctx, _)) in items.iter().enumerate() {
-        let real = tokens.len();
+    m.clear();
+    m.resize(slots * s * w, -1e9);
+    let n_real = sub.map(|x| x.len()).unwrap_or(items.len());
+    for slot in 0..n_real {
+        let it = &items[sub.map(|x| x[slot]).unwrap_or(slot)];
+        let real = it.n_tokens;
         for q in 0..real {
-            let row = (i * s + q) * w;
-            for t in 0..(*ctx).min(c) {
+            let row = (slot * s + q) * w;
+            for t in 0..it.ctx.min(c) {
                 m[row + t] = 0.0; // cached positions
             }
             for t in 0..=q {
@@ -1144,13 +1371,12 @@ fn build_mask(items: &[FwdItem], b: usize, s: usize, c: usize) -> Vec<f32> {
         // Padded query rows: self only (keeps softmax well-conditioned;
         // outputs and KV of padded rows are discarded).
         for q in real..s {
-            m[(i * s + q) * w + c + q] = 0.0;
+            m[(slot * s + q) * w + c + q] = 0.0;
         }
     }
-    for i in items.len()..b {
+    for slot in n_real..slots {
         for q in 0..s {
-            m[(i * s + q) * w + c + q] = 0.0;
+            m[(slot * s + q) * w + c + q] = 0.0;
         }
     }
-    m
 }

@@ -1,52 +1,286 @@
-//! Engine KV store: per-(request, layer, head) K/V slices with rank tags,
-//! host backup mirroring, and failure wipes.
+//! Engine KV store: contiguous paged per-(layer, head-group) pools with
+//! rank tags, host backup mirroring, and failure wipes.
 //!
 //! All data physically lives in host memory (the engine runs on CPU-PJRT),
-//! but every slice carries the rank whose simulated HBM holds it. A device
-//! failure deletes exactly the slices tagged with that rank — recovery
-//! must then restore them from the backup mirror (FailSafe) or re-prefill
-//! (the baseline), and the continuation is checked bit-exact in tests.
+//! but every (request, layer, head) lane carries the rank whose simulated
+//! HBM holds it. A device failure deletes exactly the lanes tagged with
+//! that rank — recovery must then restore them from the backup mirror
+//! (FailSafe) or re-prefill (the baseline), and the continuation is
+//! checked bit-exact in tests.
+//!
+//! # Hot-path layout
+//!
+//! KV is stored in **pools**, one per interned `(layer, head-group)` pair
+//! (a head group is the exact head list one rank's attention shard gathers
+//! — `AttnWeights::heads`). A pool is a pair of arenas (`k`, `v`) carved
+//! into fixed-size blocks of [`BLOCK_TOKENS`] rows; each row is one
+//! token's `heads.len() × head_dim` floats, i.e. exactly the inner
+//! `[hb, hd]` slice of the XLA attention literal `[c, hb, hd]`. A request
+//! holds a block list per pool (a [`Run`]), so:
+//!
+//! * `tokens()` is O(1) — an indexed counter, never a scan;
+//! * [`KvStore::gather_into`] is block-indexed `copy_from_slice` into the
+//!   caller's reused padded buffer (whole-block copies when the head
+//!   bucket equals the group size);
+//! * [`KvStore::append_group`] copies rows straight out of the forward
+//!   pass's output literal (strided source) into pool blocks — no
+//!   per-head temporaries;
+//! * finished requests return their blocks to the pool free lists, so the
+//!   decode loop allocates nothing from the global heap at steady state.
+//!
+//! Reconfiguration (failure shrink / rejoin expand) changes the head
+//! grouping; [`KvStore::relayout`] re-buckets resident data into the new
+//! epoch's canonical pools (the host-side analogue of the KV re-spread
+//! whose simulated NVLink cost the recovery planner accounts).
+//!
+//! # Invariant
+//!
+//! Within one run, every present lane has the same token count at append
+//! time. The engine maintains this by construction: the failure dance is
+//! always `wipe → restore → truncate` (ending with all lanes equal)
+//! before decoding resumes. Reviving a wiped lane by appending at a
+//! nonzero offset is a caller bug (debug-asserted).
 
 use std::collections::HashMap;
 
 use crate::kvcache::KvPlacement;
+use crate::sharding::ShardPlan;
 use crate::{HeadId, LayerId, RankId, RequestId};
 
-/// K/V of one (request, layer, head): `tokens × head_dim` f32 each.
-#[derive(Debug, Clone, Default)]
-pub struct KvSlice {
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
-    pub tokens: usize,
-    /// Rank whose (simulated) HBM holds this slice.
-    pub rank: RankId,
+/// Tokens per paged KV block.
+pub const BLOCK_TOKENS: usize = 16;
+
+/// Handle to one interned (layer, head-group) pool — resolve once per
+/// epoch with [`KvStore::pool_handle`], then use on the hot path.
+pub type PoolId = u32;
+
+/// One paged pool: K and V arenas for one (layer, head-group).
+#[derive(Debug, Default)]
+struct Pool {
+    layer: LayerId,
+    /// Lane order of heads interleaved in each token row.
+    heads: Vec<HeadId>,
+    /// `heads.len() * head_dim` — one token row.
+    stride: usize,
+    /// `BLOCK_TOKENS * stride`.
+    block_elems: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Free block indices; popped from the back (descending push order,
+    /// so the lowest id is reused first — deterministic).
+    free: Vec<u32>,
+    n_blocks: u32,
 }
 
-/// The engine's KV state.
+impl Pool {
+    fn alloc_block(&mut self) -> u32 {
+        if let Some(b) = self.free.pop() {
+            return b;
+        }
+        let b = self.n_blocks;
+        self.n_blocks += 1;
+        self.k.resize(self.n_blocks as usize * self.block_elems, 0.0);
+        self.v.resize(self.n_blocks as usize * self.block_elems, 0.0);
+        b
+    }
+
+    fn buf(&self, want_v: bool) -> &[f32] {
+        if want_v {
+            &self.v
+        } else {
+            &self.k
+        }
+    }
+
+    /// Arena offset of token row `t` of a run with the given block list.
+    fn row_offset(&self, blocks: &[u32], t: usize) -> usize {
+        blocks[t / BLOCK_TOKENS] as usize * self.block_elems + (t % BLOCK_TOKENS) * self.stride
+    }
+
+    /// Return `blocks` to the free list in descending id order — within
+    /// one freed batch the lowest id is reused first, so reuse order is
+    /// a deterministic function of the alloc/free history.
+    fn free_blocks(&mut self, blocks: &mut Vec<u32>) {
+        blocks.sort_unstable_by(|a, b| b.cmp(a));
+        self.free.append(blocks);
+    }
+}
+
+/// Per-(request, head-lane) state: the rank tag and valid token prefix.
+#[derive(Debug, Clone, Copy)]
+struct Lane {
+    rank: RankId,
+    tokens: usize,
+    /// False after a wipe: the head has no resident KV (gathers read
+    /// zeros; `restore_request` re-fills it). Distinct from `tokens == 0`
+    /// — a truncated-to-zero lane still *exists* and is not restored.
+    present: bool,
+}
+
+const ABSENT: Lane = Lane { rank: 0, tokens: 0, present: false };
+
+/// One request's block list in one pool.
+#[derive(Debug)]
+struct Run {
+    pool: PoolId,
+    /// Parallel to the pool's `heads`.
+    lanes: Vec<Lane>,
+    blocks: Vec<u32>,
+    /// Physical rows written (the high-water mark of lane tokens).
+    rows: usize,
+}
+
+/// One request's resident KV: runs sorted by pool id.
+#[derive(Debug, Default)]
+struct ReqKv {
+    /// Max tokens over layer-0 lanes — the O(1) `tokens()` index.
+    tokens: usize,
+    runs: Vec<Run>,
+}
+
+impl ReqKv {
+    fn run_mut(&mut self, pool: PoolId, n_lanes: usize) -> &mut Run {
+        let i = match self.runs.binary_search_by_key(&pool, |r| r.pool) {
+            Ok(i) => i,
+            Err(i) => {
+                self.runs.insert(
+                    i,
+                    Run { pool, lanes: vec![ABSENT; n_lanes], blocks: Vec::new(), rows: 0 },
+                );
+                i
+            }
+        };
+        &mut self.runs[i]
+    }
+
+    fn run(&self, pool: PoolId) -> Option<&Run> {
+        self.runs.binary_search_by_key(&pool, |r| r.pool).ok().map(|i| &self.runs[i])
+    }
+}
+
+/// Host-DRAM mirror of one request's KV in one pool grouping: contiguous
+/// `[rows, stride]` token-prefix copies (proactive backup §3.2).
+#[derive(Debug)]
+struct BackupRun {
+    pool: PoolId,
+    lane_tokens: Vec<usize>,
+    rows: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+#[derive(Debug, Default)]
+struct ReqBackup {
+    /// Max tokens over layer-0 lanes — O(1) `backed_tokens()`.
+    tokens: usize,
+    runs: Vec<BackupRun>,
+}
+
+/// The engine's KV state. See module docs for the paged layout.
 #[derive(Debug, Default)]
 pub struct KvStore {
     head_dim: usize,
-    slices: HashMap<(RequestId, LayerId, HeadId), KvSlice>,
-    /// Host-DRAM mirror (proactive backup §3.2): token-prefix copies.
-    backup: HashMap<(RequestId, LayerId, HeadId), KvSlice>,
+    pools: Vec<Pool>,
+    pool_ids: HashMap<(LayerId, Vec<HeadId>), PoolId>,
+    reqs: HashMap<RequestId, ReqKv>,
+    backup: HashMap<RequestId, ReqBackup>,
 }
 
 impl KvStore {
     pub fn new(head_dim: usize) -> Self {
-        KvStore { head_dim, slices: HashMap::new(), backup: HashMap::new() }
+        KvStore { head_dim, ..Default::default() }
+    }
+
+    /// Intern the pool for `(layer, heads)` and return its stable handle.
+    /// Cold path — call once per epoch per shard group, not per step.
+    pub fn pool_handle(&mut self, layer: LayerId, heads: &[HeadId]) -> PoolId {
+        if let Some(&id) = self.pool_ids.get(&(layer, heads.to_vec())) {
+            return id;
+        }
+        let stride = heads.len() * self.head_dim;
+        let id = self.pools.len() as PoolId;
+        self.pools.push(Pool {
+            layer,
+            heads: heads.to_vec(),
+            stride,
+            block_elems: BLOCK_TOKENS * stride,
+            ..Default::default()
+        });
+        self.pool_ids.insert((layer, heads.to_vec()), id);
+        id
     }
 
     /// Tokens cached for `req` (layer 0, any head — all heads agree).
+    /// O(1): reads the per-request index maintained by every mutation.
     pub fn tokens(&self, req: RequestId) -> usize {
-        self.slices
-            .iter()
-            .filter(|((r, l, _), _)| *r == req && *l == 0)
-            .map(|(_, s)| s.tokens)
-            .max()
-            .unwrap_or(0)
+        self.reqs.get(&req).map(|r| r.tokens).unwrap_or(0)
     }
 
-    /// Append `s` new tokens of K/V for (req, layer, head), held by `rank`.
+    /// Append `n_new` token rows for `req` into `pool`, held by `rank`.
+    /// Source row `r` is `src[r*src_stride .. r*src_stride + stride]` —
+    /// i.e. KV can be copied straight out of a padded `[b, s, hb, hd]`
+    /// forward output with `src_stride = hb*hd`, no per-head temporaries.
+    pub fn append_group(
+        &mut self,
+        req: RequestId,
+        pool: PoolId,
+        rank: RankId,
+        n_new: usize,
+        k_src: &[f32],
+        v_src: &[f32],
+        src_stride: usize,
+    ) {
+        if n_new == 0 {
+            return;
+        }
+        let p = &mut self.pools[pool as usize];
+        let stride = p.stride;
+        debug_assert!(src_stride >= stride, "source rows narrower than the pool group");
+        let entry = self.reqs.entry(req).or_default();
+        let run = entry.run_mut(pool, p.heads.len());
+        let need = (run.rows + n_new).div_ceil(BLOCK_TOKENS);
+        while run.blocks.len() < need {
+            run.blocks.push(p.alloc_block());
+        }
+        let mut r = 0;
+        while r < n_new {
+            let t = run.rows + r;
+            let in_block = (BLOCK_TOKENS - t % BLOCK_TOKENS).min(n_new - r);
+            let dst = p.row_offset(&run.blocks, t);
+            if src_stride == stride {
+                // Contiguous source (exact-width rows): whole-chunk copy.
+                let src = r * stride..(r + in_block) * stride;
+                p.k[dst..dst + in_block * stride].copy_from_slice(&k_src[src.clone()]);
+                p.v[dst..dst + in_block * stride].copy_from_slice(&v_src[src]);
+            } else {
+                for j in 0..in_block {
+                    let s0 = (r + j) * src_stride;
+                    let d0 = dst + j * stride;
+                    p.k[d0..d0 + stride].copy_from_slice(&k_src[s0..s0 + stride]);
+                    p.v[d0..d0 + stride].copy_from_slice(&v_src[s0..s0 + stride]);
+                }
+            }
+            r += in_block;
+        }
+        let rows = run.rows;
+        for lane in run.lanes.iter_mut() {
+            debug_assert!(
+                !lane.present || lane.tokens == rows,
+                "non-uniform lanes at append (tokens {} vs rows {rows})",
+                lane.tokens,
+            );
+            debug_assert!(lane.present || rows == 0, "appending to a wiped lane mid-stream");
+            *lane = Lane { rank, tokens: rows + n_new, present: true };
+        }
+        run.rows = rows + n_new;
+        if p.layer == 0 {
+            entry.tokens = entry.tokens.max(rows + n_new);
+        }
+    }
+
+    /// Append `s` new tokens of K/V for (req, layer, head), held by
+    /// `rank` — the single-head compatibility surface over
+    /// [`KvStore::append_group`].
     pub fn append(
         &mut self,
         req: RequestId,
@@ -58,16 +292,71 @@ impl KvStore {
     ) {
         debug_assert_eq!(k_new.len(), v_new.len());
         debug_assert_eq!(k_new.len() % self.head_dim, 0);
-        let e = self.slices.entry((req, layer, head)).or_default();
-        e.k.extend_from_slice(k_new);
-        e.v.extend_from_slice(v_new);
-        e.tokens += k_new.len() / self.head_dim;
-        e.rank = rank;
+        let pool = self.pool_handle(layer, &[head]);
+        let n = k_new.len() / self.head_dim;
+        self.append_group(req, pool, rank, n, k_new, v_new, self.head_dim);
     }
 
-    /// Gather the K (or V) cache of `req` for `heads`, zero-padded to
-    /// `(c_bucket, h_bucket)`: output `[c_bucket, h_bucket, head_dim]`
-    /// row-major, ready to concatenate across a batch.
+    /// Gather the K (or V) cache of `req` in `pool` into `out`, zero-padded
+    /// to `[c_bucket, h_bucket, head_dim]` row-major — the hot path behind
+    /// the engine's batched KV literals. `out` is the caller's reused
+    /// buffer; it is fully overwritten (zero-filled then block-copied).
+    pub fn gather_into(
+        &self,
+        req: RequestId,
+        pool: PoolId,
+        c_bucket: usize,
+        h_bucket: usize,
+        want_v: bool,
+        out: &mut [f32],
+    ) {
+        let hd = self.head_dim;
+        let p = &self.pools[pool as usize];
+        debug_assert_eq!(out.len(), c_bucket * h_bucket * hd);
+        debug_assert!(p.stride <= h_bucket * hd, "head bucket below the pool group size");
+        out.fill(0.0);
+        let Some(run) = self.reqs.get(&req).and_then(|e| e.run(pool)) else { return };
+        let src = p.buf(want_v);
+        let stride = p.stride;
+        let row_out = h_bucket * hd;
+        if run.lanes.iter().all(|l| l.present && l.tokens == run.rows) {
+            // Uniform lanes: bulk block-indexed copies.
+            let n = run.rows.min(c_bucket);
+            let mut t = 0;
+            while t < n {
+                let in_block = (BLOCK_TOKENS - t % BLOCK_TOKENS).min(n - t);
+                let base = p.row_offset(&run.blocks, t);
+                if stride == row_out {
+                    out[t * stride..(t + in_block) * stride]
+                        .copy_from_slice(&src[base..base + in_block * stride]);
+                } else {
+                    for j in 0..in_block {
+                        let o = (t + j) * row_out;
+                        let b0 = base + j * stride;
+                        out[o..o + stride].copy_from_slice(&src[b0..b0 + stride]);
+                    }
+                }
+                t += in_block;
+            }
+        } else {
+            // Mixed lanes (mid-recovery): per-lane prefix copies.
+            for (li, lane) in run.lanes.iter().enumerate() {
+                if !lane.present {
+                    continue;
+                }
+                for t in 0..lane.tokens.min(c_bucket) {
+                    let o = (t * h_bucket + li) * hd;
+                    let b0 = p.row_offset(&run.blocks, t) + li * hd;
+                    out[o..o + hd].copy_from_slice(&src[b0..b0 + hd]);
+                }
+            }
+        }
+    }
+
+    /// Gather by explicit head list, zero-padded to `(c_bucket, h_bucket)`:
+    /// output `[c_bucket, h_bucket, head_dim]` row-major. General path —
+    /// works for any head subset regardless of pool grouping (each head
+    /// must live in at most one run per layer).
     pub fn gather(
         &self,
         req: RequestId,
@@ -79,55 +368,159 @@ impl KvStore {
     ) -> Vec<f32> {
         let hd = self.head_dim;
         let mut out = vec![0.0f32; c_bucket * h_bucket * hd];
+        let Some(entry) = self.reqs.get(&req) else { return out };
         for (hi, &h) in heads.iter().enumerate() {
-            if let Some(s) = self.slices.get(&(req, layer, h)) {
-                let src = if want_v { &s.v } else { &s.k };
-                for t in 0..s.tokens.min(c_bucket) {
-                    let dst = (t * h_bucket + hi) * hd;
-                    out[dst..dst + hd].copy_from_slice(&src[t * hd..(t + 1) * hd]);
-                }
+            let Some((run, li)) = self.find_lane(entry, layer, h) else { continue };
+            let lane = run.lanes[li];
+            if !lane.present {
+                continue;
+            }
+            let p = &self.pools[run.pool as usize];
+            let src = p.buf(want_v);
+            for t in 0..lane.tokens.min(c_bucket) {
+                let o = (t * h_bucket + hi) * hd;
+                let b0 = p.row_offset(&run.blocks, t) + li * hd;
+                out[o..o + hd].copy_from_slice(&src[b0..b0 + hd]);
             }
         }
         out
     }
 
-    /// Mirror `req`'s slices into the host backup (write-behind pass).
-    pub fn backup_request(&mut self, req: RequestId) {
-        for ((r, l, h), s) in self.slices.iter() {
-            if *r == req {
-                self.backup.insert((*r, *l, *h), s.clone());
+    fn find_lane<'a>(
+        &self,
+        entry: &'a ReqKv,
+        layer: LayerId,
+        head: HeadId,
+    ) -> Option<(&'a Run, usize)> {
+        for run in &entry.runs {
+            let p = &self.pools[run.pool as usize];
+            if p.layer == layer {
+                if let Some(li) = p.heads.iter().position(|&h| h == head) {
+                    return Some((run, li));
+                }
             }
         }
+        None
     }
 
-    /// Tokens covered by backup for `req`.
-    pub fn backed_tokens(&self, req: RequestId) -> usize {
-        self.backup
-            .iter()
-            .filter(|((r, l, _), _)| *r == req && *l == 0)
-            .map(|(_, s)| s.tokens)
-            .max()
-            .unwrap_or(0)
-    }
-
-    /// Hard failure of `rank`: drop every slice its HBM held. Returns the
-    /// affected request ids (deduped).
-    pub fn wipe_rank(&mut self, rank: RankId) -> Vec<RequestId> {
-        let mut lost: Vec<RequestId> = Vec::new();
-        self.slices.retain(|(r, _, _), s| {
-            if s.rank == rank {
-                lost.push(*r);
-                false
+    /// Mirror `req`'s resident KV into the host backup (write-behind
+    /// pass). Incremental: only rows beyond the already-mirrored prefix
+    /// are copied, so the per-step cost is O(new tokens), not O(context).
+    pub fn backup_request(&mut self, req: RequestId) {
+        let KvStore { head_dim, pools, reqs, backup, .. } = self;
+        let hd = *head_dim;
+        let Some(entry) = reqs.get(&req) else { return };
+        let b = backup.entry(req).or_default();
+        for run in &entry.runs {
+            let p = &pools[run.pool as usize];
+            let stride = p.stride;
+            let bi = match b.runs.binary_search_by_key(&run.pool, |r| r.pool) {
+                Ok(i) => i,
+                Err(i) => {
+                    b.runs.insert(
+                        i,
+                        BackupRun {
+                            pool: run.pool,
+                            lane_tokens: vec![0; p.heads.len()],
+                            rows: 0,
+                            k: Vec::new(),
+                            v: Vec::new(),
+                        },
+                    );
+                    i
+                }
+            };
+            let br = &mut b.runs[bi];
+            let run_uniform = run.lanes.iter().all(|l| l.present && l.tokens == run.rows);
+            let br_uniform = br.lane_tokens.iter().all(|&t| t == br.rows);
+            if run_uniform && br_uniform {
+                // Hot path: everything is a clean token prefix. Mirror
+                // only the delta rows (bulk, block-indexed); a truncated
+                // device prefix re-mirrors from scratch (cold, and safe —
+                // no absent lane still references the old buffer).
+                if br.rows > run.rows {
+                    br.k.clear();
+                    br.v.clear();
+                    br.rows = 0;
+                }
+                let mut t = br.rows;
+                while t < run.rows {
+                    let in_block = (BLOCK_TOKENS - t % BLOCK_TOKENS).min(run.rows - t);
+                    let base = p.row_offset(&run.blocks, t);
+                    br.k.extend_from_slice(&p.k[base..base + in_block * stride]);
+                    br.v.extend_from_slice(&p.v[base..base + in_block * stride]);
+                    t += in_block;
+                }
+                br.rows = run.rows;
+                br.lane_tokens.fill(run.rows);
             } else {
-                true
+                // Mixed lanes (mid-recovery): refresh present lanes
+                // column-wise, preserving absent lanes' older backup —
+                // per-head mirrors are independent, exactly like the old
+                // per-slice store.
+                let rows = br.rows.max(run.rows);
+                br.k.resize(rows * stride, 0.0);
+                br.v.resize(rows * stride, 0.0);
+                br.rows = rows;
+                for (li, lane) in run.lanes.iter().enumerate() {
+                    if !lane.present {
+                        continue;
+                    }
+                    for t in 0..lane.tokens {
+                        let s0 = p.row_offset(&run.blocks, t) + li * hd;
+                        let d0 = t * stride + li * hd;
+                        br.k[d0..d0 + hd].copy_from_slice(&p.k[s0..s0 + hd]);
+                        br.v[d0..d0 + hd].copy_from_slice(&p.v[s0..s0 + hd]);
+                    }
+                    br.lane_tokens[li] = lane.tokens;
+                }
             }
-        });
+        }
+        b.tokens = b
+            .runs
+            .iter()
+            .filter(|r| pools[r.pool as usize].layer == 0)
+            .flat_map(|r| r.lane_tokens.iter().copied())
+            .max()
+            .unwrap_or(0);
+    }
+
+    /// Tokens covered by backup for `req` (layer 0). O(1).
+    pub fn backed_tokens(&self, req: RequestId) -> usize {
+        self.backup.get(&req).map(|b| b.tokens).unwrap_or(0)
+    }
+
+    /// Hard failure of `rank`: drop every lane its HBM held (whole-group
+    /// losses return their blocks to the pool). Returns the affected
+    /// request ids (sorted, deduped).
+    pub fn wipe_rank(&mut self, rank: RankId) -> Vec<RequestId> {
+        let KvStore { pools, reqs, .. } = self;
+        let mut lost: Vec<RequestId> = Vec::new();
+        for (id, entry) in reqs.iter_mut() {
+            let mut hit = false;
+            for run in entry.runs.iter_mut() {
+                for lane in run.lanes.iter_mut() {
+                    if lane.present && lane.rank == rank {
+                        *lane = ABSENT;
+                        hit = true;
+                    }
+                }
+                if run.lanes.iter().all(|l| !l.present) && !run.blocks.is_empty() {
+                    pools[run.pool as usize].free_blocks(&mut run.blocks);
+                    run.rows = 0;
+                }
+            }
+            if hit {
+                entry.tokens = layer0_max(pools, &entry.runs);
+                lost.push(*id);
+            }
+        }
         lost.sort_unstable();
         lost.dedup();
         lost
     }
 
-    /// Restore `req`'s missing slices from backup, re-tagging by the new
+    /// Restore `req`'s missing lanes from backup, re-tagging by the new
     /// placement (`home` = new home rank). Returns restored token count,
     /// or 0 if no backup exists.
     pub fn restore_request(
@@ -136,74 +529,334 @@ impl KvStore {
         placement: &KvPlacement,
         home: RankId,
     ) -> usize {
+        let KvStore { head_dim, pools, reqs, backup, .. } = self;
+        let hd = *head_dim;
+        let Some(b) = backup.get(&req) else { return 0 };
+        let entry = reqs.entry(req).or_default();
         let mut restored = 0;
-        for ((r, l, h), s) in self.backup.iter() {
-            if *r != req {
-                continue;
-            }
-            if !self.slices.contains_key(&(*r, *l, *h)) {
-                let mut slice = s.clone();
-                slice.rank = placement.rank_for(*l, *h, home);
-                restored = restored.max(slice.tokens);
-                self.slices.insert((*r, *l, *h), slice);
+        for br in &b.runs {
+            let p = &mut pools[br.pool as usize];
+            let run = entry.run_mut(br.pool, p.heads.len());
+            let stride = p.stride;
+            for (li, &bt) in br.lane_tokens.iter().enumerate() {
+                if bt == 0 || run.lanes[li].present {
+                    continue; // only missing lanes are restored
+                }
+                let need = bt.div_ceil(BLOCK_TOKENS);
+                while run.blocks.len() < need {
+                    run.blocks.push(p.alloc_block());
+                }
+                for t in 0..bt {
+                    let d0 = p.row_offset(&run.blocks, t) + li * hd;
+                    let s0 = t * stride + li * hd;
+                    p.k[d0..d0 + hd].copy_from_slice(&br.k[s0..s0 + hd]);
+                    p.v[d0..d0 + hd].copy_from_slice(&br.v[s0..s0 + hd]);
+                }
+                let head = p.heads[li];
+                run.lanes[li] = Lane {
+                    rank: placement.rank_for(p.layer, head, home),
+                    tokens: bt,
+                    present: true,
+                };
+                run.rows = run.rows.max(bt);
+                restored = restored.max(bt);
             }
         }
+        entry.tokens = layer0_max(pools, &entry.runs);
         restored
     }
 
-    /// Truncate every slice of `req` to `tokens` (used when restore lags
-    /// behind the newest decode tokens — the lag gets recomputed).
+    /// Truncate every lane of `req` to `tokens` (used when restore lags
+    /// behind the newest decode tokens — the lag gets recomputed). Tail
+    /// blocks return to their pools.
     pub fn truncate(&mut self, req: RequestId, tokens: usize) {
-        let hd = self.head_dim;
-        for ((r, _, _), s) in self.slices.iter_mut() {
-            if *r == req && s.tokens > tokens {
-                s.k.truncate(tokens * hd);
-                s.v.truncate(tokens * hd);
-                s.tokens = tokens;
+        let KvStore { pools, reqs, .. } = self;
+        let Some(entry) = reqs.get_mut(&req) else { return };
+        for run in entry.runs.iter_mut() {
+            for lane in run.lanes.iter_mut() {
+                if lane.present && lane.tokens > tokens {
+                    lane.tokens = tokens;
+                }
+            }
+            if run.rows > tokens {
+                run.rows = tokens;
+                let mut tail = run.blocks.split_off(tokens.div_ceil(BLOCK_TOKENS));
+                pools[run.pool as usize].free_blocks(&mut tail);
             }
         }
+        entry.tokens = layer0_max(pools, &entry.runs);
     }
 
-    /// Re-tag every slice of the requests in `homes` (request → home rank)
+    /// Re-tag every lane of the requests in `homes` (request → home rank)
     /// to the rank `placement` assigns it, in one pass over the store —
     /// the KV re-spread of an expand-reconfiguration (GPU rejoin). Data
-    /// stays put in the host-side store; the simulated NVLink move onto
-    /// the new owners is costed by the rejoin latency model.
+    /// stays put; the simulated NVLink move onto the new owners is costed
+    /// by the rejoin latency model.
     pub fn retag_requests(&mut self, placement: &KvPlacement, homes: &HashMap<RequestId, RankId>) {
-        for ((r, l, h), s) in self.slices.iter_mut() {
-            if let Some(&home) = homes.get(r) {
-                s.rank = placement.rank_for(*l, *h, home);
+        let KvStore { pools, reqs, .. } = self;
+        for (id, entry) in reqs.iter_mut() {
+            let Some(&home) = homes.get(id) else { continue };
+            for run in entry.runs.iter_mut() {
+                let p = &pools[run.pool as usize];
+                for (li, lane) in run.lanes.iter_mut().enumerate() {
+                    if lane.present {
+                        lane.rank = placement.rank_for(p.layer, p.heads[li], home);
+                    }
+                }
             }
         }
     }
 
-    /// Re-tag surviving slices after a reconfiguration: slice held by old
+    /// Re-tag surviving lanes after a reconfiguration: a lane held by old
     /// rank `o` now belongs to `survivor_map[o]` (data stays put; the
     /// simulated transfer cost is accounted by the recovery planner).
     pub fn remap_ranks(&mut self, survivor_map: &[Option<RankId>]) {
-        for s in self.slices.values_mut() {
-            if let Some(new_r) = survivor_map.get(s.rank).copied().flatten() {
-                s.rank = new_r;
+        for entry in self.reqs.values_mut() {
+            for run in entry.runs.iter_mut() {
+                for lane in run.lanes.iter_mut() {
+                    if lane.present {
+                        if let Some(new_r) = survivor_map.get(lane.rank).copied().flatten() {
+                            lane.rank = new_r;
+                        }
+                    }
+                }
             }
         }
     }
 
-    /// Drop all state of a finished request.
+    /// Re-bucket every request's resident KV (and its backup mirror) into
+    /// `plan`'s canonical head groups, so post-reconfiguration gathers and
+    /// appends run on the fast block path again. Lane tags, token counts,
+    /// and presence are preserved exactly — this moves host bytes between
+    /// pools, never changes what they mean. Cold path (once per epoch).
+    pub fn relayout(&mut self, plan: &ShardPlan) {
+        let n_layers = plan.model.n_layers;
+        let mut targets: Vec<Vec<PoolId>> = Vec::with_capacity(n_layers);
+        for layer in 0..n_layers {
+            let lh = &plan.heads.layers[layer];
+            let mut g = Vec::new();
+            for rank in 0..plan.world() {
+                let tp = lh.tp_heads_of(rank);
+                if !tp.is_empty() {
+                    g.push(self.pool_handle(layer, &tp));
+                }
+            }
+            let dp = lh.dp_heads();
+            if !dp.is_empty() {
+                g.push(self.pool_handle(layer, &dp));
+            }
+            targets.push(g);
+        }
+        let ids: Vec<RequestId> = self.reqs.keys().copied().collect();
+        for id in ids {
+            self.relayout_device(id, &targets);
+            self.relayout_backup(id, &targets);
+        }
+        self.shrink_unused_pools();
+    }
+
+    fn is_canonical(&self, runs: &[Run], targets: &[Vec<PoolId>]) -> bool {
+        runs.iter().all(|r| {
+            let layer = self.pools[r.pool as usize].layer;
+            targets.get(layer).is_some_and(|g| g.contains(&r.pool))
+        })
+    }
+
+    fn relayout_device(&mut self, id: RequestId, targets: &[Vec<PoolId>]) {
+        match self.reqs.get(&id) {
+            Some(e) if !self.is_canonical(&e.runs, targets) => {}
+            _ => return,
+        }
+        let old = self.reqs.remove(&id).unwrap();
+        let mut new_runs: Vec<Run> = Vec::new();
+        let hd = self.head_dim;
+        let mut stage_k: Vec<f32> = Vec::new();
+        let mut stage_v: Vec<f32> = Vec::new();
+        for (layer, group) in targets.iter().enumerate() {
+            for &pid in group {
+                let heads = self.pools[pid as usize].heads.clone();
+                let mut lanes = vec![ABSENT; heads.len()];
+                let mut srcs: Vec<Option<(usize, usize)>> = vec![None; heads.len()];
+                let mut rows = 0;
+                for (li, &h) in heads.iter().enumerate() {
+                    for (ri, run) in old.runs.iter().enumerate() {
+                        let p = &self.pools[run.pool as usize];
+                        if p.layer != layer {
+                            continue;
+                        }
+                        if let Some(oli) = p.heads.iter().position(|&x| x == h) {
+                            let lane = run.lanes[oli];
+                            if lane.present {
+                                lanes[li] = lane;
+                                rows = rows.max(lane.tokens);
+                                srcs[li] = Some((ri, oli));
+                            }
+                            break;
+                        }
+                    }
+                }
+                if rows == 0 && lanes.iter().all(|l| !l.present) {
+                    continue;
+                }
+                let mut blocks = Vec::with_capacity(rows.div_ceil(BLOCK_TOKENS));
+                for _ in 0..rows.div_ceil(BLOCK_TOKENS) {
+                    blocks.push(self.pools[pid as usize].alloc_block());
+                }
+                for (li, src) in srcs.iter().enumerate() {
+                    let Some(&(ri, oli)) = src.as_ref() else { continue };
+                    let n = lanes[li].tokens;
+                    // Stage the old lane column, then write it into the
+                    // new pool — decouples the two arena borrows.
+                    let run = &old.runs[ri];
+                    let op = &self.pools[run.pool as usize];
+                    stage_k.clear();
+                    stage_v.clear();
+                    for t in 0..n {
+                        let s0 = op.row_offset(&run.blocks, t) + oli * hd;
+                        stage_k.extend_from_slice(&op.k[s0..s0 + hd]);
+                        stage_v.extend_from_slice(&op.v[s0..s0 + hd]);
+                    }
+                    let np = &mut self.pools[pid as usize];
+                    for t in 0..n {
+                        let d0 = np.row_offset(&blocks, t) + li * hd;
+                        np.k[d0..d0 + hd].copy_from_slice(&stage_k[t * hd..(t + 1) * hd]);
+                        np.v[d0..d0 + hd].copy_from_slice(&stage_v[t * hd..(t + 1) * hd]);
+                    }
+                }
+                new_runs.push(Run { pool: pid, lanes, blocks, rows });
+            }
+        }
+        for mut run in old.runs {
+            self.pools[run.pool as usize].free_blocks(&mut run.blocks);
+        }
+        new_runs.sort_unstable_by_key(|r| r.pool);
+        let tokens = layer0_max(&self.pools, &new_runs);
+        self.reqs.insert(id, ReqKv { tokens, runs: new_runs });
+    }
+
+    fn relayout_backup(&mut self, id: RequestId, targets: &[Vec<PoolId>]) {
+        let canonical = match self.backup.get(&id) {
+            Some(b) => b.runs.iter().all(|r| {
+                let layer = self.pools[r.pool as usize].layer;
+                targets.get(layer).is_some_and(|g| g.contains(&r.pool))
+            }),
+            None => return,
+        };
+        if canonical {
+            return;
+        }
+        let old = self.backup.remove(&id).unwrap();
+        let hd = self.head_dim;
+        let mut new_runs: Vec<BackupRun> = Vec::new();
+        for (layer, group) in targets.iter().enumerate() {
+            for &pid in group {
+                let heads = self.pools[pid as usize].heads.clone();
+                let stride = self.pools[pid as usize].stride;
+                let mut lane_tokens = vec![0usize; heads.len()];
+                let mut srcs: Vec<Option<(usize, usize)>> = vec![None; heads.len()];
+                let mut rows = 0;
+                for (li, &h) in heads.iter().enumerate() {
+                    for (ri, br) in old.runs.iter().enumerate() {
+                        let p = &self.pools[br.pool as usize];
+                        if p.layer != layer {
+                            continue;
+                        }
+                        if let Some(oli) = p.heads.iter().position(|&x| x == h) {
+                            lane_tokens[li] = br.lane_tokens[oli];
+                            rows = rows.max(br.lane_tokens[oli]);
+                            srcs[li] = Some((ri, oli));
+                            break;
+                        }
+                    }
+                }
+                if rows == 0 {
+                    continue;
+                }
+                let mut k = vec![0.0f32; rows * stride];
+                let mut v = vec![0.0f32; rows * stride];
+                for (li, src) in srcs.iter().enumerate() {
+                    let Some(&(ri, oli)) = src.as_ref() else { continue };
+                    let br = &old.runs[ri];
+                    let ostride = self.pools[br.pool as usize].stride;
+                    for t in 0..lane_tokens[li] {
+                        let s0 = t * ostride + oli * hd;
+                        let d0 = t * stride + li * hd;
+                        k[d0..d0 + hd].copy_from_slice(&br.k[s0..s0 + hd]);
+                        v[d0..d0 + hd].copy_from_slice(&br.v[s0..s0 + hd]);
+                    }
+                }
+                new_runs.push(BackupRun { pool: pid, lane_tokens, rows, k, v });
+            }
+        }
+        new_runs.sort_unstable_by_key(|r| r.pool);
+        let tokens = new_runs
+            .iter()
+            .filter(|r| self.pools[r.pool as usize].layer == 0)
+            .flat_map(|r| r.lane_tokens.iter().copied())
+            .max()
+            .unwrap_or(0);
+        self.backup.insert(id, ReqBackup { tokens, runs: new_runs });
+    }
+
+    /// Drop the arenas of pools no run references (stale epoch groupings)
+    /// so memory does not creep across reconfigurations.
+    fn shrink_unused_pools(&mut self) {
+        let mut live = vec![false; self.pools.len()];
+        for e in self.reqs.values() {
+            for r in &e.runs {
+                live[r.pool as usize] = true;
+            }
+        }
+        for b in self.backup.values() {
+            for r in &b.runs {
+                live[r.pool as usize] = true;
+            }
+        }
+        for (i, p) in self.pools.iter_mut().enumerate() {
+            if !live[i] && p.n_blocks > 0 {
+                debug_assert_eq!(p.free.len(), p.n_blocks as usize, "unreferenced pool holds blocks");
+                p.k = Vec::new();
+                p.v = Vec::new();
+                p.free = Vec::new();
+                p.n_blocks = 0;
+            }
+        }
+    }
+
+    /// Drop all state of a finished request; its blocks return to the
+    /// pool free lists for reuse (no global-heap traffic at steady state).
     pub fn release(&mut self, req: RequestId) {
-        self.slices.retain(|(r, _, _), _| *r != req);
-        self.backup.retain(|(r, _, _), _| *r != req);
+        if let Some(entry) = self.reqs.remove(&req) {
+            for mut run in entry.runs {
+                self.pools[run.pool as usize].free_blocks(&mut run.blocks);
+            }
+        }
+        self.backup.remove(&req);
     }
 
     /// Per-rank resident KV bytes (for accounting assertions).
     pub fn bytes_by_rank(&self, world: usize) -> Vec<usize> {
         let mut by = vec![0usize; world];
-        for s in self.slices.values() {
-            if s.rank < world {
-                by[s.rank] += (s.k.len() + s.v.len()) * 4;
+        for entry in self.reqs.values() {
+            for run in &entry.runs {
+                for lane in &run.lanes {
+                    if lane.present && lane.rank < world {
+                        // K + V, f32 each.
+                        by[lane.rank] += lane.tokens * self.head_dim * 8;
+                    }
+                }
             }
         }
         by
     }
+}
+
+fn layer0_max(pools: &[Pool], runs: &[Run]) -> usize {
+    runs.iter()
+        .filter(|r| pools[r.pool as usize].layer == 0)
+        .flat_map(|r| r.lanes.iter().filter(|l| l.present).map(|l| l.tokens))
+        .max()
+        .unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -291,5 +944,121 @@ mod tests {
         let by = kv.bytes_by_rank(2);
         assert_eq!(by[0], 32);
         assert_eq!(by[1], 64);
+    }
+
+    // ------------------------------------------------- paged-layout tests --
+
+    /// Grouped append + grouped gather across a block boundary: the fast
+    /// block path must agree with the per-head general path.
+    #[test]
+    fn grouped_append_crosses_blocks() {
+        let hd = 3;
+        let mut kv = KvStore::new(hd);
+        let heads = [4usize, 7];
+        let pool = kv.pool_handle(2, &heads);
+        let n = BLOCK_TOKENS + 5;
+        let stride = heads.len() * hd;
+        let k: Vec<f32> = (0..n * stride).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..n * stride).map(|i| (i as f32) * 0.5).collect();
+        kv.append_group(9, pool, 1, n, &k, &v, stride);
+        assert_eq!(kv.tokens(9), 0, "layer 2 appends don't move the layer-0 token index");
+
+        let c = n + 3;
+        let hb = 2; // == group size → whole-block copies
+        let mut fast = vec![1.0f32; c * hb * hd];
+        kv.gather_into(9, pool, c, hb, false, &mut fast);
+        let general = kv.gather(9, 2, &heads, c, hb, false);
+        assert_eq!(fast, general);
+        assert_eq!(&fast[0..stride], &k[0..stride]);
+        assert_eq!(&fast[n * stride..], &vec![0.0; 3 * stride][..], "padded tokens are zero");
+
+        // Padded head bucket (hb > group) exercises the per-row path.
+        let hb = 4;
+        let mut padded = vec![1.0f32; c * hb * hd];
+        kv.gather_into(9, pool, c, hb, true, &mut padded);
+        assert_eq!(padded, kv.gather(9, 2, &heads, c, hb, true));
+    }
+
+    /// Strided-source appends (padded `[s, hb, hd]` forward output) land
+    /// the real lanes and skip the padding.
+    #[test]
+    fn strided_append_skips_padding() {
+        let hd = 2;
+        let mut kv = KvStore::new(hd);
+        let pool = kv.pool_handle(0, &[1]);
+        // Source rows padded to hb=2 heads: real lane is lane 0.
+        let src = [1.0, 2.0, 99.0, 99.0, 3.0, 4.0, 99.0, 99.0];
+        kv.append_group(5, pool, 0, 2, &src, &src, 2 * hd);
+        assert_eq!(kv.tokens(5), 2);
+        assert_eq!(kv.gather(5, 0, &[1], 2, 1, false), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    /// Released blocks are reused: steady-state alloc/free cycles keep the
+    /// pool arena at its high-water mark.
+    #[test]
+    fn release_returns_blocks_to_the_pool() {
+        let hd = 1;
+        let mut kv = KvStore::new(hd);
+        let pool = kv.pool_handle(0, &[0]);
+        let rows = vec![0.5f32; BLOCK_TOKENS * 3];
+        kv.append_group(1, pool, 0, BLOCK_TOKENS * 3, &rows, &rows, hd);
+        let high_water = kv.pools[pool as usize].n_blocks;
+        kv.release(1);
+        assert_eq!(kv.pools[pool as usize].free.len() as u32, high_water);
+        kv.append_group(2, pool, 0, BLOCK_TOKENS * 2, &rows, &rows, hd);
+        assert_eq!(kv.pools[pool as usize].n_blocks, high_water, "blocks reused, arena unchanged");
+        assert_eq!(kv.tokens(2), BLOCK_TOKENS * 2);
+    }
+
+    /// Incremental backup after truncation re-mirrors instead of keeping
+    /// a stale suffix.
+    #[test]
+    fn backup_follows_truncation() {
+        let mut kv = KvStore::new(1);
+        kv.append(1, 0, 0, 0, &[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+        kv.backup_request(1);
+        assert_eq!(kv.backed_tokens(1), 3);
+        kv.truncate(1, 1);
+        kv.append(1, 0, 0, 0, &[7.0], &[7.0]);
+        kv.backup_request(1);
+        assert_eq!(kv.backed_tokens(1), 2);
+        kv.wipe_rank(0);
+        let m = small_real();
+        let placement = KvPlacement::new(&ShardPlan::failsafe(&m, 2));
+        assert_eq!(kv.restore_request(1, &placement, 0), 2);
+        assert_eq!(kv.gather(1, 0, &[0], 2, 1, false), vec![1.0, 7.0]);
+    }
+
+    /// Relayout re-buckets data into a plan's canonical groups without
+    /// changing a single gathered byte or any lane tag.
+    #[test]
+    fn relayout_preserves_data_and_tags() {
+        let m = small_real();
+        let plan = ShardPlan::failsafe(&m, 2);
+        let mut kv = KvStore::new(m.head_dim);
+        // Per-head appends (non-canonical grouping).
+        for layer in 0..m.n_layers {
+            for head in 0..m.n_kv_heads {
+                let data: Vec<f32> =
+                    (0..2 * m.head_dim).map(|i| (layer * 100 + head * 10 + i) as f32).collect();
+                kv.append(1, layer, head, head % 2, &data, &data);
+            }
+        }
+        kv.backup_request(1);
+        let before: Vec<Vec<f32>> = (0..m.n_layers)
+            .map(|l| {
+                let heads: Vec<usize> = (0..m.n_kv_heads).collect();
+                kv.gather(1, l, &heads, 4, m.n_kv_heads, false)
+            })
+            .collect();
+        let by_before = kv.bytes_by_rank(2);
+        kv.relayout(&plan);
+        for (l, want) in before.iter().enumerate() {
+            let heads: Vec<usize> = (0..m.n_kv_heads).collect();
+            assert_eq!(&kv.gather(1, l, &heads, 4, m.n_kv_heads, false), want, "layer {l}");
+        }
+        assert_eq!(kv.bytes_by_rank(2), by_before);
+        assert_eq!(kv.tokens(1), 2);
+        assert_eq!(kv.backed_tokens(1), 2);
     }
 }

@@ -44,7 +44,7 @@ mod session;
 mod shard;
 
 pub use self::core::{drive, Engine, EngineEvent, FaultPlan, FaultTrigger, ServingBackend};
-pub use kv::KvStore;
+pub use kv::{KvStore, PoolId, BLOCK_TOKENS};
 pub use replay::{replay, AppliedEvent, ReplayOutcome, ReplayPace};
 pub use report::{GenerationResult, ServeReport};
 pub use session::SubmitOptions;

@@ -132,14 +132,19 @@ impl Session {
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
-    /// Requests with prefill work pending, in scheduling order.
-    pub fn prefilling(&self) -> Vec<RequestId> {
-        self.in_sched_order(|r| r.state == RequestState::Prefilling && r.prefill_remaining() > 0)
+    /// Requests with prefill work pending, in scheduling order, written
+    /// into the caller's reused buffer (the step loop's scratch — no
+    /// per-step allocation).
+    pub fn prefilling_into(&self, out: &mut Vec<RequestId>) {
+        self.in_sched_order_into(
+            |r| r.state == RequestState::Prefilling && r.prefill_remaining() > 0,
+            out,
+        );
     }
 
-    /// Requests in decode, in scheduling order.
-    pub fn decoding(&self) -> Vec<RequestId> {
-        self.in_sched_order(|r| r.state == RequestState::Decoding)
+    /// Requests in decode, in scheduling order, into the caller's buffer.
+    pub fn decoding_into(&self, out: &mut Vec<RequestId>) {
+        self.in_sched_order_into(|r| r.state == RequestState::Decoding, out);
     }
 
     /// True when no request can ever make progress again without a new
@@ -175,12 +180,22 @@ impl Session {
         }
     }
 
-    /// Submission order filtered by `keep`, then stably sorted by
-    /// (priority desc, deadline asc). Ties keep submission order.
+    /// Submission order filtered by `keep`, then sorted by (priority
+    /// desc, deadline asc). Ties keep submission order.
     fn in_sched_order(&self, keep: impl Fn(&Request) -> bool) -> Vec<RequestId> {
-        let mut ids: Vec<RequestId> =
-            self.order.iter().copied().filter(|id| keep(&self.requests[id])).collect();
-        ids.sort_by(|a, b| {
+        let mut ids = Vec::new();
+        self.in_sched_order_into(keep, &mut ids);
+        ids
+    }
+
+    /// [`Session::in_sched_order`] into a reused buffer. Uses an unstable
+    /// sort (no temp allocation) with the request id as the final key —
+    /// ids are handed out in submission order, so the id tiebreak *is*
+    /// the stable submission-order tiebreak.
+    fn in_sched_order_into(&self, keep: impl Fn(&Request) -> bool, out: &mut Vec<RequestId>) {
+        out.clear();
+        out.extend(self.order.iter().copied().filter(|id| keep(&self.requests[id])));
+        out.sort_unstable_by(|a, b| {
             let ra = &self.requests[a];
             let rb = &self.requests[b];
             rb.priority
@@ -188,10 +203,10 @@ impl Session {
                 .then_with(|| {
                     let da = ra.deadline.unwrap_or(f64::INFINITY);
                     let db = rb.deadline.unwrap_or(f64::INFINITY);
-                    da.partial_cmp(&db).unwrap()
+                    da.total_cmp(&db)
                 })
+                .then(a.cmp(b))
         });
-        ids
     }
 }
 

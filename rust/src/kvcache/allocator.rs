@@ -73,11 +73,18 @@ impl BlockAllocator {
     }
 
     /// Release all blocks of `req` (request finished or evicted).
+    ///
+    /// Freed blocks re-enter the free list in **descending id order**
+    /// (matching the initial fill), so within one freed batch the
+    /// lowest id is reused first and allocation order is a deterministic
+    /// function of the alloc/free history — never of map iteration or
+    /// insertion order.
     pub fn free_request(&mut self, req: RequestId) -> usize {
         match self.held.remove(&req) {
-            Some(blocks) => {
+            Some(mut blocks) => {
                 let n = blocks.len();
-                self.free.extend(blocks);
+                blocks.sort_unstable_by(|a, b| b.cmp(a));
+                self.free.append(&mut blocks);
                 n
             }
             None => 0,
@@ -137,6 +144,19 @@ mod tests {
         all.sort_unstable();
         all.dedup();
         assert_eq!(all.len(), 64);
+    }
+
+    #[test]
+    fn free_order_is_defined() {
+        let mut a = BlockAllocator::new(8);
+        let first = a.alloc(1, 3).unwrap();
+        let _hold = a.alloc(2, 2).unwrap();
+        a.free_request(1);
+        // Freed blocks come back lowest-id-first: a re-alloc of the same
+        // size sees exactly the same blocks, independent of history.
+        let again = a.alloc(3, 3).unwrap();
+        assert_eq!(again, first, "freed blocks are reused lowest-id first");
+        assert_eq!(again.last(), again.iter().min(), "pop order ends on the lowest id");
     }
 
     #[test]

@@ -23,14 +23,22 @@ impl LoadTracker {
         self.pending.len()
     }
 
-    /// Queue `tokens` units of work on `rank`.
+    /// Queue `tokens` units of work on `rank`. Non-finite token counts
+    /// (NaN/∞) are rejected — once a NaN enters the tracker every
+    /// comparison-based decision (`least_loaded`, routing) is poisoned —
+    /// so they are silently dropped here.
     pub fn add(&mut self, rank: RankId, tokens: f64) {
-        self.pending[rank] += tokens;
+        if tokens.is_finite() {
+            self.pending[rank] += tokens;
+        }
     }
 
-    /// Retire `tokens` units of completed work from `rank`.
+    /// Retire `tokens` units of completed work from `rank`. Non-finite
+    /// token counts are rejected (see [`LoadTracker::add`]).
     pub fn complete(&mut self, rank: RankId, tokens: f64) {
-        self.pending[rank] = (self.pending[rank] - tokens).max(0.0);
+        if tokens.is_finite() {
+            self.pending[rank] = (self.pending[rank] - tokens).max(0.0);
+        }
     }
 
     pub fn pending(&self, rank: RankId) -> f64 {
@@ -42,11 +50,13 @@ impl LoadTracker {
     }
 
     /// Rank with the smallest pending workload (ties → lowest id).
+    /// Total-order comparison: cannot panic even if a NaN slipped past
+    /// the `add`/`complete` guards.
     pub fn least_loaded(&self) -> RankId {
         self.pending
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+            .min_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(&b.0)))
             .map(|(r, _)| r)
             .unwrap_or(0)
     }
@@ -86,6 +96,19 @@ mod tests {
         t.add(1, 5.0);
         assert_eq!(t.least_loaded(), 2);
         t.add(2, 5.0);
+        assert_eq!(t.least_loaded(), 1);
+    }
+
+    #[test]
+    fn non_finite_loads_are_rejected() {
+        let mut t = LoadTracker::new(2);
+        t.add(0, 5.0);
+        t.add(0, f64::NAN);
+        t.add(1, f64::INFINITY);
+        t.complete(0, f64::NAN);
+        assert_eq!(t.pending(0), 5.0);
+        assert_eq!(t.pending(1), 0.0);
+        // least_loaded still works (and can never panic).
         assert_eq!(t.least_loaded(), 1);
     }
 

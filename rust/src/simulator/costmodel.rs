@@ -29,6 +29,20 @@ pub struct DecodeWork {
     pub home: RankId,
 }
 
+/// One distinct per-layer shard profile: most plans repeat the same
+/// head distribution across many layers (hybrid plans across *all*
+/// layers), so the step-time inner loop runs once per distinct profile —
+/// weighted by multiplicity — instead of once per layer.
+#[derive(Debug, Clone)]
+struct LayerProfile {
+    /// Number of layers sharing this profile.
+    layers: f64,
+    /// TP KV-head groups owned by each rank.
+    tp: Vec<u16>,
+    /// DP-replicated heads.
+    dp: u16,
+}
+
 /// Pre-computed per-plan constants for fast step costing.
 #[derive(Debug, Clone)]
 pub struct StepCostModel {
@@ -40,6 +54,9 @@ pub struct StepCostModel {
     tp_heads: Vec<Vec<u16>>,
     /// DP-replicated heads per layer.
     dp_heads: Vec<u16>,
+    /// Distinct (tp, dp) layer profiles with multiplicities — the
+    /// straggler scan `Σ_l max_r` collapses to `Σ_profiles n·max_r`.
+    profiles: Vec<LayerProfile>,
     /// FFN columns per rank (identical across layers).
     ffn_cols: Vec<usize>,
     /// Per-rank resident weight bytes (for memory-bound decode).
@@ -63,7 +80,14 @@ impl StepCostModel {
                 counts
             })
             .collect();
-        let dp_heads = plan.heads.layers.iter().map(|lh| lh.n_dp() as u16).collect();
+        let dp_heads: Vec<u16> = plan.heads.layers.iter().map(|lh| lh.n_dp() as u16).collect();
+        let mut profiles: Vec<LayerProfile> = Vec::new();
+        for (tp, &dp) in tp_heads.iter().zip(&dp_heads) {
+            match profiles.iter_mut().find(|p| p.tp == *tp && p.dp == dp) {
+                Some(p) => p.layers += 1.0,
+                None => profiles.push(LayerProfile { layers: 1.0, tp: tp.clone(), dp }),
+            }
+        }
         let cols_per_block = plan.model.d_ff / plan.ffn.n_blocks;
         let ffn_cols = (0..world)
             .map(|r| plan.ffn.blocks_of(r).len() * cols_per_block)
@@ -76,6 +100,7 @@ impl StepCostModel {
             world,
             tp_heads,
             dp_heads,
+            profiles,
             ffn_cols,
             weight_bytes,
         }
@@ -118,22 +143,19 @@ impl StepCostModel {
         }
         let ffn = m.ffn_flops(total_tokens);
 
-        // Sum over layers of the per-layer straggler.
+        // Sum over layers of the per-layer straggler — one scan per
+        // *distinct* layer profile, weighted by multiplicity.
         let eff = self.spec.effective_flops();
         let mut sum_layer_max = 0.0;
-        for l in 0..m.n_layers {
+        for p in &self.profiles {
             let mut layer_max: f64 = 0.0;
             for r in 0..self.world {
-                let flops = self.tp_heads[l][r] as f64 * tp_attn_flops
-                    + if self.dp_heads[l] > 0 {
-                        self.dp_heads[l] as f64 * dp_attn_flops[r]
-                    } else {
-                        0.0
-                    }
+                let flops = p.tp[r] as f64 * tp_attn_flops
+                    + if p.dp > 0 { p.dp as f64 * dp_attn_flops[r] } else { 0.0 }
                     + ffn.per_col * self.ffn_cols[r] as f64 * m.experts_per_token as f64;
                 layer_max = layer_max.max(flops / eff);
             }
-            sum_layer_max += layer_max;
+            sum_layer_max += p.layers * layer_max;
         }
 
         let collectives =
@@ -189,11 +211,11 @@ impl StepCostModel {
         let ffn_w_per_col = m.ffn_col_weight_bytes() as f64 * m.n_experts as f64 * expert_frac;
 
         let mut sum_layer_max = 0.0;
-        for l in 0..m.n_layers {
+        for p in &self.profiles {
             let mut layer_max: f64 = 0.0;
-            let dp = self.dp_heads[l] as f64;
+            let dp = p.dp as f64;
             for r in 0..self.world {
-                let tp = self.tp_heads[l][r] as f64;
+                let tp = p.tp[r] as f64;
                 let flops = tp * tp_attn_flops
                     + dp * dp_attn_flops[r]
                     + ffn.per_col * self.ffn_cols[r] as f64 * m.experts_per_token as f64;
@@ -203,7 +225,7 @@ impl StepCostModel {
                     + dp * dp_ctx[r] as f64 * kvb;
                 layer_max = layer_max.max((flops / eff).max(bytes / bw));
             }
-            sum_layer_max += layer_max;
+            sum_layer_max += p.layers * layer_max;
         }
 
         let collectives =
@@ -337,6 +359,31 @@ mod tests {
         let t_big = c.decode_step_time(&uniform_batch(64, 1024, 8));
         // 64× the batch must cost far less than 64× the time (weights amortize).
         assert!(t_big < t_small * 8.0, "small {t_small} big {t_big}");
+    }
+
+    #[test]
+    fn layer_profiles_cover_all_layers() {
+        let m = llama3_70b();
+        for w in [4usize, 7, 8] {
+            let c = cm(&ShardPlan::failsafe(&m, w));
+            let covered: f64 = c.profiles.iter().map(|p| p.layers).sum();
+            assert_eq!(covered as usize, m.n_layers, "w={w}");
+            // Hybrid plans are flat across layers — one profile.
+            assert_eq!(c.profiles.len(), 1, "w={w}");
+        }
+        // The deduped scan must agree with the naive per-layer scan.
+        let c = cm(&ShardPlan::nonuniform_naive(&m, 7));
+        let covered: f64 = c.profiles.iter().map(|p| p.layers).sum();
+        assert_eq!(covered as usize, m.n_layers);
+        for p in &c.profiles {
+            let n = c
+                .tp_heads
+                .iter()
+                .zip(&c.dp_heads)
+                .filter(|(tp, dp)| **tp == p.tp && **dp == p.dp)
+                .count();
+            assert_eq!(n as f64, p.layers);
+        }
     }
 
     #[test]

@@ -166,6 +166,7 @@ impl OnlineSim {
             aborted: Vec::new(),
             recoveries: Vec::new(),
             events: Vec::new(),
+            work: Vec::new(),
         }
     }
 
@@ -348,6 +349,9 @@ pub struct OnlineSession {
     aborted: Vec<RequestId>,
     recoveries: Vec<f64>,
     events: Vec<EngineEvent>,
+    /// Reused decode-work scratch for the per-tick cost-model call (no
+    /// per-step allocation at steady state).
+    work: Vec<DecodeWork>,
 }
 
 impl OnlineSession {
@@ -418,13 +422,15 @@ impl OnlineSession {
         // Admit from waiting while KV fits (project to full output
         // length), highest priority / earliest deadline first — matching
         // the engine's scheduling order (stable: arrival order for ties).
-        self.waiting.sort_by(|a, b| {
-            b.priority.cmp(&a.priority).then_with(|| {
-                let da = a.deadline.unwrap_or(f64::INFINITY);
-                let db = b.deadline.unwrap_or(f64::INFINITY);
-                da.partial_cmp(&db).unwrap()
-            })
-        });
+        if self.waiting.len() > 1 {
+            self.waiting.sort_by(|a, b| {
+                b.priority.cmp(&a.priority).then_with(|| {
+                    let da = a.deadline.unwrap_or(f64::INFINITY);
+                    let db = b.deadline.unwrap_or(f64::INFINITY);
+                    da.total_cmp(&db)
+                })
+            });
+        }
         self.admit_waiting();
 
         if self.running.is_empty() {
@@ -442,13 +448,11 @@ impl OnlineSession {
             return events;
         }
 
-        // One decode step.
-        let work: Vec<DecodeWork> = self
-            .running
-            .iter()
-            .map(|r| DecodeWork { context: r.context, home: r.home })
-            .collect();
-        let dt = self.cost.decode_step_time(&work);
+        // One decode step (work list reuses the session scratch buffer).
+        self.work.clear();
+        self.work
+            .extend(self.running.iter().map(|r| DecodeWork { context: r.context, home: r.home }));
+        let dt = self.cost.decode_step_time(&self.work);
         self.clock += dt;
         self.steps += 1;
         self.daemon.advance(dt, &mut self.backup);

@@ -2,9 +2,10 @@
 //! (proptest-style randomized sweeps via `benchkit::forall` — the offline
 //! build has no proptest crate; failures print a replayable case seed).
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 use failsafe::benchkit::forall;
+use failsafe::engine::KvStore;
 use failsafe::kvcache::{BackupStore, BlockAllocator, KvPlacement};
 use failsafe::model::ModelSpec;
 use failsafe::router::{DpRouter, RoutePolicy};
@@ -13,7 +14,7 @@ use failsafe::sharding::{
     plan_reconfig, AttentionPolicy, FfnPartition, FfnPolicy, HeadAssignment, ShardPlan, DP_OWNER,
 };
 use failsafe::util::Rng;
-use failsafe::RankId;
+use failsafe::{RankId, RequestId};
 
 const CASES: u64 = 300;
 
@@ -278,6 +279,373 @@ fn prop_backup_restore_accounting() {
             assert_eq!(lag, tokens - backed, "req {id}: lag {lag} vs {} - {}", tokens, backed);
         }
     });
+}
+
+// ------------------------------------------------------------ paged KV --
+
+/// Reference model for the engine KV store: the pre-paging per-slice
+/// semantics (one `HashMap` entry per (request, layer, head), full-clone
+/// backups). The paged store must be observationally equivalent.
+#[derive(Default)]
+struct RefKv {
+    hd: usize,
+    slices: HashMap<(RequestId, usize, usize), (Vec<f32>, Vec<f32>, usize, RankId)>,
+    backup: HashMap<(RequestId, usize, usize), (Vec<f32>, Vec<f32>, usize, RankId)>,
+}
+
+impl RefKv {
+    fn new(hd: usize) -> Self {
+        RefKv { hd, ..Default::default() }
+    }
+
+    fn tokens(&self, req: RequestId) -> usize {
+        self.slices
+            .iter()
+            .filter(|((r, l, _), _)| *r == req && *l == 0)
+            .map(|(_, s)| s.2)
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn append(&mut self, req: RequestId, l: usize, h: usize, rank: RankId, k: &[f32], v: &[f32]) {
+        let e = self.slices.entry((req, l, h)).or_default();
+        e.0.extend_from_slice(k);
+        e.1.extend_from_slice(v);
+        e.2 += k.len() / self.hd;
+        e.3 = rank;
+    }
+
+    fn gather(
+        &self,
+        req: RequestId,
+        l: usize,
+        heads: &[usize],
+        c: usize,
+        hb: usize,
+        want_v: bool,
+    ) -> Vec<f32> {
+        let hd = self.hd;
+        let mut out = vec![0.0f32; c * hb * hd];
+        for (hi, &h) in heads.iter().enumerate() {
+            if let Some(s) = self.slices.get(&(req, l, h)) {
+                let src = if want_v { &s.1 } else { &s.0 };
+                for t in 0..s.2.min(c) {
+                    out[(t * hb + hi) * hd..(t * hb + hi) * hd + hd]
+                        .copy_from_slice(&src[t * hd..(t + 1) * hd]);
+                }
+            }
+        }
+        out
+    }
+
+    fn backup_request(&mut self, req: RequestId) {
+        for ((r, l, h), s) in self.slices.iter() {
+            if *r == req {
+                self.backup.insert((*r, *l, *h), s.clone());
+            }
+        }
+    }
+
+    fn backed_tokens(&self, req: RequestId) -> usize {
+        self.backup
+            .iter()
+            .filter(|((r, l, _), _)| *r == req && *l == 0)
+            .map(|(_, s)| s.2)
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn wipe_rank(&mut self, rank: RankId) -> Vec<RequestId> {
+        let mut lost = Vec::new();
+        self.slices.retain(|(r, _, _), s| {
+            if s.3 == rank {
+                lost.push(*r);
+                false
+            } else {
+                true
+            }
+        });
+        lost.sort_unstable();
+        lost.dedup();
+        lost
+    }
+
+    fn restore(&mut self, req: RequestId, p: &KvPlacement, home: RankId) -> usize {
+        let mut restored = 0;
+        for ((r, l, h), s) in self.backup.iter() {
+            if *r != req || self.slices.contains_key(&(*r, *l, *h)) {
+                continue;
+            }
+            let mut s = s.clone();
+            s.3 = p.rank_for(*l, *h, home);
+            restored = restored.max(s.2);
+            self.slices.insert((*r, *l, *h), s);
+        }
+        restored
+    }
+
+    fn truncate(&mut self, req: RequestId, tokens: usize) {
+        let hd = self.hd;
+        for ((r, _, _), s) in self.slices.iter_mut() {
+            if *r == req && s.2 > tokens {
+                s.0.truncate(tokens * hd);
+                s.1.truncate(tokens * hd);
+                s.2 = tokens;
+            }
+        }
+    }
+
+    fn retag(&mut self, p: &KvPlacement, homes: &HashMap<RequestId, RankId>) {
+        for ((r, l, h), s) in self.slices.iter_mut() {
+            if let Some(&home) = homes.get(r) {
+                s.3 = p.rank_for(*l, *h, home);
+            }
+        }
+    }
+
+    fn release(&mut self, req: RequestId) {
+        self.slices.retain(|(r, _, _), _| *r != req);
+        self.backup.retain(|(r, _, _), _| *r != req);
+    }
+
+    fn bytes_by_rank(&self, world: usize) -> Vec<usize> {
+        let mut by = vec![0usize; world];
+        for s in self.slices.values() {
+            if s.3 < world {
+                by[s.3] += (s.0.len() + s.1.len()) * 4;
+            }
+        }
+        by
+    }
+}
+
+/// Deterministic KV value for (req, layer, head, token, dim) so the paged
+/// store and the reference receive identical bytes.
+fn kv_val(req: RequestId, l: usize, h: usize, t: usize, d: usize, v: bool) -> f32 {
+    let x = req as usize * 131 + l * 31 + h * 17 + t * 7 + d * 3 + v as usize;
+    (x % 997) as f32 * 0.125
+}
+
+/// Append one "forward step" of `n` tokens for `req` across every head
+/// group of `plan` — grouped/strided into the paged store, per-head into
+/// the reference.
+#[allow(clippy::too_many_arguments)]
+fn append_step(
+    kv: &mut KvStore,
+    rf: &mut RefKv,
+    plan: &ShardPlan,
+    req: RequestId,
+    home: RankId,
+    ctx: usize,
+    n: usize,
+    hd: usize,
+) {
+    for layer in 0..plan.model.n_layers {
+        let lh = &plan.heads.layers[layer];
+        let mut groups: Vec<(Vec<usize>, RankId)> = (0..plan.world())
+            .filter_map(|r| {
+                let tp = lh.tp_heads_of(r);
+                (!tp.is_empty()).then_some((tp, r))
+            })
+            .collect();
+        let dp = lh.dp_heads();
+        if !dp.is_empty() {
+            groups.push((dp, home));
+        }
+        for (heads, rank) in groups {
+            let stride = heads.len() * hd;
+            let mut ks = vec![0.0f32; n * stride];
+            let mut vs = vec![0.0f32; n * stride];
+            for t in 0..n {
+                for (hi, &h) in heads.iter().enumerate() {
+                    for d in 0..hd {
+                        ks[t * stride + hi * hd + d] = kv_val(req, layer, h, ctx + t, d, false);
+                        vs[t * stride + hi * hd + d] = kv_val(req, layer, h, ctx + t, d, true);
+                    }
+                }
+            }
+            let pool = kv.pool_handle(layer, &heads);
+            kv.append_group(req, pool, rank, n, &ks, &vs, stride);
+            for (hi, &h) in heads.iter().enumerate() {
+                let mut k1 = Vec::with_capacity(n * hd);
+                let mut v1 = Vec::with_capacity(n * hd);
+                for t in 0..n {
+                    k1.extend_from_slice(&ks[t * stride + hi * hd..t * stride + (hi + 1) * hd]);
+                    v1.extend_from_slice(&vs[t * stride + hi * hd..t * stride + (hi + 1) * hd]);
+                }
+                rf.append(req, layer, h, rank, &k1, &v1);
+            }
+        }
+    }
+}
+
+/// Compare every group gather (fast pool path *and* by-heads path)
+/// against the reference, plus the token index, backup coverage, and
+/// per-rank byte accounting.
+fn assert_kv_equiv(
+    kv: &mut KvStore,
+    rf: &RefKv,
+    plan: &ShardPlan,
+    world: usize,
+    reqs: &[RequestId],
+    ctx: &[usize],
+) {
+    for (i, &req) in reqs.iter().enumerate() {
+        assert_eq!(kv.tokens(req), rf.tokens(req), "tokens of req {req}");
+        assert_eq!(kv.backed_tokens(req), rf.backed_tokens(req), "backed of req {req}");
+        let c = ctx[i] + 3;
+        for layer in 0..plan.model.n_layers {
+            let lh = &plan.heads.layers[layer];
+            let mut groups: Vec<Vec<usize>> = (0..plan.world())
+                .map(|r| lh.tp_heads_of(r))
+                .filter(|g| !g.is_empty())
+                .collect();
+            let dp = lh.dp_heads();
+            if !dp.is_empty() {
+                groups.push(dp);
+            }
+            for heads in groups {
+                let hb = heads.len();
+                let pool = kv.pool_handle(layer, &heads);
+                for want_v in [false, true] {
+                    let want = rf.gather(req, layer, &heads, c, hb, want_v);
+                    let mut got = vec![f32::NAN; want.len()];
+                    kv.gather_into(req, pool, c, hb, want_v, &mut got);
+                    assert_eq!(
+                        got, want,
+                        "pool gather req {req} layer {layer} v={want_v} {heads:?}"
+                    );
+                    assert_eq!(
+                        kv.gather(req, layer, &heads, c, hb, want_v),
+                        want,
+                        "by-heads gather req {req} layer {layer} v={want_v}"
+                    );
+                }
+            }
+        }
+    }
+    assert_eq!(kv.bytes_by_rank(world), rf.bytes_by_rank(world), "bytes_by_rank");
+}
+
+/// The paged KV store is observationally equivalent to the old per-slice
+/// store through engine-shaped op sequences: grouped appends, proactive
+/// backups, the wipe → restore → truncate failure dance, and releases.
+#[test]
+fn prop_paged_kv_matches_reference() {
+    forall("paged kv vs reference", 40, 53, |rng| {
+        let mut m = ModelSpec {
+            name: "prop-kv".into(),
+            n_layers: rng.range(1, 4),
+            d_model: 64,
+            n_q_heads: 8,
+            n_kv_heads: [4usize, 8][rng.pick(2)],
+            head_dim: rng.range(2, 5),
+            d_ff: 128,
+            n_experts: 1,
+            experts_per_token: 1,
+            vocab: 100,
+            dtype_bytes: 2,
+        };
+        m.n_q_heads = m.n_kv_heads;
+        let world = rng.range(2, 4);
+        let plan = ShardPlan::failsafe(&m, world);
+        let placement = KvPlacement::new(&plan);
+        let hd = m.head_dim;
+        let mut kv = KvStore::new(hd);
+        let mut rf = RefKv::new(hd);
+        let n_req = rng.range(1, 4);
+        let reqs: Vec<RequestId> = (0..n_req as u64).collect();
+        let homes: Vec<RankId> = (0..n_req).map(|_| rng.pick(world)).collect();
+        let mut ctx = vec![0usize; n_req];
+
+        for _ in 0..rng.range(3, 12) {
+            match rng.pick(6) {
+                0..=2 => {
+                    let i = rng.pick(n_req);
+                    // Spans block boundaries (BLOCK_TOKENS = 16).
+                    let n = rng.range(1, 24);
+                    append_step(&mut kv, &mut rf, &plan, reqs[i], homes[i], ctx[i], n, hd);
+                    ctx[i] += n;
+                }
+                3 => {
+                    let i = rng.pick(n_req);
+                    kv.backup_request(reqs[i]);
+                    rf.backup_request(reqs[i]);
+                }
+                4 => {
+                    // The engine's failure dance on a random rank.
+                    let rank = rng.pick(world);
+                    let lost_kv = kv.wipe_rank(rank);
+                    let lost_rf = rf.wipe_rank(rank);
+                    assert_eq!(lost_kv, lost_rf, "wipe({rank}) affected set");
+                    for &id in &lost_kv {
+                        let i = id as usize;
+                        let a = kv.restore_request(id, &placement, homes[i]);
+                        let b = rf.restore(id, &placement, homes[i]);
+                        assert_eq!(a, b, "restored tokens of req {id}");
+                        let keep = a.min(ctx[i]);
+                        kv.truncate(id, keep);
+                        rf.truncate(id, keep);
+                        ctx[i] = keep;
+                    }
+                }
+                _ => {
+                    let i = rng.pick(n_req);
+                    kv.release(reqs[i]);
+                    rf.release(reqs[i]);
+                    ctx[i] = 0;
+                }
+            }
+            assert_kv_equiv(&mut kv, &rf, &plan, world, &reqs, &ctx);
+        }
+
+        // Rejoin-style retag + relayout onto the expanded plan: tags and
+        // bytes must match the reference retag; data must be unchanged.
+        let (plan2, _) = plan.expand();
+        let p2 = KvPlacement::new(&plan2);
+        let hm: HashMap<RequestId, RankId> =
+            reqs.iter().map(|&r| (r, homes[r as usize])).collect();
+        kv.retag_requests(&p2, &hm);
+        rf.retag(&p2, &hm);
+        kv.relayout(&plan2);
+        assert_eq!(kv.bytes_by_rank(world + 1), rf.bytes_by_rank(world + 1), "post-relayout");
+        for (i, &req) in reqs.iter().enumerate() {
+            assert_eq!(kv.tokens(req), rf.tokens(req));
+            let all: Vec<usize> = (0..m.n_kv_heads).collect();
+            for layer in 0..m.n_layers {
+                for want_v in [false, true] {
+                    assert_eq!(
+                        kv.gather(req, layer, &all, ctx[i] + 1, all.len(), want_v),
+                        rf.gather(req, layer, &all, ctx[i] + 1, all.len(), want_v),
+                        "post-relayout gather req {req} layer {layer} v={want_v}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// `KvStore::tokens` must stay O(1) in spirit: it reads a per-request
+/// index maintained by every mutation (append/wipe/restore/truncate/
+/// release), never scanning the store. This pins the layer-0-max
+/// semantics that index has to reproduce through each op.
+#[test]
+fn kv_tokens_is_indexed_not_scanned() {
+    let mut kv = KvStore::new(2);
+    assert_eq!(kv.tokens(1), 0);
+    kv.append(1, 3, 0, 0, &[1.0; 8], &[1.0; 8]); // layer 3: not the index layer
+    assert_eq!(kv.tokens(1), 0);
+    kv.append(1, 0, 0, 0, &[1.0; 8], &[1.0; 8]); // 4 tokens @ layer 0, rank 0
+    kv.append(1, 0, 1, 1, &[1.0; 4], &[1.0; 4]); // 2 tokens, other head, rank 1
+    assert_eq!(kv.tokens(1), 4);
+    kv.truncate(1, 3);
+    assert_eq!(kv.tokens(1), 3);
+    kv.wipe_rank(0);
+    assert_eq!(kv.tokens(1), 2, "surviving head's lane keeps the index honest");
+    kv.wipe_rank(1);
+    assert_eq!(kv.tokens(1), 0);
+    kv.release(1);
+    assert_eq!(kv.tokens(1), 0);
 }
 
 /// Decode batch former: DP profile sums to total context.
