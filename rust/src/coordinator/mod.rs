@@ -5,6 +5,24 @@
 //! This is the leader-side brain shared by the real engine
 //! ([`crate::engine`]) and the simulators: the engine executes its
 //! decisions against PJRT, the simulators against the cost model.
+//!
+//! A request walks `Queued → Prefilling → Decoding → Finished` (or
+//! `Aborted`), with every transition driven by the owning session:
+//!
+//! ```
+//! use failsafe::coordinator::{Request, RequestState};
+//!
+//! let mut req = Request::new(7, 0.0, vec![1, 2, 3], 2);
+//! assert_eq!(req.state, RequestState::Queued);
+//! req.state = RequestState::Prefilling;  // admission: a router picks `home`
+//! req.on_prefilled(3);                   // whole prompt processed…
+//! assert_eq!(req.state, RequestState::Decoding); // …so decode begins
+//! req.on_decoded(42);
+//! req.on_decoded(43);                    // generation budget (2) reached
+//! assert_eq!(req.state, RequestState::Finished);
+//! assert_eq!(req.output_tokens, vec![42, 43]);
+//! assert!(req.is_done());
+//! ```
 
 mod reconfig;
 mod request;

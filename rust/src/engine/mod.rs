@@ -45,7 +45,7 @@ mod shard;
 
 pub use self::core::{drive, Engine, EngineEvent, FaultPlan, FaultTrigger, ServingBackend};
 pub use kv::{KvStore, PoolId, BLOCK_TOKENS};
-pub use replay::{replay, AppliedEvent, ReplayOutcome, ReplayPace};
+pub use replay::{replay, AppliedEvent, ReplayOutcome, ReplayPace, TimelineCursor};
 pub use report::{GenerationResult, ServeReport};
 pub use session::SubmitOptions;
 pub use shard::RankShard;

@@ -11,6 +11,12 @@
 //! arrivals, and emits failure/rejoin events exactly as live serving
 //! would — and on the real engine the outputs stay bit-exact versus a
 //! fault-free run.
+//!
+//! The per-backend state (pending events, the gpu↔rank map, applied and
+//! skipped lists) lives in a [`TimelineCursor`] so drivers that interleave
+//! *several* backends — the multi-replica [`crate::fleet`] layer — can run
+//! one cursor per replica at each replica's own pace; [`replay()`] is the
+//! single-backend loop over one cursor.
 
 use std::collections::VecDeque;
 
@@ -65,6 +71,101 @@ pub struct ReplayOutcome {
     pub tokens_emitted: usize,
 }
 
+/// One backend's progress through a [`FaultTimeline`]: the queue of
+/// not-yet-fired events plus the gpu↔rank map that survives rank
+/// renumbering. [`replay()`] drives a single cursor to completion; the
+/// fleet layer ([`crate::fleet::Fleet::replay`]) holds one cursor per
+/// replica and fires each at its own replica's pace.
+#[derive(Debug)]
+pub struct TimelineCursor {
+    pending: VecDeque<TimelineEvent>,
+    /// `gpu_rank[g]` = the rank gpu `g` currently serves as (None while
+    /// down).
+    gpu_rank: Vec<Option<RankId>>,
+    /// Events that could not be applied (world would drop to zero —
+    /// unreachable with a validated timeline; recorded, not fatal).
+    pub skipped: Vec<TimelineEvent>,
+}
+
+impl TimelineCursor {
+    /// Validate `timeline` against a backend currently serving `world`
+    /// ranks and position the cursor before its first event.
+    pub fn new(timeline: &FaultTimeline, world: usize) -> Result<TimelineCursor> {
+        timeline.validate(world)?;
+        Ok(TimelineCursor {
+            pending: timeline.events().iter().copied().collect(),
+            gpu_rank: (0..world).map(Some).collect(),
+            skipped: Vec::new(),
+        })
+    }
+
+    /// True once every event has been applied (or recorded as skipped).
+    pub fn is_done(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Events not yet fired.
+    pub fn remaining(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Fire every event that is due against `backend`, given that the
+    /// backend has emitted `emitted` tokens so far. An idle (drained)
+    /// backend advances neither clock nor token count, so on an idle
+    /// backend the remaining events apply back-to-back instead of
+    /// hanging the replay. Returns the events applied by *this* call, in
+    /// order.
+    pub fn fire_due<B: ServingBackend + ?Sized>(
+        &mut self,
+        backend: &mut B,
+        method: RecoveryMethod,
+        pace: ReplayPace,
+        emitted: usize,
+    ) -> Result<Vec<AppliedEvent>> {
+        let mut applied = Vec::new();
+        while let Some(&ev) = self.pending.front() {
+            let due = match pace {
+                ReplayPace::Clock => backend.now() >= ev.at,
+                ReplayPace::Tokens { per_sec } => emitted as f64 >= ev.at * per_sec,
+            };
+            if !due && !backend.is_idle() {
+                break;
+            }
+            self.pending.pop_front();
+            match ev.kind {
+                FaultKind::Fail => {
+                    let rank = self.gpu_rank[ev.gpu]
+                        .with_context(|| format!("gpu {} is already down", ev.gpu))?;
+                    if backend.world() <= 1 {
+                        // Unreachable with a validated timeline; recorded
+                        // rather than failing the whole replay.
+                        self.skipped.push(ev);
+                        continue;
+                    }
+                    let latency_s = backend.inject_failure(rank, method)?;
+                    for slot in self.gpu_rank.iter_mut() {
+                        *slot = match *slot {
+                            Some(r) if r == rank => None,
+                            Some(r) if r > rank => Some(r - 1),
+                            other => other,
+                        };
+                    }
+                    let applied_at = backend.now();
+                    applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
+                }
+                FaultKind::Recover => {
+                    let latency_s = backend.inject_rejoin(method)?;
+                    let rank = backend.world() - 1; // rejoins append
+                    self.gpu_rank[ev.gpu] = Some(rank);
+                    let applied_at = backend.now();
+                    applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
+                }
+            }
+        }
+        Ok(applied)
+    }
+}
+
 /// Step `backend` to completion while firing every timeline event at its
 /// pace-determined due point. Events left over when the session drains
 /// (nothing in flight, nothing arriving) are applied back-to-back so the
@@ -93,58 +194,13 @@ pub fn replay<B: ServingBackend + ?Sized>(
     method: RecoveryMethod,
     pace: ReplayPace,
 ) -> Result<ReplayOutcome> {
-    let world0 = backend.world();
-    timeline.validate(world0)?;
-    // gpu_rank[g] = the rank gpu g currently serves as (None while down).
-    let mut gpu_rank: Vec<Option<RankId>> = (0..world0).map(Some).collect();
-    let mut pending: VecDeque<TimelineEvent> = timeline.events().iter().copied().collect();
+    let mut cursor = TimelineCursor::new(timeline, backend.world())?;
     let mut applied = Vec::new();
-    let mut skipped = Vec::new();
     let mut emitted = 0usize;
 
     loop {
-        while let Some(&ev) = pending.front() {
-            let due = match pace {
-                ReplayPace::Clock => backend.now() >= ev.at,
-                ReplayPace::Tokens { per_sec } => emitted as f64 >= ev.at * per_sec,
-            };
-            // A drained session advances neither clock nor token count:
-            // apply the remaining events back-to-back instead of hanging.
-            if !due && !backend.is_idle() {
-                break;
-            }
-            pending.pop_front();
-            match ev.kind {
-                FaultKind::Fail => {
-                    let rank = gpu_rank[ev.gpu]
-                        .with_context(|| format!("gpu {} is already down", ev.gpu))?;
-                    if backend.world() <= 1 {
-                        // Unreachable with a validated timeline; recorded
-                        // rather than failing the whole replay.
-                        skipped.push(ev);
-                        continue;
-                    }
-                    let latency_s = backend.inject_failure(rank, method)?;
-                    for slot in gpu_rank.iter_mut() {
-                        *slot = match *slot {
-                            Some(r) if r == rank => None,
-                            Some(r) if r > rank => Some(r - 1),
-                            other => other,
-                        };
-                    }
-                    let applied_at = backend.now();
-                    applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
-                }
-                FaultKind::Recover => {
-                    let latency_s = backend.inject_rejoin(method)?;
-                    let rank = backend.world() - 1; // rejoins append
-                    gpu_rank[ev.gpu] = Some(rank);
-                    let applied_at = backend.now();
-                    applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
-                }
-            }
-        }
-        if pending.is_empty() && backend.is_idle() {
+        applied.extend(cursor.fire_due(backend, method, pace, emitted)?);
+        if cursor.is_done() && backend.is_idle() {
             break;
         }
         emitted += backend
@@ -157,7 +213,7 @@ pub fn replay<B: ServingBackend + ?Sized>(
     Ok(ReplayOutcome {
         report: backend.report(),
         applied,
-        skipped,
+        skipped: cursor.skipped,
         final_world: backend.world(),
         tokens_emitted: emitted,
     })

@@ -81,6 +81,15 @@ impl ServeReport {
     pub fn result(&self, id: RequestId) -> Option<&GenerationResult> {
         self.results.iter().find(|r| r.id == id)
     }
+
+    /// Output tokens of requests that were *not* aborted — the numerator
+    /// of a goodput rate. Aborted requests' partial output is real work
+    /// the backend performed, but work the client never got value from,
+    /// so fleet-level aggregation (and anything else reasoning about
+    /// useful throughput) counts only this.
+    pub fn goodput_tokens(&self) -> usize {
+        self.results.iter().filter(|r| !r.aborted).map(|r| r.output_tokens.len()).sum()
+    }
 }
 
 /// Build a cumulative report over every request the session has seen, in

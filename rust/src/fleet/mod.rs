@@ -1,0 +1,538 @@
+//! Fleet-scale serving: N independent TP replicas behind one
+//! cluster-level load-aware router.
+//!
+//! One [`crate::engine::ServingBackend`] is a single TP group — FailSafe's
+//! §3 techniques keep *that group* fast when a GPU fails. A production
+//! deployment serves millions of users with **multiple** such groups
+//! (replicas) behind one front end, where a failure degrades *one*
+//! replica while the fleet keeps serving. This module is that front end:
+//!
+//! * [`Fleet`] owns the replicas (real [`crate::engine::Engine`]s or
+//!   simulated [`crate::simulator::OnlineSession`]s — anything behind the
+//!   `ServingBackend` trait) and steps them in lock-step rounds;
+//! * [`FleetRouter`] generalizes the intra-group load-aware routing to
+//!   replica granularity: admission-time placement by capacity-normalized
+//!   booked work, where capacity is each replica's *current* shard-plan
+//!   world size, degraded replicas (mid-reconfiguration after a failure)
+//!   are down-weighted, and draining replicas receive nothing;
+//! * on a replica failure, the fleet **redirects** that replica's
+//!   fresh (zero-progress) requests to healthy replicas and lets its
+//!   started requests **drain** in place — the coordinated cluster-level
+//!   view of recovery;
+//! * [`Fleet::replay`] drives per-replica
+//!   [`crate::cluster::FaultTimeline`]s through the shared
+//!   [`crate::engine::TimelineCursor`] machinery, so a cascade on one
+//!   replica overlaps healthy decode on the others;
+//! * [`FleetReport`] aggregates per-replica [`ServeReport`]s into
+//!   fleet-level goodput and latency distributions.
+//!
+//! ```
+//! use failsafe::engine::SubmitOptions;
+//! use failsafe::fleet::Fleet;
+//! use failsafe::recovery::RecoveryMethod;
+//! use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
+//!
+//! let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4);
+//! let mut fleet = Fleet::new();
+//! for session in sim.sessions(2) {
+//!     fleet.add_replica(Box::new(session));
+//! }
+//! // Load-aware placement: equal work spreads across the replicas.
+//! let a = fleet.submit_with(&vec![0u32; 512], SubmitOptions::new(4))?;
+//! let b = fleet.submit_with(&vec![0u32; 512], SubmitOptions::new(4))?;
+//! assert_eq!((fleet.replica_of(a), fleet.replica_of(b)), (Some(0), Some(1)));
+//! // Replica 0 loses a GPU: it reconfigures to TP3 and its un-started
+//! // work redirects to replica 1; the fleet keeps serving throughout.
+//! fleet.inject_failure(0, 1, RecoveryMethod::Full)?;
+//! let report = fleet.run_to_completion()?;
+//! assert_eq!(report.results.len(), 2);
+//! assert_eq!(report.goodput_tokens(), 8);
+//! # anyhow::Ok(())
+//! ```
+
+mod replay;
+mod router;
+
+pub use replay::FleetReplayOutcome;
+pub use router::{FleetRouter, ReplicaHealth, DEGRADED_WEIGHT};
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{
+    EngineEvent, GenerationResult, ServeReport, ServingBackend, SubmitOptions,
+};
+use crate::metrics::Cdf;
+use crate::recovery::RecoveryMethod;
+use crate::{RankId, RequestId, SimTime};
+
+/// Index of one replica within a fleet.
+pub type ReplicaId = usize;
+
+/// Fleet-level request handle — stable across redirects between replicas
+/// (the per-replica [`RequestId`] is not).
+pub type FleetRequestId = u64;
+
+/// One replica: a serving backend plus the fleet's operator state for it.
+struct Replica {
+    backend: Box<dyn ServingBackend>,
+    /// World size the replica was added with — the denominator of
+    /// "degraded" (currently serving on fewer ranks than built for).
+    spec_world: usize,
+    draining: bool,
+}
+
+/// Fleet-side bookkeeping for one submitted request.
+struct Tracked {
+    replica: ReplicaId,
+    local: RequestId,
+    /// Kept for redirects: a fresh request moved to another replica is
+    /// resubmitted from its original prompt and options.
+    prompt: Vec<u32>,
+    opts: SubmitOptions,
+    emitted: usize,
+    done: bool,
+    /// Token-units booked on the router for this request.
+    booked: f64,
+    redirects: usize,
+}
+
+/// One event observed while stepping the fleet: which replica produced
+/// it, and — for request-scoped events — the fleet-level request id it
+/// refers to (the raw [`EngineEvent`] still carries the replica-local
+/// id).
+#[derive(Debug, Clone)]
+pub struct FleetEvent {
+    pub replica: ReplicaId,
+    pub id: Option<FleetRequestId>,
+    pub event: EngineEvent,
+}
+
+/// Result of one fleet request, resolved on whichever replica finally
+/// served it.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    pub id: FleetRequestId,
+    /// Replica that served (or is serving) the request after any
+    /// redirects.
+    pub replica: ReplicaId,
+    /// Times the request was moved off a failing/draining replica before
+    /// it started.
+    pub redirects: usize,
+    /// The per-request outcome (its `id` field is rewritten to the fleet
+    /// id).
+    pub result: GenerationResult,
+}
+
+/// Aggregate report over every replica and every fleet request.
+#[derive(Debug, Clone, Default)]
+pub struct FleetReport {
+    /// Per-replica cumulative reports, indexed by [`ReplicaId`].
+    pub replicas: Vec<ServeReport>,
+    /// Per-request results in fleet submission order.
+    pub results: Vec<FleetResult>,
+    /// Fleet makespan: the slowest replica's wall/simulated time (the
+    /// replicas share one time axis — arrivals come from one trace).
+    pub wall_s: f64,
+}
+
+impl FleetReport {
+    /// Output tokens of non-aborted fleet requests (see
+    /// [`ServeReport::goodput_tokens`]).
+    pub fn goodput_tokens(&self) -> usize {
+        self.results
+            .iter()
+            .filter(|r| !r.result.aborted)
+            .map(|r| r.result.output_tokens.len())
+            .sum()
+    }
+
+    /// Fleet goodput rate: useful output tokens per second of makespan.
+    pub fn goodput_tps(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.goodput_tokens() as f64 / self.wall_s
+        }
+    }
+
+    /// One replica's useful output tokens per second of *fleet* makespan
+    /// — directly comparable against [`FleetReport::goodput_tps`].
+    pub fn replica_goodput_tps(&self, replica: ReplicaId) -> f64 {
+        if self.wall_s == 0.0 {
+            0.0
+        } else {
+            self.replicas[replica].goodput_tokens() as f64 / self.wall_s
+        }
+    }
+
+    /// Total decode tokens across the fleet (including aborted requests'
+    /// partial output).
+    pub fn decode_tokens(&self) -> usize {
+        self.replicas.iter().map(|r| r.decode_tokens).sum()
+    }
+
+    /// Total modeled recovery/reconfiguration stalls across the fleet.
+    pub fn recoveries(&self) -> usize {
+        self.replicas.iter().map(|r| r.recoveries.len()).sum()
+    }
+
+    /// Exact TTFT distribution of one replica's requests.
+    pub fn replica_ttft_cdf(&self, replica: ReplicaId) -> Cdf {
+        let mut cdf = Cdf::new();
+        for r in self.replicas[replica].results.iter() {
+            if let Some(t) = r.ttft_s {
+                cdf.record(t);
+            }
+        }
+        cdf
+    }
+
+    /// Exact fleet-wide TTFT distribution (per-replica CDFs merged).
+    pub fn ttft_cdf(&self) -> Cdf {
+        let mut cdf = Cdf::new();
+        for r in 0..self.replicas.len() {
+            cdf.merge(&self.replica_ttft_cdf(r));
+        }
+        cdf
+    }
+
+    /// Result of one fleet request by id.
+    pub fn result(&self, id: FleetRequestId) -> Option<&FleetResult> {
+        self.results.get(id as usize)
+    }
+}
+
+/// N independent serving replicas behind one load-aware router. See the
+/// module docs for the placement and failure semantics.
+pub struct Fleet {
+    replicas: Vec<Replica>,
+    router: FleetRouter,
+    requests: Vec<Tracked>,
+    /// `(replica, local id)` → fleet id, maintained across redirects.
+    local_map: HashMap<(ReplicaId, RequestId), FleetRequestId>,
+}
+
+impl Default for Fleet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fleet {
+    pub fn new() -> Fleet {
+        Fleet {
+            replicas: Vec::new(),
+            router: FleetRouter::new(0),
+            requests: Vec::new(),
+            local_map: HashMap::new(),
+        }
+    }
+
+    /// Add a replica (any [`ServingBackend`]); its current world size is
+    /// recorded as the healthy baseline. Returns its [`ReplicaId`].
+    pub fn add_replica(&mut self, backend: Box<dyn ServingBackend>) -> ReplicaId {
+        let spec_world = backend.world();
+        self.replicas.push(Replica { backend, spec_world, draining: false });
+        self.router.grow()
+    }
+
+    /// Number of replicas.
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// Current serving world size of `replica`.
+    pub fn replica_world(&self, replica: ReplicaId) -> usize {
+        self.replicas[replica].backend.world()
+    }
+
+    /// Current world size of every replica, by id.
+    pub fn worlds(&self) -> Vec<usize> {
+        self.replicas.iter().map(|r| r.backend.world()).collect()
+    }
+
+    /// The replica currently serving fleet request `id`.
+    pub fn replica_of(&self, id: FleetRequestId) -> Option<ReplicaId> {
+        self.requests.get(id as usize).map(|t| t.replica)
+    }
+
+    /// Shared read access to one replica's backend (assertions, clocks).
+    pub fn backend(&self, replica: ReplicaId) -> &dyn ServingBackend {
+        self.replicas[replica].backend.as_ref()
+    }
+
+    /// The cluster-level router (booked load inspection).
+    pub fn router(&self) -> &FleetRouter {
+        &self.router
+    }
+
+    /// `replica`'s backend clock.
+    pub fn clock(&self, replica: ReplicaId) -> SimTime {
+        self.replicas[replica].backend.now()
+    }
+
+    /// True while `replica` is draining (no new placements).
+    pub fn is_draining(&self, replica: ReplicaId) -> bool {
+        self.replicas[replica].draining
+    }
+
+    fn health(&self) -> Vec<ReplicaHealth> {
+        self.replicas
+            .iter()
+            .map(|r| ReplicaHealth {
+                world: r.backend.world(),
+                spec_world: r.spec_world,
+                draining: r.draining,
+            })
+            .collect()
+    }
+
+    /// Submit a request to the fleet: the router places it on the
+    /// least-loaded placeable replica (capacity-normalized; deterministic
+    /// tie-break to the lowest id) and books `prompt + budget` token
+    /// units there until it finishes. Errors when every replica is
+    /// draining, or the chosen backend rejects the submission.
+    pub fn submit_with(
+        &mut self,
+        prompt: &[u32],
+        opts: SubmitOptions,
+    ) -> Result<FleetRequestId> {
+        anyhow::ensure!(!self.replicas.is_empty(), "fleet has no replicas");
+        let work = (prompt.len() + opts.max_new_tokens) as f64;
+        let health = self.health();
+        let replica = self
+            .router
+            .place(work, &health)
+            .context("no placeable replica (all draining)")?;
+        let local = match self.replicas[replica].backend.submit_with(prompt, opts) {
+            Ok(l) => l,
+            Err(e) => {
+                self.router.complete(replica, work);
+                return Err(e);
+            }
+        };
+        let id = self.requests.len() as FleetRequestId;
+        self.requests.push(Tracked {
+            replica,
+            local,
+            prompt: prompt.to_vec(),
+            opts,
+            emitted: 0,
+            done: false,
+            booked: work,
+            redirects: 0,
+        });
+        self.local_map.insert((replica, local), id);
+        Ok(id)
+    }
+
+    /// Cancel a fleet request on whichever replica holds it.
+    pub fn abort(&mut self, id: FleetRequestId) -> Result<()> {
+        let (replica, local, booked, done) = {
+            let t = self
+                .requests
+                .get(id as usize)
+                .with_context(|| format!("abort: unknown fleet request {id}"))?;
+            (t.replica, t.local, t.booked, t.done)
+        };
+        anyhow::ensure!(!done, "abort: fleet request {id} already finished");
+        self.replicas[replica].backend.abort(local)?;
+        let t = &mut self.requests[id as usize];
+        t.done = true;
+        t.prompt = Vec::new();
+        self.router.complete(replica, booked);
+        Ok(())
+    }
+
+    /// Inject a hard failure of `rank` on `replica`. The replica
+    /// reconfigures to `world - 1` and keeps serving its started work;
+    /// its fresh (zero-progress) requests are redirected to healthy
+    /// replicas; the router's degraded down-weight steers new arrivals
+    /// away until the GPU rejoins. Returns the modeled recovery latency.
+    pub fn inject_failure(
+        &mut self,
+        replica: ReplicaId,
+        rank: RankId,
+        method: RecoveryMethod,
+    ) -> Result<f64> {
+        let latency = self.replicas[replica].backend.inject_failure(rank, method)?;
+        self.redirect_fresh(replica)?;
+        Ok(latency)
+    }
+
+    /// Rejoin a previously failed GPU on `replica` (the inverse of
+    /// [`Fleet::inject_failure`]); the replica's capacity grows back and
+    /// placement re-attracts work naturally.
+    pub fn inject_rejoin(&mut self, replica: ReplicaId, method: RecoveryMethod) -> Result<f64> {
+        self.replicas[replica].backend.inject_rejoin(method)
+    }
+
+    /// Begin draining `replica` (rolling maintenance, replica loss): no
+    /// new work is placed on it, its fresh requests move to healthy
+    /// replicas now, and its started requests finish in place. Returns
+    /// how many requests were redirected.
+    pub fn drain(&mut self, replica: ReplicaId) -> Result<usize> {
+        anyhow::ensure!(replica < self.replicas.len(), "drain: no replica {replica}");
+        self.replicas[replica].draining = true;
+        self.redirect_fresh(replica)
+    }
+
+    /// Return a drained replica to service.
+    pub fn resume(&mut self, replica: ReplicaId) {
+        self.replicas[replica].draining = false;
+    }
+
+    /// Move every zero-progress request off `from` onto the best healthy
+    /// replica: abort on `from`, resubmit with the original prompt and
+    /// options (same arrival — the fleet shares one time axis), rebook
+    /// the load. Requests that already emitted tokens stay and drain in
+    /// place (their continuation is bit-exact on the degraded replica).
+    /// If no other replica is placeable, everything stays put.
+    fn redirect_fresh(&mut self, from: ReplicaId) -> Result<usize> {
+        let mut health = self.health();
+        health[from].draining = true;
+        let mut moved = 0usize;
+        for id in 0..self.requests.len() {
+            let (replica, emitted, done, booked, old_local) = {
+                let t = &self.requests[id];
+                (t.replica, t.emitted, t.done, t.booked, t.local)
+            };
+            if replica != from || done || emitted > 0 {
+                continue;
+            }
+            let Some(target) = self.router.place(booked, &health) else {
+                break; // no healthy replica to take the work
+            };
+            self.replicas[from].backend.abort(old_local)?;
+            self.router.complete(from, booked);
+            // The request is no longer live on `from` either way: unmap it
+            // now so the buffered RequestAborted event cannot resolve and
+            // double-retire the booking.
+            self.local_map.remove(&(from, old_local));
+            let (prompt, opts) = {
+                let t = &self.requests[id];
+                (t.prompt.clone(), t.opts)
+            };
+            let new_local = match self.replicas[target].backend.submit_with(&prompt, opts) {
+                Ok(l) => l,
+                Err(e) => {
+                    // Already aborted on `from` and rejected by `target`:
+                    // the request is gone. Settle its bookkeeping before
+                    // surfacing the error so the fleet stays consistent.
+                    self.router.complete(target, booked);
+                    self.requests[id].done = true;
+                    return Err(e);
+                }
+            };
+            self.local_map.insert((target, new_local), id as FleetRequestId);
+            let t = &mut self.requests[id];
+            t.replica = target;
+            t.local = new_local;
+            t.redirects += 1;
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// One fleet round: step every non-idle replica once (in replica-id
+    /// order — deterministic) and return the events produced, tagged
+    /// with their replica and translated to fleet request ids.
+    pub fn step(&mut self) -> Result<Vec<FleetEvent>> {
+        let mut out = Vec::new();
+        for replica in 0..self.replicas.len() {
+            if self.replicas[replica].backend.is_idle() {
+                continue;
+            }
+            for event in self.replicas[replica].backend.step()? {
+                let id = self.note_event(replica, &event);
+                out.push(FleetEvent { replica, id, event });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Update per-request bookkeeping from one replica event; returns the
+    /// fleet id for request-scoped events (stale ids from redirected-away
+    /// requests resolve to `None`).
+    fn note_event(&mut self, replica: ReplicaId, event: &EngineEvent) -> Option<FleetRequestId> {
+        let local = match event {
+            EngineEvent::TokenEmitted { id, .. }
+            | EngineEvent::RequestFinished { id }
+            | EngineEvent::RequestAborted { id } => *id,
+            _ => return None,
+        };
+        let id = *self.local_map.get(&(replica, local))?;
+        let t = &mut self.requests[id as usize];
+        match event {
+            EngineEvent::TokenEmitted { .. } => {
+                t.emitted += 1;
+                // The prompt copy exists only for redirects, which require
+                // zero progress — once a token lands it is dead weight.
+                t.prompt = Vec::new();
+            }
+            EngineEvent::RequestFinished { .. } | EngineEvent::RequestAborted { .. } => {
+                if !t.done {
+                    t.done = true;
+                    t.prompt = Vec::new();
+                    let booked = t.booked;
+                    self.router.complete(replica, booked);
+                }
+            }
+            _ => {}
+        }
+        Some(id)
+    }
+
+    /// True when every replica is idle (all work served, all events
+    /// delivered).
+    pub fn is_idle(&self) -> bool {
+        self.replicas.iter().all(|r| r.backend.is_idle())
+    }
+
+    /// Step until the whole fleet is idle; returns the aggregate report.
+    pub fn run_to_completion(&mut self) -> Result<FleetReport> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(self.report())
+    }
+
+    /// Aggregate the per-replica reports into a [`FleetReport`], resolving
+    /// every fleet request on the replica that finally served it.
+    pub fn report(&self) -> FleetReport {
+        let replicas: Vec<ServeReport> =
+            self.replicas.iter().map(|r| r.backend.report()).collect();
+        let wall_s = replicas.iter().map(|r| r.wall_s).fold(0.0, f64::max);
+        let results = self
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(id, t)| {
+                let mut result =
+                    replicas[t.replica].result(t.local).cloned().unwrap_or_else(|| {
+                        GenerationResult {
+                            id: t.local,
+                            output_tokens: Vec::new(),
+                            ttft_s: None,
+                            max_tbt_s: 0.0,
+                            aborted: false,
+                        }
+                    });
+                result.id = id as FleetRequestId;
+                FleetResult {
+                    id: id as FleetRequestId,
+                    replica: t.replica,
+                    redirects: t.redirects,
+                    result,
+                }
+            })
+            .collect();
+        FleetReport { replicas, results, wall_s }
+    }
+}

@@ -1,0 +1,113 @@
+//! Multi-replica availability replay: one [`TimelineCursor`] per replica,
+//! each fired at its own replica's pace, so a cascade on one replica
+//! overlaps healthy decode on the others — the fleet-level scenario family
+//! (replica loss, rolling maintenance across the fleet, hot-replica skew)
+//! a single serving group cannot express.
+
+use anyhow::Result;
+
+use crate::cluster::{FaultKind, FaultTimeline, TimelineEvent};
+use crate::engine::{AppliedEvent, EngineEvent, ReplayPace, TimelineCursor};
+use crate::recovery::RecoveryMethod;
+
+use super::{Fleet, FleetReport, ReplicaId};
+
+/// Result of replaying per-replica timelines across a fleet.
+#[derive(Debug)]
+pub struct FleetReplayOutcome {
+    /// The aggregate report after the replay.
+    pub report: FleetReport,
+    /// Events applied in firing order, tagged with their replica.
+    pub applied: Vec<(ReplicaId, AppliedEvent)>,
+    /// Events that could not be applied (see
+    /// [`crate::engine::ReplayOutcome::skipped`]).
+    pub skipped: Vec<(ReplicaId, TimelineEvent)>,
+    /// World size of every replica after the replay, by id.
+    pub final_worlds: Vec<usize>,
+    /// Tokens emitted fleet-wide during the replay.
+    pub tokens_emitted: usize,
+    /// Requests moved off a failing replica before they started.
+    pub redirected: usize,
+}
+
+impl Fleet {
+    /// Step the fleet to completion while firing each replica's
+    /// [`FaultTimeline`] at that replica's own pace (its clock under
+    /// [`ReplayPace::Clock`], its emitted-token count under
+    /// [`ReplayPace::Tokens`] — the latter is deterministic and
+    /// bit-reproducible on the simulator). `timelines` pairs replica ids
+    /// with their timelines; replicas without an entry just serve.
+    ///
+    /// Each `Fail` event degrades one replica: it reconfigures, its
+    /// zero-progress requests redirect to healthy replicas, its started
+    /// requests drain in place, and the router's degraded down-weight
+    /// steers new placements away until the matching `Rejoin` restores
+    /// the capacity. Replicas left idle with events still pending apply
+    /// them back-to-back, exactly like the single-backend
+    /// [`crate::engine::replay()`].
+    pub fn replay(
+        &mut self,
+        timelines: &[(ReplicaId, FaultTimeline)],
+        method: RecoveryMethod,
+        pace: ReplayPace,
+    ) -> Result<FleetReplayOutcome> {
+        let n = self.len();
+        let mut cursors: Vec<Option<TimelineCursor>> = (0..n).map(|_| None).collect();
+        for (replica, timeline) in timelines {
+            anyhow::ensure!(*replica < n, "timeline for unknown replica {replica}");
+            anyhow::ensure!(
+                cursors[*replica].is_none(),
+                "two timelines for replica {replica}"
+            );
+            cursors[*replica] =
+                Some(TimelineCursor::new(timeline, self.replica_world(*replica))?);
+        }
+
+        let mut emitted = vec![0usize; n];
+        let mut applied: Vec<(ReplicaId, AppliedEvent)> = Vec::new();
+        let mut redirected = 0usize;
+
+        loop {
+            // Fire due events replica by replica (id order — deterministic).
+            for replica in 0..n {
+                let Some(cursor) = cursors[replica].as_mut() else { continue };
+                if cursor.is_done() {
+                    continue;
+                }
+                let backend = self.replicas[replica].backend.as_mut();
+                let newly = cursor.fire_due(backend, method, pace, emitted[replica])?;
+                for ev in newly {
+                    if ev.event.kind == FaultKind::Fail {
+                        redirected += self.redirect_fresh(replica)?;
+                    }
+                    applied.push((replica, ev));
+                }
+            }
+            let events_done = cursors.iter().flatten().all(TimelineCursor::is_done);
+            if events_done && self.is_idle() {
+                break;
+            }
+            for ev in self.step()? {
+                if matches!(ev.event, EngineEvent::TokenEmitted { .. }) {
+                    emitted[ev.replica] += 1;
+                }
+            }
+        }
+
+        let skipped = cursors
+            .iter()
+            .enumerate()
+            .flat_map(|(r, c)| {
+                c.iter().flat_map(move |c| c.skipped.iter().map(move |&ev| (r, ev)))
+            })
+            .collect();
+        Ok(FleetReplayOutcome {
+            report: self.report(),
+            applied,
+            skipped,
+            final_worlds: self.worlds(),
+            tokens_emitted: emitted.iter().sum(),
+            redirected,
+        })
+    }
+}

@@ -1,0 +1,223 @@
+//! Cluster-level load-aware placement: [`FleetRouter`] generalizes the
+//! intra-group [`crate::router::DpRouter`] / [`crate::router::LoadTracker`]
+//! pair from *ranks inside one TP group* to *replicas inside one fleet*.
+//!
+//! The same greedy online-makespan rule applies — place each arrival where
+//! the estimated pending work is smallest — but at replica granularity the
+//! denominators differ: replicas are not interchangeable. A replica
+//! serving on 7 of 8 GPUs (mid-reconfiguration after a failure) has less
+//! capacity than a healthy one, and a replica an operator is draining must
+//! receive no new work at all. So the score is *capacity-normalized*
+//! pending work, with a configurable extra down-weight while a replica is
+//! degraded, and draining replicas are excluded outright.
+
+use crate::fleet::ReplicaId;
+
+/// What the router needs to know about one replica at placement time:
+/// capacity comes from the replica's *current* shard plan (its serving
+/// world size right now vs. the world it was built for), draining from
+/// the fleet's operator state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaHealth {
+    /// Ranks currently serving (the backend's live `ShardPlan` world).
+    pub world: usize,
+    /// Ranks the replica serves with when fully healthy.
+    pub spec_world: usize,
+    /// True while the operator is draining this replica: in-flight work
+    /// finishes, no new work is placed.
+    pub draining: bool,
+}
+
+impl ReplicaHealth {
+    /// A replica currently serving with all of its `spec_world` ranks.
+    pub fn healthy(spec_world: usize) -> Self {
+        ReplicaHealth { world: spec_world, spec_world, draining: false }
+    }
+
+    /// Serving on fewer ranks than built for — mid-reconfiguration after
+    /// a failure, before every lost GPU has rejoined.
+    pub fn degraded(&self) -> bool {
+        self.world < self.spec_world
+    }
+}
+
+/// Admission-time placement of requests onto replicas.
+///
+/// Booked work is tracked in token units, exactly like
+/// [`crate::router::LoadTracker`] — prefill plus generation budget at
+/// submission, retired when the request finishes or aborts. Scores are
+/// `pending / capacity` where capacity is the replica's live world size,
+/// times `degraded_weight` while the replica is mid-reconfiguration, so a
+/// TP7-of-8 replica keeps serving but attracts proportionally (and then
+/// some) less new work. Ties break to the lowest replica id,
+/// deterministically.
+#[derive(Debug, Clone)]
+pub struct FleetRouter {
+    booked: Vec<f64>,
+    degraded_weight: f64,
+}
+
+/// Default extra down-weight applied to a degraded replica's capacity
+/// (on top of the missing ranks already shrinking it).
+pub const DEGRADED_WEIGHT: f64 = 0.5;
+
+impl FleetRouter {
+    pub fn new(replicas: usize) -> Self {
+        FleetRouter { booked: vec![0.0; replicas], degraded_weight: DEGRADED_WEIGHT }
+    }
+
+    /// Override the degraded-capacity multiplier (clamped to `(0, 1]`).
+    pub fn with_degraded_weight(mut self, w: f64) -> Self {
+        assert!(w > 0.0 && w <= 1.0, "degraded weight must be in (0, 1], got {w}");
+        self.degraded_weight = w;
+        self
+    }
+
+    /// Number of replicas tracked.
+    pub fn replicas(&self) -> usize {
+        self.booked.len()
+    }
+
+    /// Add one replica slot (booked load zero) — how [`crate::fleet::Fleet`]
+    /// grows the router as replicas are added. Returns the new id.
+    pub fn grow(&mut self) -> ReplicaId {
+        self.booked.push(0.0);
+        self.booked.len() - 1
+    }
+
+    /// Booked (not yet retired) work on `replica`, in token units.
+    pub fn pending(&self, replica: ReplicaId) -> f64 {
+        self.booked[replica]
+    }
+
+    /// The placement score of one replica given its health: pending work
+    /// per unit of effective capacity (lower is better), or `None` when
+    /// the replica must not receive new work (draining, or no ranks).
+    pub fn score(&self, replica: ReplicaId, health: &ReplicaHealth) -> Option<f64> {
+        if health.draining || health.world == 0 {
+            return None;
+        }
+        let mut capacity = health.world as f64;
+        if health.degraded() {
+            capacity *= self.degraded_weight;
+        }
+        Some(self.booked[replica] / capacity)
+    }
+
+    /// Place `work_tokens` of new work: pick the placeable replica with
+    /// the lowest capacity-normalized score (ties → lowest id), book the
+    /// work on it, and return it. `None` when every replica is draining.
+    /// `health` must have one entry per replica.
+    pub fn place(&mut self, work_tokens: f64, health: &[ReplicaHealth]) -> Option<ReplicaId> {
+        assert_eq!(health.len(), self.replicas(), "one health entry per replica");
+        let chosen = (0..self.replicas())
+            .filter_map(|r| self.score(r, &health[r]).map(|s| (r, s)))
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+            .map(|(r, _)| r)?;
+        self.book(chosen, work_tokens);
+        Some(chosen)
+    }
+
+    /// Book `work_tokens` on `replica` directly (used when the caller has
+    /// already chosen — e.g. re-booking redirected work). Non-finite
+    /// amounts are dropped, mirroring [`crate::router::LoadTracker`]: one
+    /// NaN would poison every later comparison.
+    pub fn book(&mut self, replica: ReplicaId, work_tokens: f64) {
+        if work_tokens.is_finite() {
+            self.booked[replica] += work_tokens;
+        }
+    }
+
+    /// Retire `work_tokens` of completed (or cancelled) work from
+    /// `replica`; floors at zero.
+    pub fn complete(&mut self, replica: ReplicaId, work_tokens: f64) {
+        if work_tokens.is_finite() {
+            self.booked[replica] = (self.booked[replica] - work_tokens).max(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn healthy(n: usize, world: usize) -> Vec<ReplicaHealth> {
+        vec![ReplicaHealth::healthy(world); n]
+    }
+
+    #[test]
+    fn equal_load_ties_break_to_lowest_id_deterministically() {
+        let mut r = FleetRouter::new(4);
+        let h = healthy(4, 8);
+        // All empty → replica 0; each placement books equal work, so the
+        // sequence cycles deterministically.
+        let picks: Vec<_> = (0..8).map(|_| r.place(100.0, &h).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn degraded_replica_is_down_weighted() {
+        let mut r = FleetRouter::new(2);
+        // Equal booked work; replica 0 lost a GPU (7 of 8) → its score is
+        // worse both from the missing rank and the degraded weight.
+        r.book(0, 700.0);
+        r.book(1, 700.0);
+        let h = vec![
+            ReplicaHealth { world: 7, spec_world: 8, draining: false },
+            ReplicaHealth::healthy(8),
+        ];
+        assert_eq!(r.place(10.0, &h), Some(1));
+        // Even a *less* loaded degraded replica loses while the capacity
+        // gap exceeds the load gap.
+        let mut r = FleetRouter::new(2);
+        r.book(0, 500.0);
+        r.book(1, 700.0);
+        assert_eq!(r.place(10.0, &h), Some(1), "500/3.5 > 700/8");
+    }
+
+    #[test]
+    fn draining_replica_receives_nothing_and_all_draining_is_none() {
+        let mut r = FleetRouter::new(2);
+        let h = vec![
+            ReplicaHealth { draining: true, ..ReplicaHealth::healthy(8) },
+            ReplicaHealth::healthy(8),
+        ];
+        for _ in 0..4 {
+            assert_eq!(r.place(50.0, &h), Some(1));
+        }
+        let all = vec![ReplicaHealth { draining: true, ..ReplicaHealth::healthy(8) }; 2];
+        assert_eq!(r.place(1.0, &all), None);
+    }
+
+    #[test]
+    fn completion_rebalances_and_floors_at_zero() {
+        let mut r = FleetRouter::new(2);
+        let h = healthy(2, 4);
+        assert_eq!(r.place(100.0, &h), Some(0));
+        assert_eq!(r.place(10.0, &h), Some(1));
+        r.complete(0, 100.0);
+        assert_eq!(r.place(10.0, &h), Some(0));
+        r.complete(1, 1e9);
+        assert_eq!(r.pending(1), 0.0);
+    }
+
+    #[test]
+    fn non_finite_work_is_rejected() {
+        let mut r = FleetRouter::new(2);
+        r.book(0, f64::NAN);
+        r.book(1, f64::INFINITY);
+        r.complete(0, f64::NAN);
+        assert_eq!(r.pending(0), 0.0);
+        assert_eq!(r.pending(1), 0.0);
+        assert_eq!(r.place(1.0, &healthy(2, 4)), Some(0));
+    }
+
+    #[test]
+    fn capacity_normalization_prefers_bigger_worlds_under_equal_load() {
+        let mut r = FleetRouter::new(2);
+        r.book(0, 400.0);
+        r.book(1, 400.0);
+        let h = vec![ReplicaHealth::healthy(4), ReplicaHealth::healthy(8)];
+        assert_eq!(r.place(10.0, &h), Some(1), "same load, twice the capacity");
+    }
+}

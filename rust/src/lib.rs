@@ -21,6 +21,10 @@
 //!   paper's evaluation figures at H100 scale.
 //! * [`engine`] + [`runtime`] — the *real* serving engine: a rust
 //!   coordinator executing AOT-compiled JAX/Pallas shards via PJRT.
+//! * [`fleet`] — multi-replica orchestration: N independent serving
+//!   groups (engine or simulator) behind one cluster-level load-aware
+//!   router, with per-replica fault-timeline replay and fleet-level
+//!   goodput reporting.
 //!
 //! ## The serving session API
 //!
@@ -79,6 +83,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod fleet;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

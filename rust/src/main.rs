@@ -1,11 +1,14 @@
 //! `failsafe` — the leader binary.
 //!
-//! Subcommands:
+//! Subcommands (the runtime `USAGE` listing is the same inventory;
+//! `docs/OPERATIONS.md` is the full operator guide):
 //!   serve     serve random prompts on the real engine (PJRT, AOT artifacts)
 //!   sim       online serving simulation at H100 scale (prefill|decode)
 //!   replay    step a serving session through an availability timeline of
 //!             GPU failures AND rejoins (cascades, flaky GPUs, rolling
 //!             maintenance), on the simulator or the real engine
+//!   fleet     N replicas behind the cluster-level load-aware router, with
+//!             a fault timeline on one replica while the rest keep serving
 //!   recover   cost one failure under every recovery method
 //!   traces    print workload/availability trace statistics
 //!
@@ -18,6 +21,9 @@
 //!   failsafe replay --world 8 --scenario gcp --duration 1800 --rate 0.5
 //!   failsafe replay --backend engine --world 3 --requests 6 --max-new 16
 //!   failsafe replay --timeline my_trace.txt --world 8
+//!   failsafe fleet --replicas 4 --world 8 --requests 80 --rate 8
+//!   failsafe fleet --replicas 4 --scenario cascade --fault-replica 0 --pace tokens
+//!   failsafe fleet --backend engine --replicas 2 --world 3 --requests 6
 //!   failsafe recover --model llama --world 8 --requests 60 --ctx 8000
 //!   failsafe traces --n 3000
 
@@ -27,10 +33,12 @@ use failsafe::config::{model_by_name, recovery_by_name, system_by_name, EngineCo
 use failsafe::engine::{
     drive, replay, Engine, FaultPlan, FaultTrigger, ReplayPace, ServingBackend, SubmitOptions,
 };
+use failsafe::fleet::Fleet;
 use failsafe::kvcache::BackupStore;
+use failsafe::model::ModelSpec;
 use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use failsafe::sharding::{HeadAssignment, ShardPlan};
-use failsafe::simulator::{OnlineMode, OnlineSim};
+use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
 use failsafe::traces::{
     cascade_then_heal, flaky_gpu, gcp_availability, mooncake_trace, openthoughts_trace,
     poisson_arrivals, rolling_maintenance, TraceStats,
@@ -39,22 +47,67 @@ use failsafe::util::cli::Args;
 use failsafe::util::Rng;
 use failsafe::{RankId, RequestId};
 
+/// The complete subcommand inventory, printed on unknown/missing
+/// subcommands (and kept in sync with `docs/OPERATIONS.md`).
+const USAGE: &str = "\
+usage: failsafe <subcommand> [--flags]
+
+subcommands:
+  serve     serve random prompts on the real engine (PJRT, AOT artifacts)
+  sim       online serving simulation at H100 scale (--mode prefill|decode)
+  replay    step one serving session through a fail/rejoin availability
+            timeline (--scenario cascade|flaky|rolling|gcp|synth, or
+            --timeline FILE), on the simulator or the real engine
+  fleet     N replicas behind the cluster-level load-aware router; a fault
+            timeline hits one replica (--fault-replica) while the others
+            keep serving (--backend sim|engine, --pace clock|tokens)
+  recover   cost one failure under every recovery method (Table 3 style)
+  traces    print workload/availability trace statistics
+
+see docs/OPERATIONS.md for every flag and sample output, or the
+`rust/src/main.rs` header for one-line examples";
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     match args.command.as_deref() {
         Some("serve") => serve(&args),
         Some("sim") => sim(&args),
         Some("replay") => replay_cmd(&args),
+        Some("fleet") => fleet_cmd(&args),
         Some("recover") => recover(&args),
         Some("traces") => traces(&args),
-        _ => {
-            eprintln!(
-                "usage: failsafe <serve|sim|replay|recover|traces> [--flags]\n\
-                 see `rust/src/main.rs` header for examples"
-            );
-            Ok(())
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+        None => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
         }
     }
+}
+
+/// `--model` with a friendly error instead of a panic on a bad value.
+fn model_arg(args: &Args) -> anyhow::Result<ModelSpec> {
+    let name = args.get_or("model", "llama");
+    model_by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name:?} (llama|mixtral|small)"))
+}
+
+/// `--system` with a friendly error instead of a panic on a bad value.
+fn system_arg(args: &Args) -> anyhow::Result<SystemConfig> {
+    let name = args.get_or("system", "failsafe");
+    system_by_name(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown system {name:?} (standard|nonuniform|membalance|failsafe)")
+    })
+}
+
+/// `--recovery` with a friendly error instead of silently defaulting on a
+/// bad value.
+fn recovery_arg(args: &Args) -> anyhow::Result<RecoveryMethod> {
+    let name = args.get_or("recovery", "full");
+    recovery_by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown recovery {name:?} (recompute|host|full|oracle)"))
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {
@@ -76,8 +129,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         let prompt: Vec<u32> = (0..len).map(|_| rng.range(1, 512) as u32).collect();
         engine.submit(&prompt, max_new)?;
     }
-    let method =
-        recovery_by_name(args.get_or("recovery", "full")).unwrap_or(RecoveryMethod::Full);
+    let method = recovery_arg(args)?;
     let fault = fail_rank.map(|rank| FaultPlan {
         trigger: FaultTrigger::AfterTokens(fail_after.unwrap_or(0)),
         rank,
@@ -106,8 +158,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn sim(args: &Args) -> anyhow::Result<()> {
-    let model = model_by_name(args.get_or("model", "llama")).expect("unknown model");
-    let system = system_by_name(args.get_or("system", "failsafe")).expect("unknown system");
+    let model = model_arg(args)?;
+    let system = system_arg(args)?;
     let world = args.get_usize("world", 7);
     let mode = match args.get_or("mode", "decode") {
         "prefill" => OnlineMode::Prefill,
@@ -193,19 +245,19 @@ fn build_timeline(args: &Args, world: usize) -> anyhow::Result<FaultTimeline> {
 }
 
 fn replay_cmd(args: &Args) -> anyhow::Result<()> {
-    let method =
-        recovery_by_name(args.get_or("recovery", "full")).unwrap_or(RecoveryMethod::Full);
+    let method = recovery_arg(args)?;
     match args.get_or("backend", "sim") {
         "engine" => replay_engine(args, method),
-        _ => replay_sim(args, method),
+        "sim" => replay_sim(args, method),
+        other => anyhow::bail!("unknown backend {other:?} (sim|engine)"),
     }
 }
 
 /// Replay on the cost-model backend: a Mooncake-style trace in flight
 /// while the timeline fires on the simulated clock.
 fn replay_sim(args: &Args, method: RecoveryMethod) -> anyhow::Result<()> {
-    let model = model_by_name(args.get_or("model", "llama")).expect("unknown model");
-    let system = system_by_name(args.get_or("system", "failsafe")).expect("unknown system");
+    let model = model_arg(args)?;
+    let system = system_arg(args)?;
     let world = args.get_usize("world", 8);
     let n = args.get_usize("requests", 40);
     let rate = args.get_f64("rate", 4.0);
@@ -325,8 +377,155 @@ fn replay_engine(args: &Args, method: RecoveryMethod) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Multi-replica fleet: N independent backends behind the cluster-level
+/// load-aware router, with a fault timeline on one replica while the rest
+/// keep serving. Sim backend by default; `--backend engine` needs AOT
+/// artifacts (one engine per replica).
+fn fleet_cmd(args: &Args) -> anyhow::Result<()> {
+    let method = recovery_arg(args)?;
+    let pace = match args.get_or("pace", "clock") {
+        "clock" => ReplayPace::Clock,
+        "tokens" => ReplayPace::Tokens { per_sec: args.get_f64("tokens-per-sec", 100.0) },
+        other => anyhow::bail!("unknown pace {other:?} (clock|tokens)"),
+    };
+    match args.get_or("backend", "sim") {
+        "engine" => fleet_engine(args, method, pace),
+        "sim" => fleet_sim(args, method, pace),
+        other => anyhow::bail!("unknown backend {other:?} (sim|engine)"),
+    }
+}
+
+/// The fleet's fault plan: one timeline on `--fault-replica` (default 0),
+/// from `--timeline FILE` or `--scenario`; `--scenario none` serves
+/// fault-free.
+fn fleet_timelines(
+    args: &Args,
+    world: usize,
+    replicas: usize,
+) -> anyhow::Result<Vec<(usize, FaultTimeline)>> {
+    if args.get("timeline").is_none() && args.get_or("scenario", "cascade") == "none" {
+        return Ok(Vec::new());
+    }
+    let fault_replica = args.get_usize("fault-replica", 0);
+    anyhow::ensure!(
+        fault_replica < replicas,
+        "--fault-replica {fault_replica} out of range (replicas {replicas})"
+    );
+    let timeline = build_timeline(args, world)?;
+    timeline.validate(world)?;
+    Ok(vec![(fault_replica, timeline)])
+}
+
+/// Fleet on the cost-model backend: a shared Mooncake-style arrival trace
+/// placed across the replicas by the load-aware fleet router.
+fn fleet_sim(args: &Args, method: RecoveryMethod, pace: ReplayPace) -> anyhow::Result<()> {
+    let model = model_arg(args)?;
+    let system = system_arg(args)?;
+    let world = args.get_usize("world", 8);
+    let replicas = args.get_usize("replicas", 4);
+    let n = args.get_usize("requests", 80);
+    let rate = args.get_f64("rate", 8.0);
+    let seed = args.get_u64("seed", 42);
+    let timelines = fleet_timelines(args, world, replicas)?;
+
+    section(&format!(
+        "fleet: {replicas} × {} TP{world} replicas (sim), {n} requests @ {rate} req/s",
+        system.name
+    ));
+    let mut trace = mooncake_trace(n, seed);
+    for r in trace.iter_mut() {
+        r.input_tokens = r.input_tokens.clamp(1, 16_000);
+        r.output_tokens = r.output_tokens.clamp(8, 64);
+    }
+    poisson_arrivals(&mut trace, rate, seed);
+
+    let sim = OnlineSim::new(system, OnlineMode::Decode, world).with_model(model);
+    let mut fleet = Fleet::new();
+    for session in sim.sessions(replicas) {
+        fleet.add_replica(Box::new(session));
+    }
+    for r in &trace {
+        fleet.submit_with(
+            &vec![0u32; r.input_tokens],
+            SubmitOptions::new(r.output_tokens).at(r.arrival),
+        )?;
+    }
+    let out = fleet.replay(&timelines, method, pace)?;
+    print_fleet_outcome(&out);
+    Ok(())
+}
+
+/// Fleet on the real engine (needs AOT artifacts): one engine per
+/// replica, random prompts placed by the fleet router.
+fn fleet_engine(args: &Args, method: RecoveryMethod, pace: ReplayPace) -> anyhow::Result<()> {
+    let cfg = EngineConfig::from_args(args);
+    let replicas = args.get_usize("replicas", 2);
+    let n = args.get_usize("requests", 6);
+    let max_new = args.get_usize("max-new", 12);
+    let timelines = fleet_timelines(args, cfg.world, replicas)?;
+
+    section(&format!(
+        "fleet: {replicas} × TP{} replicas on the real engine ({n} requests, budget {max_new})",
+        cfg.world
+    ));
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut fleet = Fleet::new();
+    for _ in 0..replicas {
+        fleet.add_replica(Box::new(Engine::new(cfg.clone())?));
+    }
+    for _ in 0..n {
+        let len = rng.range(8, 48);
+        let prompt: Vec<u32> = (0..len).map(|_| rng.range(1, 512) as u32).collect();
+        fleet.submit_with(&prompt, SubmitOptions::new(max_new))?;
+    }
+    let out = fleet.replay(&timelines, method, pace)?;
+    print_fleet_outcome(&out);
+    Ok(())
+}
+
+/// Shared printer for both fleet backends: applied events, per-replica
+/// summaries, and the fleet-level goodput line.
+fn print_fleet_outcome(out: &failsafe::fleet::FleetReplayOutcome) {
+    for (replica, a) in &out.applied {
+        println!(
+            "  replica {replica}: t={:>8.2}s  {:<6} gpu {} (rank {:>2})  latency {:>8.1} ms",
+            a.applied_at,
+            a.event.kind.name(),
+            a.event.gpu,
+            a.rank,
+            a.latency_s * 1e3
+        );
+    }
+    let report = &out.report;
+    for (r, rep) in report.replicas.iter().enumerate() {
+        let mut ttft = report.replica_ttft_cdf(r);
+        println!(
+            "  replica {r}: world {} | {} req | {} decode tok | goodput {:>6.0} tok/s \
+             | TTFT p50/p90 {:.2}/{:.2} s",
+            out.final_worlds[r],
+            rep.results.len(),
+            rep.decode_tokens,
+            report.replica_goodput_tps(r),
+            ttft.quantile(0.5),
+            ttft.quantile(0.9),
+        );
+    }
+    let best = (0..report.replicas.len())
+        .map(|r| report.replica_goodput_tps(r))
+        .fold(0.0, f64::max);
+    println!(
+        "fleet: goodput {:.0} tok/s over {:.1}s (best single replica {:.0} tok/s) \
+         | {} redirected | {} reconfigs",
+        report.goodput_tps(),
+        report.wall_s,
+        best,
+        out.redirected,
+        report.recoveries()
+    );
+}
+
 fn recover(args: &Args) -> anyhow::Result<()> {
-    let model = model_by_name(args.get_or("model", "llama")).expect("unknown model");
+    let model = model_arg(args)?;
     let world = args.get_usize("world", 8);
     let n_req = args.get_usize("requests", 60);
     let ctx = args.get_usize("ctx", 8000);

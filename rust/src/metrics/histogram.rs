@@ -119,6 +119,14 @@ impl Cdf {
         self.sorted = false;
     }
 
+    /// Fold another CDF's samples into this one — how the fleet layer
+    /// aggregates per-replica latency distributions into one fleet-level
+    /// distribution without losing exactness.
+    pub fn merge(&mut self, other: &Cdf) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -183,6 +191,23 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert!(h.max() == 22.0);
         assert!(h.quantile(0.4) < 0.1);
+    }
+
+    #[test]
+    fn cdf_merge_combines_samples() {
+        let mut a = Cdf::new();
+        let mut b = Cdf::new();
+        for v in [1.0, 3.0] {
+            a.record(v);
+        }
+        for v in [2.0, 4.0] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.quantile(0.0), 1.0);
+        assert_eq!(a.quantile(1.0), 4.0);
+        assert_eq!(a.quantile(0.5), 2.5);
     }
 
     #[test]

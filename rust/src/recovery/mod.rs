@@ -10,6 +10,39 @@
 //! | `Host`      | restore from host DRAM  | full re-shard reload (PCIe)|
 //! | `Full`      | restore from host DRAM  | on-demand, non-redundant   |
 //! | `Oracle`    | metadata only (free)    | metadata only (free)       |
+//!
+//! [`plan_recovery`] costs one failure given the shard plans before and
+//! after, the in-flight requests, and the proactive backup state:
+//!
+//! ```
+//! use failsafe::cluster::{GpuSpec, Interconnect};
+//! use failsafe::kvcache::BackupStore;
+//! use failsafe::model::llama3_70b;
+//! use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
+//! use failsafe::sharding::ShardPlan;
+//!
+//! let model = llama3_70b();
+//! let spec = GpuSpec::h100();
+//! let ic = Interconnect::new(spec.clone());
+//! let old_plan = ShardPlan::failsafe(&model, 8);
+//! let (new_plan, survivor_map) = old_plan.shrink(3); // rank 3 dies
+//! let mut backup = BackupStore::new(1 << 42);
+//! backup.backup(0, 8000, model.kv_bytes_per_token()); // proactive mirror
+//! let input = RecoveryInput {
+//!     spec: &spec,
+//!     ic: &ic,
+//!     old_plan: &old_plan,
+//!     new_plan: &new_plan,
+//!     survivor_map: &survivor_map,
+//!     failed_rank: 3,
+//!     requests: &[(0, 8000, 1)], // one 8000-token request homed on rank 1
+//!     backup: &backup,
+//! };
+//! let full = plan_recovery(RecoveryMethod::Full, &input);
+//! let recompute = plan_recovery(RecoveryMethod::Recompute, &input);
+//! assert!(full.total_s < recompute.total_s, "lightning recovery wins");
+//! assert!(plan_recovery(RecoveryMethod::Oracle, &input).total_s <= full.total_s);
+//! ```
 
 mod daemon;
 mod latency;

@@ -6,6 +6,20 @@
 //! rule — route each arrival to the rank with the least estimated pending
 //! work (in token units) — which continuously adapts to skewed request
 //! lengths. The round-robin router is the baseline of Fig 3.
+//! [`crate::fleet::FleetRouter`] generalizes the same rule from ranks
+//! inside one TP group to replicas inside a fleet.
+//!
+//! ```
+//! use failsafe::router::{DpRouter, RoutePolicy};
+//!
+//! let mut router = DpRouter::new(RoutePolicy::LeastLoaded, 4);
+//! let home = router.route(1000.0);    // empty tracker: ties break to rank 0
+//! assert_eq!(home, 0);
+//! assert_eq!(router.route(10.0), 1);  // least-loaded avoids the busy rank
+//! router.complete(home, 1000.0);      // work retired: rank 0 attracts again
+//! assert_eq!(router.route(10.0), 0);
+//! assert_eq!(router.tracker().pending(1), 10.0);
+//! ```
 
 mod affinity;
 mod load;

@@ -10,6 +10,28 @@
 //! * [`RuntimeClient`] — PJRT CPU client with a compiled-executable cache
 //!   keyed by variant name; HLO **text** loading (xla_extension 0.5.1
 //!   rejects jax≥0.5 serialized protos).
+//!
+//! The manifest layer needs no artifacts beyond its text file, so it can
+//! be exercised standalone:
+//!
+//! ```
+//! use failsafe::runtime::Manifest;
+//!
+//! let dir = std::env::temp_dir().join("failsafe_runtime_doctest");
+//! std::fs::create_dir_all(&dir)?;
+//! std::fs::write(
+//!     dir.join("manifest.txt"),
+//!     "model d_model=256 n_heads=8 head_dim=32 d_ff=1024 n_layers=4 vocab=512\n\
+//!      hlo attn_b1_s16_c0_h2 kind=attn b=1 s=16 c=0 h=2 path=hlo/a.hlo.txt\n\
+//!      weight wq.0 rows=256 cols=256 path=weights/wq.0.bin\n",
+//! )?;
+//! let manifest = Manifest::load(&dir)?;
+//! assert_eq!(manifest.model.n_layers, 4);
+//! assert!(manifest.attn_variant(1, 16, 0, 2).is_some());
+//! assert!(manifest.attn_variant(1, 16, 0, 4).is_none());
+//! assert_eq!(manifest.buckets("attn", |v| v.s), vec![16]);
+//! # anyhow::Ok(())
+//! ```
 
 mod client;
 mod manifest;

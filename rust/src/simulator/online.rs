@@ -170,6 +170,13 @@ impl OnlineSim {
         }
     }
 
+    /// `n` independent steppable sessions with identical configuration —
+    /// the replicas of a [`crate::fleet::Fleet`]. Each session owns its
+    /// own clock, router, KV budget, and fault state; nothing is shared.
+    pub fn sessions(&self, n: usize) -> Vec<OnlineSession> {
+        (0..n).map(|_| self.session()).collect()
+    }
+
     /// Run the trace to completion (or until `max_sim_time`).
     pub fn run(&self, trace: &[TraceRequest], fault: Option<RecoveryEvent>) -> OnlineOutcome {
         match self.mode {

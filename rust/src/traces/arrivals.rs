@@ -24,6 +24,21 @@ pub fn scale_arrivals(reqs: &mut [TraceRequest], factor: f64) {
     }
 }
 
+/// Split a shared arrival trace across `n` replicas round-robin in
+/// arrival order — the *static* baseline for multi-replica serving.
+/// Every replica sees arrivals in the original time order and the split
+/// is load-oblivious; the [`crate::fleet::FleetRouter`] is the
+/// load-aware alternative that places each arrival by per-replica
+/// booked work instead.
+pub fn split_arrivals(reqs: &[TraceRequest], n: usize) -> Vec<Vec<TraceRequest>> {
+    assert!(n > 0, "cannot split a trace across zero replicas");
+    let mut out = vec![Vec::with_capacity(reqs.len() / n + 1); n];
+    for (i, r) in reqs.iter().enumerate() {
+        out[i % n].push(*r);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -38,6 +53,23 @@ mod tests {
         assert!((rate - 10.0).abs() / 10.0 < 0.1, "rate {rate}");
         // monotone arrivals
         assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    #[test]
+    fn split_round_robins_in_arrival_order() {
+        let mut reqs = mooncake_trace(10, 5);
+        poisson_arrivals(&mut reqs, 5.0, 5);
+        let parts = split_arrivals(&reqs, 3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), 10);
+        assert_eq!(parts[0].len(), 4);
+        assert_eq!(parts[1].len(), 3);
+        // Each shard preserves the global arrival order.
+        for p in &parts {
+            assert!(p.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        }
+        assert_eq!(parts[1][0], reqs[1]);
+        assert_eq!(parts[2][1], reqs[5]);
     }
 
     #[test]

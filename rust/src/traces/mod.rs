@@ -10,6 +10,19 @@
 //! The fault-scenario generators ([`flaky_gpu`], [`rolling_maintenance`],
 //! [`cascade_then_heal`]) additionally express named availability
 //! scenarios as [`crate::cluster::FaultTimeline`]s for the replay driver.
+//!
+//! ```
+//! use failsafe::traces::{mooncake_trace, poisson_arrivals, split_arrivals};
+//!
+//! let mut trace = mooncake_trace(64, 7);  // seeded: reproducible statistics
+//! poisson_arrivals(&mut trace, 4.0, 7);   // stamp ~4 req/s Poisson arrivals
+//! assert!(trace.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+//! // Round-robin replica split — the static baseline the fleet router's
+//! // load-aware placement is measured against.
+//! let shards = split_arrivals(&trace, 4);
+//! assert_eq!(shards.len(), 4);
+//! assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), 64);
+//! ```
 
 mod arrivals;
 mod faults;
@@ -17,7 +30,7 @@ mod gcp;
 mod lengths;
 mod request;
 
-pub use arrivals::{poisson_arrivals, scale_arrivals};
+pub use arrivals::{poisson_arrivals, scale_arrivals, split_arrivals};
 pub use faults::{cascade_then_heal, flaky_gpu, rolling_maintenance};
 pub use gcp::gcp_availability;
 pub use lengths::{mooncake_trace, openthoughts_trace, TraceStats};

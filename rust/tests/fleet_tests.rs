@@ -1,0 +1,228 @@
+//! Fleet-level orchestration over the simulator backend: load-aware
+//! placement across replicas, degraded-replica down-weighting, drain and
+//! redirect on replica trouble, and multi-replica timeline replay — all
+//! through the public `Fleet` surface, no AOT artifacts required.
+
+use failsafe::cluster::FaultKind;
+use failsafe::engine::{ReplayPace, SubmitOptions};
+use failsafe::fleet::Fleet;
+use failsafe::model::llama3_70b;
+use failsafe::recovery::RecoveryMethod;
+use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
+use failsafe::traces::{cascade_then_heal, mooncake_trace, poisson_arrivals, TraceRequest};
+
+fn fleet(replicas: usize, world: usize) -> Fleet {
+    let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, world)
+        .with_model(llama3_70b());
+    let mut fleet = Fleet::new();
+    for session in sim.sessions(replicas) {
+        fleet.add_replica(Box::new(session));
+    }
+    fleet
+}
+
+fn shared_trace(n: usize, rate: f64, seed: u64) -> Vec<TraceRequest> {
+    let mut trace = mooncake_trace(n, seed);
+    for r in trace.iter_mut() {
+        r.input_tokens = r.input_tokens.clamp(1, 8192);
+        r.output_tokens = r.output_tokens.clamp(8, 32);
+    }
+    poisson_arrivals(&mut trace, rate, seed);
+    trace
+}
+
+fn submit_trace(fleet: &mut Fleet, trace: &[TraceRequest]) {
+    for r in trace {
+        fleet
+            .submit_with(
+                &vec![0u32; r.input_tokens],
+                SubmitOptions::new(r.output_tokens).at(r.arrival),
+            )
+            .expect("submit");
+    }
+}
+
+/// Equal work on an idle fleet places deterministically: ties break to
+/// the lowest replica id, and equal booked loads cycle in id order.
+#[test]
+fn equal_load_placement_ties_break_deterministically() {
+    let mut f = fleet(4, 8);
+    let prompt = vec![0u32; 1024];
+    let homes: Vec<_> = (0..8)
+        .map(|_| {
+            let id = f.submit_with(&prompt, SubmitOptions::new(8)).unwrap();
+            f.replica_of(id).unwrap()
+        })
+        .collect();
+    assert_eq!(homes, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+}
+
+/// A replica mid-reconfiguration (serving on 7 of 8 GPUs) is down-weighted:
+/// its fresh queued work redirects to healthy replicas at the failure, and
+/// new arrivals steer away until capacity returns.
+#[test]
+fn degraded_replica_redirects_during_reconfiguration() {
+    let mut f = fleet(2, 8);
+    let prompt = vec![0u32; 2048];
+    // Four running requests per replica (arrival 0 → all admitted on the
+    // first tick), all past their first token after a couple of steps.
+    for _ in 0..8 {
+        f.submit_with(&prompt, SubmitOptions::new(16)).unwrap();
+    }
+    for _ in 0..3 {
+        f.step().unwrap();
+    }
+    // A future arrival, booked on replica 0 by the tie-break.
+    let fresh = f.submit_with(&prompt, SubmitOptions::new(16).at(50.0)).unwrap();
+    assert_eq!(f.replica_of(fresh), Some(0));
+
+    f.inject_failure(0, 1, RecoveryMethod::Full).unwrap();
+    assert_eq!(f.replica_world(0), 7, "replica 0 reconfigured to TP7");
+    assert_eq!(f.replica_world(1), 8);
+    // The zero-progress request moved off the degraded replica…
+    assert_eq!(f.replica_of(fresh), Some(1));
+    // …and new arrivals avoid it while its capacity is down-weighted.
+    let next = f.submit_with(&prompt, SubmitOptions::new(16)).unwrap();
+    assert_eq!(f.replica_of(next), Some(1));
+
+    let report = f.run_to_completion().unwrap();
+    for r in &report.results {
+        assert!(!r.result.aborted, "fleet request {} lost", r.id);
+        assert_eq!(r.result.output_tokens.len(), 16);
+    }
+    assert_eq!(report.result(fresh).unwrap().redirects, 1);
+}
+
+/// Losing a replica entirely (operator drain): no new placements, fresh
+/// requests move off immediately, started requests finish in place, and
+/// the fleet serves everything.
+#[test]
+fn replica_loss_drains_and_redirects() {
+    let mut f = fleet(2, 4);
+    let prompt = vec![0u32; 1024];
+    for _ in 0..6 {
+        f.submit_with(&prompt, SubmitOptions::new(12)).unwrap();
+    }
+    for _ in 0..3 {
+        f.step().unwrap();
+    }
+    // Two future arrivals, one booked per replica.
+    let f0 = f.submit_with(&prompt, SubmitOptions::new(12).at(40.0)).unwrap();
+    let f1 = f.submit_with(&prompt, SubmitOptions::new(12).at(40.0)).unwrap();
+    assert_eq!((f.replica_of(f0), f.replica_of(f1)), (Some(0), Some(1)));
+
+    let moved = f.drain(0).unwrap();
+    assert!(f.is_draining(0));
+    assert_eq!(moved, 1, "only the un-started request moves");
+    assert_eq!(f.replica_of(f0), Some(1));
+    // Nothing new lands on a draining replica.
+    let late = f.submit_with(&prompt, SubmitOptions::new(12)).unwrap();
+    assert_eq!(f.replica_of(late), Some(1));
+
+    let report = f.run_to_completion().unwrap();
+    assert!(f.backend(0).is_idle(), "drained replica fully drained");
+    for r in &report.results {
+        assert!(!r.result.aborted);
+        assert_eq!(r.result.output_tokens.len(), 12);
+    }
+    // The redirect leaves an aborted stub on the drained replica's local
+    // report; the fleet-level view hides it.
+    assert!(report.replicas[0].results.iter().any(|r| r.aborted));
+    assert_eq!(report.result(late).unwrap().replica, 1);
+}
+
+/// Token-paced 4-replica replay is bit-reproducible: two identical runs
+/// fire the same events at the same points and produce identical
+/// token-for-token reports.
+#[test]
+fn four_replica_token_paced_replay_is_deterministic() {
+    let trace = shared_trace(40, 8.0, 13);
+    let timeline = cascade_then_heal(2, 4.0, 2.0, 12.0);
+    let run = || {
+        let mut f = fleet(4, 8);
+        submit_trace(&mut f, &trace);
+        let out = f
+            .replay(
+                &[(0, timeline.clone())],
+                RecoveryMethod::Full,
+                ReplayPace::Tokens { per_sec: 4.0 },
+            )
+            .unwrap();
+        let applied: Vec<_> = out
+            .applied
+            .iter()
+            .map(|(r, a)| (*r, a.event.gpu, a.rank, a.event.kind))
+            .collect();
+        let results: Vec<_> = out
+            .report
+            .results
+            .iter()
+            .map(|r| {
+                (r.replica, r.redirects, r.result.output_tokens.len(), r.result.ttft_s)
+            })
+            .collect();
+        (applied, results, out.final_worlds.clone(), out.tokens_emitted, out.redirected)
+    };
+    assert_eq!(run(), run());
+}
+
+/// The acceptance scenario: 4 replicas under one shared arrival trace, a
+/// cascade on replica 0 early in the run. The fleet keeps serving —
+/// replica 0's fresh work redirects and its started work drains in place
+/// — every request completes, the worlds heal, and aggregate goodput
+/// exceeds any single replica's.
+#[test]
+fn cascade_on_one_replica_fleet_keeps_serving() {
+    let trace = shared_trace(48, 8.0, 42);
+    let budgets: Vec<usize> = trace.iter().map(|r| r.output_tokens).collect();
+    let mut f = fleet(4, 8);
+    submit_trace(&mut f, &trace);
+
+    // Two overlapping failures 8 tokens into replica 0's decode — while
+    // most of its placed arrivals are still pending — healed later.
+    let timeline = cascade_then_heal(2, 1.0, 0.5, 6.0);
+    let out = f
+        .replay(
+            &[(0, timeline)],
+            RecoveryMethod::Full,
+            ReplayPace::Tokens { per_sec: 8.0 },
+        )
+        .unwrap();
+
+    assert!(out.skipped.is_empty());
+    assert_eq!(out.applied.len(), 4, "2 failures + 2 rejoins applied");
+    assert!(out
+        .applied
+        .iter()
+        .all(|(replica, _)| *replica == 0), "only replica 0 was faulted");
+    assert_eq!(out.final_worlds, vec![8, 8, 8, 8], "the cascade healed");
+
+    // Every fleet request finished with its full budget — nothing lost.
+    let report = &out.report;
+    assert_eq!(report.results.len(), 48);
+    for (r, &budget) in report.results.iter().zip(&budgets) {
+        assert!(!r.result.aborted, "fleet request {} lost", r.id);
+        assert_eq!(r.result.output_tokens.len(), budget, "request {} short", r.id);
+    }
+
+    // Replica 0's fresh work redirected; its started work drained there.
+    assert!(out.redirected > 0, "no request was redirected off replica 0");
+    assert!(
+        report.replicas[0].goodput_tokens() > 0,
+        "replica 0's in-flight work should drain in place"
+    );
+    assert!(report.replicas[0].results.iter().any(|r| r.aborted));
+
+    // Aggregate goodput beats any single replica — the fleet-level win.
+    let best_single = (0..4).map(|r| report.replica_goodput_tps(r)).fold(0.0, f64::max);
+    assert!(best_single > 0.0);
+    assert!(
+        report.goodput_tps() > 2.0 * best_single,
+        "fleet goodput {:.0} should dominate the best single replica {:.0}",
+        report.goodput_tps(),
+        best_single
+    );
+    // The faulted replica produced events for its failures and rejoins.
+    let fails = out.applied.iter().filter(|(_, a)| a.event.kind == FaultKind::Fail).count();
+    assert_eq!(fails, 2);
+}

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Markdown link checker for README + docs/ — keeps cross-links from rotting.
+
+Checks every relative link in the given markdown files (directories are
+scanned for *.md): the target file must exist, and a `#fragment` into a
+markdown file must match a heading's GitHub-style anchor. External links
+(http/https/mailto) are deliberately skipped — no network, no flakes.
+
+Usage: python3 tools/check_md_links.py README.md docs
+Exits non-zero listing every broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """Approximate GitHub's heading→anchor slug."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)  # strip inline code markers
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # links → text
+    text = text.strip().lower()
+    out = []
+    for ch in text:
+        if ch.isalnum() or ch in "-_":
+            out.append(ch)
+        elif ch == " ":
+            out.append("-")
+        # all other punctuation is dropped
+    return "".join(out)
+
+
+def md_lines_outside_code(path: Path):
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield line
+
+
+def anchors_of(path: Path) -> set:
+    return {github_slug(m.group(2)) for line in md_lines_outside_code(path) if (m := HEADING_RE.match(line))}
+
+
+def links_of(path: Path):
+    for line in md_lines_outside_code(path):
+        for m in LINK_RE.finditer(line):
+            yield m.group(1)
+
+
+def collect_files(args):
+    files = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.glob("*.md")))
+        elif p.suffix == ".md":
+            files.append(p)
+        else:
+            sys.exit(f"not a markdown file or directory: {a}")
+    return files
+
+
+def main(argv):
+    files = collect_files(argv or ["README.md", "docs"])
+    errors = []
+    for f in files:
+        for link in links_of(f):
+            if link.startswith(("http://", "https://", "mailto:")):
+                continue
+            target, _, fragment = link.partition("#")
+            dest = f if not target else (f.parent / target).resolve()
+            if not dest.exists():
+                errors.append(f"{f}: broken link {link!r} (no such file {dest})")
+                continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in anchors_of(dest):
+                    errors.append(f"{f}: broken anchor {link!r} (no heading #{fragment} in {dest.name})")
+    if errors:
+        print(f"{len(errors)} broken markdown link(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"checked {len(files)} file(s): all relative links and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
