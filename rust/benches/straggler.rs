@@ -1,0 +1,112 @@
+//! Straggler sweep: one rank of a 70B/TP8 group throttled to
+//! {1.0, 0.75, 0.5, 0.25}× effective speed. For each factor the sweep
+//! records the modeled decode step time (a) unmitigated — the throttled
+//! rank keeps its full share and paces the group, (b) capacity-rebalanced
+//! — the `health` layer's weighted plan (uneven heads + FFN blocks,
+//! DP-routed remainder), and (c) the capacity-proportional ideal — plus
+//! wall-clock measurements of the mitigation planning path itself
+//! (reweight + cost-model rebuild), since that runs on every health
+//! transition.
+//!
+//! Writes `BENCH_straggler.json` at the repo root via
+//! [`failsafe::benchkit::BenchLog`]; the `none vs rebalanced` rows are
+//! the mitigation gap tracked across PRs.
+
+use failsafe::benchkit::{section, sink, Bench, BenchLog};
+use failsafe::cluster::{GpuSpec, Interconnect};
+use failsafe::model::llama3_70b;
+use failsafe::sharding::ShardPlan;
+use failsafe::simulator::{DecodeWork, StepCostModel};
+
+const WORLD: usize = 8;
+const THROTTLED: usize = 2;
+
+/// A 64-request decode batch at 4k context, homed capacity-proportionally
+/// (what the capacity-aware router converges to) — the same batch shape
+/// the costmodel acceptance test measures.
+fn batch(speeds: &[f64]) -> Vec<DecodeWork> {
+    DecodeWork::capacity_homed(64, 4096, speeds)
+}
+
+fn main() {
+    let bench = Bench::default();
+    let mut log = BenchLog::new();
+    let m = llama3_70b();
+    let spec = GpuSpec::h100();
+    let ic = Interconnect::new(spec.clone());
+    let plan = ShardPlan::failsafe(&m, WORLD);
+
+    section(&format!("straggler sweep: {} TP{WORLD}, rank {THROTTLED} throttled", m.name));
+    let healthy = StepCostModel::new(&plan, &spec, &ic).decode_step_time(&batch(&[1.0; WORLD]));
+    log.record_ns(&format!("straggler: modeled decode step healthy (w={WORLD})"), healthy * 1e9);
+
+    for factor in [1.0f64, 0.75, 0.5, 0.25] {
+        let mut speeds = vec![1.0; WORLD];
+        speeds[THROTTLED] = factor;
+        let work = batch(&speeds);
+
+        let mut unmitigated = StepCostModel::new(&plan, &spec, &ic);
+        unmitigated.set_speed_factors(&speeds);
+        let none = unmitigated.decode_step_time(&work);
+
+        let mut rebalanced = StepCostModel::new(&plan.reweight(&speeds), &spec, &ic);
+        rebalanced.set_speed_factors(&speeds);
+        let mitigated = rebalanced.decode_step_time(&work);
+
+        let ideal = healthy * WORLD as f64 / speeds.iter().sum::<f64>();
+        log.record_ns(&format!("straggler: modeled decode step @{factor}x (none)"), none * 1e9);
+        log.record_ns(
+            &format!("straggler: modeled decode step @{factor}x (rebalanced)"),
+            mitigated * 1e9,
+        );
+        log.record_ns(&format!("straggler: modeled decode step @{factor}x (ideal)"), ideal * 1e9);
+        println!(
+            "  factor {factor:>4}: none {:>7.2} ms | rebalanced {:>7.2} ms | ideal {:>7.2} ms | gap closed {:>5.1}%",
+            none * 1e3,
+            mitigated * 1e3,
+            ideal * 1e3,
+            if none > ideal { 100.0 * (none - mitigated) / (none - ideal) } else { 100.0 }
+        );
+        assert!(
+            factor == 1.0 || mitigated < none,
+            "rebalancing must strictly beat the unmitigated straggler at {factor}x"
+        );
+        assert!(
+            mitigated <= ideal * 1.15,
+            "rebalanced step {mitigated} misses the 15% ideal bound at {factor}x"
+        );
+    }
+
+    // The mitigation planning path itself (runs on every health
+    // transition): reweight the plan and rebuild the cost model.
+    let speeds = {
+        let mut s = vec![1.0; WORLD];
+        s[THROTTLED] = 0.5;
+        s
+    };
+    log.run(&bench, "health: ShardPlan::reweight (70B, w=8, one rank 0.5x)", || {
+        sink(plan.reweight(&speeds));
+    });
+    let weighted = plan.reweight(&speeds);
+    log.run(&bench, "health: StepCostModel rebuild on weighted plan (w=8)", || {
+        sink(StepCostModel::new(&weighted, &spec, &ic));
+    });
+    let work = batch(&speeds);
+    let mut model = StepCostModel::new(&weighted, &spec, &ic);
+    model.set_speed_factors(&speeds);
+    log.run(&bench, "health: weighted decode step cost (64 reqs, w=8)", || {
+        sink(model.decode_step_time(&work));
+    });
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_straggler.json").to_string()
+    });
+    match log.write_json("straggler", std::path::Path::new(&out)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => {
+            // A silent write failure would let CI validate a stale file.
+            eprintln!("\nfailed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

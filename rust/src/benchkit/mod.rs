@@ -136,6 +136,25 @@ impl BenchLog {
         self.measurements.last().expect("just pushed")
     }
 
+    /// Record a *derived* quantity (e.g. a modeled step time) in
+    /// nanoseconds rather than a wall-clock sample: one "iteration" whose
+    /// every quantile is the value. Keeps analytic results (the
+    /// straggler sweep's modeled throughput gap) in the same
+    /// `BENCH_*.json` trajectory as measured ones.
+    pub fn record_ns(&mut self, name: &str, ns: f64) -> &Measurement {
+        let m = Measurement {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ns,
+            p50_ns: ns,
+            p99_ns: ns,
+            min_ns: ns,
+        };
+        m.report();
+        self.measurements.push(m);
+        self.measurements.last().expect("just pushed")
+    }
+
     /// Serialize to JSON: `{"bench": ..., "results": [{name, iters,
     /// ns_per_iter, p50_ns, p99_ns, min_ns}, ...]}`. Hand-rolled — the
     /// offline build has no serde.

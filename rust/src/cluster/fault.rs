@@ -23,8 +23,8 @@ pub enum FaultKind {
 }
 
 impl FaultKind {
-    /// The trace-format spelling — the vocabulary [`FaultTimeline::parse`]
-    /// accepts and [`FaultTimeline::to_text`] writes.
+    /// Human-readable spelling (matches the hard-event vocabulary of
+    /// [`TimelineEventKind::name`]).
     pub fn name(&self) -> &'static str {
         match self {
             FaultKind::Fail => "fail",
@@ -122,6 +122,52 @@ impl FaultInjector {
     }
 }
 
+/// What one availability-timeline event does to its GPU. Hard events
+/// (`Fail`/`Rejoin`) change the group's world size; soft events
+/// (`SlowDown`/`Restore`) leave the GPU *in* the group but change its
+/// effective speed — the thermal-throttle / ECC-pressure / noisy-neighbor
+/// regime where a rank is alive, correct, and slow.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TimelineEventKind {
+    /// Hard failure: the GPU leaves the group (HBM lost).
+    Fail,
+    /// A previously failed GPU rejoins the group (empty, full speed).
+    Rejoin,
+    /// Soft fault: the GPU keeps serving at `factor`× effective speed
+    /// (`0 < factor ≤ 1`; re-slowing an already degraded GPU updates the
+    /// factor — a deepening thermal ramp).
+    SlowDown { factor: f64 },
+    /// The GPU returns to full speed (inverse of `SlowDown`).
+    Restore,
+}
+
+impl TimelineEventKind {
+    /// The trace-format spelling — the vocabulary [`FaultTimeline::parse`]
+    /// accepts and [`FaultTimeline::to_text`] writes.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimelineEventKind::Fail => "fail",
+            TimelineEventKind::Rejoin => "rejoin",
+            TimelineEventKind::SlowDown { .. } => "slowdown",
+            TimelineEventKind::Restore => "restore",
+        }
+    }
+
+    /// True for the world-size-changing kinds (`Fail`/`Rejoin`).
+    pub fn is_hard(&self) -> bool {
+        matches!(self, TimelineEventKind::Fail | TimelineEventKind::Rejoin)
+    }
+}
+
+impl From<FaultKind> for TimelineEventKind {
+    fn from(k: FaultKind) -> TimelineEventKind {
+        match k {
+            FaultKind::Fail => TimelineEventKind::Fail,
+            FaultKind::Recover => TimelineEventKind::Rejoin,
+        }
+    }
+}
+
 /// One availability-timeline event against a *stable physical GPU id* of
 /// one TP group. GPU ids never change across reconfigurations — mapping
 /// them onto the engine's (renumbered) rank ids at each point in time is
@@ -133,27 +179,57 @@ pub struct TimelineEvent {
     pub at: SimTime,
     /// Physical GPU id within the group, `0..world`.
     pub gpu: usize,
-    /// [`FaultKind::Fail`] takes the GPU down; [`FaultKind::Recover`]
-    /// rejoins it.
-    pub kind: FaultKind,
+    /// What happens to the GPU.
+    pub kind: TimelineEventKind,
 }
 
-/// A timestamped `Fail(gpu)` / `Rejoin(gpu)` availability timeline for one
-/// TP group — the paper's §5 irregular-availability workload as data.
+impl TimelineEvent {
+    /// Hard failure of `gpu` at `at`.
+    pub fn fail(at: SimTime, gpu: usize) -> TimelineEvent {
+        TimelineEvent { at, gpu, kind: TimelineEventKind::Fail }
+    }
+
+    /// Rejoin of previously failed `gpu` at `at`.
+    pub fn rejoin(at: SimTime, gpu: usize) -> TimelineEvent {
+        TimelineEvent { at, gpu, kind: TimelineEventKind::Rejoin }
+    }
+
+    /// Soft fault: `gpu` degrades to `factor`× effective speed at `at`.
+    pub fn slow_down(at: SimTime, gpu: usize, factor: f64) -> TimelineEvent {
+        TimelineEvent { at, gpu, kind: TimelineEventKind::SlowDown { factor } }
+    }
+
+    /// `gpu` returns to full speed at `at`.
+    pub fn restore(at: SimTime, gpu: usize) -> TimelineEvent {
+        TimelineEvent { at, gpu, kind: TimelineEventKind::Restore }
+    }
+}
+
+/// A timestamped availability timeline for one TP group — the paper's §5
+/// irregular-availability workload as data. Hard events (`fail`/`rejoin`)
+/// change the world size; soft events (`slowdown`/`restore`) degrade and
+/// restore a GPU's effective speed while it keeps serving.
 ///
 /// Build one from a trace file ([`FaultTimeline::parse`]), from MTBF/MTTR
-/// distributions ([`FaultTimeline::synthesize`]), from an aggregate
-/// availability step function ([`FaultTimeline::from_availability`]), or
-/// from the named scenario generators ([`crate::traces::flaky_gpu`],
+/// distributions ([`FaultTimeline::synthesize`], or
+/// [`FaultTimeline::synthesize_soft`] to layer soft-fault churn on top),
+/// from an aggregate availability step function
+/// ([`FaultTimeline::from_availability`]), or from the named scenario
+/// generators ([`crate::traces::flaky_gpu`],
 /// [`crate::traces::rolling_maintenance`],
-/// [`crate::traces::cascade_then_heal`]).
+/// [`crate::traces::cascade_then_heal`],
+/// [`crate::traces::thermal_throttle`]).
 ///
 /// ```
-/// use failsafe::cluster::{FaultKind, FaultTimeline};
-/// let tl = FaultTimeline::parse("0.5 fail 1\n# gpu 1 comes back\n2.0 rejoin 1\n").unwrap();
-/// assert_eq!(tl.events().len(), 2);
-/// assert_eq!(tl.events()[1].kind, FaultKind::Recover);
+/// use failsafe::cluster::{FaultTimeline, TimelineEventKind};
+/// let tl = FaultTimeline::parse(
+///     "0.2 slowdown 1 0.5\n0.5 fail 1\n# gpu 1 comes back\n2.0 rejoin 1\n",
+/// ).unwrap();
+/// assert_eq!(tl.events().len(), 3);
+/// assert_eq!(tl.events()[0].kind, TimelineEventKind::SlowDown { factor: 0.5 });
+/// assert_eq!(tl.events()[2].kind, TimelineEventKind::Rejoin);
 /// assert_eq!(tl.max_concurrent_down(), 1);
+/// assert_eq!(tl.max_concurrent_degraded(), 1);
 /// tl.validate(4).unwrap();
 /// ```
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -183,8 +259,9 @@ impl FaultTimeline {
     }
 
     /// Parse the plain-text trace format: one event per line,
-    /// `<time_s> <fail|rejoin> <gpu>`; blank lines and `#` comments are
-    /// ignored. The inverse of [`FaultTimeline::to_text`].
+    /// `<time_s> <fail|rejoin|restore> <gpu>` or
+    /// `<time_s> slowdown <gpu> <factor>`; blank lines and `#` comments
+    /// are ignored. The inverse of [`FaultTimeline::to_text`].
     pub fn parse(text: &str) -> Result<FaultTimeline> {
         let mut events = Vec::new();
         for (ln, raw) in text.lines().enumerate() {
@@ -194,20 +271,47 @@ impl FaultTimeline {
             }
             let mut parts = line.split_whitespace();
             let (at, kind, gpu) = (parts.next(), parts.next(), parts.next());
-            let (Some(at), Some(kind), Some(gpu), None) = (at, kind, gpu, parts.next()) else {
-                anyhow::bail!("line {}: expected `<time> <fail|rejoin> <gpu>`", ln + 1);
+            let (Some(at), Some(kind), Some(gpu)) = (at, kind, gpu) else {
+                anyhow::bail!(
+                    "line {}: expected `<time> <fail|rejoin|slowdown|restore> <gpu> [factor]`",
+                    ln + 1
+                );
             };
             let at: SimTime = at
                 .parse()
                 .map_err(|e| anyhow::anyhow!("line {}: bad time {at:?}: {e}", ln + 1))?;
-            let kind = match kind {
-                "fail" => FaultKind::Fail,
-                "rejoin" | "recover" => FaultKind::Recover,
-                other => anyhow::bail!("line {}: unknown event kind {other:?}", ln + 1),
-            };
             let gpu: usize = gpu
                 .parse()
                 .map_err(|e| anyhow::anyhow!("line {}: bad gpu id {gpu:?}: {e}", ln + 1))?;
+            let kind = match kind {
+                "slowdown" | "slow" => {
+                    let Some(f) = parts.next() else {
+                        anyhow::bail!(
+                            "line {}: slowdown needs `<time> slowdown <gpu> <factor>`",
+                            ln + 1
+                        );
+                    };
+                    let factor: f64 = f
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("line {}: bad factor {f:?}: {e}", ln + 1))?;
+                    anyhow::ensure!(
+                        factor.is_finite() && factor > 0.0 && factor <= 1.0,
+                        "line {}: slowdown factor {factor} must be in (0, 1]",
+                        ln + 1
+                    );
+                    TimelineEventKind::SlowDown { factor }
+                }
+                "fail" => TimelineEventKind::Fail,
+                "rejoin" | "recover" => TimelineEventKind::Rejoin,
+                "restore" => TimelineEventKind::Restore,
+                other => anyhow::bail!("line {}: unknown event kind {other:?}", ln + 1),
+            };
+            anyhow::ensure!(
+                parts.next().is_none(),
+                "line {}: trailing fields after `{}`",
+                ln + 1,
+                kind.name()
+            );
             events.push(TimelineEvent { at, gpu, kind });
         }
         Ok(FaultTimeline::new(events))
@@ -217,7 +321,12 @@ impl FaultTimeline {
     pub fn to_text(&self) -> String {
         let mut out = String::new();
         for e in &self.events {
-            out.push_str(&format!("{} {} {}\n", e.at, e.kind.name(), e.gpu));
+            match e.kind {
+                TimelineEventKind::SlowDown { factor } => {
+                    out.push_str(&format!("{} slowdown {} {}\n", e.at, e.gpu, factor));
+                }
+                kind => out.push_str(&format!("{} {} {}\n", e.at, kind.name(), e.gpu)),
+            }
         }
         out
     }
@@ -254,7 +363,7 @@ impl FaultTimeline {
             }
             if up {
                 if down < max_down {
-                    events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Fail });
+                    events.push(TimelineEvent::fail(t, g));
                     down += 1;
                     next[g] = (t + rng.exp(1.0 / mttr_s), false);
                 } else {
@@ -262,9 +371,94 @@ impl FaultTimeline {
                     next[g] = (t + rng.exp(1.0 / mtbf_s), true);
                 }
             } else {
-                events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Recover });
+                events.push(TimelineEvent::rejoin(t, g));
                 down -= 1;
                 next[g] = (t + rng.exp(1.0 / mtbf_s), true);
+            }
+        }
+        FaultTimeline::new(events)
+    }
+
+    /// Like [`FaultTimeline::synthesize`], with an independent *soft-fault*
+    /// process layered on top: while a GPU is up and healthy it throttles
+    /// with mean time between slowdowns `slow_mtbf_s` (to a factor drawn
+    /// uniformly from `factor_range`) and recovers full speed with mean
+    /// time `slow_mttr_s`. A throttled GPU can still hard-fail (the soft
+    /// state clears — a dead GPU is no longer degraded and rejoins at full
+    /// speed), which is exactly the KevlarFlow-style soft-before-hard
+    /// escalation the health monitor exists to catch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthesize_soft(
+        world: usize,
+        duration_s: SimTime,
+        mtbf_s: f64,
+        mttr_s: f64,
+        slow_mtbf_s: f64,
+        slow_mttr_s: f64,
+        factor_range: (f64, f64),
+        max_down: usize,
+        seed: u64,
+    ) -> FaultTimeline {
+        assert!(world >= 1 && mtbf_s > 0.0 && mttr_s > 0.0);
+        assert!(slow_mtbf_s > 0.0 && slow_mttr_s > 0.0);
+        let (flo, fhi) = factor_range;
+        assert!(
+            flo.is_finite() && fhi.is_finite() && flo > 0.0 && flo <= fhi && fhi <= 1.0,
+            "factor range must satisfy 0 < lo <= hi <= 1, got ({flo}, {fhi})"
+        );
+        let max_down = max_down.min(world.saturating_sub(1));
+        let mut rng = Rng::seed_from_u64(seed);
+        // Per GPU: time of the next hard transition, up?, time of the next
+        // soft transition, currently slow?
+        let mut hard: Vec<(SimTime, bool)> =
+            (0..world).map(|_| (rng.exp(1.0 / mtbf_s), true)).collect();
+        let mut soft: Vec<(SimTime, bool)> =
+            (0..world).map(|_| (rng.exp(1.0 / slow_mtbf_s), false)).collect();
+        let mut down = 0usize;
+        let mut events = Vec::new();
+        loop {
+            // Pop the globally next transition (hard or soft, any GPU).
+            let (g, is_hard) = (0..world)
+                .flat_map(|g| [(g, true), (g, false)])
+                .min_by(|&(ga, ha), &(gb, hb)| {
+                    let ta = if ha { hard[ga].0 } else { soft[ga].0 };
+                    let tb = if hb { hard[gb].0 } else { soft[gb].0 };
+                    ta.total_cmp(&tb)
+                })
+                .expect("world >= 1");
+            let t = if is_hard { hard[g].0 } else { soft[g].0 };
+            if t >= duration_s {
+                break;
+            }
+            if is_hard {
+                let up = hard[g].1;
+                if up {
+                    if down < max_down {
+                        events.push(TimelineEvent::fail(t, g));
+                        down += 1;
+                        hard[g] = (t + rng.exp(1.0 / mttr_s), false);
+                        // Failing clears the soft state; the soft process
+                        // resumes after the GPU is back.
+                        soft[g] = (f64::INFINITY, false);
+                    } else {
+                        hard[g] = (t + rng.exp(1.0 / mtbf_s), true);
+                    }
+                } else {
+                    events.push(TimelineEvent::rejoin(t, g));
+                    down -= 1;
+                    hard[g] = (t + rng.exp(1.0 / mtbf_s), true);
+                    soft[g] = (t + rng.exp(1.0 / slow_mtbf_s), false);
+                }
+            } else {
+                let slow = soft[g].1;
+                if slow {
+                    events.push(TimelineEvent::restore(t, g));
+                    soft[g] = (t + rng.exp(1.0 / slow_mtbf_s), false);
+                } else {
+                    let factor = flo + rng.f64() * (fhi - flo);
+                    events.push(TimelineEvent::slow_down(t, g, factor));
+                    soft[g] = (t + rng.exp(1.0 / slow_mttr_s), true);
+                }
             }
         }
         FaultTimeline::new(events)
@@ -291,13 +485,13 @@ impl FaultTimeline {
             while current > avail {
                 let g = healthy.swap_remove(rng.pick(healthy.len()));
                 failed.push(g);
-                events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Fail });
+                events.push(TimelineEvent::fail(t, g));
                 current -= 1;
             }
             while current < avail {
                 let g = failed.swap_remove(rng.pick(failed.len()));
                 healthy.push(g);
-                events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Recover });
+                events.push(TimelineEvent::rejoin(t, g));
                 current += 1;
             }
         }
@@ -306,11 +500,16 @@ impl FaultTimeline {
 
     /// Check the timeline is replayable against an initial `world`: events
     /// time-ordered with finite non-negative timestamps, GPU ids in range,
-    /// failures only of healthy GPUs, rejoins only of failed ones, and at
-    /// least one GPU up at every point (≤ `world - 1` concurrent failures).
+    /// failures only of healthy GPUs, rejoins only of failed ones, at
+    /// least one GPU up at every point (≤ `world - 1` concurrent
+    /// failures), slowdowns only of up GPUs with a factor in `(0, 1]`
+    /// (re-slowing a degraded GPU is a factor update and is allowed), and
+    /// restores only of currently degraded GPUs. A hard failure clears
+    /// the GPU's soft state — it rejoins at full speed.
     pub fn validate(&self, world: usize) -> Result<()> {
         anyhow::ensure!(world >= 1, "empty TP group");
         let mut up = vec![true; world];
+        let mut slow = vec![false; world];
         let mut down = 0usize;
         let mut prev = 0.0f64;
         for e in &self.events {
@@ -323,9 +522,10 @@ impl FaultTimeline {
             prev = e.at;
             anyhow::ensure!(e.gpu < world, "gpu {} out of range (world {world})", e.gpu);
             match e.kind {
-                FaultKind::Fail => {
+                TimelineEventKind::Fail => {
                     anyhow::ensure!(up[e.gpu], "gpu {} fails but is already down", e.gpu);
                     up[e.gpu] = false;
+                    slow[e.gpu] = false; // a dead GPU is no longer degraded
                     down += 1;
                     anyhow::ensure!(
                         down < world,
@@ -333,7 +533,7 @@ impl FaultTimeline {
                         e.at
                     );
                 }
-                FaultKind::Recover => {
+                TimelineEventKind::Rejoin => {
                     anyhow::ensure!(
                         !up[e.gpu],
                         "gpu {} rejoins at t={} but never failed",
@@ -343,22 +543,69 @@ impl FaultTimeline {
                     up[e.gpu] = true;
                     down -= 1;
                 }
+                TimelineEventKind::SlowDown { factor } => {
+                    anyhow::ensure!(
+                        up[e.gpu],
+                        "gpu {} slows down at t={} but is down",
+                        e.gpu,
+                        e.at
+                    );
+                    anyhow::ensure!(
+                        factor.is_finite() && factor > 0.0 && factor <= 1.0,
+                        "gpu {} slowdown factor {factor} must be in (0, 1] at t={}",
+                        e.gpu,
+                        e.at
+                    );
+                    slow[e.gpu] = true;
+                }
+                TimelineEventKind::Restore => {
+                    anyhow::ensure!(
+                        up[e.gpu] && slow[e.gpu],
+                        "gpu {} restores at t={} but is not degraded",
+                        e.gpu,
+                        e.at
+                    );
+                    slow[e.gpu] = false;
+                }
             }
         }
         Ok(())
     }
 
-    /// Peak number of simultaneously-failed GPUs over the timeline.
+    /// Peak number of simultaneously-failed GPUs over the timeline (hard
+    /// events only — a degraded GPU still serves).
     pub fn max_concurrent_down(&self) -> usize {
         let mut down = 0usize;
         let mut peak = 0usize;
         for e in &self.events {
             match e.kind {
-                FaultKind::Fail => {
+                TimelineEventKind::Fail => {
                     down += 1;
                     peak = peak.max(down);
                 }
-                FaultKind::Recover => down = down.saturating_sub(1),
+                TimelineEventKind::Rejoin => down = down.saturating_sub(1),
+                _ => {}
+            }
+        }
+        peak
+    }
+
+    /// Peak number of simultaneously-degraded (slowed but serving) GPUs
+    /// over the timeline. A hard failure of a degraded GPU ends its
+    /// degraded spell (it is down, not slow).
+    pub fn max_concurrent_degraded(&self) -> usize {
+        let mut slow = std::collections::HashSet::new();
+        let mut peak = 0usize;
+        for e in &self.events {
+            match e.kind {
+                TimelineEventKind::SlowDown { .. } => {
+                    slow.insert(e.gpu);
+                    peak = peak.max(slow.len());
+                }
+                TimelineEventKind::Restore | TimelineEventKind::Fail => {
+                    slow.remove(&e.gpu);
+                }
+                TimelineEventKind::Rejoin => {}
             }
         }
         peak
@@ -410,7 +657,7 @@ mod tests {
         let text = "# maintenance window\n1.5 fail 2\n3 rejoin 2\n4.25 fail 0\n";
         let tl = FaultTimeline::parse(text).unwrap();
         assert_eq!(tl.len(), 3);
-        assert_eq!(tl.events()[0], TimelineEvent { at: 1.5, gpu: 2, kind: FaultKind::Fail });
+        assert_eq!(tl.events()[0], TimelineEvent::fail(1.5, 2));
         assert_eq!(FaultTimeline::parse(&tl.to_text()).unwrap(), tl);
         assert!(FaultTimeline::parse("1.0 explode 3").is_err());
         assert!(FaultTimeline::parse("nan fail x").is_err());
@@ -418,30 +665,104 @@ mod tests {
     }
 
     #[test]
+    fn timeline_parse_roundtrip_soft_events() {
+        let text = "0.5 slowdown 1 0.75\n2 restore 1\n3.25 slowdown 0 0.5\n";
+        let tl = FaultTimeline::parse(text).unwrap();
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl.events()[0], TimelineEvent::slow_down(0.5, 1, 0.75));
+        assert_eq!(tl.events()[1], TimelineEvent::restore(2.0, 1));
+        assert_eq!(FaultTimeline::parse(&tl.to_text()).unwrap(), tl);
+        tl.validate(4).unwrap();
+        // A slowdown needs its factor; restore takes none.
+        assert!(FaultTimeline::parse("1.0 slowdown 2").is_err());
+        assert!(FaultTimeline::parse("1.0 restore 2 0.5").is_err());
+        // Factor must be a number in (0, 1].
+        assert!(FaultTimeline::parse("1.0 slowdown 2 fast").is_err());
+        assert!(FaultTimeline::parse("1.0 slowdown 2 0").is_err());
+        assert!(FaultTimeline::parse("1.0 slowdown 2 1.5").is_err());
+        assert!(FaultTimeline::parse("1.0 slowdown 2 nan").is_err());
+    }
+
+    #[test]
     fn timeline_validate_catches_impossible_sequences() {
         // Rejoin of a GPU that never failed.
-        let tl = FaultTimeline::new(vec![TimelineEvent {
-            at: 1.0,
-            gpu: 0,
-            kind: FaultKind::Recover,
-        }]);
+        let tl = FaultTimeline::new(vec![TimelineEvent::rejoin(1.0, 0)]);
         assert!(tl.validate(4).is_err());
         // Double failure of the same GPU.
-        let tl = FaultTimeline::new(vec![
-            TimelineEvent { at: 1.0, gpu: 1, kind: FaultKind::Fail },
-            TimelineEvent { at: 2.0, gpu: 1, kind: FaultKind::Fail },
-        ]);
+        let tl = FaultTimeline::new(vec![TimelineEvent::fail(1.0, 1), TimelineEvent::fail(2.0, 1)]);
         assert!(tl.validate(4).is_err());
         // Taking down the whole group.
-        let tl = FaultTimeline::new(vec![
-            TimelineEvent { at: 1.0, gpu: 0, kind: FaultKind::Fail },
-            TimelineEvent { at: 2.0, gpu: 1, kind: FaultKind::Fail },
-        ]);
+        let tl = FaultTimeline::new(vec![TimelineEvent::fail(1.0, 0), TimelineEvent::fail(2.0, 1)]);
         assert!(tl.validate(2).is_err());
         assert!(tl.validate(3).is_ok());
         // GPU id out of range.
-        let tl = FaultTimeline::new(vec![TimelineEvent { at: 0.0, gpu: 9, kind: FaultKind::Fail }]);
+        let tl = FaultTimeline::new(vec![TimelineEvent::fail(0.0, 9)]);
         assert!(tl.validate(4).is_err());
+    }
+
+    #[test]
+    fn timeline_validate_soft_fault_rules() {
+        // Restore without a preceding slowdown.
+        let tl = FaultTimeline::new(vec![TimelineEvent::restore(1.0, 0)]);
+        assert!(tl.validate(4).is_err());
+        // Slowing a GPU that is down.
+        let tl = FaultTimeline::new(vec![
+            TimelineEvent::fail(1.0, 2),
+            TimelineEvent::slow_down(2.0, 2, 0.5),
+        ]);
+        assert!(tl.validate(4).is_err());
+        // A hard failure clears the soft state: restoring after rejoin is
+        // invalid (the GPU came back at full speed)...
+        let tl = FaultTimeline::new(vec![
+            TimelineEvent::slow_down(1.0, 2, 0.5),
+            TimelineEvent::fail(2.0, 2),
+            TimelineEvent::rejoin(3.0, 2),
+            TimelineEvent::restore(4.0, 2),
+        ]);
+        assert!(tl.validate(4).is_err());
+        // ...while the soft→hard escalation itself (throttle, then die,
+        // then rejoin) is the canonical valid sequence, and re-slowing an
+        // already degraded GPU (a deepening ramp) is a factor update.
+        let tl = FaultTimeline::new(vec![
+            TimelineEvent::slow_down(1.0, 2, 0.75),
+            TimelineEvent::slow_down(2.0, 2, 0.5),
+            TimelineEvent::fail(3.0, 2),
+            TimelineEvent::rejoin(4.0, 2),
+        ]);
+        tl.validate(4).unwrap();
+        assert_eq!(tl.max_concurrent_down(), 1);
+        assert_eq!(tl.max_concurrent_degraded(), 1);
+        // Bad factors are rejected even when constructed directly.
+        let tl = FaultTimeline::new(vec![TimelineEvent::slow_down(1.0, 0, 0.0)]);
+        assert!(tl.validate(4).is_err());
+        let tl = FaultTimeline::new(vec![TimelineEvent::slow_down(1.0, 0, f64::NAN)]);
+        assert!(tl.validate(4).is_err());
+    }
+
+    #[test]
+    fn synthesize_soft_is_valid_deterministic_and_mixed() {
+        let a = FaultTimeline::synthesize_soft(
+            8, 3600.0, 600.0, 120.0, 200.0, 100.0, (0.25, 0.75), 3, 11,
+        );
+        let b = FaultTimeline::synthesize_soft(
+            8, 3600.0, 600.0, 120.0, 200.0, 100.0, (0.25, 0.75), 3, 11,
+        );
+        assert_eq!(a, b);
+        a.validate(8).unwrap();
+        assert!(a.max_concurrent_down() <= 3);
+        let soft = a
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, TimelineEventKind::SlowDown { .. }))
+            .count();
+        let hard = a.events().iter().filter(|e| e.kind == TimelineEventKind::Fail).count();
+        assert!(soft > 0, "an hour at slow-MTBF 200s must throttle someone");
+        assert!(hard > 0, "an hour at MTBF 600s must fail someone");
+        for e in a.events() {
+            if let TimelineEventKind::SlowDown { factor } = e.kind {
+                assert!((0.25..=0.75).contains(&factor), "factor {factor} out of range");
+            }
+        }
     }
 
     #[test]
@@ -465,8 +786,8 @@ mod tests {
         tl.validate(8).unwrap();
         assert_eq!(tl.max_concurrent_down(), 3);
         // Ends back at full availability: fails == rejoins.
-        let fails = tl.events().iter().filter(|e| e.kind == FaultKind::Fail).count();
-        let rejoins = tl.events().iter().filter(|e| e.kind == FaultKind::Recover).count();
+        let fails = tl.events().iter().filter(|e| e.kind == TimelineEventKind::Fail).count();
+        let rejoins = tl.events().iter().filter(|e| e.kind == TimelineEventKind::Rejoin).count();
         assert_eq!(fails, rejoins);
     }
 }

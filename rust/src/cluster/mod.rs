@@ -17,6 +17,8 @@ mod interconnect;
 mod spec;
 
 pub use device::{DeviceState, GpuDevice, Node};
-pub use fault::{FaultEvent, FaultInjector, FaultKind, FaultTimeline, TimelineEvent};
+pub use fault::{
+    FaultEvent, FaultInjector, FaultKind, FaultTimeline, TimelineEvent, TimelineEventKind,
+};
 pub use interconnect::{Interconnect, TransferClass};
 pub use spec::GpuSpec;

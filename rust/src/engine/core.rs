@@ -81,6 +81,13 @@ pub enum EngineEvent {
     /// onto the returning GPU and the cyclic KV placement re-spread, at the
     /// modeled `latency_s` cost.
     ReconfigCompleted { epoch: u64, world: usize, latency_s: f64 },
+    /// `rank` is serving degraded at `factor`× effective speed (soft
+    /// fault: thermal throttle, ECC pressure — alive, correct, slow). The
+    /// rank stays in the group; capacity-aware rebalancing steers work
+    /// off it.
+    GpuDegraded { rank: RankId, factor: f64 },
+    /// A previously degraded `rank` returned to full speed.
+    GpuRestored { rank: RankId },
 }
 
 /// The serving surface shared by the real [`Engine`] and the simulator's
@@ -123,8 +130,25 @@ pub trait ServingBackend {
     /// and the router rebalances. Errors if no GPU is currently failed.
     /// Returns the modeled reconfiguration latency in seconds.
     fn inject_rejoin(&mut self, method: RecoveryMethod) -> Result<f64>;
+    /// Inject a *soft* fault at this step boundary: `rank` keeps serving
+    /// but at `factor`× effective speed (`0 < factor ≤ 1`; `1.0` restores
+    /// full speed — the inverse). The rank stays in the group and
+    /// generation stays bit-exact; what changes is capacity: the backend
+    /// re-weights routing (and, on the simulator, its cost model and
+    /// shard plan) so the straggler stops pacing the whole group. Emits
+    /// [`EngineEvent::GpuDegraded`] / [`EngineEvent::GpuRestored`] on the
+    /// next `step()` and returns the modeled rebalance latency in seconds
+    /// (`0.0` when only bookkeeping changes).
+    fn inject_slowdown(&mut self, rank: RankId, factor: f64) -> Result<f64>;
     /// Current TP world size (number of ranks serving this session).
     fn world(&self) -> usize;
+    /// Health-effective serving capacity in rank units: Σ over live ranks
+    /// of their effective speed factor — `world()` as `f64` when fully
+    /// healthy, less while ranks are degraded. Fleet-level placement
+    /// normalizes by this.
+    fn effective_capacity(&self) -> f64 {
+        self.world() as f64
+    }
     /// The backend clock in seconds (wall-based for the engine, simulated
     /// for the cost-model backend).
     fn now(&self) -> SimTime;
@@ -254,6 +278,13 @@ pub struct Engine {
     /// GPUs currently out of the group (failed and not yet rejoined) —
     /// the budget `inject_rejoin` draws from.
     lost: usize,
+    /// Per-rank effective speed factors (1.0 = healthy). On the real
+    /// engine a slowdown cannot change what the hardware does — the
+    /// lever here is routing: degraded ranks are down-weighted in the
+    /// capacity-aware router so new DP work lands elsewhere, and the
+    /// factors surface through `effective_capacity()` for fleet-level
+    /// placement. Generation stays bit-exact throughout.
+    speed: Vec<f64>,
     recoveries: Vec<f64>,
     /// Events produced at step boundaries (aborts, failure injections),
     /// drained by the next `step()`.
@@ -320,6 +351,7 @@ impl Engine {
             v
         };
         let c_buckets = manifest.buckets("attn", |v| v.c);
+        let world = config.world;
         let mut engine = Engine {
             config,
             client,
@@ -336,6 +368,7 @@ impl Engine {
             session: Session::new(),
             epoch: 0,
             lost: 0,
+            speed: vec![1.0; world],
             recoveries: Vec::new(),
             pending_events: Vec::new(),
             s_buckets,
@@ -619,6 +652,14 @@ impl Engine {
             .collect::<Result<Vec<_>>>()?;
         anyhow::ensure!(RankShard::verify_cover(&self.shards, &self.plan));
         self.router = self.router.remap(&survivor_map, new_world);
+        // Surviving ranks keep their degradation state under renumbering.
+        let mut speed = vec![1.0; new_world];
+        for (old, &s) in self.speed.iter().enumerate() {
+            if let Some(new_r) = survivor_map[old] {
+                speed[new_r] = s;
+            }
+        }
+        self.speed = speed;
         self.epoch += 1;
         self.lost += 1;
 
@@ -759,6 +800,7 @@ impl Engine {
             .collect::<Result<Vec<_>>>()?;
         anyhow::ensure!(RankShard::verify_cover(&self.shards, &self.plan));
         self.router = self.router.expand(new_world);
+        self.speed.push(1.0); // the returning GPU starts at full speed
         self.epoch += 1;
         self.lost -= 1;
         let homes: std::collections::HashMap<RequestId, RankId> = self
@@ -786,6 +828,47 @@ impl Engine {
         self.pending_events
             .push(EngineEvent::Reconfigured { epoch: self.epoch, world: new_world });
         Ok(total_s)
+    }
+
+    // ------------------------------------------------------ soft faults --
+
+    /// Mark `rank` as serving at `factor`× effective speed (`1.0`
+    /// restores full speed). On the real engine a soft fault cannot be
+    /// made *actually* slower — the executions are what they are — so
+    /// the mitigation lever here is placement: the capacity-aware router
+    /// down-weights the rank, steering new DP-attention work off it, and
+    /// `effective_capacity()` shrinks so fleet-level routing sends this
+    /// replica proportionally less. Token streams are untouched —
+    /// continuation across degrade/restore is bit-exact by construction
+    /// (homes only select *where* replicated DP heads run, never what
+    /// they compute). Buffers [`EngineEvent::GpuDegraded`] /
+    /// [`EngineEvent::GpuRestored`] for the next `step()`.
+    pub fn inject_slowdown(&mut self, rank: RankId, factor: f64) -> Result<f64> {
+        anyhow::ensure!(rank < self.world(), "rank {rank} out of range (world {})", self.world());
+        anyhow::ensure!(
+            factor.is_finite() && factor > 0.0 && factor <= 1.0,
+            "speed factor must be in (0, 1], got {factor}"
+        );
+        let was = self.speed[rank];
+        self.speed[rank] = factor;
+        self.router.set_capacity(rank, factor);
+        if factor < 1.0 {
+            self.pending_events.push(EngineEvent::GpuDegraded { rank, factor });
+        } else if was < 1.0 {
+            self.pending_events.push(EngineEvent::GpuRestored { rank });
+        }
+        Ok(0.0) // routing-only mitigation: no modeled stall
+    }
+
+    /// Per-rank effective speed factors (1.0 = healthy).
+    pub fn speed_factors(&self) -> &[f64] {
+        &self.speed
+    }
+
+    /// Σ of live ranks' speed factors — the health-effective capacity in
+    /// rank units.
+    pub fn effective_capacity(&self) -> f64 {
+        self.speed.iter().sum()
     }
 
     // ------------------------------------------------------------ steps --
@@ -1301,8 +1384,16 @@ impl ServingBackend for Engine {
         Engine::inject_rejoin(self, method)
     }
 
+    fn inject_slowdown(&mut self, rank: RankId, factor: f64) -> Result<f64> {
+        Engine::inject_slowdown(self, rank, factor)
+    }
+
     fn world(&self) -> usize {
         Engine::world(self)
+    }
+
+    fn effective_capacity(&self) -> f64 {
+        Engine::effective_capacity(self)
     }
 
     fn now(&self) -> SimTime {

@@ -1,7 +1,9 @@
 //! Availability-timeline replay: step any [`ServingBackend`] through an
-//! entire [`FaultTimeline`] of `Fail(gpu)` / `Rejoin(gpu)` events with
-//! requests in flight — overlapping failures (up to TP−1 concurrent),
-//! cascades, fail-during-recovery, and staggered rejoins.
+//! entire [`FaultTimeline`] of `Fail(gpu)` / `Rejoin(gpu)` /
+//! `SlowDown(gpu, factor)` / `Restore(gpu)` events with requests in
+//! flight — overlapping failures (up to TP−1 concurrent), cascades,
+//! fail-during-recovery, staggered rejoins, and soft-fault spells where a
+//! GPU stays in the group but throttles.
 //!
 //! The timeline speaks in *stable physical GPU ids*; the driver owns the
 //! gpu↔rank map and keeps it consistent as ranks are renumbered by each
@@ -22,7 +24,7 @@ use std::collections::VecDeque;
 
 use anyhow::{Context, Result};
 
-use crate::cluster::{FaultKind, FaultTimeline, TimelineEvent};
+use crate::cluster::{FaultTimeline, TimelineEvent, TimelineEventKind};
 use crate::recovery::RecoveryMethod;
 use crate::{RankId, SimTime};
 
@@ -47,9 +49,12 @@ pub struct AppliedEvent {
     pub event: TimelineEvent,
     /// The rank the event mapped to when it fired: for a failure, the
     /// failed rank in the pre-failure numbering; for a rejoin, the new
-    /// rank the GPU came back as.
+    /// rank the GPU came back as; for a slowdown/restore, the rank the
+    /// GPU was serving as at that moment.
     pub rank: RankId,
-    /// Modeled recovery/reconfiguration latency in seconds.
+    /// Modeled recovery/reconfiguration latency in seconds (for
+    /// slowdown/restore: the capacity-rebalance cost, `0.0` when the
+    /// backend only bookkeeps the degradation).
     pub latency_s: f64,
     /// Backend clock when the event was applied.
     pub applied_at: SimTime,
@@ -133,7 +138,7 @@ impl TimelineCursor {
             }
             self.pending.pop_front();
             match ev.kind {
-                FaultKind::Fail => {
+                TimelineEventKind::Fail => {
                     let rank = self.gpu_rank[ev.gpu]
                         .with_context(|| format!("gpu {} is already down", ev.gpu))?;
                     if backend.world() <= 1 {
@@ -153,10 +158,25 @@ impl TimelineCursor {
                     let applied_at = backend.now();
                     applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
                 }
-                FaultKind::Recover => {
+                TimelineEventKind::Rejoin => {
                     let latency_s = backend.inject_rejoin(method)?;
                     let rank = backend.world() - 1; // rejoins append
                     self.gpu_rank[ev.gpu] = Some(rank);
+                    let applied_at = backend.now();
+                    applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
+                }
+                TimelineEventKind::SlowDown { factor } => {
+                    let rank = self.gpu_rank[ev.gpu]
+                        .with_context(|| format!("gpu {} slows down but is down", ev.gpu))?;
+                    let latency_s = backend.inject_slowdown(rank, factor)?;
+                    let applied_at = backend.now();
+                    applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
+                }
+                TimelineEventKind::Restore => {
+                    let rank = self.gpu_rank[ev.gpu]
+                        .with_context(|| format!("gpu {} restores but is down", ev.gpu))?;
+                    // Full speed is the inverse of any slowdown.
+                    let latency_s = backend.inject_slowdown(rank, 1.0)?;
                     let applied_at = backend.now();
                     applied.push(AppliedEvent { event: ev, rank, latency_s, applied_at });
                 }

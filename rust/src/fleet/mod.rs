@@ -13,8 +13,10 @@
 //! * [`FleetRouter`] generalizes the intra-group load-aware routing to
 //!   replica granularity: admission-time placement by capacity-normalized
 //!   booked work, where capacity is each replica's *current* shard-plan
-//!   world size, degraded replicas (mid-reconfiguration after a failure)
-//!   are down-weighted, and draining replicas receive nothing;
+//!   world size × its health-effective speed (a replica with a thermally
+//!   throttled rank counts as e.g. 7.5 of 8 ranks — see
+//!   [`crate::health`]), degraded replicas (mid-reconfiguration after a
+//!   failure) are down-weighted, and draining replicas receive nothing;
 //! * on a replica failure, the fleet **redirects** that replica's
 //!   fresh (zero-progress) requests to healthy replicas and lets its
 //!   started requests **drain** in place — the coordinated cluster-level
@@ -285,10 +287,16 @@ impl Fleet {
     fn health(&self) -> Vec<ReplicaHealth> {
         self.replicas
             .iter()
-            .map(|r| ReplicaHealth {
-                world: r.backend.world(),
-                spec_world: r.spec_world,
-                draining: r.draining,
+            .map(|r| {
+                let world = r.backend.world();
+                // Soft degradation (throttled ranks) shows up as
+                // effective capacity below the live world size.
+                let speed = if world == 0 {
+                    0.0
+                } else {
+                    (r.backend.effective_capacity() / world as f64).clamp(0.0, 1.0)
+                };
+                ReplicaHealth { world, spec_world: r.spec_world, speed, draining: r.draining }
             })
             .collect()
     }
@@ -371,6 +379,28 @@ impl Fleet {
     /// placement re-attracts work naturally.
     pub fn inject_rejoin(&mut self, replica: ReplicaId, method: RecoveryMethod) -> Result<f64> {
         self.replicas[replica].backend.inject_rejoin(method)
+    }
+
+    /// Inject a *soft* fault on `replica`: `rank` keeps serving at
+    /// `factor`× effective speed (1.0 restores). The replica stays fully
+    /// placeable but its health-effective capacity shrinks, so the fleet
+    /// router books proportionally less new work on it — no redirects,
+    /// no drain: a throttled replica is slow, not gone. Returns the
+    /// backend's modeled rebalance latency.
+    pub fn inject_slowdown(
+        &mut self,
+        replica: ReplicaId,
+        rank: RankId,
+        factor: f64,
+    ) -> Result<f64> {
+        anyhow::ensure!(replica < self.replicas.len(), "no replica {replica}");
+        self.replicas[replica].backend.inject_slowdown(rank, factor)
+    }
+
+    /// Health-effective capacity of `replica` in rank units (Σ per-rank
+    /// speed factors of its backend).
+    pub fn replica_capacity(&self, replica: ReplicaId) -> f64 {
+        self.replicas[replica].backend.effective_capacity()
     }
 
     /// Begin draining `replica` (rolling maintenance, replica loss): no

@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use crate::cluster::{FaultKind, FaultTimeline, TimelineEvent};
+use crate::cluster::{FaultTimeline, TimelineEvent, TimelineEventKind};
 use crate::engine::{AppliedEvent, EngineEvent, ReplayPace, TimelineCursor};
 use crate::recovery::RecoveryMethod;
 
@@ -77,7 +77,7 @@ impl Fleet {
                 let backend = self.replicas[replica].backend.as_mut();
                 let newly = cursor.fire_due(backend, method, pace, emitted[replica])?;
                 for ev in newly {
-                    if ev.event.kind == FaultKind::Fail {
+                    if ev.event.kind == TimelineEventKind::Fail {
                         redirected += self.redirect_fresh(replica)?;
                     }
                     applied.push((replica, ev));

@@ -15,29 +15,41 @@ use crate::fleet::ReplicaId;
 
 /// What the router needs to know about one replica at placement time:
 /// capacity comes from the replica's *current* shard plan (its serving
-/// world size right now vs. the world it was built for), draining from
-/// the fleet's operator state.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// world size right now vs. the world it was built for) scaled by its
+/// health-effective speed (soft faults — a replica with one rank
+/// throttled to 0.5× serves with 7.5 effective ranks of 8), draining
+/// from the fleet's operator state.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ReplicaHealth {
     /// Ranks currently serving (the backend's live `ShardPlan` world).
     pub world: usize,
     /// Ranks the replica serves with when fully healthy.
     pub spec_world: usize,
+    /// Health-effective speed multiplier in `[0, 1]`:
+    /// `effective_capacity() / world` of the backend — 1.0 when no rank
+    /// is degraded. Zero removes the replica from placement.
+    pub speed: f64,
     /// True while the operator is draining this replica: in-flight work
     /// finishes, no new work is placed.
     pub draining: bool,
 }
 
 impl ReplicaHealth {
-    /// A replica currently serving with all of its `spec_world` ranks.
+    /// A replica currently serving with all of its `spec_world` ranks at
+    /// full speed.
     pub fn healthy(spec_world: usize) -> Self {
-        ReplicaHealth { world: spec_world, spec_world, draining: false }
+        ReplicaHealth { world: spec_world, spec_world, speed: 1.0, draining: false }
     }
 
     /// Serving on fewer ranks than built for — mid-reconfiguration after
     /// a failure, before every lost GPU has rejoined.
     pub fn degraded(&self) -> bool {
         self.world < self.spec_world
+    }
+
+    /// Serving with at least one throttled rank (soft degradation).
+    pub fn throttled(&self) -> bool {
+        self.speed < 1.0
     }
 }
 
@@ -92,12 +104,16 @@ impl FleetRouter {
 
     /// The placement score of one replica given its health: pending work
     /// per unit of effective capacity (lower is better), or `None` when
-    /// the replica must not receive new work (draining, or no ranks).
+    /// the replica must not receive new work (draining, no ranks, or
+    /// zero health-effective speed). Capacity = live world × health
+    /// speed, further down-weighted while mid-reconfiguration — so a
+    /// replica with a thermally throttled rank attracts proportionally
+    /// less, exactly like one serving on fewer ranks.
     pub fn score(&self, replica: ReplicaId, health: &ReplicaHealth) -> Option<f64> {
-        if health.draining || health.world == 0 {
+        if health.draining || health.world == 0 || health.speed <= 0.0 || health.speed.is_nan() {
             return None;
         }
-        let mut capacity = health.world as f64;
+        let mut capacity = health.world as f64 * health.speed.min(1.0);
         if health.degraded() {
             capacity *= self.degraded_weight;
         }
@@ -163,7 +179,7 @@ mod tests {
         r.book(0, 700.0);
         r.book(1, 700.0);
         let h = vec![
-            ReplicaHealth { world: 7, spec_world: 8, draining: false },
+            ReplicaHealth { world: 7, ..ReplicaHealth::healthy(8) },
             ReplicaHealth::healthy(8),
         ];
         assert_eq!(r.place(10.0, &h), Some(1));
@@ -199,6 +215,27 @@ mod tests {
         assert_eq!(r.place(10.0, &h), Some(0));
         r.complete(1, 1e9);
         assert_eq!(r.pending(1), 0.0);
+    }
+
+    #[test]
+    fn throttled_replica_is_down_weighted_capacity_proportionally() {
+        // Same booked work; replica 0 has one rank at 0.5× (speed 7.5/8).
+        let mut r = FleetRouter::new(2);
+        r.book(0, 700.0);
+        r.book(1, 700.0);
+        let h = vec![
+            ReplicaHealth { speed: 7.5 / 8.0, ..ReplicaHealth::healthy(8) },
+            ReplicaHealth::healthy(8),
+        ];
+        assert_eq!(r.place(10.0, &h), Some(1), "700/7.5 > 700/8");
+        // A fully stalled replica (speed 0) is unplaceable, like draining.
+        let h = vec![
+            ReplicaHealth { speed: 0.0, ..ReplicaHealth::healthy(8) },
+            ReplicaHealth::healthy(8),
+        ];
+        for _ in 0..3 {
+            assert_eq!(r.place(10.0, &h), Some(1));
+        }
     }
 
     #[test]

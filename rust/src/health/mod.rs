@@ -1,0 +1,65 @@
+//! Soft-fault handling: straggler detection and capacity-aware
+//! mitigation for GPUs that are **alive but slow**.
+//!
+//! Every other failure path in this crate is binary — a GPU is in the
+//! group or it is not. Real fleets degrade more gradually: thermal
+//! throttling, ECC row-retirement pressure, and noisy neighbors produce
+//! ranks that answer every collective, correctly, late. Under
+//! synchronized tensor parallelism one such rank sets the pace for the
+//! whole group (`step = max_r work_r / speed_r`), so a 0.5× GPU halves
+//! the group's throughput while every dashboard still shows it "up".
+//!
+//! This module closes the loop in three stages:
+//!
+//! * **Detect** ([`HealthMonitor`]) — per-rank step times, EWMA-smoothed
+//!   and compared against the peer median, drive a
+//!   Healthy → Throttled(factor) → Suspect → Down state machine with
+//!   hysteresis and flap damping.
+//! * **Plan** ([`plan_mitigation`]) — states become per-rank capacity
+//!   weights plus a proactive backup + drain list for Suspect ranks.
+//! * **Mitigate** — the weights feed
+//!   [`crate::sharding::ShardPlan::reweight`] (uneven TP heads and FFN
+//!   blocks, remainder heads served DP), the capacity-aware routers
+//!   ([`crate::router::LoadTracker::set_capacity`],
+//!   [`crate::fleet::FleetRouter`]), and the simulator's cost model
+//!   ([`crate::simulator::StepCostModel::set_speed_factors`]), so a
+//!   throttled rank does proportionally less work instead of stalling
+//!   everyone.
+//!
+//! Timeline-driven experiments inject the ground truth with
+//! [`crate::engine::ServingBackend::inject_slowdown`] /
+//! `SlowDown`/`Restore` events ([`crate::cluster::TimelineEventKind`]),
+//! and the `degrade` subcommand ties the whole loop together end to end.
+//!
+//! ```
+//! use failsafe::health::{plan_mitigation, HealthMonitor, RankHealth};
+//!
+//! // Rank 2 of four runs at half speed; everyone else takes 10 ms/step.
+//! let mut monitor = HealthMonitor::new(4);
+//! for _ in 0..40 {
+//!     monitor.observe(&[0.010, 0.010, 0.020, 0.010]);
+//! }
+//! assert!(matches!(monitor.state(2), RankHealth::Throttled(_)));
+//!
+//! let plan = plan_mitigation(monitor.states());
+//! assert!(!plan.is_noop());
+//! assert!(plan.weights[2] < 0.7, "throttled rank is down-weighted");
+//! assert_eq!(plan.weights[0], 1.0);
+//! // Σ weights is the group's health-effective capacity in rank units.
+//! assert!(plan.effective_capacity() < 4.0);
+//! ```
+
+mod monitor;
+mod planner;
+
+pub use monitor::{HealthMonitor, HealthTransition, MonitorConfig, RankHealth};
+pub use planner::{plan_mitigation, MitigationPlan};
+
+/// Floor on estimated speed factors: below this a rank is effectively
+/// unusable and should be Suspect/drained rather than micro-weighted.
+pub const MIN_FACTOR: f64 = 0.05;
+
+/// Capacity weight of a [`RankHealth::Suspect`] rank: near zero — keep
+/// the rank serving what it already holds, place almost nothing new on
+/// it while the proactive backup + drain runs.
+pub const SUSPECT_WEIGHT: f64 = 0.05;

@@ -1,0 +1,454 @@
+//! Straggler detection from per-rank step-time observations.
+//!
+//! Synchronized tensor parallelism makes soft faults invisible in
+//! aggregate step time (every rank waits for the straggler) but obvious
+//! in *per-rank* completion times: a thermally throttled GPU finishes its
+//! share late, every step, while its peers idle at the barrier. The
+//! [`HealthMonitor`] ingests those per-rank times, smooths them with an
+//! EWMA, compares each rank against the **peer median** (robust to one
+//! bad rank skewing the reference), and classifies ranks through a
+//! hysteresis state machine with flap damping:
+//!
+//! ```text
+//!            ratio ≥ trip for trip_after obs        ratio ≥ suspect_ratio
+//!  Healthy ────────────────────────────▶ Throttled ─────────────────────▶ Suspect
+//!     ▲                                   │  ▲                              │
+//!     └──── ratio ≤ clear for clear_after ┘  └── ratio < suspect_ratio ─────┘
+//!                                                  for clear_after obs
+//!  (mark_down / mark_up move any state to Down and back to Healthy)
+//! ```
+//!
+//! Trip and clear thresholds differ (classic hysteresis), and every
+//! recent state transition *doubles* the required streak lengths (up to a
+//! cap) — so a rank oscillating around the threshold settles into one
+//! state instead of flapping the mitigation planner.
+
+use crate::RankId;
+
+/// Health classification of one rank.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RankHealth {
+    /// Step times in line with peers.
+    Healthy,
+    /// Consistently slow by the contained factor (estimated effective
+    /// speed in `(0, 1]`: 0.5 means the rank runs at half its peers'
+    /// speed) but stable — serve it less, don't evict it.
+    Throttled(f64),
+    /// So slow (or so erratic) that a hard failure looks likely: escalate
+    /// to proactive backup and drain so the failure, when it comes, is
+    /// cheap.
+    Suspect,
+    /// Out of the group (hard failure) — set via
+    /// [`HealthMonitor::mark_down`], never inferred from timing.
+    Down,
+}
+
+impl RankHealth {
+    /// The rank's effective capacity weight for the mitigation planner:
+    /// 1.0 healthy, the estimated factor while throttled, near-zero for
+    /// suspects (keep the plumbing alive, place almost nothing), zero
+    /// when down.
+    pub fn capacity_weight(&self) -> f64 {
+        match *self {
+            RankHealth::Healthy => 1.0,
+            RankHealth::Throttled(f) => f.clamp(super::MIN_FACTOR, 1.0),
+            RankHealth::Suspect => super::SUSPECT_WEIGHT,
+            RankHealth::Down => 0.0,
+        }
+    }
+}
+
+/// Detector tuning. The defaults are deliberately conservative: a rank
+/// must be ≥ 25% slower than the peer median for several consecutive
+/// steps before anything reweights, and must be back within 10% for
+/// longer before the mitigation is undone.
+#[derive(Debug, Clone, Copy)]
+pub struct MonitorConfig {
+    /// EWMA weight of the newest sample.
+    pub alpha: f64,
+    /// `ewma / peer_median` at or above this is slow evidence.
+    pub trip_ratio: f64,
+    /// `ewma / peer_median` at or below this is healthy evidence (must be
+    /// `< trip_ratio` — the hysteresis band).
+    pub clear_ratio: f64,
+    /// Ratio at or above this is Suspect evidence.
+    pub suspect_ratio: f64,
+    /// Consecutive slow observations before Healthy → Throttled (and
+    /// suspect observations before Throttled → Suspect).
+    pub trip_after: u32,
+    /// Consecutive healthy observations before stepping back down
+    /// (Suspect → Throttled, Throttled → Healthy).
+    pub clear_after: u32,
+    /// Transitions within this many observations count as flapping; each
+    /// one doubles the required streaks.
+    pub flap_window: u64,
+    /// Cap on the damping exponent (streaks grow at most `2^max_damping`×).
+    pub max_damping: u32,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        MonitorConfig {
+            alpha: 0.2,
+            trip_ratio: 1.25,
+            clear_ratio: 1.10,
+            suspect_ratio: 3.0,
+            trip_after: 5,
+            clear_after: 8,
+            flap_window: 64,
+            max_damping: 3,
+        }
+    }
+}
+
+/// One reported state change.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthTransition {
+    pub rank: RankId,
+    pub from: RankHealth,
+    pub to: RankHealth,
+}
+
+/// Per-rank streak counters and transition history.
+#[derive(Debug, Clone, Default)]
+struct RankTrack {
+    ewma: Option<f64>,
+    slow_streak: u32,
+    fast_streak: u32,
+    hot_streak: u32,
+    cool_streak: u32,
+    /// Observation indices of recent transitions (pruned to the flap
+    /// window) — the flap-damping evidence.
+    transitions: Vec<u64>,
+}
+
+/// The soft-fault detector. See the module docs for the state machine.
+///
+/// Feed it one step-time sample per rank per step
+/// ([`HealthMonitor::observe`]); read the classification back with
+/// [`HealthMonitor::states`] and hand
+/// [`HealthMonitor::capacity_weights`] to the mitigation planner.
+#[derive(Debug, Clone)]
+pub struct HealthMonitor {
+    cfg: MonitorConfig,
+    state: Vec<RankHealth>,
+    track: Vec<RankTrack>,
+    tick: u64,
+    /// Median scratch (no per-observe allocation at steady state).
+    scratch: Vec<f64>,
+    /// Which ranks produced a valid sample this observation — the state
+    /// machine only advances on fresh evidence, never on a stale EWMA.
+    fresh: Vec<bool>,
+}
+
+impl HealthMonitor {
+    pub fn new(world: usize) -> Self {
+        Self::with_config(world, MonitorConfig::default())
+    }
+
+    pub fn with_config(world: usize, cfg: MonitorConfig) -> Self {
+        assert!(world >= 1, "empty TP group");
+        assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha must be in (0, 1]");
+        assert!(
+            cfg.clear_ratio < cfg.trip_ratio && cfg.trip_ratio <= cfg.suspect_ratio,
+            "thresholds must satisfy clear < trip <= suspect"
+        );
+        assert!(cfg.trip_after >= 1 && cfg.clear_after >= 1);
+        HealthMonitor {
+            cfg,
+            state: vec![RankHealth::Healthy; world],
+            track: vec![RankTrack::default(); world],
+            tick: 0,
+            scratch: Vec::with_capacity(world),
+            fresh: vec![false; world],
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Current classification of every rank.
+    pub fn states(&self) -> &[RankHealth] {
+        &self.state
+    }
+
+    pub fn state(&self, rank: RankId) -> RankHealth {
+        self.state[rank]
+    }
+
+    /// Per-rank capacity weights for the planner
+    /// ([`RankHealth::capacity_weight`] of each state).
+    pub fn capacity_weights(&self) -> Vec<f64> {
+        self.state.iter().map(RankHealth::capacity_weight).collect()
+    }
+
+    /// The smoothed step-time estimate for `rank`, if any samples landed.
+    pub fn smoothed(&self, rank: RankId) -> Option<f64> {
+        self.track[rank].ewma
+    }
+
+    /// A hard failure took `rank` out of the group. Timing history is
+    /// discarded — when the GPU rejoins it is judged fresh.
+    pub fn mark_down(&mut self, rank: RankId) {
+        self.state[rank] = RankHealth::Down;
+        self.track[rank] = RankTrack::default();
+    }
+
+    /// `rank` rejoined (empty, full speed until the data says otherwise).
+    pub fn mark_up(&mut self, rank: RankId) {
+        self.state[rank] = RankHealth::Healthy;
+        self.track[rank] = RankTrack::default();
+    }
+
+    /// Ingest one step's per-rank completion times (seconds; one slot per
+    /// rank, `NaN`/non-positive slots and Down ranks are skipped) and run
+    /// the state machine. Returns the transitions this observation caused.
+    pub fn observe(&mut self, step_times: &[f64]) -> Vec<HealthTransition> {
+        assert_eq!(step_times.len(), self.world(), "one sample per rank");
+        self.tick += 1;
+        let tick = self.tick;
+
+        // Smooth, then take the peer median over live ranks.
+        self.fresh.iter_mut().for_each(|f| *f = false);
+        for (r, &x) in step_times.iter().enumerate() {
+            if self.state[r] == RankHealth::Down || !x.is_finite() || x <= 0.0 {
+                continue;
+            }
+            self.fresh[r] = true;
+            let t = &mut self.track[r];
+            t.ewma = Some(match t.ewma {
+                Some(e) => self.cfg.alpha * x + (1.0 - self.cfg.alpha) * e,
+                None => x,
+            });
+        }
+        self.scratch.clear();
+        for (r, t) in self.track.iter().enumerate() {
+            if self.state[r] != RankHealth::Down {
+                if let Some(e) = t.ewma {
+                    self.scratch.push(e);
+                }
+            }
+        }
+        if self.scratch.is_empty() {
+            return Vec::new();
+        }
+        self.scratch.sort_by(|a, b| a.total_cmp(b));
+        // Lower-middle median: with an even peer count the reference must
+        // not be the straggler's own EWMA (in a 2-rank group the upper
+        // middle *is* the slow rank, which would make it undetectable).
+        let median = self.scratch[(self.scratch.len() - 1) / 2];
+        if median <= 0.0 {
+            return Vec::new();
+        }
+
+        let mut out = Vec::new();
+        for r in 0..self.world() {
+            // Only fresh evidence advances the state machine: a rank with
+            // a dropped/garbage sample this step keeps its streaks frozen
+            // instead of re-judging a stale EWMA every tick.
+            if self.state[r] == RankHealth::Down || !self.fresh[r] {
+                continue;
+            }
+            let Some(ewma) = self.track[r].ewma else { continue };
+            let ratio = ewma / median;
+            let cfg = self.cfg;
+            {
+                let t = &mut self.track[r];
+                if ratio >= cfg.trip_ratio {
+                    t.slow_streak += 1;
+                    t.fast_streak = 0;
+                } else if ratio <= cfg.clear_ratio {
+                    t.fast_streak += 1;
+                    t.slow_streak = 0;
+                } // in the hysteresis band: both streaks hold
+                if ratio >= cfg.suspect_ratio {
+                    t.hot_streak += 1;
+                    t.cool_streak = 0;
+                } else {
+                    t.cool_streak += 1;
+                    t.hot_streak = 0;
+                }
+            }
+            // Flap damping: recent transitions stretch the streaks needed.
+            let damp = {
+                let t = &mut self.track[r];
+                t.transitions.retain(|&at| tick.saturating_sub(at) <= cfg.flap_window);
+                1u32 << (t.transitions.len() as u32).min(cfg.max_damping)
+            };
+            let trip_needed = cfg.trip_after.saturating_mul(damp);
+            let clear_needed = cfg.clear_after.saturating_mul(damp);
+            let factor = (median / ewma).clamp(super::MIN_FACTOR, 1.0);
+            let t = &self.track[r];
+            let next = match self.state[r] {
+                RankHealth::Healthy if t.slow_streak >= trip_needed => {
+                    Some(RankHealth::Throttled(factor))
+                }
+                RankHealth::Throttled(_) if t.hot_streak >= trip_needed => {
+                    Some(RankHealth::Suspect)
+                }
+                RankHealth::Throttled(_) if t.fast_streak >= clear_needed => {
+                    Some(RankHealth::Healthy)
+                }
+                RankHealth::Throttled(f) => {
+                    // Track the drifting factor without a state transition
+                    // (a deepening thermal ramp is not a flap).
+                    if (factor - f).abs() > 0.01 {
+                        self.state[r] = RankHealth::Throttled(factor);
+                    }
+                    None
+                }
+                RankHealth::Suspect if t.cool_streak >= clear_needed => {
+                    Some(RankHealth::Throttled(factor))
+                }
+                _ => None,
+            };
+            if let Some(to) = next {
+                let from = self.state[r];
+                self.state[r] = to;
+                let t = &mut self.track[r];
+                t.transitions.push(tick);
+                t.slow_streak = 0;
+                t.fast_streak = 0;
+                t.hot_streak = 0;
+                out.push(HealthTransition { rank: r, from, to });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Feed `n` observations where rank `slow` runs `times`× the healthy
+    /// 10 ms step with ±`noise` multiplicative jitter.
+    fn drive(
+        m: &mut HealthMonitor,
+        n: usize,
+        slow: usize,
+        times: f64,
+        noise: f64,
+        rng: &mut Rng,
+    ) -> Vec<HealthTransition> {
+        let mut all = Vec::new();
+        for _ in 0..n {
+            let sample: Vec<f64> = (0..m.world())
+                .map(|r| {
+                    let base = if r == slow { 0.010 * times } else { 0.010 };
+                    base * (1.0 + noise * (2.0 * rng.f64() - 1.0))
+                })
+                .collect();
+            all.extend(m.observe(&sample));
+        }
+        all
+    }
+
+    #[test]
+    fn converges_on_a_2x_straggler_under_noise() {
+        let mut m = HealthMonitor::new(8);
+        let mut rng = Rng::seed_from_u64(7);
+        drive(&mut m, 40, 3, 2.0, 0.10, &mut rng);
+        match m.state(3) {
+            RankHealth::Throttled(f) => {
+                assert!((0.35..=0.65).contains(&f), "estimated factor {f} not ≈ 0.5");
+            }
+            other => panic!("rank 3 should be Throttled, is {other:?}"),
+        }
+        for r in [0usize, 1, 2, 4, 5, 6, 7] {
+            assert_eq!(m.state(r), RankHealth::Healthy, "rank {r} misclassified");
+        }
+        // Back to normal speed → eventually Healthy again.
+        drive(&mut m, 120, 3, 1.0, 0.10, &mut rng);
+        assert_eq!(m.state(3), RankHealth::Healthy);
+    }
+
+    #[test]
+    fn escalates_a_collapsing_rank_to_suspect() {
+        let mut m = HealthMonitor::new(4);
+        let mut rng = Rng::seed_from_u64(11);
+        let tr = drive(&mut m, 60, 1, 6.0, 0.05, &mut rng);
+        assert_eq!(m.state(1), RankHealth::Suspect);
+        // It passed through Throttled on the way (no teleporting).
+        assert!(tr
+            .iter()
+            .any(|t| t.rank == 1 && matches!(t.to, RankHealth::Throttled(_))));
+        assert!(m.capacity_weights()[1] <= crate::health::SUSPECT_WEIGHT);
+    }
+
+    #[test]
+    fn flapping_is_damped() {
+        // A rank oscillating 1×/2× every 6 steps would flap an undamped
+        // detector; damping must keep the transition count small.
+        let cfg = MonitorConfig { trip_after: 2, clear_after: 2, ..MonitorConfig::default() };
+        let mut m = HealthMonitor::with_config(8, cfg);
+        let mut transitions = 0usize;
+        for i in 0..400 {
+            let slow = (i / 6) % 2 == 0;
+            let sample: Vec<f64> =
+                (0..8).map(|r| if r == 3 && slow { 0.020 } else { 0.010 }).collect();
+            transitions += m.observe(&sample).len();
+        }
+        assert!(
+            transitions <= 12,
+            "{transitions} transitions in 400 ticks — flap damping not working"
+        );
+    }
+
+    #[test]
+    fn down_ranks_are_excluded_and_rejoin_fresh() {
+        let mut m = HealthMonitor::new(4);
+        let mut rng = Rng::seed_from_u64(3);
+        drive(&mut m, 40, 2, 2.0, 0.05, &mut rng);
+        assert!(matches!(m.state(2), RankHealth::Throttled(_)));
+        m.mark_down(2);
+        assert_eq!(m.state(2), RankHealth::Down);
+        assert_eq!(m.capacity_weights()[2], 0.0);
+        // Observations while down are ignored; the median comes from the
+        // three live ranks.
+        m.observe(&[0.010, 0.010, 9.0, 0.010]);
+        assert_eq!(m.state(2), RankHealth::Down);
+        m.mark_up(2);
+        assert_eq!(m.state(2), RankHealth::Healthy);
+        assert_eq!(m.smoothed(2), None, "history discarded across the outage");
+    }
+
+    #[test]
+    fn garbage_samples_are_ignored() {
+        let mut m = HealthMonitor::new(3);
+        for _ in 0..50 {
+            m.observe(&[0.010, f64::NAN, -1.0]);
+        }
+        // Only rank 0 ever produced a valid sample; nobody flapped.
+        assert_eq!(m.states(), &[RankHealth::Healthy; 3]);
+        assert_eq!(m.smoothed(1), None);
+    }
+
+    #[test]
+    fn two_rank_group_still_detects_its_straggler() {
+        // With an even peer count the lower-middle median keeps the
+        // reference on the healthy side — otherwise a TP2 straggler would
+        // be its own reference and never trip.
+        let mut m = HealthMonitor::new(2);
+        for _ in 0..40 {
+            m.observe(&[0.010, 0.020]);
+        }
+        assert!(matches!(m.state(1), RankHealth::Throttled(_)), "{:?}", m.state(1));
+        assert_eq!(m.state(0), RankHealth::Healthy);
+    }
+
+    #[test]
+    fn telemetry_gaps_freeze_streaks_instead_of_rejudging_stale_ewma() {
+        let mut m = HealthMonitor::new(4);
+        // One genuinely slow observation for rank 3...
+        m.observe(&[0.010, 0.010, 0.020, 0.010]);
+        // ...then its telemetry goes dark. A single sample must not
+        // accumulate into a trip via the frozen EWMA.
+        for _ in 0..100 {
+            m.observe(&[0.010, 0.010, f64::NAN, 0.010]);
+        }
+        assert_eq!(m.state(3), RankHealth::Healthy, "no fresh evidence, no transition");
+    }
+}

@@ -1,0 +1,94 @@
+//! Capacity-aware mitigation planning from rank health states.
+//!
+//! The planner is pure: states in, plan out. Applying the plan is the
+//! backend's job — [`crate::simulator::OnlineSession::apply_mitigation`]
+//! rebuilds its cost model on the reweighted
+//! [`crate::sharding::ShardPlan`] and re-weights its router;
+//! [`crate::engine::Engine::inject_slowdown`] re-weights routing (the
+//! engine's numerics-safe lever). Suspect ranks additionally escalate to
+//! proactive backup and drain, so the hard failure they foreshadow costs
+//! a cheap [`crate::recovery::RecoveryMethod::Full`] recovery instead of
+//! a recompute storm.
+
+use crate::RankId;
+
+use super::monitor::RankHealth;
+
+/// What the serving layer should do about the current health picture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MitigationPlan {
+    /// Per-rank effective capacity weights (1.0 = healthy, 0 = down):
+    /// feed to [`crate::sharding::ShardPlan::reweight`] and the routers.
+    pub weights: Vec<f64>,
+    /// Suspect ranks, due the full escalation: proactively host-mirror
+    /// their in-flight KV (a later hard failure then restores from
+    /// backup instead of recomputing) *and* drain — their weight is
+    /// already near zero, so new work steers away while they empty.
+    pub suspects: Vec<RankId>,
+}
+
+impl MitigationPlan {
+    /// True when every rank is healthy and the plan is a no-op.
+    pub fn is_noop(&self) -> bool {
+        self.suspects.is_empty() && self.weights.iter().all(|&w| w == 1.0)
+    }
+
+    /// Total health-effective capacity in rank units (Σ weights) — what
+    /// the fleet router normalizes replica load by.
+    pub fn effective_capacity(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+}
+
+/// Turn the monitor's per-rank states into a [`MitigationPlan`]:
+/// capacity-proportional weights (Healthy 1.0, Throttled its estimated
+/// factor, Suspect [`super::SUSPECT_WEIGHT`], Down 0.0), with Suspect
+/// ranks listed for proactive backup + drain.
+pub fn plan_mitigation(states: &[RankHealth]) -> MitigationPlan {
+    let weights = states.iter().map(RankHealth::capacity_weight).collect();
+    let suspects = states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| matches!(s, RankHealth::Suspect))
+        .map(|(r, _)| r)
+        .collect();
+    MitigationPlan { weights, suspects }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_group_plans_a_noop() {
+        let plan = plan_mitigation(&[RankHealth::Healthy; 8]);
+        assert!(plan.is_noop());
+        assert_eq!(plan.effective_capacity(), 8.0);
+    }
+
+    #[test]
+    fn throttled_and_suspect_ranks_are_weighted_down() {
+        let states = [
+            RankHealth::Healthy,
+            RankHealth::Throttled(0.5),
+            RankHealth::Suspect,
+            RankHealth::Down,
+        ];
+        let plan = plan_mitigation(&states);
+        assert_eq!(plan.weights[0], 1.0);
+        assert_eq!(plan.weights[1], 0.5);
+        assert_eq!(plan.weights[2], crate::health::SUSPECT_WEIGHT);
+        assert_eq!(plan.weights[3], 0.0);
+        assert_eq!(plan.suspects, vec![2]);
+        assert!(!plan.is_noop());
+        let cap = plan.effective_capacity();
+        assert!((cap - (1.5 + crate::health::SUSPECT_WEIGHT)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absurd_factors_are_clamped() {
+        let plan = plan_mitigation(&[RankHealth::Throttled(1e-9), RankHealth::Throttled(7.0)]);
+        assert_eq!(plan.weights[0], crate::health::MIN_FACTOR);
+        assert_eq!(plan.weights[1], 1.0);
+    }
+}

@@ -25,6 +25,12 @@
 //!   groups (engine or simulator) behind one cluster-level load-aware
 //!   router, with per-replica fault-timeline replay and fleet-level
 //!   goodput reporting.
+//! * [`health`] — soft-fault handling for GPUs that are alive but slow:
+//!   straggler detection from per-rank step times, a
+//!   Healthy → Throttled → Suspect → Down state machine, and
+//!   capacity-aware rebalancing (uneven heads/FFN blocks, weighted
+//!   routing) so a throttled rank does less work instead of pacing the
+//!   whole group.
 //!
 //! ## The serving session API
 //!
@@ -84,6 +90,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod fleet;
+pub mod health;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;

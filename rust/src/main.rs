@@ -7,6 +7,10 @@
 //!   replay    step a serving session through an availability timeline of
 //!             GPU failures AND rejoins (cascades, flaky GPUs, rolling
 //!             maintenance), on the simulator or the real engine
+//!   degrade   soft-fault drill: throttle one GPU to --factor × speed under
+//!             the thermal_throttle scenario and compare no-mitigation vs
+//!             capacity-rebalanced serving vs the capacity-proportional
+//!             ideal (sim), or assert bit-exact continuation (engine)
 //!   fleet     N replicas behind the cluster-level load-aware router, with
 //!             a fault timeline on one replica while the rest keep serving
 //!   recover   cost one failure under every recovery method
@@ -21,6 +25,8 @@
 //!   failsafe replay --world 8 --scenario gcp --duration 1800 --rate 0.5
 //!   failsafe replay --backend engine --world 3 --requests 6 --max-new 16
 //!   failsafe replay --timeline my_trace.txt --world 8
+//!   failsafe degrade --world 8 --gpu 1 --factor 0.5 --requests 32
+//!   failsafe degrade --backend engine --world 3 --gpu 1 --factor 0.5
 //!   failsafe fleet --replicas 4 --world 8 --requests 80 --rate 8
 //!   failsafe fleet --replicas 4 --scenario cascade --fault-replica 0 --pace tokens
 //!   failsafe fleet --backend engine --replicas 2 --world 3 --requests 6
@@ -28,7 +34,7 @@
 //!   failsafe traces --n 3000
 
 use failsafe::benchkit::section;
-use failsafe::cluster::{FaultTimeline, GpuSpec, Interconnect};
+use failsafe::cluster::{FaultTimeline, GpuSpec, Interconnect, TimelineEvent};
 use failsafe::config::{model_by_name, recovery_by_name, system_by_name, EngineConfig};
 use failsafe::engine::{
     drive, replay, Engine, FaultPlan, FaultTrigger, ReplayPace, ServingBackend, SubmitOptions,
@@ -41,7 +47,7 @@ use failsafe::sharding::{HeadAssignment, ShardPlan};
 use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
 use failsafe::traces::{
     cascade_then_heal, flaky_gpu, gcp_availability, mooncake_trace, openthoughts_trace,
-    poisson_arrivals, rolling_maintenance, TraceStats,
+    poisson_arrivals, rolling_maintenance, thermal_throttle, TraceStats,
 };
 use failsafe::util::cli::Args;
 use failsafe::util::Rng;
@@ -58,6 +64,10 @@ subcommands:
   replay    step one serving session through a fail/rejoin availability
             timeline (--scenario cascade|flaky|rolling|gcp|synth, or
             --timeline FILE), on the simulator or the real engine
+  degrade   soft-fault drill: throttle --gpu to --factor × speed
+            (thermal_throttle scenario) and compare no-mitigation vs
+            rebalanced vs the capacity-proportional ideal (sim), or
+            assert bit-exact degrade/fail/rejoin continuation (engine)
   fleet     N replicas behind the cluster-level load-aware router; a fault
             timeline hits one replica (--fault-replica) while the others
             keep serving (--backend sim|engine, --pace clock|tokens)
@@ -73,6 +83,7 @@ fn main() -> anyhow::Result<()> {
         Some("serve") => serve(&args),
         Some("sim") => sim(&args),
         Some("replay") => replay_cmd(&args),
+        Some("degrade") => degrade_cmd(&args),
         Some("fleet") => fleet_cmd(&args),
         Some("recover") => recover(&args),
         Some("traces") => traces(&args),
@@ -372,6 +383,197 @@ fn replay_engine(args: &Args, method: RecoveryMethod) -> anyhow::Result<()> {
     );
     println!(
         "bit-exact vs the fault-free run across {} reconfigurations ✓",
+        out.applied.len()
+    );
+    Ok(())
+}
+
+/// Strict `--flag` number parsing for the degrade drill: a present but
+/// malformed (or out-of-range) value prints the problem and exits 2 —
+/// the same treatment unknown subcommands get — instead of silently
+/// serving the default, which would turn a typo'd drill into a wrong
+/// conclusion about mitigation.
+fn strict_flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> T {
+    match args.get(key) {
+        None => default,
+        Some(v) => v.parse().unwrap_or_else(|_| {
+            eprintln!("bad --{key} value {v:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }),
+    }
+}
+
+/// Print a flag-validation failure and exit 2 (strict-parsing treatment).
+fn flag_error(msg: String) -> ! {
+    eprintln!("{msg}\n\n{USAGE}");
+    std::process::exit(2);
+}
+
+/// Soft-fault drill: one GPU throttles to `--factor`× effective speed
+/// under the `thermal_throttle` scenario. On the simulator this compares
+/// no-mitigation vs capacity-rebalanced serving against the
+/// capacity-proportional ideal; on the real engine it replays a
+/// degrade → hard-fail → rejoin escalation token-paced and asserts the
+/// outputs stay bit-exact.
+fn degrade_cmd(args: &Args) -> anyhow::Result<()> {
+    let backend = args.get_or("backend", "sim");
+    // The strict --gpu range check must use the world the chosen backend
+    // will actually serve with (the engine defaults to 3, the sim to 8).
+    let world = strict_flag::<usize>(args, "world", if backend == "engine" { 3 } else { 8 });
+    let gpu = strict_flag::<usize>(args, "gpu", 1);
+    let factor = strict_flag::<f64>(args, "factor", 0.5);
+    if world < 2 {
+        flag_error(format!("--world {world} is too small for a straggler drill (need >= 2)"));
+    }
+    if gpu >= world {
+        flag_error(format!("--gpu {gpu} out of range (world {world})"));
+    }
+    if !(factor.is_finite() && factor > 0.0 && factor < 1.0) {
+        flag_error(format!("--factor {factor} must be in (0, 1) — 1.0 is not degraded"));
+    }
+    match backend {
+        "engine" => degrade_engine(args, gpu, factor),
+        "sim" => degrade_sim(args, world, gpu, factor),
+        other => anyhow::bail!("unknown backend {other:?} (sim|engine)"),
+    }
+}
+
+/// The simulator side of the drill: three runs over the same trace —
+/// healthy, throttled without mitigation, throttled with capacity-aware
+/// rebalancing — plus the capacity-proportional ideal they bracket.
+fn degrade_sim(args: &Args, world: usize, gpu: usize, factor: f64) -> anyhow::Result<()> {
+    let model = model_arg(args)?;
+    let system = system_arg(args)?;
+    let method = recovery_arg(args)?;
+    let n = args.get_usize("requests", 32);
+    let rate = args.get_f64("rate", 50.0);
+    let seed = args.get_u64("seed", 42);
+    // Default: the throttle spell covers the whole run (the restore
+    // fires post-drain, time-warped) — the cleanest A/B. Strict like
+    // --gpu/--factor: a bad spell shape would drill the wrong scenario.
+    let slow_for = strict_flag::<f64>(args, "slow-for", 1e6);
+    let at = strict_flag::<f64>(args, "at", 0.0);
+    if !(slow_for.is_finite() && slow_for > 0.0) {
+        flag_error(format!("--slow-for {slow_for} must be a positive duration"));
+    }
+    if !(at.is_finite() && at >= 0.0) {
+        flag_error(format!("--at {at} must be a finite, non-negative time"));
+    }
+    let timeline = thermal_throttle(gpu, 1, at, factor, slow_for, 1.0);
+    timeline.validate(world)?;
+
+    section(&format!(
+        "degrade drill: {} TP{world} ({}), gpu {gpu} at {factor}x for the whole run",
+        model.name, system.name,
+    ));
+    let mut trace = mooncake_trace(n, seed);
+    for r in trace.iter_mut() {
+        r.input_tokens = r.input_tokens.clamp(1, 8_192);
+        r.output_tokens = r.output_tokens.clamp(16, 48);
+    }
+    poisson_arrivals(&mut trace, rate, seed);
+
+    let run = |mitigate: Option<bool>| -> anyhow::Result<f64> {
+        let sim =
+            OnlineSim::new(system.clone(), OnlineMode::Decode, world).with_model(model.clone());
+        let mut session = sim.session();
+        for r in &trace {
+            session.submit_with(
+                &vec![0u32; r.input_tokens],
+                SubmitOptions::new(r.output_tokens).at(r.arrival),
+            )?;
+        }
+        let report = match mitigate {
+            None => session.run_to_completion()?,
+            Some(auto) => {
+                session.set_auto_rebalance(auto);
+                replay(&mut session, &timeline, method, ReplayPace::Clock)?.report
+            }
+        };
+        Ok(report.decode_tokens as f64 / report.wall_s)
+    };
+
+    let healthy = run(None)?;
+    let baseline = run(Some(false))?;
+    let mitigated = run(Some(true))?;
+    let capacity = (world - 1) as f64 + factor;
+    let ideal = healthy * capacity / world as f64;
+    println!("healthy                  {healthy:>9.0} tok/s  (no fault)");
+    println!(
+        "no mitigation            {baseline:>9.0} tok/s  ({:>5.1}% of healthy — straggler paces all)",
+        100.0 * baseline / healthy
+    );
+    println!(
+        "rebalanced               {mitigated:>9.0} tok/s  ({:>5.1}% of healthy)",
+        100.0 * mitigated / healthy
+    );
+    println!(
+        "capacity-proportional    {ideal:>9.0} tok/s  ({capacity:.1}/{world} effective ranks)"
+    );
+    println!(
+        "mitigation recovers {:.1}% of the ideal (gap to ideal {:+.1}%)",
+        100.0 * mitigated / ideal,
+        100.0 * (mitigated / ideal - 1.0)
+    );
+    anyhow::ensure!(mitigated > baseline, "rebalancing must beat the unmitigated straggler");
+    Ok(())
+}
+
+/// The engine side: a degrade → hard-fail → rejoin escalation on the
+/// same GPU, token-paced for determinism, asserting the outputs match a
+/// fault-free run bit for bit (slowdowns only re-weight routing — they
+/// never touch the numerics).
+fn degrade_engine(args: &Args, gpu: usize, factor: f64) -> anyhow::Result<()> {
+    let cfg = EngineConfig::from_args(args);
+    let n = args.get_usize("requests", 6);
+    let max_new = args.get_usize("max-new", 12);
+    let per_sec = args.get_f64("tokens-per-sec", 2.0);
+    let timeline = FaultTimeline::new(vec![
+        TimelineEvent::slow_down(2.0, gpu, factor),
+        TimelineEvent::fail(6.0, gpu), // the soft fault goes hard
+        TimelineEvent::rejoin(10.0, gpu),
+    ]);
+    timeline.validate(cfg.world)?;
+
+    section(&format!(
+        "degrade drill on the real engine (world {}): gpu {gpu} throttles to {factor}x, then dies, then rejoins",
+        cfg.world
+    ));
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let prompts: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            let len = rng.range(8, 48);
+            (0..len).map(|_| rng.range(1, 512) as u32).collect()
+        })
+        .collect();
+
+    let mut reference = Engine::new(cfg.clone())?;
+    for p in &prompts {
+        reference.submit(p, max_new)?;
+    }
+    let expect = reference.run_to_completion()?;
+
+    let mut engine = Engine::new(cfg)?;
+    for p in &prompts {
+        engine.submit(p, max_new)?;
+    }
+    let out = replay(&mut engine, &timeline, recovery_arg(args)?, ReplayPace::Tokens { per_sec })?;
+    for a in &out.applied {
+        println!(
+            "  after {:>4} tokens  {:<8} gpu {} (rank {:>2})",
+            (a.event.at * per_sec).ceil() as usize,
+            a.event.kind.name(),
+            a.event.gpu,
+            a.rank,
+        );
+    }
+    anyhow::ensure!(
+        out.report.outputs_owned() == expect.outputs_owned(),
+        "outputs diverged from the fault-free run"
+    );
+    println!(
+        "final world {} | {} events applied | bit-exact vs the fault-free run ✓",
+        out.final_world,
         out.applied.len()
     );
     Ok(())

@@ -9,18 +9,44 @@ use crate::RankId;
 /// context multiplier (attention over a long prefix costs more per token),
 /// decode tokens count 1. The estimate deliberately mirrors what the
 /// scheduler's `cost()` uses so routing and batch forming agree.
+///
+/// Ranks may have unequal *effective capacity* (a thermally throttled GPU
+/// at 0.5× should receive half the work): [`LoadTracker::least_loaded`]
+/// scores `pending / capacity`, so with the default all-1.0 capacities the
+/// behaviour is the classic least-pending rule, and degraded ranks
+/// naturally attract proportionally less work once the health layer calls
+/// [`LoadTracker::set_capacity`].
 #[derive(Debug, Clone)]
 pub struct LoadTracker {
     pending: Vec<f64>,
+    /// Effective capacity per rank (1.0 = healthy full speed; 0 excludes
+    /// the rank from routing entirely, e.g. a Suspect rank being drained).
+    capacity: Vec<f64>,
 }
 
 impl LoadTracker {
     pub fn new(world: usize) -> Self {
-        LoadTracker { pending: vec![0.0; world] }
+        LoadTracker { pending: vec![0.0; world], capacity: vec![1.0; world] }
     }
 
     pub fn world(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Set `rank`'s effective capacity. Non-finite or negative values are
+    /// rejected (dropped), mirroring the `add`/`complete` guards; `0.0`
+    /// removes the rank from `least_loaded` consideration unless every
+    /// rank is at zero.
+    pub fn set_capacity(&mut self, rank: RankId, capacity: f64) {
+        if capacity.is_finite() && capacity >= 0.0 {
+            self.capacity[rank] = capacity;
+        }
+    }
+
+    /// Effective capacity of `rank` (1.0 unless the health layer said
+    /// otherwise).
+    pub fn capacity(&self, rank: RankId) -> f64 {
+        self.capacity[rank]
     }
 
     /// Queue `tokens` units of work on `rank`. Non-finite token counts
@@ -49,14 +75,18 @@ impl LoadTracker {
         &self.pending
     }
 
-    /// Rank with the smallest pending workload (ties → lowest id).
-    /// Total-order comparison: cannot panic even if a NaN slipped past
-    /// the `add`/`complete` guards.
+    /// Rank with the smallest capacity-normalized pending workload
+    /// (`pending / capacity`; ties → lowest id). Zero-capacity ranks
+    /// score infinite and lose to any rank with capacity. Total-order
+    /// comparison: cannot panic even if a NaN slipped past the
+    /// `add`/`complete` guards.
     pub fn least_loaded(&self) -> RankId {
         self.pending
             .iter()
+            .zip(&self.capacity)
+            .map(|(&p, &c)| if c > 0.0 { p / c } else { f64::INFINITY })
             .enumerate()
-            .min_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(&b.0)))
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
             .map(|(r, _)| r)
             .unwrap_or(0)
     }
@@ -71,16 +101,20 @@ impl LoadTracker {
     }
 
     /// Rebuild for a new world size after reconfiguration, remapping
-    /// surviving ranks' pending work and dropping the failed rank's (its
-    /// requests get re-routed by the coordinator).
+    /// surviving ranks' pending work and capacities and dropping the
+    /// failed rank's (its requests get re-routed by the coordinator).
+    /// Ranks appended beyond the survivors (rejoins) start empty at full
+    /// capacity.
     pub fn remap(&self, survivor_map: &[Option<RankId>], new_world: usize) -> LoadTracker {
         let mut pending = vec![0.0; new_world];
+        let mut capacity = vec![1.0; new_world];
         for (old, &p) in self.pending.iter().enumerate() {
             if let Some(new_r) = survivor_map.get(old).copied().flatten() {
                 pending[new_r] += p;
+                capacity[new_r] = self.capacity[old];
             }
         }
-        LoadTracker { pending }
+        LoadTracker { pending, capacity }
     }
 }
 
@@ -129,5 +163,40 @@ mod tests {
         let map = vec![Some(0), None, Some(1)];
         let r = t.remap(&map, 2);
         assert_eq!(r.pending_all(), &[1.0, 3.0]);
+    }
+
+    #[test]
+    fn capacity_weights_routing_decisions() {
+        let mut t = LoadTracker::new(2);
+        t.set_capacity(1, 0.5); // throttled
+        // Equal pending: the healthy rank wins (5/1 < 5/0.5).
+        t.add(0, 5.0);
+        t.add(1, 5.0);
+        assert_eq!(t.least_loaded(), 0);
+        // The throttled rank wins only when its normalized load is lower.
+        t.add(0, 6.0); // 11/1 vs 5/0.5=10
+        assert_eq!(t.least_loaded(), 1);
+        // Zero capacity removes a rank from consideration entirely.
+        t.set_capacity(1, 0.0);
+        assert_eq!(t.least_loaded(), 0);
+        // Bad capacities are dropped, not applied.
+        t.set_capacity(0, f64::NAN);
+        t.set_capacity(0, -1.0);
+        assert_eq!(t.capacity(0), 1.0);
+    }
+
+    #[test]
+    fn remap_carries_capacity_and_resets_appended_ranks() {
+        let mut t = LoadTracker::new(3);
+        t.set_capacity(2, 0.25);
+        t.add(2, 1.0);
+        // Rank 1 fails: survivor 2 renumbers to 1 and keeps its throttle.
+        let shrunk = t.remap(&[Some(0), None, Some(1)], 2);
+        assert_eq!(shrunk.capacity(1), 0.25);
+        // Expansion appends a fresh full-capacity rank.
+        let grown = shrunk.remap(&[Some(0), Some(1)], 3);
+        assert_eq!(grown.capacity(1), 0.25);
+        assert_eq!(grown.capacity(2), 1.0);
+        assert_eq!(grown.pending(2), 0.0);
     }
 }

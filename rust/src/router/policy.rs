@@ -67,6 +67,15 @@ impl DpRouter {
         self.tracker.complete(rank, work_tokens);
     }
 
+    /// Set `rank`'s health-effective capacity (1.0 = healthy). Under
+    /// [`RoutePolicy::LeastLoaded`] the router then books new work
+    /// capacity-proportionally — a throttled rank attracts less, a
+    /// zero-capacity (draining) rank attracts none. Round-robin ignores
+    /// capacities, which is exactly why it is the baseline.
+    pub fn set_capacity(&mut self, rank: RankId, capacity: f64) {
+        self.tracker.set_capacity(rank, capacity);
+    }
+
     /// Rebuild after reconfiguration.
     pub fn remap(&self, survivor_map: &[Option<RankId>], new_world: usize) -> DpRouter {
         DpRouter {
@@ -132,6 +141,20 @@ mod tests {
         assert_eq!(grown.world(), 3);
         assert_eq!(grown.tracker().pending(2), 0.0);
         assert_eq!(grown.route(1.0), 2, "empty new rank wins least-loaded");
+    }
+
+    #[test]
+    fn throttled_rank_attracts_capacity_proportional_work() {
+        let mut r = DpRouter::new(RoutePolicy::LeastLoaded, 4);
+        r.set_capacity(2, 0.5);
+        let mut booked = [0.0f64; 4];
+        for _ in 0..70 {
+            booked[r.route(10.0)] += 10.0;
+        }
+        // The throttled rank ends with ≈ half a healthy rank's share
+        // (70 placements × 10 over capacity 3.5 → 200 per unit capacity).
+        assert!(booked[2] <= 0.6 * booked[0], "throttled {} vs healthy {}", booked[2], booked[0]);
+        assert!(booked[2] >= 0.3 * booked[0], "throttled rank must still serve");
     }
 
     #[test]

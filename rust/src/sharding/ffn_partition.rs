@@ -61,6 +61,109 @@ impl FfnPartition {
         (0..world).map(|r| base + usize::from(r < rem)).collect()
     }
 
+    /// Capacity-proportional quota by largest remainder: rank `r` gets
+    /// `≈ n_blocks · w_r / Σw` blocks, deterministic ties to the lowest
+    /// rank id. Zero-weight ranks get zero blocks.
+    fn weighted_quota(n_blocks: usize, weights: &[f64]) -> Vec<usize> {
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "capacity weights must be finite, non-negative, and not all zero: {weights:?}"
+        );
+        let exact: Vec<f64> = weights.iter().map(|w| n_blocks as f64 * w / total).collect();
+        let mut quota: Vec<usize> = exact.iter().map(|e| e.floor() as usize).collect();
+        let mut short = n_blocks - quota.iter().sum::<usize>();
+        // Hand the remainder out by largest fractional part (ties → lowest id).
+        let mut order: Vec<usize> = (0..weights.len()).collect();
+        order.sort_by(|&a, &b| {
+            let fa = exact[a] - exact[a].floor();
+            let fb = exact[b] - exact[b].floor();
+            fb.total_cmp(&fa).then(a.cmp(&b))
+        });
+        for &r in order.iter().cycle() {
+            if short == 0 {
+                break;
+            }
+            // Never hand blocks to a zero-capacity rank unless every rank
+            // with capacity is already saturated (cannot happen: quotas
+            // sum short of n_blocks only by rounding, bounded by world).
+            if weights[r] > 0.0 {
+                quota[r] += 1;
+                short -= 1;
+            }
+        }
+        quota
+    }
+
+    /// Re-partition the same world capacity-proportionally: rank `r`'s
+    /// quota becomes `≈ n_blocks · w_r / Σw`. Commutative partitions keep
+    /// every block within quota in place and move only the spill from
+    /// over-quota (newly throttled) ranks to under-quota ones — so the
+    /// weight bytes moved by a mitigation rebalance are the minimum delta,
+    /// exactly as in failure reconfiguration. Contiguous partitions
+    /// re-deal from scratch (the conventional-system behaviour).
+    pub fn reweight(&self, weights: &[f64]) -> FfnPartition {
+        assert_eq!(weights.len(), self.world, "one weight per rank");
+        let quota = Self::weighted_quota(self.n_blocks, weights);
+        match self.policy {
+            FfnPolicy::Contiguous => {
+                let mut owner = vec![0usize; self.n_blocks];
+                let mut b = 0;
+                for (r, &q) in quota.iter().enumerate() {
+                    for _ in 0..q {
+                        owner[b] = r;
+                        b += 1;
+                    }
+                }
+                FfnPartition {
+                    policy: self.policy,
+                    world: self.world,
+                    n_blocks: self.n_blocks,
+                    owner,
+                }
+            }
+            FfnPolicy::Commutative => {
+                self.repack(self.owner.iter().map(|&o| Some(o)).collect(), &quota)
+            }
+        }
+    }
+
+    /// Keep-in-place repack against an explicit per-rank quota: blocks
+    /// whose (pre-mapped) owner is `Some` and within quota stay put; the
+    /// rest — orphaned (`None`) and over-quota spill — move to the
+    /// under-quota ranks. The commutative second half of
+    /// [`FfnPartition::reshard`], shared with [`FfnPartition::reweight`].
+    fn repack(&self, mut owner: Vec<Option<RankId>>, quota: &[usize]) -> FfnPartition {
+        let mut count = vec![0usize; quota.len()];
+        // First pass: keep surviving blocks within quota.
+        for o in owner.iter_mut() {
+            if let Some(r) = *o {
+                if count[r] < quota[r] {
+                    count[r] += 1;
+                } else {
+                    *o = None; // over quota: spill
+                }
+            }
+        }
+        // Second pass: hand orphaned blocks to under-quota ranks.
+        let mut next = 0usize;
+        for o in owner.iter_mut() {
+            if o.is_none() {
+                while count[next] >= quota[next] {
+                    next += 1;
+                }
+                *o = Some(next);
+                count[next] += 1;
+            }
+        }
+        FfnPartition {
+            policy: self.policy,
+            world: quota.len(),
+            n_blocks: self.n_blocks,
+            owner: owner.into_iter().map(Option::unwrap).collect(),
+        }
+    }
+
     /// Blocks owned by `rank`.
     pub fn blocks_of(&self, rank: RankId) -> Vec<usize> {
         self.owner
@@ -85,39 +188,12 @@ impl FfnPartition {
             FfnPolicy::Contiguous => FfnPartition::new(self.policy, self.n_blocks, new_world),
             FfnPolicy::Commutative => {
                 let quota = Self::quota(self.n_blocks, new_world);
-                let mut owner: Vec<Option<RankId>> = self
+                let owner: Vec<Option<RankId>> = self
                     .owner
                     .iter()
                     .map(|&o| survivor_map.get(o).copied().flatten())
                     .collect();
-                let mut count = vec![0usize; new_world];
-                // First pass: keep surviving blocks within quota.
-                for o in owner.iter_mut() {
-                    if let Some(r) = *o {
-                        if count[r] < quota[r] {
-                            count[r] += 1;
-                        } else {
-                            *o = None; // over quota: spill
-                        }
-                    }
-                }
-                // Second pass: hand orphaned blocks to under-quota ranks.
-                let mut next = 0usize;
-                for o in owner.iter_mut() {
-                    if o.is_none() {
-                        while count[next] >= quota[next] {
-                            next += 1;
-                        }
-                        *o = Some(next);
-                        count[next] += 1;
-                    }
-                }
-                FfnPartition {
-                    policy: self.policy,
-                    world: new_world,
-                    n_blocks: self.n_blocks,
-                    owner: owner.into_iter().map(Option::unwrap).collect(),
-                }
+                self.repack(owner, &quota)
             }
         }
     }
@@ -191,6 +267,37 @@ mod tests {
         assert!(sizes.iter().all(|&s| (3..=4).contains(&s)), "{sizes:?}");
         // Moves = 3 orphans + at most small rebalance spill.
         assert!(p.moved_blocks(&map, &q) <= 4, "moved {}", p.moved_blocks(&map, &q));
+    }
+
+    #[test]
+    fn reweight_moves_only_the_throttled_ranks_spill() {
+        // 16 blocks, TP8, rank 0 at half speed: quotas become
+        // 16·0.5/7.5 ≈ 1 for rank 0 and ≈ 2.1 for the rest — the spill off
+        // rank 0 is the only movement (plus rounding), and healthy ranks'
+        // blocks stay put.
+        let p = FfnPartition::new(FfnPolicy::Commutative, 16, 8);
+        let mut w = vec![1.0; 8];
+        w[0] = 0.5;
+        let q = p.reweight(&w);
+        assert_eq!(q.world, 8);
+        let sizes: Vec<usize> = (0..8).map(|r| q.blocks_of(r).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 16);
+        assert!(q.blocks_of(0).len() < p.blocks_of(0).len(), "throttled rank sheds blocks");
+        let identity: Vec<Option<RankId>> = (0..8).map(Some).collect();
+        assert!(
+            p.moved_blocks(&identity, &q) <= p.blocks_of(0).len() + 1,
+            "moved {} — only the spill should travel",
+            p.moved_blocks(&identity, &q)
+        );
+        // Equal weights are a no-op for a fresh balanced partition.
+        let same = p.reweight(&[1.0; 8]);
+        assert_eq!(p.moved_blocks(&identity, &same), 0);
+        // A zero-weight rank sheds everything.
+        let mut w = vec![1.0; 8];
+        w[3] = 0.0;
+        let q = p.reweight(&w);
+        assert!(q.blocks_of(3).is_empty());
+        assert_eq!((0..8).map(|r| q.blocks_of(r).len()).sum::<usize>(), 16);
     }
 
     #[test]

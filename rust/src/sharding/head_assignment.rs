@@ -128,6 +128,60 @@ impl HeadAssignment {
         LayerHeads { owner }
     }
 
+    /// Hybrid head placement for ranks of *unequal* effective capacity —
+    /// the `health` layer's mitigation for degraded-but-alive GPUs
+    /// (thermal throttle, ECC pressure): shift TP heads (and with them
+    /// all future cyclic KV growth) off the slow ranks, capacity-
+    /// proportionally, and serve the remainder data-parallel so the
+    /// capacity-aware router can steer that work too.
+    ///
+    /// `weights[r]` is rank `r`'s effective speed (1.0 = healthy; 0
+    /// excludes the rank from TP head ownership entirely). Each rank owns
+    /// `⌊n_heads · w_r / Σw⌋` TP heads per layer; the remainder heads are
+    /// DP-replicated, rotating by layer exactly like
+    /// [`AttentionPolicy::Hybrid`]. With equal weights this degenerates
+    /// to the hybrid per-rank counts (`⌊H/W⌋` TP + `H mod W` DP).
+    ///
+    /// The returned assignment reports `policy == Hybrid`: reconfiguration
+    /// rebuilds (shrink/expand) start from the healthy hybrid plan, and
+    /// mitigation re-applies its weights afterwards.
+    pub fn capacity_weighted(n_heads: usize, n_layers: usize, weights: &[f64]) -> Self {
+        let world = weights.len();
+        assert!(world >= 1, "world size must be >= 1");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "capacity weights must be finite and non-negative: {weights:?}"
+        );
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "at least one rank must have capacity");
+        // Per-layer TP quota per rank; the remainder goes DP.
+        let quota: Vec<usize> =
+            weights.iter().map(|w| (n_heads as f64 * w / total).floor() as usize).collect();
+        let tp_total: usize = quota.iter().sum();
+        debug_assert!(tp_total <= n_heads);
+        let dp = n_heads - tp_total;
+        // Deal order: each rank repeated by its quota, in id order; the
+        // layer rotation spreads which physical heads land on which rank
+        // (cyclic cross-layer balance, as in the equal-weight policies).
+        let seq: Vec<RankId> =
+            (0..world).flat_map(|r| std::iter::repeat(r).take(quota[r])).collect();
+        let layers = (0..n_layers)
+            .map(|layer| {
+                let mut owner = vec![0usize; n_heads];
+                for slot in 0..n_heads {
+                    let h = (slot + layer) % n_heads;
+                    owner[h] = if slot < dp {
+                        DP_OWNER
+                    } else {
+                        seq[(slot - dp + layer) % seq.len()]
+                    };
+                }
+                LayerHeads { owner }
+            })
+            .collect();
+        HeadAssignment { policy: AttentionPolicy::Hybrid, world, n_heads, layers }
+    }
+
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
@@ -229,6 +283,49 @@ mod tests {
         assert_eq!(cyclic_max, 4);
         let gain = naive_max as f64 / cyclic_max as f64;
         assert!((gain - 1.5).abs() < 1e-9, "Fig 1 promises ~50% capacity gain, got {gain}");
+    }
+
+    #[test]
+    fn capacity_weighted_equal_weights_matches_hybrid_counts() {
+        let w = vec![1.0; 7];
+        let a = HeadAssignment::capacity_weighted(8, 80, &w);
+        let h = HeadAssignment::new(AttentionPolicy::Hybrid, 8, 80, 7);
+        coverage_ok(&a);
+        assert_eq!(a.dp_heads_per_layer(), h.dp_heads_per_layer());
+        for l in 0..80 {
+            for r in 0..7 {
+                assert_eq!(
+                    a.layers[l].tp_heads_of(r).len(),
+                    h.layers[l].tp_heads_of(r).len(),
+                    "layer {l} rank {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_weighted_shifts_heads_off_the_throttled_rank() {
+        // TP8, 8 heads, rank 2 at half speed: Σw = 7.5 → healthy ranks
+        // keep ⌊8/7.5⌋ = 1 TP head per layer, the throttled rank keeps
+        // ⌊8·0.5/7.5⌋ = 0, and exactly one head per layer goes DP (routed
+        // capacity-aware). No rank ever owns 2 heads — the per-layer
+        // straggler the weighted plan exists to avoid.
+        let mut w = vec![1.0; 8];
+        w[2] = 0.5;
+        let a = HeadAssignment::capacity_weighted(8, 80, &w);
+        coverage_ok(&a);
+        assert_eq!(a.dp_heads_per_layer(), 1);
+        for l in 0..80 {
+            assert_eq!(a.layers[l].tp_heads_of(2).len(), 0, "layer {l}: throttled rank owns TP");
+            assert_eq!(a.max_tp_heads_in_layer(l), 1, "layer {l} straggles");
+        }
+        assert_eq!(a.tp_head_layers_of(2), 0);
+        // A zero-weight (drained/suspect) rank owns nothing either.
+        let mut w = vec![1.0; 8];
+        w[5] = 0.0;
+        let a = HeadAssignment::capacity_weighted(8, 80, &w);
+        coverage_ok(&a);
+        assert_eq!(a.tp_head_layers_of(5), 0);
     }
 
     #[test]

@@ -121,6 +121,29 @@ impl ShardPlan {
         (plan, map)
     }
 
+    /// The capacity-aware mitigation plan for degraded-but-alive ranks:
+    /// the same world, with TP attention heads
+    /// ([`HeadAssignment::capacity_weighted`]) and FFN column blocks
+    /// ([`FfnPartition::reweight`]) redistributed in proportion to
+    /// `weights[r]` (each rank's effective speed, 1.0 = healthy). The
+    /// remainder attention heads go DP so the capacity-aware router can
+    /// steer that work as well — together this is the
+    /// Nonuniform-Tensor-Parallelism response to a straggler: uneven
+    /// shards for uneven GPUs. With all weights equal the plan keeps
+    /// hybrid-equivalent per-rank loads.
+    pub fn reweight(&self, weights: &[f64]) -> ShardPlan {
+        assert_eq!(weights.len(), self.world(), "one weight per rank");
+        ShardPlan {
+            model: self.model.clone(),
+            heads: HeadAssignment::capacity_weighted(
+                self.heads.n_heads,
+                self.model.n_layers,
+                weights,
+            ),
+            ffn: self.ffn.reweight(weights),
+        }
+    }
+
     /// Bytes of one FFN block across all layers and experts.
     pub fn ffn_block_bytes(&self) -> usize {
         // cols per block × 3 d_model-vectors per col × layers × experts
@@ -264,6 +287,32 @@ mod tests {
         assert_eq!(up_map, (0..7).map(Some).collect::<Vec<_>>());
         let sizes: Vec<usize> = (0..8).map(|r| p8b.ffn.blocks_of(r).len()).collect();
         assert_eq!(sizes.iter().sum::<usize>(), p8b.ffn.n_blocks);
+    }
+
+    #[test]
+    fn reweight_shifts_load_off_the_throttled_rank() {
+        let m = llama3_70b();
+        let p = ShardPlan::failsafe(&m, 8);
+        let mut w = vec![1.0; 8];
+        w[2] = 0.5;
+        let q = p.reweight(&w);
+        assert_eq!(q.world(), 8);
+        let before = p.rank_load(2);
+        let after = q.rank_load(2);
+        // The throttled rank sheds TP head-layers (and with them its
+        // per-token KV growth) and FFN blocks.
+        assert!(after.tp_head_layers < before.tp_head_layers);
+        assert!(after.kv_tp_bytes_per_token < before.kv_tp_bytes_per_token);
+        assert!(after.ffn_blocks < before.ffn_blocks);
+        // Healthy ranks absorb the difference; the partition still covers.
+        let total_blocks: usize = q.rank_loads().iter().map(|l| l.ffn_blocks).sum();
+        assert_eq!(total_blocks, q.ffn.n_blocks);
+        // Equal weights keep hybrid-equivalent per-rank counts.
+        let same = p.reweight(&[1.0; 8]);
+        for r in 0..8 {
+            assert_eq!(same.rank_load(r).tp_head_layers, p.rank_load(r).tp_head_layers);
+            assert_eq!(same.rank_load(r).ffn_blocks, p.rank_load(r).ffn_blocks);
+        }
     }
 
     #[test]

@@ -29,6 +29,30 @@ pub struct DecodeWork {
     pub home: RankId,
 }
 
+impl DecodeWork {
+    /// A uniform `n`-request batch homed capacity-proportionally: each
+    /// request lands on the rank with the lowest `booked / speed` (ties →
+    /// lowest id) — the steady state the capacity-aware
+    /// [`crate::router::LoadTracker`] converges to. Shared by the
+    /// straggler bench and the mitigation acceptance tests so both
+    /// measure the same batch shape.
+    pub fn capacity_homed(n: usize, context: usize, speeds: &[f64]) -> Vec<DecodeWork> {
+        assert!(!speeds.is_empty() && speeds.iter().all(|s| *s > 0.0));
+        let mut booked = vec![0.0f64; speeds.len()];
+        (0..n)
+            .map(|_| {
+                let home = (0..speeds.len())
+                    .min_by(|&a, &b| {
+                        (booked[a] / speeds[a]).total_cmp(&(booked[b] / speeds[b])).then(a.cmp(&b))
+                    })
+                    .expect("non-empty world");
+                booked[home] += 1.0;
+                DecodeWork { context, home }
+            })
+            .collect()
+    }
+}
+
 /// One distinct per-layer shard profile: most plans repeat the same
 /// head distribution across many layers (hybrid plans across *all*
 /// layers), so the step-time inner loop runs once per distinct profile —
@@ -61,6 +85,12 @@ pub struct StepCostModel {
     ffn_cols: Vec<usize>,
     /// Per-rank resident weight bytes (for memory-bound decode).
     weight_bytes: Vec<usize>,
+    /// Per-rank effective speed factor in `(0, 1]` (1.0 = healthy). A
+    /// throttled rank finishes its per-layer work `1/factor`× slower, so
+    /// the synchronized step pays `work_r / (rate · speed_r)` at the
+    /// per-layer straggler max — soft faults actually hurt modeled
+    /// throughput.
+    speed: Vec<f64>,
 }
 
 impl StepCostModel {
@@ -103,11 +133,40 @@ impl StepCostModel {
             profiles,
             ffn_cols,
             weight_bytes,
+            speed: vec![1.0; world],
         }
     }
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// Set every rank's effective speed factor (1.0 = healthy, 0.5 = a
+    /// thermally throttled rank at half speed). Factors must be finite
+    /// and in `(0, 1]`.
+    pub fn set_speed_factors(&mut self, factors: &[f64]) {
+        assert_eq!(factors.len(), self.world, "one speed factor per rank");
+        assert!(
+            factors.iter().all(|f| f.is_finite() && *f > 0.0 && *f <= 1.0),
+            "speed factors must be in (0, 1]: {factors:?}"
+        );
+        self.speed.copy_from_slice(factors);
+    }
+
+    /// Set one rank's effective speed factor (see
+    /// [`StepCostModel::set_speed_factors`]).
+    pub fn set_speed_factor(&mut self, rank: RankId, factor: f64) {
+        assert!(rank < self.world, "rank {rank} out of range (world {})", self.world);
+        assert!(
+            factor.is_finite() && factor > 0.0 && factor <= 1.0,
+            "speed factor must be in (0, 1], got {factor}"
+        );
+        self.speed[rank] = factor;
+    }
+
+    /// Current per-rank effective speed factors.
+    pub fn speed_factors(&self) -> &[f64] {
+        &self.speed
     }
 
     pub fn model(&self) -> &ModelSpec {
@@ -153,7 +212,7 @@ impl StepCostModel {
                 let flops = p.tp[r] as f64 * tp_attn_flops
                     + if p.dp > 0 { p.dp as f64 * dp_attn_flops[r] } else { 0.0 }
                     + ffn.per_col * self.ffn_cols[r] as f64 * m.experts_per_token as f64;
-                layer_max = layer_max.max(flops / eff);
+                layer_max = layer_max.max(flops / (eff * self.speed[r]));
             }
             sum_layer_max += p.layers * layer_max;
         }
@@ -223,7 +282,7 @@ impl StepCostModel {
                     + self.ffn_cols[r] as f64 * ffn_w_per_col
                     + tp * total_ctx as f64 * kvb
                     + dp * dp_ctx[r] as f64 * kvb;
-                layer_max = layer_max.max((flops / eff).max(bytes / bw));
+                layer_max = layer_max.max((flops / eff).max(bytes / bw) / self.speed[r]);
             }
             sum_layer_max += p.layers * layer_max;
         }
@@ -384,6 +443,77 @@ mod tests {
                 .count();
             assert_eq!(n as f64, p.layers);
         }
+    }
+
+    #[test]
+    fn slowdown_hurts_monotonically_without_mitigation() {
+        // One throttled rank drags every synchronized step: the deeper the
+        // throttle, the slower the step — and at factor 1.0 nothing changes.
+        let m = llama3_70b();
+        let batch = uniform_batch(64, 4096, 8);
+        let base = cm(&ShardPlan::failsafe(&m, 8)).decode_step_time(&batch);
+        let mut prev = base;
+        for factor in [1.0, 0.75, 0.5, 0.25] {
+            let mut c = cm(&ShardPlan::failsafe(&m, 8));
+            c.set_speed_factor(3, factor);
+            let t = c.decode_step_time(&batch);
+            if factor == 1.0 {
+                assert!((t - base).abs() / base < 1e-12, "factor 1.0 must be free");
+            } else {
+                assert!(t > prev, "factor {factor}: {t} not worse than {prev}");
+            }
+            prev = t;
+        }
+        // Prefill pays the same straggler tax.
+        let chunks = vec![PrefillWork { tokens: 4096, context: 0, home: 0 }];
+        let healthy = cm(&ShardPlan::failsafe(&m, 8)).prefill_step_time(&chunks);
+        let mut c = cm(&ShardPlan::failsafe(&m, 8));
+        c.set_speed_factor(0, 0.5);
+        assert!(c.prefill_step_time(&chunks) > healthy * 1.5);
+    }
+
+    /// The mitigation acceptance bound: with one rank throttled to 0.5×,
+    /// the capacity-weighted plan (uneven heads + FFN blocks + DP-routed
+    /// remainder) must strictly beat the unmitigated straggler step and
+    /// land within 15% of the capacity-proportional ideal
+    /// (`healthy_step × world / Σ speed`).
+    #[test]
+    fn rebalanced_plan_recovers_most_of_the_straggler_loss() {
+        let m = llama3_70b();
+        let world = 8;
+        let factor = 0.5;
+        let throttled = 2usize;
+        let mut speeds = vec![1.0; world];
+        speeds[throttled] = factor;
+        let capacity: f64 = speeds.iter().sum();
+
+        // DP work and KV follow the capacity-aware router: homes spread
+        // proportionally to speed (the throttled rank receives less).
+        let batch = DecodeWork::capacity_homed(64, 4096, &speeds);
+
+        let plan = ShardPlan::failsafe(&m, world);
+        let healthy = cm(&plan).decode_step_time(&batch);
+
+        let mut unmitigated = cm(&plan);
+        unmitigated.set_speed_factors(&speeds);
+        let baseline = unmitigated.decode_step_time(&batch);
+
+        let mut rebalanced = cm(&plan.reweight(&speeds));
+        rebalanced.set_speed_factors(&speeds);
+        let mitigated = rebalanced.decode_step_time(&batch);
+
+        let ideal = healthy * world as f64 / capacity;
+        assert!(
+            mitigated < baseline,
+            "mitigated step {mitigated} must strictly beat the straggler step {baseline}"
+        );
+        assert!(
+            mitigated <= ideal * 1.15,
+            "mitigated {mitigated} more than 15% over the capacity-proportional ideal {ideal}"
+        );
+        // Sanity on the gap itself: the unmitigated straggler is far from
+        // ideal (that is the problem being solved).
+        assert!(baseline > ideal * 1.3, "baseline {baseline} vs ideal {ideal}");
     }
 
     #[test]

@@ -141,6 +141,7 @@ impl OnlineSim {
             model: self.model.clone(),
             spec: self.spec.clone(),
             ic,
+            active: plan.clone(),
             plan,
             cost,
             world: self.world,
@@ -160,6 +161,9 @@ impl OnlineSim {
             clock: 0.0,
             steps: 0,
             lost: 0,
+            speed: vec![1.0; self.world],
+            mitigation: None,
+            auto_rebalance: true,
             stalled: false,
             next_id: 0,
             order: Vec::new(),
@@ -323,7 +327,13 @@ pub struct OnlineSession {
     model: crate::model::ModelSpec,
     spec: GpuSpec,
     ic: Interconnect,
+    /// The healthy shard plan for the current world (what recovery
+    /// planning and shrink/expand reason over).
     plan: ShardPlan,
+    /// The plan the cost model actually serves on: `plan`, or its
+    /// capacity-weighted mitigation ([`ShardPlan::reweight`]) while ranks
+    /// are degraded and rebalancing is active.
+    active: ShardPlan,
     cost: StepCostModel,
     world: usize,
     max_batch: usize,
@@ -348,6 +358,15 @@ pub struct OnlineSession {
     /// GPUs currently out of the group — the budget `inject_rejoin`
     /// draws from.
     lost: usize,
+    /// Per-rank effective speed factors (1.0 = healthy) — the injected
+    /// ground truth the cost model divides by.
+    speed: Vec<f64>,
+    /// Capacity weights the mitigation is currently built on (`None` =
+    /// serving the healthy plan unweighted — the no-mitigation baseline).
+    mitigation: Option<Vec<f64>>,
+    /// Whether `inject_slowdown` rebalances automatically (default true;
+    /// turn off to measure the unmitigated straggler baseline).
+    auto_rebalance: bool,
     /// Set when the waiting line can never drain (cold-system livelock in
     /// the old batch loop) — the session reports idle.
     stalled: bool,
@@ -540,6 +559,130 @@ impl OnlineSession {
         });
     }
 
+    /// Rebuild the cost model (and KV rates/budgets, router capacities,
+    /// usage accounting) on the current healthy plan + mitigation
+    /// weights. Returns the modeled weight-movement latency of the plan
+    /// change: each rank streams its weight-byte growth from peers over
+    /// NVLink concurrently, so the max per-rank receive bounds the stall
+    /// (0.0 across world changes — the recovery planner already costed
+    /// those moves).
+    fn rebuild_cost(&mut self) -> f64 {
+        let new_active = match &self.mitigation {
+            Some(w) if w.iter().any(|&x| x < 1.0) => self.plan.reweight(w),
+            _ => self.plan.clone(),
+        };
+        let latency = if new_active.world() == self.active.world() {
+            let max_recv = self
+                .active
+                .rank_loads()
+                .iter()
+                .zip(&new_active.rank_loads())
+                .map(|(o, n)| n.weight_bytes.saturating_sub(o.weight_bytes))
+                .max()
+                .unwrap_or(0);
+            self.ic.parallel_transfer_time(TransferClass::NvLink, max_recv)
+        } else {
+            0.0
+        };
+        self.active = new_active;
+        self.cost = StepCostModel::new(&self.active, &self.spec, &self.ic);
+        self.cost.set_speed_factors(&self.speed);
+        let (tp, dp) = self.cost.kv_rates();
+        self.tp_rate = tp;
+        self.dp_rate = dp;
+        self.kv_budget = self.cost.kv_budget();
+        for r in 0..self.world {
+            let cap = self.mitigation.as_ref().map(|w| w[r]).unwrap_or(1.0);
+            self.router.set_capacity(r, cap);
+        }
+        // Re-derive per-rank KV usage under the new rates.
+        self.kv_used = vec![0.0; self.world];
+        for req in &self.running {
+            for (ru, used) in self.kv_used.iter_mut().enumerate() {
+                *used += self.tp_rate[ru] * req.context as f64;
+            }
+            self.kv_used[req.home] += self.dp_rate * req.context as f64;
+        }
+        // Shifted budgets/rates may unstick a stalled waiting line.
+        self.stalled = false;
+        latency
+    }
+
+    /// Inject a soft fault: `rank` keeps serving at `factor`× speed
+    /// (`1.0` restores). The cost model pays the straggler tax either
+    /// way; with auto-rebalance (the default) the session also reweights
+    /// its shard plan and router capacity-proportionally, pays the
+    /// modeled weight-move stall on the clock, and returns it.
+    fn slow_rank(&mut self, rank: RankId, factor: f64) -> Result<f64> {
+        anyhow::ensure!(rank < self.world, "rank {rank} out of range (world {})", self.world);
+        anyhow::ensure!(
+            factor.is_finite() && factor > 0.0 && factor <= 1.0,
+            "speed factor must be in (0, 1], got {factor}"
+        );
+        let was = self.speed[rank];
+        self.speed[rank] = factor;
+        if factor < 1.0 {
+            self.events.push(EngineEvent::GpuDegraded { rank, factor });
+        } else if was < 1.0 {
+            self.events.push(EngineEvent::GpuRestored { rank });
+        }
+        if self.auto_rebalance {
+            self.mitigation = Some(self.speed.clone());
+            let latency = self.rebuild_cost();
+            self.clock += latency;
+            Ok(latency)
+        } else {
+            self.cost.set_speed_factor(rank, factor);
+            Ok(0.0)
+        }
+    }
+
+    /// Toggle automatic capacity rebalancing on slowdown injection
+    /// (default on). Off = the no-mitigation baseline: the throttled rank
+    /// keeps its full share of heads/blocks/routing and paces the group.
+    pub fn set_auto_rebalance(&mut self, on: bool) {
+        self.auto_rebalance = on;
+    }
+
+    /// Per-rank effective speed factors (1.0 = healthy).
+    pub fn speed_factors(&self) -> &[f64] {
+        &self.speed
+    }
+
+    /// Apply explicit mitigation weights (e.g. from
+    /// [`crate::health::plan_mitigation`] over a
+    /// [`crate::health::HealthMonitor`]'s states): the shard plan
+    /// reweights capacity-proportionally, the router follows, and the
+    /// modeled weight-move stall lands on the clock and is returned.
+    pub fn apply_mitigation(&mut self, weights: &[f64]) -> Result<f64> {
+        anyhow::ensure!(weights.len() == self.world, "one weight per rank");
+        anyhow::ensure!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0) && weights.iter().sum::<f64>() > 0.0,
+            "weights must be finite, non-negative, not all zero: {weights:?}"
+        );
+        self.mitigation = Some(weights.to_vec());
+        let latency = self.rebuild_cost();
+        self.clock += latency;
+        Ok(latency)
+    }
+
+    /// The Suspect escalation: host-mirror every running request's full
+    /// context *now*, so the hard failure this rank's telemetry predicts
+    /// restores from backup instead of recomputing. Pays the PCIe
+    /// transfer on the clock; returns the tokens newly mirrored.
+    pub fn proactive_backup(&mut self) -> usize {
+        let bpt = self.model.kv_bytes_per_token();
+        let mut tokens = 0usize;
+        for r in &self.running {
+            let missing = r.context.saturating_sub(self.backup.backed_tokens(r.id));
+            if missing > 0 && self.backup.backup(r.id, r.context, bpt).is_some() {
+                tokens += missing;
+            }
+        }
+        self.clock += self.ic.transfer_time(TransferClass::PcieHost, tokens * bpt);
+        tokens
+    }
+
     /// Inject a hard failure of `rank` at this step boundary: plan the
     /// recovery, pay the modeled stall on the clock, reconfigure to
     /// `world - 1`, and re-home the failed rank's requests.
@@ -566,24 +709,27 @@ impl OnlineSession {
         let outcome = plan_recovery(method, &input);
         self.clock += outcome.total_s; // the stall every in-flight request sees
 
-        // Reconfigure to the reduced world.
+        // Reconfigure to the reduced world: survivors keep their speed
+        // factors (and any mitigation weights) under renumbering.
         self.world -= 1;
         self.plan = new_plan;
-        self.cost = StepCostModel::new(&self.plan, &self.spec, &self.ic);
-        let rates = self.cost.kv_rates();
-        self.tp_rate = rates.0;
-        self.dp_rate = rates.1;
-        self.kv_budget = self.cost.kv_budget();
+        let remap_vec = |v: &[f64], default: f64| {
+            let mut out = vec![default; survivor_map.iter().flatten().count()];
+            for (old, &x) in v.iter().enumerate() {
+                if let Some(new_r) = survivor_map[old] {
+                    out[new_r] = x;
+                }
+            }
+            out
+        };
+        self.speed = remap_vec(&self.speed, 1.0);
+        self.mitigation = self.mitigation.take().map(|w| remap_vec(&w, 1.0));
         self.router = self.router.remap(&survivor_map, self.world);
-        // Re-home requests of the failed rank; recompute KV usage.
-        self.kv_used = vec![0.0; self.world];
+        // Re-home requests of the failed rank before usage is re-derived.
         for r in self.running.iter_mut() {
             r.home = survivor_map[r.home].unwrap_or_else(|| self.router.tracker().least_loaded());
-            for (ru, used) in self.kv_used.iter_mut().enumerate() {
-                *used += self.tp_rate[ru] * r.context as f64;
-            }
-            self.kv_used[r.home] += self.dp_rate * r.context as f64;
         }
+        self.rebuild_cost();
 
         self.lost += 1;
         self.recoveries.push(outcome.total_s);
@@ -630,26 +776,19 @@ impl OnlineSession {
         let total_s = outcome.total_s + kv_move_s;
         self.clock += total_s; // the stall every in-flight request sees
 
-        // Reconfigure to the grown world.
+        // Reconfigure to the grown world; the returning GPU starts at
+        // full speed. Fresh capacity may also unstick a waiting line
+        // that could not fit the smaller world (rebuild_cost re-derives
+        // usage and clears the stall).
         self.world += 1;
         self.lost -= 1;
         self.plan = new_plan;
-        self.cost = StepCostModel::new(&self.plan, &self.spec, &self.ic);
-        let rates = self.cost.kv_rates();
-        self.tp_rate = rates.0;
-        self.dp_rate = rates.1;
-        self.kv_budget = self.cost.kv_budget();
-        self.router = self.router.expand(self.world);
-        // Recompute KV usage under the new rates; fresh capacity may also
-        // unstick a waiting line that could not fit the smaller world.
-        self.kv_used = vec![0.0; self.world];
-        for r in self.running.iter() {
-            for (ru, used) in self.kv_used.iter_mut().enumerate() {
-                *used += self.tp_rate[ru] * r.context as f64;
-            }
-            self.kv_used[r.home] += self.dp_rate * r.context as f64;
+        self.speed.push(1.0);
+        if let Some(w) = self.mitigation.as_mut() {
+            w.push(1.0);
         }
-        self.stalled = false;
+        self.router = self.router.expand(self.world);
+        self.rebuild_cost();
 
         self.recoveries.push(total_s);
         self.events.push(EngineEvent::GpuRejoined { rank: joined, method });
@@ -723,8 +862,16 @@ impl ServingBackend for OnlineSession {
         self.rejoin_rank(method)
     }
 
+    fn inject_slowdown(&mut self, rank: RankId, factor: f64) -> Result<f64> {
+        self.slow_rank(rank, factor)
+    }
+
     fn world(&self) -> usize {
         self.world
+    }
+
+    fn effective_capacity(&self) -> f64 {
+        self.speed.iter().sum()
     }
 
     fn now(&self) -> SimTime {
@@ -936,6 +1083,72 @@ mod tests {
         for r in &report.results {
             assert_eq!(r.output_tokens.len(), 8, "request {} short after rejoin", r.id);
         }
+    }
+
+    /// Soft faults: the world never changes, degrade/restore events
+    /// surface, bad factors are rejected, and the straggler actually
+    /// slows the modeled session when mitigation is off.
+    #[test]
+    fn session_slowdown_degrades_and_restores() {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b());
+        let mut session = sim.session();
+        assert!(session.inject_slowdown(9, 0.5).is_err(), "rank out of range");
+        assert!(session.inject_slowdown(1, 0.0).is_err());
+        assert!(session.inject_slowdown(1, 1.5).is_err());
+        assert!(session.inject_slowdown(1, f64::NAN).is_err());
+
+        let prompt = vec![0u32; 2048];
+        session.submit_with(&prompt, SubmitOptions::new(8)).unwrap();
+        session.inject_slowdown(2, 0.5).unwrap();
+        assert_eq!(ServingBackend::world(&session), 8, "soft faults keep the world");
+        assert_eq!(session.effective_capacity(), 7.5);
+        let events = session.step().unwrap();
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, EngineEvent::GpuDegraded { rank: 2, factor } if *factor == 0.5)));
+
+        session.inject_slowdown(2, 1.0).unwrap();
+        assert_eq!(session.effective_capacity(), 8.0);
+        let events = session.step().unwrap();
+        assert!(events.iter().any(|e| matches!(e, EngineEvent::GpuRestored { rank: 2 })));
+        session.run_to_completion().unwrap();
+    }
+
+    /// The modeled cost of a straggler is real: an unmitigated throttled
+    /// session takes much longer than a healthy one over the same trace,
+    /// and the rebalanced session claws most of it back.
+    #[test]
+    fn session_rebalance_recovers_straggler_throughput() {
+        let factor = 0.5;
+        let run = |mode: Option<bool>| {
+            let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+                .with_model(llama3_70b());
+            let mut s = sim.session();
+            if let Some(auto) = mode {
+                s.set_auto_rebalance(auto);
+                s.inject_slowdown(3, factor).unwrap();
+            }
+            let prompt = vec![0u32; 4096];
+            for _ in 0..32 {
+                s.submit_with(&prompt, SubmitOptions::new(32)).unwrap();
+            }
+            let rep = s.run_to_completion().unwrap();
+            rep.decode_tokens as f64 / rep.wall_s
+        };
+        let healthy = run(None);
+        let baseline = run(Some(false));
+        let mitigated = run(Some(true));
+        let ideal = healthy * 7.5 / 8.0;
+        assert!(
+            mitigated > baseline * 1.2,
+            "rebalanced {mitigated} should clearly beat unmitigated {baseline}"
+        );
+        assert!(
+            mitigated >= ideal * 0.85,
+            "rebalanced {mitigated} within 15% of capacity-proportional ideal {ideal}"
+        );
+        assert!(baseline < healthy * 0.7, "unmitigated straggler {baseline} vs healthy {healthy}");
     }
 
     /// Zero generation budget is a caller bug on this backend too.

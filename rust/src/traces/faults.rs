@@ -1,12 +1,14 @@
 //! Named availability scenarios — the fault-timeline family the replay
 //! driver ([`crate::engine::replay()`]) opens up: a flaky GPU cycling in
-//! and out, rolling maintenance across a whole group, and a failure
-//! cascade followed by staggered rejoins. Each returns a [`FaultTimeline`]
-//! over stable physical GPU ids; replayability against a concrete group
-//! size is checked by [`FaultTimeline::validate`] (the replay driver runs
-//! it before anything fires).
+//! and out, rolling maintenance across a whole group, a failure cascade
+//! followed by staggered rejoins, and a thermally throttling GPU that
+//! stays in the group but serves slow ([`thermal_throttle`]). Each
+//! returns a [`FaultTimeline`] over stable physical GPU ids;
+//! replayability against a concrete group size is checked by
+//! [`FaultTimeline::validate`] (the replay driver runs it before anything
+//! fires).
 
-use crate::cluster::{FaultKind, FaultTimeline, TimelineEvent};
+use crate::cluster::{FaultTimeline, TimelineEvent};
 use crate::SimTime;
 
 /// One flaky GPU: `gpu` fails at `first_fail`, rejoins `downtime` later,
@@ -22,9 +24,39 @@ pub fn flaky_gpu(
     let mut events = Vec::with_capacity(cycles * 2);
     let mut t = first_fail;
     for _ in 0..cycles {
-        events.push(TimelineEvent { at: t, gpu, kind: FaultKind::Fail });
-        events.push(TimelineEvent { at: t + downtime, gpu, kind: FaultKind::Recover });
+        events.push(TimelineEvent::fail(t, gpu));
+        events.push(TimelineEvent::rejoin(t + downtime, gpu));
         t += downtime + uptime;
+    }
+    FaultTimeline::new(events)
+}
+
+/// One thermally throttling GPU — the soft-fault sibling of
+/// [`flaky_gpu`]: `gpu` slows to `factor`× effective speed at
+/// `first_slow`, restores full speed `slow_for` later, and repeats every
+/// `slow_for + uptime` for `cycles` cycles. The GPU never leaves the
+/// group: without mitigation every synchronized TP step runs at the
+/// straggler's pace, which is exactly the regime the `health` layer's
+/// capacity-aware rebalancing targets.
+pub fn thermal_throttle(
+    gpu: usize,
+    cycles: usize,
+    first_slow: SimTime,
+    factor: f64,
+    slow_for: SimTime,
+    uptime: SimTime,
+) -> FaultTimeline {
+    assert!(slow_for > 0.0 && uptime > 0.0 && cycles >= 1);
+    assert!(
+        factor.is_finite() && factor > 0.0 && factor < 1.0,
+        "throttle factor must be in (0, 1), got {factor}"
+    );
+    let mut events = Vec::with_capacity(cycles * 2);
+    let mut t = first_slow;
+    for _ in 0..cycles {
+        events.push(TimelineEvent::slow_down(t, gpu, factor));
+        events.push(TimelineEvent::restore(t + slow_for, gpu));
+        t += slow_for + uptime;
     }
     FaultTimeline::new(events)
 }
@@ -49,8 +81,8 @@ pub fn rolling_maintenance(
     let mut events = Vec::with_capacity(world * 2);
     for g in 0..world {
         let t = start + g as f64 * gap;
-        events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Fail });
-        events.push(TimelineEvent { at: t + downtime, gpu: g, kind: FaultKind::Recover });
+        events.push(TimelineEvent::fail(t, g));
+        events.push(TimelineEvent::rejoin(t + downtime, g));
     }
     FaultTimeline::new(events)
 }
@@ -69,8 +101,8 @@ pub fn cascade_then_heal(
     let mut events = Vec::with_capacity(k * 2);
     for g in 0..k {
         let t = at + g as f64 * stagger;
-        events.push(TimelineEvent { at: t, gpu: g, kind: FaultKind::Fail });
-        events.push(TimelineEvent { at: t + downtime, gpu: g, kind: FaultKind::Recover });
+        events.push(TimelineEvent::fail(t, g));
+        events.push(TimelineEvent::rejoin(t + downtime, g));
     }
     FaultTimeline::new(events)
 }
@@ -105,5 +137,17 @@ mod tests {
         // A TP4 group survives a 3-cascade; a TP3 group would not.
         assert!(tl.validate(4).is_ok());
         assert!(tl.validate(3).is_err());
+    }
+
+    #[test]
+    fn thermal_throttle_cycles_validate() {
+        let tl = thermal_throttle(3, 4, 1.0, 0.5, 2.0, 3.0);
+        assert_eq!(tl.len(), 8);
+        tl.validate(8).unwrap();
+        assert_eq!(tl.max_concurrent_down(), 0, "soft faults never shrink the world");
+        assert_eq!(tl.max_concurrent_degraded(), 1);
+        // The smallest group containing gpu 3 tolerates the whole spell —
+        // soft faults never violate the ≤ world-1 concurrent-down rule.
+        tl.validate(4).unwrap();
     }
 }

@@ -8,8 +8,9 @@
 //! with a seeded RNG, which is what the experiments actually consume.
 //!
 //! The fault-scenario generators ([`flaky_gpu`], [`rolling_maintenance`],
-//! [`cascade_then_heal`]) additionally express named availability
-//! scenarios as [`crate::cluster::FaultTimeline`]s for the replay driver.
+//! [`cascade_then_heal`], [`thermal_throttle`]) additionally express
+//! named availability scenarios — hard failures and soft (degraded-GPU)
+//! spells — as [`crate::cluster::FaultTimeline`]s for the replay driver.
 //!
 //! ```
 //! use failsafe::traces::{mooncake_trace, poisson_arrivals, split_arrivals};
@@ -31,7 +32,7 @@ mod lengths;
 mod request;
 
 pub use arrivals::{poisson_arrivals, scale_arrivals, split_arrivals};
-pub use faults::{cascade_then_heal, flaky_gpu, rolling_maintenance};
+pub use faults::{cascade_then_heal, flaky_gpu, rolling_maintenance, thermal_throttle};
 pub use gcp::gcp_availability;
 pub use lengths::{mooncake_trace, openthoughts_trace, TraceStats};
 pub use request::TraceRequest;

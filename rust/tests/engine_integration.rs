@@ -8,7 +8,7 @@
 //! each test self-skips when the artifacts are missing so `cargo test`
 //! stays usable in artifact-less environments (e.g. bare CI runners).
 
-use failsafe::cluster::{FaultKind, FaultTimeline, TimelineEvent};
+use failsafe::cluster::{FaultTimeline, TimelineEvent};
 use failsafe::config::EngineConfig;
 use failsafe::coordinator::RequestState;
 use failsafe::engine::{
@@ -556,12 +556,12 @@ fn three_failure_cascade_then_staggered_rejoins_is_exact() {
         engine.submit(p, max_new).unwrap();
     }
     let timeline = FaultTimeline::new(vec![
-        TimelineEvent { at: 3.0, gpu: 0, kind: FaultKind::Fail },
-        TimelineEvent { at: 5.0, gpu: 1, kind: FaultKind::Fail },
-        TimelineEvent { at: 7.0, gpu: 2, kind: FaultKind::Fail },
-        TimelineEvent { at: 12.0, gpu: 0, kind: FaultKind::Recover },
-        TimelineEvent { at: 16.0, gpu: 1, kind: FaultKind::Recover },
-        TimelineEvent { at: 20.0, gpu: 2, kind: FaultKind::Recover },
+        TimelineEvent::fail(3.0, 0),
+        TimelineEvent::fail(5.0, 1),
+        TimelineEvent::fail(7.0, 2),
+        TimelineEvent::rejoin(12.0, 0),
+        TimelineEvent::rejoin(16.0, 1),
+        TimelineEvent::rejoin(20.0, 2),
     ]);
     assert_eq!(timeline.max_concurrent_down(), 3);
     let pace = ReplayPace::Tokens { per_sec: 1.0 };
@@ -570,6 +570,43 @@ fn three_failure_cascade_then_staggered_rejoins_is_exact() {
     assert_eq!(out.final_world, 4);
     assert_eq!(engine.epoch(), 6);
     assert_eq!(out.report.outputs_owned(), expected, "cascade + heal diverged");
+}
+
+/// Soft→hard escalation on one GPU — throttle, deepen, die, rejoin —
+/// token-paced twice over: deterministic across runs, bit-exact vs the
+/// fault-free reference, and the degrade/restore events surface.
+/// Slowdowns only re-weight routing, so the numerics never move.
+#[test]
+fn degrade_fail_rejoin_is_deterministic_and_exact() {
+    require_artifacts!();
+    let ps = prompts(4, 6, 30, 91);
+    let max_new = 8;
+    let expected = serve(1, SystemConfig::standard(), &ps, max_new);
+
+    let timeline = FaultTimeline::new(vec![
+        TimelineEvent::slow_down(2.0, 1, 0.75),
+        TimelineEvent::slow_down(4.0, 1, 0.5), // deepening ramp
+        TimelineEvent::fail(8.0, 1),
+        TimelineEvent::rejoin(14.0, 1),
+    ]);
+    let run = || {
+        let mut engine = Engine::new(config(3, SystemConfig::failsafe())).unwrap();
+        for p in &ps {
+            engine.submit(p, max_new).unwrap();
+        }
+        let pace = ReplayPace::Tokens { per_sec: 1.0 };
+        let out = replay(&mut engine, &timeline, RecoveryMethod::Full, pace).unwrap();
+        assert_eq!(out.applied.len(), 4);
+        assert_eq!(out.final_world, 3);
+        assert_eq!(engine.effective_capacity(), 3.0, "rejoined at full speed");
+        (
+            out.report.outputs_owned(),
+            out.applied.iter().map(|a| (a.event.gpu, a.rank)).collect::<Vec<_>>(),
+        )
+    };
+    let (outputs, applied) = run();
+    assert_eq!(outputs, expected, "degrade escalation diverged from fault-free");
+    assert_eq!((outputs, applied), run(), "token-paced escalation must be reproducible");
 }
 
 /// Engine guards: oversized prompts, out-of-vocab tokens, and zero

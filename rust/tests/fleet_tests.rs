@@ -3,7 +3,7 @@
 //! redirect on replica trouble, and multi-replica timeline replay — all
 //! through the public `Fleet` surface, no AOT artifacts required.
 
-use failsafe::cluster::FaultKind;
+use failsafe::cluster::TimelineEventKind;
 use failsafe::engine::{ReplayPace, SubmitOptions};
 use failsafe::fleet::Fleet;
 use failsafe::model::llama3_70b;
@@ -151,7 +151,7 @@ fn four_replica_token_paced_replay_is_deterministic() {
         let applied: Vec<_> = out
             .applied
             .iter()
-            .map(|(r, a)| (*r, a.event.gpu, a.rank, a.event.kind))
+            .map(|(r, a)| (*r, a.event.gpu, a.rank, a.event.kind.name()))
             .collect();
         let results: Vec<_> = out
             .report
@@ -223,6 +223,7 @@ fn cascade_on_one_replica_fleet_keeps_serving() {
         best_single
     );
     // The faulted replica produced events for its failures and rejoins.
-    let fails = out.applied.iter().filter(|(_, a)| a.event.kind == FaultKind::Fail).count();
+    let fails =
+        out.applied.iter().filter(|(_, a)| a.event.kind == TimelineEventKind::Fail).count();
     assert_eq!(fails, 2);
 }

@@ -1,0 +1,241 @@
+//! Soft-fault handling end to end over the public surfaces: detector
+//! convergence and flap damping under noisy step times, bit-reproducible
+//! token-paced replay of interleaved SlowDown/Fail/Rejoin events,
+//! throttled-rank (and throttled-replica) capacity-aware redirection, and
+//! the trace-format round trip for the soft event kinds. Everything runs
+//! on the simulator backend — no AOT artifacts required.
+
+use failsafe::cluster::{FaultTimeline, TimelineEvent, TimelineEventKind};
+use failsafe::engine::{replay, ReplayPace, ServingBackend, SubmitOptions};
+use failsafe::fleet::Fleet;
+use failsafe::health::{plan_mitigation, HealthMonitor, RankHealth};
+use failsafe::model::llama3_70b;
+use failsafe::recovery::RecoveryMethod;
+use failsafe::simulator::{OnlineMode, OnlineSim, OnlineSession, SystemConfig};
+use failsafe::traces::thermal_throttle;
+use failsafe::util::Rng;
+
+fn session(world: usize) -> OnlineSession {
+    OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, world)
+        .with_model(llama3_70b())
+        .session()
+}
+
+fn submit_wave(session: &mut OnlineSession, n: usize, budget: usize) {
+    let prompt = vec![0u32; 2048];
+    for i in 0..n {
+        session
+            .submit_with(&prompt, SubmitOptions::new(budget).at(i as f64 * 0.01))
+            .expect("submit");
+    }
+}
+
+/// The detector converges on a noisy 2× straggler, estimates its factor,
+/// and the planner turns the states into capacity weights the session
+/// can apply directly.
+#[test]
+fn detector_feeds_the_planner_end_to_end() {
+    let mut monitor = HealthMonitor::new(8);
+    let mut rng = Rng::seed_from_u64(17);
+    for _ in 0..60 {
+        let sample: Vec<f64> = (0..8)
+            .map(|r| {
+                let base = if r == 5 { 0.022 } else { 0.011 };
+                base * (1.0 + 0.08 * (2.0 * rng.f64() - 1.0))
+            })
+            .collect();
+        monitor.observe(&sample);
+    }
+    let RankHealth::Throttled(f) = monitor.state(5) else {
+        panic!("rank 5 should be Throttled, is {:?}", monitor.state(5));
+    };
+    assert!((0.35..=0.65).contains(&f), "factor estimate {f} not ≈ 0.5");
+
+    let plan = plan_mitigation(monitor.states());
+    assert!(!plan.is_noop());
+    assert!(plan.suspects.is_empty(), "a stable throttle is not a Suspect");
+
+    // The session accepts the planner's weights and keeps serving.
+    let mut s = session(8);
+    submit_wave(&mut s, 8, 8);
+    let latency = s.apply_mitigation(&plan.weights).unwrap();
+    assert!(latency >= 0.0);
+    let report = s.run_to_completion().unwrap();
+    for r in &report.results {
+        assert_eq!(r.output_tokens.len(), 8);
+    }
+}
+
+/// Square-wave load noise around the trip threshold must not flap the
+/// detector: hysteresis plus transition damping bounds the state churn.
+#[test]
+fn detector_damps_flapping_under_oscillating_noise() {
+    let mut monitor = HealthMonitor::new(8);
+    let mut rng = Rng::seed_from_u64(23);
+    let mut transitions = 0usize;
+    for i in 0..600 {
+        let slow = (i / 5) % 2 == 0;
+        let sample: Vec<f64> = (0..8)
+            .map(|r| {
+                let base = if r == 1 && slow { 0.019 } else { 0.010 };
+                base * (1.0 + 0.05 * (2.0 * rng.f64() - 1.0))
+            })
+            .collect();
+        transitions += monitor.observe(&sample).len();
+    }
+    assert!(transitions <= 10, "{transitions} transitions in 600 ticks — flapping");
+}
+
+/// Token-paced replay with SlowDown, Fail, and Rejoin interleaved on the
+/// *same* GPU (the soft→hard escalation) is bit-reproducible: two
+/// identical runs fire the same events at the same points and produce
+/// identical reports.
+#[test]
+fn token_paced_soft_hard_replay_is_deterministic() {
+    let timeline = FaultTimeline::new(vec![
+        TimelineEvent::slow_down(2.0, 1, 0.5),
+        TimelineEvent::fail(6.0, 1),
+        TimelineEvent::rejoin(10.0, 1),
+        TimelineEvent::slow_down(14.0, 3, 0.75),
+        TimelineEvent::restore(18.0, 3),
+    ]);
+    timeline.validate(8).unwrap();
+    let run = || {
+        let mut s = session(8);
+        submit_wave(&mut s, 12, 16);
+        let pace = ReplayPace::Tokens { per_sec: 2.0 };
+        let out = replay(&mut s, &timeline, RecoveryMethod::Full, pace).unwrap();
+        assert_eq!(out.applied.len(), 5, "every event applied");
+        (
+            out.applied
+                .iter()
+                .map(|a| (a.event.gpu, a.rank, a.event.kind.name()))
+                .collect::<Vec<_>>(),
+            out.tokens_emitted,
+            out.final_world,
+            out.report.results.iter().map(|r| r.output_tokens.len()).collect::<Vec<_>>(),
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+/// The degrade/restore events surface through the replayed session's
+/// event stream, and soft faults never change the world size.
+#[test]
+fn replayed_throttle_emits_degrade_and_restore() {
+    let mut s = session(4);
+    submit_wave(&mut s, 6, 12);
+    let timeline = thermal_throttle(2, 1, 0.5, 0.5, 3.0, 1.0);
+    let out = replay(&mut s, &timeline, RecoveryMethod::Full, ReplayPace::Clock).unwrap();
+    assert_eq!(out.final_world, 4);
+    assert_eq!(out.applied.len(), 2);
+    assert_eq!(out.applied[0].event.kind, TimelineEventKind::SlowDown { factor: 0.5 });
+    assert_eq!(out.applied[1].event.kind, TimelineEventKind::Restore);
+    assert_eq!(s.effective_capacity(), 4.0, "restored to full speed");
+    for r in &out.report.results {
+        assert_eq!(r.output_tokens.len(), 12);
+    }
+}
+
+/// Fleet level: a replica with a throttled rank keeps serving but
+/// attracts capacity-proportionally less new work, and restoring the
+/// rank restores placement parity.
+#[test]
+fn throttled_replica_receives_less_fleet_work() {
+    let sim =
+        OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8).with_model(llama3_70b());
+    let mut fleet = Fleet::new();
+    for s in sim.sessions(2) {
+        fleet.add_replica(Box::new(s));
+    }
+    let prompt = vec![0u32; 1024];
+    // Equal booked work on both replicas.
+    for _ in 0..4 {
+        fleet.submit_with(&prompt, SubmitOptions::new(8)).unwrap();
+    }
+    // Replica 0 gets a 0.5× rank: capacity 7.5 vs 8.
+    fleet.inject_slowdown(0, 3, 0.5).unwrap();
+    assert_eq!(fleet.replica_capacity(0), 7.5);
+    assert_eq!(fleet.replica_world(0), 8, "throttled, not shrunk");
+    // With equal booked load the healthy replica wins placement.
+    let next = fleet.submit_with(&prompt, SubmitOptions::new(8)).unwrap();
+    assert_eq!(fleet.replica_of(next), Some(1));
+    // Restore → ties break back to replica 0 under equal load.
+    fleet.inject_slowdown(0, 3, 1.0).unwrap();
+    assert_eq!(fleet.replica_capacity(0), 8.0);
+    let report = fleet.run_to_completion().unwrap();
+    for r in &report.results {
+        assert!(!r.result.aborted);
+        assert_eq!(r.result.output_tokens.len(), 8);
+    }
+}
+
+/// Round-trip `parse` ↔ `to_text` for the soft event kinds, mixed with
+/// hard ones, including comment/blank handling and factor fidelity.
+#[test]
+fn soft_event_trace_format_round_trips() {
+    let text = "\
+# soft fault, escalation, heal
+0.25 slowdown 3 0.8125
+2 fail 3
+4.5 rejoin 3
+5 slowdown 0 0.25
+7.75 restore 0
+";
+    let tl = FaultTimeline::parse(text).unwrap();
+    assert_eq!(tl.len(), 5);
+    tl.validate(8).unwrap();
+    assert_eq!(tl.max_concurrent_down(), 1);
+    assert_eq!(tl.max_concurrent_degraded(), 1);
+    let round = FaultTimeline::parse(&tl.to_text()).unwrap();
+    assert_eq!(round, tl);
+    // Factor survives exactly (f64 Display round-trips).
+    assert_eq!(round.events()[0].kind, TimelineEventKind::SlowDown { factor: 0.8125 });
+    // A factor on a non-slowdown line is rejected, as is a missing one.
+    assert!(FaultTimeline::parse("1 fail 2 0.5").is_err());
+    assert!(FaultTimeline::parse("1 slowdown 2").is_err());
+}
+
+/// The Suspect escalation path: proactive backup makes a later hard
+/// failure cheap (Full recovery restores from host instead of paying the
+/// recompute storm), and the suspect's weights drain new placement.
+#[test]
+fn suspect_escalation_makes_the_hard_failure_cheap() {
+    let mut s = session(8);
+    submit_wave(&mut s, 16, 32);
+    for _ in 0..12 {
+        s.step().unwrap();
+    }
+    // The health layer flags rank 6 as Suspect: weight it to near zero
+    // and host-mirror everything in flight.
+    let states: Vec<RankHealth> = (0..8)
+        .map(|r| if r == 6 { RankHealth::Suspect } else { RankHealth::Healthy })
+        .collect();
+    let plan = plan_mitigation(&states);
+    assert_eq!(plan.suspects, vec![6]);
+    s.apply_mitigation(&plan.weights).unwrap();
+    let mirrored = s.proactive_backup();
+    assert!(mirrored > 0, "in-flight decode tokens should need mirroring");
+    assert_eq!(s.proactive_backup(), 0, "second pass: nothing left to mirror");
+
+    // The predicted failure lands. With the full context host-mirrored,
+    // backup-based recovery is far cheaper than recompute.
+    let full = s.inject_failure(6, RecoveryMethod::Full).unwrap();
+    assert_eq!(s.world(), 7);
+    let report = s.run_to_completion().unwrap();
+    for r in &report.results {
+        assert_eq!(r.output_tokens.len(), 32);
+    }
+
+    // Reference: the same failure without the proactive pass, recomputed.
+    let mut cold = session(8);
+    submit_wave(&mut cold, 16, 32);
+    for _ in 0..12 {
+        cold.step().unwrap();
+    }
+    let recompute = cold.inject_failure(6, RecoveryMethod::Recompute).unwrap();
+    assert!(
+        recompute > 5.0 * full,
+        "proactive backup should make recovery cheap: full {full} vs recompute {recompute}"
+    );
+}

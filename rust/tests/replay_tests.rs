@@ -4,7 +4,7 @@
 //! required. (The bit-exactness side of the same scenarios runs on the
 //! real engine in `engine_integration.rs`.)
 
-use failsafe::cluster::{FaultKind, FaultTimeline, TimelineEvent};
+use failsafe::cluster::{FaultTimeline, TimelineEvent, TimelineEventKind};
 use failsafe::engine::{replay, EngineEvent, ReplayPace, ServingBackend, SubmitOptions};
 use failsafe::model::llama3_70b;
 use failsafe::recovery::RecoveryMethod;
@@ -49,7 +49,7 @@ fn cascade_then_staggered_rejoins_completes_all_requests() {
     let rejoins: Vec<_> = out
         .applied
         .iter()
-        .filter(|a| a.event.kind == FaultKind::Recover)
+        .filter(|a| a.event.kind == TimelineEventKind::Rejoin)
         .collect();
     assert_eq!(rejoins.len(), 3);
     for a in &rejoins {
@@ -75,7 +75,7 @@ fn flaky_gpu_cycles_through_rank_renumbering() {
     let first_rejoin = out
         .applied
         .iter()
-        .find(|a| a.event.kind == FaultKind::Recover)
+        .find(|a| a.event.kind == TimelineEventKind::Rejoin)
         .unwrap();
     assert_eq!(first_rejoin.event.gpu, 2);
     assert_eq!(first_rejoin.rank, 3);
@@ -130,11 +130,7 @@ fn rejoin_without_a_failure_is_rejected() {
     assert_eq!(s.world(), 4);
     assert!(s.inject_rejoin(RecoveryMethod::Full).is_err(), "budget spent");
     // A timeline that rejoins an always-healthy GPU is rejected up front.
-    let bad = FaultTimeline::new(vec![TimelineEvent {
-        at: 0.5,
-        gpu: 0,
-        kind: FaultKind::Recover,
-    }]);
+    let bad = FaultTimeline::new(vec![TimelineEvent::rejoin(0.5, 0)]);
     assert!(replay(&mut s, &bad, RecoveryMethod::Full, ReplayPace::Clock).is_err());
 }
 
