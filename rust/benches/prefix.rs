@@ -1,0 +1,166 @@
+//! Shared-prefix fan-out sweep: the spnl-style inner/outer repeat
+//! pattern — K distinct prefixes, each continued by N requests — served
+//! by the online simulator with prefix sharing off (cold baseline) and
+//! on (warm). For each fan-out the sweep records prefill FLOPs (modeled
+//! from the chunk/context FLOP formulas), prefill tokens actually
+//! charged by the simulator, and the peak resident KV bytes of a
+//! simultaneous burst. Savings grow superlinearly with fan-out: every
+//! added continuation re-prefills (and re-caches) the whole prefix in
+//! the cold baseline but only its private suffix when sharing.
+//!
+//! In-bench acceptance: at fan-out ≥ 8, sharing must cut prefill FLOPs
+//! (and charged prefill tokens) ≥ 4× and peak resident KV bytes ≥ 2×.
+//!
+//! Writes `BENCH_prefix.json` at the repo root via
+//! [`failsafe::benchkit::BenchLog`].
+
+use failsafe::benchkit::{section, sink, Bench, BenchLog};
+use failsafe::engine::{ServingBackend, SubmitOptions, BLOCK_TOKENS};
+use failsafe::model::{llama3_70b, ModelSpec};
+use failsafe::prefix::PrefixTrie;
+use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
+use failsafe::traces::repeat_fanout;
+
+const WORLD: usize = 8;
+const PREFIXES: usize = 4;
+const PREFIX_TOKENS: usize = 2048;
+const SUFFIX_TOKENS: usize = 64;
+
+/// Modeled FLOPs for prefilling `chunk` fresh tokens on top of `context`
+/// already-cached tokens (all layers, all head groups and FFN columns).
+fn chunk_flops(m: &ModelSpec, chunk: usize, context: usize) -> f64 {
+    let a = m.attn_flops(chunk, context);
+    let f = m.ffn_flops(chunk);
+    m.n_layers as f64 * (a.per_head_group() * m.n_kv_heads as f64 + f.per_col * f.active_cols)
+}
+
+fn sim(sharing: bool) -> OnlineSim {
+    OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, WORLD)
+        .with_model(llama3_70b())
+        .with_prefix_sharing(sharing)
+}
+
+fn main() {
+    let bench = Bench::default();
+    let mut log = BenchLog::new();
+    let m = llama3_70b();
+    let covered = (PREFIX_TOKENS / BLOCK_TOKENS) * BLOCK_TOKENS;
+    let input = PREFIX_TOKENS + SUFFIX_TOKENS;
+
+    section(&format!(
+        "prefix fan-out sweep: {} TP{WORLD}, {PREFIXES} prefixes x {PREFIX_TOKENS}+{SUFFIX_TOKENS} tokens",
+        m.name
+    ));
+    for fanout in [1usize, 2, 4, 8, 16] {
+        let fan = repeat_fanout(PREFIXES, fanout, PREFIX_TOKENS, SUFFIX_TOKENS, 29);
+
+        // Staggered arrivals (donor admitted before its sharers): the
+        // simulator charges each warm continuation only its uncovered
+        // prefill tokens.
+        let staggered = |sharing: bool| {
+            let mut s = sim(sharing).session();
+            for (i, r) in fan.iter().enumerate() {
+                s.submit_with(
+                    &r.prompt,
+                    SubmitOptions::new(r.request.output_tokens).at(i as f64 * 0.25),
+                )
+                .expect("submit");
+            }
+            let rep = s.run_to_completion().expect("run");
+            (rep.prefill_tokens, s.prefix_stats().hits)
+        };
+        let (cold_tokens, _) = staggered(false);
+        let (warm_tokens, hits) = staggered(true);
+
+        // Simultaneous burst: every continuation resident at once — the
+        // resident-KV dedup win at its peak.
+        let burst = |sharing: bool| {
+            let mut s = sim(sharing).session();
+            for r in &fan {
+                s.submit_with(&r.prompt, SubmitOptions::new(16)).expect("submit");
+            }
+            s.run_to_completion().expect("run");
+            s.peak_kv_bytes()
+        };
+        let cold_kv = burst(false);
+        let warm_kv = burst(true);
+
+        // Modeled prefill FLOPs: the cold baseline prefills every prompt
+        // from scratch; sharing prefills one donor per prefix plus each
+        // continuation's uncovered tail (attention over the cached
+        // context included).
+        let cold_flops = (PREFIXES * fanout) as f64 * chunk_flops(&m, input, 0);
+        let warm_flops = PREFIXES as f64
+            * (chunk_flops(&m, input, 0)
+                + (fanout - 1) as f64 * chunk_flops(&m, input - covered, covered));
+
+        log.record_ns(&format!("prefix: prefill flops fanout={fanout} (cold)"), cold_flops);
+        log.record_ns(&format!("prefix: prefill flops fanout={fanout} (shared)"), warm_flops);
+        log.record_ns(
+            &format!("prefix: sim prefill tokens fanout={fanout} (cold)"),
+            cold_tokens as f64,
+        );
+        log.record_ns(
+            &format!("prefix: sim prefill tokens fanout={fanout} (shared)"),
+            warm_tokens as f64,
+        );
+        log.record_ns(&format!("prefix: peak resident kv fanout={fanout} (cold)"), cold_kv);
+        log.record_ns(&format!("prefix: peak resident kv fanout={fanout} (shared)"), warm_kv);
+        println!(
+            "  fanout {fanout:>2}: flops {:>5.1}x | prefill tokens {:>5.1}x | peak kv {:>5.1}x | trie hits {hits}",
+            cold_flops / warm_flops,
+            cold_tokens as f64 / warm_tokens.max(1) as f64,
+            cold_kv / warm_kv.max(1.0),
+        );
+
+        assert!(warm_tokens <= cold_tokens, "sharing must never add prefill work");
+        assert!(warm_kv <= cold_kv * 1.001, "sharing must never add resident KV");
+        if fanout >= 8 {
+            assert!(
+                cold_flops >= 4.0 * warm_flops,
+                "fanout {fanout}: prefill FLOPs must drop >= 4x ({cold_flops:.2e} vs {warm_flops:.2e})"
+            );
+            assert!(
+                cold_tokens as f64 >= 4.0 * warm_tokens as f64,
+                "fanout {fanout}: charged prefill tokens must drop >= 4x ({cold_tokens} vs {warm_tokens})"
+            );
+            assert!(
+                cold_kv >= 2.0 * warm_kv,
+                "fanout {fanout}: peak resident KV must drop >= 2x ({cold_kv:.3e} vs {warm_kv:.3e})"
+            );
+            assert!(
+                hits >= (PREFIXES * (fanout - 1)) as u64,
+                "fanout {fanout}: every continuation should hit the trie (hits {hits})"
+            );
+        }
+    }
+
+    // The trie hot path itself: admission-time lookups run on every
+    // arrival when sharing is enabled.
+    let fan = repeat_fanout(PREFIXES, 8, PREFIX_TOKENS, SUFFIX_TOKENS, 31);
+    let mut trie = PrefixTrie::new();
+    for r in &fan {
+        sink(trie.insert(&r.prompt));
+    }
+    log.run(&bench, "prefix: trie match_only (2112-token warm prompt)", || {
+        sink(trie.match_only(&fan[1].prompt).tokens);
+    });
+    log.run(&bench, "prefix: trie lookup (2112-token warm prompt)", || {
+        sink(trie.lookup(&fan[2].prompt).tokens);
+    });
+    log.run(&bench, "prefix: trie insert (2112-token resident chain)", || {
+        sink(trie.insert(&fan[3].prompt).len());
+    });
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_prefix.json").to_string()
+    });
+    match log.write_json("prefix", std::path::Path::new(&out)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => {
+            // A silent write failure would let CI validate a stale file.
+            eprintln!("\nfailed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -52,6 +52,12 @@ pub struct EngineConfig {
     pub token_budget: usize,
     /// Decode batch cap.
     pub max_batch: usize,
+    /// Shared-prefix KV cache: warm prompt prefixes adopt their cached
+    /// blocks copy-on-write instead of re-prefilling, and admission is
+    /// biased toward the rank already holding them. Off by default so
+    /// existing placement/accounting behaviour is bit-identical unless
+    /// opted in (`--prefix-sharing`).
+    pub prefix_sharing: bool,
     pub seed: u64,
 }
 
@@ -65,6 +71,7 @@ impl Default for EngineConfig {
             artifacts_dir: "artifacts".into(),
             token_budget: 256,
             max_batch: 8,
+            prefix_sharing: false,
             seed: 42,
         }
     }
@@ -88,6 +95,7 @@ impl EngineConfig {
         c.artifacts_dir = args.get_or("artifacts", &c.artifacts_dir).to_string();
         c.token_budget = args.get_usize("budget", c.token_budget);
         c.max_batch = args.get_usize("batch", c.max_batch);
+        c.prefix_sharing = c.prefix_sharing || args.has("prefix-sharing");
         c.seed = args.get_u64("seed", c.seed);
         c
     }
@@ -120,5 +128,10 @@ mod tests {
         assert_eq!(c.system.name, "Nonuniform-TP");
         assert_eq!(c.recovery, RecoveryMethod::Host);
         assert_eq!(c.max_batch, 64);
+        assert!(!c.prefix_sharing, "sharing is opt-in");
+        let args = Args::parse(
+            "serve --prefix-sharing --world 2".split_whitespace().map(String::from),
+        );
+        assert!(EngineConfig::from_args(&args).prefix_sharing);
     }
 }

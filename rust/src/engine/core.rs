@@ -23,6 +23,7 @@
 //! the KV gather/append and cost-model step times in
 //! `BENCH_hotpath.json`.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -31,6 +32,7 @@ use crate::cluster::{GpuSpec, Interconnect, TransferClass};
 use crate::config::EngineConfig;
 use crate::coordinator::RequestState;
 use crate::kvcache::{BackupStore, KvPlacement};
+use crate::prefix::{NodeId, PrefixStats, PrefixTrie};
 use crate::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use crate::router::DpRouter;
 use crate::runtime::{
@@ -44,7 +46,7 @@ use crate::{RankId, RequestId, SimTime};
 use super::report::{self, ServeReport};
 use super::session::{Session, SubmitOptions};
 use super::shard::{pick_bucket, RankShard};
-use super::{KvStore, PoolId};
+use super::{KvStore, PoolId, BLOCK_TOKENS};
 
 /// Something observable that happened during one engine step (or at a
 /// step boundary: aborts, failure injections, and rejoins surface on the
@@ -274,6 +276,15 @@ pub struct Engine {
     final_norm: xla::Literal,
     lm_head: xla::Literal,
     session: Session,
+    /// Shared-prefix trie (active when `config.prefix_sharing`): nodes
+    /// hold refcounted CoW references into `kv`, invalidated and
+    /// re-shared around every reconfiguration epoch.
+    prefix: PrefixTrie,
+    /// Home rank of the request that donated each trie node's blocks —
+    /// the admission-time affinity hint.
+    prefix_home: HashMap<NodeId, RankId>,
+    /// Prompt tokens adopted from the trie instead of re-prefilled.
+    prefix_saved_tokens: usize,
     epoch: u64,
     /// GPUs currently out of the group (failed and not yet rejoined) —
     /// the budget `inject_rejoin` draws from.
@@ -366,6 +377,9 @@ impl Engine {
             final_norm,
             lm_head,
             session: Session::new(),
+            prefix: PrefixTrie::new(),
+            prefix_home: HashMap::new(),
+            prefix_saved_tokens: 0,
             epoch: 0,
             lost: 0,
             speed: vec![1.0; world],
@@ -539,14 +553,40 @@ impl Engine {
         report::assemble(&self.session, &self.recoveries)
     }
 
-    /// Route and admit every queued request whose arrival has come.
+    /// Route and admit every queued request whose arrival has come. With
+    /// `config.prefix_sharing`, admission first matches the prompt
+    /// against the trie: covered tokens adopt their cached blocks
+    /// copy-on-write (zero prefill FLOPs, zero new KV blocks) and routing
+    /// is biased toward the rank whose DP lanes already hold the prefix.
     fn admit_due(&mut self) {
         for id in self.session.ready_to_admit(self.session.clock) {
             let (len, delayed) = {
                 let r = &self.session.requests[&id];
                 (r.input_len(), r.arrival > 0.0)
             };
-            let home = self.router.route(len as f64);
+            let adoption =
+                if self.config.prefix_sharing { self.plan_adoption(id) } else { None };
+            let home = match &adoption {
+                Some((adopt, _, hint)) => {
+                    let mut bonus = vec![0.0; self.world()];
+                    if let Some(h) = hint {
+                        if *h < bonus.len() {
+                            bonus[*h] = *adopt as f64;
+                        }
+                    }
+                    self.router.route_biased((len - adopt) as f64, &bonus)
+                }
+                None => self.router.route(len as f64),
+            };
+            if let Some((adopt, pools, _)) = adoption {
+                let ranks: HashMap<PoolId, RankId> =
+                    self.pool_ranks(home).into_iter().collect();
+                for (pool, blocks) in &pools {
+                    self.kv.adopt_blocks(id, *pool, ranks[pool], blocks, adopt);
+                }
+                self.session.requests.get_mut(&id).unwrap().context = adopt;
+                self.prefix_saved_tokens += adopt;
+            }
             let r = self.session.requests.get_mut(&id).unwrap();
             r.home = home;
             r.state = RequestState::Prefilling;
@@ -554,6 +594,195 @@ impl Engine {
                 // TTFT of a timed arrival measures service, not queueing
                 // before its own arrival time.
                 self.session.rebase_timing(id);
+            }
+        }
+    }
+
+    // ---------------------------------------------------- prefix sharing --
+
+    /// Cumulative trie counters (lookups, hits, tokens saved, repairs).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.stats()
+    }
+
+    /// Trie chunks whose device blocks are currently resident.
+    pub fn prefix_resident_chunks(&self) -> usize {
+        self.prefix.resident_chunks()
+    }
+
+    /// Prompt tokens adopted from the shared-prefix cache instead of
+    /// re-prefilled, cumulatively.
+    pub fn prefix_saved_tokens(&self) -> usize {
+        self.prefix_saved_tokens
+    }
+
+    /// Physically resident KV bytes — shared blocks counted once
+    /// (contrast [`Engine::kv_bytes_by_rank`], the logical per-lane view).
+    pub fn kv_resident_bytes(&self) -> usize {
+        self.kv.resident_bytes()
+    }
+
+    /// Live KV blocks currently shared between runs and/or the trie.
+    pub fn kv_shared_blocks(&self) -> usize {
+        self.kv.shared_block_count()
+    }
+
+    /// Every KV pool handle of the current epoch paired with the rank
+    /// holding its lanes: TP pools belong to their owning rank, DP
+    /// (replicated) pools to the request's `home`.
+    fn pool_ranks(&self, home: RankId) -> Vec<(PoolId, RankId)> {
+        let mut out = Vec::new();
+        for layer in 0..self.manifest.model.n_layers {
+            for (rank, pid) in self.tp_pools[layer].iter().enumerate() {
+                if let Some(pid) = pid {
+                    out.push((*pid, rank));
+                }
+            }
+            if let Some(pid) = self.dp_pools[layer] {
+                out.push((pid, home));
+            }
+        }
+        out
+    }
+
+    /// Match `id`'s prompt against the trie and build its adoption plan:
+    /// covered tokens (capped one short of the full prompt so prefill
+    /// still emits the first output token), the per-pool shared block
+    /// lists (sorted by pool for determinism), and the affinity hint of
+    /// the deepest matched node. `None` on a cold miss, or if the cached
+    /// pool set doesn't cover the current epoch's — a defensive check;
+    /// the trie is invalidated on every reconfiguration.
+    #[allow(clippy::type_complexity)]
+    fn plan_adoption(
+        &mut self,
+        id: RequestId,
+    ) -> Option<(usize, Vec<(PoolId, Vec<u32>)>, Option<RankId>)> {
+        let len = self.session.requests[&id].input_len();
+        let m = self.prefix.lookup(&self.session.requests[&id].input_tokens);
+        let adopt = m.live_tokens.min(len - 1);
+        let n_nodes = adopt.div_ceil(BLOCK_TOKENS);
+        if n_nodes == 0 {
+            return None;
+        }
+        let chain = &m.nodes[..n_nodes];
+        let mut per_pool: HashMap<PoolId, Vec<u32>> = HashMap::new();
+        for &node in chain {
+            for &(pool, b) in self.prefix.node_blocks(node) {
+                per_pool.entry(pool).or_default().push(b);
+            }
+        }
+        let epoch_pools = self.pool_ranks(0);
+        if per_pool.len() != epoch_pools.len()
+            || epoch_pools
+                .iter()
+                .any(|(p, _)| per_pool.get(p).map(Vec::len) != Some(n_nodes))
+        {
+            return None;
+        }
+        let mut pools: Vec<(PoolId, Vec<u32>)> = per_pool.into_iter().collect();
+        pools.sort_unstable_by_key(|(p, _)| *p);
+        let hint = self.prefix_home.get(&chain[n_nodes - 1]).copied();
+        Some((adopt, pools, hint))
+    }
+
+    /// Find-or-create trie nodes for `id`'s freshly prefilled prompt and
+    /// donate its blocks to any not yet resident — later arrivals with
+    /// the same prefix then adopt them instead of re-prefilling.
+    fn register_prefix(&mut self, id: RequestId) {
+        let (prompt, home) = {
+            let r = &self.session.requests[&id];
+            (r.input_tokens.clone(), r.home)
+        };
+        let chain = self.prefix.insert(&prompt);
+        self.donate_chain(id, &chain, home, false);
+    }
+
+    /// Cache `id`'s leading blocks as the device copy of every
+    /// non-resident node of `chain` (root-first), down to the deepest
+    /// chain prefix `id`'s runs fully cover in every pool. Returns that
+    /// depth (0 when nothing is coverable).
+    fn donate_chain(&mut self, id: RequestId, chain: &[NodeId], home: RankId, repair: bool) -> usize {
+        if chain.is_empty() {
+            return 0;
+        }
+        let pools = self.pool_ranks(home);
+        if pools.is_empty() {
+            return 0;
+        }
+        let mut n = chain.len();
+        let mut per_pool: Vec<(PoolId, Vec<u32>)> = Vec::with_capacity(pools.len());
+        'depth: loop {
+            if n == 0 {
+                return 0;
+            }
+            per_pool.clear();
+            for &(pid, _) in &pools {
+                match self.kv.prefix_blocks(id, pid, n) {
+                    Some(blocks) => per_pool.push((pid, blocks)),
+                    None => {
+                        n -= 1;
+                        continue 'depth;
+                    }
+                }
+            }
+            break;
+        }
+        for (i, &node) in chain[..n].iter().enumerate() {
+            if self.prefix.is_resident(node) {
+                continue;
+            }
+            let blocks: Vec<(PoolId, u32)> = per_pool.iter().map(|(p, b)| (*p, b[i])).collect();
+            if repair {
+                self.prefix.repair_blocks(node, &mut self.kv, blocks);
+            } else {
+                self.prefix.register_blocks(node, &mut self.kv, blocks);
+            }
+            self.prefix_home.insert(node, home);
+        }
+        n
+    }
+
+    /// Re-establish sharing after a reconfiguration epoch: the trie was
+    /// invalidated (every device reference dropped), and affected
+    /// requests were restored / re-laid-out with private blocks. The
+    /// first request still covering each known chain is re-registered as
+    /// its donor, then every other sharer's private leading blocks are
+    /// swapped back to the shared copies — bit-identical by construction,
+    /// since all of them were restored from mirrors of the same prefix
+    /// rows. Sharing thus survives fail → shrink-reconfig → rejoin
+    /// instead of decaying to N private copies.
+    fn reshare_prefixes(&mut self) {
+        if !self.config.prefix_sharing {
+            return;
+        }
+        let ids: Vec<RequestId> = self.session.order.clone();
+        for id in ids {
+            let (done, prompt, home) = {
+                let r = &self.session.requests[&id];
+                (r.is_done(), r.input_tokens.clone(), r.home)
+            };
+            if done {
+                continue;
+            }
+            let m = self.prefix.match_only(&prompt);
+            let n = self.donate_chain(id, &m.nodes, home, true);
+            if n == 0 {
+                continue;
+            }
+            for (pid, _) in self.pool_ranks(home) {
+                let shared: Option<Vec<u32>> = m.nodes[..n]
+                    .iter()
+                    .map(|&nd| {
+                        self.prefix
+                            .node_blocks(nd)
+                            .iter()
+                            .find(|&&(p, _)| p == pid)
+                            .map(|&(_, b)| b)
+                    })
+                    .collect();
+                if let Some(shared) = shared {
+                    self.kv.switch_to_shared(id, pid, &shared);
+                }
             }
         }
     }
@@ -644,6 +873,10 @@ impl Engine {
 
         // Apply: wipe the failed rank's KV, re-tag survivors, reshard.
         let affected = self.kv.wipe_rank(rank);
+        // The trie is an epoch-scoped cache: drop its device references
+        // before restore/relayout (it must never pin stale-epoch blocks);
+        // `reshare_prefixes` re-establishes sharing below.
+        self.prefix.invalidate_device(&mut self.kv);
         self.kv.remap_ranks(&survivor_map);
         self.plan = new_plan;
         self.placement = KvPlacement::new(&self.plan);
@@ -715,6 +948,7 @@ impl Engine {
         // the pool handles the step loop gathers through.
         self.kv.relayout(&self.plan);
         self.rebuild_kv_handles();
+        self.reshare_prefixes();
 
         self.recoveries.push(outcome.total_s);
         self.pending_events
@@ -810,11 +1044,17 @@ impl Engine {
             .filter(|(_, r)| !r.is_done())
             .map(|(id, r)| (*id, r.home))
             .collect();
+        // Same epoch-boundary contract as the failure path: the trie must
+        // not pin blocks across the relayout; sharing itself survives it
+        // structurally (relayout memoizes identical source signatures)
+        // and the trie re-pins the shared copies right after.
+        self.prefix.invalidate_device(&mut self.kv);
         self.kv.retag_requests(&self.placement, &homes);
         // Host-side analogue of the costed re-spread: re-bucket resident
         // KV into the expanded plan's head groups, refresh pool handles.
         self.kv.relayout(&self.plan);
         self.rebuild_kv_handles();
+        self.reshare_prefixes();
 
         self.recoveries.push(total_s);
         self.pending_events.push(EngineEvent::GpuRejoined { rank: joined, method });
@@ -916,6 +1156,11 @@ impl Engine {
                 r.on_prefilled(tokens.len());
                 r.state == RequestState::Decoding
             };
+            if finished && self.config.prefix_sharing {
+                // The full prompt is now resident: donate its blocks to
+                // the trie so later arrivals share instead of re-prefill.
+                self.register_prefix(chunk.request);
+            }
             if finished {
                 // If this request still has generated tokens from before a
                 // Recompute-style repair, it is mid-decode continuation and

@@ -54,6 +54,15 @@ pub const BLOCK_TOKENS: usize = 16;
 /// epoch with [`KvStore::pool_handle`], then use on the hot path.
 pub type PoolId = u32;
 
+/// Source identity of one lane of one relayouted block: `(old pool, old
+/// lane index, old block id, rows copied)`, `None` for an absent lane.
+/// Two target blocks with identical signatures copy the very same
+/// physical rows — relayout shares them instead of duplicating.
+type LaneSrc = Option<(PoolId, u32, u32, u32)>;
+
+/// One `relayout()` pass's signature → new-block memo, per target pool.
+type RelayoutMemo = HashMap<(PoolId, Vec<LaneSrc>), u32>;
+
 /// One paged pool: K and V arenas for one (layer, head-group).
 #[derive(Debug, Default)]
 struct Pool {
@@ -69,19 +78,32 @@ struct Pool {
     /// Free block indices; popped from the back (descending push order,
     /// so the lowest id is reused first — deterministic).
     free: Vec<u32>,
+    /// Per-block reference count, parallel to the arena. 1 for a private
+    /// block, >1 for a block shared copy-on-write between runs and/or the
+    /// prefix trie, 0 exactly when the block is on the free list.
+    refs: Vec<u32>,
     n_blocks: u32,
 }
 
 impl Pool {
     fn alloc_block(&mut self) -> u32 {
         if let Some(b) = self.free.pop() {
+            debug_assert_eq!(self.refs[b as usize], 0, "free-list block {b} still referenced");
+            self.refs[b as usize] = 1;
             return b;
         }
         let b = self.n_blocks;
         self.n_blocks += 1;
         self.k.resize(self.n_blocks as usize * self.block_elems, 0.0);
         self.v.resize(self.n_blocks as usize * self.block_elems, 0.0);
+        self.refs.push(1);
         b
+    }
+
+    /// Add one reference to an already-live block (prefix sharing).
+    fn retain_block(&mut self, b: u32) {
+        debug_assert!(self.refs[b as usize] > 0, "retaining freed block {b}");
+        self.refs[b as usize] += 1;
     }
 
     fn buf(&self, want_v: bool) -> &[f32] {
@@ -97,12 +119,29 @@ impl Pool {
         blocks[t / BLOCK_TOKENS] as usize * self.block_elems + (t % BLOCK_TOKENS) * self.stride
     }
 
-    /// Return `blocks` to the free list in descending id order — within
-    /// one freed batch the lowest id is reused first, so reuse order is
-    /// a deterministic function of the alloc/free history.
+    /// Drop one reference per block in `blocks`; blocks whose count hits
+    /// zero return to the free list in descending id order — within one
+    /// freed batch the lowest id is reused first, so reuse order is a
+    /// deterministic function of the alloc/free/share history. Blocks
+    /// still referenced elsewhere (a sharing run, the prefix trie) stay
+    /// live and keep their data.
     fn free_blocks(&mut self, blocks: &mut Vec<u32>) {
-        blocks.sort_unstable_by(|a, b| b.cmp(a));
-        self.free.append(blocks);
+        let mut dead: Vec<u32> = Vec::new();
+        for &b in blocks.iter() {
+            let r = &mut self.refs[b as usize];
+            debug_assert!(*r > 0, "double-free of block {b}");
+            *r -= 1;
+            if *r == 0 {
+                debug_assert!(
+                    !self.free.contains(&b),
+                    "freed block {b} already on the free list"
+                );
+                dead.push(b);
+            }
+        }
+        blocks.clear();
+        dead.sort_unstable_by(|a, b| b.cmp(a));
+        self.free.append(&mut dead);
     }
 }
 
@@ -238,6 +277,25 @@ impl KvStore {
         debug_assert!(src_stride >= stride, "source rows narrower than the pool group");
         let entry = self.reqs.entry(req).or_default();
         let run = entry.run_mut(pool, p.heads.len());
+        // Copy-on-write split: appending into a partially-filled tail
+        // block that another holder (a sharing run, the prefix trie) still
+        // references must not mutate the sharers' view. Full shared blocks
+        // are never written (appends start at `rows`), so the partial tail
+        // is the only divergence point.
+        let filled = run.rows % BLOCK_TOKENS;
+        if filled != 0 {
+            let bi = run.rows / BLOCK_TOKENS;
+            let old = run.blocks[bi];
+            if p.refs[old as usize] > 1 {
+                let fresh = p.alloc_block();
+                let s0 = old as usize * p.block_elems;
+                let d0 = fresh as usize * p.block_elems;
+                p.k.copy_within(s0..s0 + filled * stride, d0);
+                p.v.copy_within(s0..s0 + filled * stride, d0);
+                p.refs[old as usize] -= 1;
+                run.blocks[bi] = fresh;
+            }
+        }
         let need = (run.rows + n_new).div_ceil(BLOCK_TOKENS);
         while run.blocks.len() < need {
             run.blocks.push(p.alloc_block());
@@ -295,6 +353,139 @@ impl KvStore {
         let pool = self.pool_handle(layer, &[head]);
         let n = k_new.len() / self.head_dim;
         self.append_group(req, pool, rank, n, k_new, v_new, self.head_dim);
+    }
+
+    // ---------------------------------------------------- prefix sharing --
+    //
+    // Sharing is at whole-block granularity: the prefix trie caches, per
+    // trie node (one BLOCK_TOKENS-token chunk), the physical block that
+    // chunk occupies in every pool, holding one reference on each. A new
+    // request with a warm prefix *adopts* those blocks (one more reference
+    // each) instead of re-prefilling; the first divergent append into a
+    // partially-used shared block CoW-splits it (see `append_group`).
+
+    /// Block ids covering `req`'s first `n_blocks` full blocks in `pool`,
+    /// for registration into the prefix trie. `None` unless every lane is
+    /// present over the covered rows (mid-recovery runs don't donate).
+    pub fn prefix_blocks(&self, req: RequestId, pool: PoolId, n_blocks: usize) -> Option<Vec<u32>> {
+        let run = self.reqs.get(&req)?.run(pool)?;
+        let covered = n_blocks * BLOCK_TOKENS;
+        if run.blocks.len() < n_blocks || run.rows < covered {
+            return None;
+        }
+        if run.lanes.iter().any(|l| !l.present || l.tokens < covered) {
+            return None;
+        }
+        Some(run.blocks[..n_blocks].to_vec())
+    }
+
+    /// Add one external reference to each of `blocks` in `pool` (the
+    /// prefix trie pinning a donor's chunk blocks).
+    pub fn retain_blocks(&mut self, pool: PoolId, blocks: &[u32]) {
+        let p = &mut self.pools[pool as usize];
+        for &b in blocks {
+            p.retain_block(b);
+        }
+    }
+
+    /// Drop one external reference from each of `blocks` in `pool`; blocks
+    /// nobody else references return to the free list.
+    pub fn release_external(&mut self, pool: PoolId, blocks: &[u32]) {
+        let mut v = blocks.to_vec();
+        self.pools[pool as usize].free_blocks(&mut v);
+    }
+
+    /// Seed `req`'s (empty) run in `pool` with shared `blocks` covering its
+    /// first `tokens` tokens, every lane present and held by `rank` — the
+    /// admission-time warm-prefix adoption: zero prefill FLOPs and zero new
+    /// KV blocks for the covered tokens. `tokens` may end inside the last
+    /// block (a full-prompt hit keeps the final token for recompute); the
+    /// first append then CoW-splits that block.
+    pub fn adopt_blocks(
+        &mut self,
+        req: RequestId,
+        pool: PoolId,
+        rank: RankId,
+        blocks: &[u32],
+        tokens: usize,
+    ) {
+        if blocks.is_empty() {
+            return;
+        }
+        debug_assert!(tokens <= blocks.len() * BLOCK_TOKENS, "adopted tokens exceed blocks");
+        debug_assert!(tokens > (blocks.len() - 1) * BLOCK_TOKENS, "trailing adopted block unused");
+        let p = &mut self.pools[pool as usize];
+        for &b in blocks {
+            p.retain_block(b);
+        }
+        let n_lanes = p.heads.len();
+        let layer = p.layer;
+        let entry = self.reqs.entry(req).or_default();
+        let run = entry.run_mut(pool, n_lanes);
+        debug_assert!(run.blocks.is_empty() && run.rows == 0, "adopting into a non-empty run");
+        run.blocks.extend_from_slice(blocks);
+        run.rows = tokens;
+        for lane in run.lanes.iter_mut() {
+            *lane = Lane { rank, tokens, present: true };
+        }
+        if layer == 0 {
+            entry.tokens = entry.tokens.max(tokens);
+        }
+    }
+
+    /// Swap `req`'s first `blocks.len()` blocks in `pool` for the given
+    /// shared blocks, dropping the private copies. The caller guarantees
+    /// the contents are bit-identical (both sides restored from mirrors of
+    /// the same prefix rows) — recovery uses this to re-deduplicate
+    /// prefixes that a wipe → restore cycle materialized privately.
+    /// Returns false (and does nothing) unless the run fully covers the
+    /// swapped blocks with uniformly present lanes.
+    pub fn switch_to_shared(&mut self, req: RequestId, pool: PoolId, blocks: &[u32]) -> bool {
+        let Some(entry) = self.reqs.get_mut(&req) else { return false };
+        let Ok(i) = entry.runs.binary_search_by_key(&pool, |r| r.pool) else { return false };
+        let run = &mut entry.runs[i];
+        let covered = blocks.len() * BLOCK_TOKENS;
+        if run.blocks.len() < blocks.len() || run.rows < covered {
+            return false;
+        }
+        if run.lanes.iter().any(|l| !l.present || l.tokens < covered) {
+            return false;
+        }
+        if &run.blocks[..blocks.len()] == blocks {
+            return true; // already the shared copies (the donor itself)
+        }
+        let p = &mut self.pools[pool as usize];
+        for &b in blocks {
+            p.retain_block(b);
+        }
+        let mut old: Vec<u32> = run.blocks[..blocks.len()].to_vec();
+        run.blocks[..blocks.len()].copy_from_slice(blocks);
+        p.free_blocks(&mut old);
+        true
+    }
+
+    /// Physically resident KV bytes across all pools — shared blocks
+    /// counted **once**. Contrast [`KvStore::bytes_by_rank`], the logical
+    /// per-lane accounting in which every sharer claims its prefix.
+    pub fn resident_bytes(&self) -> usize {
+        self.pools
+            .iter()
+            .map(|p| {
+                let live = p.n_blocks as usize - p.free.len();
+                live * p.block_elems * 2 * 4 // K + V arenas, f32
+            })
+            .sum()
+    }
+
+    /// Live blocks referenced by more than one holder (sharing in effect).
+    pub fn shared_block_count(&self) -> usize {
+        self.pools.iter().flat_map(|p| p.refs.iter()).filter(|&&r| r > 1).count()
+    }
+
+    /// True when every pool's blocks are back on its free list — the
+    /// refcount-drain invariant checked at the end of property runs.
+    pub fn drained(&self) -> bool {
+        self.pools.iter().all(|p| p.free.len() == p.n_blocks as usize)
     }
 
     /// Gather the K (or V) cache of `req` in `pool` into `out`, zero-padded
@@ -522,7 +713,10 @@ impl KvStore {
 
     /// Restore `req`'s missing lanes from backup, re-tagging by the new
     /// placement (`home` = new home rank). Returns restored token count,
-    /// or 0 if no backup exists.
+    /// or 0 if no backup exists. May write lane columns into blocks still
+    /// shared with other runs: the written rows are bit-identical by
+    /// construction (the backup mirrors those very rows), so sharers'
+    /// views are unaffected and sharing survives the restore.
     pub fn restore_request(
         &mut self,
         req: RequestId,
@@ -628,7 +822,12 @@ impl KvStore {
     /// `plan`'s canonical head groups, so post-reconfiguration gathers and
     /// appends run on the fast block path again. Lane tags, token counts,
     /// and presence are preserved exactly — this moves host bytes between
-    /// pools, never changes what they mean. Cold path (once per epoch).
+    /// pools, never changes what they mean. Block sharing is preserved:
+    /// requests re-bucketing the same source rows (a shared prefix) end up
+    /// referencing one new block, not N copies. External block references
+    /// (the prefix trie's) must be released before calling — the trie is
+    /// an epoch-scoped cache and is rebuilt after reconfiguration. Cold
+    /// path (once per epoch).
     pub fn relayout(&mut self, plan: &ShardPlan) {
         let n_layers = plan.model.n_layers;
         let mut targets: Vec<Vec<PoolId>> = Vec::with_capacity(n_layers);
@@ -647,9 +846,11 @@ impl KvStore {
             }
             targets.push(g);
         }
-        let ids: Vec<RequestId> = self.reqs.keys().copied().collect();
+        let mut ids: Vec<RequestId> = self.reqs.keys().copied().collect();
+        ids.sort_unstable();
+        let mut memo: RelayoutMemo = HashMap::new();
         for id in ids {
-            self.relayout_device(id, &targets);
+            self.relayout_device(id, &targets, &mut memo);
             self.relayout_backup(id, &targets);
         }
         self.shrink_unused_pools();
@@ -662,7 +863,7 @@ impl KvStore {
         })
     }
 
-    fn relayout_device(&mut self, id: RequestId, targets: &[Vec<PoolId>]) {
+    fn relayout_device(&mut self, id: RequestId, targets: &[Vec<PoolId>], memo: &mut RelayoutMemo) {
         match self.reqs.get(&id) {
             Some(e) if !self.is_canonical(&e.runs, targets) => {}
             _ => return,
@@ -698,30 +899,64 @@ impl KvStore {
                 if rows == 0 && lanes.iter().all(|l| !l.present) {
                     continue;
                 }
-                let mut blocks = Vec::with_capacity(rows.div_ceil(BLOCK_TOKENS));
-                for _ in 0..rows.div_ceil(BLOCK_TOKENS) {
-                    blocks.push(self.pools[pid as usize].alloc_block());
-                }
-                for (li, src) in srcs.iter().enumerate() {
-                    let Some(&(ri, oli)) = src.as_ref() else { continue };
-                    let n = lanes[li].tokens;
-                    // Stage the old lane column, then write it into the
-                    // new pool — decouples the two arena borrows.
-                    let run = &old.runs[ri];
-                    let op = &self.pools[run.pool as usize];
-                    stage_k.clear();
-                    stage_v.clear();
-                    for t in 0..n {
-                        let s0 = op.row_offset(&run.blocks, t) + oli * hd;
-                        stage_k.extend_from_slice(&op.k[s0..s0 + hd]);
-                        stage_v.extend_from_slice(&op.v[s0..s0 + hd]);
+                // Per-block copies, memoized on source identity: two
+                // requests whose new block would copy the very same old
+                // rows (a shared prefix chunk) get **one** new block with
+                // two references — relayout preserves sharing instead of
+                // materializing N private copies. Old and new layouts use
+                // the same BLOCK_TOKENS alignment, so target block `bi`
+                // reads exactly old block `bi` of each source lane.
+                let n_blocks = rows.div_ceil(BLOCK_TOKENS);
+                let mut blocks = Vec::with_capacity(n_blocks);
+                for bi in 0..n_blocks {
+                    let t0 = bi * BLOCK_TOKENS;
+                    let t1 = rows.min(t0 + BLOCK_TOKENS);
+                    let sig: Vec<LaneSrc> = srcs
+                        .iter()
+                        .enumerate()
+                        .map(|(li, src)| {
+                            let &(ri, oli) = src.as_ref()?;
+                            let n = lanes[li].tokens.min(t1);
+                            if n <= t0 {
+                                return None;
+                            }
+                            let run = &old.runs[ri];
+                            Some((run.pool, oli as u32, run.blocks[bi], (n - t0) as u32))
+                        })
+                        .collect();
+                    if let Some(&shared) = memo.get(&(pid, sig.clone())) {
+                        self.pools[pid as usize].retain_block(shared);
+                        blocks.push(shared);
+                        continue;
                     }
-                    let np = &mut self.pools[pid as usize];
-                    for t in 0..n {
-                        let d0 = np.row_offset(&blocks, t) + li * hd;
-                        np.k[d0..d0 + hd].copy_from_slice(&stage_k[t * hd..(t + 1) * hd]);
-                        np.v[d0..d0 + hd].copy_from_slice(&stage_v[t * hd..(t + 1) * hd]);
+                    let fresh = self.pools[pid as usize].alloc_block();
+                    for (li, src) in srcs.iter().enumerate() {
+                        let Some(&(ri, oli)) = src.as_ref() else { continue };
+                        let n = lanes[li].tokens.min(t1);
+                        if n <= t0 {
+                            continue;
+                        }
+                        // Stage the old lane rows, then write them into the
+                        // new pool — decouples the two arena borrows.
+                        let run = &old.runs[ri];
+                        let op = &self.pools[run.pool as usize];
+                        stage_k.clear();
+                        stage_v.clear();
+                        for t in t0..n {
+                            let s0 = op.row_offset(&run.blocks, t) + oli * hd;
+                            stage_k.extend_from_slice(&op.k[s0..s0 + hd]);
+                            stage_v.extend_from_slice(&op.v[s0..s0 + hd]);
+                        }
+                        let np = &mut self.pools[pid as usize];
+                        let base = fresh as usize * np.block_elems;
+                        for (j, t) in (t0..n).enumerate() {
+                            let d0 = base + (t % BLOCK_TOKENS) * np.stride + li * hd;
+                            np.k[d0..d0 + hd].copy_from_slice(&stage_k[j * hd..(j + 1) * hd]);
+                            np.v[d0..d0 + hd].copy_from_slice(&stage_v[j * hd..(j + 1) * hd]);
+                        }
                     }
+                    memo.insert((pid, sig), fresh);
+                    blocks.push(fresh);
                 }
                 new_runs.push(Run { pool: pid, lanes, blocks, rows });
             }
@@ -1027,6 +1262,142 @@ mod tests {
         let placement = KvPlacement::new(&ShardPlan::failsafe(&m, 2));
         assert_eq!(kv.restore_request(1, &placement, 0), 2);
         assert_eq!(kv.gather(1, 0, &[0], 2, 1, false), vec![1.0, 7.0]);
+    }
+
+    // ------------------------------------------------ prefix-sharing tests --
+
+    /// Adopted blocks are shared (one physical copy), and releasing one
+    /// sharer keeps the other's data intact.
+    #[test]
+    fn adopt_shares_blocks_and_release_keeps_sharers() {
+        let hd = 1;
+        let mut kv = KvStore::new(hd);
+        let pool = kv.pool_handle(0, &[0]);
+        let rows: Vec<f32> = (0..BLOCK_TOKENS as i32 * 2).map(|i| i as f32).collect();
+        kv.append_group(1, pool, 0, BLOCK_TOKENS * 2, &rows, &rows, hd);
+        let donor = kv.prefix_blocks(1, pool, 2).unwrap();
+        let before = kv.resident_bytes();
+        kv.adopt_blocks(2, pool, 0, &donor, BLOCK_TOKENS * 2);
+        assert_eq!(kv.tokens(2), BLOCK_TOKENS * 2);
+        assert_eq!(kv.resident_bytes(), before, "adoption allocates no new blocks");
+        assert_eq!(kv.shared_block_count(), 2);
+        assert_eq!(kv.gather(2, 0, &[0], BLOCK_TOKENS * 2, 1, false), rows);
+        kv.release(1);
+        assert_eq!(kv.shared_block_count(), 0, "sole holder left");
+        assert_eq!(kv.gather(2, 0, &[0], BLOCK_TOKENS * 2, 1, false), rows);
+        kv.release(2);
+        assert!(kv.drained(), "all refcounts return to zero at drain");
+    }
+
+    /// A divergent append into a partially-used shared block splits it
+    /// (copy-on-write) without disturbing the sharer.
+    #[test]
+    fn divergent_append_cow_splits_shared_tail() {
+        let hd = 1;
+        let mut kv = KvStore::new(hd);
+        let pool = kv.pool_handle(0, &[0]);
+        let n = BLOCK_TOKENS + 4; // tail block partially used
+        let rows: Vec<f32> = (0..n as i32).map(|i| i as f32).collect();
+        kv.append_group(1, pool, 0, n, &rows, &rows, hd);
+        // Adopt a partial hit: the sharer reuses both blocks but only the
+        // first `n - 1` tokens (full-prompt hits keep the last token for
+        // recompute), then diverges.
+        let donor = kv.prefix_blocks(1, pool, 2);
+        assert!(donor.is_none(), "partial tail block is not a full donor chunk");
+        let donor = kv.prefix_blocks(1, pool, 1).unwrap();
+        kv.adopt_blocks(2, pool, 0, &donor, BLOCK_TOKENS);
+        // Fill the shared full block's sibling... diverge inside block 0?
+        // Block 0 is full, so the append opens a private block: no split.
+        kv.append_group(2, pool, 0, 2, &[100.0, 101.0], &[100.0, 101.0], hd);
+        assert_eq!(kv.shared_block_count(), 1);
+        // Now force a split: a third request adopts block 0 *partially*
+        // (12 of 16 tokens) and appends into it.
+        kv.adopt_blocks(3, pool, 0, &donor, 12);
+        kv.append_group(3, pool, 0, 1, &[55.0], &[55.0], hd);
+        let got = kv.gather(3, 0, &[0], 13, 1, false);
+        assert_eq!(&got[..12], &rows[..12]);
+        assert_eq!(got[12], 55.0);
+        // The donor and its other sharer still see the original rows.
+        assert_eq!(kv.gather(1, 0, &[0], n, 1, false), rows);
+        let s2 = kv.gather(2, 0, &[0], BLOCK_TOKENS + 2, 1, false);
+        assert_eq!(&s2[..BLOCK_TOKENS], &rows[..BLOCK_TOKENS]);
+        assert_eq!(&s2[BLOCK_TOKENS..], &[100.0, 101.0]);
+        for r in [1, 2, 3] {
+            kv.release(r);
+        }
+        assert!(kv.drained());
+    }
+
+    /// `switch_to_shared` drops private duplicates for the shared copies
+    /// — the recovery-side re-deduplication.
+    #[test]
+    fn switch_to_shared_dedups_private_copies() {
+        let hd = 1;
+        let mut kv = KvStore::new(hd);
+        let pool = kv.pool_handle(0, &[0]);
+        let rows: Vec<f32> = (0..BLOCK_TOKENS as i32).map(|i| i as f32).collect();
+        kv.append_group(1, pool, 0, BLOCK_TOKENS, &rows, &rows, hd);
+        kv.append_group(2, pool, 0, BLOCK_TOKENS, &rows, &rows, hd);
+        let two_private = kv.resident_bytes();
+        let donor = kv.prefix_blocks(1, pool, 1).unwrap();
+        assert!(kv.switch_to_shared(2, pool, &donor));
+        assert_eq!(kv.resident_bytes(), two_private / 2, "private copy freed");
+        assert_eq!(kv.shared_block_count(), 1);
+        assert_eq!(kv.gather(2, 0, &[0], BLOCK_TOKENS, 1, false), rows);
+        assert!(kv.switch_to_shared(1, pool, &donor), "donor switch is a no-op");
+        kv.release(1);
+        kv.release(2);
+        assert!(kv.drained());
+    }
+
+    /// Relayout re-buckets shared prefixes into **one** new block chain,
+    /// not N private copies (the sharing-preservation contract across
+    /// reconfiguration).
+    #[test]
+    fn relayout_preserves_sharing() {
+        let m = small_real();
+        let plan = ShardPlan::failsafe(&m, 2);
+        let mut kv = KvStore::new(m.head_dim);
+        // Two requests with identical per-head layouts sharing their
+        // blocks: build request 1, then request 2 adopts every run.
+        let n = BLOCK_TOKENS;
+        for layer in 0..m.n_layers {
+            for head in 0..m.n_kv_heads {
+                let data: Vec<f32> =
+                    (0..n * m.head_dim).map(|i| (layer * 100 + head * 10 + i) as f32).collect();
+                kv.append(1, layer, head, head % 2, &data, &data);
+            }
+        }
+        let mut pools: Vec<PoolId> = Vec::new();
+        for layer in 0..m.n_layers {
+            for head in 0..m.n_kv_heads {
+                pools.push(kv.pool_handle(layer, &[head]));
+            }
+        }
+        for &pool in &pools {
+            let donor = kv.prefix_blocks(1, pool, 1).unwrap();
+            kv.adopt_blocks(2, pool, 0, &donor, n);
+        }
+        let shared_resident = kv.resident_bytes();
+        assert!(kv.shared_block_count() > 0);
+        let heads: Vec<usize> = (0..m.n_kv_heads).collect();
+        let want: Vec<Vec<f32>> = (0..m.n_layers)
+            .map(|l| kv.gather(1, l, &heads, n, m.n_kv_heads, false))
+            .collect();
+        kv.relayout(&plan);
+        assert_eq!(
+            kv.resident_bytes(),
+            shared_resident,
+            "relayout kept one copy of the shared rows"
+        );
+        assert!(kv.shared_block_count() > 0, "sharing survives relayout");
+        for (l, w) in want.iter().enumerate() {
+            assert_eq!(&kv.gather(1, l, &heads, n, m.n_kv_heads, false), w, "req 1 layer {l}");
+            assert_eq!(&kv.gather(2, l, &heads, n, m.n_kv_heads, false), w, "req 2 layer {l}");
+        }
+        kv.release(1);
+        kv.release(2);
+        assert!(kv.drained(), "no leaked blocks after relayout + release");
     }
 
     /// Relayout re-buckets data into a plan's canonical groups without

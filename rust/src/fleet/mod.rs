@@ -66,6 +66,7 @@ use crate::engine::{
     EngineEvent, GenerationResult, ServeReport, ServingBackend, SubmitOptions,
 };
 use crate::metrics::Cdf;
+use crate::prefix::PrefixDirectory;
 use crate::recovery::RecoveryMethod;
 use crate::{RankId, RequestId, SimTime};
 
@@ -75,6 +76,13 @@ pub type ReplicaId = usize;
 /// Fleet-level request handle — stable across redirects between replicas
 /// (the per-replica [`RequestId`] is not).
 pub type FleetRequestId = u64;
+
+/// Load-credit multiplier for a warm prefix hit at placement time (see
+/// [`Fleet::submit_with`]): the covered tokens count once as prefill the
+/// warm replica skips and once as duplicate compute + resident KV the
+/// fleet avoids, so a hit attracts placement until the warm replica's
+/// backlog exceeds this multiple of the prefix length.
+const PREFIX_CREDIT_WEIGHT: f64 = 2.0;
 
 /// One replica: a serving backend plus the fleet's operator state for it.
 struct Replica {
@@ -214,6 +222,11 @@ pub struct Fleet {
     requests: Vec<Tracked>,
     /// `(replica, local id)` → fleet id, maintained across redirects.
     local_map: HashMap<(ReplicaId, RequestId), FleetRequestId>,
+    /// Prefix-affinity directory (opt-in via
+    /// [`Fleet::enable_prefix_affinity`]): which replica last served each
+    /// prompt-prefix chain. `None` keeps classic capacity-normalized
+    /// placement bit-identical.
+    prefix: Option<PrefixDirectory>,
 }
 
 impl Default for Fleet {
@@ -229,7 +242,27 @@ impl Fleet {
             router: FleetRouter::new(0),
             requests: Vec::new(),
             local_map: HashMap::new(),
+            prefix: None,
         }
+    }
+
+    /// Turn on prefix-affinity placement: submissions whose prompt prefix
+    /// was recently served by a replica are credited the covered tokens
+    /// on that replica (see [`FleetRouter::place_with_affinity`]), so
+    /// repeat-fanout traffic lands where its KV is already warm instead
+    /// of on an idle cold replica. Pair with
+    /// [`crate::simulator::OnlineSim::with_prefix_sharing`] (or the
+    /// engine's `--prefix-sharing`) so the chosen replica actually reuses
+    /// the cache.
+    pub fn enable_prefix_affinity(&mut self) {
+        if self.prefix.is_none() {
+            self.prefix = Some(PrefixDirectory::new());
+        }
+    }
+
+    /// The affinity directory, when enabled (telemetry).
+    pub fn prefix_directory(&self) -> Option<&PrefixDirectory> {
+        self.prefix.as_ref()
     }
 
     /// Add a replica (any [`ServingBackend`]); its current world size is
@@ -312,12 +345,41 @@ impl Fleet {
         opts: SubmitOptions,
     ) -> Result<FleetRequestId> {
         anyhow::ensure!(!self.replicas.is_empty(), "fleet has no replicas");
-        let work = (prompt.len() + opts.max_new_tokens) as f64;
+        let full_work = (prompt.len() + opts.max_new_tokens) as f64;
         let health = self.health();
+        // Prefix affinity: credit the replica that last served this
+        // prompt's prefix chain. A warm hit saves the covered prefill
+        // twice over — once as compute the warm replica skips, once as
+        // duplicate compute + resident KV the fleet avoids — so the
+        // credit is `PREFIX_CREDIT_WEIGHT ×` the covered tokens.
+        // Equivalently: a hit concentrates onto the warm replica until
+        // its backlog exceeds that multiple of the prefix length, then
+        // spills to the classic least-loaded choice. Empty bonus =
+        // classic placement.
+        let mut bonus = vec![0.0; self.replicas.len()];
+        let mut hit: Option<(ReplicaId, usize)> = None;
+        if let Some(dir) = &self.prefix {
+            if let Some((warm, covered)) = dir.lookup(prompt) {
+                if warm < bonus.len() {
+                    bonus[warm] = PREFIX_CREDIT_WEIGHT * covered as f64;
+                    hit = Some((warm, covered));
+                }
+            }
+        }
         let replica = self
             .router
-            .place(work, &health)
+            .place_with_affinity(full_work, &health, &bonus)
             .context("no placeable replica (all draining)")?;
+        // Honest booking: a warm replica will not run the covered
+        // prefill, so it owes only the discounted work.
+        let work = match hit {
+            Some((warm, covered)) if warm == replica => {
+                let shaved = covered.min(prompt.len()) as f64;
+                self.router.complete(replica, shaved);
+                full_work - shaved
+            }
+            _ => full_work,
+        };
         let local = match self.replicas[replica].backend.submit_with(prompt, opts) {
             Ok(l) => l,
             Err(e) => {
@@ -325,6 +387,9 @@ impl Fleet {
                 return Err(e);
             }
         };
+        if let Some(dir) = &mut self.prefix {
+            dir.register(prompt, replica);
+        }
         let id = self.requests.len() as FleetRequestId;
         self.requests.push(Tracked {
             replica,
@@ -370,6 +435,11 @@ impl Fleet {
         method: RecoveryMethod,
     ) -> Result<f64> {
         let latency = self.replicas[replica].backend.inject_failure(rank, method)?;
+        // The replica's prefix cache went cold with the wiped rank (the
+        // backends flush conservatively) — stop steering warm traffic at it.
+        if let Some(dir) = &mut self.prefix {
+            dir.purge_replica(replica);
+        }
         self.redirect_fresh(replica)?;
         Ok(latency)
     }
@@ -410,6 +480,9 @@ impl Fleet {
     pub fn drain(&mut self, replica: ReplicaId) -> Result<usize> {
         anyhow::ensure!(replica < self.replicas.len(), "drain: no replica {replica}");
         self.replicas[replica].draining = true;
+        if let Some(dir) = &mut self.prefix {
+            dir.purge_replica(replica);
+        }
         self.redirect_fresh(replica)
     }
 

@@ -102,14 +102,11 @@ impl FleetRouter {
         self.booked[replica]
     }
 
-    /// The placement score of one replica given its health: pending work
-    /// per unit of effective capacity (lower is better), or `None` when
-    /// the replica must not receive new work (draining, no ranks, or
-    /// zero health-effective speed). Capacity = live world × health
-    /// speed, further down-weighted while mid-reconfiguration — so a
-    /// replica with a thermally throttled rank attracts proportionally
-    /// less, exactly like one serving on fewer ranks.
-    pub fn score(&self, replica: ReplicaId, health: &ReplicaHealth) -> Option<f64> {
+    /// Effective placement capacity of a replica: live world × health
+    /// speed, down-weighted while mid-reconfiguration. `None` when the
+    /// replica must not receive new work (draining, no ranks, or zero
+    /// health-effective speed).
+    fn capacity(&self, health: &ReplicaHealth) -> Option<f64> {
         if health.draining || health.world == 0 || health.speed <= 0.0 || health.speed.is_nan() {
             return None;
         }
@@ -117,7 +114,17 @@ impl FleetRouter {
         if health.degraded() {
             capacity *= self.degraded_weight;
         }
-        Some(self.booked[replica] / capacity)
+        Some(capacity)
+    }
+
+    /// The placement score of one replica given its health: pending work
+    /// per unit of effective capacity (lower is better), or `None` when
+    /// the replica must not receive new work (draining, no ranks, or
+    /// zero health-effective speed) — so a replica with a thermally
+    /// throttled rank attracts proportionally less, exactly like one
+    /// serving on fewer ranks.
+    pub fn score(&self, replica: ReplicaId, health: &ReplicaHealth) -> Option<f64> {
+        Some(self.booked[replica] / self.capacity(health)?)
     }
 
     /// Place `work_tokens` of new work: pick the placeable replica with
@@ -125,9 +132,30 @@ impl FleetRouter {
     /// work on it, and return it. `None` when every replica is draining.
     /// `health` must have one entry per replica.
     pub fn place(&mut self, work_tokens: f64, health: &[ReplicaHealth]) -> Option<ReplicaId> {
+        self.place_with_affinity(work_tokens, health, &[])
+    }
+
+    /// [`FleetRouter::place`] with a per-replica prefix credit in token
+    /// units (hit depth × continuation fan-in — the prefill work the
+    /// replica's warm prefix cache saves). The credit is subtracted from
+    /// booked work *before* capacity normalization and may push the score
+    /// negative, so a loaded-but-warm replica strictly beats an idle cold
+    /// one while the credit exceeds its queue. An all-zero (or empty)
+    /// `bonus` reduces exactly to the classic rule, deterministic
+    /// lowest-id tie-break included.
+    pub fn place_with_affinity(
+        &mut self,
+        work_tokens: f64,
+        health: &[ReplicaHealth],
+        bonus: &[f64],
+    ) -> Option<ReplicaId> {
         assert_eq!(health.len(), self.replicas(), "one health entry per replica");
         let chosen = (0..self.replicas())
-            .filter_map(|r| self.score(r, &health[r]).map(|s| (r, s)))
+            .filter_map(|r| {
+                let capacity = self.capacity(&health[r])?;
+                let credit = bonus.get(r).copied().unwrap_or(0.0).max(0.0);
+                Some((r, (self.booked[r] - credit) / capacity))
+            })
             .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
             .map(|(r, _)| r)?;
         self.book(chosen, work_tokens);
@@ -236,6 +264,36 @@ mod tests {
         for _ in 0..3 {
             assert_eq!(r.place(10.0, &h), Some(1));
         }
+    }
+
+    #[test]
+    fn affinity_credit_beats_an_idle_cold_replica() {
+        let mut r = FleetRouter::new(3);
+        let h = healthy(3, 8);
+        // Replica 2 is loaded but holds a 1024-token warm prefix; the
+        // credit pushes its score negative, strictly below the idle cold
+        // replicas at 0.
+        r.book(2, 300.0);
+        assert_eq!(r.place_with_affinity(50.0, &h, &[0.0, 0.0, 1024.0]), Some(2));
+        // Credit below the queue loses to an idle replica again.
+        let mut r = FleetRouter::new(3);
+        r.book(2, 300.0);
+        assert_eq!(r.place_with_affinity(50.0, &h, &[0.0, 0.0, 200.0]), Some(0));
+        // Negative bonus entries are clamped, never a penalty.
+        let mut r = FleetRouter::new(2);
+        assert_eq!(r.place_with_affinity(1.0, &healthy(2, 8), &[-1e9, 0.0]), Some(0));
+    }
+
+    #[test]
+    fn zero_affinity_preserves_the_classic_tie_break() {
+        let mut classic = FleetRouter::new(4);
+        let mut biased = FleetRouter::new(4);
+        let h = healthy(4, 8);
+        let a: Vec<_> = (0..8).map(|_| classic.place(100.0, &h).unwrap()).collect();
+        let b: Vec<_> =
+            (0..8).map(|_| biased.place_with_affinity(100.0, &h, &[0.0; 4]).unwrap()).collect();
+        assert_eq!(a, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        assert_eq!(a, b, "all-zero bonus must reduce to the classic rule");
     }
 
     #[test]

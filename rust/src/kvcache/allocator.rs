@@ -68,6 +68,20 @@ impl BlockAllocator {
         }
         let at = self.free.len() - n;
         let blocks: Vec<BlockId> = self.free.split_off(at);
+        // Stale-reuse guard: a block handed out must not still be on the
+        // free list or registered to any holder — either would mean two
+        // owners share (and clobber) the same physical rows. O(free+held)
+        // scans, so debug builds only.
+        debug_assert!(
+            blocks.iter().all(|b| !self.free.contains(b)),
+            "allocator handed out a block still on the free list"
+        );
+        debug_assert!(
+            blocks
+                .iter()
+                .all(|b| self.held.values().all(|held| !held.contains(b))),
+            "allocator handed out a block another request still holds"
+        );
         self.held.entry(req).or_default().extend(&blocks);
         Ok(blocks)
     }
@@ -83,8 +97,21 @@ impl BlockAllocator {
         match self.held.remove(&req) {
             Some(mut blocks) => {
                 let n = blocks.len();
+                // Double-free guard: a freed block must not already be on
+                // the free list (the held map prevents the same request
+                // double-freeing, but a stale id crossing requests would
+                // land here).
+                debug_assert!(
+                    blocks.iter().all(|b| !self.free.contains(b)),
+                    "double free: request {req} released a block already free"
+                );
                 blocks.sort_unstable_by(|a, b| b.cmp(a));
                 self.free.append(&mut blocks);
+                debug_assert!(
+                    self.free.len() + self.held.values().map(Vec::len).sum::<usize>()
+                        == self.n_blocks,
+                    "block conservation violated after freeing request {req}"
+                );
                 n
             }
             None => 0,
@@ -157,6 +184,46 @@ mod tests {
         let again = a.alloc(3, 3).unwrap();
         assert_eq!(again, first, "freed blocks are reused lowest-id first");
         assert_eq!(again.last(), again.iter().min(), "pop order ends on the lowest id");
+    }
+
+    /// Hardening regression: random-ish alloc/free churn (including
+    /// double `free_request` calls and failed allocs) conserves blocks,
+    /// never aliases two holders, and trips none of the debug
+    /// assertions.
+    #[test]
+    fn churn_conserves_blocks_and_never_aliases() {
+        let mut a = BlockAllocator::new(24);
+        let mut live: Vec<RequestId> = Vec::new();
+        for round in 0..300u64 {
+            match round % 5 {
+                0 | 1 | 3 => {
+                    if a.alloc(round, 1 + (round as usize * 7 % 5)).is_ok() {
+                        live.push(round);
+                    }
+                }
+                2 => {
+                    if let Some(r) = live.first().copied() {
+                        assert!(a.free_request(r) > 0);
+                        live.retain(|&x| x != r);
+                        // Freeing again is a no-op, not a corruption.
+                        assert_eq!(a.free_request(r), 0);
+                    }
+                }
+                _ => {
+                    if let Some(r) = live.last().copied() {
+                        a.free_request(r);
+                        live.pop();
+                    }
+                }
+            }
+            let mut held: Vec<BlockId> =
+                live.iter().flat_map(|&r| a.blocks_of(r).to_vec()).collect();
+            let n_held = held.len();
+            held.sort_unstable();
+            held.dedup();
+            assert_eq!(held.len(), n_held, "two holders share a block");
+            assert_eq!(a.n_free() + n_held, 24, "block conservation");
+        }
     }
 
     #[test]

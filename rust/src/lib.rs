@@ -25,6 +25,10 @@
 //!   groups (engine or simulator) behind one cluster-level load-aware
 //!   router, with per-replica fault-timeline replay and fleet-level
 //!   goodput reporting.
+//! * [`prefix`] — shared-prefix KV cache: a trie over token-block hashes
+//!   whose nodes are refcounted copy-on-write references into the paged
+//!   KV store, so repeated system prompts prefill once and stay resident
+//!   once — including across failure/reconfiguration epochs.
 //! * [`health`] — soft-fault handling for GPUs that are alive but slow:
 //!   straggler detection from per-rank step times, a
 //!   Healthy → Throttled → Suspect → Down state machine, and
@@ -94,6 +98,7 @@ pub mod health;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod prefix;
 pub mod recovery;
 pub mod router;
 pub mod runtime;

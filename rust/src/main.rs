@@ -14,6 +14,9 @@
 //!   fleet     N replicas behind the cluster-level load-aware router, with
 //!             a fault timeline on one replica while the rest keep serving
 //!   recover   cost one failure under every recovery method
+//!   prefix    shared-prefix drill: serve a repeat-fanout trace with the
+//!             prefix trie off (cold) and on (shared) and compare prefill
+//!             work, peak resident KV, and trie hit rates
 //!   traces    print workload/availability trace statistics
 //!
 //! Examples:
@@ -31,6 +34,7 @@
 //!   failsafe fleet --replicas 4 --scenario cascade --fault-replica 0 --pace tokens
 //!   failsafe fleet --backend engine --replicas 2 --world 3 --requests 6
 //!   failsafe recover --model llama --world 8 --requests 60 --ctx 8000
+//!   failsafe prefix --prefixes 4 --fanout 8 --prefix-tokens 2048
 //!   failsafe traces --n 3000
 
 use failsafe::benchkit::section;
@@ -47,7 +51,7 @@ use failsafe::sharding::{HeadAssignment, ShardPlan};
 use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
 use failsafe::traces::{
     cascade_then_heal, flaky_gpu, gcp_availability, mooncake_trace, openthoughts_trace,
-    poisson_arrivals, rolling_maintenance, thermal_throttle, TraceStats,
+    poisson_arrivals, repeat_fanout, rolling_maintenance, thermal_throttle, TraceStats,
 };
 use failsafe::util::cli::Args;
 use failsafe::util::Rng;
@@ -72,6 +76,10 @@ subcommands:
             timeline hits one replica (--fault-replica) while the others
             keep serving (--backend sim|engine, --pace clock|tokens)
   recover   cost one failure under every recovery method (Table 3 style)
+  prefix    shared-prefix drill: serve a repeat-fanout trace (--prefixes
+            × --fanout continuations of a --prefix-tokens shared prompt)
+            cold and with the prefix trie, and compare prefill work,
+            peak resident KV, and trie hit rates
   traces    print workload/availability trace statistics
 
 see docs/OPERATIONS.md for every flag and sample output, or the
@@ -86,6 +94,7 @@ fn main() -> anyhow::Result<()> {
         Some("degrade") => degrade_cmd(&args),
         Some("fleet") => fleet_cmd(&args),
         Some("recover") => recover(&args),
+        Some("prefix") => prefix_cmd(&args),
         Some("traces") => traces(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
@@ -775,6 +784,81 @@ fn recover(args: &Args) -> anyhow::Result<()> {
         let out = plan_recovery(method, &input);
         println!("{:<16} {:.3} s", method.name(), out.total_s);
     }
+    Ok(())
+}
+
+/// Shared-prefix drill: the same repeat-fanout trace (K distinct
+/// prefixes, each continued by N requests) served twice on the online
+/// simulator — prefix trie off (cold) and on (shared) — with staggered
+/// arrivals so every continuation lands after its donor is admitted.
+fn prefix_cmd(args: &Args) -> anyhow::Result<()> {
+    let model = model_arg(args)?;
+    let system = system_arg(args)?;
+    let world = args.get_usize("world", 8);
+    let prefixes = args.get_usize("prefixes", 4);
+    let fanout = args.get_usize("fanout", 8);
+    let prefix_tokens = args.get_usize("prefix-tokens", 2048);
+    let suffix_tokens = args.get_usize("suffix-tokens", 64);
+    let seed = args.get_u64("seed", 42);
+    if prefixes < 1 || fanout < 1 || prefix_tokens < 1 {
+        flag_error(format!(
+            "--prefixes {prefixes} / --fanout {fanout} / --prefix-tokens {prefix_tokens} \
+             must all be >= 1"
+        ));
+    }
+
+    section(&format!(
+        "shared-prefix drill: {} TP{world} ({}), {prefixes} prefixes × {fanout} continuations \
+         of {prefix_tokens}+{suffix_tokens} tokens",
+        model.name, system.name
+    ));
+    let fan = repeat_fanout(prefixes, fanout, prefix_tokens, suffix_tokens, seed);
+    type PrefixRun = (failsafe::engine::ServeReport, f64, failsafe::prefix::PrefixStats);
+    let run = |sharing: bool| -> anyhow::Result<PrefixRun> {
+        let sim = OnlineSim::new(system.clone(), OnlineMode::Decode, world)
+            .with_model(model.clone())
+            .with_prefix_sharing(sharing);
+        let mut session = sim.session();
+        for (i, r) in fan.iter().enumerate() {
+            session.submit_with(
+                &r.prompt,
+                SubmitOptions::new(r.request.output_tokens).at(i as f64 * 0.25),
+            )?;
+        }
+        let report = session.run_to_completion()?;
+        Ok((report, session.peak_kv_bytes(), session.prefix_stats()))
+    };
+    let (cold, cold_kv, _) = run(false)?;
+    let (warm, warm_kv, stats) = run(true)?;
+
+    println!("{:<12} {:>13} {:>15} {:>10}", "", "prefill tok", "peak KV (GB)", "wall (s)");
+    println!(
+        "{:<12} {:>13} {:>15.2} {:>10.1}",
+        "no sharing",
+        cold.prefill_tokens,
+        cold_kv / 1e9,
+        cold.wall_s
+    );
+    println!(
+        "{:<12} {:>13} {:>15.2} {:>10.1}",
+        "shared",
+        warm.prefill_tokens,
+        warm_kv / 1e9,
+        warm.wall_s
+    );
+    println!(
+        "savings: {:.1}x less prefill, {:.1}x less peak KV",
+        cold.prefill_tokens as f64 / warm.prefill_tokens.max(1) as f64,
+        cold_kv / warm_kv.max(1.0)
+    );
+    println!(
+        "trie: {} lookups, {} hits ({} tokens adopted), {} chunks inserted",
+        stats.lookups, stats.hits, stats.hit_tokens, stats.inserted_chunks
+    );
+    anyhow::ensure!(
+        warm.prefill_tokens <= cold.prefill_tokens && warm_kv <= cold_kv * 1.001,
+        "sharing must never add prefill work or resident KV"
+    );
     Ok(())
 }
 

@@ -1,0 +1,405 @@
+//! Shared-prefix KV cache: a trie over token-block hashes whose nodes
+//! are refcounted, copy-on-write references into the paged
+//! [`crate::engine::KvStore`].
+//!
+//! At fleet scale most traffic shares system prompts and few-shot
+//! prefixes. Re-prefilling them burns FLOPs, and keeping N private copies
+//! resident burns HBM. This module caches each [`BLOCK_TOKENS`]-token
+//! prompt chunk once:
+//!
+//! * [`PrefixTrie`] — nodes keyed on chunk hashes (exact chunk tokens
+//!   stored and verified, so hash collisions cannot alias). A node caches
+//!   the physical block its chunk occupies in **every** pool of the
+//!   current epoch, holding one refcount on each (the store frees a block
+//!   only when runs *and* the trie are done with it).
+//! * Admission adopts a warm prefix's blocks instead of re-prefilling
+//!   (zero prefill FLOPs, zero new KV blocks for the covered tokens);
+//!   the first divergent append into a partially-used shared block
+//!   CoW-splits it inside the store.
+//! * The trie is an **epoch-scoped cache**: a failure wipe or reconfig
+//!   calls [`PrefixTrie::invalidate_device`] (drop all device refs, keep
+//!   the hash structure), recovery restores requests privately from
+//!   their mirrors, then re-registers the first restored sharer as the
+//!   donor and re-deduplicates the rest via
+//!   [`crate::engine::KvStore::switch_to_shared`] — so sharing survives
+//!   fail → shrink-reconfig → rejoin instead of decaying to N private
+//!   copies.
+//! * [`PrefixDirectory`] — the fleet front end's view: which replica
+//!   last served each prefix chain, for prefix-affinity placement
+//!   (a hash-only hint; a collision misroutes, never corrupts).
+//!
+//! The simulator mirrors the same trie without a `KvStore`, using
+//! [`PrefixTrie::mark_resident`] for residency and its own byte
+//! accounting (see `simulator/online.rs`).
+
+use std::collections::HashMap;
+
+use crate::engine::{KvStore, PoolId, BLOCK_TOKENS};
+
+/// Handle to one trie node (one cached prompt chunk).
+pub type NodeId = u32;
+
+/// FNV-1a over a token chunk — deterministic across runs and platforms.
+fn chunk_hash(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Running chain hash: parent chain ⊕ next chunk. Used by the fleet
+/// directory, where a 64-bit key without token verification is fine
+/// (placement hint only).
+fn chain_hash(parent: u64, chunk: u64) -> u64 {
+    parent.rotate_left(5) ^ chunk.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+#[derive(Debug)]
+struct Node {
+    /// The exact chunk tokens — lookups verify against these, so a hash
+    /// collision degrades to a miss, never to wrong KV. (The trie edge
+    /// `(parent, hash) → node` lives in the index map.)
+    chunk: Vec<u32>,
+    /// Physical block holding this chunk's rows, per pool of the epoch
+    /// that registered it; one trie refcount is held on each. Empty while
+    /// the device copy is lost (wiped / pre-registration).
+    blocks: Vec<(PoolId, u32)>,
+    resident: bool,
+}
+
+/// Cumulative counters — read by the `prefix` subcommand and the bench.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixStats {
+    pub lookups: u64,
+    /// Lookups that matched at least one chunk.
+    pub hits: u64,
+    /// Prompt tokens covered by hits (prefill work avoided).
+    pub hit_tokens: u64,
+    pub inserted_chunks: u64,
+    /// Nodes re-registered after a device wipe (recovery repairs).
+    pub repairs: u64,
+}
+
+/// Result of matching a prompt against the trie.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixMatch {
+    /// Matched nodes, root-first — one per full prompt chunk found.
+    pub nodes: Vec<NodeId>,
+    /// Tokens the full match covers (`nodes.len() × BLOCK_TOKENS`).
+    pub tokens: usize,
+    /// Leading nodes whose device blocks are resident (adoptable now).
+    pub live_nodes: usize,
+    /// Tokens the resident leading run covers.
+    pub live_tokens: usize,
+}
+
+/// The prefix trie. See module docs for the lifecycle
+/// (share → diverge → split → release) and the reconfiguration contract.
+#[derive(Debug, Default)]
+pub struct PrefixTrie {
+    nodes: Vec<Node>,
+    index: HashMap<(Option<NodeId>, u64), NodeId>,
+    stats: PrefixStats,
+}
+
+impl PrefixTrie {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    /// Nodes whose device blocks are currently resident.
+    pub fn resident_chunks(&self) -> usize {
+        self.nodes.iter().filter(|n| n.resident).count()
+    }
+
+    /// Match `prompt`'s full [`BLOCK_TOKENS`] chunks against the trie.
+    /// Counts stats; read-only otherwise.
+    pub fn lookup(&mut self, prompt: &[u32]) -> PrefixMatch {
+        self.stats.lookups += 1;
+        let m = self.match_only(prompt);
+        if !m.nodes.is_empty() {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += m.live_tokens as u64;
+        }
+        m
+    }
+
+    /// [`PrefixTrie::lookup`] without touching the hit counters — used by
+    /// recovery resharing, which revisits known chains rather than
+    /// serving new traffic.
+    pub fn match_only(&self, prompt: &[u32]) -> PrefixMatch {
+        let mut m = PrefixMatch::default();
+        let mut parent: Option<NodeId> = None;
+        let mut live_run = true;
+        for chunk in prompt.chunks_exact(BLOCK_TOKENS) {
+            let h = chunk_hash(chunk);
+            let Some(&id) = self.index.get(&(parent, h)) else { break };
+            let node = &self.nodes[id as usize];
+            if node.chunk != chunk {
+                break; // hash collision — treat as a miss
+            }
+            m.nodes.push(id);
+            live_run &= node.resident;
+            if live_run {
+                m.live_nodes += 1;
+            }
+            parent = Some(id);
+        }
+        m.tokens = m.nodes.len() * BLOCK_TOKENS;
+        m.live_tokens = m.live_nodes * BLOCK_TOKENS;
+        m
+    }
+
+    /// Find-or-create nodes for every full chunk of `prompt`; returns the
+    /// chain root-first. New nodes start non-resident (no device blocks)
+    /// until [`PrefixTrie::register_blocks`] / [`PrefixTrie::mark_resident`].
+    pub fn insert(&mut self, prompt: &[u32]) -> Vec<NodeId> {
+        let mut chain = Vec::new();
+        let mut parent: Option<NodeId> = None;
+        for chunk in prompt.chunks_exact(BLOCK_TOKENS) {
+            let h = chunk_hash(chunk);
+            let id = match self.index.get(&(parent, h)) {
+                Some(&id) if self.nodes[id as usize].chunk == chunk => id,
+                Some(_) => break, // collision slot taken — stop extending
+                None => {
+                    let id = self.nodes.len() as NodeId;
+                    self.nodes.push(Node {
+                        chunk: chunk.to_vec(),
+                        blocks: Vec::new(),
+                        resident: false,
+                    });
+                    self.index.insert((parent, h), id);
+                    self.stats.inserted_chunks += 1;
+                    id
+                }
+            };
+            chain.push(id);
+            parent = Some(id);
+        }
+        chain
+    }
+
+    /// True when `node`'s device blocks are resident (adoptable).
+    pub fn is_resident(&self, node: NodeId) -> bool {
+        self.nodes[node as usize].resident
+    }
+
+    /// The cached `(pool, block)` references of `node` (empty when not
+    /// resident).
+    pub fn node_blocks(&self, node: NodeId) -> &[(PoolId, u32)] {
+        &self.nodes[node as usize].blocks
+    }
+
+    /// Cache `blocks` as `node`'s device copy, taking one reference on
+    /// each in `kv`. No-op if the node is already resident. Counts as a
+    /// repair when the node was previously wiped.
+    pub fn register_blocks(
+        &mut self,
+        node: NodeId,
+        kv: &mut KvStore,
+        blocks: Vec<(PoolId, u32)>,
+    ) {
+        let n = &mut self.nodes[node as usize];
+        if n.resident || blocks.is_empty() {
+            return;
+        }
+        for &(pool, b) in &blocks {
+            kv.retain_blocks(pool, &[b]);
+        }
+        n.blocks = blocks;
+        n.resident = true;
+    }
+
+    /// Like [`PrefixTrie::register_blocks`] but flags the registration as
+    /// a recovery repair (stats only).
+    pub fn repair_blocks(&mut self, node: NodeId, kv: &mut KvStore, blocks: Vec<(PoolId, u32)>) {
+        if !self.nodes[node as usize].resident {
+            self.stats.repairs += 1;
+        }
+        self.register_blocks(node, kv, blocks);
+    }
+
+    /// Simulator-side residency (no physical blocks to pin).
+    pub fn mark_resident(&mut self, node: NodeId) {
+        self.nodes[node as usize].resident = true;
+    }
+
+    /// Drop every device reference the trie holds — called on failure
+    /// wipes and before `relayout()` (the trie must never pin blocks of a
+    /// stale epoch's pools). The hash structure survives, so recovery can
+    /// repair nodes instead of relearning prefixes.
+    pub fn invalidate_device(&mut self, kv: &mut KvStore) {
+        for n in self.nodes.iter_mut() {
+            for &(pool, b) in &n.blocks {
+                kv.release_external(pool, &[b]);
+            }
+            n.blocks.clear();
+            n.resident = false;
+        }
+    }
+
+    /// Simulator-side flush: mark everything non-resident.
+    pub fn invalidate_all(&mut self) {
+        for n in self.nodes.iter_mut() {
+            debug_assert!(n.blocks.is_empty(), "device refs flushed without a KvStore");
+            n.resident = false;
+        }
+    }
+
+    /// Release all device references and forget every node.
+    pub fn clear(&mut self, kv: &mut KvStore) {
+        self.invalidate_device(kv);
+        self.nodes.clear();
+        self.index.clear();
+    }
+}
+
+/// Fleet front-end directory of prefix chains → the replica that last
+/// served them. Pure hash index (no tokens kept): a collision can only
+/// misroute a request to a colder replica, never corrupt state.
+#[derive(Debug, Default)]
+pub struct PrefixDirectory {
+    /// Cumulative chain hash of chunks `0..=i` → replica.
+    chains: HashMap<u64, usize>,
+}
+
+impl PrefixDirectory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cumulative chain hashes of `prompt`'s full chunks, root-first.
+    fn hashes(prompt: &[u32]) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut h = 0u64;
+        for chunk in prompt.chunks_exact(BLOCK_TOKENS) {
+            h = chain_hash(h, chunk_hash(chunk));
+            out.push(h);
+        }
+        out
+    }
+
+    /// Deepest known chain of `prompt` → `(replica, covered_tokens)`.
+    pub fn lookup(&self, prompt: &[u32]) -> Option<(usize, usize)> {
+        let mut best = None;
+        for (i, h) in Self::hashes(prompt).iter().enumerate() {
+            match self.chains.get(h) {
+                Some(&replica) => best = Some((replica, (i + 1) * BLOCK_TOKENS)),
+                None => break,
+            }
+        }
+        best
+    }
+
+    /// Record that `replica` now holds `prompt`'s prefix chain (latest
+    /// placement wins — deterministic).
+    pub fn register(&mut self, prompt: &[u32], replica: usize) {
+        for h in Self::hashes(prompt) {
+            self.chains.insert(h, replica);
+        }
+    }
+
+    /// Forget every chain pointing at `replica` (failure / drain — its
+    /// cache is cold or gone).
+    pub fn purge_replica(&mut self, replica: usize) {
+        self.chains.retain(|_, &mut r| r != replica);
+    }
+
+    pub fn len(&self) -> usize {
+        self.chains.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chains.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompt(prefix: u32, n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| prefix * 1000 + i).collect()
+    }
+
+    #[test]
+    fn lookup_matches_full_chunks_only() {
+        let mut trie = PrefixTrie::new();
+        let p = prompt(1, BLOCK_TOKENS * 2 + 5);
+        let chain = trie.insert(&p);
+        assert_eq!(chain.len(), 2, "two full chunks, partial tail ignored");
+        for &n in &chain {
+            trie.mark_resident(n);
+        }
+        let m = trie.lookup(&p);
+        assert_eq!(m.tokens, BLOCK_TOKENS * 2);
+        assert_eq!(m.live_tokens, BLOCK_TOKENS * 2);
+        // A divergent continuation still hits the shared prefix.
+        let mut q = p[..BLOCK_TOKENS * 2].to_vec();
+        q.extend([9999; 40]);
+        assert_eq!(trie.lookup(&q).live_tokens, BLOCK_TOKENS * 2);
+        // A different prefix misses.
+        assert_eq!(trie.lookup(&prompt(2, BLOCK_TOKENS * 2)).tokens, 0);
+    }
+
+    #[test]
+    fn non_resident_nodes_do_not_count_live() {
+        let mut trie = PrefixTrie::new();
+        let p = prompt(3, BLOCK_TOKENS * 3);
+        let chain = trie.insert(&p);
+        trie.mark_resident(chain[0]);
+        trie.mark_resident(chain[2]); // gap at chunk 1
+        let m = trie.lookup(&p);
+        assert_eq!(m.nodes.len(), 3);
+        assert_eq!(m.live_tokens, BLOCK_TOKENS, "live run stops at the gap");
+        trie.invalidate_all();
+        assert_eq!(trie.lookup(&p).live_tokens, 0);
+        assert_eq!(trie.lookup(&p).tokens, BLOCK_TOKENS * 3, "structure survives the flush");
+    }
+
+    #[test]
+    fn trie_refcounts_drain_through_kv() {
+        let mut kv = KvStore::new(1);
+        let pool = kv.pool_handle(0, &[0]);
+        let rows = vec![1.0f32; BLOCK_TOKENS];
+        kv.append_group(1, pool, 0, BLOCK_TOKENS, &rows, &rows, 1);
+        let blocks = kv.prefix_blocks(1, pool, 1).unwrap();
+        let mut trie = PrefixTrie::new();
+        let p = prompt(1, BLOCK_TOKENS);
+        let chain = trie.insert(&p);
+        trie.register_blocks(chain[0], &mut kv, vec![(pool, blocks[0])]);
+        kv.release(1);
+        assert!(!kv.drained(), "trie still pins the donor's block");
+        trie.invalidate_device(&mut kv);
+        assert!(kv.drained(), "invalidate drops the last reference");
+    }
+
+    #[test]
+    fn directory_prefers_deepest_chain() {
+        let mut dir = PrefixDirectory::new();
+        let p = prompt(7, BLOCK_TOKENS * 4);
+        dir.register(&p[..BLOCK_TOKENS * 2], 0);
+        dir.register(&p, 1);
+        assert_eq!(dir.lookup(&p), Some((1, BLOCK_TOKENS * 4)));
+        assert_eq!(dir.lookup(&p[..BLOCK_TOKENS * 2]), Some((1, BLOCK_TOKENS * 2)));
+        dir.purge_replica(1);
+        assert_eq!(dir.lookup(&p), None, "purged replica's chains are gone");
+        assert_eq!(dir.lookup(&prompt(8, BLOCK_TOKENS)), None);
+    }
+}

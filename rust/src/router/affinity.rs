@@ -59,6 +59,26 @@ impl AffinityRouter {
         rank
     }
 
+    /// [`AffinityRouter::route`] with a per-rank prefix credit in token
+    /// units (see [`DpRouter::route_biased`]): an existing pin still wins
+    /// (subject to the spill bound — session KV locality dominates), but
+    /// an unpinned or spilled turn is steered toward the rank already
+    /// holding the request's shared prefix instead of an idle cold one.
+    pub fn route_biased(&mut self, session: SessionId, work_tokens: f64, bonus: &[f64]) -> RankId {
+        if let Some(&pinned) = self.pins.get(&session) {
+            let t = self.inner.tracker();
+            let min = (0..t.world()).map(|r| t.pending(r)).fold(f64::MAX, f64::min);
+            if t.pending(pinned) - min <= self.spill_threshold {
+                self.inner.add_load(pinned, work_tokens);
+                return pinned;
+            }
+            self.spills += 1; // overloaded home: fall through and re-pin
+        }
+        let rank = self.inner.route_biased(work_tokens, bonus);
+        self.pins.insert(session, rank);
+        rank
+    }
+
     /// Report completed work on `rank`.
     pub fn complete(&mut self, rank: RankId, work_tokens: f64) {
         self.inner.complete(rank, work_tokens);
@@ -99,6 +119,19 @@ mod tests {
         }
         // A different session lands elsewhere (least loaded).
         assert_ne!(r.route(2, 10.0), home);
+    }
+
+    #[test]
+    fn prefix_bias_steers_new_sessions_but_not_pins() {
+        let mut r = AffinityRouter::new(RoutePolicy::LeastLoaded, 3);
+        r.inner.add_load(2, 30.0); // warm rank, modest queue
+        // A new session with a 512-token prefix hit on rank 2 lands there
+        // despite ranks 0 and 1 being idle.
+        assert_eq!(r.route_biased(1, 64.0, &[0.0, 0.0, 512.0]), 2);
+        // A pinned session ignores the bias: its own KV home dominates.
+        let home = r.route(2, 10.0);
+        assert_ne!(home, 2);
+        assert_eq!(r.route_biased(2, 10.0, &[0.0, 0.0, 1e6]), home);
     }
 
     #[test]

@@ -91,6 +91,30 @@ impl LoadTracker {
             .unwrap_or(0)
     }
 
+    /// [`LoadTracker::least_loaded`] with a per-rank score credit in token
+    /// units — the prefix-affinity hook: a rank holding a request's warm
+    /// KV prefix is credited the prefill work the hit would save, so it
+    /// outranks an idle cold rank whenever the savings exceed its load
+    /// surplus. The credit is subtracted from pending *before* capacity
+    /// normalization and may drive the score negative — that is what lets
+    /// a loaded-but-warm rank strictly beat an idle cold one. An all-zero
+    /// `bonus` reduces exactly to the classic rule (same deterministic
+    /// lowest-id ties).
+    pub fn least_loaded_biased(&self, bonus: &[f64]) -> RankId {
+        self.pending
+            .iter()
+            .zip(&self.capacity)
+            .enumerate()
+            .map(|(r, (&p, &c))| {
+                let credit = bonus.get(r).copied().unwrap_or(0.0).max(0.0);
+                let score = if c > 0.0 { (p - credit) / c } else { f64::INFINITY };
+                (r, score)
+            })
+            .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+            .map(|(r, _)| r)
+            .unwrap_or(0)
+    }
+
     /// Max/mean pending ratio (1.0 = perfectly balanced).
     pub fn imbalance(&self) -> f64 {
         let mean = self.pending.iter().sum::<f64>() / self.pending.len() as f64;
@@ -144,6 +168,24 @@ mod tests {
         assert_eq!(t.pending(1), 0.0);
         // least_loaded still works (and can never panic).
         assert_eq!(t.least_loaded(), 1);
+    }
+
+    #[test]
+    fn biased_routing_prefers_warm_over_idle() {
+        let mut t = LoadTracker::new(3);
+        t.add(1, 50.0); // warm rank, moderately busy
+        // No bonus: identical to the classic rule (idle rank 0 wins).
+        assert_eq!(t.least_loaded_biased(&[0.0; 3]), t.least_loaded());
+        // A 512-token prefix hit on rank 1 outweighs its 50-token queue.
+        assert_eq!(t.least_loaded_biased(&[0.0, 512.0, 0.0]), 1);
+        // ...but not a queue larger than the savings.
+        t.add(1, 600.0);
+        assert_eq!(t.least_loaded_biased(&[0.0, 512.0, 0.0]), 0);
+        // Zero-capacity ranks stay excluded even with a bonus.
+        t.set_capacity(2, 0.0);
+        assert_eq!(t.least_loaded_biased(&[0.0, 0.0, 1e9]), 0);
+        // Short bonus slices are padded with zeros, not a panic.
+        assert_eq!(t.least_loaded_biased(&[]), 0);
     }
 
     #[test]

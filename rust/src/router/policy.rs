@@ -51,6 +51,25 @@ impl DpRouter {
         rank
     }
 
+    /// [`DpRouter::route`] with a per-rank score credit in token units —
+    /// the prefix-affinity hook (see [`LoadTracker::least_loaded_biased`]).
+    /// Under [`RoutePolicy::LeastLoaded`] a rank holding the request's
+    /// warm KV prefix is credited the prefill work the hit saves;
+    /// round-robin ignores the bias (it is the baseline). Books
+    /// `work_tokens` on the chosen rank like `route`.
+    pub fn route_biased(&mut self, work_tokens: f64, bonus: &[f64]) -> RankId {
+        let rank = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.tracker.world();
+                r
+            }
+            RoutePolicy::LeastLoaded => self.tracker.least_loaded_biased(bonus),
+        };
+        self.tracker.add(rank, work_tokens);
+        rank
+    }
+
     /// Report completed work (scheduler/engine callback).
     pub fn complete(&mut self, rank: RankId, work_tokens: f64) {
         self.tracker.complete(rank, work_tokens);
@@ -121,6 +140,19 @@ mod tests {
         let mut r = DpRouter::new(RoutePolicy::RoundRobin, 3);
         let homes: Vec<RankId> = (0..6).map(|_| r.route(1.0)).collect();
         assert_eq!(homes, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn biased_route_books_on_the_warm_rank() {
+        let mut r = DpRouter::new(RoutePolicy::LeastLoaded, 3);
+        r.route(40.0); // rank 0 busy
+        let warm = r.route_biased(8.0, &[500.0, 0.0, 0.0]);
+        assert_eq!(warm, 0, "prefix credit outweighs the 40-token queue");
+        assert_eq!(r.tracker().pending(0), 48.0);
+        // Round-robin ignores the bias entirely (baseline behaviour).
+        let mut rr = DpRouter::new(RoutePolicy::RoundRobin, 3);
+        assert_eq!(rr.route_biased(1.0, &[0.0, 0.0, 1e9]), 0);
+        assert_eq!(rr.route_biased(1.0, &[0.0, 0.0, 1e9]), 1);
     }
 
     #[test]

@@ -17,9 +17,12 @@
 use anyhow::Result;
 
 use crate::cluster::{GpuSpec, Interconnect, TransferClass};
-use crate::engine::{EngineEvent, GenerationResult, ServeReport, ServingBackend, SubmitOptions};
+use crate::engine::{
+    EngineEvent, GenerationResult, ServeReport, ServingBackend, SubmitOptions, BLOCK_TOKENS,
+};
 use crate::kvcache::BackupStore;
 use crate::metrics::ServingMetrics;
+use crate::prefix::{PrefixStats, PrefixTrie};
 use crate::recovery::{plan_recovery, BackupDaemon, RecoveryInput, RecoveryMethod};
 use crate::router::DpRouter;
 use crate::scheduler::{adaptive_chunked_prefill, fifo_chunked_prefill, PrefillItem};
@@ -75,6 +78,11 @@ pub struct OnlineSim {
     pub max_batch: usize,
     /// Fraction of PCIe bandwidth reserved for background KV backup.
     pub backup_fraction: f64,
+    /// Mirror of the engine's shared-prefix KV cache (see
+    /// `crate::prefix`): warm prompt prefixes skip modeled prefill and
+    /// their KV bytes are charged once instead of per sharer. Off by
+    /// default — the no-sharing accounting is the baseline.
+    pub prefix_sharing: bool,
 }
 
 struct Running {
@@ -83,6 +91,9 @@ struct Running {
     context: usize,
     remaining_out: usize,
     emitted: usize,
+    /// Leading tokens whose KV bytes live in the shared prefix pool —
+    /// this request's private charge is `context - shared`.
+    shared: usize,
 }
 
 /// A request known to the session but not yet arrived.
@@ -93,6 +104,9 @@ struct Pending {
     output_tokens: usize,
     priority: i32,
     deadline: Option<SimTime>,
+    /// Actual prompt tokens, kept only when prefix sharing is on (the
+    /// trace-driven path simulates lengths, not token ids).
+    prompt: Option<Vec<u32>>,
 }
 
 /// A request that has arrived and waits for KV headroom.
@@ -102,6 +116,7 @@ struct Waiting {
     output: usize,
     priority: i32,
     deadline: Option<SimTime>,
+    prompt: Option<Vec<u32>>,
 }
 
 impl OnlineSim {
@@ -115,12 +130,19 @@ impl OnlineSim {
             token_budget: 8192,
             max_batch: 256,
             backup_fraction: 0.25,
+            prefix_sharing: false,
         }
     }
 
     /// Select the served model.
     pub fn with_model(mut self, model: crate::model::ModelSpec) -> Self {
         self.model = model;
+        self
+    }
+
+    /// Enable the shared-prefix mirror on sessions built from this sim.
+    pub fn with_prefix_sharing(mut self, on: bool) -> Self {
+        self.prefix_sharing = on;
         self
     }
 
@@ -158,6 +180,9 @@ impl OnlineSim {
             dp_rate,
             kv_budget,
             kv_used: vec![0.0; self.world],
+            prefix_sharing: self.prefix_sharing,
+            trie: PrefixTrie::new(),
+            peak_kv: 0.0,
             clock: 0.0,
             steps: 0,
             lost: 0,
@@ -289,7 +314,7 @@ impl OnlineSim {
 
         let mut session = self.session();
         for r in &arrivals {
-            session.enqueue(r.id, r.arrival, r.input_tokens, r.output_tokens.max(1), 0, None);
+            session.enqueue(r.id, r.arrival, r.input_tokens, r.output_tokens.max(1), 0, None, None);
         }
         // The paper's trigger: 100 ms after the `after_requests`-th arrival.
         let mut pending_fault = fault.and_then(|f| {
@@ -353,6 +378,13 @@ pub struct OnlineSession {
     dp_rate: f64,
     kv_budget: Vec<usize>,
     kv_used: Vec<f64>,
+    /// Shared-prefix mirror (see [`crate::prefix`]): when enabled, warm
+    /// prompt prefixes skip modeled prefill and resident chunk bytes are
+    /// charged once into `kv_used` instead of once per sharer.
+    prefix_sharing: bool,
+    trie: PrefixTrie,
+    /// High-water mark of total resident KV bytes (bench telemetry).
+    peak_kv: f64,
     clock: SimTime,
     steps: usize,
     /// GPUs currently out of the group — the budget `inject_rejoin`
@@ -381,8 +413,11 @@ pub struct OnlineSession {
 }
 
 impl OnlineSession {
-    /// Register a request. Trace-driven runs pass explicit ids; the
-    /// [`ServingBackend`] submit path allocates them.
+    /// Register a request. Trace-driven runs pass explicit ids (and no
+    /// prompt tokens — lengths only); the [`ServingBackend`] submit path
+    /// allocates ids and, with prefix sharing on, keeps the prompt for
+    /// trie matching.
+    #[allow(clippy::too_many_arguments)]
     fn enqueue(
         &mut self,
         id: RequestId,
@@ -391,8 +426,10 @@ impl OnlineSession {
         output_tokens: usize,
         priority: i32,
         deadline: Option<SimTime>,
+        prompt: Option<Vec<u32>>,
     ) {
-        self.pending.push(Pending { id, arrival, input_tokens, output_tokens, priority, deadline });
+        self.pending
+            .push(Pending { id, arrival, input_tokens, output_tokens, priority, deadline, prompt });
         self.pending_sorted = false;
         self.next_id = self.next_id.max(id + 1);
         self.order.push(id);
@@ -434,14 +471,28 @@ impl OnlineSession {
             let p = self.pending.pop().unwrap();
             self.metrics.on_arrival(p.id, p.arrival);
             // P-D disaggregation: the prefill instance already processed
-            // the input tokens; count them on admission.
-            self.metrics.on_prefill_tokens(p.input_tokens);
+            // the input tokens; count them on admission. A warm prefix hit
+            // skips that work — the prefill instance adopts the cached
+            // chunks and only computes the divergent tail (clamped to
+            // leave at least one token: the first token must be emitted).
+            let mut warm = 0usize;
+            if self.prefix_sharing {
+                if let Some(prompt) = &p.prompt {
+                    warm = self
+                        .trie
+                        .lookup(prompt)
+                        .live_tokens
+                        .min(p.input_tokens.saturating_sub(1));
+                }
+            }
+            self.metrics.on_prefill_tokens(p.input_tokens - warm);
             self.waiting.push(Waiting {
                 id: p.id,
                 context: p.input_tokens,
                 output: p.output_tokens,
                 priority: p.priority,
                 deadline: p.deadline,
+                prompt: p.prompt,
             });
         }
 
@@ -502,61 +553,113 @@ impl OnlineSession {
                 finished.push(i);
             }
         }
+        self.peak_kv = self.peak_kv.max(self.kv_used.iter().sum());
         for &i in finished.iter().rev() {
             let r = self.running.swap_remove(i);
             self.metrics.on_finish(r.id);
             events.push(EngineEvent::RequestFinished { id: r.id });
             self.daemon.forget(r.id);
             self.backup.release(r.id, self.model.kv_bytes_per_token());
+            // Only the private tail is released: shared prefix chunks stay
+            // resident in the trie's pool for the next sharer (the engine's
+            // trie keeps a refcount on them the same way).
+            let private = (r.context - r.shared) as f64;
             for (ru, used) in self.kv_used.iter_mut().enumerate() {
-                *used = (*used - self.tp_rate[ru] * r.context as f64).max(0.0);
+                *used = (*used - self.tp_rate[ru] * private).max(0.0);
             }
-            self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * r.context as f64).max(0.0);
+            self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * private).max(0.0);
             self.router.complete(r.home, 0.0);
         }
         events
     }
 
     fn admit_waiting(&mut self) {
-        let Self {
-            waiting,
-            running,
-            router,
-            backup,
-            kv_used,
-            kv_budget,
-            tp_rate,
-            dp_rate,
-            model,
-            max_batch,
-            world,
-            ..
-        } = self;
-        waiting.retain(|w| {
-            let (id, ctx, out) = (w.id, w.context, w.output);
-            let total = (ctx + out) as f64;
-            let fits = (0..*world).all(|r| {
-                let add = tp_rate[r] * total
-                    + if r == router.tracker().least_loaded() { *dp_rate * total } else { 0.0 };
-                kv_used[r] + add <= kv_budget[r] as f64 * 0.97
-            }) && running.len() < *max_batch;
-            if fits {
-                let home = router.route(ctx as f64);
-                for (r, used) in kv_used.iter_mut().enumerate() {
-                    *used += tp_rate[r] * ctx as f64;
-                }
-                kv_used[home] += *dp_rate * ctx as f64;
-                // P-D disaggregation: the prefill instance ships this
-                // request's KV through host DRAM, so the input context
-                // is host-mirrored the moment the decode instance
-                // admits it; the daemon only trails the decode tokens.
-                backup.backup(id, ctx, model.kv_bytes_per_token());
-                running.push(Running { id, home, context: ctx, remaining_out: out, emitted: 0 });
-                false
-            } else {
-                true
+        let waiting = std::mem::take(&mut self.waiting);
+        let mut kept = Vec::with_capacity(waiting.len());
+        for w in waiting {
+            if !self.try_admit(&w) {
+                kept.push(w);
             }
+        }
+        self.waiting = kept;
+        self.peak_kv = self.peak_kv.max(self.kv_used.iter().sum());
+    }
+
+    /// Admit one waiting request if it fits the KV budget; returns false
+    /// (leave it waiting) otherwise.
+    fn try_admit(&mut self, w: &Waiting) -> bool {
+        // Residency is re-checked at admission time — a failure flush
+        // between arrival and admission must not under-charge.
+        let live = match (&w.prompt, self.prefix_sharing) {
+            (Some(p), true) => self.trie.match_only(p).live_tokens.min(w.context),
+            _ => 0,
+        };
+        let total = (w.context + w.output - live) as f64;
+        let fits = (0..self.world).all(|r| {
+            let add = self.tp_rate[r] * total
+                + if r == self.router.tracker().least_loaded() {
+                    self.dp_rate * total
+                } else {
+                    0.0
+                };
+            self.kv_used[r] + add <= self.kv_budget[r] as f64 * 0.97
+        }) && self.running.len() < self.max_batch;
+        if !fits {
+            return false;
+        }
+        // Booked routing work excludes the warm tokens — the prefill
+        // instance never recomputed them.
+        let home = self.router.route((w.context - live) as f64);
+        // Register the prompt's full chunks: newly resident chunks are
+        // charged once into the shared pool; every future sharer (and
+        // this request itself) charges only its private remainder.
+        let mut shared = 0usize;
+        if self.prefix_sharing {
+            if let Some(p) = &w.prompt {
+                let chain = self.trie.insert(p);
+                for &n in &chain {
+                    self.trie.mark_resident(n);
+                }
+                let covered = (chain.len() * BLOCK_TOKENS).min(w.context);
+                let fresh = (covered.saturating_sub(live)) as f64;
+                for r in 0..self.world {
+                    self.kv_used[r] += self.prefix_rate(r) * fresh;
+                }
+                shared = covered;
+            }
+        }
+        let private = (w.context - shared) as f64;
+        for (r, used) in self.kv_used.iter_mut().enumerate() {
+            *used += self.tp_rate[r] * private;
+        }
+        self.kv_used[home] += self.dp_rate * private;
+        // P-D disaggregation: the prefill instance ships this
+        // request's KV through host DRAM, so the input context
+        // is host-mirrored the moment the decode instance
+        // admits it; the daemon only trails the decode tokens.
+        self.backup.backup(w.id, w.context, self.model.kv_bytes_per_token());
+        self.running.push(Running {
+            id: w.id,
+            home,
+            context: w.context,
+            remaining_out: w.output,
+            emitted: 0,
+            shared,
         });
+        true
+    }
+
+    /// Bytes per shared-prefix token charged on `rank`: the TP-head share
+    /// is physically replicated per rank like any context; the DP-head
+    /// share is modeled as evenly spread (the engine pins it to the
+    /// donor's home, which the sim does not track per chunk).
+    fn prefix_rate(&self, rank: usize) -> f64 {
+        self.tp_rate[rank] + self.dp_rate / self.world as f64
+    }
+
+    /// Total resident shared-prefix tokens (chunk-granular).
+    fn prefix_tokens(&self) -> usize {
+        self.trie.resident_chunks() * BLOCK_TOKENS
     }
 
     /// Rebuild the cost model (and KV rates/budgets, router capacities,
@@ -595,13 +698,20 @@ impl OnlineSession {
             let cap = self.mitigation.as_ref().map(|w| w[r]).unwrap_or(1.0);
             self.router.set_capacity(r, cap);
         }
-        // Re-derive per-rank KV usage under the new rates.
+        // Re-derive per-rank KV usage under the new rates: each running
+        // request's private context, plus the shared prefix pool charged
+        // once (zero when sharing is off — the trie stays empty).
         self.kv_used = vec![0.0; self.world];
+        let pool = self.prefix_tokens() as f64;
+        for r in 0..self.world {
+            self.kv_used[r] += self.prefix_rate(r) * pool;
+        }
         for req in &self.running {
+            let private = (req.context - req.shared) as f64;
             for (ru, used) in self.kv_used.iter_mut().enumerate() {
-                *used += self.tp_rate[ru] * req.context as f64;
+                *used += self.tp_rate[ru] * private;
             }
-            self.kv_used[req.home] += self.dp_rate * req.context as f64;
+            self.kv_used[req.home] += self.dp_rate * private;
         }
         // Shifted budgets/rates may unstick a stalled waiting line.
         self.stalled = false;
@@ -647,6 +757,33 @@ impl OnlineSession {
     /// Per-rank effective speed factors (1.0 = healthy).
     pub fn speed_factors(&self) -> &[f64] {
         &self.speed
+    }
+
+    /// Toggle the shared-prefix mirror on a built session (replicas
+    /// inherit [`OnlineSim::prefix_sharing`]; this overrides per session).
+    pub fn set_prefix_sharing(&mut self, on: bool) {
+        self.prefix_sharing = on;
+    }
+
+    /// Trie hit/insert counters (the sim's side of
+    /// [`crate::engine::Engine::prefix_stats`]).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.trie.stats()
+    }
+
+    /// Tokens currently resident in the shared prefix pool.
+    pub fn prefix_resident_tokens(&self) -> usize {
+        self.prefix_tokens()
+    }
+
+    /// Total modeled KV bytes resident right now, summed over ranks.
+    pub fn kv_bytes(&self) -> f64 {
+        self.kv_used.iter().sum()
+    }
+
+    /// High-water mark of [`OnlineSession::kv_bytes`] over the run.
+    pub fn peak_kv_bytes(&self) -> f64 {
+        self.peak_kv
     }
 
     /// Apply explicit mitigation weights (e.g. from
@@ -728,6 +865,17 @@ impl OnlineSession {
         // Re-home requests of the failed rank before usage is re-derived.
         for r in self.running.iter_mut() {
             r.home = survivor_map[r.home].unwrap_or_else(|| self.router.tracker().least_loaded());
+        }
+        // Conservative prefix flush: TP-sharded prefix chunks lose a shard
+        // with the rank, so every cached chain goes cold and survivors'
+        // restored contexts are charged privately again. (The real engine
+        // repairs and re-deduplicates — see `Engine::inject_failure`; the
+        // sim models the worst case.)
+        if self.prefix_sharing {
+            self.trie.invalidate_all();
+            for r in self.running.iter_mut() {
+                r.shared = 0;
+            }
         }
         self.rebuild_cost();
 
@@ -823,7 +971,16 @@ impl ServingBackend for OnlineSession {
         );
         anyhow::ensure!(opts.deadline.unwrap_or(0.0).is_finite(), "deadline must be finite");
         let id = self.next_id;
-        self.enqueue(id, opts.arrival, prompt.len(), opts.max_new_tokens, opts.priority, opts.deadline);
+        let tokens = self.prefix_sharing.then(|| prompt.to_vec());
+        self.enqueue(
+            id,
+            opts.arrival,
+            prompt.len(),
+            opts.max_new_tokens,
+            opts.priority,
+            opts.deadline,
+            tokens,
+        );
         Ok(id)
     }
 
@@ -840,11 +997,11 @@ impl ServingBackend for OnlineSession {
             let r = self.running.swap_remove(i);
             self.daemon.forget(r.id);
             self.backup.release(r.id, self.model.kv_bytes_per_token());
+            let private = (r.context - r.shared) as f64;
             for (ru, used) in self.kv_used.iter_mut().enumerate() {
-                *used = (*used - self.tp_rate[ru] * r.context as f64).max(0.0);
+                *used = (*used - self.tp_rate[ru] * private).max(0.0);
             }
-            self.kv_used[r.home] =
-                (self.kv_used[r.home] - self.dp_rate * r.context as f64).max(0.0);
+            self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * private).max(0.0);
             self.router.complete(r.home, 0.0);
         } else {
             anyhow::bail!("abort: unknown or already finished request {id}");
@@ -1149,6 +1306,99 @@ mod tests {
             "rebalanced {mitigated} within 15% of capacity-proportional ideal {ideal}"
         );
         assert!(baseline < healthy * 0.7, "unmitigated straggler {baseline} vs healthy {healthy}");
+    }
+
+    /// Build a K-prefix × N-continuation workload: each prompt is a
+    /// shared `prefix_len`-token head plus a distinct `suffix_len` tail.
+    fn fanout_prompts(k: u32, n: u32, prefix_len: usize, suffix_len: usize) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        for p in 0..k {
+            let prefix: Vec<u32> = (0..prefix_len as u32).map(|i| p * 100_000 + (i % 997)).collect();
+            for c in 0..n {
+                let mut prompt = prefix.clone();
+                prompt.extend((0..suffix_len as u32).map(|i| 900_000 + c * 1_000 + i));
+                out.push(prompt);
+            }
+        }
+        out
+    }
+
+    /// The prefix mirror: staggered repeat-fanout traffic skips most
+    /// modeled prefill, and a simultaneous burst keeps one copy of each
+    /// prefix resident instead of one per sharer.
+    #[test]
+    fn prefix_sharing_reduces_prefill_and_kv() {
+        let session = |sharing: bool| {
+            OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+                .with_model(llama3_70b())
+                .with_prefix_sharing(sharing)
+                .session()
+        };
+        // Staggered arrivals: each continuation lands after its donor is
+        // resident, so the prefill instance adopts the warm prefix.
+        let staggered = |sharing: bool| {
+            let mut s = session(sharing);
+            for (i, p) in fanout_prompts(4, 8, 2048, 64).iter().enumerate() {
+                s.submit_with(p, SubmitOptions::new(4).at(i as f64 * 0.5)).unwrap();
+            }
+            let rep = s.run_to_completion().unwrap();
+            assert_eq!(rep.results.len(), 32);
+            for r in &rep.results {
+                assert_eq!(r.output_tokens.len(), 4);
+            }
+            (rep.prefill_tokens, s.prefix_stats())
+        };
+        let (cold, _) = staggered(false);
+        let (warm, stats) = staggered(true);
+        assert!(stats.hits >= 24, "continuations hit the trie (got {})", stats.hits);
+        assert!(warm * 3 < cold, "modeled prefill {warm} vs no-sharing {cold}");
+
+        // Burst arrivals: everything resident at once — the KV win is the
+        // shared pool charged once.
+        let burst = |sharing: bool| {
+            let mut s = session(sharing);
+            for p in fanout_prompts(4, 8, 2048, 64).iter() {
+                s.submit_with(p, SubmitOptions::new(16)).unwrap();
+            }
+            let rep = s.run_to_completion().unwrap();
+            assert_eq!(rep.results.len(), 32);
+            s.peak_kv_bytes()
+        };
+        let cold_kv = burst(false);
+        let warm_kv = burst(true);
+        assert!(
+            warm_kv * 2.0 < cold_kv,
+            "peak resident KV {warm_kv:.2e} should be under half of no-sharing {cold_kv:.2e}"
+        );
+    }
+
+    /// A hard failure flushes the sim's prefix pool conservatively: every
+    /// survivor's context is charged privately again, and the drained
+    /// session holds no KV.
+    #[test]
+    fn failure_flushes_prefix_pool_and_recharges() {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b())
+            .with_prefix_sharing(true);
+        let mut s = sim.session();
+        let prefix: Vec<u32> = (0..1024).collect();
+        for c in 0..6u32 {
+            let mut p = prefix.clone();
+            p.extend([90_000 + c; 32]);
+            s.submit_with(&p, SubmitOptions::new(8)).unwrap();
+        }
+        s.step().unwrap(); // admit the burst
+        assert!(s.prefix_resident_tokens() >= 1024, "prefix chunks resident");
+        let before = s.kv_bytes();
+        s.inject_failure(2, RecoveryMethod::Full).unwrap();
+        assert_eq!(s.prefix_resident_tokens(), 0, "conservative flush");
+        assert!(s.kv_bytes() > before, "dedup lost: survivors charged privately");
+        let rep = s.run_to_completion().unwrap();
+        assert_eq!(rep.results.len(), 6);
+        for r in &rep.results {
+            assert_eq!(r.output_tokens.len(), 8);
+        }
+        assert!(s.kv_bytes() < 1.0, "drained session releases all private KV");
     }
 
     /// Zero generation budget is a caller bug on this backend too.

@@ -29,10 +29,12 @@ mod arrivals;
 mod faults;
 mod gcp;
 mod lengths;
+mod repeat_fanout;
 mod request;
 
 pub use arrivals::{poisson_arrivals, scale_arrivals, split_arrivals};
 pub use faults::{cascade_then_heal, flaky_gpu, rolling_maintenance, thermal_throttle};
 pub use gcp::gcp_availability;
 pub use lengths::{mooncake_trace, openthoughts_trace, TraceStats};
+pub use repeat_fanout::{repeat_fanout, FanoutRequest};
 pub use request::TraceRequest;

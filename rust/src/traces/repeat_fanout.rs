@@ -1,0 +1,88 @@
+//! Repeat-fanout workload: K distinct shared prefixes, each continued by
+//! N requests — the spnl-style inner/outer repeat pattern that dominates
+//! agentic and few-shot traffic. Unlike the length-only generators, this
+//! one materializes actual prompt tokens, because prefix sharing keys on
+//! token content: every continuation of a prefix carries the *same*
+//! leading tokens plus a distinct suffix.
+//!
+//! Token ids stay below 512 so the prompts are valid for every model
+//! preset, including `small_real` on the real engine.
+
+use super::TraceRequest;
+use crate::util::Rng;
+
+/// One repeat-fanout request: the trace record (lengths/arrival) plus the
+/// materialized prompt the trace generators normally omit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FanoutRequest {
+    pub request: TraceRequest,
+    /// Actual prompt tokens: shared prefix then private suffix.
+    pub prompt: Vec<u32>,
+}
+
+/// Generate `prefixes` distinct prefix chains of `prefix_tokens` tokens,
+/// each fanned out into `fanout` continuations with a distinct
+/// `suffix_tokens`-token tail. Requests are ordered donor-first per
+/// prefix (prefix 0's continuations, then prefix 1's, ...) with ids
+/// sequential in that order and arrival 0 — callers stamp arrivals or
+/// [`crate::engine::SubmitOptions::at`] times as the experiment needs.
+/// Output budgets are a small deterministic cycle (4..=11) so decode work
+/// is non-trivial but the workload stays prefill-dominated. Seeded and
+/// fully deterministic.
+pub fn repeat_fanout(
+    prefixes: usize,
+    fanout: usize,
+    prefix_tokens: usize,
+    suffix_tokens: usize,
+    seed: u64,
+) -> Vec<FanoutRequest> {
+    assert!(prefix_tokens > 0 && suffix_tokens > 0, "prefix and suffix must be non-empty");
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(prefixes * fanout);
+    for _ in 0..prefixes {
+        let prefix: Vec<u32> = (0..prefix_tokens).map(|_| rng.pick(512) as u32).collect();
+        for _ in 0..fanout {
+            let mut prompt = prefix.clone();
+            prompt.extend((0..suffix_tokens).map(|_| rng.pick(512) as u32));
+            let id = out.len() as u64;
+            out.push(FanoutRequest {
+                request: TraceRequest {
+                    id,
+                    arrival: 0.0,
+                    input_tokens: prompt.len(),
+                    output_tokens: 4 + (id as usize % 8),
+                },
+                prompt,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fanout_shares_prefixes_and_diverges_suffixes() {
+        let reqs = repeat_fanout(3, 4, 64, 16, 9);
+        assert_eq!(reqs.len(), 12);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.request.id, i as u64);
+            assert_eq!(r.request.input_tokens, 80);
+            assert_eq!(r.prompt.len(), 80);
+            assert!(r.prompt.iter().all(|&t| t < 512), "vocab-safe tokens");
+            let donor = &reqs[(i / 4) * 4];
+            assert_eq!(r.prompt[..64], donor.prompt[..64], "prefix shared within a group");
+        }
+        // Distinct prefixes across groups, distinct suffixes within one.
+        assert_ne!(reqs[0].prompt[..64], reqs[4].prompt[..64]);
+        assert_ne!(reqs[0].prompt[64..], reqs[1].prompt[64..]);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(repeat_fanout(2, 3, 32, 8, 5), repeat_fanout(2, 3, 32, 8, 5));
+        assert_ne!(repeat_fanout(2, 3, 32, 8, 5), repeat_fanout(2, 3, 32, 8, 6));
+    }
+}

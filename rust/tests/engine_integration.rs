@@ -18,6 +18,7 @@ use failsafe::engine::{
 use failsafe::model::small_real;
 use failsafe::recovery::RecoveryMethod;
 use failsafe::simulator::SystemConfig;
+use failsafe::traces::repeat_fanout;
 use failsafe::util::Rng;
 
 fn have_artifacts() -> bool {
@@ -607,6 +608,91 @@ fn degrade_fail_rejoin_is_deterministic_and_exact() {
     let (outputs, applied) = run();
     assert_eq!(outputs, expected, "degrade escalation diverged from fault-free");
     assert_eq!((outputs, applied), run(), "token-paced escalation must be reproducible");
+}
+
+/// The shared-prefix acceptance scenario: a repeat-fanout session (two
+/// warm prefixes, four continuations each) adopts its prefixes
+/// copy-on-write, then survives fail → shrink-reconfig → rejoin with
+/// sharing intact — physically resident KV stays below the logical
+/// N-private-copies total at every epoch — and the token-paced
+/// continuation is bit-exact versus a failure-free TP1 run.
+#[test]
+fn shared_prefix_survives_fail_and_rejoin_bit_exact() {
+    require_artifacts!();
+    let (prefixes, fanout) = (2, 4);
+    let fan = repeat_fanout(prefixes, fanout, 48, 6, 17);
+    // Donors first (one per prefix), then every continuation — the
+    // donors must finish prefill before the sharers arrive.
+    let mut order: Vec<Vec<u32>> = Vec::new();
+    for g in 0..prefixes {
+        order.push(fan[g * fanout].prompt.clone());
+    }
+    for (i, f) in fan.iter().enumerate() {
+        if i % fanout != 0 {
+            order.push(f.prompt.clone());
+        }
+    }
+    let max_new = 6;
+    let expected = serve(1, SystemConfig::standard(), &order, max_new);
+
+    let mut cfg = config(3, SystemConfig::failsafe());
+    cfg.prefix_sharing = true;
+    let mut engine = Engine::new(cfg).unwrap();
+    let mut ids: Vec<_> =
+        order[..prefixes].iter().map(|p| engine.submit(p, max_new).unwrap()).collect();
+    // A donor's chain is registered when its prefill completes (= first
+    // token out).
+    while ids.iter().any(|id| engine.output_so_far(*id).unwrap().is_empty()) {
+        engine.step().unwrap();
+    }
+    assert!(
+        engine.prefix_resident_chunks() >= prefixes * 3,
+        "each 48-token donor prefix caches 3 chunks"
+    );
+    ids.extend(order[prefixes..].iter().map(|p| engine.submit(p, max_new).unwrap()));
+    while ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 2) {
+        engine.step().unwrap();
+    }
+    let sharers = prefixes * (fanout - 1);
+    assert!(
+        engine.prefix_saved_tokens() >= sharers * 48,
+        "every continuation adopts its full 48-token prefix: saved {}",
+        engine.prefix_saved_tokens()
+    );
+    let compressed = |e: &Engine| {
+        let logical: usize = e.kv_bytes_by_rank().iter().sum();
+        (e.kv_resident_bytes(), logical)
+    };
+    let (resident, logical) = compressed(&engine);
+    assert!(resident < logical, "sharing compresses KV: {resident} vs logical {logical}");
+    assert!(engine.kv_shared_blocks() > 0);
+
+    engine.inject_failure(1, RecoveryMethod::Full).unwrap();
+    assert_eq!(engine.world(), 2);
+    assert!(
+        engine.kv_shared_blocks() > 0,
+        "sharing must survive the shrink-reconfig, not decay to private copies"
+    );
+    let (resident, logical) = compressed(&engine);
+    assert!(resident < logical, "post-shrink KV still shared: {resident} vs {logical}");
+
+    while ids.iter().any(|id| engine.output_so_far(*id).unwrap().len() < 4) {
+        engine.step().unwrap();
+    }
+    engine.inject_rejoin(RecoveryMethod::Full).unwrap();
+    assert_eq!(engine.world(), 3);
+    assert!(engine.kv_shared_blocks() > 0, "sharing must survive the rejoin");
+    let (resident, logical) = compressed(&engine);
+    assert!(resident < logical, "post-rejoin KV still shared: {resident} vs {logical}");
+
+    let report = engine.run_to_completion().unwrap();
+    assert_eq!(
+        report.outputs_owned(),
+        expected,
+        "shared-prefix session diverged across fail + rejoin"
+    );
+    let stats = engine.prefix_stats();
+    assert!(stats.hits >= sharers as u64, "trie hits cover every sharer");
 }
 
 /// Engine guards: oversized prompts, out-of-vocab tokens, and zero

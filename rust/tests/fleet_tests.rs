@@ -9,7 +9,9 @@ use failsafe::fleet::Fleet;
 use failsafe::model::llama3_70b;
 use failsafe::recovery::RecoveryMethod;
 use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
-use failsafe::traces::{cascade_then_heal, mooncake_trace, poisson_arrivals, TraceRequest};
+use failsafe::traces::{
+    cascade_then_heal, mooncake_trace, poisson_arrivals, repeat_fanout, TraceRequest,
+};
 
 fn fleet(replicas: usize, world: usize) -> Fleet {
     let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, world)
@@ -164,6 +166,78 @@ fn four_replica_token_paced_replay_is_deterministic() {
         (applied, results, out.final_worlds.clone(), out.tokens_emitted, out.redirected)
     };
     assert_eq!(run(), run());
+}
+
+fn prefix_fleet(replicas: usize, world: usize, affinity: bool) -> Fleet {
+    let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, world)
+        .with_model(llama3_70b())
+        .with_prefix_sharing(true);
+    let mut fleet = Fleet::new();
+    for session in sim.sessions(replicas) {
+        fleet.add_replica(Box::new(session));
+    }
+    if affinity {
+        fleet.enable_prefix_affinity();
+    }
+    fleet
+}
+
+/// The shared-prefix acceptance scenario at fleet scale: on a
+/// repeat-fanout trace (2 prefixes × 8 continuations), prefix-affinity
+/// placement concentrates every continuation onto its donor's replica —
+/// where the prefix is already resident and the prefill is warm —
+/// instead of spreading it to cold replicas, and fleet goodput improves.
+/// Fully deterministic: reruns reproduce placements and goodput exactly.
+#[test]
+fn prefix_affinity_beats_cold_routing_on_fanout_goodput() {
+    let (prefixes, fanout) = (2usize, 8usize);
+    let fan = repeat_fanout(prefixes, fanout, 2048, 64, 23);
+    let run = |affinity: bool| {
+        let mut f = prefix_fleet(4, 8, affinity);
+        let ids: Vec<_> = fan
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                f.submit_with(
+                    &r.prompt,
+                    SubmitOptions::new(r.request.output_tokens).at(i as f64 * 0.25),
+                )
+                .unwrap()
+            })
+            .collect();
+        let homes: Vec<_> = ids.iter().map(|&id| f.replica_of(id).unwrap()).collect();
+        let report = f.run_to_completion().unwrap();
+        for r in &report.results {
+            assert!(!r.result.aborted, "fleet request {} lost", r.id);
+        }
+        (homes, report.goodput_tps())
+    };
+    let (warm_homes, warm) = run(true);
+    let (cold_homes, cold) = run(false);
+
+    // Affinity concentrates each fan-out group on its donor's replica…
+    for g in 0..prefixes {
+        let group = &warm_homes[g * fanout..(g + 1) * fanout];
+        assert!(
+            group.iter().all(|&r| r == group[0]),
+            "group {g} should ride its donor's warm cache: {group:?}"
+        );
+    }
+    // …and distinct prefixes land on distinct replicas (no pile-up).
+    assert_ne!(warm_homes[0], warm_homes[fanout]);
+    // Classic placement spreads a group across cold replicas.
+    let mut spread = cold_homes[..fanout].to_vec();
+    spread.sort_unstable();
+    spread.dedup();
+    assert!(spread.len() > 1, "cold routing should spread the group: {cold_homes:?}");
+
+    assert!(
+        warm > cold,
+        "prefix-affinity goodput {warm:.1} tps should beat cold routing {cold:.1} tps"
+    );
+    // Deterministic end to end.
+    let (homes2, warm2) = run(true);
+    assert_eq!((homes2, warm2), (warm_homes, warm));
 }
 
 /// The acceptance scenario: 4 replicas under one shared arrival trace, a

@@ -625,6 +625,244 @@ fn prop_paged_kv_matches_reference() {
     });
 }
 
+/// Adopt the first `tokens` tokens of `donor`'s KV into `adoptee` —
+/// copy-on-write shared blocks in the paged store, a plain row copy in
+/// the reference (which has no sharing; equivalence is observational).
+/// Validates every pool first and mutates nothing on a partial hit,
+/// mirroring `Engine::plan_adoption`. Returns false if any pool could
+/// not serve the prefix.
+fn adopt_step(
+    kv: &mut KvStore,
+    rf: &mut RefKv,
+    plan: &ShardPlan,
+    donor: RequestId,
+    adoptee: RequestId,
+    adoptee_home: RankId,
+    tokens: usize,
+    hd: usize,
+) -> bool {
+    let n_blocks = tokens.div_ceil(16);
+    let mut adoptions: Vec<(u32, RankId, Vec<u32>)> = Vec::new();
+    for layer in 0..plan.model.n_layers {
+        let lh = &plan.heads.layers[layer];
+        let mut groups: Vec<(Vec<usize>, RankId)> = (0..plan.world())
+            .filter_map(|r| {
+                let tp = lh.tp_heads_of(r);
+                (!tp.is_empty()).then_some((tp, r))
+            })
+            .collect();
+        let dp = lh.dp_heads();
+        if !dp.is_empty() {
+            groups.push((dp, adoptee_home));
+        }
+        for (heads, rank) in groups {
+            let pool = kv.pool_handle(layer, &heads);
+            match kv.prefix_blocks(donor, pool, n_blocks) {
+                Some(blocks) => adoptions.push((pool, rank, blocks)),
+                None => return false,
+            }
+        }
+    }
+    for (pool, rank, blocks) in &adoptions {
+        kv.adopt_blocks(adoptee, *pool, *rank, blocks, tokens);
+    }
+    // The reference sees the adopted prefix as the donor's rows, copied.
+    for layer in 0..plan.model.n_layers {
+        let lh = &plan.heads.layers[layer];
+        let mut groups: Vec<(Vec<usize>, RankId)> = (0..plan.world())
+            .filter_map(|r| {
+                let tp = lh.tp_heads_of(r);
+                (!tp.is_empty()).then_some((tp, r))
+            })
+            .collect();
+        let dp = lh.dp_heads();
+        if !dp.is_empty() {
+            groups.push((dp, adoptee_home));
+        }
+        for (heads, rank) in groups {
+            for &h in &heads {
+                let mut k1 = Vec::with_capacity(tokens * hd);
+                let mut v1 = Vec::with_capacity(tokens * hd);
+                for t in 0..tokens {
+                    for d in 0..hd {
+                        k1.push(kv_val(donor, layer, h, t, d, false));
+                        v1.push(kv_val(donor, layer, h, t, d, true));
+                    }
+                }
+                rf.append(adoptee, layer, h, rank, &k1, &v1);
+            }
+        }
+    }
+    true
+}
+
+/// Shared-prefix extension of the paged-KV property test: randomized
+/// sequences of donor prefills, copy-on-write prefix adoptions,
+/// divergent appends (forcing CoW splits of partially-filled shared
+/// tail blocks), sharer releases, proactive backups, the failure dance,
+/// and a final sharing-aware retag + relayout — always observationally
+/// equivalent to the no-sharing reference, and every block reference
+/// drained at the end.
+#[test]
+fn prop_shared_prefix_kv_matches_reference() {
+    forall("shared-prefix kv vs reference", 30, 59, |rng| {
+        let mut m = ModelSpec {
+            name: "prop-prefix".into(),
+            n_layers: rng.range(1, 3),
+            d_model: 64,
+            n_q_heads: 8,
+            n_kv_heads: [4usize, 8][rng.pick(2)],
+            head_dim: rng.range(2, 4),
+            d_ff: 128,
+            n_experts: 1,
+            experts_per_token: 1,
+            vocab: 100,
+            dtype_bytes: 2,
+        };
+        m.n_q_heads = m.n_kv_heads;
+        let world = rng.range(2, 4);
+        let plan = ShardPlan::failsafe(&m, world);
+        let placement = KvPlacement::new(&plan);
+        let hd = m.head_dim;
+        let mut kv = KvStore::new(hd);
+        let mut rf = RefKv::new(hd);
+        let n_req = rng.range(3, 6);
+        let reqs: Vec<RequestId> = (0..n_req as u64).collect();
+        let homes: Vec<RankId> = (0..n_req).map(|_| rng.pick(world)).collect();
+        let mut ctx = vec![0usize; n_req];
+
+        for _ in 0..rng.range(4, 14) {
+            match rng.pick(8) {
+                0..=2 => {
+                    let i = rng.pick(n_req);
+                    // Spans block boundaries (BLOCK_TOKENS = 16); on an
+                    // adoptee this is the divergent append that CoW-splits
+                    // a partially-filled shared tail block.
+                    let n = rng.range(1, 24);
+                    append_step(&mut kv, &mut rf, &plan, reqs[i], homes[i], ctx[i], n, hd);
+                    ctx[i] += n;
+                }
+                3 | 4 => {
+                    // Shared prefill hit: a fresh request adopts a warm
+                    // donor prefix instead of re-appending it.
+                    let donor = (0..n_req).find(|&i| ctx[i] >= 16);
+                    let adoptee = (0..n_req).find(|&j| ctx[j] == 0);
+                    if let (Some(i), Some(j)) = (donor, adoptee) {
+                        let n_blocks = rng.range(1, ctx[i] / 16 + 1);
+                        let tokens = rng.range((n_blocks - 1) * 16 + 1, n_blocks * 16 + 1);
+                        if adopt_step(
+                            &mut kv, &mut rf, &plan, reqs[i], reqs[j], homes[j], tokens, hd,
+                        ) {
+                            ctx[j] = tokens;
+                        }
+                    }
+                }
+                5 => {
+                    let i = rng.pick(n_req);
+                    kv.backup_request(reqs[i]);
+                    rf.backup_request(reqs[i]);
+                }
+                6 => {
+                    // The engine's failure dance on a random rank: sharing
+                    // decays to private restores (re-dedup is the engine's
+                    // job), but observational equivalence must hold.
+                    let rank = rng.pick(world);
+                    let lost_kv = kv.wipe_rank(rank);
+                    let lost_rf = rf.wipe_rank(rank);
+                    assert_eq!(lost_kv, lost_rf, "wipe({rank}) affected set");
+                    for &id in &lost_kv {
+                        let i = id as usize;
+                        let a = kv.restore_request(id, &placement, homes[i]);
+                        let b = rf.restore(id, &placement, homes[i]);
+                        assert_eq!(a, b, "restored tokens of req {id}");
+                        let keep = a.min(ctx[i]);
+                        kv.truncate(id, keep);
+                        rf.truncate(id, keep);
+                        ctx[i] = keep;
+                    }
+                }
+                _ => {
+                    // Release one sharer: the other sharer's blocks must
+                    // survive via their refcounts.
+                    let i = rng.pick(n_req);
+                    kv.release(reqs[i]);
+                    rf.release(reqs[i]);
+                    ctx[i] = 0;
+                }
+            }
+            assert_kv_equiv(&mut kv, &rf, &plan, world, &reqs, &ctx);
+        }
+
+        // Sharing-aware retag + relayout onto the expanded plan: blocks
+        // whose source rows coincide stay shared via the relayout memo
+        // (exact counts shift with the new pool geometry, so the
+        // deterministic preservation check lives in the engine
+        // integration test); tags, bytes, and data must match the
+        // reference exactly.
+        let (plan2, _) = plan.expand();
+        let p2 = KvPlacement::new(&plan2);
+        let hm: HashMap<RequestId, RankId> =
+            reqs.iter().map(|&r| (r, homes[r as usize])).collect();
+        kv.retag_requests(&p2, &hm);
+        rf.retag(&p2, &hm);
+        kv.relayout(&plan2);
+        assert_eq!(kv.bytes_by_rank(world + 1), rf.bytes_by_rank(world + 1), "post-relayout");
+        for (i, &req) in reqs.iter().enumerate() {
+            assert_eq!(kv.tokens(req), rf.tokens(req));
+            let all: Vec<usize> = (0..m.n_kv_heads).collect();
+            for layer in 0..m.n_layers {
+                for want_v in [false, true] {
+                    assert_eq!(
+                        kv.gather(req, layer, &all, ctx[i] + 1, all.len(), want_v),
+                        rf.gather(req, layer, &all, ctx[i] + 1, all.len(), want_v),
+                        "post-relayout gather req {req} layer {layer} v={want_v}"
+                    );
+                }
+            }
+        }
+
+        // Drain: releasing every run returns every refcount to zero.
+        for &req in &reqs {
+            kv.release(req);
+        }
+        assert!(kv.drained(), "refcounts must drain to zero");
+    });
+}
+
+/// `switch_to_shared` re-deduplicates a privately restored sharer onto
+/// the donor's blocks: gathers are unchanged (the rows are bit-identical
+/// by construction), physical residency drops, and both sharers drain.
+#[test]
+fn switch_to_shared_rededuplicates() {
+    let hd = 2;
+    let mut kv = KvStore::new(hd);
+    let pool = kv.pool_handle(0, &[0]);
+    let rows = 32; // two full blocks
+    // Identical bytes for both requests — the re-dedup precondition.
+    let k: Vec<f32> = (0..rows * hd).map(|x| (x % 97) as f32).collect();
+    let v: Vec<f32> = (0..rows * hd).map(|x| (x % 89) as f32 + 0.5).collect();
+    kv.append_group(1, pool, 0, rows, &k, &v, hd);
+    kv.append_group(2, pool, 0, rows, &k, &v, hd);
+    let resident_private = kv.resident_bytes();
+    let donor_blocks = kv.prefix_blocks(1, pool, 2).unwrap();
+    assert!(kv.switch_to_shared(2, pool, &donor_blocks), "re-dedup succeeds");
+    assert!(kv.resident_bytes() < resident_private, "one physical copy remains");
+    assert_eq!(kv.shared_block_count(), 2);
+    let mut a = vec![f32::NAN; rows * hd];
+    let mut b = vec![f32::NAN; rows * hd];
+    kv.gather_into(1, pool, rows, 1, false, &mut a);
+    kv.gather_into(2, pool, rows, 1, false, &mut b);
+    assert_eq!(a, b, "sharers observe identical rows");
+    // The donor switching onto its own blocks is a no-op success.
+    assert!(kv.switch_to_shared(1, pool, &donor_blocks));
+    kv.release(1);
+    let mut c = vec![f32::NAN; rows * hd];
+    kv.gather_into(2, pool, rows, 1, true, &mut c);
+    assert_eq!(c, v, "surviving sharer unaffected by the donor's release");
+    kv.release(2);
+    assert!(kv.drained());
+}
+
 /// `KvStore::tokens` must stay O(1) in spirit: it reads a per-request
 /// index maintained by every mutation (append/wipe/restore/truncate/
 /// release), never scanning the store. This pins the layer-0-max
