@@ -1,0 +1,133 @@
+//! Event-core compression sweep: how many per-token stepper iterations
+//! the span core folds into each event-heap span on a fleet-scale
+//! workload — 1M requests across 32 TP8 replica sessions, arriving in
+//! bursts of 256 equal-length requests (the shape that dominates batch
+//! serving traces), decoded through the batched span core.
+//!
+//! The span core's `CoreStats` counts both quantities for the *same*
+//! run: `steps` is the number of costed decode rounds (identical, by the
+//! round-count contract, to the number of legacy `tick()` calls the
+//! per-token stepper would execute), `spans` is the number of event-heap
+//! spans that actually ran. Their ratio is the simulation-iteration
+//! compression the event core delivers.
+//!
+//! In-bench acceptance: the sweep must compress ≥ 100× (decode rounds
+//! per span), and the batched core must conserve tokens exactly.
+//!
+//! Writes `BENCH_simcore.json` at the repo root via
+//! [`failsafe::benchkit::BenchLog`]. Under the CI smoke budget
+//! (`FAILSAFE_BENCH_MS=25`) the sweep shrinks to 4 replicas × 4 bursts;
+//! the compression ratio is scale-independent (it is set by the
+//! per-burst output length), so the acceptance gate still holds.
+
+use failsafe::benchkit::{section, sink, Bench, BenchLog};
+use failsafe::engine::{AdvanceLimit, ServingBackend, SubmitOptions};
+use failsafe::model::llama3_70b;
+use failsafe::simulator::{CoreMode, OnlineMode, OnlineSession, OnlineSim, SystemConfig};
+
+const WORLD: usize = 8;
+const BURST: usize = 256;
+const OUTPUT_TOKENS: usize = 512;
+const PROMPT_TOKENS: usize = 64;
+/// Bursts are paced far enough apart that each drains before the next —
+/// simulated seconds are free, and it keeps the pending queue small.
+const BURST_GAP_S: f64 = 60.0;
+
+/// One replica session loaded with `requests` requests in bursts of
+/// [`BURST`], every burst arriving at one timestamp (one admission
+/// cohort, equal output lengths — the span core's best case and the
+/// common serving shape).
+fn session(mode: CoreMode, requests: usize, burst: usize, output: usize) -> OnlineSession {
+    let mut s = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, WORLD)
+        .with_model(llama3_70b())
+        .session();
+    s.set_core_mode(mode);
+    let prompt = vec![7u32; PROMPT_TOKENS];
+    for i in 0..requests {
+        let at = (i / burst) as f64 * BURST_GAP_S;
+        s.submit_with(&prompt, SubmitOptions::new(output).at(at)).expect("submit");
+    }
+    s
+}
+
+/// Drive a session to idle through its advance core; returns (decode
+/// rounds, spans) from its [`failsafe::simulator::CoreStats`].
+fn drain(s: &mut OnlineSession) -> (usize, usize) {
+    let mut events = Vec::new();
+    while !s.is_idle() {
+        s.advance_until(AdvanceLimit::unbounded(), &mut events).expect("advance");
+        events.clear();
+    }
+    let stats = s.core_stats();
+    (stats.steps, stats.spans)
+}
+
+fn main() {
+    let bench = Bench::default();
+    let mut log = BenchLog::new();
+
+    // Wall-clock of the three cores on one identical small workload
+    // (small enough that the per-token stepper finishes inside a sample).
+    section("simcore: stepper vs event core, identical small workload");
+    for mode in [CoreMode::Stepper, CoreMode::Exact, CoreMode::Batched] {
+        log.run(&bench, &format!("simcore: drain 48 reqs x 96 tokens ({mode:?} core)"), || {
+            let mut s = session(mode, 48, 16, 96);
+            sink(drain(&mut s));
+        });
+    }
+
+    // The headline sweep: 1M requests over 32 replica sessions through
+    // the batched span core. `steps` counts the decode rounds the
+    // per-token stepper would have executed for the same workload;
+    // `spans` counts the event-heap iterations that replaced them.
+    let full = bench.budget >= std::time::Duration::from_millis(500);
+    let (replicas, per_replica) =
+        if full { (32usize, 31_250usize) } else { (4usize, 4 * BURST) };
+    section(&format!(
+        "simcore: {replicas}-replica x {per_replica}-request sweep (batched core)"
+    ));
+    let t0 = std::time::Instant::now();
+    let (mut steps, mut spans, mut tokens) = (0usize, 0usize, 0u64);
+    for _ in 0..replicas {
+        let mut s = session(CoreMode::Batched, per_replica, BURST, OUTPUT_TOKENS);
+        let (st, sp) = drain(&mut s);
+        steps += st;
+        spans += sp;
+        tokens += s.metrics.output_tokens;
+    }
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    println!(
+        "  {} requests: {steps} stepper-equivalent rounds in {spans} spans ({:.1}x), {:.2} s",
+        replicas * per_replica,
+        steps as f64 / spans.max(1) as f64,
+        wall_ns / 1e9,
+    );
+
+    log.record_ns("simcore: sweep requests total", (replicas * per_replica) as f64);
+    log.record_ns("simcore: sweep stepper-equivalent decode rounds", steps as f64);
+    log.record_ns("simcore: sweep event-core spans", spans as f64);
+    log.record_ns("simcore: sweep wall time", wall_ns);
+    log.record_ratio("simcore: decode rounds per event-core span", steps as f64, spans as f64);
+
+    assert_eq!(
+        tokens,
+        (replicas * per_replica * OUTPUT_TOKENS) as u64,
+        "batched core must conserve output tokens"
+    );
+    assert!(
+        steps as f64 >= 100.0 * spans as f64,
+        "event core must compress >= 100x ({steps} rounds / {spans} spans)"
+    );
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_simcore.json").to_string()
+    });
+    match log.write_json("simcore", std::path::Path::new(&out)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => {
+            // A silent write failure would let CI validate a stale file.
+            eprintln!("\nfailed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -155,6 +155,26 @@ impl BenchLog {
         self.measurements.last().expect("just pushed")
     }
 
+    /// Record a dimensionless ratio `numer / denom` (e.g. stepper
+    /// iterations over event-core spans for the same workload) as a
+    /// result row: the ratio lands in `ns_per_iter` (the tracked value
+    /// column) with one "iteration", same shape as [`BenchLog::record_ns`]
+    /// rows, so ratio trajectories live in the same `BENCH_*.json` files.
+    pub fn record_ratio(&mut self, name: &str, numer: f64, denom: f64) -> &Measurement {
+        let ratio = if denom == 0.0 { 0.0 } else { numer / denom };
+        let m = Measurement {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ratio,
+            p50_ns: ratio,
+            p99_ns: ratio,
+            min_ns: ratio,
+        };
+        println!("{:<44} ratio {ratio:>12.1}×  ({numer:.0} / {denom:.0})", m.name);
+        self.measurements.push(m);
+        self.measurements.last().expect("just pushed")
+    }
+
     /// Serialize to JSON: `{"bench": ..., "results": [{name, iters,
     /// ns_per_iter, p50_ns, p99_ns, min_ns}, ...]}`. Hand-rolled — the
     /// offline build has no serde.

@@ -166,6 +166,107 @@ pub trait ServingBackend {
         }
         Ok(self.report())
     }
+
+    /// Upper bound on the number of `TokenEmitted` events a single
+    /// scheduler round can produce (the decode batch width). Span
+    /// drivers ([`crate::engine::replay()`], `Fleet::replay`) divide a
+    /// token deficit by this to bound how many rounds they may run
+    /// without consulting the timeline — `usize::MAX` (the default)
+    /// means "no bound known, advance one round at a time".
+    fn max_tokens_per_step(&self) -> usize {
+        usize::MAX
+    }
+
+    /// Advance until idle or until `limit` is hit, appending every event
+    /// produced to `sink`. The default implementation is the plain
+    /// step loop — one scheduler round per iteration, limits checked
+    /// *before* each round exactly where [`drive`] and the replay
+    /// drivers historically checked their triggers. Backends with an
+    /// event-span core ([`crate::simulator::OnlineSession`]) override
+    /// this to skip between boundary events; overrides must preserve
+    /// the observational contract (same events, same report, same
+    /// round count for the same limits).
+    fn advance_until(
+        &mut self,
+        limit: AdvanceLimit,
+        sink: &mut Vec<EngineEvent>,
+    ) -> Result<AdvanceOutcome> {
+        let mut out = AdvanceOutcome::default();
+        while !self.is_idle() {
+            if limit.reached(out.steps, out.tokens, self.now()) {
+                break;
+            }
+            let events = self.step()?;
+            out.steps += 1;
+            out.tokens += events
+                .iter()
+                .filter(|e| matches!(e, EngineEvent::TokenEmitted { .. }))
+                .count();
+            sink.extend(events);
+        }
+        Ok(out)
+    }
+}
+
+/// Stop condition for [`ServingBackend::advance_until`]: the backend
+/// runs until idle or until any one of the set bounds is reached.
+/// Bounds are checked *before* each scheduler round, so a round that
+/// would start at or past a bound never runs — identical to where the
+/// legacy drivers checked their fault/timeline triggers.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdvanceLimit {
+    /// Stop before running round `max_steps` (counting from this call).
+    pub max_steps: Option<usize>,
+    /// Stop once at least this many tokens have been emitted (checked
+    /// at round boundaries; a round may overshoot by up to the batch
+    /// width, exactly as the legacy per-step drivers did).
+    pub max_tokens: Option<usize>,
+    /// Stop once the backend clock has reached this time.
+    pub clock_at: Option<SimTime>,
+}
+
+impl AdvanceLimit {
+    /// No bound: run to idle.
+    pub fn unbounded() -> Self {
+        Self::default()
+    }
+
+    /// Bound by scheduler rounds.
+    pub fn steps(n: usize) -> Self {
+        Self { max_steps: Some(n), ..Self::default() }
+    }
+
+    /// Bound by emitted tokens.
+    pub fn tokens(n: usize) -> Self {
+        Self { max_tokens: Some(n), ..Self::default() }
+    }
+
+    /// Bound by the backend clock.
+    pub fn clock(at: SimTime) -> Self {
+        Self { clock_at: Some(at), ..Self::default() }
+    }
+
+    /// True once any set bound is met for the given progress.
+    pub fn reached(&self, steps: usize, tokens: usize, now: SimTime) -> bool {
+        self.max_steps.is_some_and(|n| steps >= n)
+            || self.max_tokens.is_some_and(|n| tokens >= n)
+            || self.clock_at.is_some_and(|t| now >= t)
+    }
+}
+
+/// What one [`ServingBackend::advance_until`] call did.
+#[derive(Debug, Clone, Default)]
+pub struct AdvanceOutcome {
+    /// Scheduler rounds executed (each equals one legacy `step()`).
+    pub steps: usize,
+    /// `TokenEmitted` events produced (materialized into the sink *or*
+    /// elided into `progressed` by a span core).
+    pub tokens: usize,
+    /// Per-request token counts the backend accounted for *without*
+    /// materializing `TokenEmitted` events (empty for the default step
+    /// loop). Span drivers that mirror per-request progress — e.g.
+    /// `Fleet`'s redirect eligibility tracking — must fold these in.
+    pub progressed: Vec<(RequestId, usize)>,
 }
 
 /// When a planned fault fires during [`drive`].

@@ -43,7 +43,10 @@ mod report;
 mod session;
 mod shard;
 
-pub use self::core::{drive, Engine, EngineEvent, FaultPlan, FaultTrigger, ServingBackend};
+pub use self::core::{
+    drive, AdvanceLimit, AdvanceOutcome, Engine, EngineEvent, FaultPlan, FaultTrigger,
+    ServingBackend,
+};
 pub use kv::{KvStore, PoolId, BLOCK_TOKENS};
 pub use replay::{replay, AppliedEvent, ReplayOutcome, ReplayPace, TimelineCursor};
 pub use report::{GenerationResult, ServeReport};

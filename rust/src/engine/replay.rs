@@ -28,7 +28,7 @@ use crate::cluster::{FaultTimeline, TimelineEvent, TimelineEventKind};
 use crate::recovery::RecoveryMethod;
 use crate::{RankId, SimTime};
 
-use super::core::{EngineEvent, ServingBackend};
+use super::core::{AdvanceLimit, ServingBackend};
 use super::report::ServeReport;
 
 /// How timeline timestamps are matched against the backend's progress.
@@ -41,6 +41,21 @@ pub enum ReplayPace {
     /// deterministic on *both* backends (the real engine's clock is wall
     /// time), so bit-exactness tests replay identically every run.
     Tokens { per_sec: f64 },
+}
+
+impl ReplayPace {
+    /// The emitted-token count at which an event timestamped `at` comes
+    /// due under this pace (`None` for clock pacing). Equivalent to the
+    /// historical `emitted as f64 >= at × per_sec` check: an integer
+    /// count reaches a real threshold exactly when it reaches its
+    /// ceiling. Span drivers use this to bound how far a backend may
+    /// run before the event must be consulted again.
+    pub fn token_threshold(&self, at: SimTime) -> Option<usize> {
+        match *self {
+            ReplayPace::Clock => None,
+            ReplayPace::Tokens { per_sec } => Some((at * per_sec).ceil().max(0.0) as usize),
+        }
+    }
 }
 
 /// One timeline event as it was actually applied.
@@ -114,6 +129,12 @@ impl TimelineCursor {
         self.pending.len()
     }
 
+    /// The next not-yet-fired event — the boundary span drivers must
+    /// not advance past without re-consulting [`TimelineCursor::fire_due`].
+    pub fn next_due(&self) -> Option<&TimelineEvent> {
+        self.pending.front()
+    }
+
     /// Fire every event that is due against `backend`, given that the
     /// backend has emitted `emitted` tokens so far. An idle (drained)
     /// backend advances neither clock nor token count, so on an idle
@@ -129,9 +150,9 @@ impl TimelineCursor {
     ) -> Result<Vec<AppliedEvent>> {
         let mut applied = Vec::new();
         while let Some(&ev) = self.pending.front() {
-            let due = match pace {
-                ReplayPace::Clock => backend.now() >= ev.at,
-                ReplayPace::Tokens { per_sec } => emitted as f64 >= ev.at * per_sec,
+            let due = match pace.token_threshold(ev.at) {
+                None => backend.now() >= ev.at,
+                Some(threshold) => emitted >= threshold,
             };
             if !due && !backend.is_idle() {
                 break;
@@ -217,17 +238,32 @@ pub fn replay<B: ServingBackend + ?Sized>(
     let mut cursor = TimelineCursor::new(timeline, backend.world())?;
     let mut applied = Vec::new();
     let mut emitted = 0usize;
+    let mut sink = Vec::new();
 
+    // Advance in spans between timeline events instead of stepping once
+    // per loop: the limit encodes exactly the due-check the historical
+    // per-step loop made before every `step()`, so backends with a span
+    // core cover the distance in O(boundaries) iterations while the
+    // event firing order (and, on the simulator, every bit of state)
+    // stays identical.
     loop {
         applied.extend(cursor.fire_due(backend, method, pace, emitted)?);
         if cursor.is_done() && backend.is_idle() {
             break;
         }
-        emitted += backend
-            .step()?
-            .iter()
-            .filter(|e| matches!(e, EngineEvent::TokenEmitted { .. }))
-            .count();
+        let limit = match cursor.next_due() {
+            None => AdvanceLimit::unbounded(),
+            Some(ev) => match pace.token_threshold(ev.at) {
+                // fire_due left this event pending, so its threshold is
+                // strictly ahead; max(1) guards progress regardless.
+                Some(threshold) => {
+                    AdvanceLimit::tokens(threshold.saturating_sub(emitted).max(1))
+                }
+                None => AdvanceLimit::clock(ev.at),
+            },
+        };
+        emitted += backend.advance_until(limit, &mut sink)?.tokens;
+        sink.clear();
     }
 
     Ok(ReplayOutcome {

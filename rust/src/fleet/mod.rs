@@ -560,6 +560,23 @@ impl Fleet {
         Ok(out)
     }
 
+    /// Fold span-elided token progress into the fleet's bookkeeping: a
+    /// span-core backend reports per-request token counts via
+    /// [`crate::engine::AdvanceOutcome::progressed`] instead of
+    /// materializing `TokenEmitted` events, and any progress disqualifies
+    /// the request from redirects exactly as a delivered token would.
+    fn note_progress(&mut self, replica: ReplicaId, local: RequestId, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let Some(&id) = self.local_map.get(&(replica, local)) else { return };
+        let t = &mut self.requests[id as usize];
+        t.emitted += n;
+        // The prompt copy exists only for redirects, which require zero
+        // progress — once a token lands it is dead weight.
+        t.prompt = Vec::new();
+    }
+
     /// Update per-request bookkeeping from one replica event; returns the
     /// fleet id for request-scoped events (stale ids from redirected-away
     /// requests resolve to `None`).

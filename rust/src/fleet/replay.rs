@@ -3,11 +3,21 @@
 //! overlaps healthy decode on the others — the fleet-level scenario family
 //! (replica loss, rolling maintenance across the fleet, hot-replica skew)
 //! a single serving group cannot express.
+//!
+//! Under token pacing the loop advances in *chunks*: before each chunk it
+//! computes, per replica with pending events, the largest number of fleet
+//! rounds its next event provably cannot come due inside (token deficit ÷
+//! the backend's max tokens per round), takes the minimum across
+//! replicas, and drives every replica that many rounds through
+//! [`crate::engine::ServingBackend::advance_until`]. Events therefore
+//! fire at the same round boundaries as the historical one-round
+//! lock-step loop; clock pacing keeps the one-round cadence (a round's
+//! time advance is unbounded, so no chunk is provably safe).
 
 use anyhow::Result;
 
 use crate::cluster::{FaultTimeline, TimelineEvent, TimelineEventKind};
-use crate::engine::{AppliedEvent, EngineEvent, ReplayPace, TimelineCursor};
+use crate::engine::{AdvanceLimit, AppliedEvent, EngineEvent, ReplayPace, TimelineCursor};
 use crate::recovery::RecoveryMethod;
 
 use super::{Fleet, FleetReport, ReplicaId};
@@ -87,10 +97,65 @@ impl Fleet {
             if events_done && self.is_idle() {
                 break;
             }
-            for ev in self.step()? {
-                if matches!(ev.event, EngineEvent::TokenEmitted { .. }) {
-                    emitted[ev.replica] += 1;
+
+            // Chunk horizon: the largest number of fleet rounds no
+            // replica's next event can come due strictly inside. A
+            // replica emits at most `max_tokens_per_step()` tokens per
+            // round, so after `⌈deficit/b⌉ − 1` rounds it is still short
+            // of its threshold; the minimum over replicas keeps every
+            // cursor honest. Replicas whose timelines are exhausted (or
+            // absent) put no bound on the horizon — with no event left
+            // anywhere the fleet free-runs to idle in one call.
+            let mut horizon = usize::MAX;
+            for replica in 0..n {
+                let Some(cursor) = cursors[replica].as_ref() else { continue };
+                let Some(ev) = cursor.next_due() else { continue };
+                let h = match pace.token_threshold(ev.at) {
+                    // Clock pacing: one round can advance the clock
+                    // arbitrarily far, so stay at the legacy cadence.
+                    None => 1,
+                    Some(threshold) => {
+                        let b = self.replicas[replica].backend.max_tokens_per_step().max(1);
+                        let deficit = threshold.saturating_sub(emitted[replica]).max(1);
+                        (deficit.div_euclid(b) + usize::from(deficit % b != 0)).max(1)
+                    }
+                };
+                horizon = horizon.min(h);
+            }
+
+            if horizon == 1 {
+                // Lock-step round, bit-identical to the historical loop.
+                for ev in self.step()? {
+                    if matches!(ev.event, EngineEvent::TokenEmitted { .. }) {
+                        emitted[ev.replica] += 1;
+                    }
                 }
+                continue;
+            }
+
+            // Span chunk: advance each non-idle replica up to `horizon`
+            // rounds (replica-id order, same as [`Fleet::step`]). A token
+            // is either materialized as a `TokenEmitted` in the sink
+            // (stepper backends) or folded into `progressed` (span
+            // cores), never both, so routing both through the
+            // bookkeeping counts each exactly once; `out.tokens` covers
+            // the union for the pace counter.
+            let mut sink = Vec::new();
+            for replica in 0..n {
+                if self.replicas[replica].backend.is_idle() {
+                    continue;
+                }
+                sink.clear();
+                let out = self.replicas[replica]
+                    .backend
+                    .advance_until(AdvanceLimit::steps(horizon), &mut sink)?;
+                for &(local, tokens) in out.progressed.iter() {
+                    self.note_progress(replica, local, tokens);
+                }
+                for event in sink.drain(..) {
+                    self.note_event(replica, &event);
+                }
+                emitted[replica] += out.tokens;
             }
         }
 

@@ -17,6 +17,10 @@
 //!   prefix    shared-prefix drill: serve a repeat-fanout trace with the
 //!             prefix trie off (cold) and on (shared) and compare prefill
 //!             work, peak resident KV, and trie hit rates
+//!   simcore   event-core drill: run one workload through the per-token
+//!             stepper, the bit-exact event core, and the batched span
+//!             core; print the rounds/spans/timing table and assert the
+//!             event core matches the stepper bit for bit
 //!   traces    print workload/availability trace statistics
 //!
 //! Examples:
@@ -35,20 +39,22 @@
 //!   failsafe fleet --backend engine --replicas 2 --world 3 --requests 6
 //!   failsafe recover --model llama --world 8 --requests 60 --ctx 8000
 //!   failsafe prefix --prefixes 4 --fanout 8 --prefix-tokens 2048
+//!   failsafe simcore --world 8 --requests 512 --burst 64 --output-tokens 64
 //!   failsafe traces --n 3000
 
 use failsafe::benchkit::section;
 use failsafe::cluster::{FaultTimeline, GpuSpec, Interconnect, TimelineEvent};
 use failsafe::config::{model_by_name, recovery_by_name, system_by_name, EngineConfig};
 use failsafe::engine::{
-    drive, replay, Engine, FaultPlan, FaultTrigger, ReplayPace, ServingBackend, SubmitOptions,
+    drive, replay, AdvanceLimit, Engine, FaultPlan, FaultTrigger, ReplayPace, ServingBackend,
+    SubmitOptions,
 };
 use failsafe::fleet::Fleet;
 use failsafe::kvcache::BackupStore;
 use failsafe::model::ModelSpec;
 use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use failsafe::sharding::{HeadAssignment, ShardPlan};
-use failsafe::simulator::{OnlineMode, OnlineSim, SystemConfig};
+use failsafe::simulator::{CoreMode, OnlineMode, OnlineSim, SystemConfig};
 use failsafe::traces::{
     cascade_then_heal, flaky_gpu, gcp_availability, mooncake_trace, openthoughts_trace,
     poisson_arrivals, repeat_fanout, rolling_maintenance, thermal_throttle, TraceStats,
@@ -80,6 +86,10 @@ subcommands:
             × --fanout continuations of a --prefix-tokens shared prompt)
             cold and with the prefix trie, and compare prefill work,
             peak resident KV, and trie hit rates
+  simcore   event-core drill: one workload (--requests in bursts of
+            --burst, --output-tokens each) through the per-token stepper,
+            the bit-exact event core, and the batched span core; prints
+            the rounds/spans/timing table and asserts bit-equality
   traces    print workload/availability trace statistics
 
 see docs/OPERATIONS.md for every flag and sample output, or the
@@ -95,6 +105,7 @@ fn main() -> anyhow::Result<()> {
         Some("fleet") => fleet_cmd(&args),
         Some("recover") => recover(&args),
         Some("prefix") => prefix_cmd(&args),
+        Some("simcore") => simcore_cmd(&args),
         Some("traces") => traces(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
@@ -858,6 +869,106 @@ fn prefix_cmd(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         warm.prefill_tokens <= cold.prefill_tokens && warm_kv <= cold_kv * 1.001,
         "sharing must never add prefill work or resident KV"
+    );
+    Ok(())
+}
+
+/// Event-core drill: run one burst workload through all three simulator
+/// cores (per-token stepper, bit-exact event core, batched span core),
+/// print the rounds/spans/timing table, and assert the event core's
+/// report is bit-identical to the stepper's. The same comparison runs —
+/// randomized, with faults — in `tests/simcore_tests.rs`; this drill is
+/// the operator-facing smoke for one deterministic workload.
+fn simcore_cmd(args: &Args) -> anyhow::Result<()> {
+    let model = model_arg(args)?;
+    let system = system_arg(args)?;
+    let world = strict_flag::<usize>(args, "world", 8);
+    let requests = strict_flag::<usize>(args, "requests", 512);
+    let burst = strict_flag::<usize>(args, "burst", 64);
+    let output_tokens = strict_flag::<usize>(args, "output-tokens", 64);
+    if world < 1 || requests < 1 || burst < 1 || output_tokens < 1 {
+        flag_error(format!(
+            "--world {world} / --requests {requests} / --burst {burst} / \
+             --output-tokens {output_tokens} must all be >= 1"
+        ));
+    }
+
+    section(&format!(
+        "event-core drill: {} TP{world} ({}), {requests} requests in bursts of {burst} × \
+         {output_tokens} tokens",
+        model.name, system.name
+    ));
+    let prompt = vec![7u32; 64];
+    type CoreRun =
+        (failsafe::engine::ServeReport, failsafe::simulator::CoreStats, std::time::Duration);
+    let run = |mode: CoreMode| -> anyhow::Result<CoreRun> {
+        let mut session = OnlineSim::new(system.clone(), OnlineMode::Decode, world)
+            .with_model(model.clone())
+            .session();
+        session.set_core_mode(mode);
+        for i in 0..requests {
+            session.submit_with(
+                &prompt,
+                SubmitOptions::new(output_tokens).at((i / burst) as f64 * 10.0),
+            )?;
+        }
+        let start = std::time::Instant::now();
+        let mut events = Vec::new();
+        while !session.is_idle() {
+            session.advance_until(AdvanceLimit::unbounded(), &mut events)?;
+            events.clear();
+        }
+        let wall = start.elapsed();
+        let stats = session.core_stats();
+        Ok((session.report(), stats, wall))
+    };
+
+    println!(
+        "{:<10} {:>14} {:>10} {:>10} {:>12}",
+        "core", "decode rounds", "spans", "ratio", "wall"
+    );
+    let mut reports = Vec::new();
+    for mode in [CoreMode::Stepper, CoreMode::Exact, CoreMode::Batched] {
+        let (report, stats, wall) = run(mode)?;
+        let ratio = if stats.spans == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.1}×", stats.iters_ratio())
+        };
+        println!(
+            "{:<10} {:>14} {:>10} {:>10} {:>12}",
+            format!("{mode:?}").to_lowercase(),
+            stats.steps,
+            stats.spans,
+            ratio,
+            format!("{wall:.1?}")
+        );
+        reports.push(report);
+    }
+
+    let (stepper, exact, batched) = (&reports[0], &reports[1], &reports[2]);
+    anyhow::ensure!(
+        stepper.wall_s.to_bits() == exact.wall_s.to_bits()
+            && stepper.steps == exact.steps
+            && stepper.decode_tokens == exact.decode_tokens
+            && stepper.prefill_tokens == exact.prefill_tokens
+            && stepper.outputs_owned() == exact.outputs_owned()
+            && stepper
+                .results
+                .iter()
+                .zip(exact.results.iter())
+                .all(|(a, b)| a.ttft_s.map(f64::to_bits) == b.ttft_s.map(f64::to_bits)),
+        "event core diverged from the per-token stepper"
+    );
+    anyhow::ensure!(
+        stepper.decode_tokens == batched.decode_tokens
+            && stepper.prefill_tokens == batched.prefill_tokens,
+        "batched core lost or invented tokens"
+    );
+    println!(
+        "exact core bit-identical to the stepper across {} requests ✓ \
+         (batched core conserves tokens)",
+        stepper.results.len()
     );
     Ok(())
 }

@@ -55,6 +55,22 @@ impl Histogram {
         }
     }
 
+    /// Record `n` identical samples of `v` in O(1) — the bulk path the
+    /// batched simulator core uses for a whole span's worth of
+    /// uniform-gap TBT samples.
+    pub fn record_n(&mut self, v: f64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let b = self.bucket(v);
+        self.counts[b] += n;
+        self.n += n;
+        self.sum += v * n as f64;
+        if v > self.max_seen {
+            self.max_seen = v;
+        }
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }

@@ -94,6 +94,43 @@ impl ServingMetrics {
         r.tokens_out += 1;
     }
 
+    /// Bulk path for the batched simulator core: `n` output tokens for
+    /// `id`, the first at `first_at`, the last at `last_at`, with the
+    /// intermediate emissions modeled as uniformly spaced. Aggregates
+    /// (counts, TTFT, mean TBT) match `n` calls of
+    /// [`ServingMetrics::on_token`]; individual TBT samples are the
+    /// uniform-gap approximation, so this path is *not* bit-exact with
+    /// per-token recording — the bit-exact span core calls `on_token`
+    /// per virtual step instead.
+    pub fn on_token_span(&mut self, id: RequestId, n: usize, first_at: SimTime, last_at: SimTime) {
+        if n == 0 {
+            return;
+        }
+        self.end = self.end.max(last_at);
+        self.output_tokens += n as u64;
+        let Some(r) = self.requests.get_mut(&id) else { return };
+        let mut gaps = n as u64;
+        let mut prev = match r.last_token {
+            None => {
+                r.first_token = Some(first_at);
+                self.ttft.record(first_at - r.arrival);
+                gaps -= 1;
+                first_at
+            }
+            Some(prev) => prev,
+        };
+        if gaps > 0 {
+            let gap = (last_at - prev) / gaps as f64;
+            self.tbt.record_n(gap, gaps);
+            if gap > r.max_tbt {
+                r.max_tbt = gap;
+            }
+            prev = last_at;
+        }
+        r.last_token = Some(prev.max(last_at));
+        r.tokens_out += n;
+    }
+
     /// Request finished: fold its max TBT into the CDF.
     pub fn on_finish(&mut self, id: RequestId) {
         if let Some(r) = self.requests.get(&id) {

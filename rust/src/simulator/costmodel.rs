@@ -293,6 +293,33 @@ impl StepCostModel {
         sum_layer_max + collectives + launches
     }
 
+    /// Closed-form time for `steps` consecutive decode steps of the same
+    /// batch (contexts growing by one per step): the trapezoid
+    /// `(dt_first + dt_last) / 2 × steps`. Exact when the per-step time
+    /// is affine in context over the span with a stable per-layer argmax
+    /// rank (the common steady-state regime); an approximation when the
+    /// bottleneck rank or roofline side flips mid-span — which is why
+    /// the batched simulator core that calls this is *not* part of the
+    /// bit-exact contract. `batch` is mutated during evaluation but
+    /// restored before returning.
+    pub fn decode_span_time(&self, batch: &mut [DecodeWork], steps: usize) -> f64 {
+        if batch.is_empty() || steps == 0 {
+            return 0.0;
+        }
+        let first = self.decode_step_time(batch);
+        if steps == 1 {
+            return first;
+        }
+        for w in batch.iter_mut() {
+            w.context += steps - 1;
+        }
+        let last = self.decode_step_time(batch);
+        for w in batch.iter_mut() {
+            w.context -= steps - 1;
+        }
+        (first + last) * 0.5 * steps as f64
+    }
+
     /// Per-rank KV bytes per cached token (TP share; DP share goes to the
     /// home rank) — used by simulators for capacity admission.
     pub fn kv_rates(&self) -> (Vec<f64>, f64) {

@@ -18,6 +18,12 @@
 //!   [`OnlineSim`], implementing the same
 //!   [`ServingBackend`](crate::engine::ServingBackend) trait as the real
 //!   engine, so traces/benches/examples run against either backend.
+//! * [`simcore`] — the event-span engine behind
+//!   [`ServingBackend::advance_until`](crate::engine::ServingBackend::advance_until):
+//!   skips between boundary events (arrivals, completions, injected
+//!   faults, driver limits) with batched token accounting in between,
+//!   selectable per session via [`CoreMode`] and differentially tested
+//!   bit-exact against the per-token stepper.
 //! * [`offline`] — steady-state throughput for the Fig 8 fault-trace
 //!   integration.
 
@@ -25,7 +31,9 @@ mod config;
 mod costmodel;
 pub mod offline;
 mod online;
+pub mod simcore;
 
 pub use config::{PrefillPolicy, SystemConfig};
 pub use costmodel::{DecodeWork, PrefillWork, StepCostModel};
 pub use online::{OnlineMode, OnlineOutcome, OnlineSession, OnlineSim, RecoveryEvent};
+pub use simcore::{CoreMode, CoreStats};

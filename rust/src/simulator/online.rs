@@ -18,7 +18,8 @@ use anyhow::Result;
 
 use crate::cluster::{GpuSpec, Interconnect, TransferClass};
 use crate::engine::{
-    EngineEvent, GenerationResult, ServeReport, ServingBackend, SubmitOptions, BLOCK_TOKENS,
+    AdvanceLimit, AdvanceOutcome, EngineEvent, GenerationResult, ServeReport, ServingBackend,
+    SubmitOptions, BLOCK_TOKENS,
 };
 use crate::kvcache::BackupStore;
 use crate::metrics::ServingMetrics;
@@ -31,6 +32,7 @@ use crate::traces::TraceRequest;
 use crate::{RankId, RequestId, SimTime};
 
 use super::costmodel::{DecodeWork, PrefillWork, StepCostModel};
+use super::simcore::{self, CoreMode, CoreStats};
 use super::{PrefillPolicy, SystemConfig};
 
 /// Which serving stage this instance simulates.
@@ -85,21 +87,21 @@ pub struct OnlineSim {
     pub prefix_sharing: bool,
 }
 
-struct Running {
-    id: RequestId,
-    home: RankId,
-    context: usize,
-    remaining_out: usize,
-    emitted: usize,
+pub(crate) struct Running {
+    pub(crate) id: RequestId,
+    pub(crate) home: RankId,
+    pub(crate) context: usize,
+    pub(crate) remaining_out: usize,
+    pub(crate) emitted: usize,
     /// Leading tokens whose KV bytes live in the shared prefix pool —
     /// this request's private charge is `context - shared`.
-    shared: usize,
+    pub(crate) shared: usize,
 }
 
 /// A request known to the session but not yet arrived.
-struct Pending {
+pub(crate) struct Pending {
     id: RequestId,
-    arrival: SimTime,
+    pub(crate) arrival: SimTime,
     input_tokens: usize,
     output_tokens: usize,
     priority: i32,
@@ -110,7 +112,7 @@ struct Pending {
 }
 
 /// A request that has arrived and waits for KV headroom.
-struct Waiting {
+pub(crate) struct Waiting {
     id: RequestId,
     context: usize,
     output: usize,
@@ -185,6 +187,8 @@ impl OnlineSim {
             peak_kv: 0.0,
             clock: 0.0,
             steps: 0,
+            core: CoreMode::Exact,
+            spans: 0,
             lost: 0,
             speed: vec![1.0; self.world],
             mitigation: None,
@@ -322,16 +326,31 @@ impl OnlineSim {
             arrivals.get(idx).map(|r| (r.arrival + 0.1, f))
         });
 
+        // Drive the span core between boundaries instead of per-token
+        // ticks: run free until the fault's due time (the clock limit is
+        // checked exactly where the legacy loop checked it — before each
+        // scheduler round), inject at that boundary, then run to idle.
         let mut recovery_latency = None;
-        while !session.session_idle() {
-            if let Some((at, f)) = pending_fault {
-                if session.clock >= at {
-                    recovery_latency =
-                        Some(session.fail_rank(f.failed_rank, f.method).expect("fault injection"));
-                    pending_fault = None;
-                }
+        let mut sink = Vec::new();
+        loop {
+            if session.session_idle() {
+                break;
             }
-            session.tick();
+            let limit = match pending_fault {
+                Some((at, f)) => {
+                    if session.clock >= at {
+                        recovery_latency = Some(
+                            session.fail_rank(f.failed_rank, f.method).expect("fault injection"),
+                        );
+                        pending_fault = None;
+                        continue;
+                    }
+                    AdvanceLimit::clock(at)
+                }
+                None => AdvanceLimit::unbounded(),
+            };
+            session.advance_until(limit, &mut sink).expect("advance");
+            sink.clear();
         }
 
         OnlineOutcome {
@@ -349,67 +368,73 @@ impl OnlineSim {
 /// batch — but every step is costed by the roofline model instead of a
 /// PJRT execution, so the clock is simulated time.
 pub struct OnlineSession {
-    model: crate::model::ModelSpec,
-    spec: GpuSpec,
-    ic: Interconnect,
+    pub(crate) model: crate::model::ModelSpec,
+    pub(crate) spec: GpuSpec,
+    pub(crate) ic: Interconnect,
     /// The healthy shard plan for the current world (what recovery
     /// planning and shrink/expand reason over).
-    plan: ShardPlan,
+    pub(crate) plan: ShardPlan,
     /// The plan the cost model actually serves on: `plan`, or its
     /// capacity-weighted mitigation ([`ShardPlan::reweight`]) while ranks
     /// are degraded and rebalancing is active.
-    active: ShardPlan,
-    cost: StepCostModel,
-    world: usize,
-    max_batch: usize,
+    pub(crate) active: ShardPlan,
+    pub(crate) cost: StepCostModel,
+    pub(crate) world: usize,
+    pub(crate) max_batch: usize,
     pub metrics: ServingMetrics,
-    router: DpRouter,
-    backup: BackupStore,
-    daemon: BackupDaemon,
+    pub(crate) router: DpRouter,
+    pub(crate) backup: BackupStore,
+    pub(crate) daemon: BackupDaemon,
     /// Submitted but not yet arrived, kept sorted by arrival (descending,
     /// so admission pops from the back).
-    pending: Vec<Pending>,
-    pending_sorted: bool,
+    pub(crate) pending: Vec<Pending>,
+    pub(crate) pending_sorted: bool,
     /// Arrived, waiting for KV headroom, admitted in scheduling order
     /// (priority desc, then deadline asc, then arrival order).
-    waiting: Vec<Waiting>,
-    running: Vec<Running>,
-    tp_rate: Vec<f64>,
-    dp_rate: f64,
-    kv_budget: Vec<usize>,
-    kv_used: Vec<f64>,
+    pub(crate) waiting: Vec<Waiting>,
+    pub(crate) running: Vec<Running>,
+    pub(crate) tp_rate: Vec<f64>,
+    pub(crate) dp_rate: f64,
+    pub(crate) kv_budget: Vec<usize>,
+    pub(crate) kv_used: Vec<f64>,
     /// Shared-prefix mirror (see [`crate::prefix`]): when enabled, warm
     /// prompt prefixes skip modeled prefill and resident chunk bytes are
     /// charged once into `kv_used` instead of once per sharer.
-    prefix_sharing: bool,
-    trie: PrefixTrie,
+    pub(crate) prefix_sharing: bool,
+    pub(crate) trie: PrefixTrie,
     /// High-water mark of total resident KV bytes (bench telemetry).
-    peak_kv: f64,
-    clock: SimTime,
-    steps: usize,
+    pub(crate) peak_kv: f64,
+    pub(crate) clock: SimTime,
+    pub(crate) steps: usize,
+    /// Which engine `advance_until` runs on (default [`CoreMode::Exact`];
+    /// `step()` always runs the legacy tick regardless).
+    pub(crate) core: CoreMode,
+    /// Event spans executed by the span engines (telemetry: one span
+    /// replaces up to `min remaining_out` per-token scheduler rounds).
+    pub(crate) spans: usize,
     /// GPUs currently out of the group — the budget `inject_rejoin`
     /// draws from.
-    lost: usize,
+    pub(crate) lost: usize,
     /// Per-rank effective speed factors (1.0 = healthy) — the injected
     /// ground truth the cost model divides by.
-    speed: Vec<f64>,
+    pub(crate) speed: Vec<f64>,
     /// Capacity weights the mitigation is currently built on (`None` =
     /// serving the healthy plan unweighted — the no-mitigation baseline).
-    mitigation: Option<Vec<f64>>,
+    pub(crate) mitigation: Option<Vec<f64>>,
     /// Whether `inject_slowdown` rebalances automatically (default true;
     /// turn off to measure the unmitigated straggler baseline).
-    auto_rebalance: bool,
+    pub(crate) auto_rebalance: bool,
     /// Set when the waiting line can never drain (cold-system livelock in
     /// the old batch loop) — the session reports idle.
-    stalled: bool,
-    next_id: RequestId,
-    order: Vec<RequestId>,
-    aborted: Vec<RequestId>,
-    recoveries: Vec<f64>,
-    events: Vec<EngineEvent>,
+    pub(crate) stalled: bool,
+    pub(crate) next_id: RequestId,
+    pub(crate) order: Vec<RequestId>,
+    pub(crate) aborted: Vec<RequestId>,
+    pub(crate) recoveries: Vec<f64>,
+    pub(crate) events: Vec<EngineEvent>,
     /// Reused decode-work scratch for the per-tick cost-model call (no
     /// per-step allocation at steady state).
-    work: Vec<DecodeWork>,
+    pub(crate) work: Vec<DecodeWork>,
 }
 
 impl OnlineSession {
@@ -444,7 +469,7 @@ impl OnlineSession {
         }
     }
 
-    fn next_arrival(&mut self) -> Option<SimTime> {
+    pub(crate) fn next_arrival(&mut self) -> Option<SimTime> {
         self.sort_pending();
         self.pending.last().map(|p| p.arrival)
     }
@@ -453,7 +478,7 @@ impl OnlineSession {
     /// arrivals left, and the waiting line is empty or marked stuck (the
     /// tick loop sets `stalled` when waiting requests can never fit an
     /// otherwise empty system).
-    fn session_idle(&self) -> bool {
+    pub(crate) fn session_idle(&self) -> bool {
         self.running.is_empty()
             && self.pending.is_empty()
             && (self.waiting.is_empty() || self.stalled)
@@ -462,9 +487,57 @@ impl OnlineSession {
     /// One simulated tick: admit due arrivals, admit waiting requests
     /// under the KV budget, then run one costed decode step (or
     /// fast-forward to the next arrival when the batch is empty).
-    fn tick(&mut self) -> Vec<EngineEvent> {
+    pub(crate) fn tick(&mut self) -> Vec<EngineEvent> {
         let mut events = std::mem::take(&mut self.events);
+        self.admit_phase();
 
+        if self.running.is_empty() {
+            self.idle_jump();
+            return events;
+        }
+
+        // One decode step (work list reuses the session scratch buffer).
+        self.work.clear();
+        self.work
+            .extend(self.running.iter().map(|r| DecodeWork { context: r.context, home: r.home }));
+        let dt = self.cost.decode_step_time(&self.work);
+        self.clock += dt;
+        self.steps += 1;
+        self.daemon.advance(dt, &mut self.backup);
+
+        let mut finished: Vec<usize> = Vec::new();
+        for i in 0..self.running.len() {
+            let (id, context) = (self.running[i].id, self.running[i].context);
+            self.metrics.on_token(id, self.clock);
+            self.daemon.produced(id, context, context + 1);
+            let r = &mut self.running[i];
+            r.context += 1;
+            r.remaining_out -= 1;
+            events.push(EngineEvent::TokenEmitted { id, token: 0, index: r.emitted });
+            r.emitted += 1;
+            let home = r.home;
+            for (ru, used) in self.kv_used.iter_mut().enumerate() {
+                *used += self.tp_rate[ru];
+            }
+            self.kv_used[home] += self.dp_rate;
+            if self.running[i].remaining_out == 0 {
+                finished.push(i);
+            }
+        }
+        self.peak_kv = self.peak_kv.max(self.kv_used.iter().sum());
+        for &i in finished.iter().rev() {
+            let r = self.running.swap_remove(i);
+            self.finish_running(r, &mut events);
+        }
+        events
+    }
+
+    /// The tick head shared by the stepper and the span engines: admit
+    /// due arrivals into the waiting line, then admit waiting requests
+    /// under the KV budget in scheduling order. Safe to run only at span
+    /// boundaries — mid-span the running set is frozen, `kv_used` only
+    /// grows, and no batch slot frees, so re-running it would be a no-op.
+    pub(crate) fn admit_phase(&mut self) {
         // Admit arrivals into the waiting line.
         self.sort_pending();
         while self.pending.last().map(|p| p.arrival <= self.clock).unwrap_or(false) {
@@ -509,68 +582,60 @@ impl OnlineSession {
             });
         }
         self.admit_waiting();
+    }
 
-        if self.running.is_empty() {
-            if let Some(at) = self.next_arrival() {
-                self.clock = self.clock.max(at);
-                // Livelock guard from the batch loop: a full waiting line
-                // that cannot fit an empty system will never drain.
-                if self.waiting.len() >= self.max_batch {
-                    self.stalled = true;
-                }
-            } else if !self.waiting.is_empty() {
-                // Cold system, nothing arriving: these can never fit.
+    /// The empty-batch branch of a scheduler round: fast-forward the
+    /// clock to the next arrival, or mark the waiting line stuck. Call
+    /// only when `running` is empty (after [`OnlineSession::admit_phase`]).
+    pub(crate) fn idle_jump(&mut self) {
+        if let Some(at) = self.next_arrival() {
+            self.clock = self.clock.max(at);
+            // Livelock guard from the batch loop: a full waiting line
+            // that cannot fit an empty system will never drain.
+            if self.waiting.len() >= self.max_batch {
                 self.stalled = true;
             }
-            return events;
+        } else if !self.waiting.is_empty() {
+            // Cold system, nothing arriving: these can never fit.
+            self.stalled = true;
         }
+    }
 
-        // One decode step (work list reuses the session scratch buffer).
-        self.work.clear();
-        self.work
-            .extend(self.running.iter().map(|r| DecodeWork { context: r.context, home: r.home }));
-        let dt = self.cost.decode_step_time(&self.work);
-        self.clock += dt;
-        self.steps += 1;
-        self.daemon.advance(dt, &mut self.backup);
+    /// Retire one finished (or span-completed) request that has already
+    /// been removed from `running`: metrics, lifecycle event, daemon and
+    /// backup bookkeeping, and the private-KV release.
+    pub(crate) fn finish_running(&mut self, r: Running, events: &mut Vec<EngineEvent>) {
+        self.metrics.on_finish(r.id);
+        events.push(EngineEvent::RequestFinished { id: r.id });
+        self.daemon.forget(r.id);
+        self.backup.release(r.id, self.model.kv_bytes_per_token());
+        // Only the private tail is released: shared prefix chunks stay
+        // resident in the trie's pool for the next sharer (the engine's
+        // trie keeps a refcount on them the same way).
+        let private = (r.context - r.shared) as f64;
+        for (ru, used) in self.kv_used.iter_mut().enumerate() {
+            *used = (*used - self.tp_rate[ru] * private).max(0.0);
+        }
+        self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * private).max(0.0);
+        self.router.complete(r.home, 0.0);
+    }
 
-        let mut finished: Vec<usize> = Vec::new();
-        for i in 0..self.running.len() {
-            let (id, context) = (self.running[i].id, self.running[i].context);
-            self.metrics.on_token(id, self.clock);
-            self.daemon.produced(id, context, context + 1);
-            let r = &mut self.running[i];
-            r.context += 1;
-            r.remaining_out -= 1;
-            events.push(EngineEvent::TokenEmitted { id, token: 0, index: r.emitted });
-            r.emitted += 1;
-            let home = r.home;
-            for (ru, used) in self.kv_used.iter_mut().enumerate() {
-                *used += self.tp_rate[ru];
-            }
-            self.kv_used[home] += self.dp_rate;
-            if self.running[i].remaining_out == 0 {
-                finished.push(i);
-            }
-        }
-        self.peak_kv = self.peak_kv.max(self.kv_used.iter().sum());
-        for &i in finished.iter().rev() {
-            let r = self.running.swap_remove(i);
-            self.metrics.on_finish(r.id);
-            events.push(EngineEvent::RequestFinished { id: r.id });
-            self.daemon.forget(r.id);
-            self.backup.release(r.id, self.model.kv_bytes_per_token());
-            // Only the private tail is released: shared prefix chunks stay
-            // resident in the trie's pool for the next sharer (the engine's
-            // trie keeps a refcount on them the same way).
-            let private = (r.context - r.shared) as f64;
-            for (ru, used) in self.kv_used.iter_mut().enumerate() {
-                *used = (*used - self.tp_rate[ru] * private).max(0.0);
-            }
-            self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * private).max(0.0);
-            self.router.complete(r.home, 0.0);
-        }
-        events
+    /// Select which engine [`ServingBackend::advance_until`] runs on:
+    /// the bit-exact span core (default), the closed-form batched core,
+    /// or the legacy per-token stepper (the differential baseline).
+    pub fn set_core_mode(&mut self, mode: CoreMode) {
+        self.core = mode;
+    }
+
+    /// The active [`CoreMode`].
+    pub fn core_mode(&self) -> CoreMode {
+        self.core
+    }
+
+    /// Span-engine telemetry: how many event spans replaced how many
+    /// scheduler rounds so far.
+    pub fn core_stats(&self) -> CoreStats {
+        CoreStats { spans: self.spans, steps: self.steps }
     }
 
     fn admit_waiting(&mut self) {
@@ -986,6 +1051,24 @@ impl ServingBackend for OnlineSession {
 
     fn step(&mut self) -> Result<Vec<EngineEvent>> {
         Ok(self.tick())
+    }
+
+    fn max_tokens_per_step(&self) -> usize {
+        // One decode round emits at most one token per running request.
+        self.max_batch
+    }
+
+    /// Span-engine override: dispatch on the session's [`CoreMode`].
+    /// [`CoreMode::Exact`] (the default) is observationally bit-exact
+    /// with the per-token stepper except that `TokenEmitted` events are
+    /// elided into [`AdvanceOutcome::progressed`]; see
+    /// [`crate::simulator::simcore`]'s module docs for the contract.
+    fn advance_until(
+        &mut self,
+        limit: AdvanceLimit,
+        sink: &mut Vec<EngineEvent>,
+    ) -> Result<AdvanceOutcome> {
+        Ok(simcore::advance(self, limit, sink))
     }
 
     fn abort(&mut self, id: RequestId) -> Result<()> {

@@ -1,0 +1,510 @@
+//! The event-span simulation core behind
+//! [`ServingBackend::advance_until`](crate::engine::ServingBackend::advance_until).
+//!
+//! The legacy driver loop runs one scheduler round per `step()` call:
+//! drain buffered events, admit due arrivals, sort and admit the
+//! waiting line, then cost one decode step. At fleet scale (1M requests
+//! × 32 replicas) the per-round head work — admission scans, pending /
+//! waiting sorts, per-token `TokenEmitted` materialization — dwarfs the
+//! cost-model arithmetic, and almost all of it is provably a no-op:
+//! between two *boundary events* nothing the head looks at can change.
+//!
+//! # The event queue
+//!
+//! The core advances in **spans**. A span runs from one boundary event
+//! to the next, where the boundary set is the head of a degenerate
+//! event heap with at most four entries:
+//!
+//! * **next completion** — the soonest request to exhaust its budget
+//!   finishes in exactly `min remaining_out` rounds (decode is
+//!   preempt-free and every running request emits one token per round);
+//! * **next arrival** — the front of the arrival queue (kept sorted by
+//!   the admit phase), due when the clock crosses it;
+//! * **driver limits** — the [`AdvanceLimit`] round / token / clock
+//!   bounds the caller (fault injector, timeline replayer, fleet
+//!   chunker) wants respected;
+//! * **injected events** — faults and rejoins land between
+//!   `advance_until` calls, so they are span boundaries by construction.
+//!
+//! Because each entry is the minimum of its own ordered source, the
+//! "heap" is a constant-size min — popped by comparing four candidates,
+//! never allocated.
+//!
+//! # Why skipping the head is safe mid-span
+//!
+//! Within a span the running set is frozen (the span is capped at the
+//! soonest completion), so no batch slot frees and `running.len()`
+//! never shrinks; per-rank `kv_used` only grows, so a request that did
+//! not fit at the span's first round cannot fit at a later one; no
+//! arrival comes due (the span breaks when the clock crosses one); and
+//! the router is only consulted at admission. Hence the head's
+//! admission scans and sorts would return identical results every
+//! round — the span engines run them once per span instead.
+//!
+//! # Equivalence contract
+//!
+//! [`CoreMode::Exact`] (the default) replays the legacy tick's
+//! floating-point operations per virtual round in identical order —
+//! same `decode_step_time` calls on the same batch, same clock and
+//! backup-daemon updates, same per-request metric/KV accounting, same
+//! completion handling — so clocks, reports, metrics, and lifecycle
+//! events are **bit-exact** against [`CoreMode::Stepper`]. The one
+//! observational difference: per-token [`EngineEvent::TokenEmitted`]
+//! events are elided; their counts are returned in
+//! [`AdvanceOutcome::tokens`] / [`AdvanceOutcome::progressed`] instead
+//! (lifecycle events — finishes, aborts, fault notices — still stream
+//! through the sink). `tests/simcore_tests.rs` enforces the contract
+//! with seeded randomized scenario programs through both engines.
+//!
+//! [`CoreMode::Batched`] additionally collapses each span's cost-model
+//! arithmetic to closed form (trapezoid span time, bulk metrics,
+//! O(1) histogram bulk-record) — the 100×+ iteration-saving mode
+//! `benches/simcore.rs` measures. It is deliberately **not** part of
+//! the bit-exact contract: span time is a trapezoid approximation, TBT
+//! samples are uniform-gap, and the backup daemon is modeled as keeping
+//! pace.
+
+use crate::engine::{AdvanceLimit, AdvanceOutcome, EngineEvent};
+
+use super::costmodel::DecodeWork;
+use super::online::OnlineSession;
+
+/// Which engine [`ServingBackend::advance_until`](crate::engine::ServingBackend::advance_until)
+/// runs on for an [`OnlineSession`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreMode {
+    /// Event-span core, bit-exact with the stepper (default): skips the
+    /// per-round scheduler head and `TokenEmitted` materialization,
+    /// keeps every floating-point operation of the legacy tick.
+    Exact,
+    /// Event-span core with closed-form span accounting: fastest, not
+    /// bit-exact (trapezoid span time, uniform-gap TBT samples).
+    Batched,
+    /// The legacy per-token step loop — the differential baseline.
+    Stepper,
+}
+
+impl std::str::FromStr for CoreMode {
+    type Err = String;
+
+    fn from_str(v: &str) -> Result<Self, Self::Err> {
+        match v {
+            "exact" => Ok(CoreMode::Exact),
+            "batched" => Ok(CoreMode::Batched),
+            "stepper" => Ok(CoreMode::Stepper),
+            other => {
+                Err(format!("unknown core mode {other:?} (expected exact | batched | stepper)"))
+            }
+        }
+    }
+}
+
+/// Span-engine telemetry: `steps` costed decode rounds were covered by
+/// `spans` span iterations (the stepper pays one full scheduler round
+/// per step; the span engines pay one head per span).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CoreStats {
+    /// Event spans executed by the span engines.
+    pub spans: usize,
+    /// Costed decode rounds (same meter as `ServeReport::steps`).
+    pub steps: usize,
+}
+
+impl CoreStats {
+    /// Stepper iterations per span iteration — the headline ratio
+    /// `BENCH_simcore.json` tracks (≥ 100× on the fleet sweep).
+    pub fn iters_ratio(&self) -> f64 {
+        if self.spans == 0 {
+            0.0
+        } else {
+            self.steps as f64 / self.spans as f64
+        }
+    }
+}
+
+/// Advance `s` until idle or until `limit` is hit, on the session's
+/// configured [`CoreMode`]. Events stream into `sink`.
+pub(crate) fn advance(
+    s: &mut OnlineSession,
+    limit: AdvanceLimit,
+    sink: &mut Vec<EngineEvent>,
+) -> AdvanceOutcome {
+    match s.core {
+        CoreMode::Stepper => stepper(s, limit, sink),
+        CoreMode::Exact => exact(s, limit, sink),
+        CoreMode::Batched => batched(s, limit, sink),
+    }
+}
+
+/// The legacy per-token loop: one full scheduler round per iteration —
+/// byte-for-byte what the default `advance_until` trait impl does, kept
+/// inline here because the session's override shadows the default.
+fn stepper(
+    s: &mut OnlineSession,
+    limit: AdvanceLimit,
+    sink: &mut Vec<EngineEvent>,
+) -> AdvanceOutcome {
+    let mut out = AdvanceOutcome::default();
+    loop {
+        if s.events.is_empty() && s.session_idle() {
+            break;
+        }
+        if limit.reached(out.steps, out.tokens, s.clock) {
+            break;
+        }
+        let events = s.tick();
+        out.steps += 1;
+        out.tokens +=
+            events.iter().filter(|e| matches!(e, EngineEvent::TokenEmitted { .. })).count();
+        sink.extend(events);
+    }
+    out
+}
+
+/// The bit-exact span engine. See the module docs for the invariant
+/// that makes skipping the per-round head safe; everything inside the
+/// virtual-step loop replicates the legacy tick's FP operations in
+/// identical order.
+fn exact(
+    s: &mut OnlineSession,
+    limit: AdvanceLimit,
+    sink: &mut Vec<EngineEvent>,
+) -> AdvanceOutcome {
+    let mut out = AdvanceOutcome::default();
+    loop {
+        if s.events.is_empty() && s.session_idle() {
+            break;
+        }
+        if limit.reached(out.steps, out.tokens, s.clock) {
+            break;
+        }
+        // Round head — the legacy tick prologue, run once per span.
+        sink.append(&mut s.events);
+        s.admit_phase();
+        if s.running.is_empty() {
+            // A head-only round: fast-forward (or stall) and recheck.
+            s.idle_jump();
+            out.steps += 1;
+            continue;
+        }
+
+        // Span boundaries: the soonest completion caps the span length;
+        // arrivals and driver limits break it early.
+        let span_cap = s.running.iter().map(|r| r.remaining_out).min().unwrap();
+        let next_arr = s.pending.last().map(|p| p.arrival); // sorted by the head
+        s.work.clear();
+        s.work.extend(s.running.iter().map(|r| DecodeWork { context: r.context, home: r.home }));
+        let mut did = 0usize;
+        loop {
+            // One virtual decode round.
+            let dt = s.cost.decode_step_time(&s.work);
+            s.clock += dt;
+            s.steps += 1;
+            s.daemon.advance(dt, &mut s.backup);
+            for i in 0..s.running.len() {
+                let (id, context) = (s.running[i].id, s.running[i].context);
+                s.metrics.on_token(id, s.clock);
+                s.daemon.produced(id, context, context + 1);
+                let r = &mut s.running[i];
+                r.context += 1;
+                r.remaining_out -= 1;
+                r.emitted += 1; // TokenEmitted elided; see module docs
+                let home = r.home;
+                for (ru, used) in s.kv_used.iter_mut().enumerate() {
+                    *used += s.tp_rate[ru];
+                }
+                s.kv_used[home] += s.dp_rate;
+                s.work[i].context += 1;
+            }
+            did += 1;
+            out.steps += 1;
+            out.tokens += s.running.len();
+            if did == span_cap {
+                break; // the soonest completion lands on this round
+            }
+            if limit.reached(out.steps, out.tokens, s.clock) {
+                break;
+            }
+            if next_arr.is_some_and(|a| a <= s.clock) {
+                break; // an arrival came due: the head must run again
+            }
+        }
+        // Span epilogue. Per-rank KV only grew, so the last round's sum
+        // is the span's peak — identical to the per-round max the
+        // stepper takes. Completions retire exactly as in the tick.
+        s.peak_kv = s.peak_kv.max(s.kv_used.iter().sum());
+        for r in &s.running {
+            out.progressed.push((r.id, did));
+        }
+        let finished: Vec<usize> = (0..s.running.len())
+            .filter(|&i| s.running[i].remaining_out == 0)
+            .collect();
+        for &i in finished.iter().rev() {
+            let r = s.running.swap_remove(i);
+            s.finish_running(r, sink);
+        }
+        s.spans += 1;
+    }
+    out
+}
+
+/// The closed-form span engine: same boundaries as [`exact`], but the
+/// whole span is accounted in O(batch) instead of O(batch × rounds) —
+/// trapezoid span time, bulk metrics, bulk KV growth. Clock-based
+/// boundaries (arrivals, `clock_at`) are *estimated* with the span's
+/// first-round time, so a span may overshoot them by the growth of the
+/// per-round time across the span; they are honored at the next head.
+fn batched(
+    s: &mut OnlineSession,
+    limit: AdvanceLimit,
+    sink: &mut Vec<EngineEvent>,
+) -> AdvanceOutcome {
+    let mut out = AdvanceOutcome::default();
+    loop {
+        if s.events.is_empty() && s.session_idle() {
+            break;
+        }
+        if limit.reached(out.steps, out.tokens, s.clock) {
+            break;
+        }
+        sink.append(&mut s.events);
+        s.admit_phase();
+        if s.running.is_empty() {
+            s.idle_jump();
+            out.steps += 1;
+            continue;
+        }
+
+        let b = s.running.len();
+        let span_cap = s.running.iter().map(|r| r.remaining_out).min().unwrap();
+        let next_arr = s.pending.last().map(|p| p.arrival);
+        s.work.clear();
+        s.work.extend(s.running.iter().map(|r| DecodeWork { context: r.context, home: r.home }));
+        let dt_first = s.cost.decode_step_time(&s.work);
+
+        // Bound the span by every pending boundary. Round/token bounds
+        // are exact; clock bounds are first-round-time estimates.
+        let mut span = span_cap;
+        if let Some(n) = limit.max_steps {
+            span = span.min(n - out.steps); // > 0: limit checked above
+        }
+        if let Some(n) = limit.max_tokens {
+            let deficit = n - out.tokens; // > 0: limit checked above
+            span = span.min(deficit.div_euclid(b) + usize::from(deficit % b != 0));
+        }
+        let est = |target: f64| -> usize {
+            if dt_first <= 0.0 {
+                return 1;
+            }
+            let k = ((target - s.clock) / dt_first).ceil();
+            if k >= 1.0 {
+                k as usize
+            } else {
+                1
+            }
+        };
+        if let Some(at) = limit.clock_at {
+            span = span.min(est(at));
+        }
+        if let Some(a) = next_arr {
+            span = span.min(est(a));
+        }
+        let span = span.max(1);
+
+        let t0 = s.clock;
+        let span_time = s.cost.decode_span_time(&mut s.work, span);
+        s.clock += span_time;
+        s.steps += span;
+        // The daemon is modeled as keeping pace over the span: one bulk
+        // advance, no per-token mirror queue (a deliberate divergence
+        // from the exact core — backup-lag studies use Exact).
+        s.daemon.advance(span_time, &mut s.backup);
+
+        let first_at = t0 + span_time / span as f64;
+        for i in 0..s.running.len() {
+            let (id, home) = (s.running[i].id, s.running[i].home);
+            s.metrics.on_token_span(id, span, first_at, s.clock);
+            let r = &mut s.running[i];
+            r.context += span;
+            r.remaining_out -= span;
+            r.emitted += span;
+            for (ru, used) in s.kv_used.iter_mut().enumerate() {
+                *used += s.tp_rate[ru] * span as f64;
+            }
+            s.kv_used[home] += s.dp_rate * span as f64;
+        }
+        out.steps += span;
+        out.tokens += span * b;
+        s.peak_kv = s.peak_kv.max(s.kv_used.iter().sum());
+        for r in &s.running {
+            out.progressed.push((r.id, span));
+        }
+        let finished: Vec<usize> = (0..s.running.len())
+            .filter(|&i| s.running[i].remaining_out == 0)
+            .collect();
+        for &i in finished.iter().rev() {
+            let r = s.running.swap_remove(i);
+            s.finish_running(r, sink);
+        }
+        s.spans += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{AdvanceLimit, ServingBackend, SubmitOptions};
+    use crate::model::llama3_70b;
+    use crate::simulator::{OnlineMode, OnlineSim, SystemConfig};
+
+    fn session(mode: CoreMode) -> OnlineSession {
+        let mut s = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b())
+            .session();
+        s.set_core_mode(mode);
+        s
+    }
+
+    fn submit_mixed(s: &mut OnlineSession) {
+        for i in 0..24 {
+            let prompt = vec![0u32; 512 + (i % 5) * 700];
+            let opts = SubmitOptions::new(4 + (i % 7)).at(i as f64 * 0.07);
+            s.submit_with(&prompt, opts).unwrap();
+        }
+    }
+
+    /// Field-wise exact comparison (`GenerationResult` has no `PartialEq`).
+    fn assert_reports_identical(a: &crate::engine::ServeReport, b: &crate::engine::ServeReport) {
+        assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits(), "wall_s");
+        assert_eq!(a.prefill_tokens, b.prefill_tokens);
+        assert_eq!(a.decode_tokens, b.decode_tokens);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.recoveries.len(), b.recoveries.len());
+        assert_eq!(a.results.len(), b.results.len());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.output_tokens.len(), y.output_tokens.len(), "req {}", x.id);
+            assert_eq!(
+                x.ttft_s.map(f64::to_bits),
+                y.ttft_s.map(f64::to_bits),
+                "ttft of req {}",
+                x.id
+            );
+            assert_eq!(x.max_tbt_s.to_bits(), y.max_tbt_s.to_bits(), "max_tbt of req {}", x.id);
+            assert_eq!(x.aborted, y.aborted);
+        }
+    }
+
+    /// The headline contract: the exact span engine is bit-identical to
+    /// the stepper on a mixed staggered workload.
+    #[test]
+    fn exact_core_is_bit_exact_vs_stepper() {
+        let run = |mode: CoreMode| {
+            let mut s = session(mode);
+            submit_mixed(&mut s);
+            let mut sink = Vec::new();
+            let out = s.advance_until(AdvanceLimit::unbounded(), &mut sink).unwrap();
+            (s, out, sink)
+        };
+        let (step_s, step_out, step_sink) = run(CoreMode::Stepper);
+        let (exact_s, exact_out, exact_sink) = run(CoreMode::Exact);
+        assert_reports_identical(&step_s.report(), &exact_s.report());
+        assert_eq!(step_s.now().to_bits(), exact_s.now().to_bits(), "clock");
+        assert_eq!(step_out.steps, exact_out.steps, "scheduler rounds");
+        assert_eq!(step_out.tokens, exact_out.tokens, "tokens");
+        // Lifecycle events match in order; the span engine elides only
+        // the per-token stream.
+        let lifecycle = |evs: &[EngineEvent]| -> Vec<EngineEvent> {
+            evs.iter()
+                .filter(|e| !matches!(e, EngineEvent::TokenEmitted { .. }))
+                .copied()
+                .collect()
+        };
+        assert_eq!(lifecycle(&step_sink), lifecycle(&exact_sink));
+        // The elided tokens are fully accounted in `progressed`.
+        let progressed: usize = exact_out.progressed.iter().map(|&(_, n)| n).sum();
+        assert_eq!(progressed, exact_out.tokens);
+        assert!(exact_s.core_stats().spans < step_out.steps, "spans must compress rounds");
+    }
+
+    /// Round budgets mean the same thing on both engines: advancing in
+    /// fixed-size round chunks visits bit-identical intermediate states.
+    #[test]
+    fn chunked_round_budgets_are_mode_independent() {
+        let mut a = session(CoreMode::Stepper);
+        let mut b = session(CoreMode::Exact);
+        submit_mixed(&mut a);
+        submit_mixed(&mut b);
+        let (mut sa, mut sb) = (Vec::new(), Vec::new());
+        for chunk in [1usize, 3, 7, 16, 64, 1000] {
+            let oa = a.advance_until(AdvanceLimit::steps(chunk), &mut sa).unwrap();
+            let ob = b.advance_until(AdvanceLimit::steps(chunk), &mut sb).unwrap();
+            assert_eq!(oa.steps, ob.steps, "chunk {chunk}");
+            assert_eq!(oa.tokens, ob.tokens, "chunk {chunk}");
+            assert_eq!(a.now().to_bits(), b.now().to_bits(), "clock after chunk {chunk}");
+        }
+        while !a.is_idle() || !b.is_idle() {
+            a.advance_until(AdvanceLimit::steps(32), &mut sa).unwrap();
+            b.advance_until(AdvanceLimit::steps(32), &mut sb).unwrap();
+        }
+        assert_reports_identical(&a.report(), &b.report());
+    }
+
+    /// Clock limits stop both engines at the same boundary.
+    #[test]
+    fn clock_limit_stops_at_same_round() {
+        let mut a = session(CoreMode::Stepper);
+        let mut b = session(CoreMode::Exact);
+        submit_mixed(&mut a);
+        submit_mixed(&mut b);
+        let (mut sa, mut sb) = (Vec::new(), Vec::new());
+        let oa = a.advance_until(AdvanceLimit::clock(0.5), &mut sa).unwrap();
+        let ob = b.advance_until(AdvanceLimit::clock(0.5), &mut sb).unwrap();
+        assert_eq!(oa.steps, ob.steps);
+        assert_eq!(a.now().to_bits(), b.now().to_bits());
+        assert!(a.now() >= 0.5 || a.is_idle());
+    }
+
+    /// The batched core conserves counts (every token, every request)
+    /// and compresses iterations, even though timing is approximate.
+    #[test]
+    fn batched_core_conserves_tokens_and_compresses() {
+        let mut exact = session(CoreMode::Exact);
+        let mut fast = session(CoreMode::Batched);
+        submit_mixed(&mut exact);
+        submit_mixed(&mut fast);
+        let mut sink = Vec::new();
+        let oe = exact.advance_until(AdvanceLimit::unbounded(), &mut sink).unwrap();
+        sink.clear();
+        let of = fast.advance_until(AdvanceLimit::unbounded(), &mut sink).unwrap();
+        assert_eq!(oe.tokens, of.tokens, "decode token conservation");
+        let (re, rf) = (exact.report(), fast.report());
+        assert_eq!(re.decode_tokens, rf.decode_tokens);
+        assert_eq!(re.prefill_tokens, rf.prefill_tokens);
+        assert_eq!(re.results.len(), rf.results.len());
+        for (x, y) in re.results.iter().zip(&rf.results) {
+            assert_eq!(x.output_tokens.len(), y.output_tokens.len(), "req {}", x.id);
+            assert!(y.ttft_s.is_some(), "req {} has a first token", y.id);
+        }
+        assert!(
+            fast.core_stats().spans <= exact.core_stats().spans,
+            "closed-form spans ({}) never exceed exact spans ({})",
+            fast.core_stats().spans,
+            exact.core_stats().spans
+        );
+        assert!(fast.core_stats().iters_ratio() > 1.0);
+        // Wall time stays in the same regime as the exact core.
+        let (we, wf) = (re.wall_s, rf.wall_s);
+        assert!(wf > 0.25 * we && wf < 4.0 * we, "batched wall {wf} vs exact {we}");
+    }
+
+    /// `CoreMode` parses from CLI strings, strictly.
+    #[test]
+    fn core_mode_parses_strictly() {
+        assert_eq!("exact".parse::<CoreMode>().unwrap(), CoreMode::Exact);
+        assert_eq!("batched".parse::<CoreMode>().unwrap(), CoreMode::Batched);
+        assert_eq!("stepper".parse::<CoreMode>().unwrap(), CoreMode::Stepper);
+        assert!("fast".parse::<CoreMode>().is_err());
+    }
+}

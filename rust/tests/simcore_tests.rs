@@ -1,0 +1,511 @@
+//! Differential test layer for the event-span simulator core
+//! (`simulator/simcore.rs`): randomized scenario programs — timed
+//! arrivals with priorities/deadlines/shared prefixes, mid-run
+//! Fail/Rejoin/SlowDown/Restore/Abort actions at round thresholds — run
+//! through both the legacy per-token stepper and the event core,
+//! asserting observationally identical `ServeReport`s, lifecycle event
+//! streams, and token counts (the same pattern as the paged-KV `RefKv`
+//! differential suite). Golden-value tests pin the canonical fault
+//! scenarios at fixed seeds against `tests/golden/simcore_golden.json`,
+//! checked against both cores; the fleet differential runs chunked
+//! `Fleet::replay` with stepper replicas vs event-core replicas.
+//!
+//! `FAILSAFE_FUZZ_CASES` bounds the randomized sweep (default 24).
+//! `FAILSAFE_WRITE_GOLDEN=1` regenerates the golden file from the
+//! current build; golden entries that are `null` (no toolchain when the
+//! suite was authored) are skipped, while the cross-core identity
+//! assertions always run.
+
+use std::collections::HashMap;
+
+use failsafe::benchkit::forall;
+use failsafe::engine::{
+    replay, AdvanceLimit, EngineEvent, ReplayPace, ServeReport, ServingBackend, SubmitOptions,
+};
+use failsafe::fleet::{Fleet, FleetReplayOutcome};
+use failsafe::model::llama3_70b;
+use failsafe::recovery::RecoveryMethod;
+use failsafe::simulator::{CoreMode, OnlineMode, OnlineSim, OnlineSession, SystemConfig};
+use failsafe::traces::{flaky_gpu, repeat_fanout, rolling_maintenance, thermal_throttle};
+use failsafe::util::Rng;
+
+fn fuzz_cases() -> u64 {
+    std::env::var("FAILSAFE_FUZZ_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(24)
+}
+
+fn session(world: usize, sharing: bool, mode: CoreMode) -> OnlineSession {
+    let mut s = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, world)
+        .with_model(llama3_70b())
+        .with_prefix_sharing(sharing)
+        .session();
+    s.set_core_mode(mode);
+    s
+}
+
+/// Field-wise bit-exact comparison (`ServeReport` has no `PartialEq`;
+/// floats compare by bit pattern — the contract is *identical* FP
+/// results, not approximately equal ones).
+fn assert_reports_identical(a: &ServeReport, b: &ServeReport, what: &str) {
+    assert_eq!(a.results.len(), b.results.len(), "{what}: result count");
+    for (x, y) in a.results.iter().zip(b.results.iter()) {
+        assert_eq!(x.id, y.id, "{what}: result order");
+        assert_eq!(x.output_tokens, y.output_tokens, "{what}: req {} output", x.id);
+        assert_eq!(
+            x.ttft_s.map(f64::to_bits),
+            y.ttft_s.map(f64::to_bits),
+            "{what}: req {} ttft",
+            x.id
+        );
+        assert_eq!(
+            x.max_tbt_s.to_bits(),
+            y.max_tbt_s.to_bits(),
+            "{what}: req {} max_tbt",
+            x.id
+        );
+        assert_eq!(x.aborted, y.aborted, "{what}: req {} aborted", x.id);
+    }
+    assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits(), "{what}: wall clock");
+    assert_eq!(a.prefill_tokens, b.prefill_tokens, "{what}: prefill tokens");
+    assert_eq!(a.decode_tokens, b.decode_tokens, "{what}: decode tokens");
+    assert_eq!(a.steps, b.steps, "{what}: costed decode rounds");
+    assert_eq!(a.recoveries.len(), b.recoveries.len(), "{what}: recovery count");
+    for (x, y) in a.recoveries.iter().zip(b.recoveries.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: recovery latency");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Randomized scenario programs
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum Action {
+    Fail(usize),
+    Rejoin,
+    SlowDown(usize, f64),
+    Restore(usize),
+    Abort(usize),
+}
+
+/// One randomized scenario: a submission schedule plus a script of
+/// `(advance this many scheduler rounds, then do X)` steps. Replayable
+/// bit-exactly from its seed through [`failsafe::util::Rng`] — no
+/// wall-clock anywhere.
+#[derive(Debug, Clone)]
+struct Program {
+    world: usize,
+    sharing: bool,
+    method: RecoveryMethod,
+    reqs: Vec<(Vec<u32>, SubmitOptions)>,
+    script: Vec<(usize, Action)>,
+}
+
+fn gen_program(rng: &mut Rng, with_faults: bool) -> Program {
+    let world = [4, 8][rng.pick(2)];
+    let sharing = rng.bool(0.5);
+    let method = [
+        RecoveryMethod::Full,
+        RecoveryMethod::Host,
+        RecoveryMethod::Recompute,
+        RecoveryMethod::Oracle,
+    ][rng.pick(4)];
+    // Shared prefix pool: prefix-sharing admission only triggers on
+    // exact token-prefix matches, so requests draw from common bases.
+    let bases: Vec<Vec<u32>> = (0..3u32)
+        .map(|b| {
+            let len = 256 + 128 * rng.range(0, 6);
+            (0..len as u32).map(|i| b * 100_000 + i).collect()
+        })
+        .collect();
+    let n = rng.range(8, 32);
+    let mut at = 0.0;
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n {
+        at += rng.range_f64(0.0, 0.08);
+        let mut prompt = if rng.bool(0.6) {
+            let b = &bases[rng.pick(bases.len())];
+            b[..rng.range(64, b.len() + 1)].to_vec()
+        } else {
+            vec![0xFFFF_0000 + i as u32; rng.range(32, 512)]
+        };
+        if rng.bool(0.5) {
+            let tail = rng.range(1, 64) as u32;
+            prompt.extend((0..tail).map(|j| 0xAAAA_0000 + i as u32 * 256 + j));
+        }
+        let mut opts = SubmitOptions::new(rng.range(2, 24)).at(at);
+        if rng.bool(0.3) {
+            opts = opts.priority(rng.range(0, 5) as i32 - 2);
+        }
+        if with_faults && rng.bool(0.3) {
+            opts = opts.deadline(at + rng.range_f64(0.5, 3.0));
+        }
+        reqs.push((prompt, opts));
+    }
+    let mut script = Vec::new();
+    if with_faults {
+        for _ in 0..rng.range(0, 6) {
+            let rounds = rng.range(1, 40);
+            let action = match rng.pick(5) {
+                0 => Action::Fail(rng.pick(world)),
+                1 => Action::Rejoin,
+                2 => Action::SlowDown(rng.pick(world), rng.range_f64(0.3, 0.9)),
+                3 => Action::Restore(rng.pick(world)),
+                _ => Action::Abort(rng.pick(n)),
+            };
+            script.push((rounds, action));
+        }
+    }
+    Program { world, sharing, method, reqs, script }
+}
+
+/// Run a program on one core; returns the report, the lifecycle event
+/// stream (everything but `TokenEmitted`, which the event core elides
+/// into `AdvanceOutcome.tokens`), and the total token count.
+fn run_program(p: &Program, mode: CoreMode) -> (ServeReport, Vec<EngineEvent>, usize) {
+    let mut s = session(p.world, p.sharing, mode);
+    let mut ids = Vec::with_capacity(p.reqs.len());
+    for (prompt, opts) in &p.reqs {
+        ids.push(s.submit_with(prompt, *opts).expect("submit"));
+    }
+    let mut events = Vec::new();
+    let mut tokens = 0usize;
+    for &(rounds, action) in &p.script {
+        tokens +=
+            s.advance_until(AdvanceLimit::steps(rounds), &mut events).expect("advance").tokens;
+        // Actions land between advance calls — the same boundary the
+        // legacy drivers injected at between `tick()`s. Rejected
+        // injections (world too small, rejoin budget spent, request
+        // already done) are no-ops on both cores alike.
+        let world = s.world();
+        match action {
+            Action::Fail(r) if world > 1 => {
+                let _ = s.inject_failure(r % world, p.method);
+            }
+            Action::Fail(_) => {}
+            Action::Rejoin => {
+                let _ = s.inject_rejoin(p.method);
+            }
+            Action::SlowDown(r, f) => {
+                let _ = s.inject_slowdown(r % world, f);
+            }
+            Action::Restore(r) => {
+                let _ = s.inject_slowdown(r % world, 1.0);
+            }
+            Action::Abort(i) => {
+                let _ = s.abort(ids[i % ids.len()]);
+            }
+        }
+    }
+    while !s.is_idle() {
+        tokens +=
+            s.advance_until(AdvanceLimit::unbounded(), &mut events).expect("advance").tokens;
+    }
+    let lifecycle = events
+        .into_iter()
+        .filter(|e| !matches!(e, EngineEvent::TokenEmitted { .. }))
+        .collect();
+    (s.report(), lifecycle, tokens)
+}
+
+fn differential_case(rng: &mut Rng) {
+    let p = gen_program(rng, true);
+    let (ra, ea, ta) = run_program(&p, CoreMode::Stepper);
+    let (rb, eb, tb) = run_program(&p, CoreMode::Exact);
+    assert_reports_identical(&ra, &rb, "stepper vs exact");
+    assert_eq!(ea, eb, "lifecycle event streams diverged");
+    assert_eq!(ta, tb, "token counts diverged");
+}
+
+#[test]
+fn exact_core_matches_stepper_on_random_programs() {
+    forall("simcore-differential", fuzz_cases(), 0xC0DE, differential_case);
+}
+
+// Regression seeds: scenarios the randomized sweep covered that pin
+// specific shapes — replayed as named cases on every run regardless of
+// the `FAILSAFE_FUZZ_CASES` bound.
+#[test]
+fn regression_seed_shared_prefix_burst() {
+    differential_case(&mut Rng::seed_from_u64(0xA11CE));
+}
+
+#[test]
+fn regression_seed_fail_then_rejoin_mid_decode() {
+    differential_case(&mut Rng::seed_from_u64(0xB0B_CAFE));
+}
+
+#[test]
+fn regression_seed_slowdown_restore_cycle() {
+    differential_case(&mut Rng::seed_from_u64(0xDEAD_10CC));
+}
+
+#[test]
+fn regression_seed_abort_under_pressure() {
+    differential_case(&mut Rng::seed_from_u64(0x5EED_0005));
+}
+
+#[test]
+fn regression_seed_deadline_heavy_mix() {
+    differential_case(&mut Rng::seed_from_u64(0xFACE_0FF1));
+}
+
+/// The batched core is *not* bit-exact (trapezoid span time, uniform-gap
+/// TBT), but it must conserve the observable outcome: every request
+/// finishes with its full budget, total tokens match, and first tokens
+/// exist. Fault-free programs so timing-dependent paths (deadlines,
+/// recovery stalls) don't change the outcome set between cores.
+#[test]
+fn batched_core_conserves_outcomes_on_random_programs() {
+    forall("simcore-batched-conservation", fuzz_cases().min(12), 0xBA7C, |rng| {
+        let p = gen_program(rng, false);
+        let (re, _, te) = run_program(&p, CoreMode::Exact);
+        let (rb, _, tb) = run_program(&p, CoreMode::Batched);
+        assert_eq!(te, tb, "token totals");
+        assert_eq!(re.results.len(), rb.results.len());
+        for (x, y) in re.results.iter().zip(rb.results.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.output_tokens.len(), y.output_tokens.len(), "req {} length", x.id);
+            assert_eq!(x.ttft_s.is_some(), y.ttft_s.is_some(), "req {} ttft", x.id);
+            assert_eq!(x.aborted, y.aborted, "req {} aborted", x.id);
+        }
+        assert_eq!(re.decode_tokens, rb.decode_tokens);
+        assert_eq!(re.prefill_tokens, rb.prefill_tokens);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Golden-value determinism
+// ---------------------------------------------------------------------------
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/simcore_golden.json")
+}
+
+/// Flat `{"key": <u64|null>, ...}` map, parsed by hand (no serde in the
+/// offline build). Unparseable lines are ignored.
+fn load_golden() -> HashMap<String, Option<u64>> {
+    let mut map = HashMap::new();
+    let Ok(text) = std::fs::read_to_string(golden_path()) else { return map };
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some(rest) = line.strip_prefix('"') else { continue };
+        let Some((key, val)) = rest.split_once("\":") else { continue };
+        let val = val.trim();
+        if val == "null" {
+            map.insert(key.to_string(), None);
+        } else if let Ok(v) = val.parse::<u64>() {
+            map.insert(key.to_string(), Some(v));
+        }
+    }
+    map
+}
+
+fn write_golden(values: &[(String, u64)]) {
+    let mut sorted: Vec<_> = values.to_vec();
+    sorted.sort();
+    let mut text = String::from("{\n");
+    for (i, (k, v)) in sorted.iter().enumerate() {
+        text.push_str(&format!(
+            "\"{k}\": {v}{}\n",
+            if i + 1 < sorted.len() { "," } else { "" }
+        ));
+    }
+    text.push_str("}\n");
+    std::fs::create_dir_all(golden_path().parent().unwrap()).expect("golden dir");
+    std::fs::write(golden_path(), text).expect("write golden");
+}
+
+/// Run one golden scenario on both cores: cross-core identity is always
+/// asserted; values are then checked against any non-null frozen entries.
+fn check_golden(scenario: &str, run: impl Fn(CoreMode) -> Vec<(String, u64)>) {
+    let a = run(CoreMode::Stepper);
+    let b = run(CoreMode::Exact);
+    assert_eq!(a, b, "{scenario}: stepper and event core disagree");
+    let golden = load_golden();
+    for (k, v) in &a {
+        if let Some(Some(frozen)) = golden.get(k) {
+            assert_eq!(v, frozen, "{k}: value drifted from frozen golden");
+        }
+    }
+}
+
+fn scenario_flaky_gpu(mode: CoreMode) -> Vec<(String, u64)> {
+    let mut s = session(4, false, mode);
+    let prompt = vec![3u32; 1024];
+    for i in 0..12 {
+        s.submit_with(&prompt, SubmitOptions::new(24).at(i as f64 * 0.01)).expect("submit");
+    }
+    let tl = flaky_gpu(2, 3, 0.1, 0.3, 0.4);
+    let out = replay(&mut s, &tl, RecoveryMethod::Full, ReplayPace::Tokens { per_sec: 40.0 })
+        .expect("replay");
+    vec![
+        ("flaky_gpu.goodput_tokens".into(), out.report.goodput_tokens() as u64),
+        ("flaky_gpu.tokens_emitted".into(), out.tokens_emitted as u64),
+        ("flaky_gpu.applied".into(), out.applied.len() as u64),
+        ("flaky_gpu.final_world".into(), out.final_world as u64),
+        ("flaky_gpu.wall_bits".into(), out.report.wall_s.to_bits()),
+        ("flaky_gpu.ttft_p50_bits".into(), s.metrics.ttft.quantile(0.5).to_bits()),
+        ("flaky_gpu.ttft_p99_bits".into(), s.metrics.ttft.quantile(0.99).to_bits()),
+    ]
+}
+
+fn scenario_rolling_maintenance(mode: CoreMode) -> Vec<(String, u64)> {
+    let mut s = session(8, false, mode);
+    let prompt = vec![5u32; 2048];
+    for i in 0..16 {
+        s.submit_with(&prompt, SubmitOptions::new(16).at(i as f64 * 0.01)).expect("submit");
+    }
+    let tl = rolling_maintenance(8, 0.1, 0.4, 0.2);
+    let out = replay(&mut s, &tl, RecoveryMethod::Full, ReplayPace::Tokens { per_sec: 100.0 })
+        .expect("replay");
+    vec![
+        ("rolling_maintenance.goodput_tokens".into(), out.report.goodput_tokens() as u64),
+        ("rolling_maintenance.tokens_emitted".into(), out.tokens_emitted as u64),
+        ("rolling_maintenance.applied".into(), out.applied.len() as u64),
+        ("rolling_maintenance.final_world".into(), out.final_world as u64),
+        ("rolling_maintenance.wall_bits".into(), out.report.wall_s.to_bits()),
+        ("rolling_maintenance.ttft_p50_bits".into(), s.metrics.ttft.quantile(0.5).to_bits()),
+        ("rolling_maintenance.ttft_p99_bits".into(), s.metrics.ttft.quantile(0.99).to_bits()),
+    ]
+}
+
+fn scenario_thermal_throttle(mode: CoreMode) -> Vec<(String, u64)> {
+    let mut s = session(8, false, mode);
+    let prompt = vec![9u32; 1536];
+    for i in 0..16 {
+        s.submit_with(&prompt, SubmitOptions::new(24).at(i as f64 * 0.02)).expect("submit");
+    }
+    let tl = thermal_throttle(3, 2, 0.05, 0.5, 0.2, 0.3);
+    let out = replay(&mut s, &tl, RecoveryMethod::Full, ReplayPace::Clock).expect("replay");
+    vec![
+        ("thermal_throttle.goodput_tokens".into(), out.report.goodput_tokens() as u64),
+        ("thermal_throttle.tokens_emitted".into(), out.tokens_emitted as u64),
+        ("thermal_throttle.applied".into(), out.applied.len() as u64),
+        ("thermal_throttle.wall_bits".into(), out.report.wall_s.to_bits()),
+        ("thermal_throttle.ttft_p50_bits".into(), s.metrics.ttft.quantile(0.5).to_bits()),
+        ("thermal_throttle.ttft_p99_bits".into(), s.metrics.ttft.quantile(0.99).to_bits()),
+    ]
+}
+
+/// Fleet makespan under prefix-sharing fan-out traffic with a flaky
+/// replica — golden across both cores through the chunked fleet replay.
+fn scenario_repeat_fanout_fleet(mode: CoreMode) -> Vec<(String, u64)> {
+    let fan = repeat_fanout(3, 6, 1024, 64, 29);
+    let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4)
+        .with_model(llama3_70b())
+        .with_prefix_sharing(true);
+    let mut fleet = Fleet::new();
+    fleet.enable_prefix_affinity();
+    for mut s in sim.sessions(3) {
+        s.set_core_mode(mode);
+        fleet.add_replica(Box::new(s));
+    }
+    for (i, r) in fan.iter().enumerate() {
+        fleet
+            .submit_with(&r.prompt, SubmitOptions::new(12).at(i as f64 * 0.05))
+            .expect("submit");
+    }
+    let timelines = vec![(0usize, flaky_gpu(1, 1, 0.5, 1.0, 1.0))];
+    let out = fleet
+        .replay(&timelines, RecoveryMethod::Full, ReplayPace::Tokens { per_sec: 50.0 })
+        .expect("fleet replay");
+    vec![
+        ("repeat_fanout.goodput_tokens".into(), out.report.goodput_tokens() as u64),
+        ("repeat_fanout.tokens_emitted".into(), out.tokens_emitted as u64),
+        ("repeat_fanout.redirected".into(), out.redirected as u64),
+        ("repeat_fanout.makespan_bits".into(), out.report.wall_s.to_bits()),
+        (
+            "repeat_fanout.final_worlds".into(),
+            out.final_worlds.iter().map(|&w| w as u64).sum(),
+        ),
+    ]
+}
+
+#[test]
+fn golden_flaky_gpu_pinned_on_both_cores() {
+    check_golden("flaky_gpu", scenario_flaky_gpu);
+}
+
+#[test]
+fn golden_rolling_maintenance_pinned_on_both_cores() {
+    check_golden("rolling_maintenance", scenario_rolling_maintenance);
+}
+
+#[test]
+fn golden_thermal_throttle_pinned_on_both_cores() {
+    check_golden("thermal_throttle", scenario_thermal_throttle);
+}
+
+#[test]
+fn golden_repeat_fanout_fleet_pinned_on_both_cores() {
+    check_golden("repeat_fanout", scenario_repeat_fanout_fleet);
+}
+
+/// `FAILSAFE_WRITE_GOLDEN=1 cargo test golden_regenerate` refreezes the
+/// golden file from the current build (event core, which the pinned
+/// tests prove identical to the stepper). A no-op otherwise.
+#[test]
+fn golden_regenerate_when_requested() {
+    if std::env::var("FAILSAFE_WRITE_GOLDEN").as_deref() != Ok("1") {
+        return;
+    }
+    let mut values = Vec::new();
+    values.extend(scenario_flaky_gpu(CoreMode::Exact));
+    values.extend(scenario_rolling_maintenance(CoreMode::Exact));
+    values.extend(scenario_thermal_throttle(CoreMode::Exact));
+    values.extend(scenario_repeat_fanout_fleet(CoreMode::Exact));
+    write_golden(&values);
+}
+
+// ---------------------------------------------------------------------------
+// Fleet differential: chunked replay, stepper vs event-core replicas
+// ---------------------------------------------------------------------------
+
+fn fleet_outcome_key(
+    out: &FleetReplayOutcome,
+) -> (Vec<(usize, usize, usize)>, usize, Vec<usize>, usize, u64, usize) {
+    (
+        out.applied.iter().map(|(r, a)| (*r, a.event.gpu, a.rank)).collect(),
+        out.tokens_emitted,
+        out.final_worlds.clone(),
+        out.redirected,
+        out.report.wall_s.to_bits(),
+        out.report.goodput_tokens(),
+    )
+}
+
+/// Two fleets with identical submissions and per-replica timelines, one
+/// on stepper replicas and one on event-core replicas, both through the
+/// chunked `Fleet::replay`: every observable — applied event sequence,
+/// redirect count, per-replica reports, makespan — must be identical.
+#[test]
+fn fleet_replay_identical_across_cores() {
+    let run = |mode: CoreMode| {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4)
+            .with_model(llama3_70b());
+        let mut fleet = Fleet::new();
+        for mut s in sim.sessions(3) {
+            s.set_core_mode(mode);
+            fleet.add_replica(Box::new(s));
+        }
+        let prompt = vec![1u32; 768];
+        for i in 0..20 {
+            fleet
+                .submit_with(&prompt, SubmitOptions::new(8 + i % 9).at(i as f64 * 0.05))
+                .expect("submit");
+        }
+        let timelines = vec![
+            (0usize, flaky_gpu(1, 1, 0.3, 0.5, 0.5)),
+            (2usize, rolling_maintenance(4, 0.2, 0.3, 0.4)),
+        ];
+        fleet
+            .replay(&timelines, RecoveryMethod::Full, ReplayPace::Tokens { per_sec: 40.0 })
+            .expect("fleet replay")
+    };
+    let a = run(CoreMode::Stepper);
+    let b = run(CoreMode::Exact);
+    assert_eq!(fleet_outcome_key(&a), fleet_outcome_key(&b), "fleet outcomes diverged");
+    for (i, (x, y)) in a.report.replicas.iter().zip(b.report.replicas.iter()).enumerate() {
+        assert_reports_identical(x, y, &format!("fleet replica {i}"));
+    }
+}
