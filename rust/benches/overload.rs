@@ -1,0 +1,174 @@
+//! Overload survival sweep: the priority-tiered storm of
+//! [`failsafe::traces::overload_storm`] at 1×/1.5×/2× the fleet's
+//! calibrated sustainable rate, served three ways — FCFS, SLO
+//! preemption + KV swap-out, and preemption + swap behind the admission
+//! gateway. For each (load, config) cell the sweep records the met-SLO
+//! fraction of the SLO tiers (output tokens of premium/standard requests
+//! that finished by their deadline, over the tokens those tiers asked
+//! for) and the run's simulated makespan; the swap-vs-recompute modeled
+//! costs ride along, since the swap tier only earns its keep while
+//! restoring over PCIe undercuts re-running prefill.
+//!
+//! Writes `BENCH_overload.json` at the repo root via
+//! [`failsafe::benchkit::BenchLog`]; the `2x fcfs vs +admission` rows are
+//! the overload-survival gap tracked across PRs.
+
+use failsafe::benchkit::{section, BenchLog};
+use failsafe::cluster::{GpuSpec, Interconnect};
+use failsafe::engine::{PreemptPolicy, SubmitOptions};
+use failsafe::fleet::{run_gated, AdmissionGateway, AdmissionPolicy, Fleet, FleetReport};
+use failsafe::model::llama3_70b;
+use failsafe::simulator::{OnlineMode, OnlineSim, StepCostModel, SystemConfig};
+use failsafe::traces::{
+    overload_storm, OverloadRequest, TIER_PREMIUM, TIER_STANDARD,
+};
+
+const WORLD: usize = 8;
+const REPLICAS: usize = 2;
+const REQUESTS: usize = 96;
+const MAX_BATCH: usize = 16;
+const SEED: u64 = 42;
+
+fn build_fleet(preempt: bool) -> Fleet {
+    let mut sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, WORLD)
+        .with_model(llama3_70b());
+    sim.max_batch = MAX_BATCH;
+    if preempt {
+        sim = sim.with_preemption(PreemptPolicy::default());
+    }
+    let mut fleet = Fleet::new();
+    for session in sim.sessions(REPLICAS) {
+        fleet.add_replica(Box::new(session));
+    }
+    fleet
+}
+
+/// Met-SLO tokens and miss count over the SLO tiers (premium +
+/// standard), charging requests the gateway never admitted as misses.
+fn slo_outcome(report: &FleetReport, storm: &[OverloadRequest]) -> (usize, usize) {
+    let mut met = 0usize;
+    let mut misses = 0usize;
+    for p in [TIER_PREMIUM, TIER_STANDARD] {
+        let offered = storm.iter().filter(|r| r.priority == p).count();
+        let mut reported = 0usize;
+        for r in report.results.iter().filter(|r| r.result.priority == p) {
+            reported += 1;
+            if !r.result.aborted && !r.result.deadline_missed() {
+                met += r.result.output_tokens.len();
+            } else {
+                misses += 1;
+            }
+        }
+        misses += offered.saturating_sub(reported);
+    }
+    (met, misses)
+}
+
+fn main() {
+    let mut log = BenchLog::new();
+    let m = llama3_70b();
+    section(&format!(
+        "overload sweep: {REPLICAS}x {} TP{WORLD}, {REQUESTS} requests, loads 1/1.5/2x",
+        m.name
+    ));
+
+    // Swap-out tier economics, independent of the runs: PCIe restore vs
+    // prefill recompute at representative context sizes.
+    let spec = GpuSpec::h100();
+    let ic = Interconnect::new(spec.clone());
+    let plan = SystemConfig::failsafe().plan(&m, WORLD);
+    let cost = StepCostModel::new(&plan, &spec, &ic);
+    for tokens in [512usize, 4096, 16384] {
+        let swap = cost.swap_time(tokens);
+        let recompute = cost.recompute_time(tokens);
+        log.record_ns(&format!("overload: modeled swap-in ({tokens} tok)"), swap * 1e9);
+        log.record_ns(&format!("overload: modeled recompute ({tokens} tok)"), recompute * 1e9);
+        assert!(
+            swap < recompute,
+            "swap-in of {tokens} tokens must be cheaper than recompute"
+        );
+    }
+
+    // Calibrate sustained capacity: the storm's lengths (rate- and
+    // SLO-independent), all at t=0, FCFS.
+    let shape = overload_storm(REQUESTS, 1.0, 1.0, SEED);
+    let mut cal = build_fleet(false);
+    for r in &shape {
+        cal.submit_with(&r.prompt(), SubmitOptions::new(r.output_tokens.max(1))).unwrap();
+    }
+    let cal_wall = cal.run_to_completion().unwrap().wall_s;
+    assert!(cal_wall > 0.0, "calibration run produced no makespan");
+    let base_rate = REQUESTS as f64 / cal_wall;
+    let slo = (cal_wall / 8.0).max(1.0);
+    println!("  calibrated: {REQUESTS} requests in {cal_wall:.1}s ({base_rate:.1} req/s)");
+
+    for load in [1.0f64, 1.5, 2.0] {
+        let storm = overload_storm(REQUESTS, base_rate * load, slo, SEED);
+        let slo_asked: usize = storm
+            .iter()
+            .filter(|r| r.priority > 0)
+            .map(|r| r.output_tokens.max(1))
+            .sum();
+
+        let mut fcfs = build_fleet(false);
+        for r in &storm {
+            fcfs.submit_with(&r.prompt(), r.options()).unwrap();
+        }
+        let fcfs_report = fcfs.run_to_completion().unwrap();
+
+        let mut pre = build_fleet(true);
+        for r in &storm {
+            pre.submit_with(&r.prompt(), r.options()).unwrap();
+        }
+        let pre_report = pre.run_to_completion().unwrap();
+
+        let mut adm_fleet = build_fleet(true);
+        let mut gate = AdmissionGateway::new(AdmissionPolicy::default());
+        let workload: Vec<(Vec<u32>, SubmitOptions)> =
+            storm.iter().map(|r| (r.prompt(), r.options())).collect();
+        let adm_report = run_gated(&mut adm_fleet, &mut gate, &workload).unwrap();
+
+        let mut met2 = (0, 0);
+        for (name, report) in
+            [("fcfs", &fcfs_report), ("preempt+swap", &pre_report), ("+admission", &adm_report)]
+        {
+            let (met, misses) = slo_outcome(report, &storm);
+            log.record_ratio(
+                &format!("overload: met-SLO fraction @{load}x ({name})"),
+                met as f64,
+                slo_asked as f64,
+            );
+            log.record_ns(
+                &format!("overload: simulated makespan @{load}x ({name})"),
+                report.wall_s * 1e9,
+            );
+            println!(
+                "  {load}x {name:<14} met-SLO {met:>6}/{slo_asked} tok | SLO misses {misses:>3} \
+                 | makespan {:>6.1}s",
+                report.wall_s
+            );
+            if name == "fcfs" {
+                met2 = (met, misses);
+            } else if name == "+admission" && load >= 2.0 {
+                let (fcfs_met, fcfs_misses) = met2;
+                assert!(
+                    met > fcfs_met || misses < fcfs_misses,
+                    "admission must beat FCFS on the SLO tiers at {load}x \
+                     (met {met} vs {fcfs_met}, misses {misses} vs {fcfs_misses})"
+                );
+            }
+        }
+    }
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_overload.json").to_string()
+    });
+    match log.write_json("overload", std::path::Path::new(&out)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => {
+            // A silent write failure would let CI validate a stale file.
+            eprintln!("\nfailed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -11,6 +11,10 @@ pub enum RequestState {
     Prefilling,
     /// Decoding (one token per step).
     Decoding,
+    /// Preempted by the SLO scheduler: device KV released to the host
+    /// swap tier (mirror authoritative); resumes into `Decoding` via
+    /// swap-in, never recompute.
+    Swapped,
     /// All output tokens produced.
     Finished,
     /// Cancelled by the client before finishing; resources released.

@@ -90,6 +90,14 @@ pub enum EngineEvent {
     GpuDegraded { rank: RankId, factor: f64 },
     /// A previously degraded `rank` returned to full speed.
     GpuRestored { rank: RankId },
+    /// Request `id` was preempted by the SLO scheduler: its device KV
+    /// swapped out to the host tier (the proactive-backup mirror became
+    /// authoritative). The request is paused, not aborted — it resumes
+    /// via swap-in, never recompute.
+    RequestPreempted { id: RequestId },
+    /// A previously preempted request resumed decoding after its KV was
+    /// swapped back in from the host tier.
+    RequestResumed { id: RequestId },
 }
 
 /// The serving surface shared by the real [`Engine`] and the simulator's
@@ -583,6 +591,59 @@ impl Engine {
         Ok(())
     }
 
+    /// Preempt a decoding request to the KV swap tier (SLO scheduling):
+    /// complete its host mirror, release its device blocks (blocks still
+    /// shared with another request only drop a reference — the sharer's
+    /// data stays put), and park it in [`RequestState::Swapped`]. Emits
+    /// [`EngineEvent::RequestPreempted`] on the next step. The request
+    /// resumes bit-exact via [`Engine::resume`] — and automatically when
+    /// the decode batch would otherwise go idle, so a preempted request
+    /// can never be stranded.
+    pub fn preempt(&mut self, id: RequestId) -> Result<()> {
+        let state = self
+            .session
+            .requests
+            .get(&id)
+            .with_context(|| format!("preempt: unknown request {id}"))?
+            .state;
+        anyhow::ensure!(
+            state == RequestState::Decoding,
+            "preempt: request {id} is {state:?}, not Decoding"
+        );
+        self.kv.swap_out(id);
+        self.session.requests.get_mut(&id).unwrap().state = RequestState::Swapped;
+        self.pending_events.push(EngineEvent::RequestPreempted { id });
+        Ok(())
+    }
+
+    /// Swap a preempted request back onto the device from its host
+    /// mirror — the restore path recovery uses, never recompute — and
+    /// return it to the decode batch. Emits
+    /// [`EngineEvent::RequestResumed`] on the next step.
+    pub fn resume(&mut self, id: RequestId) -> Result<()> {
+        let (state, home, context) = {
+            let r = self
+                .session
+                .requests
+                .get(&id)
+                .with_context(|| format!("resume: unknown request {id}"))?;
+            (r.state, r.home, r.context)
+        };
+        anyhow::ensure!(
+            state == RequestState::Swapped,
+            "resume: request {id} is {state:?}, not Swapped"
+        );
+        let restored = self.kv.swap_in(id, &self.placement, home);
+        anyhow::ensure!(
+            restored >= context,
+            "resume: mirror covers {restored} of {context} tokens for request {id} \
+             (swap_out always completes the mirror first)"
+        );
+        self.session.requests.get_mut(&id).unwrap().state = RequestState::Decoding;
+        self.pending_events.push(EngineEvent::RequestResumed { id });
+        Ok(())
+    }
+
     /// Output tokens emitted so far for `id` — the streaming accessor.
     pub fn output_so_far(&self, id: RequestId) -> Option<&[u32]> {
         self.session.requests.get(&id).map(|r| r.output_tokens.as_slice())
@@ -619,10 +680,25 @@ impl Engine {
                     self.session.steps += 1;
                 })
             } else {
-                if let Some(next) = self.session.next_arrival() {
-                    self.session.clock = self.session.clock.max(next);
+                // Decode went empty: swap back any preempted requests
+                // (scheduling order) — capacity has freed, and a parked
+                // request still owes tokens.
+                self.session.swapped_into(&mut sched);
+                if !sched.is_empty() {
+                    let mut res = Ok(());
+                    for i in 0..sched.len() {
+                        if let Err(e) = self.resume(sched[i]) {
+                            res = Err(e);
+                            break;
+                        }
+                    }
+                    res
+                } else {
+                    if let Some(next) = self.session.next_arrival() {
+                        self.session.clock = self.session.clock.max(next);
+                    }
+                    Ok(())
                 }
-                Ok(())
             }
         };
         self.ws.sched = sched;
@@ -1285,11 +1361,13 @@ impl Engine {
                         index,
                     });
                     if finished_now {
+                        self.session.mark_finished(chunk.request);
                         events.push(EngineEvent::RequestFinished { id: chunk.request });
                     }
                 } else {
                     self.session.requests.get_mut(&chunk.request).unwrap().state =
                         RequestState::Finished;
+                    self.session.mark_finished(chunk.request);
                     events.push(EngineEvent::RequestFinished { id: chunk.request });
                 }
             }
@@ -1336,6 +1414,7 @@ impl Engine {
                 self.session.note_token(id);
                 events.push(EngineEvent::TokenEmitted { id, token: tok, index });
                 if finished {
+                    self.session.mark_finished(id);
                     events.push(EngineEvent::RequestFinished { id });
                 }
                 produced += 1;

@@ -760,6 +760,53 @@ impl KvStore {
         restored
     }
 
+    /// Swap `req` out to the host tier: complete its backup mirror (so
+    /// the mirror is authoritative for every resident row), then release
+    /// its device blocks and mark every lane absent. Returns the token
+    /// count that was resident (0 for an unknown request).
+    ///
+    /// Refcount-safe by construction: [`Pool::free_blocks`] only
+    /// *decrements* a shared block's refcount — a block another request
+    /// still shares stays allocated and bit-identical for the sharer;
+    /// only this request's reference is dropped. The swapped request
+    /// itself resumes from the mirror via [`KvStore::swap_in`], so no
+    /// shared data is ever lost to a swap.
+    pub fn swap_out(&mut self, req: RequestId) -> usize {
+        let resident = self.tokens(req);
+        if resident == 0 && !self.reqs.contains_key(&req) {
+            return 0;
+        }
+        self.backup_request(req);
+        let KvStore { pools, reqs, .. } = self;
+        let Some(entry) = reqs.get_mut(&req) else { return 0 };
+        for run in entry.runs.iter_mut() {
+            pools[run.pool as usize].free_blocks(&mut run.blocks);
+            run.rows = 0;
+            for lane in run.lanes.iter_mut() {
+                *lane = ABSENT;
+            }
+        }
+        entry.tokens = 0;
+        resident
+    }
+
+    /// Swap `req` back onto the device from the host mirror — the exact
+    /// restore path recovery uses ([`KvStore::restore_request`]), so the
+    /// rows that come back are bit-identical to what [`KvStore::swap_out`]
+    /// released and no recompute is needed. Freshly allocated blocks are
+    /// private: a previously shared prefix re-deduplicates on the next
+    /// `switch_to_shared`, exactly as after a failure recovery. Returns
+    /// the restored token count.
+    pub fn swap_in(&mut self, req: RequestId, placement: &KvPlacement, home: RankId) -> usize {
+        self.restore_request(req, placement, home)
+    }
+
+    /// True when `req` lives only in the host tier: backup rows exist but
+    /// nothing is resident on device.
+    pub fn swapped_out(&self, req: RequestId) -> bool {
+        self.backed_tokens(req) > 0 && self.tokens(req) == 0
+    }
+
     /// Truncate every lane of `req` to `tokens` (used when restore lags
     /// behind the newest decode tokens — the lag gets recomputed). Tail
     /// blocks return to their pools.
@@ -1262,6 +1309,103 @@ mod tests {
         let placement = KvPlacement::new(&ShardPlan::failsafe(&m, 2));
         assert_eq!(kv.restore_request(1, &placement, 0), 2);
         assert_eq!(kv.gather(1, 0, &[0], 2, 1, false), vec![1.0, 7.0]);
+    }
+
+    // -------------------------------------------------------- swap tests --
+
+    /// swap_out → swap_in round-trips the device KV bit-exact through the
+    /// host mirror, across a block boundary and after an incremental
+    /// backup had already mirrored a prefix.
+    #[test]
+    fn swap_roundtrip_is_bit_exact() {
+        let m = small_real();
+        let placement = KvPlacement::new(&ShardPlan::failsafe(&m, 2));
+        let hd = 1;
+        let mut kv = KvStore::new(hd);
+        let pool = kv.pool_handle(0, &[0]);
+        let n = BLOCK_TOKENS + 5;
+        let rows: Vec<f32> = (0..n as i32).map(|i| i as f32).collect();
+        kv.append_group(1, pool, 0, n, &rows, &rows, hd);
+        kv.backup_request(1); // partial mirror: swap_out must complete it
+        kv.append_group(1, pool, 0, 3, &[90.0, 91.0, 92.0], &[90.0, 91.0, 92.0], hd);
+        let before_k = kv.gather(1, 0, &[0], n + 3, 1, false);
+        let before_v = kv.gather(1, 0, &[0], n + 3, 1, true);
+
+        assert_eq!(kv.swap_out(99), 0, "unknown request is a no-op");
+        assert_eq!(kv.swap_out(1), n + 3);
+        assert!(kv.swapped_out(1));
+        assert_eq!(kv.tokens(1), 0);
+        let p = &kv.pools[pool as usize];
+        assert_eq!(p.free.len() as u32, p.n_blocks, "every device block released");
+
+        assert_eq!(kv.swap_in(1, &placement, 0), n + 3);
+        assert!(!kv.swapped_out(1));
+        assert_eq!(kv.gather(1, 0, &[0], n + 3, 1, false), before_k);
+        assert_eq!(kv.gather(1, 0, &[0], n + 3, 1, true), before_v);
+    }
+
+    /// Swapping either side of a shared prefix never frees a block the
+    /// other request still references, and the swapped side resumes
+    /// bit-exact from the mirror.
+    #[test]
+    fn swap_never_disturbs_prefix_sharers() {
+        let m = small_real();
+        let placement = KvPlacement::new(&ShardPlan::failsafe(&m, 2));
+        let hd = 1;
+        let mut kv = KvStore::new(hd);
+        let pool = kv.pool_handle(0, &[0]);
+        let n = BLOCK_TOKENS * 2;
+        let rows: Vec<f32> = (0..n as i32).map(|i| i as f32).collect();
+        kv.append_group(1, pool, 0, n, &rows, &rows, hd);
+        let donor = kv.prefix_blocks(1, pool, 2).unwrap();
+        kv.adopt_blocks(2, pool, 0, &donor, n);
+        kv.append_group(2, pool, 0, 2, &[7.0, 8.0], &[7.0, 8.0], hd);
+        let s2 = kv.gather(2, 0, &[0], n + 2, 1, false);
+
+        // Swap the adopter: the two shared blocks only drop a reference.
+        assert_eq!(kv.swap_out(2), n + 2);
+        assert_eq!(kv.shared_block_count(), 0, "donor is sole holder again");
+        assert_eq!(kv.gather(1, 0, &[0], n, 1, false), rows, "donor rows intact");
+        assert_eq!(kv.swap_in(2, &placement, 0), n + 2);
+        assert_eq!(kv.gather(2, 0, &[0], n + 2, 1, false), s2, "adopter resumes bit-exact");
+
+        // Symmetric: swap the donor while the restored adopter is live.
+        kv.backup_request(1);
+        assert_eq!(kv.swap_out(1), n);
+        assert_eq!(kv.gather(2, 0, &[0], n + 2, 1, false), s2, "sharer unaffected");
+        assert_eq!(kv.swap_in(1, &placement, 0), n);
+        assert_eq!(kv.gather(1, 0, &[0], n, 1, false), rows);
+    }
+
+    /// A request swapped out before a reconfiguration swaps back in
+    /// bit-exact after `relayout()` regrouped the pools: the host mirror
+    /// rides `relayout_backup` into the new canonical layout.
+    #[test]
+    fn swap_composes_with_relayout_across_epochs() {
+        let m = small_real();
+        let plan = ShardPlan::failsafe(&m, 2);
+        let placement = KvPlacement::new(&plan);
+        let mut kv = KvStore::new(m.head_dim);
+        // Per-head appends (non-canonical grouping), like a pre-epoch
+        // request.
+        for layer in 0..m.n_layers {
+            for head in 0..m.n_kv_heads {
+                let data: Vec<f32> =
+                    (0..2 * m.head_dim).map(|i| (layer * 100 + head * 10 + i) as f32).collect();
+                kv.append(1, layer, head, head % 2, &data, &data);
+            }
+        }
+        let heads: Vec<usize> = (0..m.n_kv_heads).collect();
+        let before: Vec<Vec<f32>> = (0..m.n_layers)
+            .map(|l| kv.gather(1, l, &heads, 4, m.n_kv_heads, false))
+            .collect();
+        assert_eq!(kv.swap_out(1), 2);
+        kv.relayout(&plan); // reconfig epoch: pools regroup, mirror follows
+        assert!(kv.swapped_out(1), "still parked after relayout");
+        assert_eq!(kv.swap_in(1, &placement, 0), 2);
+        for (l, want) in before.iter().enumerate() {
+            assert_eq!(&kv.gather(1, l, &heads, 4, m.n_kv_heads, false), want, "layer {l}");
+        }
     }
 
     // ------------------------------------------------ prefix-sharing tests --

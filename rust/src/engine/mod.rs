@@ -50,5 +50,5 @@ pub use self::core::{
 pub use kv::{KvStore, PoolId, BLOCK_TOKENS};
 pub use replay::{replay, AppliedEvent, ReplayOutcome, ReplayPace, TimelineCursor};
 pub use report::{GenerationResult, ServeReport};
-pub use session::SubmitOptions;
+pub use session::{PreemptPolicy, SubmitOptions};
 pub use shard::RankShard;

@@ -7,7 +7,7 @@ use crate::RequestId;
 use super::session::Session;
 
 /// Completed (or aborted) generation of one request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct GenerationResult {
     pub id: RequestId,
     pub output_tokens: Vec<u32>,
@@ -19,6 +19,26 @@ pub struct GenerationResult {
     pub max_tbt_s: f64,
     /// True if the request was cancelled via `abort()` before finishing.
     pub aborted: bool,
+    /// SLO tier the request was submitted at (see
+    /// [`SubmitOptions::priority`](super::SubmitOptions); default 0).
+    pub priority: i32,
+    /// SLO deadline on the backend clock, if one was submitted.
+    pub deadline: Option<f64>,
+    /// Backend-clock time at which the final output token was produced;
+    /// `None` while in flight or if the request was aborted.
+    pub finished_at: Option<f64>,
+}
+
+impl GenerationResult {
+    /// Whether this request missed its SLO deadline: it carried one and
+    /// did not finish by it (aborted or still-unfinished requests with a
+    /// deadline count as misses; best-effort requests never do).
+    pub fn deadline_missed(&self) -> bool {
+        match self.deadline {
+            Some(d) => self.finished_at.map_or(true, |t| t > d),
+            None => false,
+        }
+    }
 }
 
 /// Report of a serve run, as returned by
@@ -34,7 +54,7 @@ pub struct GenerationResult {
 ///         output_tokens: vec![17, 4, 99],
 ///         ttft_s: Some(0.12),
 ///         max_tbt_s: 0.03,
-///         aborted: false,
+///         ..GenerationResult::default()
 ///     }],
 ///     decode_tokens: 3,
 ///     wall_s: 1.5,
@@ -90,6 +110,38 @@ impl ServeReport {
     pub fn goodput_tokens(&self) -> usize {
         self.results.iter().filter(|r| !r.aborted).map(|r| r.output_tokens.len()).sum()
     }
+
+    /// Distinct priority tiers seen in this report, highest first — the
+    /// display order of the overload drill's per-tier tables.
+    pub fn tiers(&self) -> Vec<i32> {
+        let mut tiers: Vec<i32> = self.results.iter().map(|r| r.priority).collect();
+        tiers.sort_unstable_by(|a, b| b.cmp(a));
+        tiers.dedup();
+        tiers
+    }
+
+    /// [`ServeReport::goodput_tokens`] restricted to one priority tier.
+    pub fn tier_goodput_tokens(&self, priority: i32) -> usize {
+        self.results
+            .iter()
+            .filter(|r| !r.aborted && r.priority == priority)
+            .map(|r| r.output_tokens.len())
+            .sum()
+    }
+
+    /// Requests in `priority`'s tier that missed their SLO deadline
+    /// (see [`GenerationResult::deadline_missed`]).
+    pub fn tier_deadline_misses(&self, priority: i32) -> usize {
+        self.results
+            .iter()
+            .filter(|r| r.priority == priority && r.deadline_missed())
+            .count()
+    }
+
+    /// Deadline misses across every tier.
+    pub fn deadline_misses(&self) -> usize {
+        self.results.iter().filter(|r| r.deadline_missed()).count()
+    }
 }
 
 /// Build a cumulative report over every request the session has seen, in
@@ -113,6 +165,9 @@ pub(super) fn assemble(session: &Session, recoveries: &[f64]) -> ServeReport {
             ttft_s: t.first_token,
             max_tbt_s: t.max_tbt,
             aborted: r.state == RequestState::Aborted,
+            priority: r.priority,
+            deadline: r.deadline,
+            finished_at: t.finished_at,
         });
     }
     report
@@ -130,16 +185,9 @@ mod tests {
                     id: 0,
                     output_tokens: vec![1, 2, 3],
                     ttft_s: Some(0.1),
-                    max_tbt_s: 0.0,
-                    aborted: false,
+                    ..GenerationResult::default()
                 },
-                GenerationResult {
-                    id: 1,
-                    output_tokens: vec![],
-                    ttft_s: None,
-                    max_tbt_s: 0.0,
-                    aborted: true,
-                },
+                GenerationResult { id: 1, aborted: true, ..GenerationResult::default() },
             ],
             ..ServeReport::default()
         };
@@ -148,5 +196,61 @@ mod tests {
         assert_eq!(report.result(1).unwrap().ttft_s, None);
         assert!(report.result(1).unwrap().aborted);
         assert!(report.result(2).is_none());
+    }
+
+    #[test]
+    fn tier_goodput_and_deadline_misses() {
+        let report = ServeReport {
+            results: vec![
+                // SLO tier 1: one on-time finish, one miss.
+                GenerationResult {
+                    id: 0,
+                    output_tokens: vec![0; 10],
+                    priority: 1,
+                    deadline: Some(5.0),
+                    finished_at: Some(4.0),
+                    ..GenerationResult::default()
+                },
+                GenerationResult {
+                    id: 1,
+                    output_tokens: vec![0; 10],
+                    priority: 1,
+                    deadline: Some(5.0),
+                    finished_at: Some(6.0),
+                    ..GenerationResult::default()
+                },
+                // Best-effort: aborted (shed), no deadline — never a miss,
+                // and its partial output is not goodput.
+                GenerationResult {
+                    id: 2,
+                    output_tokens: vec![0; 7],
+                    aborted: true,
+                    ..GenerationResult::default()
+                },
+                // Best-effort finished: goodput in tier 0.
+                GenerationResult {
+                    id: 3,
+                    output_tokens: vec![0; 3],
+                    finished_at: Some(9.0),
+                    ..GenerationResult::default()
+                },
+                // Deadline carried but never finished: a miss.
+                GenerationResult {
+                    id: 4,
+                    priority: 1,
+                    deadline: Some(2.0),
+                    aborted: true,
+                    ..GenerationResult::default()
+                },
+            ],
+            ..ServeReport::default()
+        };
+        assert_eq!(report.tiers(), vec![1, 0]);
+        assert_eq!(report.tier_goodput_tokens(1), 20);
+        assert_eq!(report.tier_goodput_tokens(0), 3);
+        assert_eq!(report.goodput_tokens(), 23);
+        assert_eq!(report.tier_deadline_misses(1), 2);
+        assert_eq!(report.tier_deadline_misses(0), 0);
+        assert_eq!(report.deadline_misses(), 2);
     }
 }

@@ -65,6 +65,81 @@ impl SubmitOptions {
     }
 }
 
+/// Skip-join MLFQ-style preemption policy (FastServe-inspired): decides
+/// when a waiting high-SLO request may evict a running lower-priority
+/// decode to the KV swap tier, and how starved requests are promoted so
+/// best-effort work is never parked forever.
+///
+/// The policy is pure arithmetic over `(priority, deadline, waited)` —
+/// both the real engine and the cost-model simulator call the same
+/// methods, so preemption decisions are identical across backends.
+///
+/// ```
+/// use failsafe::engine::PreemptPolicy;
+///
+/// let p = PreemptPolicy::default();
+/// // A request that has waited 2.5 promotion periods gains 2 levels.
+/// let eff = p.effective_priority(0, 2.5 * p.promote_after);
+/// assert_eq!(eff, 2);
+/// // Deadline risk: now + slack * est_remaining crosses the deadline.
+/// assert!(p.deadline_at_risk(9.0, Some(10.0), 1.0));
+/// assert!(!p.deadline_at_risk(0.0, Some(10.0), 1.0));
+/// assert!(!p.deadline_at_risk(9.0, None, 1.0)); // best-effort: never
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PreemptPolicy {
+    /// Seconds of waiting that earn one level of priority promotion
+    /// (starvation avoidance). `<= 0` disables promotion.
+    pub promote_after: f64,
+    /// Headroom multiplier on the remaining-service estimate when
+    /// judging deadline risk: a deadline is "at risk" once
+    /// `now + slack * est_remaining >= deadline`.
+    pub slack: f64,
+    /// Cap on preemptions per scheduler round (thrash guard).
+    pub max_preemptions_per_round: usize,
+}
+
+impl Default for PreemptPolicy {
+    fn default() -> Self {
+        PreemptPolicy { promote_after: 10.0, slack: 1.5, max_preemptions_per_round: 4 }
+    }
+}
+
+impl PreemptPolicy {
+    /// Effective priority of a request with base priority `base` that has
+    /// waited `waited` seconds for service: one promotion level per
+    /// [`PreemptPolicy::promote_after`] seconds waited.
+    pub fn effective_priority(&self, base: i32, waited: f64) -> i32 {
+        if self.promote_after <= 0.0 || waited <= 0.0 {
+            return base;
+        }
+        base.saturating_add((waited / self.promote_after) as i32)
+    }
+
+    /// Whether a deadline is at risk given the current clock and an
+    /// estimate of remaining service time. Requests without a deadline
+    /// (best-effort) are never at risk — they wait for capacity (with
+    /// promotion) but never trigger a preemption themselves.
+    pub fn deadline_at_risk(
+        &self,
+        now: SimTime,
+        deadline: Option<SimTime>,
+        est_remaining_s: f64,
+    ) -> bool {
+        match deadline {
+            Some(d) => now + self.slack * est_remaining_s >= d,
+            None => false,
+        }
+    }
+
+    /// Whether `candidate` (effective priority) may evict `victim`
+    /// (effective priority): strictly greater, so equal-tier requests
+    /// never thrash each other.
+    pub fn may_preempt(&self, candidate_eff: i32, victim_eff: i32) -> bool {
+        candidate_eff > victim_eff
+    }
+}
+
 /// Wall-clock timing of one request, relative to its admission.
 #[derive(Debug)]
 pub(super) struct Timing {
@@ -72,11 +147,21 @@ pub(super) struct Timing {
     pub first_token: Option<f64>,
     pub last_token: Option<f64>,
     pub max_tbt: f64,
+    /// Session-clock time at which the request finished (all tokens
+    /// produced) — `None` while in flight or aborted. Compared against
+    /// the submitted deadline for the report's deadline-miss accounting.
+    pub finished_at: Option<SimTime>,
 }
 
 impl Timing {
     fn new() -> Self {
-        Timing { submitted: Instant::now(), first_token: None, last_token: None, max_tbt: 0.0 }
+        Timing {
+            submitted: Instant::now(),
+            first_token: None,
+            last_token: None,
+            max_tbt: 0.0,
+            finished_at: None,
+        }
     }
 }
 
@@ -147,13 +232,23 @@ impl Session {
         self.in_sched_order_into(|r| r.state == RequestState::Decoding, out);
     }
 
+    /// Requests parked in the swap tier, in scheduling order, into the
+    /// caller's buffer — the resume order when capacity frees up.
+    pub fn swapped_into(&self, out: &mut Vec<RequestId>) {
+        self.in_sched_order_into(|r| r.state == RequestState::Swapped, out);
+    }
+
     /// True when no request can ever make progress again without a new
-    /// submission: nothing queued, prefilling, or decoding.
+    /// submission: nothing queued, prefilling, decoding, or swapped out
+    /// (a swapped request still owes tokens — it resumes via swap-in).
     pub fn is_idle(&self) -> bool {
         !self.requests.values().any(|r| {
             matches!(
                 r.state,
-                RequestState::Queued | RequestState::Prefilling | RequestState::Decoding
+                RequestState::Queued
+                    | RequestState::Prefilling
+                    | RequestState::Decoding
+                    | RequestState::Swapped
             )
         })
     }
@@ -167,6 +262,14 @@ impl Session {
             Some(prev) => t.max_tbt = t.max_tbt.max(now - prev),
         }
         t.last_token = Some(now);
+    }
+
+    /// Stamp `id`'s completion on the session clock (called where
+    /// `RequestFinished` is emitted) for deadline-miss accounting.
+    pub fn mark_finished(&mut self, id: RequestId) {
+        if let Some(t) = self.timing.get_mut(&id) {
+            t.finished_at = Some(self.clock);
+        }
     }
 
     /// Re-base `id`'s timing to now — called when a request with a future
@@ -249,6 +352,32 @@ mod tests {
         let b = s.create(vec![1], SubmitOptions::new(1).deadline(3.0));
         let c = s.create(vec![1], SubmitOptions::new(1));
         assert_eq!(s.ready_to_admit(0.0), vec![b, a, c]);
+    }
+
+    #[test]
+    fn swapped_blocks_idle_and_resumes_in_sched_order() {
+        let mut s = Session::new();
+        let a = s.create(vec![1], SubmitOptions::new(1));
+        let b = s.create(vec![1], SubmitOptions::new(1).priority(2));
+        s.requests.get_mut(&a).unwrap().state = RequestState::Swapped;
+        s.requests.get_mut(&b).unwrap().state = RequestState::Swapped;
+        assert!(!s.is_idle(), "swapped requests still owe tokens");
+        let mut out = Vec::new();
+        s.swapped_into(&mut out);
+        assert_eq!(out, vec![b, a], "higher priority resumes first");
+    }
+
+    #[test]
+    fn promotion_is_monotone_and_bounded_by_wait() {
+        let p = PreemptPolicy { promote_after: 5.0, ..PreemptPolicy::default() };
+        assert_eq!(p.effective_priority(1, 0.0), 1);
+        assert_eq!(p.effective_priority(1, 4.9), 1);
+        assert_eq!(p.effective_priority(1, 5.0), 2);
+        assert_eq!(p.effective_priority(1, 14.9), 3);
+        let off = PreemptPolicy { promote_after: 0.0, ..PreemptPolicy::default() };
+        assert_eq!(off.effective_priority(0, 1e9), 0, "promotion disabled");
+        assert!(p.may_preempt(2, 1));
+        assert!(!p.may_preempt(2, 2), "equal tiers never thrash");
     }
 
     #[test]

@@ -1,0 +1,447 @@
+//! Fleet admission control: a deadline-aware gateway queue in front of
+//! the router.
+//!
+//! Preemption and KV swap-out triage work the fleet has *already
+//! accepted*. Under sustained overload that is not enough — admitting
+//! everything just moves the pile-up inside the replicas, where every
+//! queued prompt holds booked capacity and stretches every deadline.
+//! The gateway moves the triage to the front door:
+//!
+//! * while fleet load is below [`AdmissionPolicy::target_load`], work is
+//!   **admitted** straight through [`Fleet::submit_with`];
+//! * above it, SLO-tier requests (positive priority or a deadline) are
+//!   **queued** at the gateway — unbooked, costing nothing — and
+//!   re-admitted highest-priority-first as capacity returns (completions,
+//!   failed GPUs rejoining, drained replicas resuming);
+//! * best-effort traffic is the shock absorber: it queues only behind
+//!   spare room and is **shed** outright once load passes
+//!   `target_load × shed_load_factor` or the queue fills — and a full
+//!   queue evicts a parked best-effort request before refusing an SLO
+//!   one;
+//! * queued requests whose deadline has already passed are dropped at
+//!   [`AdmissionGateway::pump`] time rather than admitted to burn
+//!   capacity on a guaranteed miss.
+//!
+//! The gateway deliberately owns no clock and no replicas — it reads
+//! load from the [`super::FleetRouter`]'s booked token-units and time from the
+//! replica clocks, so it composes with failures, rejoins, draining and
+//! prefix affinity without special cases.
+
+use anyhow::Result;
+
+use super::{Fleet, FleetReport, FleetRequestId};
+use crate::engine::SubmitOptions;
+use crate::SimTime;
+
+/// Front-door thresholds. Defaults suit the simulated drills; real
+/// deployments tune `target_load` to the backlog (in prompt+budget token
+/// units per effective rank) they are willing to carry inside replicas.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    /// Booked token-units per health-effective rank above which new work
+    /// queues at the gateway instead of entering a replica.
+    pub target_load: f64,
+    /// Gateway queue capacity; beyond it, best-effort is shed and SLO
+    /// work evicts parked best-effort entries.
+    pub queue_capacity: usize,
+    /// Load multiple of `target_load` beyond which best-effort work is
+    /// shed immediately instead of queued.
+    pub shed_load_factor: f64,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy { target_load: 2048.0, queue_capacity: 256, shed_load_factor: 3.0 }
+    }
+}
+
+/// Outcome of [`AdmissionGateway::offer`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Submitted to a replica; the fleet id tracks it to completion.
+    Admitted(FleetRequestId),
+    /// Parked at the gateway; a later [`AdmissionGateway::pump`] admits
+    /// it when capacity returns (or drops it if its deadline expires).
+    Queued,
+    /// Refused: shed best-effort, or SLO work against a full queue with
+    /// nothing evictable.
+    Rejected,
+}
+
+/// Gateway counters (monotone over the gateway's lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Requests admitted straight through at offer time.
+    pub admitted: usize,
+    /// Requests that were parked in the queue at least once.
+    pub queued: usize,
+    /// Queued requests later admitted by [`AdmissionGateway::pump`].
+    pub readmitted: usize,
+    /// Requests refused or evicted (load shedding).
+    pub shed: usize,
+    /// Queued requests dropped because their deadline passed before
+    /// capacity returned.
+    pub expired: usize,
+}
+
+/// A request parked at the gateway.
+struct Gated {
+    prompt: Vec<u32>,
+    opts: SubmitOptions,
+    /// Arrival order within the gateway — the final FIFO tie-break.
+    seq: u64,
+}
+
+impl Gated {
+    fn best_effort(&self) -> bool {
+        best_effort(&self.opts)
+    }
+}
+
+fn best_effort(opts: &SubmitOptions) -> bool {
+    opts.priority <= 0 && opts.deadline.is_none()
+}
+
+/// Fleet load in booked token-units per health-effective rank, over the
+/// placeable (non-draining) replicas. Infinite when nothing is placeable
+/// — every threshold then reads "over".
+pub fn fleet_load(fleet: &Fleet) -> f64 {
+    let mut booked = 0.0;
+    let mut capacity = 0.0;
+    for r in 0..fleet.len() {
+        if fleet.is_draining(r) {
+            continue;
+        }
+        booked += fleet.router().pending(r);
+        capacity += fleet.replica_capacity(r);
+    }
+    if capacity > 0.0 {
+        booked / capacity
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// The fleet's front-of-house clock: the furthest replica clock (the
+/// replicas share one time axis — see [`FleetReport::wall_s`]).
+pub fn fleet_now(fleet: &Fleet) -> SimTime {
+    (0..fleet.len()).map(|r| fleet.clock(r)).fold(0.0, f64::max)
+}
+
+/// Deadline-aware admission gateway. See the module docs for the policy.
+pub struct AdmissionGateway {
+    policy: AdmissionPolicy,
+    queue: Vec<Gated>,
+    seq: u64,
+    stats: AdmissionStats,
+}
+
+impl AdmissionGateway {
+    pub fn new(policy: AdmissionPolicy) -> AdmissionGateway {
+        assert!(policy.target_load >= 0.0 && policy.target_load.is_finite());
+        assert!(policy.shed_load_factor >= 1.0);
+        AdmissionGateway { policy, queue: Vec::new(), seq: 0, stats: AdmissionStats::default() }
+    }
+
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    pub fn stats(&self) -> AdmissionStats {
+        self.stats
+    }
+
+    /// Requests currently parked at the gateway.
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Offer one request to the fleet: admit under target load, queue
+    /// SLO work over it, shed best-effort once saturated. Never errors on
+    /// load — only a backend rejection of an admissible request surfaces.
+    pub fn offer(
+        &mut self,
+        fleet: &mut Fleet,
+        prompt: &[u32],
+        opts: SubmitOptions,
+    ) -> Result<AdmissionDecision> {
+        let load = fleet_load(fleet);
+        if load < self.policy.target_load {
+            // Under target: straight through. `submit_with` only fails
+            // when nothing is placeable (all draining) — park the
+            // request instead of surfacing that transient.
+            if let Ok(id) = fleet.submit_with(prompt, opts) {
+                self.stats.admitted += 1;
+                return Ok(AdmissionDecision::Admitted(id));
+            }
+        }
+        if best_effort(&opts) {
+            let saturated = load >= self.policy.target_load * self.policy.shed_load_factor;
+            if saturated || self.queue.len() >= self.policy.queue_capacity {
+                self.stats.shed += 1;
+                return Ok(AdmissionDecision::Rejected);
+            }
+        } else if self.queue.len() >= self.policy.queue_capacity {
+            // SLO work against a full queue: evict a parked best-effort
+            // request (the newest — it has waited least) to make room.
+            match self.queue.iter().rposition(Gated::best_effort) {
+                Some(i) => {
+                    self.queue.remove(i);
+                    self.stats.shed += 1;
+                }
+                None => {
+                    self.stats.shed += 1;
+                    return Ok(AdmissionDecision::Rejected);
+                }
+            }
+        }
+        self.queue.push(Gated { prompt: prompt.to_vec(), opts, seq: self.seq });
+        self.seq += 1;
+        self.stats.queued += 1;
+        Ok(AdmissionDecision::Queued)
+    }
+
+    /// Re-admit parked work as capacity allows: drop entries whose
+    /// deadline already passed, then admit highest-priority /
+    /// earliest-deadline first while load stays under target. Returns how
+    /// many requests were admitted. Call after every fleet step (and
+    /// after rejoins/resumes) — re-admission is how queued SLO work rides
+    /// returning capacity.
+    pub fn pump(&mut self, fleet: &mut Fleet) -> Result<usize> {
+        if self.queue.is_empty() {
+            return Ok(0);
+        }
+        let now = fleet_now(fleet);
+        let before = self.queue.len();
+        self.queue.retain(|g| g.opts.deadline.map_or(true, |d| d >= now));
+        self.stats.expired += before - self.queue.len();
+        // Priority desc, deadline asc (None last), gateway FIFO — the
+        // same order the in-replica scheduler uses, so the gateway never
+        // inverts the triage the scheduler would apply.
+        self.queue.sort_by(|a, b| {
+            b.opts
+                .priority
+                .cmp(&a.opts.priority)
+                .then(
+                    a.opts
+                        .deadline
+                        .unwrap_or(f64::INFINITY)
+                        .total_cmp(&b.opts.deadline.unwrap_or(f64::INFINITY)),
+                )
+                .then(a.seq.cmp(&b.seq))
+        });
+        let mut admitted = 0usize;
+        while !self.queue.is_empty() && fleet_load(fleet) < self.policy.target_load {
+            let g = self.queue.remove(0);
+            match fleet.submit_with(&g.prompt, g.opts) {
+                Ok(_) => {
+                    self.stats.readmitted += 1;
+                    admitted += 1;
+                }
+                Err(_) => {
+                    // Nothing placeable right now (all draining): put it
+                    // back and wait for the next pump.
+                    self.queue.insert(0, g);
+                    break;
+                }
+            }
+        }
+        Ok(admitted)
+    }
+
+    /// Drop everything still parked (end-of-run cleanup when capacity
+    /// will never return). Returns how many were shed.
+    pub fn shed_remaining(&mut self) -> usize {
+        let n = self.queue.len();
+        self.stats.shed += n;
+        self.queue.clear();
+        n
+    }
+}
+
+/// Drive an arrival-ordered workload through a gated fleet to
+/// completion: each request is offered when the fleet clock reaches its
+/// arrival, the gateway is pumped after every step, and parked work
+/// drains once arrivals stop. Requests still parked when the fleet can
+/// no longer place anything are shed.
+pub fn run_gated(
+    fleet: &mut Fleet,
+    gateway: &mut AdmissionGateway,
+    workload: &[(Vec<u32>, SubmitOptions)],
+) -> Result<FleetReport> {
+    let mut order: Vec<usize> = (0..workload.len()).collect();
+    order.sort_by(|&a, &b| workload[a].1.arrival.total_cmp(&workload[b].1.arrival));
+    for i in order {
+        let (prompt, opts) = &workload[i];
+        while fleet_now(fleet) < opts.arrival && !fleet.is_idle() {
+            fleet.step()?;
+            gateway.pump(fleet)?;
+        }
+        gateway.pump(fleet)?;
+        gateway.offer(fleet, prompt, *opts)?;
+    }
+    loop {
+        let admitted = gateway.pump(fleet)?;
+        if fleet.is_idle() {
+            if gateway.queue_len() == 0 {
+                break;
+            }
+            if admitted == 0 {
+                // Idle fleet that admits nothing: capacity is gone for
+                // good (all draining) — the parked work will never run.
+                gateway.shed_remaining();
+                break;
+            }
+        } else {
+            fleet.step()?;
+        }
+    }
+    Ok(fleet.report())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{OnlineMode, OnlineSim, SystemConfig};
+
+    fn fleet(replicas: usize) -> Fleet {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4);
+        let mut fleet = Fleet::new();
+        for session in sim.sessions(replicas) {
+            fleet.add_replica(Box::new(session));
+        }
+        fleet
+    }
+
+    fn slo(max_new: usize, priority: i32, deadline: SimTime) -> SubmitOptions {
+        SubmitOptions::new(max_new).priority(priority).deadline(deadline)
+    }
+
+    #[test]
+    fn admits_under_target_queues_over_and_drains() {
+        let mut fleet = fleet(2);
+        // Tiny target: the first request saturates the gate.
+        let policy = AdmissionPolicy { target_load: 1.0, ..AdmissionPolicy::default() };
+        let mut gate = AdmissionGateway::new(policy);
+        let first = gate.offer(&mut fleet, &[1u32; 64], SubmitOptions::new(4)).unwrap();
+        assert!(matches!(first, AdmissionDecision::Admitted(_)));
+        let second = gate.offer(&mut fleet, &[1u32; 64], slo(4, 2, 1e6)).unwrap();
+        assert_eq!(second, AdmissionDecision::Queued);
+        assert_eq!(gate.queue_len(), 1);
+        // Stepping the fleet to completion frees booked load; pump
+        // re-admits the parked SLO request and the fleet finishes it too.
+        while !fleet.is_idle() || gate.queue_len() > 0 {
+            gate.pump(&mut fleet).unwrap();
+            if !fleet.is_idle() {
+                fleet.step().unwrap();
+            }
+        }
+        let report = fleet.report();
+        assert_eq!(report.results.len(), 2);
+        assert!(report.results.iter().all(|r| !r.result.aborted));
+        assert_eq!(report.goodput_tokens(), 8);
+        let stats = gate.stats();
+        assert_eq!((stats.admitted, stats.queued, stats.readmitted), (1, 1, 1));
+        assert_eq!((stats.shed, stats.expired), (0, 0));
+    }
+
+    #[test]
+    fn best_effort_sheds_first_and_slo_evicts_parked_best_effort() {
+        let mut fleet = fleet(1);
+        // target 0: everything takes the over-load path from the start;
+        // a tiny queue forces the eviction logic.
+        let policy =
+            AdmissionPolicy { target_load: 0.0, queue_capacity: 1, shed_load_factor: 1.0 };
+        let mut gate = AdmissionGateway::new(policy);
+        // Best-effort at/over target × shed factor: shed outright.
+        let be = gate.offer(&mut fleet, &[1u32; 16], SubmitOptions::new(2)).unwrap();
+        assert_eq!(be, AdmissionDecision::Rejected);
+        assert_eq!(gate.stats().shed, 1);
+        // A deadline-less positive-priority request is SLO work: queued.
+        let parked =
+            gate.offer(&mut fleet, &[1u32; 16], SubmitOptions::new(2).priority(1)).unwrap();
+        assert_eq!(parked, AdmissionDecision::Queued);
+        // Queue full + higher-priority SLO arrival: nothing best-effort
+        // to evict, so it is refused...
+        let refused = gate.offer(&mut fleet, &[1u32; 16], slo(2, 2, 1e6)).unwrap();
+        assert_eq!(refused, AdmissionDecision::Rejected);
+        assert_eq!(gate.queue_len(), 1);
+        assert_eq!(gate.stats().shed, 2);
+        assert_eq!(gate.shed_remaining(), 1);
+        assert_eq!(gate.queue_len(), 0);
+    }
+
+    #[test]
+    fn slo_evicts_newest_parked_best_effort_when_queue_fills() {
+        let mut fleet = fleet(1);
+        let policy = AdmissionPolicy {
+            target_load: 1e-9,
+            queue_capacity: 2,
+            shed_load_factor: f64::MAX,
+        };
+        let mut gate = AdmissionGateway::new(policy);
+        // Saturate the gate so the queue path engages.
+        let seed = gate.offer(&mut fleet, &[1u32; 64], SubmitOptions::new(4)).unwrap();
+        assert!(matches!(seed, AdmissionDecision::Admitted(_)));
+        // Park two best-effort requests, filling the queue.
+        for _ in 0..2 {
+            let d = gate.offer(&mut fleet, &[1u32; 16], SubmitOptions::new(2)).unwrap();
+            assert_eq!(d, AdmissionDecision::Queued);
+        }
+        // An SLO request evicts one of them rather than being refused.
+        let d = gate.offer(&mut fleet, &[1u32; 16], slo(2, 2, 1e6)).unwrap();
+        assert_eq!(d, AdmissionDecision::Queued);
+        assert_eq!(gate.queue_len(), 2);
+        assert_eq!(gate.stats().shed, 1);
+    }
+
+    #[test]
+    fn pump_drops_expired_deadlines_instead_of_admitting_them() {
+        let mut fleet = fleet(1);
+        let policy = AdmissionPolicy { target_load: 1.0, ..AdmissionPolicy::default() };
+        let mut gate = AdmissionGateway::new(policy);
+        // Saturate with a direct submission, then park one SLO request
+        // with a deadline the backlog is guaranteed to blow through.
+        let first = gate.offer(&mut fleet, &[1u32; 512], SubmitOptions::new(64)).unwrap();
+        assert!(matches!(first, AdmissionDecision::Admitted(_)));
+        let parked = gate.offer(&mut fleet, &[1u32; 16], slo(2, 2, 1e-9)).unwrap();
+        assert_eq!(parked, AdmissionDecision::Queued);
+        while !fleet.is_idle() {
+            fleet.step().unwrap();
+        }
+        assert!(fleet_now(&fleet) > 1e-9);
+        assert_eq!(gate.pump(&mut fleet).unwrap(), 0);
+        assert_eq!(gate.queue_len(), 0);
+        assert_eq!(gate.stats().expired, 1);
+        // The dropped request never reached a replica.
+        assert_eq!(fleet.report().results.len(), 1);
+    }
+
+    #[test]
+    fn run_gated_serves_a_tiered_workload_to_completion() {
+        let mut fleet = fleet(2);
+        let policy = AdmissionPolicy { target_load: 512.0, ..AdmissionPolicy::default() };
+        let mut gate = AdmissionGateway::new(policy);
+        let mut workload: Vec<(Vec<u32>, SubmitOptions)> = Vec::new();
+        for i in 0..12 {
+            let arrival = i as f64 * 1e-3;
+            let opts = match i % 3 {
+                0 => slo(4, 2, arrival + 60.0).at(arrival),
+                1 => slo(4, 1, arrival + 240.0).at(arrival),
+                _ => SubmitOptions::new(4).at(arrival),
+            };
+            workload.push((vec![1u32; 128], opts));
+        }
+        let report = run_gated(&mut fleet, &mut gate, &workload).unwrap();
+        let stats = gate.stats();
+        assert_eq!(stats.admitted + stats.readmitted, report.results.len());
+        assert_eq!(stats.shed, 0, "capacity returns, nothing should shed");
+        assert_eq!(report.goodput_tokens(), 12 * 4);
+        assert_eq!(report.deadline_misses(), 0);
+        // Per-tier accounting covers the whole workload.
+        assert_eq!(report.tiers(), vec![2, 1, 0]);
+        let total: usize =
+            report.tiers().iter().map(|&p| report.tier_goodput_tokens(p)).sum();
+        assert_eq!(total, report.goodput_tokens());
+    }
+}

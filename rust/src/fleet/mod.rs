@@ -52,9 +52,14 @@
 //! # anyhow::Ok(())
 //! ```
 
+mod admission;
 mod replay;
 mod router;
 
+pub use admission::{
+    fleet_load, fleet_now, run_gated, AdmissionDecision, AdmissionGateway, AdmissionPolicy,
+    AdmissionStats,
+};
 pub use replay::FleetReplayOutcome;
 pub use router::{FleetRouter, ReplicaHealth, DEGRADED_WEIGHT};
 
@@ -211,6 +216,37 @@ impl FleetReport {
     /// Result of one fleet request by id.
     pub fn result(&self, id: FleetRequestId) -> Option<&FleetResult> {
         self.results.get(id as usize)
+    }
+
+    /// Distinct priority tiers across the fleet's requests, highest first
+    /// (see [`ServeReport::tiers`]).
+    pub fn tiers(&self) -> Vec<i32> {
+        let mut tiers: Vec<i32> = self.results.iter().map(|r| r.result.priority).collect();
+        tiers.sort_unstable_by(|a, b| b.cmp(a));
+        tiers.dedup();
+        tiers
+    }
+
+    /// [`FleetReport::goodput_tokens`] restricted to one priority tier.
+    pub fn tier_goodput_tokens(&self, priority: i32) -> usize {
+        self.results
+            .iter()
+            .filter(|r| !r.result.aborted && r.result.priority == priority)
+            .map(|r| r.result.output_tokens.len())
+            .sum()
+    }
+
+    /// Fleet requests in `priority`'s tier that missed their SLO deadline.
+    pub fn tier_deadline_misses(&self, priority: i32) -> usize {
+        self.results
+            .iter()
+            .filter(|r| r.result.priority == priority && r.result.deadline_missed())
+            .count()
+    }
+
+    /// Deadline misses across every tier of the fleet.
+    pub fn deadline_misses(&self) -> usize {
+        self.results.iter().filter(|r| r.result.deadline_missed()).count()
     }
 }
 
@@ -636,13 +672,7 @@ impl Fleet {
             .map(|(id, t)| {
                 let mut result =
                     replicas[t.replica].result(t.local).cloned().unwrap_or_else(|| {
-                        GenerationResult {
-                            id: t.local,
-                            output_tokens: Vec::new(),
-                            ttft_s: None,
-                            max_tbt_s: 0.0,
-                            aborted: false,
-                        }
+                        GenerationResult { id: t.local, ..GenerationResult::default() }
                     });
                 result.id = id as FleetRequestId;
                 FleetResult {

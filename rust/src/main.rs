@@ -13,6 +13,10 @@
 //!             ideal (sim), or assert bit-exact continuation (engine)
 //!   fleet     N replicas behind the cluster-level load-aware router, with
 //!             a fault timeline on one replica while the rest keep serving
+//!   overload  overload-survival drill: a priority-tiered storm at --load ×
+//!             the fleet's calibrated sustainable rate, served FCFS vs
+//!             preempt+swap vs preempt+swap+admission; prints per-tier
+//!             goodput/deadline tables and asserts admission beats FCFS
 //!   recover   cost one failure under every recovery method
 //!   prefix    shared-prefix drill: serve a repeat-fanout trace with the
 //!             prefix trie off (cold) and on (shared) and compare prefill
@@ -37,6 +41,7 @@
 //!   failsafe fleet --replicas 4 --world 8 --requests 80 --rate 8
 //!   failsafe fleet --replicas 4 --scenario cascade --fault-replica 0 --pace tokens
 //!   failsafe fleet --backend engine --replicas 2 --world 3 --requests 6
+//!   failsafe overload --replicas 2 --world 8 --requests 160 --load 2
 //!   failsafe recover --model llama --world 8 --requests 60 --ctx 8000
 //!   failsafe prefix --prefixes 4 --fanout 8 --prefix-tokens 2048
 //!   failsafe simcore --world 8 --requests 512 --burst 64 --output-tokens 64
@@ -46,18 +51,21 @@ use failsafe::benchkit::section;
 use failsafe::cluster::{FaultTimeline, GpuSpec, Interconnect, TimelineEvent};
 use failsafe::config::{model_by_name, recovery_by_name, system_by_name, EngineConfig};
 use failsafe::engine::{
-    drive, replay, AdvanceLimit, Engine, FaultPlan, FaultTrigger, ReplayPace, ServingBackend,
-    SubmitOptions,
+    drive, replay, AdvanceLimit, Engine, EngineEvent, FaultPlan, FaultTrigger, PreemptPolicy,
+    ReplayPace, ServingBackend, SubmitOptions,
 };
-use failsafe::fleet::Fleet;
+use failsafe::fleet::{
+    run_gated, AdmissionGateway, AdmissionPolicy, Fleet, FleetReport,
+};
 use failsafe::kvcache::BackupStore;
 use failsafe::model::ModelSpec;
 use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use failsafe::sharding::{HeadAssignment, ShardPlan};
-use failsafe::simulator::{CoreMode, OnlineMode, OnlineSim, SystemConfig};
+use failsafe::simulator::{CoreMode, OnlineMode, OnlineSim, StepCostModel, SystemConfig};
 use failsafe::traces::{
     cascade_then_heal, flaky_gpu, gcp_availability, mooncake_trace, openthoughts_trace,
-    poisson_arrivals, repeat_fanout, rolling_maintenance, thermal_throttle, TraceStats,
+    overload_storm, poisson_arrivals, repeat_fanout, rolling_maintenance, thermal_throttle,
+    TraceStats, TIER_BEST_EFFORT, TIER_PREMIUM, TIER_STANDARD,
 };
 use failsafe::util::cli::Args;
 use failsafe::util::Rng;
@@ -81,6 +89,11 @@ subcommands:
   fleet     N replicas behind the cluster-level load-aware router; a fault
             timeline hits one replica (--fault-replica) while the others
             keep serving (--backend sim|engine, --pace clock|tokens)
+  overload  overload-survival drill: a 20/30/50 premium/standard/best-effort
+            storm at --load × the fleet's calibrated sustainable rate,
+            served FCFS vs preempt+swap vs preempt+swap+admission; prints
+            per-tier goodput/deadline tables and (at --load >= 2) asserts
+            admission control beats FCFS on the SLO tiers
   recover   cost one failure under every recovery method (Table 3 style)
   prefix    shared-prefix drill: serve a repeat-fanout trace (--prefixes
             × --fanout continuations of a --prefix-tokens shared prompt)
@@ -103,6 +116,7 @@ fn main() -> anyhow::Result<()> {
         Some("replay") => replay_cmd(&args),
         Some("degrade") => degrade_cmd(&args),
         Some("fleet") => fleet_cmd(&args),
+        Some("overload") => overload_cmd(&args),
         Some("recover") => recover(&args),
         Some("prefix") => prefix_cmd(&args),
         Some("simcore") => simcore_cmd(&args),
@@ -596,6 +610,201 @@ fn degrade_engine(args: &Args, gpu: usize, factor: f64) -> anyhow::Result<()> {
         out.final_world,
         out.applied.len()
     );
+    Ok(())
+}
+
+/// Output tokens of `priority`-tier requests that finished without
+/// aborting *and met their deadline* — the overload drill's headline
+/// per-tier metric (plain goodput hides lateness: under FCFS everything
+/// eventually completes, just uselessly late).
+fn met_goodput(report: &FleetReport, priority: i32) -> usize {
+    report
+        .results
+        .iter()
+        .filter(|r| {
+            r.result.priority == priority && !r.result.aborted && !r.result.deadline_missed()
+        })
+        .map(|r| r.result.output_tokens.len())
+        .sum()
+}
+
+/// Overload-survival drill: the same priority-tiered storm
+/// ([`overload_storm`]: 20% premium / 30% standard / 50% best-effort) at
+/// `--load` × the fleet's *calibrated* sustainable rate, served three
+/// ways — FCFS, SLO preemption + KV swap-out, and preemption + swap
+/// behind the admission gateway. Calibration (all requests at t=0, FCFS)
+/// measures what the fleet actually sustains, so `--load 2` is genuinely
+/// 2× capacity on any machine and model. At `--load >= 2` the drill
+/// exits nonzero unless admission control beats FCFS on the SLO tiers
+/// and the preempt/swap machinery actually engaged.
+fn overload_cmd(args: &Args) -> anyhow::Result<()> {
+    let model = model_arg(args)?;
+    let system = system_arg(args)?;
+    let world = args.get_usize("world", 8);
+    let replicas = args.get_usize("replicas", 2);
+    let n = args.get_usize("requests", 160);
+    let load = strict_flag::<f64>(args, "load", 2.0);
+    let slo_flag = strict_flag::<f64>(args, "slo", 0.0);
+    let max_batch = args.get_usize("max-batch", 16);
+    let seed = args.get_u64("seed", 42);
+    if replicas == 0 || n == 0 {
+        flag_error(format!("--replicas {replicas} / --requests {n} must be positive"));
+    }
+    if !(load.is_finite() && load > 0.0) {
+        flag_error(format!("--load {load} must be a positive overload multiple"));
+    }
+    let policy = AdmissionPolicy {
+        target_load: strict_flag::<f64>(args, "target-load", 2048.0),
+        queue_capacity: args.get_usize("queue-cap", 256),
+        shed_load_factor: strict_flag::<f64>(args, "shed-factor", 3.0),
+    };
+
+    // The swap tier's reason to exist, asserted up front: restoring a
+    // parked context over PCIe must undercut recomputing its prefill.
+    let plan = system.plan(&model, world);
+    let spec = GpuSpec::h100();
+    let cost = StepCostModel::new(&plan, &spec, &Interconnect::new(spec.clone()));
+    for tokens in [512usize, 4096, 16384] {
+        anyhow::ensure!(
+            cost.swap_time(tokens) < cost.recompute_time(tokens),
+            "swap-in of {tokens} tokens ({:.2} ms) must be cheaper than recompute ({:.2} ms)",
+            cost.swap_time(tokens) * 1e3,
+            cost.recompute_time(tokens) * 1e3
+        );
+    }
+
+    let build_fleet = |preempt: bool| -> Fleet {
+        let mut sim =
+            OnlineSim::new(system.clone(), OnlineMode::Decode, world).with_model(model.clone());
+        sim.max_batch = max_batch;
+        if preempt {
+            sim = sim.with_preemption(PreemptPolicy::default());
+        }
+        let mut fleet = Fleet::new();
+        for session in sim.sessions(replicas) {
+            fleet.add_replica(Box::new(session));
+        }
+        fleet
+    };
+
+    // Calibrate: the storm's exact request lengths (seeded — rate and SLO
+    // don't change them), all at t=0, FCFS. The makespan is the fleet's
+    // sustained capacity for this workload.
+    let shape = overload_storm(n, 1.0, 1.0, seed);
+    let mut cal = build_fleet(false);
+    for r in &shape {
+        cal.submit_with(&r.prompt(), SubmitOptions::new(r.output_tokens.max(1)))?;
+    }
+    let cal_wall = cal.run_to_completion()?.wall_s;
+    anyhow::ensure!(cal_wall > 0.0, "calibration run produced no makespan");
+    let base_rate = n as f64 / cal_wall;
+    let slo = if slo_flag > 0.0 { slo_flag } else { (cal_wall / 8.0).max(1.0) };
+    let storm = overload_storm(n, base_rate * load, slo, seed);
+
+    section(&format!(
+        "overload drill: {replicas}x {} TP{world} ({}), {n} requests @ {load}x sustained \
+         ({:.1} req/s), premium SLO {slo:.2}s",
+        model.name,
+        system.name,
+        base_rate * load
+    ));
+    println!(
+        "calibrated capacity: {n} requests in {cal_wall:.1}s ({base_rate:.1} req/s sustained)"
+    );
+
+    // FCFS: everything admitted, arrival order, no preemption.
+    let mut fcfs = build_fleet(false);
+    for r in &storm {
+        fcfs.submit_with(&r.prompt(), r.options())?;
+    }
+    let fcfs_report = fcfs.run_to_completion()?;
+
+    // Preempt+swap: same open door, but the scheduler triages.
+    let mut pre = build_fleet(true);
+    for r in &storm {
+        pre.submit_with(&r.prompt(), r.options())?;
+    }
+    let (mut preemptions, mut swap_ins) = (0usize, 0usize);
+    while !pre.is_idle() {
+        for e in pre.step()? {
+            match e.event {
+                EngineEvent::RequestPreempted { .. } => preemptions += 1,
+                EngineEvent::RequestResumed { .. } => swap_ins += 1,
+                _ => {}
+            }
+        }
+    }
+    let pre_report = pre.report();
+
+    // Preempt+swap+admission: the gateway queues SLO work over target
+    // load and sheds best-effort.
+    let mut adm_fleet = build_fleet(true);
+    let mut gate = AdmissionGateway::new(policy);
+    let workload: Vec<(Vec<u32>, SubmitOptions)> =
+        storm.iter().map(|r| (r.prompt(), r.options())).collect();
+    let adm_report = run_gated(&mut adm_fleet, &mut gate, &workload)?;
+
+    // Per-tier table. "Unserved" SLO requests (shed or expired at the
+    // gateway) never reach a replica report, so they are added back as
+    // deadline misses — shedding must not launder a miss into a no-show.
+    let tier_name = |p: i32| match p {
+        TIER_PREMIUM => "premium",
+        TIER_STANDARD => "standard",
+        _ => "best-effort",
+    };
+    let tier_misses = |report: &FleetReport, p: i32| -> usize {
+        let offered = storm.iter().filter(|r| r.priority == p).count();
+        let reported = report.results.iter().filter(|r| r.result.priority == p).count();
+        let unserved = offered.saturating_sub(reported);
+        report.tier_deadline_misses(p) + if p > 0 { unserved } else { 0 }
+    };
+    println!(
+        "{:<22} {:>9} {:>10} {:>10} {:>8}",
+        "config / tier", "offered", "goodput", "met-SLO", "misses"
+    );
+    for (name, report) in
+        [("fcfs", &fcfs_report), ("preempt+swap", &pre_report), ("+admission", &adm_report)]
+    {
+        for p in [TIER_PREMIUM, TIER_STANDARD, TIER_BEST_EFFORT] {
+            println!(
+                "{:<22} {:>9} {:>10} {:>10} {:>8}",
+                format!("{name} {}", tier_name(p)),
+                storm.iter().filter(|r| r.priority == p).count(),
+                report.tier_goodput_tokens(p),
+                met_goodput(report, p),
+                tier_misses(report, p)
+            );
+        }
+    }
+    let stats = gate.stats();
+    println!(
+        "preempt+swap engaged: {preemptions} preemptions, {swap_ins} swap-ins | gateway: \
+         {} admitted, {} queued, {} readmitted, {} shed, {} expired",
+        stats.admitted, stats.queued, stats.readmitted, stats.shed, stats.expired
+    );
+
+    let slo_met = |r: &FleetReport| met_goodput(r, TIER_PREMIUM) + met_goodput(r, TIER_STANDARD);
+    let slo_misses =
+        |r: &FleetReport| tier_misses(r, TIER_PREMIUM) + tier_misses(r, TIER_STANDARD);
+    let (fcfs_met, adm_met) = (slo_met(&fcfs_report), slo_met(&adm_report));
+    let (fcfs_miss, adm_miss) = (slo_misses(&fcfs_report), slo_misses(&adm_report));
+    println!(
+        "SLO tiers: FCFS {fcfs_met} met-SLO tok / {fcfs_miss} misses → admission \
+         {adm_met} met-SLO tok / {adm_miss} misses"
+    );
+    if load >= 2.0 {
+        anyhow::ensure!(
+            preemptions > 0 && swap_ins > 0,
+            "preemption/swap never engaged at {load}x overload \
+             (preemptions {preemptions}, swap-ins {swap_ins})"
+        );
+        anyhow::ensure!(
+            adm_met > fcfs_met || adm_miss < fcfs_miss,
+            "admission control must beat FCFS on the SLO tiers at {load}x overload: \
+             met-SLO goodput {adm_met} vs {fcfs_met} tok, misses {adm_miss} vs {fcfs_miss}"
+        );
+        println!("admission control beats FCFS on the SLO tiers at {load}x overload ✓");
+    }
     Ok(())
 }
 

@@ -333,6 +333,30 @@ impl StepCostModel {
         (tp, dp)
     }
 
+    /// Modeled time to move `tokens` tokens of KV across the PCIe host
+    /// link — the swap-tier cost, one direction (swap-out and swap-in
+    /// each pay it once). The proactive backup mirror usually holds most
+    /// of a preempted request's prefix already, so callers charge only
+    /// the un-mirrored delta on swap-out but the full private context on
+    /// swap-in.
+    pub fn swap_time(&self, tokens: usize) -> f64 {
+        self.ic.transfer_time(
+            crate::cluster::TransferClass::PcieHost,
+            tokens * self.model.kv_bytes_per_token(),
+        )
+    }
+
+    /// Modeled time to *recompute* `tokens` tokens of KV by re-running
+    /// prefill — the alternative a swap-in avoids. Used by the overload
+    /// drill and bench to assert the swap tier is the cheaper resume
+    /// path.
+    pub fn recompute_time(&self, tokens: usize) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        self.prefill_step_time(&[PrefillWork { tokens, context: 0, home: 0 }])
+    }
+
     /// KV capacity budget per rank given resident weights.
     pub fn kv_budget(&self) -> Vec<usize> {
         (0..self.world)

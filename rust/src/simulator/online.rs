@@ -18,8 +18,8 @@ use anyhow::Result;
 
 use crate::cluster::{GpuSpec, Interconnect, TransferClass};
 use crate::engine::{
-    AdvanceLimit, AdvanceOutcome, EngineEvent, GenerationResult, ServeReport, ServingBackend,
-    SubmitOptions, BLOCK_TOKENS,
+    AdvanceLimit, AdvanceOutcome, EngineEvent, GenerationResult, PreemptPolicy, ServeReport,
+    ServingBackend, SubmitOptions, BLOCK_TOKENS,
 };
 use crate::kvcache::BackupStore;
 use crate::metrics::ServingMetrics;
@@ -85,6 +85,11 @@ pub struct OnlineSim {
     /// their KV bytes are charged once instead of per sharer. Off by
     /// default — the no-sharing accounting is the baseline.
     pub prefix_sharing: bool,
+    /// SLO preemption policy for sessions built from this sim: when set,
+    /// deadline-at-risk high-priority requests may evict lower-priority
+    /// decodes to the KV swap tier. `None` (the default) is the FCFS
+    /// baseline — identical scheduling to every pre-overload session.
+    pub preempt: Option<PreemptPolicy>,
 }
 
 pub(crate) struct Running {
@@ -96,6 +101,24 @@ pub(crate) struct Running {
     /// Leading tokens whose KV bytes live in the shared prefix pool —
     /// this request's private charge is `context - shared`.
     pub(crate) shared: usize,
+    pub(crate) priority: i32,
+    pub(crate) deadline: Option<SimTime>,
+}
+
+/// A preempted request parked in the modeled host swap tier: its device
+/// KV is released (mirror authoritative) and it resumes via swap-in —
+/// the restore path, never recompute.
+pub(crate) struct Swapped {
+    pub(crate) id: RequestId,
+    pub(crate) context: usize,
+    pub(crate) remaining_out: usize,
+    pub(crate) emitted: usize,
+    pub(crate) shared: usize,
+    pub(crate) priority: i32,
+    pub(crate) deadline: Option<SimTime>,
+    /// Clock time it was parked — the wait that earns starvation
+    /// promotion.
+    pub(crate) parked_at: SimTime,
 }
 
 /// A request known to the session but not yet arrived.
@@ -118,6 +141,9 @@ pub(crate) struct Waiting {
     output: usize,
     priority: i32,
     deadline: Option<SimTime>,
+    /// Arrival time — the wait since then earns starvation promotion
+    /// under a [`PreemptPolicy`].
+    arrived: SimTime,
     prompt: Option<Vec<u32>>,
 }
 
@@ -133,6 +159,7 @@ impl OnlineSim {
             max_batch: 256,
             backup_fraction: 0.25,
             prefix_sharing: false,
+            preempt: None,
         }
     }
 
@@ -145,6 +172,12 @@ impl OnlineSim {
     /// Enable the shared-prefix mirror on sessions built from this sim.
     pub fn with_prefix_sharing(mut self, on: bool) -> Self {
         self.prefix_sharing = on;
+        self
+    }
+
+    /// Enable SLO preemption + KV swap on sessions built from this sim.
+    pub fn with_preemption(mut self, policy: PreemptPolicy) -> Self {
+        self.preempt = Some(policy);
         self
     }
 
@@ -178,6 +211,13 @@ impl OnlineSim {
             pending_sorted: true,
             waiting: Vec::new(),
             running: Vec::new(),
+            swapped: Vec::new(),
+            preempt: self.preempt,
+            preemptions: 0,
+            swap_ins: 0,
+            swap_pcie_s: 0.0,
+            req_slo: std::collections::HashMap::new(),
+            finished_at: std::collections::HashMap::new(),
             tp_rate,
             dp_rate,
             kv_budget,
@@ -393,6 +433,21 @@ pub struct OnlineSession {
     /// (priority desc, then deadline asc, then arrival order).
     pub(crate) waiting: Vec<Waiting>,
     pub(crate) running: Vec<Running>,
+    /// Preempted requests parked in the host swap tier, resumed in
+    /// scheduling order as capacity frees.
+    pub(crate) swapped: Vec<Swapped>,
+    /// SLO preemption policy (`None` = FCFS, the pre-overload behavior).
+    pub(crate) preempt: Option<PreemptPolicy>,
+    /// Preemptions performed (telemetry).
+    pub(crate) preemptions: usize,
+    /// Swap-ins performed (telemetry).
+    pub(crate) swap_ins: usize,
+    /// Cumulative modeled PCIe time spent on swap traffic (telemetry).
+    pub(crate) swap_pcie_s: f64,
+    /// Submitted (priority, deadline) per request, for the report.
+    pub(crate) req_slo: std::collections::HashMap<RequestId, (i32, Option<SimTime>)>,
+    /// Completion clock per finished request, for deadline-miss counts.
+    pub(crate) finished_at: std::collections::HashMap<RequestId, SimTime>,
     pub(crate) tp_rate: Vec<f64>,
     pub(crate) dp_rate: f64,
     pub(crate) kv_budget: Vec<usize>,
@@ -453,6 +508,7 @@ impl OnlineSession {
         deadline: Option<SimTime>,
         prompt: Option<Vec<u32>>,
     ) {
+        self.req_slo.insert(id, (priority, deadline));
         self.pending
             .push(Pending { id, arrival, input_tokens, output_tokens, priority, deadline, prompt });
         self.pending_sorted = false;
@@ -475,13 +531,13 @@ impl OnlineSession {
     }
 
     /// True when nothing can make further progress: no running batch, no
-    /// arrivals left, and the waiting line is empty or marked stuck (the
-    /// tick loop sets `stalled` when waiting requests can never fit an
-    /// otherwise empty system).
+    /// arrivals left, and the waiting line and swap tier are empty or
+    /// marked stuck (the tick loop sets `stalled` when parked requests
+    /// can never fit an otherwise empty system).
     pub(crate) fn session_idle(&self) -> bool {
         self.running.is_empty()
             && self.pending.is_empty()
-            && (self.waiting.is_empty() || self.stalled)
+            && ((self.waiting.is_empty() && self.swapped.is_empty()) || self.stalled)
     }
 
     /// One simulated tick: admit due arrivals, admit waiting requests
@@ -565,6 +621,7 @@ impl OnlineSession {
                 output: p.output_tokens,
                 priority: p.priority,
                 deadline: p.deadline,
+                arrived: p.arrival,
                 prompt: p.prompt,
             });
         }
@@ -572,16 +629,247 @@ impl OnlineSession {
         // Admit from waiting while KV fits (project to full output
         // length), highest priority / earliest deadline first — matching
         // the engine's scheduling order (stable: arrival order for ties).
-        if self.waiting.len() > 1 {
-            self.waiting.sort_by(|a, b| {
-                b.priority.cmp(&a.priority).then_with(|| {
+        // Under a preemption policy the ordering key is the *effective*
+        // priority (base + starvation promotion); with no policy it is
+        // exactly the legacy key.
+        self.sort_waiting();
+        if self.preempt.is_some() {
+            self.resume_swapped();
+        }
+        self.admit_waiting();
+        if self.preempt.is_some() {
+            self.preempt_phase();
+        }
+    }
+
+    /// Sort the waiting line by (effective priority desc, deadline asc);
+    /// the stable sort keeps arrival order for ties. Identical to the
+    /// legacy ordering when no [`PreemptPolicy`] is set.
+    fn sort_waiting(&mut self) {
+        if self.waiting.len() <= 1 {
+            return;
+        }
+        let now = self.clock;
+        let pol = self.preempt;
+        let eff = |w: &Waiting| match pol {
+            Some(p) => p.effective_priority(w.priority, now - w.arrived),
+            None => w.priority,
+        };
+        self.waiting.sort_by(|a, b| {
+            eff(b).cmp(&eff(a)).then_with(|| {
+                let da = a.deadline.unwrap_or(f64::INFINITY);
+                let db = b.deadline.unwrap_or(f64::INFINITY);
+                da.total_cmp(&db)
+            })
+        });
+    }
+
+    /// Swap parked requests back in (scheduling order) while capacity
+    /// allows — the swap tier's side of admission.
+    fn resume_swapped(&mut self) {
+        if self.swapped.is_empty() {
+            return;
+        }
+        let now = self.clock;
+        let pol = self.preempt.expect("resume_swapped requires a policy");
+        self.swapped.sort_by(|a, b| {
+            pol.effective_priority(b.priority, now - b.parked_at)
+                .cmp(&pol.effective_priority(a.priority, now - a.parked_at))
+                .then_with(|| {
                     let da = a.deadline.unwrap_or(f64::INFINITY);
                     let db = b.deadline.unwrap_or(f64::INFINITY);
                     da.total_cmp(&db)
                 })
-            });
+                .then(a.id.cmp(&b.id))
+        });
+        let swapped = std::mem::take(&mut self.swapped);
+        let mut kept = Vec::with_capacity(swapped.len());
+        for s in swapped {
+            if !self.try_resume(&s) {
+                kept.push(s);
+            }
         }
-        self.admit_waiting();
+        self.swapped = kept;
+        self.peak_kv = self.peak_kv.max(self.kv_used.iter().sum());
+    }
+
+    /// Swap one parked request back in if its full remaining footprint
+    /// fits — mirrors [`OnlineSession::try_admit`]'s projection, charges
+    /// the private context back onto the device rates, and pays the
+    /// host→device PCIe transfer on the clock (swap-in restores from the
+    /// mirror; it never recomputes).
+    fn try_resume(&mut self, s: &Swapped) -> bool {
+        let total = (s.context - s.shared + s.remaining_out) as f64;
+        let fits = (0..self.world).all(|r| {
+            let add = self.tp_rate[r] * total
+                + if r == self.router.tracker().least_loaded() {
+                    self.dp_rate * total
+                } else {
+                    0.0
+                };
+            self.kv_used[r] + add <= self.kv_budget[r] as f64 * 0.97
+        }) && self.running.len() < self.max_batch;
+        if !fits {
+            return false;
+        }
+        let private = (s.context - s.shared) as f64;
+        let home = self.router.route(private);
+        for (r, used) in self.kv_used.iter_mut().enumerate() {
+            *used += self.tp_rate[r] * private;
+        }
+        self.kv_used[home] += self.dp_rate * private;
+        let t = self.cost.swap_time(s.context - s.shared);
+        self.clock += t;
+        self.swap_pcie_s += t;
+        self.swap_ins += 1;
+        self.events.push(EngineEvent::RequestResumed { id: s.id });
+        self.running.push(Running {
+            id: s.id,
+            home,
+            context: s.context,
+            remaining_out: s.remaining_out,
+            emitted: s.emitted,
+            shared: s.shared,
+            priority: s.priority,
+            deadline: s.deadline,
+        });
+        true
+    }
+
+    /// The skip-join MLFQ preemption pass: while the best parked request
+    /// (waiting or swapped, by effective priority) is at deadline risk
+    /// and cannot fit, evict the lowest-effective-priority *strictly
+    /// lower* running decode to the swap tier and retry — bounded per
+    /// round by the policy's thrash guard. Best-effort requests carry no
+    /// deadline, so they never trigger a preemption; starvation
+    /// promotion only moves them up the admission order.
+    fn preempt_phase(&mut self) {
+        let pol = self.preempt.expect("preempt_phase requires a policy");
+        let mut evictions = 0usize;
+        while evictions < pol.max_preemptions_per_round {
+            if self.running.is_empty() {
+                return; // nothing to evict
+            }
+            let now = self.clock;
+            // Candidate: head of waiting vs head of swapped (both sorted
+            // this round), by (effective priority, deadline).
+            let wait_head = self.waiting.first().map(|w| {
+                (pol.effective_priority(w.priority, now - w.arrived), w.deadline, w.output)
+            });
+            let swap_head = self.swapped.first().map(|s| {
+                (
+                    pol.effective_priority(s.priority, now - s.parked_at),
+                    s.deadline,
+                    s.remaining_out,
+                )
+            });
+            let better = |a: (i32, Option<SimTime>, usize), b: (i32, Option<SimTime>, usize)| {
+                // Higher effective priority wins; earlier deadline breaks
+                // ties (negated so the tuple compare runs descending).
+                (a.0, -a.1.unwrap_or(f64::INFINITY)) > (b.0, -b.1.unwrap_or(f64::INFINITY))
+            };
+            let (cand_eff, cand_deadline, cand_out, from_wait) = match (wait_head, swap_head) {
+                (Some(w), Some(s)) => {
+                    if better(s, w) {
+                        (s.0, s.1, s.2, false)
+                    } else {
+                        (w.0, w.1, w.2, true)
+                    }
+                }
+                (Some(w), None) => (w.0, w.1, w.2, true),
+                (None, Some(s)) => (s.0, s.1, s.2, false),
+                (None, None) => return,
+            };
+            // Deadline risk: the candidate's remaining service at the
+            // current round pace, with the policy's slack.
+            self.work.clear();
+            self.work.extend(
+                self.running.iter().map(|r| DecodeWork { context: r.context, home: r.home }),
+            );
+            let round_dt = self.cost.decode_step_time(&self.work);
+            let est = round_dt * cand_out as f64;
+            if !pol.deadline_at_risk(now, cand_deadline, est) {
+                return;
+            }
+            // Victim: lowest effective priority (running requests do not
+            // age — they are being served), latest deadline, youngest id;
+            // must be strictly below the candidate.
+            let victim = self
+                .running
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| {
+                    a.priority
+                        .cmp(&b.priority)
+                        .then_with(|| {
+                            let da = a.deadline.unwrap_or(f64::INFINITY);
+                            let db = b.deadline.unwrap_or(f64::INFINITY);
+                            db.total_cmp(&da)
+                        })
+                        .then(b.id.cmp(&a.id))
+                })
+                .filter(|(_, v)| pol.may_preempt(cand_eff, v.priority))
+                .map(|(i, _)| i);
+            let Some(vi) = victim else { return };
+            self.swap_out_running(vi);
+            evictions += 1;
+            // Retry the candidate now that KV freed.
+            if from_wait {
+                let w = self.waiting.remove(0);
+                if !self.try_admit(&w) {
+                    self.waiting.insert(0, w);
+                }
+            } else {
+                let s = self.swapped.remove(0);
+                if !self.try_resume(&s) {
+                    self.swapped.insert(0, s);
+                }
+            }
+            self.peak_kv = self.peak_kv.max(self.kv_used.iter().sum());
+        }
+    }
+
+    /// Evict `running[i]` to the swap tier: release its private device
+    /// KV (exactly the finish/abort arithmetic — shared prefix bytes
+    /// stay resident for their sharers), complete its host mirror paying
+    /// PCIe only for the rows the write-behind daemon had not mirrored
+    /// yet, and park it. The request is paused, not aborted: its metrics
+    /// entry stays open and its next token (after resume) records the
+    /// preemption gap as TBT.
+    fn swap_out_running(&mut self, i: usize) {
+        let r = self.running.swap_remove(i);
+        let private = (r.context - r.shared) as f64;
+        for (ru, used) in self.kv_used.iter_mut().enumerate() {
+            *used = (*used - self.tp_rate[ru] * private).max(0.0);
+        }
+        self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * private).max(0.0);
+        self.router.complete(r.home, 0.0);
+        let missing = r.context.saturating_sub(self.backup.backed_tokens(r.id));
+        self.backup.backup(r.id, r.context, self.model.kv_bytes_per_token());
+        self.daemon.forget(r.id);
+        let t = self.cost.swap_time(missing);
+        self.clock += t;
+        self.swap_pcie_s += t;
+        self.preemptions += 1;
+        self.events.push(EngineEvent::RequestPreempted { id: r.id });
+        self.swapped.push(Swapped {
+            id: r.id,
+            context: r.context,
+            remaining_out: r.remaining_out,
+            emitted: r.emitted,
+            shared: r.shared,
+            priority: r.priority,
+            deadline: r.deadline,
+            parked_at: self.clock,
+        });
+    }
+
+    /// True when the SLO scheduler may preempt at the next round head —
+    /// the span cores cap their span length to one round while this
+    /// holds, so preemption decisions land at identical clock times on
+    /// every core (see [`crate::simulator::simcore`]).
+    pub(crate) fn preemption_pending(&self) -> bool {
+        self.preempt.is_some() && (!self.waiting.is_empty() || !self.swapped.is_empty())
     }
 
     /// The empty-batch branch of a scheduler round: fast-forward the
@@ -595,7 +883,7 @@ impl OnlineSession {
             if self.waiting.len() >= self.max_batch {
                 self.stalled = true;
             }
-        } else if !self.waiting.is_empty() {
+        } else if !self.waiting.is_empty() || !self.swapped.is_empty() {
             // Cold system, nothing arriving: these can never fit.
             self.stalled = true;
         }
@@ -606,6 +894,7 @@ impl OnlineSession {
     /// backup bookkeeping, and the private-KV release.
     pub(crate) fn finish_running(&mut self, r: Running, events: &mut Vec<EngineEvent>) {
         self.metrics.on_finish(r.id);
+        self.finished_at.insert(r.id, self.clock);
         events.push(EngineEvent::RequestFinished { id: r.id });
         self.daemon.forget(r.id);
         self.backup.release(r.id, self.model.kv_bytes_per_token());
@@ -618,6 +907,33 @@ impl OnlineSession {
         }
         self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * private).max(0.0);
         self.router.complete(r.home, 0.0);
+    }
+
+    /// Set (or clear) the SLO preemption policy on a built session
+    /// (replicas inherit [`OnlineSim::preempt`]; this overrides per
+    /// session). `None` restores the FCFS baseline.
+    pub fn set_preemption(&mut self, policy: Option<PreemptPolicy>) {
+        self.preempt = policy;
+    }
+
+    /// Preemptions performed so far (decode evicted to the swap tier).
+    pub fn preemptions(&self) -> usize {
+        self.preemptions
+    }
+
+    /// Swap-ins performed so far (parked requests resumed from the tier).
+    pub fn swap_ins(&self) -> usize {
+        self.swap_ins
+    }
+
+    /// Cumulative modeled PCIe seconds spent on swap-out/swap-in traffic.
+    pub fn swap_pcie_seconds(&self) -> f64 {
+        self.swap_pcie_s
+    }
+
+    /// Requests currently parked in the swap tier.
+    pub fn swapped_len(&self) -> usize {
+        self.swapped.len()
     }
 
     /// Select which engine [`ServingBackend::advance_until`] runs on:
@@ -710,6 +1026,8 @@ impl OnlineSession {
             remaining_out: w.output,
             emitted: 0,
             shared,
+            priority: w.priority,
+            deadline: w.deadline,
         });
         true
     }
@@ -941,6 +1259,11 @@ impl OnlineSession {
             for r in self.running.iter_mut() {
                 r.shared = 0;
             }
+            // Swapped requests re-route at resume; their shared prefix is
+            // gone with the flush, so they resume fully private.
+            for s in self.swapped.iter_mut() {
+                s.shared = 0;
+            }
         }
         self.rebuild_cost();
 
@@ -1086,6 +1409,12 @@ impl ServingBackend for OnlineSession {
             }
             self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * private).max(0.0);
             self.router.complete(r.home, 0.0);
+        } else if let Some(i) = self.swapped.iter().position(|s| s.id == id) {
+            // Parked in the swap tier: no device KV to release — just the
+            // host mirror and the daemon's trailing-backup state.
+            let s = self.swapped.swap_remove(i);
+            self.daemon.forget(s.id);
+            self.backup.release(s.id, self.model.kv_bytes_per_token());
         } else {
             anyhow::bail!("abort: unknown or already finished request {id}");
         }
@@ -1131,12 +1460,16 @@ impl ServingBackend for OnlineSession {
         for &id in &self.order {
             let m = self.metrics.request(id);
             let emitted = m.map(|m| m.tokens_out).unwrap_or(0);
+            let (priority, deadline) = self.req_slo.get(&id).copied().unwrap_or((0, None));
             results.push(GenerationResult {
                 id,
                 output_tokens: vec![0; emitted],
                 ttft_s: m.and_then(|m| m.ttft()),
                 max_tbt_s: m.map(|m| m.max_tbt).unwrap_or(0.0),
                 aborted: self.aborted.contains(&id),
+                priority,
+                deadline,
+                finished_at: self.finished_at.get(&id).copied(),
             });
         }
         ServeReport {
@@ -1482,6 +1815,110 @@ mod tests {
             assert_eq!(r.output_tokens.len(), 8);
         }
         assert!(s.kv_bytes() < 1.0, "drained session releases all private KV");
+    }
+
+    /// The tentpole behavior: under a saturated batch, a high-SLO
+    /// request preempts a best-effort decode to the swap tier, finishes
+    /// far sooner than FCFS would allow, and the evicted work still
+    /// completes in full after swap-in — nothing is aborted or
+    /// recomputed.
+    #[test]
+    fn preemption_boosts_slo_tier_under_overload() {
+        let run = |preempt: bool| {
+            let mut sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+                .with_model(llama3_70b());
+            sim.max_batch = 4;
+            if preempt {
+                sim = sim.with_preemption(PreemptPolicy::default());
+            }
+            let mut s = sim.session();
+            let prompt = vec![0u32; 2048];
+            // Saturate the batch with best-effort long decodes.
+            let be: Vec<_> = (0..4)
+                .map(|_| s.submit_with(&prompt, SubmitOptions::new(200)).unwrap())
+                .collect();
+            // A premium request lands once the batch is running, with a
+            // deadline it can only approach by jumping the queue.
+            let vip = s
+                .submit_with(&prompt, SubmitOptions::new(8).at(0.05).priority(2).deadline(0.01))
+                .unwrap();
+            let rep = s.run_to_completion().unwrap();
+            (rep, s.preemptions(), s.swap_ins(), s.swap_pcie_seconds(), vip, be)
+        };
+        let (fcfs, p0, si0, _, vip0, _) = run(false);
+        assert_eq!(p0, 0, "no policy, no preemptions");
+        assert_eq!(si0, 0);
+        let fcfs_vip = fcfs.result(vip0).unwrap().finished_at.unwrap();
+        let (pre, p1, si1, pcie, vip, be) = run(true);
+        assert!(p1 >= 1, "the premium request preempts a best-effort decode");
+        assert!(si1 >= 1, "evicted work resumes via swap-in, not recompute");
+        assert!(pcie > 0.0, "swap traffic is costed on the PCIe clock");
+        let pre_vip = pre.result(vip).unwrap().finished_at.unwrap();
+        assert!(
+            pre_vip < fcfs_vip * 0.5,
+            "preemption finishes the SLO tier much sooner: {pre_vip} vs FCFS {fcfs_vip}"
+        );
+        assert_eq!(pre.result(vip).unwrap().output_tokens.len(), 8);
+        // The evicted best-effort requests still complete in full.
+        for id in be {
+            let r = pre.result(id).unwrap();
+            assert!(!r.aborted);
+            assert_eq!(r.output_tokens.len(), 200, "request {id} short after swap");
+        }
+        // Per-tier accounting surfaces the split.
+        assert_eq!(pre.tiers(), vec![2, 0]);
+        assert_eq!(pre.tier_goodput_tokens(2), 8);
+        assert_eq!(pre.tier_goodput_tokens(0), 800);
+    }
+
+    /// The swap tier's reason to exist: restoring KV over PCIe is far
+    /// cheaper than recomputing the prefill that produced it.
+    #[test]
+    fn swap_in_is_cheaper_than_recompute() {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b());
+        let s = sim.session();
+        for tokens in [512usize, 4096, 16384] {
+            let swap = s.cost.swap_time(tokens);
+            let recompute = s.cost.recompute_time(tokens);
+            assert!(
+                swap < recompute,
+                "swap-in of {tokens} tokens ({swap:.4}s) must beat recompute ({recompute:.4}s)"
+            );
+        }
+    }
+
+    /// Aborting a swapped-out request releases its host mirror and the
+    /// report marks it — the abort path covers all four queues.
+    #[test]
+    fn abort_of_swapped_request_cleans_up() {
+        let mut sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b())
+            .with_preemption(PreemptPolicy::default());
+        sim.max_batch = 2;
+        let mut s = sim.session();
+        let prompt = vec![0u32; 2048];
+        // Among equal tiers the youngest (highest id) running request is
+        // evicted first, so the second submission is the victim.
+        s.submit_with(&prompt, SubmitOptions::new(300)).unwrap();
+        let victim = s.submit_with(&prompt, SubmitOptions::new(300)).unwrap();
+        let vip = s
+            .submit_with(&prompt, SubmitOptions::new(4).at(0.05).priority(3).deadline(0.01))
+            .unwrap();
+        // Step until the preemption lands.
+        for _ in 0..64 {
+            s.step().unwrap();
+            if s.preemptions() > 0 {
+                break;
+            }
+        }
+        assert!(s.preemptions() >= 1, "premium request must preempt");
+        assert_eq!(s.swapped_len(), 1);
+        s.abort(victim).unwrap();
+        assert_eq!(s.swapped_len(), 0);
+        let rep = s.run_to_completion().unwrap();
+        assert!(rep.result(victim).unwrap().aborted);
+        assert_eq!(rep.result(vip).unwrap().output_tokens.len(), 4);
     }
 
     /// Zero generation budget is a caller bug on this backend too.

@@ -24,7 +24,14 @@
 //!   bounds the caller (fault injector, timeline replayer, fleet
 //!   chunker) wants respected;
 //! * **injected events** — faults and rejoins land between
-//!   `advance_until` calls, so they are span boundaries by construction.
+//!   `advance_until` calls, so they are span boundaries by construction;
+//! * **pending preemption** — while a [`PreemptPolicy`](crate::engine::PreemptPolicy)
+//!   is set and requests are parked (waiting or swapped), the SLO
+//!   scheduler may evict a running decode at any round head, so the
+//!   frozen-running-set invariant below does not hold: both span
+//!   engines degrade to one-round spans until the parked lines drain,
+//!   which keeps preemption decisions landing at identical clock times
+//!   on every core.
 //!
 //! Because each entry is the minimum of its own ordered source, the
 //! "heap" is a constant-size min — popped by comparing four candidates,
@@ -189,8 +196,13 @@ fn exact(
         }
 
         // Span boundaries: the soonest completion caps the span length;
-        // arrivals and driver limits break it early.
-        let span_cap = s.running.iter().map(|r| r.remaining_out).min().unwrap();
+        // arrivals and driver limits break it early. A pending
+        // preemption pins the span to one round (see module docs).
+        let span_cap = if s.preemption_pending() {
+            1
+        } else {
+            s.running.iter().map(|r| r.remaining_out).min().unwrap()
+        };
         let next_arr = s.pending.last().map(|p| p.arrival); // sorted by the head
         s.work.clear();
         s.work.extend(s.running.iter().map(|r| DecodeWork { context: r.context, home: r.home }));
@@ -276,7 +288,11 @@ fn batched(
         }
 
         let b = s.running.len();
-        let span_cap = s.running.iter().map(|r| r.remaining_out).min().unwrap();
+        let span_cap = if s.preemption_pending() {
+            1
+        } else {
+            s.running.iter().map(|r| r.remaining_out).min().unwrap()
+        };
         let next_arr = s.pending.last().map(|p| p.arrival);
         s.work.clear();
         s.work.extend(s.running.iter().map(|r| DecodeWork { context: r.context, home: r.home }));

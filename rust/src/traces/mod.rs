@@ -8,7 +8,8 @@
 //! with a seeded RNG, which is what the experiments actually consume.
 //!
 //! The fault-scenario generators ([`flaky_gpu`], [`rolling_maintenance`],
-//! [`cascade_then_heal`], [`thermal_throttle`]) additionally express
+//! [`cascade_then_heal`], [`thermal_throttle`], [`thundering_herd`])
+//! additionally express
 //! named availability scenarios — hard failures and soft (degraded-GPU)
 //! spells — as [`crate::cluster::FaultTimeline`]s for the replay driver.
 //!
@@ -29,6 +30,7 @@ mod arrivals;
 mod faults;
 mod gcp;
 mod lengths;
+mod overload;
 mod repeat_fanout;
 mod request;
 
@@ -36,5 +38,9 @@ pub use arrivals::{poisson_arrivals, scale_arrivals, split_arrivals};
 pub use faults::{cascade_then_heal, flaky_gpu, rolling_maintenance, thermal_throttle};
 pub use gcp::gcp_availability;
 pub use lengths::{mooncake_trace, openthoughts_trace, TraceStats};
+pub use overload::{
+    overload_storm, priority_tiers, thundering_herd, OverloadRequest, TIER_BEST_EFFORT,
+    TIER_PREMIUM, TIER_STANDARD,
+};
 pub use repeat_fanout::{repeat_fanout, FanoutRequest};
 pub use request::TraceRequest;

@@ -1,0 +1,186 @@
+//! Overload scenario generators: sustained storms of priority-tiered
+//! tenants, and the thundering-herd rejoin timeline.
+//!
+//! The overload drill (`failsafe overload`, `benches/overload.rs`)
+//! needs workloads where demand *sustainably* exceeds capacity — not a
+//! burst the queue absorbs, but a regime where something must lose. The
+//! generators here stamp Mooncake-statistics requests with SLO tiers:
+//! a premium slice with tight deadlines, a standard slice with loose
+//! ones, and a best-effort remainder with none — the population the
+//! preemptive scheduler, swap tier, and admission gateway triage.
+
+use super::{mooncake_trace, poisson_arrivals, TraceRequest};
+use crate::cluster::{FaultTimeline, TimelineEvent};
+use crate::engine::SubmitOptions;
+use crate::util::Rng;
+use crate::{RequestId, SimTime};
+
+/// Premium tier priority (tight deadline).
+pub const TIER_PREMIUM: i32 = 2;
+/// Standard tier priority (loose deadline).
+pub const TIER_STANDARD: i32 = 1;
+/// Best-effort tier priority (no deadline — never triggers preemption,
+/// first to be shed).
+pub const TIER_BEST_EFFORT: i32 = 0;
+
+/// One tiered request of an overload workload: a [`TraceRequest`] plus
+/// the SLO contract it was sold under.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadRequest {
+    pub id: RequestId,
+    pub arrival: SimTime,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    /// SLO tier (see [`TIER_PREMIUM`] / [`TIER_STANDARD`] /
+    /// [`TIER_BEST_EFFORT`]).
+    pub priority: i32,
+    /// Completion deadline on the shared clock; `None` = best-effort.
+    pub deadline: Option<SimTime>,
+}
+
+impl OverloadRequest {
+    /// The submit options encoding this request's arrival and SLO.
+    pub fn options(&self) -> SubmitOptions {
+        let mut opts = SubmitOptions::new(self.output_tokens.max(1))
+            .at(self.arrival)
+            .priority(self.priority);
+        if let Some(d) = self.deadline {
+            opts = opts.deadline(d);
+        }
+        opts
+    }
+
+    /// A placeholder prompt of the right length (simulated backends only
+    /// measure lengths).
+    pub fn prompt(&self) -> Vec<u32> {
+        vec![7; self.input_tokens.max(1)]
+    }
+}
+
+/// Stamp SLO tiers onto a timed trace: a `premium` fraction at
+/// [`TIER_PREMIUM`] with deadline `arrival + slo_s`, a `standard`
+/// fraction at [`TIER_STANDARD`] with deadline `arrival + 4 × slo_s`,
+/// and the remainder best-effort with no deadline. Tier assignment is
+/// seeded-random per request, so tiers interleave in arrival order the
+/// way tenant traffic does.
+pub fn priority_tiers(
+    trace: &[TraceRequest],
+    premium: f64,
+    standard: f64,
+    slo_s: f64,
+    seed: u64,
+) -> Vec<OverloadRequest> {
+    assert!(premium >= 0.0 && standard >= 0.0 && premium + standard <= 1.0);
+    assert!(slo_s > 0.0, "SLO horizon must be positive");
+    let mut rng = Rng::seed_from_u64(seed);
+    trace
+        .iter()
+        .map(|r| {
+            let roll = rng.range_f64(0.0, 1.0);
+            let (priority, deadline) = if roll < premium {
+                (TIER_PREMIUM, Some(r.arrival + slo_s))
+            } else if roll < premium + standard {
+                (TIER_STANDARD, Some(r.arrival + 4.0 * slo_s))
+            } else {
+                (TIER_BEST_EFFORT, None)
+            };
+            OverloadRequest {
+                id: r.id,
+                arrival: r.arrival,
+                input_tokens: r.input_tokens,
+                output_tokens: r.output_tokens,
+                priority,
+                deadline,
+            }
+        })
+        .collect()
+}
+
+/// A sustained overload storm: `n` Mooncake-statistics requests arriving
+/// Poisson at `rate` req/s, tiered 20% premium / 30% standard / 50%
+/// best-effort with SLO horizon `slo_s`. Drive it at 1×, 1.5×, and 2×
+/// the rate a fleet sustains to sweep the overload regimes the
+/// admission gateway triages. Inputs are capped at 8k and outputs kept
+/// short so drill runs stay tractable — the contention under test is
+/// KV/batch admission, not raw token volume.
+pub fn overload_storm(n: usize, rate: f64, slo_s: f64, seed: u64) -> Vec<OverloadRequest> {
+    let mut trace = mooncake_trace(n, seed);
+    for r in trace.iter_mut() {
+        r.input_tokens = r.input_tokens.min(8192);
+        r.output_tokens = (r.output_tokens / 8).clamp(4, 32);
+    }
+    poisson_arrivals(&mut trace, rate, seed ^ 0x5702_11AD);
+    priority_tiers(&trace, 0.2, 0.3, slo_s, seed ^ 0x71E2_0AD5)
+}
+
+/// The thundering-herd rejoin: `k` GPUs fail staggered from `fail_at`,
+/// then **all rejoin at the same instant** `rejoin_at` — capacity
+/// returns as a step function while the gateway queue is at its
+/// deepest, exercising the re-admission burst (the opposite shape of
+/// [`super::cascade_then_heal`]'s staggered healing).
+pub fn thundering_herd(
+    k: usize,
+    fail_at: SimTime,
+    stagger: SimTime,
+    rejoin_at: SimTime,
+) -> FaultTimeline {
+    assert!(k >= 1 && stagger >= 0.0);
+    let last_fail = fail_at + (k - 1) as f64 * stagger;
+    assert!(
+        rejoin_at > last_fail,
+        "herd rejoin at {rejoin_at} must follow the last failure at {last_fail}"
+    );
+    let mut events = Vec::with_capacity(k * 2);
+    for g in 0..k {
+        events.push(TimelineEvent::fail(fail_at + g as f64 * stagger, g));
+    }
+    for g in 0..k {
+        events.push(TimelineEvent::rejoin(rejoin_at, g));
+    }
+    FaultTimeline::new(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storm_tiers_split_and_deadlines_follow_arrivals() {
+        let storm = overload_storm(400, 20.0, 2.0, 17);
+        assert_eq!(storm.len(), 400);
+        let premium = storm.iter().filter(|r| r.priority == TIER_PREMIUM).count();
+        let standard = storm.iter().filter(|r| r.priority == TIER_STANDARD).count();
+        let best = storm.iter().filter(|r| r.priority == TIER_BEST_EFFORT).count();
+        assert!(premium > 40 && premium < 120, "premium ~20% (got {premium})");
+        assert!(standard > 70 && standard < 170, "standard ~30% (got {standard})");
+        assert_eq!(premium + standard + best, 400);
+        for r in &storm {
+            match r.priority {
+                TIER_PREMIUM => assert_eq!(r.deadline, Some(r.arrival + 2.0)),
+                TIER_STANDARD => assert_eq!(r.deadline, Some(r.arrival + 8.0)),
+                _ => assert_eq!(r.deadline, None),
+            }
+            let opts = r.options();
+            assert_eq!(opts.priority, r.priority);
+            assert_eq!(opts.deadline, r.deadline);
+            assert_eq!(opts.arrival, r.arrival);
+            assert_eq!(r.prompt().len(), r.input_tokens);
+        }
+        // Seeded: regenerating is bit-identical.
+        assert_eq!(storm, overload_storm(400, 20.0, 2.0, 17));
+    }
+
+    #[test]
+    fn thundering_herd_rejoins_as_a_step() {
+        let tl = thundering_herd(3, 1.0, 0.2, 5.0);
+        tl.validate(8).unwrap();
+        assert_eq!(tl.len(), 6);
+        assert_eq!(tl.max_concurrent_down(), 3, "all k down before the herd returns");
+    }
+
+    #[test]
+    #[should_panic]
+    fn herd_rejoin_must_follow_failures() {
+        thundering_herd(3, 1.0, 1.0, 2.0);
+    }
+}

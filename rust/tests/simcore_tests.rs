@@ -20,7 +20,8 @@ use std::collections::HashMap;
 
 use failsafe::benchkit::forall;
 use failsafe::engine::{
-    replay, AdvanceLimit, EngineEvent, ReplayPace, ServeReport, ServingBackend, SubmitOptions,
+    replay, AdvanceLimit, EngineEvent, PreemptPolicy, ReplayPace, ServeReport, ServingBackend,
+    SubmitOptions,
 };
 use failsafe::fleet::{Fleet, FleetReplayOutcome};
 use failsafe::model::llama3_70b;
@@ -247,6 +248,81 @@ fn regression_seed_abort_under_pressure() {
 #[test]
 fn regression_seed_deadline_heavy_mix() {
     differential_case(&mut Rng::seed_from_u64(0xFACE_0FF1));
+}
+
+/// Preemption/swap differential: a priority-tiered program under a tiny
+/// decode batch with a [`PreemptPolicy`] forces swap-outs and resumes;
+/// the span cores degrade to one-round spans while work is parked, so
+/// the stepper and the exact core must stay bit-identical through every
+/// preemption boundary — including the preempt/swap telemetry.
+fn preemption_differential_case(rng: &mut Rng) {
+    let p = gen_program(rng, true);
+    let max_batch = 2 + rng.range(0, 6);
+    let run = |mode: CoreMode| {
+        let mut sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, p.world)
+            .with_model(llama3_70b())
+            .with_prefix_sharing(p.sharing)
+            .with_preemption(PreemptPolicy::default());
+        sim.max_batch = max_batch;
+        let mut s = sim.session();
+        s.set_core_mode(mode);
+        let mut ids = Vec::with_capacity(p.reqs.len());
+        for (prompt, opts) in &p.reqs {
+            ids.push(s.submit_with(prompt, *opts).expect("submit"));
+        }
+        let mut events = Vec::new();
+        let mut tokens = 0usize;
+        for &(rounds, action) in &p.script {
+            tokens +=
+                s.advance_until(AdvanceLimit::steps(rounds), &mut events).expect("advance").tokens;
+            let world = s.world();
+            match action {
+                Action::Fail(r) if world > 1 => {
+                    let _ = s.inject_failure(r % world, p.method);
+                }
+                Action::Fail(_) => {}
+                Action::Rejoin => {
+                    let _ = s.inject_rejoin(p.method);
+                }
+                Action::SlowDown(r, f) => {
+                    let _ = s.inject_slowdown(r % world, f);
+                }
+                Action::Restore(r) => {
+                    let _ = s.inject_slowdown(r % world, 1.0);
+                }
+                Action::Abort(i) => {
+                    let _ = s.abort(ids[i % ids.len()]);
+                }
+            }
+        }
+        while !s.is_idle() {
+            tokens +=
+                s.advance_until(AdvanceLimit::unbounded(), &mut events).expect("advance").tokens;
+        }
+        let lifecycle: Vec<EngineEvent> = events
+            .into_iter()
+            .filter(|e| !matches!(e, EngineEvent::TokenEmitted { .. }))
+            .collect();
+        (s.report(), lifecycle, tokens, s.preemptions(), s.swap_ins())
+    };
+    let (ra, ea, ta, pa, swa) = run(CoreMode::Stepper);
+    let (rb, eb, tb, pb, swb) = run(CoreMode::Exact);
+    assert_reports_identical(&ra, &rb, "stepper vs exact under preemption");
+    assert_eq!(ea, eb, "lifecycle event streams diverged under preemption");
+    assert_eq!(ta, tb, "token counts diverged under preemption");
+    assert_eq!((pa, swa), (pb, swb), "preempt/swap telemetry diverged");
+}
+
+#[test]
+fn exact_core_matches_stepper_under_preemption() {
+    forall("simcore-preemption-differential", fuzz_cases().min(12), 0x9EE7, |rng| {
+        preemption_differential_case(rng);
+    });
+}
+
+#[test]
+fn regression_seed_preempt_swap_storm() {
+    preemption_differential_case(&mut Rng::seed_from_u64(0x5A9_0007));
 }
 
 /// The batched core is *not* bit-exact (trapezoid span time, uniform-gap
