@@ -1,0 +1,196 @@
+//! Heterogeneous + elastic fleet sweep.
+//!
+//! Two comparisons, both acceptance-gated:
+//!
+//! 1. **Capacity-proportional vs uniform sharding** on a mixed
+//!    4×H100 + 4×A100 TP group: the uniform FailSafe plan pays the A100
+//!    straggler on every synchronized layer; the capacity-proportional
+//!    plan apportions heads/FFN/KV by blended roofline capacity so every
+//!    rank finishes together. Records both modeled step times and the
+//!    combined (prefill + decode) goodput ratio, asserting ≥ 1.3×.
+//! 2. **Autoscaled vs static fleets under a diurnal trace**: the same
+//!    mixed fleet served statically (every replica billed for the whole
+//!    run) and behind the autoscaler (billed per active replica-second,
+//!    in H100-rank unit-seconds), plus an all-H100 static reference.
+//!    Asserts the autoscaled fleet wins on cost-per-token.
+//!
+//! Writes `BENCH_elastic.json` at the repo root via
+//! [`failsafe::benchkit::BenchLog`]; the `cost-per-token` rows are the
+//! elasticity gap tracked across PRs.
+
+use failsafe::benchkit::{section, BenchLog};
+use failsafe::cluster::{capacity_weights, GpuSpec, Interconnect};
+use failsafe::engine::SubmitOptions;
+use failsafe::fleet::{
+    run_autoscaled, run_static, AdmissionGateway, AdmissionPolicy, AutoscalePolicy, Autoscaler,
+    Fleet,
+};
+use failsafe::model::llama3_70b;
+use failsafe::sharding::{ShardPlan, CAPACITY_DECODE_FRAC};
+use failsafe::simulator::{
+    DecodeWork, OnlineMode, OnlineSim, PrefillWork, StepCostModel, SystemConfig,
+};
+use failsafe::traces::{diurnal_arrivals, mooncake_trace};
+
+const WORLD: usize = 8;
+const H100S: usize = 4;
+const REPLICAS: usize = 4;
+const REQUESTS: usize = 64;
+const PERIOD_S: f64 = 60.0;
+const BASE_RATE: f64 = 0.5;
+const PEAK_RATE: f64 = 8.0;
+const SEED: u64 = 42;
+
+fn mixed_specs() -> Vec<GpuSpec> {
+    (0..WORLD)
+        .map(|r| if r < H100S { GpuSpec::h100() } else { GpuSpec::a100() })
+        .collect()
+}
+
+/// `REPLICAS`-replica fleet: all H100, or half the replicas all-A100.
+fn build_fleet(mixed: bool) -> Fleet {
+    let h_sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, WORLD)
+        .with_model(llama3_70b());
+    let a_sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, WORLD)
+        .with_model(llama3_70b())
+        .with_devices(vec![GpuSpec::a100(); WORLD]);
+    let mut fleet = Fleet::new();
+    let a100_replicas = if mixed { REPLICAS / 2 } else { 0 };
+    for session in h_sim.sessions(REPLICAS - a100_replicas) {
+        fleet.add_replica(Box::new(session));
+    }
+    for session in a_sim.sessions(a100_replicas) {
+        fleet.add_replica(Box::new(session));
+    }
+    fleet
+}
+
+fn main() {
+    let mut log = BenchLog::new();
+    let m = llama3_70b();
+    section(&format!(
+        "elastic sweep: {} on {H100S}x H100 + {}x A100 (TP{WORLD}), {REPLICAS} replicas",
+        m.name,
+        WORLD - H100S
+    ));
+
+    // ── capacity-proportional vs uniform sharding ──
+    let specs = mixed_specs();
+    let ic = Interconnect::for_devices(&specs);
+    let uni = StepCostModel::new_heterogeneous(&ShardPlan::failsafe(&m, WORLD), &specs, &ic);
+    let prop =
+        StepCostModel::new_heterogeneous(&ShardPlan::capacity_proportional(&m, &specs), &specs, &ic);
+    let weights = capacity_weights(&specs, CAPACITY_DECODE_FRAC);
+    let (batch, ctx, steps) = (64usize, 4096usize, 64usize);
+    let uni_batch = DecodeWork::capacity_homed(batch, ctx, &vec![1.0; WORLD]);
+    let prop_batch = DecodeWork::capacity_homed(batch, ctx, &weights);
+    let chunks = vec![PrefillWork { tokens: ctx, context: 0, home: 0 }];
+    for (name, cost, work) in
+        [("uniform", &uni, &uni_batch), ("capacity-proportional", &prop, &prop_batch)]
+    {
+        log.record_ns(
+            &format!("elastic: mixed-fleet decode step ({name})"),
+            cost.decode_step_time(work) * 1e9,
+        );
+        log.record_ns(
+            &format!("elastic: mixed-fleet prefill step ({name})"),
+            cost.prefill_step_time(&chunks) * 1e9,
+        );
+    }
+    let goodput = |cost: &StepCostModel, work: &[DecodeWork]| -> f64 {
+        let wall = cost.prefill_step_time(&chunks) + steps as f64 * cost.decode_step_time(work);
+        (ctx + steps * work.len()) as f64 / wall
+    };
+    let (g_uni, g_prop) = (goodput(&uni, &uni_batch), goodput(&prop, &prop_batch));
+    log.record_ratio("elastic: capacity-proportional vs uniform goodput", g_prop, g_uni);
+    println!(
+        "  sharding: uniform {g_uni:.0} tok/s vs capacity-proportional {g_prop:.0} tok/s \
+         ({:.2}x)",
+        g_prop / g_uni
+    );
+    assert!(
+        g_prop >= 1.3 * g_uni,
+        "capacity-proportional plan must beat uniform >= 1.3x on mixed hardware, got {:.2}x",
+        g_prop / g_uni
+    );
+
+    // ── autoscaled vs static fleets under the diurnal trace ──
+    let mut trace = mooncake_trace(REQUESTS, SEED);
+    diurnal_arrivals(&mut trace, BASE_RATE, PEAK_RATE, PERIOD_S, SEED);
+    let workload: Vec<(Vec<u32>, SubmitOptions)> = trace
+        .iter()
+        .map(|r| {
+            (
+                vec![1u32; r.input_tokens.max(1)],
+                SubmitOptions::new(r.output_tokens.max(1)).at(r.arrival),
+            )
+        })
+        .collect();
+    let scale_policy = AutoscalePolicy {
+        scale_up_load: 512.0,
+        scale_down_load: 64.0,
+        cooldown_s: 1.0,
+        ..AutoscalePolicy::default()
+    };
+
+    let mut homo = build_fleet(false);
+    let mut gate = AdmissionGateway::new(AdmissionPolicy::default());
+    let (homo_report, homo_bill) = run_static(&mut homo, &mut gate, &workload).unwrap();
+
+    let mut hetero = build_fleet(true);
+    let mut gate = AdmissionGateway::new(AdmissionPolicy::default());
+    let (hetero_report, hetero_bill) = run_static(&mut hetero, &mut gate, &workload).unwrap();
+
+    let mut auto_fleet = build_fleet(true);
+    let mut gate = AdmissionGateway::new(AdmissionPolicy::default());
+    let mut scaler = Autoscaler::new(scale_policy);
+    let auto_report = run_autoscaled(&mut auto_fleet, &mut gate, &mut scaler, &workload).unwrap();
+    let auto_bill = scaler.unit_seconds();
+
+    for (name, report, bill) in [
+        ("all-H100 static", &homo_report, homo_bill),
+        ("mixed static", &hetero_report, hetero_bill),
+        ("mixed autoscaled", &auto_report, auto_bill),
+    ] {
+        let tokens = report.goodput_tokens();
+        assert!(tokens > 0, "{name}: diurnal run produced no goodput");
+        log.record_ratio(
+            &format!("elastic: cost-per-token, {name} (unit-s/tok)"),
+            bill,
+            tokens as f64,
+        );
+        log.record_ns(&format!("elastic: simulated makespan ({name})"), report.wall_s * 1e9);
+        println!(
+            "  {name:<18} goodput {tokens:>7} tok | bill {bill:>8.0} unit-s | \
+             {:.3} unit-s/1k tok",
+            1000.0 * bill / tokens as f64
+        );
+    }
+    let (ups, downs) = scaler.action_counts();
+    log.record_ratio("elastic: autoscale actions (up/down)", ups as f64, downs.max(1) as f64);
+    assert!(ups >= 1 && downs >= 1, "diurnal swing must drive both directions ({ups}/{downs})");
+    let static_cpt = hetero_bill / hetero_report.goodput_tokens() as f64;
+    let auto_cpt = auto_bill / auto_report.goodput_tokens() as f64;
+    assert!(
+        auto_cpt < static_cpt,
+        "autoscaled cost-per-token must beat static peak provisioning \
+         ({auto_cpt:.4} vs {static_cpt:.4})"
+    );
+    println!(
+        "  autoscaled beats static peak provisioning: {:.3} vs {:.3} unit-s/1k tok ✓",
+        1000.0 * auto_cpt,
+        1000.0 * static_cpt
+    );
+
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_elastic.json").to_string()
+    });
+    match log.write_json("elastic", std::path::Path::new(&out)) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => {
+            // A silent write failure would let CI validate a stale file.
+            eprintln!("\nfailed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -95,10 +95,25 @@ pub struct Node {
 
 impl Node {
     pub fn new(n: usize, spec: GpuSpec) -> Self {
+        Node::mixed(vec![spec; n])
+    }
+
+    /// A node whose devices span GPU generations — device `i` gets
+    /// `specs[i]`. Physical order is placement order: rank `r` is the
+    /// r-th healthy device, so a shard plan built against `specs` lines
+    /// up rank-for-rank with this node.
+    pub fn mixed(specs: Vec<GpuSpec>) -> Self {
         Node {
-            devices: (0..n).map(|i| GpuDevice::new(i, spec.clone())).collect(),
+            devices: specs.into_iter().enumerate().map(|(i, s)| GpuDevice::new(i, s)).collect(),
             host_dram_bytes: 2 * (1 << 40),
         }
+    }
+
+    /// Per-device specs in physical order, regardless of health — the
+    /// input shape [`crate::cluster::capacity_weights`] and
+    /// heterogeneous cost models consume.
+    pub fn specs(&self) -> Vec<GpuSpec> {
+        self.devices.iter().map(|d| d.spec().clone()).collect()
     }
 
     /// Device ids currently healthy, in physical order. TP rank `r` is the
@@ -164,6 +179,19 @@ mod tests {
         d.weight_bytes = 20 * (1 << 30);
         d.kv_bytes = 10 * (1 << 30);
         assert_eq!(d.free_bytes(), spec.hbm_bytes - spec.hbm_bytes / 16 - 30 * (1 << 30));
+    }
+
+    #[test]
+    fn mixed_node_keeps_per_device_specs() {
+        let node =
+            Node::mixed(vec![GpuSpec::h100(), GpuSpec::a100(), GpuSpec::h100(), GpuSpec::a100()]);
+        assert_eq!(node.n_healthy(), 4);
+        assert_eq!(node.device(1).spec().bf16_flops, GpuSpec::a100().bf16_flops);
+        assert_eq!(node.device(2).spec().bf16_flops, GpuSpec::h100().bf16_flops);
+        assert_eq!(node.specs().len(), 4);
+        // Uniform constructor is the degenerate case of mixed.
+        let uni = Node::new(2, GpuSpec::h100());
+        assert_eq!(uni.specs(), vec![GpuSpec::h100(), GpuSpec::h100()]);
     }
 
     #[test]

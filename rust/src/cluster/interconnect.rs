@@ -34,6 +34,23 @@ impl Interconnect {
         Interconnect { spec, message_latency_s: 10e-6 }
     }
 
+    /// Fabric model for a mixed-generation group: ring collectives and
+    /// peer transfers pace at the *slowest member's* link, so the
+    /// effective fabric is the element-wise bottleneck of the member
+    /// specs (min bandwidth on every link, max fixed latency). For a
+    /// uniform group this is identical to [`Interconnect::new`].
+    pub fn for_devices(specs: &[GpuSpec]) -> Self {
+        assert!(!specs.is_empty(), "for_devices needs at least one device spec");
+        let mut bottleneck = specs[0].clone();
+        for s in &specs[1..] {
+            bottleneck.nvlink_bw = bottleneck.nvlink_bw.min(s.nvlink_bw);
+            bottleneck.pcie_bw = bottleneck.pcie_bw.min(s.pcie_bw);
+            bottleneck.collective_latency_s =
+                bottleneck.collective_latency_s.max(s.collective_latency_s);
+        }
+        Interconnect::new(bottleneck)
+    }
+
     fn bw(&self, class: TransferClass) -> f64 {
         match class {
             TransferClass::NvLink => self.spec.nvlink_bw,
@@ -104,6 +121,20 @@ mod tests {
         // wire bytes ratio: 2*(7/8) / 2*(1/2) = 1.75
         let wire_ratio = (t8 - 10e-6) / (t2 - 10e-6);
         assert!((wire_ratio - 1.75).abs() < 0.01, "{wire_ratio}");
+    }
+
+    #[test]
+    fn mixed_fabric_paces_at_slowest_link() {
+        let uniform = Interconnect::new(GpuSpec::h100());
+        let a100_only = Interconnect::new(GpuSpec::a100());
+        let mixed = Interconnect::for_devices(&[GpuSpec::h100(), GpuSpec::a100()]);
+        let gb = 1 << 30;
+        // A ring through an A100 runs at A100 NVLink speed.
+        assert_eq!(mixed.allreduce_time(2, gb), a100_only.allreduce_time(2, gb));
+        assert!(mixed.allreduce_time(2, gb) > uniform.allreduce_time(2, gb));
+        // Uniform group degenerates to the plain constructor.
+        let same = Interconnect::for_devices(&[GpuSpec::h100(), GpuSpec::h100()]);
+        assert_eq!(same.allreduce_time(8, gb), uniform.allreduce_time(8, gb));
     }
 
     #[test]

@@ -21,4 +21,4 @@ pub use fault::{
     FaultEvent, FaultInjector, FaultKind, FaultTimeline, TimelineEvent, TimelineEventKind,
 };
 pub use interconnect::{Interconnect, TransferClass};
-pub use spec::GpuSpec;
+pub use spec::{capacity_weights, DeviceClass, GpuSpec};

@@ -52,6 +52,27 @@ impl GpuSpec {
         }
     }
 
+    /// A100-SXM-class device (80 GB HBM2e, NVLink 3, PCIe 4.0 ×16).
+    ///
+    /// Same HBM capacity as the H100 but roughly a third of the matmul
+    /// throughput and 60% of the memory bandwidth — the canonical
+    /// "last-generation" device a heterogeneous fleet mixes in. Fixed
+    /// software latencies (launch, collective setup, recovery floor) are
+    /// host-side and generation-independent.
+    pub fn a100() -> Self {
+        GpuSpec {
+            hbm_bytes: 80 * (1 << 30),
+            bf16_flops: 312e12,
+            mfu: 0.45,
+            hbm_bw: 2.0e12,
+            nvlink_bw: 300e9,
+            pcie_bw: 25e9,
+            kernel_launch_s: 4e-6,
+            collective_latency_s: 10e-6,
+            recovery_floor_s: 15e-3,
+        }
+    }
+
     /// Effective matmul throughput after derating.
     pub fn effective_flops(&self) -> f64 {
         self.bf16_flops * self.mfu
@@ -71,6 +92,103 @@ impl GpuSpec {
     pub fn roofline_time(&self, flops: f64, bytes: f64) -> f64 {
         self.compute_time(flops).max(self.hbm_time(bytes))
     }
+
+    /// Blended-roofline throughput of this device relative to
+    /// `reference`, in "reference-rank units" (an H100 measured against
+    /// an H100 is 1.0). Harmonic blend of the compute and memory rate
+    /// ratios at the serving default of half memory-bound wall-clock —
+    /// the same averaging [`capacity_weights`] uses, so replica scoring
+    /// and shard placement agree on what a device is worth.
+    pub fn relative_capacity(&self, reference: &GpuSpec) -> f64 {
+        let c = self.effective_flops() / reference.effective_flops();
+        let m = self.hbm_bw / reference.hbm_bw;
+        2.0 / (1.0 / c + 1.0 / m)
+    }
+}
+
+/// A named device generation with a relative rental cost.
+///
+/// The autoscaler bills fleets in *unit-seconds*: one unit-second is one
+/// H100 active for one second. A cheaper, slower generation makes
+/// cost-per-token comparisons meaningful — an A100 delivers roughly a
+/// third of the compute for 40% of the price, so whether to keep it in
+/// the fleet depends on the workload's roofline, which is exactly what
+/// [`capacity_weights`] and the elastic bench measure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    H100,
+    A100,
+}
+
+impl DeviceClass {
+    pub fn spec(&self) -> GpuSpec {
+        match self {
+            DeviceClass::H100 => GpuSpec::h100(),
+            DeviceClass::A100 => GpuSpec::a100(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceClass::H100 => "H100",
+            DeviceClass::A100 => "A100",
+        }
+    }
+
+    /// Relative rental cost in units per device-second (H100 ≡ 1.0).
+    pub fn cost_rate(&self) -> f64 {
+        match self {
+            DeviceClass::H100 => 1.0,
+            DeviceClass::A100 => 0.4,
+        }
+    }
+}
+
+/// Capacity weights for a mixed-generation TP group, normalized so the
+/// fastest rank gets 1.0.
+///
+/// A single weight vector has to balance two rooflines at once: prefill
+/// is compute-bound (rank time ∝ work / effective_flops) and decode is
+/// memory-bound (rank time ∝ work / hbm_bw). Weighting by FLOPs alone
+/// overloads a bandwidth-poor device during decode; weighting by
+/// bandwidth alone starves prefill. We blend the two per-rank *rates*
+/// harmonically — `1 / (decode_frac/bw_norm + (1-decode_frac)/flops_norm)`
+/// — which is the steady-state throughput of a rank that spends
+/// `decode_frac` of its wall-clock memory-bound, the same averaging the
+/// roofline itself performs. `decode_frac = 0.5` is the serving
+/// default (chunked prefill interleaves the two phases roughly evenly).
+///
+/// The result is finally clamped by relative HBM capacity: KV placement
+/// follows head placement, so a rank must not be assigned a larger share
+/// of heads than its share of the largest rank's HBM can hold
+/// (`ShardPlan::capacity_proportional` relies on this for its
+/// no-rank-over-budget property).
+pub fn capacity_weights(devices: &[GpuSpec], decode_frac: f64) -> Vec<f64> {
+    assert!(!devices.is_empty(), "capacity_weights needs at least one device");
+    assert!(
+        (0.0..=1.0).contains(&decode_frac),
+        "decode_frac must be in [0, 1], got {decode_frac}"
+    );
+    let max_flops =
+        devices.iter().map(|d| d.effective_flops()).fold(f64::MIN, f64::max);
+    let max_bw = devices.iter().map(|d| d.hbm_bw).fold(f64::MIN, f64::max);
+    let max_hbm = devices.iter().map(|d| d.hbm_bytes).max().unwrap_or(1).max(1);
+    devices
+        .iter()
+        .map(|d| {
+            let c = d.effective_flops() / max_flops;
+            let m = d.hbm_bw / max_bw;
+            let blended = if decode_frac <= 0.0 {
+                c
+            } else if decode_frac >= 1.0 {
+                m
+            } else {
+                1.0 / (decode_frac / m + (1.0 - decode_frac) / c)
+            };
+            let hbm_cap = d.hbm_bytes as f64 / max_hbm as f64;
+            blended.min(hbm_cap)
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -83,6 +201,67 @@ mod tests {
         assert_eq!(g.hbm_bytes, 85_899_345_920);
         assert!(g.nvlink_bw > g.pcie_bw * 5.0, "NVLink must dwarf PCIe");
         assert!(g.hbm_bw > g.nvlink_bw);
+    }
+
+    #[test]
+    fn a100_slower_on_every_axis_same_hbm() {
+        let h = GpuSpec::h100();
+        let a = GpuSpec::a100();
+        assert_eq!(a.hbm_bytes, h.hbm_bytes, "both 80 GB parts");
+        assert!(a.effective_flops() < h.effective_flops());
+        assert!(a.hbm_bw < h.hbm_bw);
+        assert!(a.nvlink_bw < h.nvlink_bw);
+        assert!(a.pcie_bw < h.pcie_bw);
+        // Generation-independent software latencies.
+        assert_eq!(a.kernel_launch_s, h.kernel_launch_s);
+        assert_eq!(a.collective_latency_s, h.collective_latency_s);
+    }
+
+    #[test]
+    fn device_class_roundtrip() {
+        assert_eq!(DeviceClass::H100.spec(), GpuSpec::h100());
+        assert_eq!(DeviceClass::A100.spec(), GpuSpec::a100());
+        assert!(DeviceClass::A100.cost_rate() < DeviceClass::H100.cost_rate());
+    }
+
+    #[test]
+    fn capacity_weights_fastest_gets_one() {
+        let devs = vec![GpuSpec::h100(), GpuSpec::a100(), GpuSpec::h100()];
+        let w = capacity_weights(&devs, 0.5);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0], 1.0);
+        assert_eq!(w[2], 1.0);
+        assert!(w[1] > 0.0 && w[1] < 1.0);
+    }
+
+    #[test]
+    fn capacity_weights_blend_sits_between_rooflines() {
+        let devs = vec![GpuSpec::h100(), GpuSpec::a100()];
+        let flops_only = capacity_weights(&devs, 0.0)[1];
+        let bw_only = capacity_weights(&devs, 1.0)[1];
+        let blended = capacity_weights(&devs, 0.5)[1];
+        // A100: flops ratio ≈ 0.315, bw ratio ≈ 0.597.
+        assert!((flops_only - 312.0 / 989.0).abs() < 1e-9);
+        assert!((bw_only - 2.0 / 3.35).abs() < 1e-9);
+        assert!(blended > flops_only && blended < bw_only);
+    }
+
+    #[test]
+    fn capacity_weights_uniform_fleet_all_ones() {
+        let devs = vec![GpuSpec::h100(); 4];
+        for w in capacity_weights(&devs, 0.5) {
+            assert_eq!(w, 1.0);
+        }
+    }
+
+    #[test]
+    fn capacity_weights_hbm_clamp() {
+        let mut small = GpuSpec::h100();
+        small.hbm_bytes /= 4;
+        let devs = vec![GpuSpec::h100(), small];
+        let w = capacity_weights(&devs, 0.5);
+        // Same rates, quarter the HBM: KV placement caps the share.
+        assert_eq!(w[1], 0.25);
     }
 
     #[test]

@@ -159,6 +159,15 @@ pub trait ServingBackend {
     fn effective_capacity(&self) -> f64 {
         self.world() as f64
     }
+    /// Hardware serving capacity in *H100-rank units*: Σ over live ranks
+    /// of their device-class throughput relative to an H100. A uniform
+    /// H100 backend returns `world()`; a 4×A100 replica returns ~4×0.4.
+    /// Unlike [`ServingBackend::effective_capacity`] this reflects what
+    /// the hardware *is*, not its current health — fleet routing and the
+    /// autoscaler multiply the two (health as a fraction of hardware).
+    fn hardware_capacity(&self) -> f64 {
+        self.world() as f64
+    }
     /// The backend clock in seconds (wall-based for the engine, simulated
     /// for the cost-model backend).
     fn now(&self) -> SimTime;

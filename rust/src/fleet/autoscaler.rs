@@ -1,0 +1,399 @@
+//! Fleet autoscaling: grow and shrink the set of *active* replicas from
+//! the load signals the fleet already produces.
+//!
+//! The fleet is provisioned at its peak size once; what the autoscaler
+//! changes is how many replicas are actually serving (and being billed).
+//! Scaling **down** drains a replica with the existing
+//! [`Fleet::drain`] machinery — no new placements, fresh requests
+//! redirect immediately, started requests finish in place — so no token
+//! is ever lost to a scale-down. Scaling **up** resumes a drained
+//! replica ([`Fleet::resume`]); the next router placement and gateway
+//! pump start feeding it. Both directions reuse the exact reconfig +
+//! redirect paths that failure handling exercises, which is what makes
+//! the autoscaled fleet differentially testable against a static one.
+//!
+//! Signals, read per tick: router load per health-effective capacity
+//! ([`fleet_load`]) and the admission gateway's queue depth — a deep
+//! gateway queue means the fleet is refusing work the operator wants
+//! served, the strongest possible scale-up signal.
+//!
+//! Cost accounting bills **unit-seconds**: one unit-second is one
+//! H100-rank active for one second, so an all-A100 replica accrues at
+//! ~0.4× the rate of an H100 one ([`crate::cluster::DeviceClass`] and
+//! [`ServingBackend::hardware_capacity`] agree on the ratio). A
+//! draining replica keeps billing until it actually goes idle — drains
+//! are not free the instant they are requested.
+
+use anyhow::Result;
+
+use super::admission::{fleet_load, fleet_now, run_gated, AdmissionGateway};
+use super::{Fleet, FleetReport, ReplicaId};
+use crate::engine::SubmitOptions;
+use crate::SimTime;
+
+/// Autoscaler thresholds. Loads are in the same booked-token-units per
+/// effective rank that [`fleet_load`] reports (and that
+/// [`super::AdmissionPolicy::target_load`] gates on).
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalePolicy {
+    /// Load at or above which one drained replica is resumed per tick.
+    pub scale_up_load: f64,
+    /// Load at or below which one active replica is drained per tick.
+    pub scale_down_load: f64,
+    /// Gateway queue depth that also triggers a scale-up (parked work is
+    /// demand the load signal cannot see).
+    pub queue_up: usize,
+    /// Never drain below this many active replicas.
+    pub min_active: usize,
+    /// Never resume above this many active replicas.
+    pub max_active: usize,
+    /// Minimum simulated seconds between scaling actions (hysteresis —
+    /// without it the scaler flaps on every load oscillation).
+    pub cooldown_s: f64,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            scale_up_load: 1536.0,
+            scale_down_load: 256.0,
+            queue_up: 1,
+            min_active: 1,
+            max_active: usize::MAX,
+            cooldown_s: 2.0,
+        }
+    }
+}
+
+/// One scaling action, in fleet time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    pub at: SimTime,
+    pub replica: ReplicaId,
+    /// True for a resume (scale-up), false for a drain (scale-down).
+    pub up: bool,
+}
+
+/// The scaling loop driver plus the unit-second meter. One instance per
+/// fleet run; tick it after every fleet step (and gateway pump).
+pub struct Autoscaler {
+    policy: AutoscalePolicy,
+    last_action: SimTime,
+    events: Vec<ScaleEvent>,
+    /// Unit-seconds billed per replica, settled lazily up to
+    /// `settled_at` on every tick.
+    billed: Vec<f64>,
+    settled_at: SimTime,
+}
+
+impl Autoscaler {
+    pub fn new(policy: AutoscalePolicy) -> Autoscaler {
+        assert!(policy.scale_up_load > policy.scale_down_load, "thresholds must not overlap");
+        assert!(policy.min_active >= 1, "an autoscaled fleet keeps at least one active replica");
+        assert!(policy.cooldown_s >= 0.0);
+        Autoscaler {
+            policy,
+            last_action: f64::NEG_INFINITY,
+            events: Vec::new(),
+            billed: Vec::new(),
+            settled_at: 0.0,
+        }
+    }
+
+    pub fn policy(&self) -> AutoscalePolicy {
+        self.policy
+    }
+
+    /// All scaling actions so far, in order.
+    pub fn scale_events(&self) -> &[ScaleEvent] {
+        &self.events
+    }
+
+    /// `(ups, downs)` action counts — the differential fuzz harness
+    /// asserts both directions were exercised.
+    pub fn action_counts(&self) -> (usize, usize) {
+        let ups = self.events.iter().filter(|e| e.up).count();
+        (ups, self.events.len() - ups)
+    }
+
+    /// Unit-seconds billed so far (settled through the last tick).
+    pub fn unit_seconds(&self) -> f64 {
+        self.billed.iter().sum()
+    }
+
+    /// Billed cost per goodput token — the figure of merit the elastic
+    /// bench compares against static peak provisioning.
+    pub fn cost_per_token(&self, report: &FleetReport) -> f64 {
+        let tokens = report.goodput_tokens();
+        if tokens == 0 {
+            f64::INFINITY
+        } else {
+            self.unit_seconds() / tokens as f64
+        }
+    }
+
+    /// Pre-run setup: drain the highest-id replicas down to
+    /// `min_active`, so the fleet starts small and *grows* into demand.
+    /// Not billed and not cooldown-relevant — the run has not started.
+    pub fn park_to_min(&mut self, fleet: &mut Fleet) -> Result<()> {
+        for r in (self.policy.min_active..fleet.len()).rev() {
+            fleet.drain(r)?;
+        }
+        Ok(())
+    }
+
+    /// Advance the meter and apply at most one scaling action. Call
+    /// after every fleet step with the gateway's current queue depth.
+    pub fn tick(&mut self, fleet: &mut Fleet, queue_len: usize) -> Result<Option<ScaleEvent>> {
+        let now = fleet_now(fleet);
+        self.settle(fleet, now);
+        if now - self.last_action < self.policy.cooldown_s {
+            return Ok(None);
+        }
+        let load = fleet_load(fleet);
+        let active: Vec<ReplicaId> =
+            (0..fleet.len()).filter(|&r| !fleet.is_draining(r)).collect();
+        let parked: Vec<ReplicaId> =
+            (0..fleet.len()).filter(|&r| fleet.is_draining(r)).collect();
+
+        let event = if (load >= self.policy.scale_up_load || queue_len >= self.policy.queue_up)
+            && active.len() < self.policy.max_active
+        {
+            // Resume the lowest-id drained replica (deterministic).
+            parked.first().map(|&r| {
+                fleet.resume(r);
+                ScaleEvent { at: now, replica: r, up: true }
+            })
+        } else if load <= self.policy.scale_down_load && active.len() > self.policy.min_active {
+            // Drain the highest-id active replica (deterministic); its
+            // fresh requests redirect, started ones finish in place.
+            match active.last() {
+                Some(&r) => {
+                    fleet.drain(r)?;
+                    Some(ScaleEvent { at: now, replica: r, up: false })
+                }
+                None => None,
+            }
+        } else {
+            None
+        };
+        if let Some(e) = event {
+            self.last_action = now;
+            self.events.push(e);
+        }
+        Ok(event)
+    }
+
+    /// Settle unit-second billing up to `now`: every replica that is
+    /// serving — or still draining in-flight work — accrues at its
+    /// hardware capacity.
+    fn settle(&mut self, fleet: &Fleet, now: SimTime) {
+        self.billed.resize(fleet.len(), 0.0);
+        let dt = now - self.settled_at;
+        if dt <= 0.0 {
+            return;
+        }
+        for r in 0..fleet.len() {
+            if !fleet.is_draining(r) || !fleet.backend(r).is_idle() {
+                self.billed[r] += fleet.backend(r).hardware_capacity() * dt;
+            }
+        }
+        self.settled_at = now;
+    }
+}
+
+/// Unit-second rate of the *whole* fleet regardless of draining state —
+/// what a static peak-provisioned deployment pays per second. Multiply
+/// by a run's wall-clock for the static bill the autoscaler undercuts.
+pub fn fleet_unit_rate(fleet: &Fleet) -> f64 {
+    (0..fleet.len()).map(|r| fleet.backend(r).hardware_capacity()).sum()
+}
+
+/// Drive an arrival-ordered workload through a gated, autoscaled fleet
+/// to completion: [`run_gated`]'s loop with an autoscaler tick after
+/// every step. The fleet starts parked at `min_active` and grows into
+/// demand; the meter settles through the final step.
+pub fn run_autoscaled(
+    fleet: &mut Fleet,
+    gateway: &mut AdmissionGateway,
+    scaler: &mut Autoscaler,
+    workload: &[(Vec<u32>, SubmitOptions)],
+) -> Result<FleetReport> {
+    scaler.park_to_min(fleet)?;
+    let mut order: Vec<usize> = (0..workload.len()).collect();
+    order.sort_by(|&a, &b| workload[a].1.arrival.total_cmp(&workload[b].1.arrival));
+    for i in order {
+        let (prompt, opts) = &workload[i];
+        while fleet_now(fleet) < opts.arrival && !fleet.is_idle() {
+            fleet.step()?;
+            gateway.pump(fleet)?;
+            scaler.tick(fleet, gateway.queue_len())?;
+        }
+        gateway.pump(fleet)?;
+        gateway.offer(fleet, prompt, *opts)?;
+        scaler.tick(fleet, gateway.queue_len())?;
+    }
+    loop {
+        let admitted = gateway.pump(fleet)?;
+        scaler.tick(fleet, gateway.queue_len())?;
+        if fleet.is_idle() {
+            if gateway.queue_len() == 0 {
+                break;
+            }
+            if admitted == 0 {
+                gateway.shed_remaining();
+                break;
+            }
+        } else {
+            fleet.step()?;
+        }
+    }
+    scaler.settle(fleet, fleet_now(fleet));
+    Ok(fleet.report())
+}
+
+/// The static baseline for the same workload: every replica active for
+/// the whole run, no scaling. Returns the report and the peak bill
+/// (`fleet_unit_rate × wall`).
+pub fn run_static(
+    fleet: &mut Fleet,
+    gateway: &mut AdmissionGateway,
+    workload: &[(Vec<u32>, SubmitOptions)],
+) -> Result<(FleetReport, f64)> {
+    let rate = fleet_unit_rate(fleet);
+    let report = run_gated(fleet, gateway, workload)?;
+    let bill = rate * report.wall_s;
+    Ok((report, bill))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::AdmissionPolicy;
+    use crate::simulator::{OnlineMode, OnlineSim, SystemConfig};
+
+    fn fleet(replicas: usize) -> Fleet {
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4);
+        let mut fleet = Fleet::new();
+        for session in sim.sessions(replicas) {
+            fleet.add_replica(Box::new(session));
+        }
+        fleet
+    }
+
+    fn burst_then_quiet() -> Vec<(Vec<u32>, SubmitOptions)> {
+        // A front-loaded burst followed by a thin tail: load spikes,
+        // then collapses — both scaling directions must fire.
+        let mut w = Vec::new();
+        for i in 0..24 {
+            w.push((vec![1u32; 512], SubmitOptions::new(32).at(i as f64 * 1e-3)));
+        }
+        for i in 0..4 {
+            w.push((vec![1u32; 64], SubmitOptions::new(4).at(40.0 + i as f64 * 20.0)));
+        }
+        w
+    }
+
+    #[test]
+    fn scales_up_under_load_and_down_when_quiet() {
+        let mut f = fleet(4);
+        let mut gate = AdmissionGateway::new(AdmissionPolicy {
+            target_load: 512.0,
+            ..AdmissionPolicy::default()
+        });
+        let mut scaler = Autoscaler::new(AutoscalePolicy {
+            scale_up_load: 384.0,
+            scale_down_load: 16.0,
+            cooldown_s: 0.5,
+            ..AutoscalePolicy::default()
+        });
+        let report = run_autoscaled(&mut f, &mut gate, &mut scaler, &burst_then_quiet()).unwrap();
+        let (ups, downs) = scaler.action_counts();
+        assert!(ups >= 1, "the burst must trigger at least one scale-up");
+        assert!(downs >= 1, "the quiet tail must trigger at least one scale-down");
+        // Nothing is lost to scaling: every request completes.
+        assert_eq!(report.results.len(), 28);
+        assert!(report.results.iter().all(|r| !r.result.aborted));
+        assert!(scaler.unit_seconds() > 0.0);
+        assert!(scaler.cost_per_token(&report).is_finite());
+    }
+
+    #[test]
+    fn autoscaled_bill_undercuts_static_peak_on_bursty_load() {
+        let workload = burst_then_quiet();
+        let policy = AdmissionPolicy { target_load: 512.0, ..AdmissionPolicy::default() };
+
+        let mut f = fleet(4);
+        let mut gate = AdmissionGateway::new(policy);
+        let (static_report, static_bill) = run_static(&mut f, &mut gate, &workload).unwrap();
+
+        let mut f = fleet(4);
+        let mut gate = AdmissionGateway::new(policy);
+        let mut scaler = Autoscaler::new(AutoscalePolicy {
+            scale_up_load: 384.0,
+            scale_down_load: 16.0,
+            cooldown_s: 0.5,
+            ..AutoscalePolicy::default()
+        });
+        let auto_report = run_autoscaled(&mut f, &mut gate, &mut scaler, &workload).unwrap();
+
+        // Same goodput either way (nothing sheds at these rates)...
+        assert_eq!(auto_report.goodput_tokens(), static_report.goodput_tokens());
+        // ...but the autoscaled bill is strictly smaller: the quiet tail
+        // runs on one replica instead of four.
+        assert!(
+            scaler.unit_seconds() < static_bill,
+            "autoscaled {} vs static {static_bill}",
+            scaler.unit_seconds()
+        );
+        let static_cpt = static_bill / static_report.goodput_tokens() as f64;
+        assert!(scaler.cost_per_token(&auto_report) < static_cpt);
+    }
+
+    #[test]
+    fn cooldown_limits_flapping_and_min_active_holds() {
+        let mut f = fleet(3);
+        let mut scaler = Autoscaler::new(AutoscalePolicy {
+            scale_down_load: 1e9, // always wants to drain
+            scale_up_load: 2e9,
+            cooldown_s: 1e12,     // but may act only once
+            ..AutoscalePolicy::default()
+        });
+        // Idle fleet at load 0: one drain fires, then cooldown pins it.
+        for _ in 0..5 {
+            scaler.tick(&mut f, 0).unwrap();
+        }
+        assert_eq!(scaler.scale_events().len(), 1);
+        assert!(!scaler.scale_events()[0].up);
+        // min_active floors the shrink even without cooldown.
+        let mut f = fleet(2);
+        let mut scaler = Autoscaler::new(AutoscalePolicy {
+            scale_down_load: 1e9,
+            scale_up_load: 2e9,
+            cooldown_s: 0.0,
+            min_active: 1,
+            ..AutoscalePolicy::default()
+        });
+        for _ in 0..5 {
+            scaler.tick(&mut f, 0).unwrap();
+        }
+        let active = (0..f.len()).filter(|&r| !f.is_draining(r)).count();
+        assert_eq!(active, 1, "never drains below min_active");
+    }
+
+    #[test]
+    fn a100_fleet_bills_cheaper_than_h100() {
+        use crate::cluster::GpuSpec;
+        let h100 = fleet(2);
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4)
+            .with_devices(vec![GpuSpec::a100(); 4]);
+        let mut a100 = Fleet::new();
+        for session in sim.sessions(2) {
+            a100.add_replica(Box::new(session));
+        }
+        let rh = fleet_unit_rate(&h100);
+        let ra = fleet_unit_rate(&a100);
+        assert!((rh - 8.0).abs() < 1e-9, "2×4 H100 ranks = 8 units/s, got {rh}");
+        assert!(ra > 0.3 * rh && ra < 0.5 * rh, "A100 rate {ra} vs H100 {rh}");
+    }
+}

@@ -53,12 +53,16 @@
 //! ```
 
 mod admission;
+mod autoscaler;
 mod replay;
 mod router;
 
 pub use admission::{
     fleet_load, fleet_now, run_gated, AdmissionDecision, AdmissionGateway, AdmissionPolicy,
     AdmissionStats,
+};
+pub use autoscaler::{
+    fleet_unit_rate, run_autoscaled, run_static, AutoscalePolicy, Autoscaler, ScaleEvent,
 };
 pub use replay::FleetReplayOutcome;
 pub use router::{FleetRouter, ReplicaHealth, DEGRADED_WEIGHT};
@@ -365,7 +369,14 @@ impl Fleet {
                 } else {
                     (r.backend.effective_capacity() / world as f64).clamp(0.0, 1.0)
                 };
-                ReplicaHealth { world, spec_world: r.spec_world, speed, draining: r.draining }
+                // Per-rank hardware throughput in H100-rank units: the
+                // fix for scoring a 4×A100 replica like 4×H100.
+                let unit = if world == 0 {
+                    0.0
+                } else {
+                    r.backend.hardware_capacity() / world as f64
+                };
+                ReplicaHealth { world, spec_world: r.spec_world, speed, unit, draining: r.draining }
             })
             .collect()
     }
@@ -503,10 +514,18 @@ impl Fleet {
         self.replicas[replica].backend.inject_slowdown(rank, factor)
     }
 
-    /// Health-effective capacity of `replica` in rank units (Σ per-rank
-    /// speed factors of its backend).
+    /// Health-effective capacity of `replica` in H100-rank units:
+    /// hardware throughput (Σ per-rank device units) scaled by current
+    /// health (Σ per-rank speed factors / world). A healthy 4×A100
+    /// replica is ~1.6 units, not 4 — admission load math sees what the
+    /// hardware actually delivers.
     pub fn replica_capacity(&self, replica: ReplicaId) -> f64 {
-        self.replicas[replica].backend.effective_capacity()
+        let b = &self.replicas[replica].backend;
+        let world = b.world();
+        if world == 0 {
+            return 0.0;
+        }
+        b.hardware_capacity() * b.effective_capacity() / world as f64
     }
 
     /// Begin draining `replica` (rolling maintenance, replica loss): no

@@ -29,6 +29,12 @@ pub struct ReplicaHealth {
     /// `effective_capacity() / world` of the backend — 1.0 when no rank
     /// is degraded. Zero removes the replica from placement.
     pub speed: f64,
+    /// Per-rank *hardware* throughput in H100-rank units:
+    /// `hardware_capacity() / world` of the backend — 1.0 for an H100
+    /// replica, ~0.4 per rank for an all-A100 one. Orthogonal to
+    /// `speed` (what the hardware is, not its current health); the fix
+    /// for scoring a 4×A100 replica like 4×H100.
+    pub unit: f64,
     /// True while the operator is draining this replica: in-flight work
     /// finishes, no new work is placed.
     pub draining: bool,
@@ -36,9 +42,9 @@ pub struct ReplicaHealth {
 
 impl ReplicaHealth {
     /// A replica currently serving with all of its `spec_world` ranks at
-    /// full speed.
+    /// full speed on reference (H100-class) hardware.
     pub fn healthy(spec_world: usize) -> Self {
-        ReplicaHealth { world: spec_world, spec_world, speed: 1.0, draining: false }
+        ReplicaHealth { world: spec_world, spec_world, speed: 1.0, unit: 1.0, draining: false }
     }
 
     /// Serving on fewer ranks than built for — mid-reconfiguration after
@@ -102,15 +108,22 @@ impl FleetRouter {
         self.booked[replica]
     }
 
-    /// Effective placement capacity of a replica: live world × health
-    /// speed, down-weighted while mid-reconfiguration. `None` when the
-    /// replica must not receive new work (draining, no ranks, or zero
-    /// health-effective speed).
+    /// Effective placement capacity of a replica: live world × per-rank
+    /// hardware unit × health speed, down-weighted while
+    /// mid-reconfiguration. `None` when the replica must not receive new
+    /// work (draining, no ranks, zero health-effective speed, or no
+    /// hardware throughput).
     fn capacity(&self, health: &ReplicaHealth) -> Option<f64> {
-        if health.draining || health.world == 0 || health.speed <= 0.0 || health.speed.is_nan() {
+        if health.draining
+            || health.world == 0
+            || health.speed <= 0.0
+            || health.speed.is_nan()
+            || health.unit <= 0.0
+            || health.unit.is_nan()
+        {
             return None;
         }
-        let mut capacity = health.world as f64 * health.speed.min(1.0);
+        let mut capacity = health.world as f64 * health.unit * health.speed.min(1.0);
         if health.degraded() {
             capacity *= self.degraded_weight;
         }
@@ -305,6 +318,30 @@ mod tests {
         assert_eq!(r.pending(0), 0.0);
         assert_eq!(r.pending(1), 0.0);
         assert_eq!(r.place(1.0, &healthy(2, 4)), Some(0));
+    }
+
+    #[test]
+    fn a100_replica_not_scored_like_h100() {
+        // Same world, same load: the 4×A100 replica (unit 0.4) has less
+        // hardware capacity than the 4×H100 one, so new work lands on
+        // the H100s — previously both scored world × speed identically.
+        let mut r = FleetRouter::new(2);
+        r.book(0, 400.0);
+        r.book(1, 400.0);
+        let h = vec![
+            ReplicaHealth { unit: 0.4, ..ReplicaHealth::healthy(4) },
+            ReplicaHealth::healthy(4),
+        ];
+        assert_eq!(r.place(10.0, &h), Some(1), "400/1.6 > 400/4");
+        // Units compose with health speed; zero unit is unplaceable.
+        let h = vec![
+            ReplicaHealth { unit: 0.0, ..ReplicaHealth::healthy(4) },
+            ReplicaHealth::healthy(4),
+        ];
+        let mut r = FleetRouter::new(2);
+        for _ in 0..3 {
+            assert_eq!(r.place(10.0, &h), Some(1));
+        }
     }
 
     #[test]

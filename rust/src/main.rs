@@ -17,6 +17,10 @@
 //!             the fleet's calibrated sustainable rate, served FCFS vs
 //!             preempt+swap vs preempt+swap+admission; prints per-tier
 //!             goodput/deadline tables and asserts admission beats FCFS
+//!   elastic   heterogeneous + elastic fleet drill: capacity-proportional
+//!             vs uniform sharding on a mixed H100/A100 group, then
+//!             homogeneous vs heterogeneous vs autoscaled fleets under a
+//!             diurnal arrival trace, compared on cost-per-token
 //!   recover   cost one failure under every recovery method
 //!   prefix    shared-prefix drill: serve a repeat-fanout trace with the
 //!             prefix trie off (cold) and on (shared) and compare prefill
@@ -42,30 +46,35 @@
 //!   failsafe fleet --replicas 4 --scenario cascade --fault-replica 0 --pace tokens
 //!   failsafe fleet --backend engine --replicas 2 --world 3 --requests 6
 //!   failsafe overload --replicas 2 --world 8 --requests 160 --load 2
+//!   failsafe elastic --h100 4 --a100 4 --replicas 4 --requests 96
 //!   failsafe recover --model llama --world 8 --requests 60 --ctx 8000
 //!   failsafe prefix --prefixes 4 --fanout 8 --prefix-tokens 2048
 //!   failsafe simcore --world 8 --requests 512 --burst 64 --output-tokens 64
 //!   failsafe traces --n 3000
 
 use failsafe::benchkit::section;
-use failsafe::cluster::{FaultTimeline, GpuSpec, Interconnect, TimelineEvent};
+use failsafe::cluster::{capacity_weights, FaultTimeline, GpuSpec, Interconnect, TimelineEvent};
 use failsafe::config::{model_by_name, recovery_by_name, system_by_name, EngineConfig};
 use failsafe::engine::{
     drive, replay, AdvanceLimit, Engine, EngineEvent, FaultPlan, FaultTrigger, PreemptPolicy,
     ReplayPace, ServingBackend, SubmitOptions,
 };
 use failsafe::fleet::{
-    run_gated, AdmissionGateway, AdmissionPolicy, Fleet, FleetReport,
+    fleet_unit_rate, run_autoscaled, run_gated, run_static, AdmissionGateway, AdmissionPolicy,
+    AutoscalePolicy, Autoscaler, Fleet, FleetReport,
 };
 use failsafe::kvcache::BackupStore;
 use failsafe::model::ModelSpec;
 use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
-use failsafe::sharding::{HeadAssignment, ShardPlan};
-use failsafe::simulator::{CoreMode, OnlineMode, OnlineSim, StepCostModel, SystemConfig};
+use failsafe::sharding::{HeadAssignment, ShardPlan, CAPACITY_DECODE_FRAC};
+use failsafe::simulator::{
+    CoreMode, DecodeWork, OnlineMode, OnlineSim, PrefillWork, StepCostModel, SystemConfig,
+};
 use failsafe::traces::{
-    cascade_then_heal, flaky_gpu, gcp_availability, mooncake_trace, openthoughts_trace,
-    overload_storm, poisson_arrivals, repeat_fanout, rolling_maintenance, thermal_throttle,
-    TraceStats, TIER_BEST_EFFORT, TIER_PREMIUM, TIER_STANDARD,
+    cascade_then_heal, diurnal_arrivals, flaky_gpu, gcp_availability, mooncake_trace,
+    openthoughts_trace, overload_storm, poisson_arrivals, repeat_fanout, rolling_maintenance,
+    spot_preemptions, spot_timeline, thermal_throttle, TraceStats, TIER_BEST_EFFORT,
+    TIER_PREMIUM, TIER_STANDARD,
 };
 use failsafe::util::cli::Args;
 use failsafe::util::Rng;
@@ -94,6 +103,11 @@ subcommands:
             served FCFS vs preempt+swap vs preempt+swap+admission; prints
             per-tier goodput/deadline tables and (at --load >= 2) asserts
             admission control beats FCFS on the SLO tiers
+  elastic   heterogeneous + elastic fleet drill: asserts the
+            capacity-proportional plan beats uniform sharding >= 1.3x on
+            a mixed --h100/--a100 group, then serves a diurnal trace on
+            homogeneous / heterogeneous / autoscaled fleets and asserts
+            autoscaling beats static peak provisioning on cost-per-token
   recover   cost one failure under every recovery method (Table 3 style)
   prefix    shared-prefix drill: serve a repeat-fanout trace (--prefixes
             × --fanout continuations of a --prefix-tokens shared prompt)
@@ -117,6 +131,7 @@ fn main() -> anyhow::Result<()> {
         Some("degrade") => degrade_cmd(&args),
         Some("fleet") => fleet_cmd(&args),
         Some("overload") => overload_cmd(&args),
+        Some("elastic") => elastic_cmd(&args),
         Some("recover") => recover(&args),
         Some("prefix") => prefix_cmd(&args),
         Some("simcore") => simcore_cmd(&args),
@@ -805,6 +820,214 @@ fn overload_cmd(args: &Args) -> anyhow::Result<()> {
         );
         println!("admission control beats FCFS on the SLO tiers at {load}x overload ✓");
     }
+    Ok(())
+}
+
+/// Heterogeneous + elastic fleet drill, in three movements:
+///
+/// 1. **Heterogeneity** — one mixed `--h100 + --a100` TP group, modeled
+///    twice: the uniform FailSafe plan (every per-layer straggler max
+///    waits on an equally-loaded A100) vs the capacity-proportional plan
+///    (heads and KV apportioned by blended device capacity, batch homed
+///    the same way). Asserts the proportional plan wins >= 1.3x combined
+///    (prefill + decode) modeled goodput.
+/// 2. **Elasticity** — a diurnal arrival trace (sinusoidal
+///    `--base-rate`..`--peak-rate`, period `--period`) served by three
+///    fleets: static all-H100, static mixed (half the replicas A100),
+///    and the same mixed fleet behind the autoscaler. Bills each in
+///    unit-seconds (1 unit = one H100-rank-second) and asserts the
+///    autoscaled fleet beats its static twin on cost-per-token.
+/// 3. **Spot churn** — prints the correlated-preemption schedule the
+///    resilience tests race proactive drains against (stats only here).
+fn elastic_cmd(args: &Args) -> anyhow::Result<()> {
+    let model = model_arg(args)?;
+    let system = system_arg(args)?;
+    let h100s = args.get_usize("h100", 4);
+    let a100s = args.get_usize("a100", 4);
+    let replicas = args.get_usize("replicas", 4);
+    let n = args.get_usize("requests", 96);
+    let period = strict_flag::<f64>(args, "period", 60.0);
+    let base_rate = strict_flag::<f64>(args, "base-rate", 0.5);
+    let peak_rate = strict_flag::<f64>(args, "peak-rate", 8.0);
+    let seed = args.get_u64("seed", 42);
+    if h100s == 0 || a100s == 0 {
+        flag_error(format!(
+            "--h100 {h100s} / --a100 {a100s}: the drill needs a genuinely mixed group"
+        ));
+    }
+    if replicas < 2 || n == 0 {
+        flag_error(format!("--replicas {replicas} (need >= 2) / --requests {n} (need > 0)"));
+    }
+    if !(period > 0.0 && base_rate > 0.0 && peak_rate >= base_rate) {
+        flag_error(format!(
+            "--period {period} / --base-rate {base_rate} / --peak-rate {peak_rate} must \
+             describe a positive diurnal swing"
+        ));
+    }
+
+    // ── 1. capacity-proportional vs uniform sharding on mixed hardware ──
+    let world = h100s + a100s;
+    let specs: Vec<GpuSpec> = (0..world)
+        .map(|r| if r < h100s { GpuSpec::h100() } else { GpuSpec::a100() })
+        .collect();
+    let ic = Interconnect::for_devices(&specs);
+    let uni = StepCostModel::new_heterogeneous(&ShardPlan::failsafe(&model, world), &specs, &ic);
+    let prop = StepCostModel::new_heterogeneous(
+        &ShardPlan::capacity_proportional(&model, &specs),
+        &specs,
+        &ic,
+    );
+    section(&format!(
+        "elastic drill: {} on {h100s}x H100 + {a100s}x A100 (TP{world})",
+        model.name
+    ));
+    let weights = capacity_weights(&specs, CAPACITY_DECODE_FRAC);
+    println!(
+        "capacity weights: H100 1.00, A100 {:.2} (blended roofline, decode_frac {})",
+        weights[world - 1],
+        CAPACITY_DECODE_FRAC
+    );
+    // A representative serving round: one 4096-token prefill plus 64
+    // decode steps of a 64-deep batch, homed uniformly vs by capacity.
+    let (batch, ctx, steps) = (64usize, 4096usize, 64usize);
+    let uni_batch = DecodeWork::capacity_homed(batch, ctx, &vec![1.0; world]);
+    let prop_batch = DecodeWork::capacity_homed(batch, ctx, &weights);
+    let chunks = vec![PrefillWork { tokens: ctx, context: 0, home: 0 }];
+    let goodput = |cost: &StepCostModel, batch: &[DecodeWork]| -> f64 {
+        let wall = cost.prefill_step_time(&chunks) + steps as f64 * cost.decode_step_time(batch);
+        (ctx + steps * batch.len()) as f64 / wall
+    };
+    let (g_uni, g_prop) = (goodput(&uni, &uni_batch), goodput(&prop, &prop_batch));
+    let ratio = g_prop / g_uni;
+    println!(
+        "modeled goodput: uniform plan {g_uni:.0} tok/s, capacity-proportional {g_prop:.0} \
+         tok/s ({ratio:.2}x)"
+    );
+    anyhow::ensure!(
+        ratio >= 1.3,
+        "capacity-proportional plan must beat uniform sharding >= 1.3x on mixed hardware, \
+         got {ratio:.2}x"
+    );
+    println!("capacity-proportional sharding beats uniform >= 1.3x on mixed hardware ✓");
+
+    // ── 2. homogeneous vs heterogeneous vs autoscaled under diurnal load ──
+    let mut trace = mooncake_trace(n, seed);
+    diurnal_arrivals(&mut trace, base_rate, peak_rate, period, seed);
+    let workload: Vec<(Vec<u32>, SubmitOptions)> = trace
+        .iter()
+        .map(|r| {
+            (
+                vec![1u32; r.input_tokens.max(1)],
+                SubmitOptions::new(r.output_tokens.max(1)).at(r.arrival),
+            )
+        })
+        .collect();
+    let a100_replicas = replicas / 2;
+    let build = |mixed: bool| -> Fleet {
+        let h_sim = OnlineSim::new(system.clone(), OnlineMode::Decode, world)
+            .with_model(model.clone());
+        let a_sim = OnlineSim::new(system.clone(), OnlineMode::Decode, world)
+            .with_model(model.clone())
+            .with_devices(vec![GpuSpec::a100(); world]);
+        let mut fleet = Fleet::new();
+        let h_count = if mixed { replicas - a100_replicas } else { replicas };
+        for session in h_sim.sessions(h_count) {
+            fleet.add_replica(Box::new(session));
+        }
+        if mixed {
+            for session in a_sim.sessions(a100_replicas) {
+                fleet.add_replica(Box::new(session));
+            }
+        }
+        fleet
+    };
+    let policy = AdmissionPolicy::default();
+    let scale_policy = AutoscalePolicy {
+        scale_up_load: strict_flag::<f64>(args, "scale-up-load", 512.0),
+        scale_down_load: strict_flag::<f64>(args, "scale-down-load", 64.0),
+        cooldown_s: strict_flag::<f64>(args, "cooldown", 1.0),
+        ..AutoscalePolicy::default()
+    };
+
+    let mut homo = build(false);
+    let mut gate = AdmissionGateway::new(policy);
+    let (homo_report, homo_bill) = run_static(&mut homo, &mut gate, &workload)?;
+
+    let mut hetero = build(true);
+    let mut gate = AdmissionGateway::new(policy);
+    let (hetero_report, hetero_bill) = run_static(&mut hetero, &mut gate, &workload)?;
+
+    let mut auto_fleet = build(true);
+    let mut gate = AdmissionGateway::new(policy);
+    let mut scaler = Autoscaler::new(scale_policy);
+    let auto_report = run_autoscaled(&mut auto_fleet, &mut gate, &mut scaler, &workload)?;
+    let auto_bill = scaler.unit_seconds();
+
+    let cpt = |bill: f64, r: &FleetReport| -> f64 {
+        if r.goodput_tokens() == 0 { f64::INFINITY } else { bill / r.goodput_tokens() as f64 }
+    };
+    println!(
+        "\ndiurnal trace: {n} requests, rate {base_rate}..{peak_rate} req/s, period {period}s"
+    );
+    println!(
+        "{:<26} {:>9} {:>9} {:>11} {:>14}",
+        "fleet", "goodput", "wall s", "unit-sec", "cost/1k tok"
+    );
+    let (ups, downs) = scaler.action_counts();
+    for (name, report, bill) in [
+        (format!("{replicas}x H100 static"), &homo_report, homo_bill),
+        (
+            format!("{}+{} H100/A100 static", replicas - a100_replicas, a100_replicas),
+            &hetero_report,
+            hetero_bill,
+        ),
+        (format!("same, autoscaled ({ups}up/{downs}dn)"), &auto_report, auto_bill),
+    ] {
+        println!(
+            "{:<26} {:>9} {:>9.1} {:>11.0} {:>14.3}",
+            name,
+            report.goodput_tokens(),
+            report.wall_s,
+            bill,
+            1000.0 * cpt(bill, report)
+        );
+    }
+    let static_cpt = cpt(hetero_bill, &hetero_report);
+    let auto_cpt = cpt(auto_bill, &auto_report);
+    anyhow::ensure!(
+        ups >= 1 && downs >= 1,
+        "the diurnal swing must drive both scale directions (got {ups} up / {downs} down)"
+    );
+    anyhow::ensure!(
+        auto_cpt < static_cpt,
+        "autoscaling must beat static peak provisioning on cost-per-token: \
+         {auto_cpt:.4} vs {static_cpt:.4} unit-s/tok"
+    );
+    println!(
+        "autoscaled cost-per-token beats static peak provisioning \
+         ({:.3} vs {:.3} unit-s per 1k tok) ✓",
+        1000.0 * auto_cpt,
+        1000.0 * static_cpt
+    );
+    println!(
+        "fleet unit rates: homogeneous {:.1}/s, mixed {:.1}/s",
+        fleet_unit_rate(&homo),
+        fleet_unit_rate(&hetero)
+    );
+
+    // ── 3. spot-churn schedule (the resilience tests race this) ──
+    let preemptions = spot_preemptions(world, 3, 2.0 * period.max(120.0), 5.0 * period, seed);
+    let tl = spot_timeline(&preemptions);
+    tl.validate(world)?;
+    let mean_warn =
+        preemptions.iter().map(|p| p.warning_s()).sum::<f64>() / preemptions.len() as f64;
+    println!(
+        "spot schedule: {} preemptions in 3 waves, mean warning {:.0}s, worst wave takes \
+         {} of {world} GPUs",
+        preemptions.len(),
+        mean_warn,
+        tl.max_concurrent_down()
+    );
     Ok(())
 }
 

@@ -23,5 +23,5 @@ mod reconfig;
 
 pub use ffn_partition::{FfnPartition, FfnPolicy};
 pub use head_assignment::{AttentionPolicy, HeadAssignment, LayerHeads, DP_OWNER};
-pub use plan::{RankLoad, ShardPlan};
+pub use plan::{RankLoad, ShardPlan, CAPACITY_DECODE_FRAC};
 pub use reconfig::{plan_reconfig, ReconfigDelta, UnitLocation, WeightUnit};

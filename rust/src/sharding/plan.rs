@@ -3,8 +3,14 @@
 
 
 use super::{AttentionPolicy, FfnPartition, FfnPolicy, HeadAssignment};
+use crate::cluster::{capacity_weights, GpuSpec};
 use crate::model::ModelSpec;
 use crate::RankId;
+
+/// Fraction of serving wall-clock assumed memory-bound when deriving
+/// capacity weights for [`ShardPlan::capacity_proportional`] — chunked
+/// prefill interleaves prefill and decode roughly evenly.
+pub const CAPACITY_DECODE_FRAC: f64 = 0.5;
 
 /// Per-rank load summary under a plan (consumed by the simulator and by
 /// balance assertions in tests).
@@ -68,6 +74,21 @@ impl ShardPlan {
     /// The naive non-uniform TP plan (the paper's `Nonuniform-TP` baseline).
     pub fn nonuniform_naive(model: &ModelSpec, world: usize) -> Self {
         Self::new(model, world, AttentionPolicy::NaiveContiguous, FfnPolicy::Contiguous)
+    }
+
+    /// A plan that is capacity-proportional *by construction* for a
+    /// mixed-generation TP group: rank `r` runs on `devices[r]` and gets
+    /// head/FFN shares proportional to its blended roofline rate
+    /// ([`crate::cluster::capacity_weights`], clamped by relative HBM so
+    /// KV placement respects per-device memory). Head quotas come from
+    /// largest-remainder apportionment and the FFN repack reuses
+    /// [`FfnPartition::reweight`], so building this plan is exactly
+    /// reweighting the uniform FailSafe plan — which makes reweighting a
+    /// uniform plan to the same capacities a fixed point (the property
+    /// test relies on this identity).
+    pub fn capacity_proportional(model: &ModelSpec, devices: &[GpuSpec]) -> Self {
+        let w = capacity_weights(devices, CAPACITY_DECODE_FRAC);
+        Self::failsafe(model, devices.len()).reweight(&w)
     }
 
     pub fn world(&self) -> usize {
@@ -312,6 +333,39 @@ mod tests {
         for r in 0..8 {
             assert_eq!(same.rank_load(r).tp_head_layers, p.rank_load(r).tp_head_layers);
             assert_eq!(same.rank_load(r).ffn_blocks, p.rank_load(r).ffn_blocks);
+        }
+    }
+
+    #[test]
+    fn capacity_proportional_shifts_load_onto_fast_devices() {
+        use crate::cluster::GpuSpec;
+        let m = llama3_70b();
+        let devs: Vec<GpuSpec> = (0..8)
+            .map(|i| if i < 4 { GpuSpec::h100() } else { GpuSpec::a100() })
+            .collect();
+        let p = ShardPlan::capacity_proportional(&m, &devs);
+        assert_eq!(p.world(), 8);
+        // H100 ranks carry strictly more TP head-layers and FFN blocks
+        // than A100 ranks; the partition still covers everything.
+        let loads = p.rank_loads();
+        for h in 0..4 {
+            for a in 4..8 {
+                assert!(loads[h].tp_head_layers > loads[a].tp_head_layers);
+                assert!(loads[h].ffn_blocks > loads[a].ffn_blocks);
+            }
+        }
+        let total_blocks: usize = loads.iter().map(|l| l.ffn_blocks).sum();
+        assert_eq!(total_blocks, p.ffn.n_blocks);
+        // Identity: it IS the uniform plan reweighted to the capacities,
+        // so reweighting again with the same weights changes nothing.
+        let w = crate::cluster::capacity_weights(&devs, CAPACITY_DECODE_FRAC);
+        assert_eq!(p.reweight(&w), p);
+        // Uniform fleet degenerates to the plain FailSafe plan's loads.
+        let uni = ShardPlan::capacity_proportional(&m, &vec![GpuSpec::h100(); 8]);
+        let fs = ShardPlan::failsafe(&m, 8);
+        for r in 0..8 {
+            assert_eq!(uni.rank_load(r).tp_head_layers, fs.rank_load(r).tp_head_layers);
+            assert_eq!(uni.rank_load(r).ffn_blocks, fs.rank_load(r).ffn_blocks);
         }
     }
 

@@ -71,7 +71,16 @@ struct LayerProfile {
 #[derive(Debug, Clone)]
 pub struct StepCostModel {
     model: ModelSpec,
-    spec: GpuSpec,
+    /// Per-rank device specs — a uniform fleet repeats one spec; a mixed
+    /// fleet (H100+A100) costs each rank against its own generation.
+    specs: Vec<GpuSpec>,
+    /// Cached per-rank effective FLOP/s (compute roofline side).
+    eff: Vec<f64>,
+    /// Cached per-rank HBM bandwidth (memory roofline side).
+    bw: Vec<f64>,
+    /// Per-layer kernel-launch overhead: launches are synchronized, so
+    /// the step pays the slowest rank's launch cost.
+    launch_s: f64,
     ic: Interconnect,
     world: usize,
     /// `tp_heads[l][r]` = TP KV-head groups owned by rank r in layer l.
@@ -94,8 +103,20 @@ pub struct StepCostModel {
 }
 
 impl StepCostModel {
+    /// Uniform-fleet model: every rank runs on the same device class.
     pub fn new(plan: &ShardPlan, spec: &GpuSpec, ic: &Interconnect) -> Self {
+        Self::new_heterogeneous(plan, &vec![spec.clone(); plan.world()], ic)
+    }
+
+    /// Mixed-generation model: rank `r` runs on `specs[r]` and is costed
+    /// against its own FLOP/s and HBM bandwidth. With a
+    /// capacity-proportional plan the per-layer straggler max is taken
+    /// over *proportionally loaded* ranks — work/rate is flat — so the
+    /// step no longer pays fast-rank idle time waiting on the slowest
+    /// device the way a uniform plan on mixed hardware does.
+    pub fn new_heterogeneous(plan: &ShardPlan, specs: &[GpuSpec], ic: &Interconnect) -> Self {
         let world = plan.world();
+        assert_eq!(specs.len(), world, "one device spec per rank");
         let tp_heads: Vec<Vec<u16>> = plan
             .heads
             .layers
@@ -125,7 +146,10 @@ impl StepCostModel {
         let weight_bytes = plan.rank_loads().iter().map(|l| l.weight_bytes).collect();
         StepCostModel {
             model: plan.model.clone(),
-            spec: spec.clone(),
+            eff: specs.iter().map(|s| s.effective_flops()).collect(),
+            bw: specs.iter().map(|s| s.hbm_bw).collect(),
+            launch_s: specs.iter().map(|s| s.kernel_launch_s).fold(0.0, f64::max),
+            specs: specs.to_vec(),
             ic: ic.clone(),
             world,
             tp_heads,
@@ -204,7 +228,6 @@ impl StepCostModel {
 
         // Sum over layers of the per-layer straggler — one scan per
         // *distinct* layer profile, weighted by multiplicity.
-        let eff = self.spec.effective_flops();
         let mut sum_layer_max = 0.0;
         for p in &self.profiles {
             let mut layer_max: f64 = 0.0;
@@ -212,14 +235,14 @@ impl StepCostModel {
                 let flops = p.tp[r] as f64 * tp_attn_flops
                     + if p.dp > 0 { p.dp as f64 * dp_attn_flops[r] } else { 0.0 }
                     + ffn.per_col * self.ffn_cols[r] as f64 * m.experts_per_token as f64;
-                layer_max = layer_max.max(flops / (eff * self.speed[r]));
+                layer_max = layer_max.max(flops / (self.eff[r] * self.speed[r]));
             }
             sum_layer_max += p.layers * layer_max;
         }
 
         let collectives =
             2.0 * m.n_layers as f64 * self.ic.allreduce_time(self.world, self.allreduce_bytes(total_tokens));
-        let launches = 2.0 * m.n_layers as f64 * self.spec.kernel_launch_s;
+        let launches = 2.0 * m.n_layers as f64 * self.launch_s;
         sum_layer_max + collectives + launches
     }
 
@@ -263,8 +286,6 @@ impl StepCostModel {
             1.0
         };
 
-        let eff = self.spec.effective_flops();
-        let bw = self.spec.hbm_bw;
         // Per-rank per-layer weight bytes (amortized over layers).
         let attn_w_per_hg = m.head_group_weight_bytes() as f64;
         let ffn_w_per_col = m.ffn_col_weight_bytes() as f64 * m.n_experts as f64 * expert_frac;
@@ -282,14 +303,15 @@ impl StepCostModel {
                     + self.ffn_cols[r] as f64 * ffn_w_per_col
                     + tp * total_ctx as f64 * kvb
                     + dp * dp_ctx[r] as f64 * kvb;
-                layer_max = layer_max.max((flops / eff).max(bytes / bw) / self.speed[r]);
+                layer_max =
+                    layer_max.max((flops / self.eff[r]).max(bytes / self.bw[r]) / self.speed[r]);
             }
             sum_layer_max += p.layers * layer_max;
         }
 
         let collectives =
             2.0 * m.n_layers as f64 * self.ic.allreduce_time(self.world, self.allreduce_bytes(b));
-        let launches = 2.0 * m.n_layers as f64 * self.spec.kernel_launch_s;
+        let launches = 2.0 * m.n_layers as f64 * self.launch_s;
         sum_layer_max + collectives + launches
     }
 
@@ -357,19 +379,24 @@ impl StepCostModel {
         self.prefill_step_time(&[PrefillWork { tokens, context: 0, home: 0 }])
     }
 
-    /// KV capacity budget per rank given resident weights.
+    /// KV capacity budget per rank given resident weights and that
+    /// rank's own HBM capacity (mixed fleets may differ per rank).
     pub fn kv_budget(&self) -> Vec<usize> {
         (0..self.world)
             .map(|r| {
-                self.spec
-                    .hbm_bytes
-                    .saturating_sub(self.weight_bytes[r] + self.spec.hbm_bytes / 16)
+                let hbm = self.specs[r].hbm_bytes;
+                hbm.saturating_sub(self.weight_bytes[r] + hbm / 16)
             })
             .collect()
     }
 
     pub fn weight_bytes(&self) -> &[usize] {
         &self.weight_bytes
+    }
+
+    /// Per-rank device specs (uniform fleets repeat one spec).
+    pub fn device_specs(&self) -> &[GpuSpec] {
+        &self.specs
     }
 }
 
@@ -565,6 +592,77 @@ mod tests {
         // Sanity on the gap itself: the unmitigated straggler is far from
         // ideal (that is the problem being solved).
         assert!(baseline > ideal * 1.3, "baseline {baseline} vs ideal {ideal}");
+    }
+
+    fn mixed_specs() -> Vec<GpuSpec> {
+        (0..8).map(|i| if i < 4 { GpuSpec::h100() } else { GpuSpec::a100() }).collect()
+    }
+
+    #[test]
+    fn heterogeneous_uniform_specs_match_plain_constructor() {
+        let m = llama3_70b();
+        let plan = ShardPlan::failsafe(&m, 8);
+        let spec = GpuSpec::h100();
+        let ic = Interconnect::new(spec.clone());
+        let a = StepCostModel::new(&plan, &spec, &ic);
+        let b = StepCostModel::new_heterogeneous(&plan, &vec![spec.clone(); 8], &ic);
+        let batch = uniform_batch(64, 4096, 8);
+        assert_eq!(a.decode_step_time(&batch), b.decode_step_time(&batch));
+        assert_eq!(a.kv_budget(), b.kv_budget());
+    }
+
+    #[test]
+    fn mixed_fleet_uniform_plan_pays_the_a100_straggler() {
+        // A uniform plan on 4×H100+4×A100 paces at the A100s; the pure
+        // H100 fleet with the same plan is strictly faster on both phases.
+        let m = llama3_70b();
+        let plan = ShardPlan::failsafe(&m, 8);
+        let specs = mixed_specs();
+        let ic = Interconnect::for_devices(&specs);
+        let mixed = StepCostModel::new_heterogeneous(&plan, &specs, &ic);
+        let pure = cm(&plan);
+        let batch = uniform_batch(64, 4096, 8);
+        assert!(mixed.decode_step_time(&batch) > pure.decode_step_time(&batch) * 1.3);
+        let chunks = vec![PrefillWork { tokens: 4096, context: 0, home: 0 }];
+        assert!(mixed.prefill_step_time(&chunks) > pure.prefill_step_time(&chunks) * 1.5);
+    }
+
+    #[test]
+    fn capacity_proportional_plan_beats_uniform_on_mixed_fleet() {
+        // The tentpole mechanism: proportional shards mean the per-layer
+        // straggler max runs over proportionally-loaded ranks, so the
+        // modeled step beats the uniform plan on the same mixed hardware.
+        let m = llama3_70b();
+        let specs = mixed_specs();
+        let ic = Interconnect::for_devices(&specs);
+        let uni = StepCostModel::new_heterogeneous(&ShardPlan::failsafe(&m, 8), &specs, &ic);
+        let prop = StepCostModel::new_heterogeneous(
+            &ShardPlan::capacity_proportional(&m, &specs),
+            &specs,
+            &ic,
+        );
+        let w = crate::cluster::capacity_weights(&specs, crate::sharding::CAPACITY_DECODE_FRAC);
+        let batch = DecodeWork::capacity_homed(64, 4096, &w);
+        let uniform_home = uniform_batch(64, 4096, 8);
+        let t_uni = uni.decode_step_time(&uniform_home);
+        let t_prop = prop.decode_step_time(&batch);
+        assert!(t_prop < t_uni, "proportional {t_prop} vs uniform {t_uni}");
+        let chunks = vec![PrefillWork { tokens: 4096, context: 0, home: 0 }];
+        assert!(prop.prefill_step_time(&chunks) < uni.prefill_step_time(&chunks));
+    }
+
+    #[test]
+    fn kv_budget_respects_per_rank_hbm() {
+        let m = llama3_70b();
+        let mut small = GpuSpec::h100();
+        small.hbm_bytes = 40 * (1 << 30);
+        let specs: Vec<GpuSpec> =
+            (0..8).map(|i| if i == 5 { small.clone() } else { GpuSpec::h100() }).collect();
+        let plan = ShardPlan::failsafe(&m, 8);
+        let ic = Interconnect::for_devices(&specs);
+        let c = StepCostModel::new_heterogeneous(&plan, &specs, &ic);
+        let budget = c.kv_budget();
+        assert!(budget[5] < budget[4], "half the HBM must mean less KV headroom");
     }
 
     #[test]

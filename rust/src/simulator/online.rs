@@ -16,7 +16,7 @@
 
 use anyhow::Result;
 
-use crate::cluster::{GpuSpec, Interconnect, TransferClass};
+use crate::cluster::{capacity_weights, GpuSpec, Interconnect, TransferClass};
 use crate::engine::{
     AdvanceLimit, AdvanceOutcome, EngineEvent, GenerationResult, PreemptPolicy, ServeReport,
     ServingBackend, SubmitOptions, BLOCK_TOKENS,
@@ -90,6 +90,14 @@ pub struct OnlineSim {
     /// decodes to the KV swap tier. `None` (the default) is the FCFS
     /// baseline — identical scheduling to every pre-overload session.
     pub preempt: Option<PreemptPolicy>,
+    /// Explicit per-rank device list for mixed-generation fleets (rank
+    /// `r` runs on `devices[r]`). `None` (the default) serves `world`
+    /// copies of `spec`.
+    pub devices: Option<Vec<GpuSpec>>,
+    /// Whether mixed-device sessions serve the capacity-proportional
+    /// plan (default true). Off = the uniform plan on mixed hardware,
+    /// the straggler baseline the elastic bench compares against.
+    pub proportional_plan: bool,
 }
 
 pub(crate) struct Running {
@@ -160,7 +168,28 @@ impl OnlineSim {
             backup_fraction: 0.25,
             prefix_sharing: false,
             preempt: None,
+            devices: None,
+            proportional_plan: true,
         }
+    }
+
+    /// Serve on an explicit mixed-generation device list: rank `r` runs
+    /// on `devices[r]`. Sets the world size from the list, paces the
+    /// fabric at the slowest member, and (unless
+    /// [`OnlineSim::with_proportional_plan`] turned it off) builds the
+    /// capacity-proportional shard plan.
+    pub fn with_devices(mut self, devices: Vec<GpuSpec>) -> Self {
+        assert!(!devices.is_empty(), "device list cannot be empty");
+        self.world = devices.len();
+        self.devices = Some(devices);
+        self
+    }
+
+    /// Toggle capacity-proportional plan construction for mixed-device
+    /// sessions (default on).
+    pub fn with_proportional_plan(mut self, on: bool) -> Self {
+        self.proportional_plan = on;
+        self
     }
 
     /// Select the served model.
@@ -184,19 +213,27 @@ impl OnlineSim {
     /// A fresh steppable decode-instance session (the [`ServingBackend`]
     /// surface of the simulator).
     pub fn session(&self) -> OnlineSession {
+        let devices: Vec<GpuSpec> =
+            self.devices.clone().unwrap_or_else(|| vec![self.spec.clone(); self.world]);
+        let heterogeneous = devices.iter().any(|d| *d != devices[0]);
+        let proportional = heterogeneous && self.proportional_plan;
         let plan = self.config.plan(&self.model, self.world);
-        let ic = Interconnect::new(self.spec.clone());
-        let cost = StepCostModel::new(&plan, &self.spec, &ic);
+        let ic = Interconnect::for_devices(&devices);
+        let cost = StepCostModel::new_heterogeneous(&plan, &devices, &ic);
         let (tp_rate, dp_rate) = cost.kv_rates();
         let kv_budget = cost.kv_budget();
         let daemon = BackupDaemon::new(
-            self.spec.pcie_bw,
+            // Backup drains over the slowest member's host link.
+            devices.iter().map(|d| d.pcie_bw).fold(f64::INFINITY, f64::min),
             self.backup_fraction,
             self.model.kv_bytes_per_token(),
         );
-        OnlineSession {
+        let mut session = OnlineSession {
             model: self.model.clone(),
             spec: self.spec.clone(),
+            devices,
+            lost_devices: Vec::new(),
+            proportional,
             ic,
             active: plan.clone(),
             plan,
@@ -240,7 +277,17 @@ impl OnlineSim {
             recoveries: Vec::new(),
             events: Vec::new(),
             work: Vec::new(),
+        };
+        if proportional {
+            // Capacity-proportionality rides the mitigation machinery:
+            // the uniform plan stays the reconfiguration anchor and the
+            // served plan is its reweight to device capacities. No
+            // weight-move latency is charged — the plan is built this
+            // way from admission, nothing streams.
+            session.mitigation = Some(session.mitigation_weights());
+            session.rebuild_cost();
         }
+        session
     }
 
     /// `n` independent steppable sessions with identical configuration —
@@ -410,6 +457,17 @@ impl OnlineSim {
 pub struct OnlineSession {
     pub(crate) model: crate::model::ModelSpec,
     pub(crate) spec: GpuSpec,
+    /// Per-rank device specs (rank `r` serves on `devices[r]`). Uniform
+    /// fleets repeat `spec`; mixed fleets (H100+A100) drive the
+    /// heterogeneous cost model and, when `proportional`, the
+    /// capacity-proportional plan.
+    pub(crate) devices: Vec<GpuSpec>,
+    /// Specs of failed devices, LIFO — `inject_rejoin` returns the most
+    /// recently lost device, so a failed A100 rejoins as an A100.
+    pub(crate) lost_devices: Vec<GpuSpec>,
+    /// Whether mitigation weights fold in device capacity (mixed fleets
+    /// with capacity-proportional planning on).
+    pub(crate) proportional: bool,
     pub(crate) ic: Interconnect,
     /// The healthy shard plan for the current world (what recovery
     /// planning and shrink/expand reason over).
@@ -1052,6 +1110,21 @@ impl OnlineSession {
     /// NVLink concurrently, so the max per-rank receive bounds the stall
     /// (0.0 across world changes — the recovery planner already costed
     /// those moves).
+    /// Current mitigation weights: per-rank effective speed, folded with
+    /// relative device capacity on proportional mixed-fleet sessions —
+    /// an A100 at 0.5× thermal throttle is worth (A100 weight) × 0.5.
+    fn mitigation_weights(&self) -> Vec<f64> {
+        if self.proportional {
+            capacity_weights(&self.devices, crate::sharding::CAPACITY_DECODE_FRAC)
+                .iter()
+                .zip(&self.speed)
+                .map(|(b, s)| b * s)
+                .collect()
+        } else {
+            self.speed.clone()
+        }
+    }
+
     fn rebuild_cost(&mut self) -> f64 {
         let new_active = match &self.mitigation {
             Some(w) if w.iter().any(|&x| x < 1.0) => self.plan.reweight(w),
@@ -1071,7 +1144,7 @@ impl OnlineSession {
             0.0
         };
         self.active = new_active;
-        self.cost = StepCostModel::new(&self.active, &self.spec, &self.ic);
+        self.cost = StepCostModel::new_heterogeneous(&self.active, &self.devices, &self.ic);
         self.cost.set_speed_factors(&self.speed);
         let (tp, dp) = self.cost.kv_rates();
         self.tp_rate = tp;
@@ -1120,7 +1193,7 @@ impl OnlineSession {
             self.events.push(EngineEvent::GpuRestored { rank });
         }
         if self.auto_rebalance {
-            self.mitigation = Some(self.speed.clone());
+            self.mitigation = Some(self.mitigation_weights());
             let latency = self.rebuild_cost();
             self.clock += latency;
             Ok(latency)
@@ -1244,6 +1317,13 @@ impl OnlineSession {
         };
         self.speed = remap_vec(&self.speed, 1.0);
         self.mitigation = self.mitigation.take().map(|w| remap_vec(&w, 1.0));
+        // The failed device leaves the group; survivors keep their own
+        // specs under renumbering (remove preserves order).
+        let lost_spec = self.devices.remove(rank);
+        self.lost_devices.push(lost_spec);
+        if self.proportional {
+            self.mitigation = Some(self.mitigation_weights());
+        }
         self.router = self.router.remap(&survivor_map, self.world);
         // Re-home requests of the failed rank before usage is re-derived.
         for r in self.running.iter_mut() {
@@ -1320,8 +1400,15 @@ impl OnlineSession {
         self.lost -= 1;
         self.plan = new_plan;
         self.speed.push(1.0);
+        // The most recently lost device returns (LIFO): a failed A100
+        // rejoins as an A100, not a fresh reference device.
+        let returning = self.lost_devices.pop().unwrap_or_else(|| self.spec.clone());
+        self.devices.push(returning);
         if let Some(w) = self.mitigation.as_mut() {
             w.push(1.0);
+        }
+        if self.proportional {
+            self.mitigation = Some(self.mitigation_weights());
         }
         self.router = self.router.expand(self.world);
         self.rebuild_cost();
@@ -1441,6 +1528,11 @@ impl ServingBackend for OnlineSession {
 
     fn effective_capacity(&self) -> f64 {
         self.speed.iter().sum()
+    }
+
+    fn hardware_capacity(&self) -> f64 {
+        let h100 = GpuSpec::h100();
+        self.devices.iter().map(|d| d.relative_capacity(&h100)).sum()
     }
 
     fn now(&self) -> SimTime {
@@ -1597,6 +1689,70 @@ mod tests {
             assert!(r.ttft_s.is_some());
         }
         assert_eq!(report.recoveries.len(), 1);
+    }
+
+    /// Mixed-device sessions: the capacity-proportional plan is served
+    /// from admission, hardware capacity reflects the device mix, and a
+    /// failed A100 rejoins as an A100.
+    #[test]
+    fn session_mixed_devices_proportional_plan_and_device_tracking() {
+        let devices: Vec<GpuSpec> =
+            (0..8).map(|i| if i < 4 { GpuSpec::h100() } else { GpuSpec::a100() }).collect();
+        let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+            .with_model(llama3_70b())
+            .with_devices(devices);
+        let mut session = sim.session();
+        // Served plan is reweighted: H100 ranks carry more head-layers.
+        let loads = session.active.rank_loads();
+        assert!(loads[0].tp_head_layers > loads[7].tp_head_layers);
+        // Hardware capacity: 4 full units + 4 sub-unit A100s.
+        let hw = ServingBackend::hardware_capacity(&session);
+        assert!(hw > 4.0 && hw < 8.0, "hardware capacity {hw}");
+        assert_eq!(ServingBackend::effective_capacity(&session), 8.0, "healthy fleet");
+
+        // Fail an A100 (rank 5): capacity rises per remaining-mix share.
+        let prompt = vec![0u32; 1024];
+        for i in 0..8 {
+            session.submit_with(&prompt, SubmitOptions::new(8).at(i as f64 * 0.01)).unwrap();
+        }
+        session.step().unwrap();
+        session.inject_failure(5, RecoveryMethod::Full).unwrap();
+        assert_eq!(session.devices.len(), 7);
+        let hw_after = ServingBackend::hardware_capacity(&session);
+        assert!(hw_after < hw);
+        // The lost A100 rejoins as an A100, restoring exactly hw.
+        session.inject_rejoin(RecoveryMethod::Full).unwrap();
+        assert_eq!(session.devices.len(), 8);
+        let hw_back = ServingBackend::hardware_capacity(&session);
+        assert!((hw_back - hw).abs() < 1e-9, "{hw_back} vs {hw}");
+        session.run_to_completion().unwrap();
+    }
+
+    /// A proportional mixed-fleet session finishes a fixed workload
+    /// faster than the same hardware serving the uniform plan.
+    #[test]
+    fn session_proportional_beats_uniform_on_mixed_fleet() {
+        let devices: Vec<GpuSpec> =
+            (0..8).map(|i| if i < 4 { GpuSpec::h100() } else { GpuSpec::a100() }).collect();
+        let run = |proportional: bool| {
+            let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+                .with_model(llama3_70b())
+                .with_devices(devices.clone())
+                .with_proportional_plan(proportional);
+            let mut session = sim.session();
+            let prompt = vec![0u32; 2048];
+            for i in 0..32 {
+                session.submit_with(&prompt, SubmitOptions::new(64).at(i as f64 * 0.02)).unwrap();
+            }
+            let report = session.run_to_completion().unwrap();
+            report.wall_s
+        };
+        let uniform = run(false);
+        let proportional = run(true);
+        assert!(
+            proportional < uniform,
+            "proportional wall {proportional} must beat uniform wall {uniform}"
+        );
     }
 
     /// Aborting a running simulated request frees its budget and the

@@ -33,6 +33,7 @@ mod lengths;
 mod overload;
 mod repeat_fanout;
 mod request;
+mod spot;
 
 pub use arrivals::{poisson_arrivals, scale_arrivals, split_arrivals};
 pub use faults::{cascade_then_heal, flaky_gpu, rolling_maintenance, thermal_throttle};
@@ -44,3 +45,7 @@ pub use overload::{
 };
 pub use repeat_fanout::{repeat_fanout, FanoutRequest};
 pub use request::TraceRequest;
+pub use spot::{
+    diurnal_arrivals, spot_preemptions, spot_timeline, SpotPreemption, SPOT_WARN_MAX_S,
+    SPOT_WARN_MIN_S,
+};

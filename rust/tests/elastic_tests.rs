@@ -1,0 +1,397 @@
+//! Heterogeneous + elastic fleet test layer: property tests for the
+//! capacity-proportional [`ShardPlan`] over random device-class mixes,
+//! golden pins for the spot-churn and diurnal generators
+//! (`tests/golden/elastic_golden.json`, regenerate with
+//! `FAILSAFE_WRITE_GOLDEN=1`), the ≥ 1.3× mixed-hardware goodput
+//! acceptance gate, hardware-aware fleet capacity scoring, and the
+//! proactive-vs-reactive spot-preemption race (draining inside the
+//! warning window must beat eating the preemption cold).
+
+use std::collections::HashMap;
+
+use failsafe::benchkit::forall;
+use failsafe::cluster::{capacity_weights, GpuSpec, Interconnect};
+use failsafe::engine::SubmitOptions;
+use failsafe::fleet::{fleet_now, Fleet, FleetReport};
+use failsafe::model::llama3_70b;
+use failsafe::recovery::RecoveryMethod;
+use failsafe::sharding::{ShardPlan, CAPACITY_DECODE_FRAC};
+use failsafe::simulator::{
+    DecodeWork, OnlineMode, OnlineSim, PrefillWork, StepCostModel, SystemConfig,
+};
+use failsafe::traces::{
+    diurnal_arrivals, mooncake_trace, spot_preemptions, spot_timeline, SPOT_WARN_MAX_S,
+    SPOT_WARN_MIN_S,
+};
+use failsafe::util::Rng;
+
+fn fuzz_cases() -> u64 {
+    std::env::var("FAILSAFE_FUZZ_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(24)
+}
+
+// ---------------------------------------------------------------------------
+// Property: capacity-proportional ShardPlan over random device mixes
+// ---------------------------------------------------------------------------
+
+/// A random mixed group: 4–8 devices, each H100 or A100, occasionally an
+/// HBM-shrunk H100 variant to exercise the capacity clamp.
+fn random_devices(rng: &mut Rng) -> Vec<GpuSpec> {
+    let world = 4 + rng.range(0, 5);
+    (0..world)
+        .map(|_| match rng.range(0, 4) {
+            0 | 1 => GpuSpec::h100(),
+            2 => GpuSpec::a100(),
+            _ => {
+                let mut g = GpuSpec::h100();
+                g.hbm_bytes = 60 * (1 << 30); // partitioned / MIG-style part
+                g
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn forall_capacity_proportional_plan_well_formed() {
+    let m = llama3_70b();
+    forall("capacity-proportional plan", fuzz_cases(), 0xCAFE, |rng| {
+        let devices = random_devices(rng);
+        let world = devices.len();
+        let plan = ShardPlan::capacity_proportional(&m, &devices);
+        let uniform = ShardPlan::failsafe(&m, world);
+        let w = capacity_weights(&devices, CAPACITY_DECODE_FRAC);
+
+        // Head quotas sum to the total head-layer inventory, and FFN
+        // blocks cover the partition exactly — apportionment never
+        // creates or drops work.
+        let loads = plan.rank_loads();
+        let head_layers =
+            |p: &ShardPlan| -> usize { p.rank_loads().iter().map(|l| l.tp_head_layers).sum() };
+        let dp_head_layers = |p: &ShardPlan| -> usize {
+            p.rank_loads()[0].kv_dp_bytes_per_token
+                / p.model.kv_bytes_per_token_per_head_layer().max(1)
+        };
+        assert_eq!(
+            head_layers(&plan) + dp_head_layers(&plan),
+            head_layers(&uniform) + dp_head_layers(&uniform),
+            "head quota must redistribute, not resize"
+        );
+        assert_eq!(
+            loads.iter().map(|l| l.ffn_blocks).sum::<usize>(),
+            uniform.rank_loads().iter().map(|l| l.ffn_blocks).sum::<usize>(),
+            "FFN blocks must cover the partition"
+        );
+
+        // No rank exceeds its own device's HBM: weights plus a working
+        // KV floor must fit on the device the rank actually runs on.
+        let min_kv = 4usize << 30;
+        for (r, l) in loads.iter().enumerate() {
+            assert!(
+                l.weight_bytes + min_kv <= devices[r].hbm_bytes,
+                "rank {r}: {} weight bytes + {min_kv} KV floor exceeds {} HBM",
+                l.weight_bytes,
+                devices[r].hbm_bytes
+            );
+        }
+
+        // Capacity weights respect the HBM clamp: no device is weighted
+        // past its share of the largest HBM in the group.
+        let max_hbm = devices.iter().map(|d| d.hbm_bytes).max().unwrap();
+        for (r, weight) in w.iter().enumerate() {
+            assert!(*weight > 0.0 && *weight <= 1.0);
+            assert!(*weight <= devices[r].hbm_bytes as f64 / max_hbm as f64 + 1e-12);
+        }
+
+        // Deterministic: the same device list always builds the same plan.
+        assert_eq!(plan, ShardPlan::capacity_proportional(&m, &devices));
+
+        // Reweighting to the same capacities is a fixed point (the plan
+        // *is* the uniform plan reweighted, and reweight is quota-driven).
+        assert_eq!(plan.reweight(&w), plan, "reweight to own capacities must be a fixed point");
+
+        // A uniform fleet degenerates to the uniform FailSafe loads.
+        let homo = vec![devices[0].clone(); world];
+        assert_eq!(
+            ShardPlan::capacity_proportional(&m, &homo).rank_loads(),
+            uniform.rank_loads(),
+            "homogeneous devices must reproduce uniform FailSafe loads"
+        );
+
+        // Faster devices never get *less* work than slower ones.
+        for a in 0..world {
+            for b in 0..world {
+                if w[a] > w[b] + 1e-9 {
+                    assert!(
+                        loads[a].tp_head_layers >= loads[b].tp_head_layers,
+                        "rank {a} (weight {}) holds fewer head-layers than rank {b} ({})",
+                        w[a],
+                        w[b]
+                    );
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: ≥ 1.3× modeled goodput on the canonical 4×H100 + 4×A100 mix
+// ---------------------------------------------------------------------------
+
+fn mixed_specs() -> Vec<GpuSpec> {
+    (0..8).map(|r| if r < 4 { GpuSpec::h100() } else { GpuSpec::a100() }).collect()
+}
+
+#[test]
+fn capacity_proportional_beats_uniform_by_30_percent() {
+    let m = llama3_70b();
+    let specs = mixed_specs();
+    let ic = Interconnect::for_devices(&specs);
+    let uni = StepCostModel::new_heterogeneous(&ShardPlan::failsafe(&m, 8), &specs, &ic);
+    let prop =
+        StepCostModel::new_heterogeneous(&ShardPlan::capacity_proportional(&m, &specs), &specs, &ic);
+    let w = capacity_weights(&specs, CAPACITY_DECODE_FRAC);
+    let (batch, ctx, steps) = (64usize, 4096usize, 64usize);
+    let uni_batch = DecodeWork::capacity_homed(batch, ctx, &vec![1.0; 8]);
+    let prop_batch = DecodeWork::capacity_homed(batch, ctx, &w);
+    let chunks = vec![PrefillWork { tokens: ctx, context: 0, home: 0 }];
+    let goodput = |cost: &StepCostModel, work: &[DecodeWork]| -> f64 {
+        let wall = cost.prefill_step_time(&chunks) + steps as f64 * cost.decode_step_time(work);
+        (ctx + steps * work.len()) as f64 / wall
+    };
+    let ratio = goodput(&prop, &prop_batch) / goodput(&uni, &uni_batch);
+    assert!(
+        ratio >= 1.3,
+        "capacity-proportional must clear the 1.3x acceptance bar on 4xH100+4xA100, \
+         got {ratio:.3}x"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Hardware-aware fleet capacity (satellite fix, end to end)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_scores_a100_replicas_by_hardware_not_world() {
+    let h_sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4);
+    let a_sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4)
+        .with_devices(vec![GpuSpec::a100(); 4]);
+    let mut fleet = Fleet::new();
+    for s in h_sim.sessions(1) {
+        fleet.add_replica(Box::new(s));
+    }
+    for s in a_sim.sessions(1) {
+        fleet.add_replica(Box::new(s));
+    }
+    let (h, a) = (fleet.replica_capacity(0), fleet.replica_capacity(1));
+    assert!((h - 4.0).abs() < 1e-9, "4x H100 is 4 units, got {h}");
+    // Blended A100 unit ≈ 0.41: same world size, ~2.4x less capacity.
+    let ratio = h / a;
+    assert!(
+        (2.0..3.0).contains(&ratio),
+        "4xA100 must score ~2.4x below 4xH100, got {ratio:.2}x (capacity {a:.2})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Golden pins: spot churn + diurnal generators
+// ---------------------------------------------------------------------------
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/elastic_golden.json")
+}
+
+/// Flat `{"key": <u64|null>, ...}` map, parsed by hand (no serde in the
+/// offline build). Unparseable lines are ignored.
+fn load_golden() -> HashMap<String, Option<u64>> {
+    let mut map = HashMap::new();
+    let Ok(text) = std::fs::read_to_string(golden_path()) else { return map };
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some(rest) = line.strip_prefix('"') else { continue };
+        let Some((key, val)) = rest.split_once("\":") else { continue };
+        let val = val.trim();
+        if val == "null" {
+            map.insert(key.to_string(), None);
+        } else if let Ok(v) = val.parse::<u64>() {
+            map.insert(key.to_string(), Some(v));
+        }
+    }
+    map
+}
+
+fn write_golden(values: &[(String, u64)]) {
+    let mut sorted: Vec<_> = values.to_vec();
+    sorted.sort();
+    let mut text = String::from("{\n");
+    for (i, (k, v)) in sorted.iter().enumerate() {
+        text.push_str(&format!("\"{k}\": {v}{}\n", if i + 1 < sorted.len() { "," } else { "" }));
+    }
+    text.push_str("}\n");
+    std::fs::create_dir_all(golden_path().parent().unwrap()).expect("golden dir");
+    std::fs::write(golden_path(), text).expect("write golden");
+}
+
+fn check_golden(values: &[(String, u64)]) {
+    let golden = load_golden();
+    for (k, v) in values {
+        if let Some(Some(frozen)) = golden.get(k) {
+            assert_eq!(v, frozen, "{k}: value drifted from frozen golden");
+        }
+    }
+}
+
+fn spot_golden_values() -> Vec<(String, u64)> {
+    let ps = spot_preemptions(8, 3, 200.0, 400.0, 42);
+    let tl = spot_timeline(&ps);
+    let first = ps.first().expect("non-empty schedule");
+    let last = ps.last().expect("non-empty schedule");
+    vec![
+        ("spot.preemptions".into(), ps.len() as u64),
+        ("spot.timeline_events".into(), tl.len() as u64),
+        ("spot.max_concurrent_down".into(), tl.max_concurrent_down() as u64),
+        ("spot.first_warn_bits".into(), first.warn_at.to_bits()),
+        ("spot.last_rejoin_bits".into(), last.rejoin_at.to_bits()),
+        (
+            "spot.warning_xor_bits".into(),
+            ps.iter().fold(0u64, |acc, p| acc ^ p.warning_s().to_bits()),
+        ),
+    ]
+}
+
+fn diurnal_golden_values() -> Vec<(String, u64)> {
+    let mut reqs = mooncake_trace(64, 42);
+    diurnal_arrivals(&mut reqs, 0.5, 8.0, 60.0, 42);
+    vec![
+        ("diurnal.last_arrival_bits".into(), reqs.last().unwrap().arrival.to_bits()),
+        (
+            "diurnal.arrival_xor_bits".into(),
+            reqs.iter().fold(0u64, |acc, r| acc ^ r.arrival.to_bits()),
+        ),
+        (
+            "diurnal.first_half_period".into(),
+            reqs.iter().filter(|r| r.arrival < 30.0).count() as u64,
+        ),
+    ]
+}
+
+#[test]
+fn golden_spot_preemptions_pinned() {
+    let v = spot_golden_values();
+    // Structural invariants hold regardless of frozen values.
+    let ps = spot_preemptions(8, 3, 200.0, 400.0, 42);
+    for p in &ps {
+        assert!(p.warning_s() >= SPOT_WARN_MIN_S && p.warning_s() <= SPOT_WARN_MAX_S);
+    }
+    spot_timeline(&ps).validate(8).unwrap();
+    check_golden(&v);
+}
+
+#[test]
+fn golden_diurnal_arrivals_pinned() {
+    check_golden(&diurnal_golden_values());
+}
+
+/// `FAILSAFE_WRITE_GOLDEN=1 cargo test -q golden_regenerate` refreezes
+/// the elastic golden file from the current build. A no-op otherwise.
+#[test]
+fn golden_regenerate_when_requested() {
+    if std::env::var("FAILSAFE_WRITE_GOLDEN").as_deref() != Ok("1") {
+        return;
+    }
+    let mut values = spot_golden_values();
+    values.extend(diurnal_golden_values());
+    write_golden(&values);
+}
+
+// ---------------------------------------------------------------------------
+// Spot race: proactive drain inside the warning window vs reactive recovery
+// ---------------------------------------------------------------------------
+
+fn two_replica_fleet() -> Fleet {
+    let sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+        .with_model(llama3_70b());
+    let mut fleet = Fleet::new();
+    for s in sim.sessions(2) {
+        fleet.add_replica(Box::new(s));
+    }
+    fleet
+}
+
+fn submit_steady(fleet: &mut Fleet, n: usize) {
+    // Heavy contexts, short decodes: recovery cost scales with resident
+    // in-flight KV, and short decodes let a draining replica actually
+    // empty inside the warning window.
+    let prompt = vec![7u32; 2048];
+    for i in 0..n {
+        fleet
+            .submit_with(&prompt, SubmitOptions::new(16).at(i as f64 * 0.02))
+            .expect("submit");
+    }
+}
+
+fn step_until(fleet: &mut Fleet, t: f64) {
+    while fleet_now(fleet) < t && !fleet.is_idle() {
+        fleet.step().expect("step");
+    }
+}
+
+#[test]
+fn proactive_drain_beats_reactive_recovery_on_goodput() {
+    // Calibrate the fault-free makespan so the preemption schedule lands
+    // mid-run on any cost model.
+    let mut cal = two_replica_fleet();
+    submit_steady(&mut cal, 40);
+    let wall = cal.run_to_completion().expect("calibrate").wall_s;
+    assert!(wall > 0.0);
+    let warn_at = 0.20 * wall;
+    let preempt_at = 0.45 * wall; // 0.25·wall of warning — inside the window
+    let rejoin_at = 0.75 * wall;
+
+    let run = |proactive: bool| -> FleetReport {
+        let mut fleet = two_replica_fleet();
+        submit_steady(&mut fleet, 40);
+        if proactive {
+            // Act on the warning: stop feeding the doomed replica and
+            // move its unstarted work while the backup window is open.
+            step_until(&mut fleet, warn_at);
+            fleet.drain(1).expect("drain");
+        }
+        step_until(&mut fleet, preempt_at);
+        fleet.inject_failure(1, 2, RecoveryMethod::Full).expect("preempt");
+        step_until(&mut fleet, rejoin_at);
+        fleet.inject_rejoin(1, RecoveryMethod::Full).expect("rejoin");
+        if proactive {
+            fleet.resume(1);
+        }
+        fleet.run_to_completion().expect("drain out")
+    };
+
+    let reactive = run(false);
+    let proactive = run(true);
+    // Same work is served either way — the race is about *when*.
+    assert_eq!(proactive.results.len(), reactive.results.len());
+    assert!(proactive.results.iter().all(|r| !r.result.aborted));
+    assert!(
+        proactive.goodput_tps() > reactive.goodput_tps(),
+        "proactive drain inside the warning window must beat reactive recovery: \
+         {:.1} vs {:.1} tok/s (walls {:.2}s vs {:.2}s)",
+        proactive.goodput_tps(),
+        reactive.goodput_tps(),
+        proactive.wall_s,
+        reactive.wall_s
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Diurnal sanity: the trough exists (autoscaler fuel)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn diurnal_trace_has_a_real_trough() {
+    let mut reqs = mooncake_trace(400, 9);
+    diurnal_arrivals(&mut reqs, 1.0, 16.0, 120.0, 9);
+    let in_window = |lo: f64, hi: f64| reqs.iter().filter(|r| r.arrival >= lo && r.arrival < hi).count();
+    // First quarter-period (trough) vs the middle half-period (peak).
+    let trough = in_window(0.0, 30.0);
+    let peak = in_window(30.0, 90.0);
+    assert!(peak as f64 > 3.0 * trough.max(1) as f64, "peak {peak} vs trough {trough}");
+}

@@ -8,7 +8,12 @@
 //! differential suite). Golden-value tests pin the canonical fault
 //! scenarios at fixed seeds against `tests/golden/simcore_golden.json`,
 //! checked against both cores; the fleet differential runs chunked
-//! `Fleet::replay` with stepper replicas vs event-core replicas.
+//! `Fleet::replay` with stepper replicas vs event-core replicas. The
+//! elastic differential drives randomized bursty programs (mixed
+//! H100/A100 replicas, scripted fail→rejoin pairs) through an autoscaled
+//! fleet and a static max-size fleet on identical scripts, asserting
+//! closed admission accounting, exact token conservation across
+//! expand/shrink, and bit-exact replay determinism of the autoscaled run.
 //!
 //! `FAILSAFE_FUZZ_CASES` bounds the randomized sweep (default 24).
 //! `FAILSAFE_WRITE_GOLDEN=1` regenerates the golden file from the
@@ -584,4 +589,242 @@ fn fleet_replay_identical_across_cores() {
     for (i, (x, y)) in a.report.replicas.iter().zip(b.report.replicas.iter()).enumerate() {
         assert_reports_identical(x, y, &format!("fleet replica {i}"));
     }
+}
+
+// ---------------------------------------------------------------------------
+// Elastic differential: autoscaled fleet vs static max-size fleet
+// ---------------------------------------------------------------------------
+
+use failsafe::cluster::GpuSpec;
+use failsafe::fleet::{
+    fleet_now, AdmissionGateway, AdmissionPolicy, AutoscalePolicy, Autoscaler, FleetReport,
+};
+
+/// One randomized elastic scenario: a mixed-hardware fleet, a bursty
+/// arrival schedule (spike then thin tail, so both scale directions have
+/// a reason to fire), and an optional fail→rejoin pair keyed to fleet
+/// time. A single `out` budget per scenario makes token conservation
+/// exact: every completed request must emit precisely `out` tokens no
+/// matter how the fleet reconfigured underneath it.
+#[derive(Clone)]
+struct ElasticProgram {
+    /// Per-replica hardware: `true` = 4×A100 replica, else 4×H100.
+    a100: Vec<bool>,
+    /// Decode budget shared by every request in the scenario.
+    out: usize,
+    reqs: Vec<(Vec<u32>, SubmitOptions)>,
+    /// `(fleet time, replica, is-failure)` — a failure kills rank 0 with
+    /// full recovery; the paired rejoin heals it later. Identical for
+    /// the static and autoscaled runs.
+    faults: Vec<(f64, usize, bool)>,
+}
+
+fn gen_elastic(rng: &mut Rng) -> ElasticProgram {
+    let replicas = rng.range(2, 4);
+    let a100: Vec<bool> = (0..replicas).map(|_| rng.bool(0.4)).collect();
+    let out = rng.range(4, 20);
+    let n = rng.range(16, 40);
+    let burst = 2 * n / 3;
+    let mut at = 0.0;
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n {
+        // Dense spike, then sparse tail: the load signal must cross the
+        // scale-up threshold early and the scale-down threshold late.
+        at += if i < burst { rng.exp(50.0) } else { rng.range_f64(0.3, 1.5) };
+        let prompt = vec![(i as u32) % 97 + 1; rng.range(128, 768)];
+        reqs.push((prompt, SubmitOptions::new(out).at(at)));
+    }
+    let mut faults = Vec::new();
+    if rng.bool(0.6) {
+        let r = rng.pick(replicas);
+        let t = rng.range_f64(0.05, 0.6);
+        faults.push((t, r, true));
+        faults.push((t + rng.range_f64(0.3, 1.2), r, false));
+    }
+    ElasticProgram { a100, out, reqs, faults }
+}
+
+fn elastic_fleet(a100: &[bool], mode: CoreMode) -> Fleet {
+    let mut fleet = Fleet::new();
+    for &is_a100 in a100 {
+        let mut sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4)
+            .with_model(llama3_70b());
+        if is_a100 {
+            sim = sim.with_devices(vec![GpuSpec::a100(); 4]);
+        }
+        let mut s = sim.session();
+        s.set_core_mode(mode);
+        fleet.add_replica(Box::new(s));
+    }
+    fleet
+}
+
+/// Fire every past-due scripted fault. A failure on a one-rank replica
+/// is skipped (nothing left to kill) — the same guard on both fleets.
+fn fire_faults(fleet: &mut Fleet, pending: &mut Vec<(f64, usize, bool)>) {
+    while let Some(&(t, r, fail)) = pending.first() {
+        if fleet_now(fleet) < t {
+            break;
+        }
+        if fail {
+            if fleet.replica_world(r) > 1 {
+                fleet.inject_failure(r, 0, RecoveryMethod::Full).expect("inject_failure");
+            }
+        } else {
+            let _ = fleet.inject_rejoin(r, RecoveryMethod::Full);
+        }
+        pending.remove(0);
+    }
+}
+
+/// `run_autoscaled`'s loop with scripted fault injection after every
+/// step; `scaler: None` drives the same loop statically (all replicas
+/// active throughout), so the two runs differ *only* in scaling.
+fn run_elastic(
+    fleet: &mut Fleet,
+    gateway: &mut AdmissionGateway,
+    mut scaler: Option<&mut Autoscaler>,
+    p: &ElasticProgram,
+) -> FleetReport {
+    let mut pending = p.faults.clone();
+    pending.sort_by(|a, b| a.0.total_cmp(&b.0));
+    if let Some(s) = scaler.as_deref_mut() {
+        s.park_to_min(fleet).expect("park");
+    }
+    let mut order: Vec<usize> = (0..p.reqs.len()).collect();
+    order.sort_by(|&a, &b| p.reqs[a].1.arrival.total_cmp(&p.reqs[b].1.arrival));
+    for i in order {
+        let (prompt, opts) = &p.reqs[i];
+        while fleet_now(fleet) < opts.arrival && !fleet.is_idle() {
+            fleet.step().expect("step");
+            fire_faults(fleet, &mut pending);
+            gateway.pump(fleet).expect("pump");
+            if let Some(s) = scaler.as_deref_mut() {
+                s.tick(fleet, gateway.queue_len()).expect("tick");
+            }
+        }
+        gateway.pump(fleet).expect("pump");
+        gateway.offer(fleet, prompt, *opts).expect("offer");
+        if let Some(s) = scaler.as_deref_mut() {
+            s.tick(fleet, gateway.queue_len()).expect("tick");
+        }
+    }
+    loop {
+        let admitted = gateway.pump(fleet).expect("pump");
+        if let Some(s) = scaler.as_deref_mut() {
+            s.tick(fleet, gateway.queue_len()).expect("tick");
+        }
+        if fleet.is_idle() {
+            // Past-due faults land before deciding to stop; faults still
+            // in the future can never fire on a frozen clock.
+            fire_faults(fleet, &mut pending);
+            if gateway.queue_len() == 0 {
+                break;
+            }
+            if admitted == 0 {
+                gateway.shed_remaining();
+                break;
+            }
+        } else {
+            fleet.step().expect("step");
+            fire_faults(fleet, &mut pending);
+        }
+    }
+    fleet.report()
+}
+
+/// One differential case; returns the autoscaler's `(ups, downs)` so
+/// the sweep can assert both directions were exercised *somewhere*.
+fn elastic_case(rng: &mut Rng) -> (usize, usize) {
+    let p = gen_elastic(rng);
+    let gate_policy = AdmissionPolicy { target_load: 512.0, ..AdmissionPolicy::default() };
+    let scale_policy = AutoscalePolicy {
+        scale_up_load: 384.0,
+        scale_down_load: 32.0,
+        cooldown_s: 0.25,
+        ..AutoscalePolicy::default()
+    };
+
+    let run_auto = || {
+        let mut fleet = elastic_fleet(&p.a100, CoreMode::Exact);
+        let mut gate = AdmissionGateway::new(gate_policy);
+        let mut scaler = Autoscaler::new(scale_policy);
+        let report = run_elastic(&mut fleet, &mut gate, Some(&mut scaler), &p);
+        (report, gate.stats(), scaler)
+    };
+    let (auto_report, auto_stats, scaler) = run_auto();
+    let (auto_report2, auto_stats2, scaler2) = run_auto();
+
+    let mut static_fleet = elastic_fleet(&p.a100, CoreMode::Exact);
+    let mut static_gate = AdmissionGateway::new(gate_policy);
+    let static_report = run_elastic(&mut static_fleet, &mut static_gate, None, &p);
+    let static_stats = static_gate.stats();
+
+    for (name, report, stats) in [
+        ("autoscaled", &auto_report, &auto_stats),
+        ("static", &static_report, &static_stats),
+    ] {
+        // Accounting closes: every offered request is in the results
+        // (admitted straight through or pumped off the queue), shed, or
+        // expired — nothing vanishes across expand/shrink reconfigs.
+        assert_eq!(
+            stats.admitted + stats.readmitted,
+            report.results.len(),
+            "{name}: admissions vs results"
+        );
+        assert_eq!(
+            stats.admitted + stats.readmitted + stats.shed + stats.expired,
+            p.reqs.len(),
+            "{name}: offer accounting"
+        );
+        // Token conservation: an admitted request emits exactly its
+        // decode budget regardless of drains, resumes, and failures
+        // while it was in flight.
+        for r in &report.results {
+            assert!(!r.result.aborted, "{name}: fleet request {} aborted", r.id);
+            assert_eq!(
+                r.result.output_tokens.len(),
+                p.out,
+                "{name}: fleet request {} token count",
+                r.id
+            );
+        }
+        assert_eq!(report.goodput_tokens(), report.results.len() * p.out, "{name}: goodput");
+    }
+
+    // The autoscaled run replays bit-exactly from the same program:
+    // identical results, wall, gateway counters, scale schedule, bill.
+    assert_eq!(auto_report.results.len(), auto_report2.results.len(), "result count drifted");
+    for (x, y) in auto_report.results.iter().zip(auto_report2.results.iter()) {
+        assert_eq!(x.id, y.id, "result order drifted");
+        assert_eq!(x.result.output_tokens, y.result.output_tokens, "req {} output", x.id);
+    }
+    assert_eq!(auto_report.wall_s.to_bits(), auto_report2.wall_s.to_bits(), "wall drifted");
+    assert_eq!(auto_stats, auto_stats2, "gateway stats drifted");
+    assert_eq!(scaler.scale_events(), scaler2.scale_events(), "scale schedule drifted");
+    assert_eq!(
+        scaler.unit_seconds().to_bits(),
+        scaler2.unit_seconds().to_bits(),
+        "bill drifted"
+    );
+    scaler.action_counts()
+}
+
+#[test]
+fn elastic_autoscaled_matches_static_accounting_on_random_programs() {
+    let (mut ups, mut downs) = (0usize, 0usize);
+    forall("elastic-differential", fuzz_cases(), 0xE1A57, |rng| {
+        let (u, d) = elastic_case(rng);
+        ups += u;
+        downs += d;
+    });
+    // Not every program need scale both ways, but the sweep as a whole
+    // must cover expansion and shrinkage or it is not testing elasticity.
+    assert!(ups >= 1, "no case in the sweep ever scaled up");
+    assert!(downs >= 1, "no case in the sweep ever scaled down");
+}
+
+#[test]
+fn regression_seed_elastic_fault_during_scale_down() {
+    elastic_case(&mut Rng::seed_from_u64(0xE1A57_0001));
 }
