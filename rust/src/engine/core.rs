@@ -32,6 +32,7 @@ use crate::cluster::{GpuSpec, Interconnect, TransferClass};
 use crate::config::EngineConfig;
 use crate::coordinator::RequestState;
 use crate::kvcache::{BackupStore, KvPlacement};
+use crate::obs::{ObsSink, Observer, RecoveryPhases};
 use crate::prefix::{NodeId, PrefixStats, PrefixTrie};
 use crate::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use crate::router::DpRouter;
@@ -175,6 +176,21 @@ pub trait ServingBackend {
     fn is_idle(&self) -> bool;
     /// Cumulative report over every request this session has seen.
     fn report(&self) -> ServeReport;
+
+    /// Attach a flight-recorder observer (see [`crate::obs`]). The
+    /// default drops it — a backend without instrumentation stays
+    /// valid, it just records nothing. Implementations must keep
+    /// recording purely passive (bit-exact output with or without an
+    /// observer attached).
+    fn set_observer(&mut self, observer: Box<dyn Observer>) {
+        let _ = observer;
+    }
+
+    /// Stamp the fleet replica id on this backend's trace records
+    /// (ignored by backends that ignore `set_observer`).
+    fn set_obs_replica(&mut self, replica: usize) {
+        let _ = replica;
+    }
 
     /// Drive `step()` until idle and return the report.
     fn run_to_completion(&mut self) -> Result<ServeReport> {
@@ -418,6 +434,10 @@ pub struct Engine {
     /// Events produced at step boundaries (aborts, failure injections),
     /// drained by the next `step()`.
     pending_events: Vec<EngineEvent>,
+    /// Flight-recorder seam (detached by default). Purely passive:
+    /// events mirror at the `step()` drain, recovery spans and gauges at
+    /// injection edges — never on the per-token path.
+    obs: ObsSink,
     // --- per-construction constants (hoisted out of the step loop) ---
     /// Prefill sequence buckets (attn, b=1, s>1), sorted.
     s_buckets: Vec<usize>,
@@ -503,6 +523,7 @@ impl Engine {
             speed: vec![1.0; world],
             recoveries: Vec::new(),
             pending_events: Vec::new(),
+            obs: ObsSink::none(),
             s_buckets,
             b_buckets,
             c_buckets,
@@ -597,6 +618,7 @@ impl Engine {
         self.kv.release(id);
         self.session.requests.get_mut(&id).unwrap().state = RequestState::Aborted;
         self.pending_events.push(EngineEvent::RequestAborted { id });
+        self.sample_gauges();
         Ok(())
     }
 
@@ -622,6 +644,7 @@ impl Engine {
         self.kv.swap_out(id);
         self.session.requests.get_mut(&id).unwrap().state = RequestState::Swapped;
         self.pending_events.push(EngineEvent::RequestPreempted { id });
+        self.sample_gauges();
         Ok(())
     }
 
@@ -650,7 +673,60 @@ impl Engine {
         );
         self.session.requests.get_mut(&id).unwrap().state = RequestState::Decoding;
         self.pending_events.push(EngineEvent::RequestResumed { id });
+        self.sample_gauges();
         Ok(())
+    }
+
+    /// Attach a flight-recorder observer (see [`crate::obs`]): engine
+    /// events mirror into it at the `step()` drain, failure/rejoin
+    /// injections emit recovery-phase spans, and KV/queue gauges sample
+    /// at those edges. Recording is purely passive — generation stays
+    /// bit-exact with an observer attached.
+    pub fn set_observer(&mut self, observer: Box<dyn Observer>) {
+        self.obs.set(observer);
+    }
+
+    /// Stamp the fleet replica id on subsequent trace records.
+    pub fn set_obs_replica(&mut self, replica: usize) {
+        self.obs.set_replica(replica);
+    }
+
+    /// Event-edge gauge sample: per-rank KV residency and speed factors,
+    /// plus replica-level pool stats and lifecycle queue depths. Called
+    /// at injection/reconfiguration edges only — never per token.
+    fn sample_gauges(&mut self) {
+        if !self.obs.enabled() {
+            return;
+        }
+        let t = self.session.clock;
+        let by_rank = self.kv_bytes_by_rank();
+        for (r, bytes) in by_rank.iter().enumerate() {
+            self.obs.gauge(t, Some(r), "kv.used_bytes", *bytes as f64);
+        }
+        for r in 0..self.speed.len() {
+            let f = self.speed[r];
+            self.obs.gauge(t, Some(r), "speed.factor", f);
+        }
+        let resident = self.kv_resident_bytes() as f64;
+        let shared = self.kv_shared_blocks() as f64;
+        let (mut queued, mut prefilling, mut decoding, mut swapped) = (0u64, 0u64, 0u64, 0u64);
+        for r in self.session.requests.values() {
+            match r.state {
+                RequestState::Queued => queued += 1,
+                RequestState::Prefilling => prefilling += 1,
+                RequestState::Decoding => decoding += 1,
+                RequestState::Swapped => swapped += 1,
+                _ => {}
+            }
+        }
+        let capacity: f64 = self.speed.iter().sum();
+        self.obs.gauge(t, None, "kv.resident_bytes", resident);
+        self.obs.gauge(t, None, "kv.shared_blocks", shared);
+        self.obs.gauge(t, None, "queue.queued", queued as f64);
+        self.obs.gauge(t, None, "queue.prefilling", prefilling as f64);
+        self.obs.gauge(t, None, "queue.decoding", decoding as f64);
+        self.obs.gauge(t, None, "queue.swapped", swapped as f64);
+        self.obs.gauge(t, None, "capacity.effective", capacity);
     }
 
     /// Output tokens emitted so far for `id` — the streaming accessor.
@@ -713,6 +789,15 @@ impl Engine {
         self.ws.sched = sched;
         outcome?;
         self.session.clock += t0.elapsed().as_secs_f64();
+        if self.obs.enabled() {
+            // Mirror the drained events (TokenEmitted elided inside
+            // `event`). Buffered boundary events are recorded here, at
+            // delivery, exactly once.
+            let t = self.session.clock;
+            for ev in &events {
+                self.obs.event(t, ev);
+            }
+        }
         Ok(events)
     }
 
@@ -1137,6 +1222,29 @@ impl Engine {
         self.reshare_prefixes();
 
         self.recoveries.push(outcome.total_s);
+        if self.obs.enabled() {
+            let t0 = self.session.clock;
+            let epoch = self.epoch;
+            let affected_n = affected.len();
+            RecoveryPhases::of(&outcome, 0.0).emit(
+                &mut self.obs,
+                t0,
+                Some(rank),
+                "failure",
+                format!("{method:?}"),
+            );
+            self.obs.decision(
+                t0,
+                Some(rank),
+                "kv.relayout",
+                vec![
+                    ("epoch", epoch.into()),
+                    ("world", new_world.into()),
+                    ("affected_requests", affected_n.into()),
+                ],
+            );
+        }
+        self.sample_gauges();
         self.pending_events
             .push(EngineEvent::RecoveryCompleted { method, latency_s: outcome.total_s });
         self.pending_events
@@ -1243,6 +1351,28 @@ impl Engine {
         self.reshare_prefixes();
 
         self.recoveries.push(total_s);
+        if self.obs.enabled() {
+            let t0 = self.session.clock;
+            let epoch = self.epoch;
+            RecoveryPhases::of(&outcome, kv_move_s).emit(
+                &mut self.obs,
+                t0,
+                Some(joined),
+                "rejoin",
+                format!("{method:?}"),
+            );
+            self.obs.decision(
+                t0,
+                Some(joined),
+                "kv.relayout",
+                vec![
+                    ("epoch", epoch.into()),
+                    ("world", new_world.into()),
+                    ("kv_move_s", kv_move_s.into()),
+                ],
+            );
+        }
+        self.sample_gauges();
         self.pending_events.push(EngineEvent::GpuRejoined { rank: joined, method });
         self.pending_events.push(EngineEvent::ReconfigCompleted {
             epoch: self.epoch,
@@ -1282,6 +1412,16 @@ impl Engine {
             self.pending_events.push(EngineEvent::GpuDegraded { rank, factor });
         } else if was < 1.0 {
             self.pending_events.push(EngineEvent::GpuRestored { rank });
+        }
+        if self.obs.enabled() {
+            let t = self.session.clock;
+            self.obs.decision(
+                t,
+                Some(rank),
+                "routing.downweight",
+                vec![("factor", factor.into()), ("was", was.into())],
+            );
+            self.sample_gauges();
         }
         Ok(0.0) // routing-only mitigation: no modeled stall
     }
@@ -1840,6 +1980,14 @@ impl ServingBackend for Engine {
 
     fn report(&self) -> ServeReport {
         Engine::report(self)
+    }
+
+    fn set_observer(&mut self, observer: Box<dyn Observer>) {
+        Engine::set_observer(self, observer)
+    }
+
+    fn set_obs_replica(&mut self, replica: usize) {
+        Engine::set_obs_replica(self, replica)
     }
 
     fn run_to_completion(&mut self) -> Result<ServeReport> {

@@ -31,6 +31,7 @@ use anyhow::Result;
 
 use super::{Fleet, FleetReport, FleetRequestId};
 use crate::engine::SubmitOptions;
+use crate::obs::{ObsSink, Observer, Value};
 use crate::SimTime;
 
 /// Front-door thresholds. Defaults suit the simulated drills; real
@@ -134,13 +135,52 @@ pub struct AdmissionGateway {
     queue: Vec<Gated>,
     seq: u64,
     stats: AdmissionStats,
+    /// Flight-recorder seam for gate verdicts (passive, detached by
+    /// default).
+    obs: ObsSink,
 }
 
 impl AdmissionGateway {
     pub fn new(policy: AdmissionPolicy) -> AdmissionGateway {
         assert!(policy.target_load >= 0.0 && policy.target_load.is_finite());
         assert!(policy.shed_load_factor >= 1.0);
-        AdmissionGateway { policy, queue: Vec::new(), seq: 0, stats: AdmissionStats::default() }
+        AdmissionGateway {
+            policy,
+            queue: Vec::new(),
+            seq: 0,
+            stats: AdmissionStats::default(),
+            obs: ObsSink::none(),
+        }
+    }
+
+    /// Attach a flight-recorder observer: every gate verdict (admit /
+    /// park / shed / evict / expire / readmit) records with the fleet
+    /// load and queue depth it was made against.
+    pub fn set_observer(&mut self, observer: Box<dyn Observer>) {
+        self.obs.set(observer);
+    }
+
+    /// Record one gateway verdict (no-op while detached).
+    fn note(
+        &mut self,
+        fleet: &Fleet,
+        name: &'static str,
+        load: f64,
+        opts: &SubmitOptions,
+        mut extra: Vec<(&'static str, Value)>,
+    ) {
+        if !self.obs.enabled() {
+            return;
+        }
+        let t = fleet_now(fleet);
+        let mut fields: Vec<(&'static str, Value)> = vec![
+            ("load", load.into()),
+            ("queue", self.queue.len().into()),
+            ("priority", opts.priority.into()),
+            ("best_effort", best_effort(opts).into()),
+        ];
+        fields.append(&mut extra);
+        self.obs.decision(t, None, name, fields);
     }
 
     pub fn policy(&self) -> AdmissionPolicy {
@@ -172,6 +212,7 @@ impl AdmissionGateway {
             // request instead of surfacing that transient.
             if let Ok(id) = fleet.submit_with(prompt, opts) {
                 self.stats.admitted += 1;
+                self.note(fleet, "gate.admit", load, &opts, vec![("fleet_id", id.into())]);
                 return Ok(AdmissionDecision::Admitted(id));
             }
         }
@@ -179,6 +220,7 @@ impl AdmissionGateway {
             let saturated = load >= self.policy.target_load * self.policy.shed_load_factor;
             if saturated || self.queue.len() >= self.policy.queue_capacity {
                 self.stats.shed += 1;
+                self.note(fleet, "gate.shed", load, &opts, vec![]);
                 return Ok(AdmissionDecision::Rejected);
             }
         } else if self.queue.len() >= self.policy.queue_capacity {
@@ -188,9 +230,11 @@ impl AdmissionGateway {
                 Some(i) => {
                     self.queue.remove(i);
                     self.stats.shed += 1;
+                    self.note(fleet, "gate.evict", load, &opts, vec![]);
                 }
                 None => {
                     self.stats.shed += 1;
+                    self.note(fleet, "gate.shed", load, &opts, vec![]);
                     return Ok(AdmissionDecision::Rejected);
                 }
             }
@@ -198,6 +242,7 @@ impl AdmissionGateway {
         self.queue.push(Gated { prompt: prompt.to_vec(), opts, seq: self.seq });
         self.seq += 1;
         self.stats.queued += 1;
+        self.note(fleet, "gate.park", load, &opts, vec![]);
         Ok(AdmissionDecision::Queued)
     }
 
@@ -214,7 +259,17 @@ impl AdmissionGateway {
         let now = fleet_now(fleet);
         let before = self.queue.len();
         self.queue.retain(|g| g.opts.deadline.map_or(true, |d| d >= now));
-        self.stats.expired += before - self.queue.len();
+        let expired = before - self.queue.len();
+        self.stats.expired += expired;
+        if expired > 0 && self.obs.enabled() {
+            let q = self.queue.len();
+            self.obs.decision(
+                now,
+                None,
+                "gate.expire",
+                vec![("count", expired.into()), ("queue", q.into())],
+            );
+        }
         // Priority desc, deadline asc (None last), gateway FIFO — the
         // same order the in-replica scheduler uses, so the gateway never
         // inverts the triage the scheduler would apply.
@@ -234,9 +289,14 @@ impl AdmissionGateway {
         while !self.queue.is_empty() && fleet_load(fleet) < self.policy.target_load {
             let g = self.queue.remove(0);
             match fleet.submit_with(&g.prompt, g.opts) {
-                Ok(_) => {
+                Ok(id) => {
                     self.stats.readmitted += 1;
                     admitted += 1;
+                    let load = fleet_load(fleet);
+                    self.note(fleet, "gate.readmit", load, &g.opts, vec![(
+                        "fleet_id",
+                        id.into(),
+                    )]);
                 }
                 Err(_) => {
                     // Nothing placeable right now (all draining): put it

@@ -29,6 +29,7 @@ use anyhow::Result;
 use super::admission::{fleet_load, fleet_now, run_gated, AdmissionGateway};
 use super::{Fleet, FleetReport, ReplicaId};
 use crate::engine::SubmitOptions;
+use crate::obs::{ObsSink, Observer};
 use crate::SimTime;
 
 /// Autoscaler thresholds. Loads are in the same booked-token-units per
@@ -84,6 +85,12 @@ pub struct Autoscaler {
     /// `settled_at` on every tick.
     billed: Vec<f64>,
     settled_at: SimTime,
+    /// Flight-recorder seam for scale decisions and billing ticks
+    /// (passive, detached by default).
+    obs: ObsSink,
+    /// Last time a `billing.settle` record was emitted — settlements
+    /// happen every tick, records at most once per simulated second.
+    last_billing_note: SimTime,
 }
 
 impl Autoscaler {
@@ -97,7 +104,16 @@ impl Autoscaler {
             events: Vec::new(),
             billed: Vec::new(),
             settled_at: 0.0,
+            obs: ObsSink::none(),
+            last_billing_note: f64::NEG_INFINITY,
         }
+    }
+
+    /// Attach a flight-recorder observer: scale-up/-down decisions and
+    /// billing settlements record with the load and queue depth they
+    /// acted on.
+    pub fn set_observer(&mut self, observer: Box<dyn Observer>) {
+        self.obs.set(observer);
     }
 
     pub fn policy(&self) -> AutoscalePolicy {
@@ -180,6 +196,21 @@ impl Autoscaler {
         if let Some(e) = event {
             self.last_action = now;
             self.events.push(e);
+            if self.obs.enabled() {
+                let name = if e.up { "scale.up" } else { "scale.down" };
+                let actives = if e.up { active.len() + 1 } else { active.len() - 1 };
+                self.obs.decision(
+                    now,
+                    None,
+                    name,
+                    vec![
+                        ("replica", e.replica.into()),
+                        ("load", load.into()),
+                        ("queue", queue_len.into()),
+                        ("active", actives.into()),
+                    ],
+                );
+            }
         }
         Ok(event)
     }
@@ -199,6 +230,16 @@ impl Autoscaler {
             }
         }
         self.settled_at = now;
+        if self.obs.enabled() && now - self.last_billing_note >= 1.0 {
+            self.last_billing_note = now;
+            let total: f64 = self.billed.iter().sum();
+            self.obs.decision(
+                now,
+                None,
+                "billing.settle",
+                vec![("dt_s", dt.into()), ("unit_seconds", total.into())],
+            );
+        }
     }
 }
 

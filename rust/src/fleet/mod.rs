@@ -75,6 +75,7 @@ use crate::engine::{
     EngineEvent, GenerationResult, ServeReport, ServingBackend, SubmitOptions,
 };
 use crate::metrics::Cdf;
+use crate::obs::{ObsSink, SharedLog};
 use crate::prefix::PrefixDirectory;
 use crate::recovery::RecoveryMethod;
 use crate::{RankId, RequestId, SimTime};
@@ -267,6 +268,11 @@ pub struct Fleet {
     /// prompt-prefix chain. `None` keeps classic capacity-normalized
     /// placement bit-identical.
     prefix: Option<PrefixDirectory>,
+    /// Fleet-level flight-recorder seam (placements, redirects, drains);
+    /// purely passive, detached by default.
+    obs: ObsSink,
+    /// Kept so replicas added after [`Fleet::set_observer`] attach too.
+    log: Option<SharedLog>,
 }
 
 impl Default for Fleet {
@@ -283,6 +289,36 @@ impl Fleet {
             requests: Vec::new(),
             local_map: HashMap::new(),
             prefix: None,
+            obs: ObsSink::none(),
+            log: None,
+        }
+    }
+
+    /// Attach one shared flight recorder to the fleet and to every
+    /// replica, current and future: fleet-level placement / redirect /
+    /// drain decisions record here, and each replica's backend records
+    /// its own events, recovery spans, and gauges stamped with its
+    /// replica id. Recording is purely passive — placement and token
+    /// streams are bit-exact with or without it.
+    pub fn set_observer(&mut self, log: &SharedLog) {
+        self.obs.set(log.observer());
+        for (i, r) in self.replicas.iter_mut().enumerate() {
+            r.backend.set_observer(log.observer());
+            r.backend.set_obs_replica(i);
+        }
+        self.log = Some(log.clone());
+    }
+
+    /// Event-edge sample of the router's booked load per replica.
+    fn sample_fleet_load(&mut self) {
+        if !self.obs.enabled() {
+            return;
+        }
+        for r in 0..self.replicas.len() {
+            let t = self.replicas[r].backend.now();
+            let pending = self.router.pending(r);
+            self.obs.set_replica(r);
+            self.obs.gauge(t, None, "fleet.load", pending);
         }
     }
 
@@ -310,7 +346,13 @@ impl Fleet {
     pub fn add_replica(&mut self, backend: Box<dyn ServingBackend>) -> ReplicaId {
         let spec_world = backend.world();
         self.replicas.push(Replica { backend, spec_world, draining: false });
-        self.router.grow()
+        let id = self.router.grow();
+        if let Some(log) = &self.log {
+            let r = self.replicas.last_mut().unwrap();
+            r.backend.set_observer(log.observer());
+            r.backend.set_obs_replica(id);
+        }
+        id
     }
 
     /// Number of replicas.
@@ -449,6 +491,23 @@ impl Fleet {
             redirects: 0,
         });
         self.local_map.insert((replica, local), id);
+        if self.obs.enabled() {
+            let t = self.replicas[replica].backend.now();
+            let pending = self.router.pending(replica);
+            self.obs.set_replica(replica);
+            self.obs.decision(
+                t,
+                None,
+                "fleet.place",
+                vec![
+                    ("fleet_id", id.into()),
+                    ("replica", replica.into()),
+                    ("work", work.into()),
+                    ("booked", pending.into()),
+                    ("affinity_hit", hit.is_some().into()),
+                ],
+            );
+        }
         Ok(id)
     }
 
@@ -488,6 +547,7 @@ impl Fleet {
             dir.purge_replica(replica);
         }
         self.redirect_fresh(replica)?;
+        self.sample_fleet_load();
         Ok(latency)
     }
 
@@ -495,7 +555,9 @@ impl Fleet {
     /// [`Fleet::inject_failure`]); the replica's capacity grows back and
     /// placement re-attracts work naturally.
     pub fn inject_rejoin(&mut self, replica: ReplicaId, method: RecoveryMethod) -> Result<f64> {
-        self.replicas[replica].backend.inject_rejoin(method)
+        let latency = self.replicas[replica].backend.inject_rejoin(method)?;
+        self.sample_fleet_load();
+        Ok(latency)
     }
 
     /// Inject a *soft* fault on `replica`: `rank` keeps serving at
@@ -538,12 +600,29 @@ impl Fleet {
         if let Some(dir) = &mut self.prefix {
             dir.purge_replica(replica);
         }
-        self.redirect_fresh(replica)
+        let moved = self.redirect_fresh(replica)?;
+        if self.obs.enabled() {
+            let t = self.replicas[replica].backend.now();
+            self.obs.set_replica(replica);
+            self.obs.decision(
+                t,
+                None,
+                "fleet.drain",
+                vec![("replica", replica.into()), ("redirected", moved.into())],
+            );
+            self.sample_fleet_load();
+        }
+        Ok(moved)
     }
 
     /// Return a drained replica to service.
     pub fn resume(&mut self, replica: ReplicaId) {
         self.replicas[replica].draining = false;
+        if self.obs.enabled() {
+            let t = self.replicas[replica].backend.now();
+            self.obs.set_replica(replica);
+            self.obs.decision(t, None, "fleet.resume", vec![("replica", replica.into())]);
+        }
     }
 
     /// Move every zero-progress request off `from` onto the best healthy
@@ -594,6 +673,21 @@ impl Fleet {
             t.local = new_local;
             t.redirects += 1;
             moved += 1;
+            if self.obs.enabled() {
+                let now = self.replicas[target].backend.now();
+                self.obs.set_replica(target);
+                self.obs.decision(
+                    now,
+                    None,
+                    "fleet.redirect",
+                    vec![
+                        ("fleet_id", (id as u64).into()),
+                        ("from", from.into()),
+                        ("to", target.into()),
+                        ("work", booked.into()),
+                    ],
+                );
+            }
         }
         Ok(moved)
     }

@@ -29,6 +29,11 @@
 //!   whose nodes are refcounted copy-on-write references into the paged
 //!   KV store, so repeated system prompts prefill once and stay resident
 //!   once — including across failure/reconfiguration epochs.
+//! * [`obs`] — the flight recorder: a determinism-preserving
+//!   [`obs::Observer`] seam on every backend feeding a structured
+//!   [`obs::TraceLog`] (engine events, subsystem decisions,
+//!   recovery-phase spans, per-rank gauges), with Chrome-trace and
+//!   Prometheus-text exporters behind the `trace` subcommand.
 //! * [`health`] — soft-fault handling for GPUs that are alive but slow:
 //!   straggler detection from per-rank step times, a
 //!   Healthy → Throttled → Suspect → Down state machine, and
@@ -98,6 +103,7 @@ pub mod health;
 pub mod kvcache;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod prefix;
 pub mod recovery;
 pub mod router;

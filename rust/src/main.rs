@@ -29,6 +29,10 @@
 //!             stepper, the bit-exact event core, and the batched span
 //!             core; print the rounds/spans/timing table and assert the
 //!             event core matches the stepper bit for bit
+//!   trace     flight-recorder replay: the `replay` drill with the
+//!             structured trace log attached — writes a Chrome/Perfetto
+//!             trace (--out), prints the incident timeline, and asserts
+//!             each recovery's phase spans sum to its reported latency
 //!   traces    print workload/availability trace statistics
 //!
 //! Examples:
@@ -50,6 +54,7 @@
 //!   failsafe recover --model llama --world 8 --requests 60 --ctx 8000
 //!   failsafe prefix --prefixes 4 --fanout 8 --prefix-tokens 2048
 //!   failsafe simcore --world 8 --requests 512 --burst 64 --output-tokens 64
+//!   failsafe trace --world 8 --scenario cascade --requests 40 --out trace.json
 //!   failsafe traces --n 3000
 
 use failsafe::benchkit::section;
@@ -65,6 +70,7 @@ use failsafe::fleet::{
 };
 use failsafe::kvcache::BackupStore;
 use failsafe::model::ModelSpec;
+use failsafe::obs::{prometheus_text, RecordKind, SharedLog, Value};
 use failsafe::recovery::{plan_recovery, RecoveryInput, RecoveryMethod};
 use failsafe::sharding::{HeadAssignment, ShardPlan, CAPACITY_DECODE_FRAC};
 use failsafe::simulator::{
@@ -117,6 +123,12 @@ subcommands:
             --burst, --output-tokens each) through the per-token stepper,
             the bit-exact event core, and the batched span core; prints
             the rounds/spans/timing table and asserts bit-equality
+  trace     flight-recorder replay: the sim replay drill with the
+            structured trace log attached; writes Chrome/Perfetto
+            traceEvents JSON (--out trace.json, --prom FILE for a
+            Prometheus snapshot), prints the incident timeline, and
+            asserts each recovery's detect/plan/stream/respread/resume
+            spans sum to its reported latency
   traces    print workload/availability trace statistics
 
 see docs/OPERATIONS.md for every flag and sample output, or the
@@ -135,6 +147,7 @@ fn main() -> anyhow::Result<()> {
         Some("recover") => recover(&args),
         Some("prefix") => prefix_cmd(&args),
         Some("simcore") => simcore_cmd(&args),
+        Some("trace") => trace_cmd(&args),
         Some("traces") => traces(&args),
         Some(other) => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
@@ -433,6 +446,120 @@ fn replay_engine(args: &Args, method: RecoveryMethod) -> anyhow::Result<()> {
     println!(
         "bit-exact vs the fault-free run across {} reconfigurations ✓",
         out.applied.len()
+    );
+    Ok(())
+}
+
+/// Flight-recorder replay: the cost-model replay drill with the
+/// structured trace log attached. Writes Chrome/Perfetto traceEvents
+/// JSON, prints the incident timeline, and asserts the recovery-phase
+/// decomposition — every recovery's detect/plan/stream/respread/resume
+/// spans must sum to the latency the backend reported (±1e-9 s).
+fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    let method = recovery_arg(args)?;
+    let model = model_arg(args)?;
+    let system = system_arg(args)?;
+    let world = args.get_usize("world", 8);
+    let n = args.get_usize("requests", 40);
+    let rate = args.get_f64("rate", 4.0);
+    let seed = args.get_u64("seed", 42);
+    let out_path = args.get_or("out", "trace.json");
+    let timeline = build_timeline(args, world)?;
+    timeline.validate(world)?;
+
+    section(&format!(
+        "flight recorder: {} availability events over {} TP{} ({} requests @ {} req/s, {})",
+        timeline.len(),
+        system.name,
+        world,
+        n,
+        rate,
+        method.name()
+    ));
+    let mut trace = mooncake_trace(n, seed);
+    for r in trace.iter_mut() {
+        r.input_tokens = r.input_tokens.clamp(1, 16_000);
+        r.output_tokens = r.output_tokens.clamp(8, 64);
+    }
+    poisson_arrivals(&mut trace, rate, seed);
+    let log = SharedLog::new();
+    let sim = OnlineSim::new(system, OnlineMode::Decode, world).with_model(model);
+    let mut session = sim.session();
+    session.set_observer(log.observer());
+    for r in &trace {
+        session.submit_with(
+            &vec![0u32; r.input_tokens],
+            SubmitOptions::new(r.output_tokens).at(r.arrival),
+        )?;
+    }
+    let out = replay(&mut session, &timeline, method, ReplayPace::Clock)?;
+    let snap = log.snapshot();
+
+    // Cross-check the span decomposition against what the backend
+    // reported in its event stream: walk the records once, pairing each
+    // "recovery" parent span with its five phase children and with the
+    // next recovery.completed / reconfig.completed latency.
+    let mut parents: Vec<f64> = Vec::new(); // latency_s on each parent span
+    let mut child_sums: Vec<f64> = Vec::new();
+    let mut reported: Vec<f64> = Vec::new();
+    for rec in snap.records() {
+        match rec.kind {
+            RecordKind::SpanBegin if rec.name == "recovery" => {
+                if let Some(Value::F(v)) = rec.field("latency_s") {
+                    parents.push(*v);
+                    child_sums.push(0.0);
+                }
+            }
+            RecordKind::SpanBegin if rec.name.starts_with("recovery.") => {
+                if let (Some(sum), Some(Value::F(d))) =
+                    (child_sums.last_mut(), rec.field("dur_s"))
+                {
+                    *sum += *d;
+                }
+            }
+            RecordKind::Event
+                if rec.name == "recovery.completed" || rec.name == "reconfig.completed" =>
+            {
+                if let Some(Value::F(v)) = rec.field("latency_s") {
+                    reported.push(*v);
+                }
+            }
+            _ => {}
+        }
+    }
+    anyhow::ensure!(
+        parents.len() == reported.len(),
+        "span/event mismatch: {} recovery spans vs {} completion events",
+        parents.len(),
+        reported.len()
+    );
+    for (i, ((span, sum), rep)) in
+        parents.iter().zip(&child_sums).zip(&reported).enumerate()
+    {
+        anyhow::ensure!(
+            (span - rep).abs() <= 1e-9 && (sum - rep).abs() <= 1e-9,
+            "recovery {i}: span {span:.9}s / phases {sum:.9}s vs reported {rep:.9}s"
+        );
+    }
+
+    std::fs::write(out_path, snap.to_chrome_trace())?;
+    if let Some(prom) = args.get("prom") {
+        std::fs::write(prom, prometheus_text(&snap))?;
+    }
+    print!("{}", snap.incident_timeline());
+    println!(
+        "{} records ({} dropped) -> {} | {} recoveries, phase spans sum to reported latency ±1e-9 ✓",
+        snap.records().count(),
+        snap.dropped(),
+        out_path,
+        parents.len()
+    );
+    println!(
+        "final world {} | {} decode tok in {:.1}s sim ({:.0} tok/s)",
+        out.final_world,
+        out.report.decode_tokens,
+        out.report.wall_s,
+        out.report.decode_tps()
     );
     Ok(())
 }

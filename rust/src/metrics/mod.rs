@@ -5,4 +5,4 @@ mod histogram;
 mod recorder;
 
 pub use histogram::{Cdf, Histogram};
-pub use recorder::{RequestMetrics, ServingMetrics, ThroughputWindow};
+pub use recorder::{RequestMetrics, RequestOutcome, ServingMetrics, ThroughputWindow};

@@ -6,6 +6,17 @@ use std::collections::HashMap;
 use super::{Cdf, Histogram};
 use crate::{RequestId, SimTime};
 
+/// Terminal state of one request's metrics timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Still live (or the run ended without a terminal event).
+    InFlight,
+    /// Emitted its full generation budget.
+    Completed,
+    /// Cancelled (operator abort, redirect, admission-deadline expiry).
+    Aborted,
+}
+
 /// Timeline of one request, from which TTFT/TBT derive.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestMetrics {
@@ -17,11 +28,22 @@ pub struct RequestMetrics {
     /// metric for decode ("a request violates its decode SLO if any of its
     /// TBTs exceed the threshold", §4.3.3).
     pub max_tbt: f64,
+    /// How the request left the system ([`RequestOutcome::InFlight`]
+    /// until [`ServingMetrics::on_finish`] / [`ServingMetrics::on_abort`]).
+    pub outcome: RequestOutcome,
 }
 
 impl RequestMetrics {
     pub fn ttft(&self) -> Option<f64> {
         self.first_token.map(|t| t - self.arrival)
+    }
+
+    pub fn completed(&self) -> bool {
+        self.outcome == RequestOutcome::Completed
+    }
+
+    pub fn aborted(&self) -> bool {
+        self.outcome == RequestOutcome::Aborted
     }
 }
 
@@ -62,6 +84,7 @@ impl ServingMetrics {
                 last_token: None,
                 tokens_out: 0,
                 max_tbt: 0.0,
+                outcome: RequestOutcome::InFlight,
             },
         );
         self.start = self.start.min(at);
@@ -133,11 +156,32 @@ impl ServingMetrics {
 
     /// Request finished: fold its max TBT into the CDF.
     pub fn on_finish(&mut self, id: RequestId) {
-        if let Some(r) = self.requests.get(&id) {
+        if let Some(r) = self.requests.get_mut(&id) {
+            r.outcome = RequestOutcome::Completed;
             if r.tokens_out > 1 {
                 self.max_tbt_cdf.record(r.max_tbt);
             }
         }
+    }
+
+    /// Request aborted at `at` (operator cancel, redirect off a failing
+    /// replica, admission-deadline expiry). A terminal state like any
+    /// other: the tokens it did emit stay counted, and its max TBT folds
+    /// into the CDF exactly as a completion's would — an SLO analysis
+    /// that silently drops aborted requests overstates the tail.
+    pub fn on_abort(&mut self, id: RequestId, at: SimTime) {
+        self.end = self.end.max(at);
+        if let Some(r) = self.requests.get_mut(&id) {
+            r.outcome = RequestOutcome::Aborted;
+            if r.tokens_out > 1 {
+                self.max_tbt_cdf.record(r.max_tbt);
+            }
+        }
+    }
+
+    /// Requests whose terminal state is `outcome`.
+    pub fn n_with_outcome(&self, outcome: RequestOutcome) -> usize {
+        self.requests.values().filter(|r| r.outcome == outcome).count()
     }
 
     pub fn request(&self, id: RequestId) -> Option<&RequestMetrics> {
@@ -192,15 +236,35 @@ impl ThroughputWindow {
 
     pub fn record(&mut self, at: SimTime, tokens: u64) {
         let end = (at / self.window).floor() * self.window + self.window;
-        match self.buckets.last_mut() {
-            Some((e, t)) if *e == end => *t += tokens,
-            _ => self.buckets.push((end, tokens)),
+        // Out-of-order arrivals (fleet replicas on skewed clocks, span
+        // cores attributing bulk emissions) must merge into their
+        // window, not append a stale-end duplicate: binary search keeps
+        // the buckets sorted and unique by window end.
+        match self.buckets.binary_search_by(|(e, _)| e.total_cmp(&end)) {
+            Ok(i) => self.buckets[i].1 += tokens,
+            Err(i) => self.buckets.insert(i, (end, tokens)),
         }
     }
 
-    /// `(time, tokens_per_second)` series.
+    /// `(window_end_time, tokens_per_second)` series, with zero-valued
+    /// windows filled in for idle gaps so plots show the stall instead
+    /// of silently skipping it.
     pub fn series(&self) -> Vec<(SimTime, f64)> {
-        self.buckets.iter().map(|&(e, t)| (e, t as f64 / self.window)).collect()
+        let mut out = Vec::with_capacity(self.buckets.len());
+        let mut next: Option<SimTime> = None;
+        for &(e, t) in &self.buckets {
+            if let Some(mut n) = next {
+                // Emit empty windows until we reach this bucket (the
+                // half-window tolerance absorbs float stepping error).
+                while e - n > self.window / 2.0 {
+                    out.push((n, 0.0));
+                    n += self.window;
+                }
+            }
+            out.push((e, t as f64 / self.window));
+            next = Some(e + self.window);
+        }
+        out
     }
 
     /// Average throughput over the whole run (the dashed line in Fig 8).
@@ -243,6 +307,54 @@ mod tests {
         assert_eq!(s[0], (10.0, 20.0));
         assert_eq!(s[1], (20.0, 30.0));
         assert!((w.average() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn abort_is_terminal_and_counted() {
+        let mut m = ServingMetrics::new();
+        m.on_arrival(1, 0.0);
+        m.on_token(1, 1.0);
+        m.on_token(1, 4.0); // max TBT 3s
+        m.on_abort(1, 5.0);
+        let r = m.request(1).unwrap();
+        assert!(r.aborted() && !r.completed());
+        assert_eq!(m.n_with_outcome(RequestOutcome::Aborted), 1);
+        assert_eq!(m.n_with_outcome(RequestOutcome::Completed), 0);
+        // The aborted request's tail latency stays in the SLO CDF...
+        assert_eq!(m.max_tbt_cdf.len(), 1);
+        // ...and the abort time extends the run for throughput math.
+        assert!((m.elapsed() - 5.0).abs() < 1e-9);
+
+        // A zero/one-token abort records no TBT sample.
+        m.on_arrival(2, 0.0);
+        m.on_abort(2, 6.0);
+        assert_eq!(m.max_tbt_cdf.len(), 1);
+        assert!(m.request(2).unwrap().aborted());
+    }
+
+    #[test]
+    fn throughput_window_out_of_order_merges() {
+        let mut w = ThroughputWindow::new(10.0);
+        w.record(15.0, 100);
+        // Earlier-window stragglers (skewed fleet clocks) must merge,
+        // not append stale-end duplicates.
+        w.record(5.0, 50);
+        w.record(3.0, 50);
+        let s = w.series();
+        assert_eq!(s, vec![(10.0, 10.0), (20.0, 10.0)]);
+        assert!((w.average() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_fills_idle_gaps() {
+        let mut w = ThroughputWindow::new(10.0);
+        w.record(5.0, 100);
+        w.record(45.0, 100);
+        let s = w.series();
+        assert_eq!(
+            s,
+            vec![(10.0, 10.0), (20.0, 0.0), (30.0, 0.0), (40.0, 0.0), (50.0, 10.0)]
+        );
     }
 
     #[test]

@@ -1,0 +1,291 @@
+//! Exporters over a [`TraceLog`]: Chrome/Perfetto `traceEvents` JSON,
+//! a Prometheus-style text exposition snapshot, and the human-readable
+//! incident timeline the `trace` subcommand prints.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+use super::{RecordKind, TraceLog, TraceRecord, Value};
+
+/// Escape a string for a JSON literal body.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A JSON-safe number: NaN/inf (never produced by healthy backends,
+/// but a malformed trace must not poison the whole file) become 0.
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn json_value(v: &Value) -> String {
+    match v {
+        Value::U(x) => format!("{x}"),
+        Value::I(x) => format!("{x}"),
+        Value::F(x) => num(*x),
+        Value::B(x) => format!("{x}"),
+        Value::S(x) => format!("\"{}\"", esc(x)),
+    }
+}
+
+fn json_args(fields: &[(&'static str, Value)]) -> String {
+    let body: Vec<String> =
+        fields.iter().map(|(k, v)| format!("\"{}\":{}", esc(k), json_value(v))).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Chrome thread id for a record: rank `r` maps to tid `r + 1`;
+/// rank-less (replica-scoped) records share the control thread, tid 0.
+fn tid(rec: &TraceRecord) -> usize {
+    rec.rank.map(|r| r + 1).unwrap_or(0)
+}
+
+impl TraceLog {
+    /// Serialize as Chrome/Perfetto trace JSON (`chrome://tracing`,
+    /// <https://ui.perfetto.dev>): replicas as processes, ranks as
+    /// threads (tid 0 is the replica-level "control" lane), spans as
+    /// `B`/`E` pairs, events and decisions as instants, gauges as
+    /// counter tracks. Timestamps convert from simulated seconds to
+    /// microseconds.
+    pub fn to_chrome_trace(&self) -> String {
+        let mut events: Vec<String> = Vec::with_capacity(self.len() + 16);
+
+        // Metadata: name every process/thread that appears.
+        let mut replicas: BTreeSet<usize> = BTreeSet::new();
+        let mut threads: BTreeSet<(usize, usize)> = BTreeSet::new();
+        for rec in self.records() {
+            replicas.insert(rec.replica);
+            threads.insert((rec.replica, tid(rec)));
+        }
+        for &p in &replicas {
+            events.push(format!(
+                "{{\"ph\":\"M\",\"pid\":{p},\"tid\":0,\"name\":\"process_name\",\
+                 \"args\":{{\"name\":\"replica {p}\"}}}}"
+            ));
+        }
+        for &(p, t) in &threads {
+            let name = if t == 0 { "control".to_string() } else { format!("rank {}", t - 1) };
+            events.push(format!(
+                "{{\"ph\":\"M\",\"pid\":{p},\"tid\":{t},\"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{name}\"}}}}"
+            ));
+        }
+
+        for rec in self.records() {
+            let ts = num(rec.t * 1e6);
+            let pid = rec.replica;
+            let t = tid(rec);
+            let name = esc(rec.name);
+            let line = match rec.kind {
+                RecordKind::SpanBegin => format!(
+                    "{{\"ph\":\"B\",\"name\":\"{name}\",\"cat\":\"span\",\"pid\":{pid},\
+                     \"tid\":{t},\"ts\":{ts},\"args\":{}}}",
+                    json_args(&rec.fields)
+                ),
+                RecordKind::SpanEnd => format!(
+                    "{{\"ph\":\"E\",\"name\":\"{name}\",\"cat\":\"span\",\"pid\":{pid},\
+                     \"tid\":{t},\"ts\":{ts}}}"
+                ),
+                RecordKind::Event | RecordKind::Decision => format!(
+                    "{{\"ph\":\"i\",\"s\":\"t\",\"name\":\"{name}\",\"cat\":\"{}\",\
+                     \"pid\":{pid},\"tid\":{t},\"ts\":{ts},\"args\":{}}}",
+                    rec.kind.label(),
+                    json_args(&rec.fields)
+                ),
+                RecordKind::Gauge => {
+                    let value = match rec.field("value") {
+                        Some(Value::F(v)) => *v,
+                        Some(Value::U(v)) => *v as f64,
+                        Some(Value::I(v)) => *v as f64,
+                        _ => 0.0,
+                    };
+                    // Counter tracks are per (pid, name); fold the rank
+                    // into the series name so per-rank gauges plot as
+                    // separate lines of one track.
+                    let series = match rec.rank {
+                        Some(r) => format!("rank{r}"),
+                        None => "replica".to_string(),
+                    };
+                    format!(
+                        "{{\"ph\":\"C\",\"name\":\"{name}\",\"cat\":\"gauge\",\"pid\":{pid},\
+                         \"tid\":{t},\"ts\":{ts},\"args\":{{\"{series}\":{}}}}}",
+                        num(value)
+                    )
+                }
+            };
+            events.push(line);
+        }
+
+        format!(
+            "{{\"displayTimeUnit\":\"ms\",\"droppedRecords\":{},\"traceEvents\":[{}]}}",
+            self.dropped(),
+            events.join(",\n")
+        )
+    }
+
+    /// Human-readable incident timeline: one line per event, decision,
+    /// and span edge (gauges are elided — they are plot data, not
+    /// narrative), in record order.
+    pub fn incident_timeline(&self) -> String {
+        let mut out = String::new();
+        for rec in self.records() {
+            if rec.kind == RecordKind::Gauge {
+                continue;
+            }
+            let scope = match rec.rank {
+                Some(r) => format!("r{}/g{}", rec.replica, r),
+                None => format!("r{}", rec.replica),
+            };
+            let mut fields = String::new();
+            for (k, v) in &rec.fields {
+                let _ = write!(fields, " {k}={v}");
+            }
+            let _ = writeln!(
+                out,
+                "[{:>12.6}s] {:<6} {:<10} {}{}",
+                rec.t,
+                scope,
+                rec.kind.label(),
+                rec.name,
+                fields
+            );
+        }
+        out
+    }
+}
+
+/// Sanitize a record name into a Prometheus metric name segment.
+fn metric_name(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+}
+
+/// Prometheus text exposition snapshot of a [`TraceLog`]: the **last**
+/// sample of every gauge series (keyed by name × replica × rank) plus
+/// cumulative record counts per event/decision name. This is a
+/// point-in-time scrape of the flight recorder, not a long-lived
+/// registry — see `docs/OBSERVABILITY.md` for the field reference.
+pub fn prometheus_text(log: &TraceLog) -> String {
+    // name -> (replica, rank) -> (t, value); BTreeMaps for stable output.
+    let mut gauges: BTreeMap<&'static str, BTreeMap<(usize, Option<usize>), f64>> =
+        BTreeMap::new();
+    let mut counts: BTreeMap<(&'static str, usize), u64> = BTreeMap::new();
+    for rec in log.records() {
+        match rec.kind {
+            RecordKind::Gauge => {
+                let v = match rec.field("value") {
+                    Some(Value::F(v)) => *v,
+                    Some(Value::U(v)) => *v as f64,
+                    Some(Value::I(v)) => *v as f64,
+                    _ => continue,
+                };
+                gauges.entry(rec.name).or_default().insert((rec.replica, rec.rank), v);
+            }
+            RecordKind::Event | RecordKind::Decision => {
+                *counts.entry((rec.name, rec.replica)).or_insert(0) += 1;
+            }
+            RecordKind::SpanBegin | RecordKind::SpanEnd => {}
+        }
+    }
+
+    let mut out = String::new();
+    for (name, series) in &gauges {
+        let metric = format!("failsafe_{}", metric_name(name));
+        let _ = writeln!(out, "# HELP {metric} last sampled value of the `{name}` gauge");
+        let _ = writeln!(out, "# TYPE {metric} gauge");
+        for (&(replica, rank), v) in series {
+            match rank {
+                Some(r) => {
+                    let _ = writeln!(
+                        out,
+                        "{metric}{{replica=\"{replica}\",rank=\"{r}\"}} {}",
+                        num(*v)
+                    );
+                }
+                None => {
+                    let _ = writeln!(out, "{metric}{{replica=\"{replica}\"}} {}", num(*v));
+                }
+            }
+        }
+    }
+    let _ = writeln!(out, "# HELP failsafe_records_total flight-recorder records by name");
+    let _ = writeln!(out, "# TYPE failsafe_records_total counter");
+    for (&(name, replica), n) in &counts {
+        let _ =
+            writeln!(out, "failsafe_records_total{{name=\"{name}\",replica=\"{replica}\"}} {n}");
+    }
+    let _ = writeln!(out, "# HELP failsafe_records_dropped_total ring-buffer evictions");
+    let _ = writeln!(out, "# TYPE failsafe_records_dropped_total counter");
+    let _ = writeln!(out, "failsafe_records_dropped_total {}", log.dropped());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ObsSink, SharedLog};
+    use super::*;
+    use crate::engine::EngineEvent;
+
+    fn sample_log() -> TraceLog {
+        let log = SharedLog::new();
+        let mut sink = ObsSink::none();
+        sink.set(log.observer());
+        sink.event(0.5, &EngineEvent::RequestFinished { id: 1 });
+        sink.decision(0.6, None, "gate.admit", vec![("id", 1u64.into())]);
+        sink.gauge(0.7, Some(0), "kv.used_bytes", 1024.0);
+        sink.gauge(0.8, Some(0), "kv.used_bytes", 2048.0);
+        sink.span(1.0, 1.5, Some(1), "recovery", vec![("method", "Full".into())]);
+        log.snapshot()
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let json = sample_log().to_chrome_trace();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"B\""));
+        assert!(json.contains("\"ph\":\"E\""));
+        assert!(json.contains("\"ph\":\"C\""));
+        assert!(json.contains("\"process_name\""));
+        // 0.5 s → 500000 µs.
+        assert!(json.contains("\"ts\":500000"));
+        // Rank 1 span lands on tid 2; replica-scoped instants on tid 0.
+        assert!(json.contains("\"tid\":2"));
+    }
+
+    #[test]
+    fn prometheus_last_sample_wins() {
+        let text = prometheus_text(&sample_log());
+        assert!(text.contains("failsafe_kv_used_bytes{replica=\"0\",rank=\"0\"} 2048"));
+        assert!(!text.contains(" 1024"));
+        assert!(text.contains("failsafe_records_total{name=\"gate.admit\",replica=\"0\"} 1"));
+        assert!(text.contains("failsafe_records_dropped_total 0"));
+    }
+
+    #[test]
+    fn timeline_elides_gauges() {
+        let text = sample_log().incident_timeline();
+        assert!(text.contains("gate.admit"));
+        assert!(text.contains("recovery"));
+        assert!(!text.contains("kv.used_bytes"));
+        // One line per non-gauge record: event + decision + 2 span edges.
+        assert_eq!(text.lines().count(), 4);
+    }
+}

@@ -1,0 +1,677 @@
+//! Flight recorder: structured tracing, per-rank telemetry, and
+//! recovery-latency breakdown across engine, fleet, and simulator.
+//!
+//! The paper's headline claims — two-orders-of-magnitude lower recovery
+//! latency, balanced memory under cyclic KVCache placement, no
+//! stragglers under hybrid attention — are *time-series and
+//! phase-breakdown* claims. End-of-run aggregates
+//! ([`crate::engine::ServeReport`], [`crate::metrics::ServingMetrics`])
+//! cannot show what a rank's KV residency looked like during a cascade
+//! or where the milliseconds of one recovery went. This module can:
+//!
+//! * [`TraceRecord`] — one timestamped, typed observation:
+//!   an [`crate::engine::EngineEvent`] mirror, a subsystem *decision*
+//!   (admission gate verdicts, autoscaler actions, fleet placements,
+//!   mitigation plans), a recovery-phase *span* edge, or a sampled
+//!   *gauge* (per-rank KV residency, speed factors, queue depths).
+//! * [`TraceLog`] — a bounded ring buffer of records with drop
+//!   accounting, plus exporters: [`TraceLog::to_chrome_trace`]
+//!   (Chrome/Perfetto `traceEvents` JSON — replicas as processes, ranks
+//!   as threads), [`prometheus_text`] (text exposition snapshot), and
+//!   [`TraceLog::incident_timeline`] (one human-readable line per
+//!   decision/event, aligned with recovery spans).
+//! * [`Observer`] — the attachment seam. Backends hold an [`ObsSink`]
+//!   (an optional boxed observer tagged with a replica id) and feed it
+//!   passively at existing event/decision sites. The default is
+//!   detached: every record helper early-returns before building
+//!   anything, so the disabled path costs one branch.
+//!
+//! # Determinism contract
+//!
+//! Recording is **purely passive**: observer callbacks read state and
+//! copy values; they never mutate backend state, reorder floating-point
+//! operations, or advance clocks. Gauges are sampled at event edges
+//! (failures, rejoins, preemptions, completions), never per token. With
+//! an observer attached, the stepper-vs-event-core differential suite
+//! and token-paced replay determinism tests still pass bit-exact —
+//! `rust/tests/obs_tests.rs` asserts exactly that. One deliberate
+//! elision keeps traces core-independent: `TokenEmitted` events are
+//! *not* recorded (the Exact span core elides them by contract; see
+//! [`crate::simulator::simcore`]).
+//!
+//! # Recovery-phase spans
+//!
+//! A failure or rejoin decomposes into the paper's recovery-latency
+//! budget via [`RecoveryPhases`]: detect (the reconfiguration floor),
+//! plan (modeled instantaneous), weight stream-in, KV
+//! respread/restore, and resume (recompute of un-restored suffixes).
+//! The phase spans are laid out back-to-back from the injection clock
+//! and sum to the `RecoveryCompleted { latency_s }` the backend
+//! reports (±1e-9 s), which `tools/check_trace.py` asserts in CI.
+
+mod export;
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fmt;
+use std::rc::Rc;
+
+use crate::engine::EngineEvent;
+use crate::recovery::RecoveryOutcome;
+use crate::{RankId, SimTime};
+
+pub use export::prometheus_text;
+
+/// Default ring capacity: enough for every decision of a large fleet
+/// replay without unbounded growth on million-request sweeps.
+pub const DEFAULT_CAPACITY: usize = 1 << 20;
+
+/// One typed field value on a [`TraceRecord`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    U(u64),
+    I(i64),
+    F(f64),
+    B(bool),
+    S(String),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::U(v) => write!(f, "{v}"),
+            Value::I(v) => write!(f, "{v}"),
+            Value::F(v) => write!(f, "{v}"),
+            Value::B(v) => write!(f, "{v}"),
+            Value::S(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::U(v)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::U(v as u64)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::I(v)
+    }
+}
+impl From<i32> for Value {
+    fn from(v: i32) -> Value {
+        Value::I(v as i64)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::F(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::B(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Value {
+        Value::S(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Value {
+        Value::S(v)
+    }
+}
+
+/// What kind of observation a [`TraceRecord`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecordKind {
+    /// Mirror of an [`EngineEvent`] (minus `TokenEmitted`).
+    Event,
+    /// A subsystem decision: gate verdict, scale action, placement,
+    /// mitigation plan.
+    Decision,
+    /// Opening edge of a named span (recovery phases).
+    SpanBegin,
+    /// Closing edge of a named span.
+    SpanEnd,
+    /// A sampled numeric value (the single field is `value`).
+    Gauge,
+}
+
+impl RecordKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RecordKind::Event => "event",
+            RecordKind::Decision => "decision",
+            RecordKind::SpanBegin => "span-begin",
+            RecordKind::SpanEnd => "span-end",
+            RecordKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// One timestamped observation. `replica` scopes the record to a fleet
+/// member (0 for single-backend runs); `rank` scopes it further to one
+/// GPU where that is meaningful (gauges, failure events).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    pub t: SimTime,
+    pub replica: usize,
+    pub rank: Option<RankId>,
+    pub kind: RecordKind,
+    pub name: &'static str,
+    pub fields: Vec<(&'static str, Value)>,
+}
+
+impl TraceRecord {
+    /// First field named `key`, if present.
+    pub fn field(&self, key: &str) -> Option<&Value> {
+        self.fields.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+}
+
+/// Bounded ring buffer of [`TraceRecord`]s. Pushing past capacity drops
+/// the oldest record and counts it, so a long-running session keeps the
+/// most recent window instead of growing without bound.
+#[derive(Debug, Clone)]
+pub struct TraceLog {
+    cap: usize,
+    records: VecDeque<TraceRecord>,
+    dropped: u64,
+}
+
+impl TraceLog {
+    pub fn new() -> TraceLog {
+        TraceLog::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    pub fn with_capacity(cap: usize) -> TraceLog {
+        TraceLog { cap: cap.max(1), records: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn push(&mut self, rec: TraceRecord) {
+        if self.records.len() == self.cap {
+            self.records.pop_front();
+            self.dropped += 1;
+        }
+        self.records.push_back(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records in arrival order (oldest first).
+    pub fn records(&self) -> impl Iterator<Item = &TraceRecord> {
+        self.records.iter()
+    }
+
+    /// Records evicted by the ring since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn clear(&mut self) {
+        self.records.clear();
+        self.dropped = 0;
+    }
+}
+
+impl Default for TraceLog {
+    fn default() -> Self {
+        TraceLog::new()
+    }
+}
+
+/// The attachment seam: anything that wants the record stream.
+///
+/// `enabled()` is the zero-overhead gate — every recording helper
+/// checks it before building a record, so a disabled observer (the
+/// default [`NopObserver`], or simply no observer at all) costs one
+/// branch on the event edge and nothing per token.
+pub trait Observer {
+    /// Whether records should be built and delivered at all.
+    fn enabled(&self) -> bool {
+        true
+    }
+    /// Deliver one record. Must be passive: no backend mutation, no
+    /// clock advancement, no floating-point work that could reorder the
+    /// caller's.
+    fn record(&mut self, rec: TraceRecord);
+}
+
+/// The default observer: permanently disabled, records go nowhere.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NopObserver;
+
+impl Observer for NopObserver {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn record(&mut self, _rec: TraceRecord) {}
+}
+
+/// A shared, clonable handle to one [`TraceLog`] — the standard way to
+/// attach one flight recorder to several backends (every session of a
+/// fleet, plus the gateway and autoscaler) and read it back afterwards.
+/// Single-threaded by design, like the backends themselves.
+#[derive(Debug, Clone, Default)]
+pub struct SharedLog(Rc<RefCell<TraceLog>>);
+
+impl SharedLog {
+    pub fn new() -> SharedLog {
+        SharedLog(Rc::new(RefCell::new(TraceLog::new())))
+    }
+
+    pub fn with_capacity(cap: usize) -> SharedLog {
+        SharedLog(Rc::new(RefCell::new(TraceLog::with_capacity(cap))))
+    }
+
+    /// A boxed observer feeding this log — what backends' `set_observer`
+    /// takes. Clone-cheap: observers share the underlying buffer.
+    pub fn observer(&self) -> Box<dyn Observer> {
+        Box::new(self.clone())
+    }
+
+    /// Run `f` over the shared log (read path for exporters).
+    pub fn with<R>(&self, f: impl FnOnce(&TraceLog) -> R) -> R {
+        f(&self.0.borrow())
+    }
+
+    /// Owned copy of the current log contents.
+    pub fn snapshot(&self) -> TraceLog {
+        self.0.borrow().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.borrow().is_empty()
+    }
+}
+
+impl Observer for SharedLog {
+    fn record(&mut self, rec: TraceRecord) {
+        self.0.borrow_mut().push(rec);
+    }
+}
+
+/// The per-backend recording handle: an optional boxed [`Observer`]
+/// plus the replica id stamped on every record. Detached by default
+/// ([`ObsSink::none`]); fleets re-stamp replica ids as they attach
+/// observers to their members.
+pub struct ObsSink {
+    observer: Option<Box<dyn Observer>>,
+    replica: usize,
+}
+
+impl fmt::Debug for ObsSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ObsSink")
+            .field("attached", &self.observer.is_some())
+            .field("replica", &self.replica)
+            .finish()
+    }
+}
+
+impl Default for ObsSink {
+    fn default() -> Self {
+        ObsSink::none()
+    }
+}
+
+impl ObsSink {
+    /// The detached default: `enabled()` is false, helpers no-op.
+    pub fn none() -> ObsSink {
+        ObsSink { observer: None, replica: 0 }
+    }
+
+    /// Attach an observer (replacing any previous one).
+    pub fn set(&mut self, observer: Box<dyn Observer>) {
+        self.observer = Some(observer);
+    }
+
+    /// Re-stamp the replica id on subsequent records.
+    pub fn set_replica(&mut self, replica: usize) {
+        self.replica = replica;
+    }
+
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// The zero-overhead gate: false when detached or the observer is
+    /// a [`NopObserver`]. Callers with non-trivial field construction
+    /// should check this first.
+    pub fn enabled(&self) -> bool {
+        self.observer.as_ref().is_some_and(|o| o.enabled())
+    }
+
+    /// Deliver one fully-built record (drops it when disabled).
+    pub fn record(&mut self, rec: TraceRecord) {
+        if let Some(o) = self.observer.as_mut() {
+            if o.enabled() {
+                o.record(rec);
+            }
+        }
+    }
+
+    /// Mirror an [`EngineEvent`] at time `t`. `TokenEmitted` is
+    /// deliberately not recorded (see module docs).
+    pub fn event(&mut self, t: SimTime, ev: &EngineEvent) {
+        if !self.enabled() {
+            return;
+        }
+        let (name, rank, fields): (&'static str, Option<RankId>, Vec<(&'static str, Value)>) =
+            match ev {
+                EngineEvent::TokenEmitted { .. } => return,
+                EngineEvent::RequestFinished { id } => {
+                    ("request.finished", None, vec![("id", (*id).into())])
+                }
+                EngineEvent::RequestAborted { id } => {
+                    ("request.aborted", None, vec![("id", (*id).into())])
+                }
+                EngineEvent::FailureInjected { rank, method } => (
+                    "failure.injected",
+                    Some(*rank),
+                    vec![("method", format!("{method:?}").into())],
+                ),
+                EngineEvent::RecoveryCompleted { method, latency_s } => (
+                    "recovery.completed",
+                    None,
+                    vec![
+                        ("method", format!("{method:?}").into()),
+                        ("latency_s", (*latency_s).into()),
+                    ],
+                ),
+                EngineEvent::Reconfigured { epoch, world } => (
+                    "reconfigured",
+                    None,
+                    vec![("epoch", (*epoch).into()), ("world", (*world).into())],
+                ),
+                EngineEvent::GpuRejoined { rank, method } => (
+                    "gpu.rejoined",
+                    Some(*rank),
+                    vec![("method", format!("{method:?}").into())],
+                ),
+                EngineEvent::ReconfigCompleted { epoch, world, latency_s } => (
+                    "reconfig.completed",
+                    None,
+                    vec![
+                        ("epoch", (*epoch).into()),
+                        ("world", (*world).into()),
+                        ("latency_s", (*latency_s).into()),
+                    ],
+                ),
+                EngineEvent::GpuDegraded { rank, factor } => {
+                    ("gpu.degraded", Some(*rank), vec![("factor", (*factor).into())])
+                }
+                EngineEvent::GpuRestored { rank } => ("gpu.restored", Some(*rank), vec![]),
+                EngineEvent::RequestPreempted { id } => {
+                    ("request.preempted", None, vec![("id", (*id).into())])
+                }
+                EngineEvent::RequestResumed { id } => {
+                    ("request.resumed", None, vec![("id", (*id).into())])
+                }
+            };
+        let replica = self.replica;
+        self.record(TraceRecord { t, replica, rank, kind: RecordKind::Event, name, fields });
+    }
+
+    /// Record a subsystem decision, optionally scoped to one rank.
+    pub fn decision(
+        &mut self,
+        t: SimTime,
+        rank: Option<RankId>,
+        name: &'static str,
+        fields: Vec<(&'static str, Value)>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let replica = self.replica;
+        self.record(TraceRecord {
+            t,
+            replica,
+            rank,
+            kind: RecordKind::Decision,
+            name,
+            fields,
+        });
+    }
+
+    /// Sample one gauge value for `rank` (or the whole replica).
+    pub fn gauge(&mut self, t: SimTime, rank: Option<RankId>, name: &'static str, value: f64) {
+        if !self.enabled() {
+            return;
+        }
+        let replica = self.replica;
+        self.record(TraceRecord {
+            t,
+            replica,
+            rank,
+            kind: RecordKind::Gauge,
+            name,
+            fields: vec![("value", value.into())],
+        });
+    }
+
+    /// Record one closed span `[t0, t1]`; fields ride on the opening
+    /// edge.
+    pub fn span(
+        &mut self,
+        t0: SimTime,
+        t1: SimTime,
+        rank: Option<RankId>,
+        name: &'static str,
+        fields: Vec<(&'static str, Value)>,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let replica = self.replica;
+        self.record(TraceRecord {
+            t: t0,
+            replica,
+            rank,
+            kind: RecordKind::SpanBegin,
+            name,
+            fields,
+        });
+        self.record(TraceRecord {
+            t: t1,
+            replica,
+            rank,
+            kind: RecordKind::SpanEnd,
+            name,
+            fields: Vec::new(),
+        });
+    }
+}
+
+/// The paper's recovery-latency budget, decomposed from one
+/// [`RecoveryOutcome`]. Phases are laid out back-to-back from the
+/// injection clock and **sum to the reported recovery latency** by
+/// construction:
+///
+/// * `detect_s` — the reconfiguration floor (`total_s` minus the
+///   modeled transfer/recompute work): failure detection plus group
+///   re-formation.
+/// * `plan_s` — always zero: planning is modeled instantaneous
+///   (non-uniform shard planning is table arithmetic, §3.1).
+/// * `stream_s` — on-demand weight stream-in ([`RecoveryOutcome::weight_time_s`]).
+/// * `respread_s` — KV restore from host backup plus (on rejoin) the
+///   cyclic re-spread onto the returning rank.
+/// * `resume_s` — recompute of un-restored context before serving
+///   resumes ([`RecoveryOutcome::recompute_time_s`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryPhases {
+    pub detect_s: f64,
+    pub plan_s: f64,
+    pub stream_s: f64,
+    pub respread_s: f64,
+    pub resume_s: f64,
+}
+
+impl RecoveryPhases {
+    /// Decompose `outcome`, with `extra_respread_s` for costs the
+    /// planner did not see (the rejoin path's KV re-spread onto the
+    /// returning rank, costed by the backend itself).
+    pub fn of(outcome: &RecoveryOutcome, extra_respread_s: f64) -> RecoveryPhases {
+        let modeled =
+            outcome.weight_time_s + outcome.kv_restore_time_s + outcome.recompute_time_s;
+        RecoveryPhases {
+            detect_s: outcome.total_s - modeled,
+            plan_s: 0.0,
+            stream_s: outcome.weight_time_s,
+            respread_s: outcome.kv_restore_time_s + extra_respread_s,
+            resume_s: outcome.recompute_time_s,
+        }
+    }
+
+    /// Sum of the phases — equals the reported recovery latency within
+    /// float re-association error (≪ 1e-9 s).
+    pub fn total_s(&self) -> f64 {
+        self.detect_s + self.plan_s + self.stream_s + self.respread_s + self.resume_s
+    }
+
+    /// Emit the parent `recovery` span plus the five phase spans,
+    /// back-to-back from `t0`. `trigger` distinguishes failures from
+    /// rejoins; `method` is the recovery method's debug name.
+    pub fn emit(
+        &self,
+        sink: &mut ObsSink,
+        t0: SimTime,
+        rank: Option<RankId>,
+        trigger: &'static str,
+        method: String,
+    ) {
+        if !sink.enabled() {
+            return;
+        }
+        let total = self.total_s();
+        sink.span(
+            t0,
+            t0 + total,
+            rank,
+            "recovery",
+            vec![
+                ("trigger", trigger.into()),
+                ("method", method.into()),
+                ("latency_s", total.into()),
+            ],
+        );
+        let mut at = t0;
+        for (name, dur) in [
+            ("recovery.detect", self.detect_s),
+            ("recovery.plan", self.plan_s),
+            ("recovery.stream", self.stream_s),
+            ("recovery.respread", self.respread_s),
+            ("recovery.resume", self.resume_s),
+        ] {
+            sink.span(at, at + dur, rank, name, vec![("dur_s", dur.into())]);
+            at += dur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_drops_oldest() {
+        let mut log = TraceLog::with_capacity(2);
+        for i in 0..3u64 {
+            log.push(TraceRecord {
+                t: i as f64,
+                replica: 0,
+                rank: None,
+                kind: RecordKind::Decision,
+                name: "d",
+                fields: vec![("i", i.into())],
+            });
+        }
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.dropped(), 1);
+        assert_eq!(log.records().next().unwrap().t, 1.0);
+    }
+
+    #[test]
+    fn detached_sink_is_disabled_and_silent() {
+        let mut sink = ObsSink::none();
+        assert!(!sink.enabled());
+        sink.gauge(0.0, Some(0), "kv.used", 1.0);
+        sink.decision(0.0, None, "gate.admit", vec![]);
+        // Nothing to observe — the helpers just returned.
+        let mut nop = ObsSink::none();
+        nop.set(Box::new(NopObserver));
+        assert!(!nop.enabled());
+    }
+
+    #[test]
+    fn shared_log_collects_and_stamps_replica() {
+        let log = SharedLog::new();
+        let mut sink = ObsSink::none();
+        sink.set(log.observer());
+        sink.set_replica(3);
+        assert!(sink.enabled());
+        sink.gauge(1.5, Some(2), "kv.used_bytes", 42.0);
+        sink.event(2.0, &EngineEvent::RequestFinished { id: 7 });
+        sink.event(2.0, &EngineEvent::TokenEmitted { id: 7, token: 1, index: 0 });
+        assert_eq!(log.len(), 2, "TokenEmitted must not be recorded");
+        log.with(|l| {
+            let recs: Vec<_> = l.records().collect();
+            assert_eq!(recs[0].replica, 3);
+            assert_eq!(recs[0].rank, Some(2));
+            assert_eq!(recs[1].name, "request.finished");
+            assert_eq!(recs[1].field("id"), Some(&Value::U(7)));
+        });
+    }
+
+    #[test]
+    fn phases_sum_to_total() {
+        let phases = RecoveryPhases {
+            detect_s: 0.015,
+            plan_s: 0.0,
+            stream_s: 0.25,
+            respread_s: 0.125,
+            resume_s: 0.0625,
+        };
+        let total = phases.total_s();
+        let log = SharedLog::new();
+        let mut sink = ObsSink::none();
+        sink.set(log.observer());
+        phases.emit(&mut sink, 10.0, Some(1), "failure", "Full".to_string());
+        // 6 spans (recovery + 5 phases), two edges each.
+        assert_eq!(log.len(), 12);
+        log.with(|l| {
+            let parent_end = l
+                .records()
+                .filter(|r| r.kind == RecordKind::SpanEnd && r.name == "recovery")
+                .map(|r| r.t)
+                .next()
+                .unwrap();
+            assert!((parent_end - (10.0 + total)).abs() < 1e-12);
+            let last_phase_end = l
+                .records()
+                .filter(|r| r.kind == RecordKind::SpanEnd && r.name != "recovery")
+                .map(|r| r.t)
+                .fold(0.0, f64::max);
+            assert!((last_phase_end - parent_end).abs() < 1e-9);
+        });
+    }
+}

@@ -23,6 +23,7 @@ use crate::engine::{
 };
 use crate::kvcache::BackupStore;
 use crate::metrics::ServingMetrics;
+use crate::obs::{ObsSink, Observer, RecoveryPhases};
 use crate::prefix::{PrefixStats, PrefixTrie};
 use crate::recovery::{plan_recovery, BackupDaemon, RecoveryInput, RecoveryMethod};
 use crate::router::DpRouter;
@@ -276,6 +277,7 @@ impl OnlineSim {
             aborted: Vec::new(),
             recoveries: Vec::new(),
             events: Vec::new(),
+            obs: ObsSink::none(),
             work: Vec::new(),
         };
         if proportional {
@@ -545,6 +547,9 @@ pub struct OnlineSession {
     pub(crate) aborted: Vec<RequestId>,
     pub(crate) recoveries: Vec<f64>,
     pub(crate) events: Vec<EngineEvent>,
+    /// Flight-recorder seam (detached by default — see [`crate::obs`]).
+    /// Recording is passive: no FP op of the cost model moves with it.
+    pub(crate) obs: ObsSink,
     /// Reused decode-work scratch for the per-tick cost-model call (no
     /// per-step allocation at steady state).
     pub(crate) work: Vec<DecodeWork>,
@@ -780,7 +785,9 @@ impl OnlineSession {
         self.clock += t;
         self.swap_pcie_s += t;
         self.swap_ins += 1;
-        self.events.push(EngineEvent::RequestResumed { id: s.id });
+        let ev = EngineEvent::RequestResumed { id: s.id };
+        self.obs.event(self.clock, &ev);
+        self.events.push(ev);
         self.running.push(Running {
             id: s.id,
             home,
@@ -791,6 +798,7 @@ impl OnlineSession {
             priority: s.priority,
             deadline: s.deadline,
         });
+        self.sample_gauges();
         true
     }
 
@@ -909,7 +917,9 @@ impl OnlineSession {
         self.clock += t;
         self.swap_pcie_s += t;
         self.preemptions += 1;
-        self.events.push(EngineEvent::RequestPreempted { id: r.id });
+        let ev = EngineEvent::RequestPreempted { id: r.id };
+        self.obs.event(self.clock, &ev);
+        self.events.push(ev);
         self.swapped.push(Swapped {
             id: r.id,
             context: r.context,
@@ -920,6 +930,7 @@ impl OnlineSession {
             deadline: r.deadline,
             parked_at: self.clock,
         });
+        self.sample_gauges();
     }
 
     /// True when the SLO scheduler may preempt at the next round head —
@@ -953,7 +964,9 @@ impl OnlineSession {
     pub(crate) fn finish_running(&mut self, r: Running, events: &mut Vec<EngineEvent>) {
         self.metrics.on_finish(r.id);
         self.finished_at.insert(r.id, self.clock);
-        events.push(EngineEvent::RequestFinished { id: r.id });
+        let ev = EngineEvent::RequestFinished { id: r.id };
+        self.obs.event(self.clock, &ev);
+        events.push(ev);
         self.daemon.forget(r.id);
         self.backup.release(r.id, self.model.kv_bytes_per_token());
         // Only the private tail is released: shared prefix chunks stay
@@ -965,6 +978,7 @@ impl OnlineSession {
         }
         self.kv_used[r.home] = (self.kv_used[r.home] - self.dp_rate * private).max(0.0);
         self.router.complete(r.home, 0.0);
+        self.sample_gauges();
     }
 
     /// Set (or clear) the SLO preemption policy on a built session
@@ -1010,6 +1024,62 @@ impl OnlineSession {
     /// scheduler rounds so far.
     pub fn core_stats(&self) -> CoreStats {
         CoreStats { spans: self.spans, steps: self.steps }
+    }
+
+    /// Attach a flight-recorder observer (see [`crate::obs`]); records
+    /// are stamped with replica id 0 until
+    /// [`OnlineSession::set_obs_replica`] re-stamps them. Recording is
+    /// purely passive — with an observer attached the session's token
+    /// streams, clocks, and reports are bit-identical to a detached run.
+    pub fn set_observer(&mut self, observer: Box<dyn Observer>) {
+        self.obs.set(observer);
+    }
+
+    /// Replica id stamped on this session's trace records (fleet
+    /// members use their [`crate::fleet::ReplicaId`]).
+    pub fn set_obs_replica(&mut self, replica: usize) {
+        self.obs.set_replica(replica);
+    }
+
+    /// Event-edge gauge sample: per-rank KV residency, headroom, and
+    /// speed factors, plus replica-level private/shared/swapped KV
+    /// split, queue depths, and effective capacity. Called on lifecycle
+    /// edges (completion, preemption, failure, rejoin, mitigation) —
+    /// never per token, so tracing cost scales with incidents, not
+    /// throughput.
+    fn sample_gauges(&mut self) {
+        if !self.obs.enabled() {
+            return;
+        }
+        let t = self.clock;
+        for r in 0..self.world {
+            let used = self.kv_used[r];
+            let budget = self.kv_budget[r] as f64;
+            let speed = self.speed[r];
+            self.obs.gauge(t, Some(r), "kv.used_bytes", used);
+            self.obs.gauge(t, Some(r), "kv.free_bytes", (budget - used).max(0.0));
+            self.obs.gauge(t, Some(r), "speed.factor", speed);
+        }
+        let pool = self.prefix_tokens() as f64;
+        let shared: f64 = (0..self.world).map(|r| self.prefix_rate(r) * pool).sum();
+        let total: f64 = self.kv_used.iter().sum();
+        let bpt = self.model.kv_bytes_per_token() as f64;
+        let swapped_bytes: f64 = self.swapped.iter().map(|s| s.context as f64 * bpt).sum();
+        let effective: f64 = self.speed.iter().sum();
+        let (pending, waiting, running, swapped) = (
+            self.pending.len() as f64,
+            self.waiting.len() as f64,
+            self.running.len() as f64,
+            self.swapped.len() as f64,
+        );
+        self.obs.gauge(t, None, "kv.shared_bytes", shared);
+        self.obs.gauge(t, None, "kv.private_bytes", (total - shared).max(0.0));
+        self.obs.gauge(t, None, "kv.swapped_bytes", swapped_bytes);
+        self.obs.gauge(t, None, "queue.pending", pending);
+        self.obs.gauge(t, None, "queue.waiting", waiting);
+        self.obs.gauge(t, None, "queue.running", running);
+        self.obs.gauge(t, None, "queue.swapped", swapped);
+        self.obs.gauge(t, None, "capacity.effective", effective);
     }
 
     fn admit_waiting(&mut self) {
@@ -1188,14 +1258,28 @@ impl OnlineSession {
         let was = self.speed[rank];
         self.speed[rank] = factor;
         if factor < 1.0 {
-            self.events.push(EngineEvent::GpuDegraded { rank, factor });
+            let ev = EngineEvent::GpuDegraded { rank, factor };
+            self.obs.event(self.clock, &ev);
+            self.events.push(ev);
         } else if was < 1.0 {
-            self.events.push(EngineEvent::GpuRestored { rank });
+            let ev = EngineEvent::GpuRestored { rank };
+            self.obs.event(self.clock, &ev);
+            self.events.push(ev);
         }
         if self.auto_rebalance {
             self.mitigation = Some(self.mitigation_weights());
             let latency = self.rebuild_cost();
             self.clock += latency;
+            if self.obs.enabled() {
+                let t = self.clock;
+                self.obs.decision(
+                    t,
+                    Some(rank),
+                    "mitigation.rebalance",
+                    vec![("factor", factor.into()), ("stall_s", latency.into())],
+                );
+            }
+            self.sample_gauges();
             Ok(latency)
         } else {
             self.cost.set_speed_factor(rank, factor);
@@ -1256,6 +1340,17 @@ impl OnlineSession {
         self.mitigation = Some(weights.to_vec());
         let latency = self.rebuild_cost();
         self.clock += latency;
+        if self.obs.enabled() {
+            let t = self.clock;
+            let w = format!("{weights:?}");
+            self.obs.decision(
+                t,
+                None,
+                "mitigation.apply",
+                vec![("weights", w.into()), ("stall_s", latency.into())],
+            );
+            self.sample_gauges();
+        }
         Ok(latency)
     }
 
@@ -1282,7 +1377,10 @@ impl OnlineSession {
     fn fail_rank(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64> {
         anyhow::ensure!(self.world > 1, "cannot lose the last rank");
         anyhow::ensure!(rank < self.world, "rank {rank} out of range (world {})", self.world);
-        self.events.push(EngineEvent::FailureInjected { rank, method });
+        let t0 = self.clock; // failure observed here; the stall lands after
+        let ev = EngineEvent::FailureInjected { rank, method };
+        self.obs.event(t0, &ev);
+        self.events.push(ev);
 
         let reqs: Vec<(RequestId, usize, RankId)> =
             self.running.iter().map(|r| (r.id, r.context, r.home)).collect();
@@ -1349,10 +1447,22 @@ impl OnlineSession {
 
         self.lost += 1;
         self.recoveries.push(outcome.total_s);
-        self.events
-            .push(EngineEvent::RecoveryCompleted { method, latency_s: outcome.total_s });
-        self.events
-            .push(EngineEvent::Reconfigured { epoch: self.recoveries.len() as u64, world: self.world });
+        if self.obs.enabled() {
+            RecoveryPhases::of(&outcome, 0.0).emit(
+                &mut self.obs,
+                t0,
+                Some(rank),
+                "failure",
+                format!("{method:?}"),
+            );
+        }
+        let ev = EngineEvent::RecoveryCompleted { method, latency_s: outcome.total_s };
+        self.obs.event(self.clock, &ev);
+        self.events.push(ev);
+        let ev = EngineEvent::Reconfigured { epoch: self.recoveries.len() as u64, world: self.world };
+        self.obs.event(self.clock, &ev);
+        self.events.push(ev);
+        self.sample_gauges();
         Ok(outcome.total_s)
     }
 
@@ -1390,6 +1500,7 @@ impl OnlineSession {
         let moved = (resident / (self.world + 1) as f64) as usize;
         let kv_move_s = self.ic.parallel_transfer_time(TransferClass::NvLink, moved);
         let total_s = outcome.total_s + kv_move_s;
+        let t0 = self.clock; // rejoin observed here; the stall lands after
         self.clock += total_s; // the stall every in-flight request sees
 
         // Reconfigure to the grown world; the returning GPU starts at
@@ -1414,18 +1525,34 @@ impl OnlineSession {
         self.rebuild_cost();
 
         self.recoveries.push(total_s);
-        self.events.push(EngineEvent::GpuRejoined { rank: joined, method });
-        self.events.push(EngineEvent::ReconfigCompleted {
+        if self.obs.enabled() {
+            RecoveryPhases::of(&outcome, kv_move_s).emit(
+                &mut self.obs,
+                t0,
+                Some(joined),
+                "rejoin",
+                format!("{method:?}"),
+            );
+        }
+        let ev = EngineEvent::GpuRejoined { rank: joined, method };
+        self.obs.event(self.clock, &ev);
+        self.events.push(ev);
+        let ev = EngineEvent::ReconfigCompleted {
             epoch: self.recoveries.len() as u64,
             world: self.world,
             latency_s: total_s,
-        });
+        };
+        self.obs.event(self.clock, &ev);
+        self.events.push(ev);
         // Consumers that track the serving plan via `Reconfigured` (as the
         // failure path trains them to) must see expansions too.
-        self.events.push(EngineEvent::Reconfigured {
+        let ev = EngineEvent::Reconfigured {
             epoch: self.recoveries.len() as u64,
             world: self.world,
-        });
+        };
+        self.obs.event(self.clock, &ev);
+        self.events.push(ev);
+        self.sample_gauges();
         Ok(total_s)
     }
 }
@@ -1506,8 +1633,20 @@ impl ServingBackend for OnlineSession {
             anyhow::bail!("abort: unknown or already finished request {id}");
         }
         self.aborted.push(id);
-        self.events.push(EngineEvent::RequestAborted { id });
+        self.metrics.on_abort(id, self.clock);
+        let ev = EngineEvent::RequestAborted { id };
+        self.obs.event(self.clock, &ev);
+        self.events.push(ev);
+        self.sample_gauges();
         Ok(())
+    }
+
+    fn set_observer(&mut self, observer: Box<dyn Observer>) {
+        OnlineSession::set_observer(self, observer)
+    }
+
+    fn set_obs_replica(&mut self, replica: usize) {
+        OnlineSession::set_obs_replica(self, replica)
     }
 
     fn inject_failure(&mut self, rank: RankId, method: RecoveryMethod) -> Result<f64> {

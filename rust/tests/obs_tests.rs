@@ -1,0 +1,192 @@
+//! Flight-recorder integration tests: attaching an observer must not
+//! perturb the simulation (bit-exact reports, observed or not, on both
+//! cores — the recorder is passive by contract), the recovery-phase
+//! spans must decompose each reported recovery latency (±1e-9 s), and
+//! the exporters must stay well-formed on a real fault scenario.
+
+use failsafe::engine::{replay, ReplayPace, ServeReport, ServingBackend, SubmitOptions};
+use failsafe::model::llama3_70b;
+use failsafe::obs::{prometheus_text, RecordKind, SharedLog, TraceLog, Value};
+use failsafe::recovery::RecoveryMethod;
+use failsafe::simulator::{CoreMode, OnlineMode, OnlineSim, SystemConfig};
+use failsafe::traces::cascade_then_heal;
+
+/// Cascading 2-GPU failure with staggered heals over TP8 under load —
+/// the canonical incident the `trace` subcommand replays.
+fn run_cascade(mode: CoreMode, observed: bool) -> (ServeReport, Option<TraceLog>) {
+    let mut s = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 8)
+        .with_model(llama3_70b())
+        .session();
+    s.set_core_mode(mode);
+    let log = if observed {
+        let log = SharedLog::new();
+        s.set_observer(log.observer());
+        Some(log)
+    } else {
+        None
+    };
+    let prompt = vec![11u32; 1024];
+    for i in 0..12 {
+        s.submit_with(&prompt, SubmitOptions::new(24).at(i as f64 * 0.02)).expect("submit");
+    }
+    let tl = cascade_then_heal(2, 0.3, 0.2, 1.5);
+    replay(&mut s, &tl, RecoveryMethod::Full, ReplayPace::Clock).expect("replay");
+    (s.report(), log.map(|l| l.snapshot()))
+}
+
+/// Everything observable in a [`ServeReport`], floats by bit pattern.
+#[allow(clippy::type_complexity)]
+fn report_key(
+    r: &ServeReport,
+) -> (Vec<(u64, Vec<u32>, Option<u64>, u64, bool)>, u64, usize, usize, usize, Vec<u64>) {
+    (
+        r.results
+            .iter()
+            .map(|x| {
+                (
+                    x.id,
+                    x.output_tokens.clone(),
+                    x.ttft_s.map(f64::to_bits),
+                    x.max_tbt_s.to_bits(),
+                    x.aborted,
+                )
+            })
+            .collect(),
+        r.wall_s.to_bits(),
+        r.prefill_tokens,
+        r.decode_tokens,
+        r.steps,
+        r.recoveries.iter().map(|x| x.to_bits()).collect(),
+    )
+}
+
+/// The determinism contract: recording is passive. A session with the
+/// flight recorder attached must produce the bit-identical report of a
+/// blind run — on the stepper and on the bit-exact event core alike.
+#[test]
+fn observer_does_not_perturb_either_core() {
+    for mode in [CoreMode::Stepper, CoreMode::Exact] {
+        let (blind, _) = run_cascade(mode, false);
+        let (observed, log) = run_cascade(mode, true);
+        assert_eq!(
+            report_key(&blind),
+            report_key(&observed),
+            "observer perturbed the {mode:?} core"
+        );
+        let log = log.unwrap();
+        assert!(log.records().count() > 0, "observer attached but nothing recorded");
+        assert_eq!(log.dropped(), 0, "ring buffer overflowed on a small scenario");
+    }
+}
+
+/// Both cores drive the same session-level seams (finish, preempt,
+/// recovery, mitigation), so with the recorder attached they must lay
+/// down the identical record stream — same kinds, names, scopes, and
+/// bit-identical timestamps. Token records are never written (the exact
+/// core elides per-token events), which is what keeps this invariant
+/// core-independent.
+#[test]
+fn record_stream_identical_across_cores() {
+    let (ra, la) = run_cascade(CoreMode::Stepper, true);
+    let (rb, lb) = run_cascade(CoreMode::Exact, true);
+    assert_eq!(report_key(&ra), report_key(&rb), "reports diverged");
+    let key = |l: &TraceLog| -> Vec<(u64, usize, Option<usize>, &'static str, &'static str)> {
+        l.records()
+            .map(|rec| (rec.t.to_bits(), rec.replica, rec.rank, rec.kind.label(), rec.name))
+            .collect()
+    };
+    assert_eq!(key(&la.unwrap()), key(&lb.unwrap()), "record streams diverged across cores");
+}
+
+/// Walk a log pairing each `recovery` parent span with its five phase
+/// children and the completion event the backend emitted; returns
+/// `(parent latency, sum of child durations, reported latency)` per
+/// recovery.
+fn decompositions(log: &TraceLog) -> Vec<(f64, f64, f64)> {
+    let mut parents: Vec<f64> = Vec::new();
+    let mut sums: Vec<f64> = Vec::new();
+    let mut reported: Vec<f64> = Vec::new();
+    for rec in log.records() {
+        match rec.kind {
+            RecordKind::SpanBegin if rec.name == "recovery" => {
+                if let Some(Value::F(v)) = rec.field("latency_s") {
+                    parents.push(*v);
+                    sums.push(0.0);
+                }
+            }
+            RecordKind::SpanBegin if rec.name.starts_with("recovery.") => {
+                if let (Some(sum), Some(Value::F(d))) = (sums.last_mut(), rec.field("dur_s")) {
+                    *sum += *d;
+                }
+            }
+            RecordKind::Event
+                if rec.name == "recovery.completed" || rec.name == "reconfig.completed" =>
+            {
+                if let Some(Value::F(v)) = rec.field("latency_s") {
+                    reported.push(*v);
+                }
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(parents.len(), reported.len(), "recovery spans vs completion events");
+    parents.into_iter().zip(sums).zip(reported).map(|((p, s), r)| (p, s, r)).collect()
+}
+
+/// The headline acceptance check: for every recovery the backend
+/// reports, the detect/plan/stream/respread/resume spans laid down in
+/// the trace sum to the reported `latency_s` within 1e-9 seconds.
+#[test]
+fn recovery_spans_decompose_reported_latency() {
+    for mode in [CoreMode::Stepper, CoreMode::Exact] {
+        let (_, log) = run_cascade(mode, true);
+        let decomp = decompositions(&log.unwrap());
+        // cascade_then_heal(2, ..) = 2 failures + 2 rejoins.
+        assert_eq!(decomp.len(), 4, "{mode:?}: expected 4 recoveries");
+        for (i, (parent, sum, reported)) in decomp.iter().enumerate() {
+            assert!(
+                (parent - reported).abs() <= 1e-9,
+                "{mode:?} recovery {i}: parent span {parent} vs reported {reported}"
+            );
+            assert!(
+                (sum - reported).abs() <= 1e-9,
+                "{mode:?} recovery {i}: phase sum {sum} vs reported {reported}"
+            );
+        }
+    }
+}
+
+/// Exporters on a real incident log: the Chrome trace carries the
+/// failure instants, recovery spans, and counter samples; the
+/// Prometheus snapshot exposes the per-rank KV gauge and record counts;
+/// the incident timeline reads as narrative (no gauge noise).
+#[test]
+fn exporters_well_formed_on_real_scenario() {
+    let (_, log) = run_cascade(CoreMode::Exact, true);
+    let log = log.unwrap();
+
+    let json = log.to_chrome_trace();
+    assert!(json.starts_with('{') && json.ends_with('}'));
+    assert!(json.contains("\"traceEvents\":["));
+    for needle in [
+        "failure.injected",
+        "recovery.detect",
+        "recovery.stream",
+        "recovery.resume",
+        "gpu.rejoined",
+        "\"ph\":\"C\"",
+        "\"process_name\"",
+    ] {
+        assert!(json.contains(needle), "chrome trace missing {needle}");
+    }
+
+    let prom = prometheus_text(&log);
+    assert!(prom.contains("# TYPE failsafe_kv_used_bytes gauge"));
+    assert!(prom.contains("failsafe_records_total{name=\"failure.injected\""));
+    assert!(prom.contains("failsafe_records_dropped_total 0"));
+
+    let timeline = log.incident_timeline();
+    assert!(timeline.contains("failure.injected"));
+    assert!(timeline.contains("recovery"));
+    assert!(!timeline.contains("kv.used_bytes"), "timeline must elide gauges");
+}

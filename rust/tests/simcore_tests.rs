@@ -29,6 +29,7 @@ use failsafe::engine::{
     SubmitOptions,
 };
 use failsafe::fleet::{Fleet, FleetReplayOutcome};
+use failsafe::metrics::{RequestOutcome, ServingMetrics};
 use failsafe::model::llama3_70b;
 use failsafe::recovery::RecoveryMethod;
 use failsafe::simulator::{CoreMode, OnlineMode, OnlineSim, OnlineSession, SystemConfig};
@@ -77,6 +78,61 @@ fn assert_reports_identical(a: &ServeReport, b: &ServeReport, what: &str) {
     assert_eq!(a.recoveries.len(), b.recoveries.len(), "{what}: recovery count");
     for (x, y) in a.recoveries.iter().zip(b.recoveries.iter()) {
         assert_eq!(x.to_bits(), y.to_bits(), "{what}: recovery latency");
+    }
+}
+
+/// Bit-exact comparison of the full [`ServingMetrics`] stream — the
+/// layer below `ServeReport` that the observability exporters read.
+/// Catches divergence the report can't see: a preemption gap attributed
+/// to a different request's max TBT, a terminal outcome left `InFlight`,
+/// or token accounting that drifted between cores. (`Cdf::quantile`
+/// sorts lazily, hence `&mut`.)
+fn assert_metrics_identical(
+    a: &mut ServingMetrics,
+    b: &mut ServingMetrics,
+    ids: &[failsafe::RequestId],
+    what: &str,
+) {
+    for &id in ids {
+        match (a.request(id), b.request(id)) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{what}: req {id} arrival");
+                assert_eq!(
+                    x.first_token.map(f64::to_bits),
+                    y.first_token.map(f64::to_bits),
+                    "{what}: req {id} first token"
+                );
+                assert_eq!(
+                    x.last_token.map(f64::to_bits),
+                    y.last_token.map(f64::to_bits),
+                    "{what}: req {id} last token"
+                );
+                assert_eq!(x.tokens_out, y.tokens_out, "{what}: req {id} tokens_out");
+                assert_eq!(x.max_tbt.to_bits(), y.max_tbt.to_bits(), "{what}: req {id} max_tbt");
+                assert_eq!(x.outcome, y.outcome, "{what}: req {id} outcome");
+            }
+            (None, None) => {}
+            _ => panic!("{what}: req {id} present in only one metrics stream"),
+        }
+    }
+    assert_eq!(a.input_tokens, b.input_tokens, "{what}: input tokens");
+    assert_eq!(a.output_tokens, b.output_tokens, "{what}: output tokens");
+    for outcome in
+        [RequestOutcome::InFlight, RequestOutcome::Completed, RequestOutcome::Aborted]
+    {
+        assert_eq!(
+            a.n_with_outcome(outcome),
+            b.n_with_outcome(outcome),
+            "{what}: {outcome:?} count"
+        );
+    }
+    assert_eq!(a.max_tbt_cdf.len(), b.max_tbt_cdf.len(), "{what}: max-TBT CDF size");
+    for q in [0.5, 0.9, 0.99, 1.0] {
+        assert_eq!(
+            a.max_tbt_cdf.quantile(q).to_bits(),
+            b.max_tbt_cdf.quantile(q).to_bits(),
+            "{what}: max-TBT CDF q{q}"
+        );
     }
 }
 
@@ -166,8 +222,12 @@ fn gen_program(rng: &mut Rng, with_faults: bool) -> Program {
 
 /// Run a program on one core; returns the report, the lifecycle event
 /// stream (everything but `TokenEmitted`, which the event core elides
-/// into `AdvanceOutcome.tokens`), and the total token count.
-fn run_program(p: &Program, mode: CoreMode) -> (ServeReport, Vec<EngineEvent>, usize) {
+/// into `AdvanceOutcome.tokens`), the total token count, the metrics
+/// stream, and the ids submitted (for per-request metrics lookup).
+fn run_program(
+    p: &Program,
+    mode: CoreMode,
+) -> (ServeReport, Vec<EngineEvent>, usize, ServingMetrics, Vec<failsafe::RequestId>) {
     let mut s = session(p.world, p.sharing, mode);
     let mut ids = Vec::with_capacity(p.reqs.len());
     for (prompt, opts) in &p.reqs {
@@ -210,16 +270,19 @@ fn run_program(p: &Program, mode: CoreMode) -> (ServeReport, Vec<EngineEvent>, u
         .into_iter()
         .filter(|e| !matches!(e, EngineEvent::TokenEmitted { .. }))
         .collect();
-    (s.report(), lifecycle, tokens)
+    let metrics = s.metrics.clone();
+    (s.report(), lifecycle, tokens, metrics, ids)
 }
 
 fn differential_case(rng: &mut Rng) {
     let p = gen_program(rng, true);
-    let (ra, ea, ta) = run_program(&p, CoreMode::Stepper);
-    let (rb, eb, tb) = run_program(&p, CoreMode::Exact);
+    let (ra, ea, ta, mut ma, ia) = run_program(&p, CoreMode::Stepper);
+    let (rb, eb, tb, mut mb, ib) = run_program(&p, CoreMode::Exact);
     assert_reports_identical(&ra, &rb, "stepper vs exact");
     assert_eq!(ea, eb, "lifecycle event streams diverged");
     assert_eq!(ta, tb, "token counts diverged");
+    assert_eq!(ia, ib, "request id assignment diverged");
+    assert_metrics_identical(&mut ma, &mut mb, &ia, "stepper vs exact");
 }
 
 #[test]
@@ -308,14 +371,17 @@ fn preemption_differential_case(rng: &mut Rng) {
             .into_iter()
             .filter(|e| !matches!(e, EngineEvent::TokenEmitted { .. }))
             .collect();
-        (s.report(), lifecycle, tokens, s.preemptions(), s.swap_ins())
+        let metrics = s.metrics.clone();
+        (s.report(), lifecycle, tokens, s.preemptions(), s.swap_ins(), metrics, ids)
     };
-    let (ra, ea, ta, pa, swa) = run(CoreMode::Stepper);
-    let (rb, eb, tb, pb, swb) = run(CoreMode::Exact);
+    let (ra, ea, ta, pa, swa, mut ma, ia) = run(CoreMode::Stepper);
+    let (rb, eb, tb, pb, swb, mut mb, ib) = run(CoreMode::Exact);
     assert_reports_identical(&ra, &rb, "stepper vs exact under preemption");
     assert_eq!(ea, eb, "lifecycle event streams diverged under preemption");
     assert_eq!(ta, tb, "token counts diverged under preemption");
     assert_eq!((pa, swa), (pb, swb), "preempt/swap telemetry diverged");
+    assert_eq!(ia, ib, "request id assignment diverged under preemption");
+    assert_metrics_identical(&mut ma, &mut mb, &ia, "stepper vs exact under preemption");
 }
 
 #[test]
@@ -330,6 +396,58 @@ fn regression_seed_preempt_swap_storm() {
     preemption_differential_case(&mut Rng::seed_from_u64(0x5A9_0007));
 }
 
+/// A request preempted mid-decode sits in the swap tier while
+/// deadline-driven work runs; when it resumes, the whole parked gap
+/// lands on *that request's* max TBT. Both cores must attribute the gap
+/// to the same request with the same bits — the max-TBT CDF (Fig 12)
+/// is drawn from this stream, so a core that smeared the gap across
+/// neighbors would pass the `ServeReport` checks and still be wrong.
+#[test]
+fn preempt_swap_gap_attributes_to_max_tbt_identically() {
+    let run = |mode: CoreMode| {
+        let mut sim = OnlineSim::new(SystemConfig::failsafe(), OnlineMode::Decode, 4)
+            .with_model(llama3_70b())
+            .with_preemption(PreemptPolicy::default());
+        sim.max_batch = 2;
+        let mut s = sim.session();
+        s.set_core_mode(mode);
+        let mut ids = Vec::new();
+        // Background decodes saturate the two batch slots early...
+        for i in 0..4u64 {
+            ids.push(
+                s.submit_with(
+                    &vec![7u32; 512],
+                    SubmitOptions::new(48).at(i as f64 * 0.01).priority(-2),
+                )
+                .expect("submit"),
+            );
+        }
+        // ...then a tight-deadline burst lands and must preempt them.
+        for i in 0..4u64 {
+            let at = 0.25 + i as f64 * 0.01;
+            ids.push(
+                s.submit_with(
+                    &vec![9u32; 512],
+                    SubmitOptions::new(24).at(at).priority(2).deadline(at + 0.4),
+                )
+                .expect("submit"),
+            );
+        }
+        let mut events = Vec::new();
+        while !s.is_idle() {
+            s.advance_until(AdvanceLimit::unbounded(), &mut events).expect("advance");
+        }
+        (s.preemptions(), s.metrics.clone(), ids, s.report())
+    };
+    let (pa, mut ma, ia, ra) = run(CoreMode::Stepper);
+    let (pb, mut mb, ib, rb) = run(CoreMode::Exact);
+    assert_eq!(pa, pb, "preemption counts diverged");
+    assert!(pa > 0, "scenario failed to force a mid-decode swap-out");
+    assert_eq!(ia, ib, "request id assignment diverged");
+    assert_reports_identical(&ra, &rb, "preempt swap gap");
+    assert_metrics_identical(&mut ma, &mut mb, &ia, "preempt swap gap");
+}
+
 /// The batched core is *not* bit-exact (trapezoid span time, uniform-gap
 /// TBT), but it must conserve the observable outcome: every request
 /// finishes with its full budget, total tokens match, and first tokens
@@ -339,8 +457,8 @@ fn regression_seed_preempt_swap_storm() {
 fn batched_core_conserves_outcomes_on_random_programs() {
     forall("simcore-batched-conservation", fuzz_cases().min(12), 0xBA7C, |rng| {
         let p = gen_program(rng, false);
-        let (re, _, te) = run_program(&p, CoreMode::Exact);
-        let (rb, _, tb) = run_program(&p, CoreMode::Batched);
+        let (re, _, te, _, _) = run_program(&p, CoreMode::Exact);
+        let (rb, _, tb, _, _) = run_program(&p, CoreMode::Batched);
         assert_eq!(te, tb, "token totals");
         assert_eq!(re.results.len(), rb.results.len());
         for (x, y) in re.results.iter().zip(rb.results.iter()) {

@@ -1,0 +1,163 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace exported by `failsafe trace` / `TraceLog::to_chrome_trace`.
+
+Checks, in order:
+  1. the file parses as JSON and carries a `traceEvents` list;
+  2. every event has the required keys for its phase (`ph`);
+  3. timestamps are finite, non-negative, and non-decreasing within each
+     `(pid, tid)` lane (the exporter emits records in log order, and the
+     simulated clock never runs backwards);
+  4. `B`/`E` span edges nest and balance per lane;
+  5. every `failure.injected` / `gpu.rejoined` instant has a complete
+     `recovery` span on the same lane;
+  6. each `recovery` span's five phase children (`recovery.detect`,
+     `.plan`, `.stream`, `.respread`, `.resume`) tile it exactly: they
+     sum to the parent's duration — and to its `latency_s` argument —
+     within 1e-3 µs (1e-9 simulated seconds).
+
+Usage: python3 tools/check_trace.py trace.json
+Exits non-zero listing every violation.
+"""
+
+import json
+import math
+import sys
+
+TOL_US = 1e-3  # 1e-9 s in microseconds
+PHASES = ("recovery.detect", "recovery.plan", "recovery.stream",
+          "recovery.respread", "recovery.resume")
+
+
+def fail(errors, msg):
+    errors.append(msg)
+
+
+def lane(ev):
+    return (ev.get("pid"), ev.get("tid"))
+
+
+def check(path):
+    errors = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or invalid JSON: {e}"]
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"{path}: no traceEvents list"]
+    if not events:
+        return [f"{path}: traceEvents is empty"]
+
+    # Per-lane walks: monotone timestamps, B/E nesting, span collection.
+    last_ts = {}
+    stacks = {}          # lane -> [(name, begin event)]
+    spans = {}           # lane -> list of (name, t0, t1, args)
+    instants = {}        # lane -> list of (name, ts)
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph is None or "pid" not in ev or "tid" not in ev:
+            fail(errors, f"event {i}: missing ph/pid/tid: {ev}")
+            continue
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts) or ts < 0:
+            fail(errors, f"event {i} ({ev.get('name')}): bad ts {ts!r}")
+            continue
+        ln = lane(ev)
+        if ts < last_ts.get(ln, 0.0) - TOL_US:
+            fail(errors, f"event {i} ({ev.get('name')}): ts {ts} runs "
+                         f"backwards on lane {ln} (prev {last_ts[ln]})")
+        last_ts[ln] = max(last_ts.get(ln, 0.0), ts)
+
+        if ph == "B":
+            stacks.setdefault(ln, []).append((ev.get("name"), ts, ev.get("args", {})))
+        elif ph == "E":
+            stack = stacks.setdefault(ln, [])
+            if not stack:
+                fail(errors, f"event {i}: E with empty span stack on lane {ln}")
+                continue
+            name, t0, args = stack.pop()
+            if ev.get("name") not in (None, name):
+                fail(errors, f"event {i}: E for {ev.get('name')!r} closes "
+                             f"open span {name!r} on lane {ln}")
+            spans.setdefault(ln, []).append((name, t0, ts, args))
+        elif ph == "i":
+            instants.setdefault(ln, []).append((ev.get("name"), ts))
+        elif ph == "C":
+            if "args" not in ev or not ev["args"]:
+                fail(errors, f"event {i} ({ev.get('name')}): counter without args")
+        else:
+            fail(errors, f"event {i}: unknown phase {ph!r}")
+
+    for ln, stack in stacks.items():
+        for name, t0, _ in stack:
+            fail(errors, f"lane {ln}: span {name!r} opened at {t0} never closed")
+
+    # Recovery coverage: each failure/rejoin instant needs a complete
+    # recovery span on its lane that starts at (or after) the instant.
+    for ln, insts in instants.items():
+        lane_spans = spans.get(ln, [])
+        for name, ts in insts:
+            if name not in ("failure.injected", "gpu.rejoined"):
+                continue
+            # The sim stamps the instant at injection (== span start);
+            # the engine stamps it at the next step() drain, which can
+            # postdate the span start — so require a recovery span that
+            # *completes* at or after the instant.
+            if not any(n == "recovery" and t1 >= ts - TOL_US and t1 >= t0
+                       for (n, t0, t1, _) in lane_spans):
+                fail(errors, f"lane {ln}: {name} at {ts} has no complete "
+                             f"recovery span")
+
+    # Phase decomposition: children tile the parent, and the parent's
+    # duration matches its own latency_s claim.
+    n_recoveries = 0
+    for ln, lane_spans in spans.items():
+        parents = [(t0, t1, args) for (n, t0, t1, args) in lane_spans
+                   if n == "recovery"]
+        children = [(n, t0, t1) for (n, t0, t1, _) in lane_spans
+                    if n.startswith("recovery.")]
+        for (t0, t1, args) in parents:
+            n_recoveries += 1
+            dur = t1 - t0
+            latency = args.get("latency_s")
+            if isinstance(latency, (int, float)) and \
+                    abs(dur - latency * 1e6) > TOL_US:
+                fail(errors, f"lane {ln}: recovery span at {t0} lasts "
+                             f"{dur}us but claims latency_s={latency}")
+            mine = [(n, c0, c1) for (n, c0, c1) in children
+                    if c0 >= t0 - TOL_US and c1 <= t1 + TOL_US]
+            names = sorted(n for (n, _, _) in mine)
+            if names != sorted(PHASES):
+                fail(errors, f"lane {ln}: recovery at {t0} has phases "
+                             f"{names}, want {sorted(PHASES)}")
+                continue
+            total = sum(c1 - c0 for (_, c0, c1) in mine)
+            if abs(total - dur) > TOL_US:
+                fail(errors, f"lane {ln}: recovery at {t0}: phases sum to "
+                             f"{total}us, parent spans {dur}us")
+
+    if n_recoveries == 0:
+        fail(errors, f"{path}: no recovery spans found — not a fault replay?")
+    return errors
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    errors = check(argv[1])
+    for e in errors:
+        print(f"BROKEN: {e}", file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} problem(s) in {argv[1]}", file=sys.stderr)
+        return 1
+    print(f"{argv[1]}: trace well-formed, recovery decomposition exact")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
